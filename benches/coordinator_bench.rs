@@ -1,0 +1,72 @@
+//! Coordinator benchmarks: batcher hot path (no PJRT) and end-to-end
+//! serving overhead vs raw pipeline calls (requires artifacts).
+
+use std::time::{Duration, Instant};
+
+use lutmax::benchkit::Bench;
+use lutmax::config::ServerConfig;
+use lutmax::coordinator::{Batcher, Coordinator, Payload, Reply, RouteTable};
+use lutmax::testkit::Rng;
+use lutmax::workload;
+
+fn main() {
+    // 1. batcher data-structure hot path
+    Bench::new("batcher push+pop (batch=8)").items(8).run(|| {
+        let mut b: Batcher<u32> = Batcher::new(8, Duration::from_millis(1));
+        for i in 0..8 {
+            b.push(i);
+        }
+        std::hint::black_box(b.pop_ready(Instant::now()));
+    });
+
+    // 2. end-to-end serving: classify through the coordinator
+    let dir = lutmax::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("coordinator_bench: no artifacts; skipping serving section");
+        return;
+    }
+    let cfg = ServerConfig {
+        artifacts: dir,
+        max_batch: 8,
+        batch_timeout_us: 200,
+        workers: 1,
+        queue_depth: 512,
+    };
+    let routes = RouteTable {
+        classify: Some("sst2__ptqd__rexp__uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg, routes).unwrap();
+    let mut rng = Rng::new(4);
+
+    // closed-loop batched: submit 8, wait all — measures amortized latency
+    Bench::new("serve classify x8 (closed loop)")
+        .items(8)
+        .min_time_ms(1500)
+        .run(|| {
+            let rxs: Vec<_> = (0..8)
+                .map(|_| {
+                    c.submit(Payload::Classify(workload::random_cls_row(&mut rng, 24, 64)))
+                        .unwrap()
+                })
+                .collect();
+            for rx in rxs {
+                match rx.recv().unwrap() {
+                    Reply::Classify(_) => {}
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        });
+
+    let stats = c.stats().unwrap();
+    let m = &stats.per_task["classify"];
+    println!(
+        "\nserved {} requests in {} batches (mean batch {:.2}); queue wait p50 {} us p99 {} us",
+        m.requests,
+        m.batches,
+        m.mean_batch_size(),
+        m.queue_wait.percentile_us(0.50),
+        m.queue_wait.percentile_us(0.99)
+    );
+    c.shutdown().unwrap();
+}

@@ -1,0 +1,36 @@
+//! Metric-substrate benchmarks: BLEU and the Hungarian matcher (these run
+//! inside every experiment sweep; they must never dominate eval time).
+
+use lutmax::benchkit::Bench;
+use lutmax::eval::{bleu_corpus, hungarian_min};
+use lutmax::testkit::Rng;
+
+fn main() {
+    let mut rng = Rng::new(9);
+
+    // BLEU over a 200-sentence corpus (the Table 2 evaluation shape)
+    let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..200)
+        .map(|_| {
+            let rf: Vec<i32> = (0..14).map(|_| rng.int(4, 63) as i32).collect();
+            let mut hyp = rf.clone();
+            if rng.bool(0.5) {
+                let i = rng.usize(0, hyp.len() - 1);
+                hyp[i] = rng.int(4, 63) as i32;
+            }
+            (hyp, rf)
+        })
+        .collect();
+    Bench::new("bleu_corpus/200x14")
+        .items(200)
+        .run(|| {
+            std::hint::black_box(bleu_corpus(&pairs));
+        });
+
+    // Hungarian matching at DETR scales (queries x objects)
+    for (q, o) in [(8usize, 4usize), (16, 8), (100, 20)] {
+        let cost: Vec<f64> = (0..q * o).map(|_| rng.f64() * 10.0).collect();
+        Bench::new(format!("hungarian/{q}x{o}")).run(|| {
+            std::hint::black_box(hungarian_min(&cost, q, o));
+        });
+    }
+}

@@ -1,0 +1,48 @@
+//! HW-sim benchmarks: regenerates the paper's architectural comparison
+//! (cycles / area / energy per design) across geometries, and measures
+//! the simulator's own throughput.
+
+use lutmax::benchkit::Bench;
+use lutmax::hwsim::{all_designs, simulate, SimConfig};
+use lutmax::lut::Precision;
+
+fn main() {
+    println!("\n=== HW design comparison (the paper's §2/§3 claims) ===");
+    for (n, lanes) in [(64usize, 1usize), (128, 4), (512, 8)] {
+        println!("\n-- n={n}, lanes={lanes}, 1024 rows --");
+        println!(
+            "{:<20} {:>11} {:>11} {:>9} {:>8}",
+            "design", "cycles/elem", "energy/elem", "area", "LUT B"
+        );
+        let mut base = None;
+        for d in all_designs(Precision::Uint8) {
+            let r = simulate(&d, SimConfig { n, rows: 1024, lanes });
+            if d.name().starts_with("exact") {
+                base = Some(r.cycles);
+            }
+            let speedup = base
+                .map(|b| format!("  ({:.2}x)", b as f64 / r.cycles as f64))
+                .unwrap_or_default();
+            println!(
+                "{:<20} {:>11.2} {:>11.2} {:>9.1} {:>8}{}",
+                r.design,
+                r.cycles_per_elem(),
+                r.energy_per_elem(),
+                r.area,
+                r.lut_bytes,
+                speedup
+            );
+        }
+    }
+
+    println!("\n=== simulator throughput ===");
+    let designs = all_designs(Precision::Uint8);
+    for d in &designs {
+        let cfg = SimConfig { n: 128, rows: 4096, lanes: 4 };
+        Bench::new(format!("simulate/{}", d.name()))
+            .items(cfg.n * cfg.rows)
+            .run(|| {
+                std::hint::black_box(simulate(d, cfg));
+            });
+    }
+}

@@ -1,0 +1,98 @@
+//! PJRT runtime benchmarks: artifact execute latency for the standalone
+//! softmax kernels and the model steps (the serving inner loops).
+//! Requires `make artifacts`.
+
+use lutmax::benchkit::{Bench, Suite};
+use lutmax::coordinator::{ClsPipeline, NmtPipeline};
+use lutmax::lut::{lut2d_tables, rexp_tables, Precision, SIGMA_ROWS};
+use lutmax::runtime::{Engine, Tensor};
+use lutmax::testkit::Rng;
+use lutmax::workload;
+
+fn main() {
+    let dir = lutmax::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("runtime_bench: no artifacts; run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new(&dir).unwrap();
+    let mut rng = Rng::new(1);
+
+    let mut suite = Suite::new("standalone softmax artifacts (PJRT execute)");
+    let meta = engine.manifest.artifact("softmax__rexp__uint8").unwrap();
+    let (rows, cols) = (meta.inputs[0].0[0], meta.inputs[0].0[1]);
+    let x = Tensor::f32(vec![rows, cols], rng.normal_vec(rows * cols, 2.0));
+
+    let rt = rexp_tables(Precision::Uint8, None);
+    let recip = Tensor::i32(vec![rt.recip_e.len()], rt.recip_e.clone());
+    let alpha = Tensor::i32(vec![rt.alpha.len()], rt.alpha.clone());
+    engine
+        .execute("softmax__rexp__uint8", &[x.clone(), recip.clone(), alpha.clone()])
+        .unwrap();
+    suite.add(
+        Bench::new("softmax__rexp__uint8")
+            .items(rows * cols)
+            .run(|| {
+                engine
+                    .execute("softmax__rexp__uint8", &[x.clone(), recip.clone(), alpha.clone()])
+                    .unwrap();
+            }),
+    );
+
+    let lt = lut2d_tables(Precision::Uint8, None);
+    let exp_t = Tensor::i32(vec![lt.exp.len()], lt.exp.clone());
+    let row_t = Tensor::i32(vec![lt.row.len()], lt.row.clone());
+    let sigma_t = Tensor::i32(vec![SIGMA_ROWS, lt.cols], lt.sigma.clone());
+    engine
+        .execute(
+            "softmax__lut2d__uint8",
+            &[x.clone(), exp_t.clone(), row_t.clone(), sigma_t.clone()],
+        )
+        .unwrap();
+    suite.add(
+        Bench::new("softmax__lut2d__uint8")
+            .items(rows * cols)
+            .run(|| {
+                engine
+                    .execute(
+                        "softmax__lut2d__uint8",
+                        &[x.clone(), exp_t.clone(), row_t.clone(), sigma_t.clone()],
+                    )
+                    .unwrap();
+            }),
+    );
+    suite.add(
+        Bench::new("softmax__exact__fp32")
+            .items(rows * cols)
+            .run(|| {
+                engine.execute("softmax__exact__fp32", &[x.clone()]).unwrap();
+            }),
+    );
+
+    let mut suite = Suite::new("model steps (serving inner loops)");
+    let cls = ClsPipeline::load(&engine, "sst2__ptqd__rexp__uint8").unwrap();
+    let cls_rows: Vec<Vec<i32>> = (0..cls.batch)
+        .map(|_| workload::random_cls_row(&mut rng, cls.max_len, 64))
+        .collect();
+    suite.add(
+        Bench::new("bert classify (batch=8)")
+            .items(cls.batch)
+            .run(|| {
+                cls.classify(&engine, &cls_rows).unwrap();
+            }),
+    );
+
+    let nmt = NmtPipeline::load(&engine, "nmt14__ptqd__rexp__uint8").unwrap();
+    let srcs: Vec<Vec<i32>> = (0..nmt.batch)
+        .map(|_| workload::random_src_row(&mut rng, nmt.max_src, 64))
+        .collect();
+    suite.add(
+        Bench::new("nmt translate (batch=8, full decode)")
+            .items(nmt.batch)
+            .min_time_ms(1500)
+            .run(|| {
+                nmt.translate(&engine, &srcs).unwrap();
+            }),
+    );
+    println!("\npjrt executions: {}", engine.exec_count.borrow());
+}

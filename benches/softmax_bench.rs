@@ -1,0 +1,54 @@
+//! Softmax software-model benchmarks: the paper's datapaths vs baselines
+//! on the rust hot path (per-element throughput, Table-1-adjacent).
+
+use lutmax::benchkit::{Bench, Suite};
+use lutmax::lut::Precision;
+use lutmax::softmax::{engine, Mode};
+use lutmax::testkit::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let n = 128usize;
+    let rows = 256usize;
+    let x = rng.normal_vec(rows * n, 2.0);
+    let mut out = vec![0.0f32; x.len()];
+
+    let mut suite = Suite::new("softmax SW models (256 rows x 128)");
+    for mode in [
+        Mode::Exact,
+        Mode::PriorartEq2Plus,
+        Mode::Rexp,
+        Mode::Lut2d,
+        Mode::Aggressive,
+    ] {
+        let e = engine(mode, Precision::Uint8, None);
+        let r = Bench::new(format!("uint8/{}", mode.name()))
+            .items(x.len())
+            .run(|| e.run(&x, n, &mut out));
+        suite.add(r);
+    }
+    suite.ratio("uint8/rexp", "uint8/exact");
+    suite.ratio("uint8/lut2d", "uint8/exact");
+
+    let mut suite = Suite::new("softmax SW models across precisions (rexp)");
+    for p in lutmax::lut::ALL_PRECISIONS {
+        let e = engine(Mode::Rexp, p, None);
+        suite.add(
+            Bench::new(format!("rexp/{}", p.name()))
+                .items(x.len())
+                .run(|| e.run(&x, n, &mut out)),
+        );
+    }
+
+    let mut suite = Suite::new("row-length scaling (uint8 lut2d)");
+    for n in [16usize, 64, 256, 1024] {
+        let x = rng.normal_vec(64 * n, 2.0);
+        let mut out = vec![0.0f32; x.len()];
+        let e = engine(Mode::Lut2d, Precision::Uint8, None);
+        suite.add(
+            Bench::new(format!("lut2d/n={n}"))
+                .items(x.len())
+                .run(|| e.run(&x, n, &mut out)),
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! HW design-space explorer: sweeps precision, row length and lane count
+//! through the cycle/area/energy simulator and prints the
+//! accuracy-vs-area frontier that motivates the paper's designs.
+//!
+//! Run: `cargo run --release --example hw_explorer` (no artifacts needed)
+
+use lutmax::hwsim::{all_designs, simulate, SimConfig};
+use lutmax::lut::{Precision, ALL_PRECISIONS};
+use lutmax::softmax::{engine, Mode};
+use lutmax::softmax::SoftmaxEngine as _;
+use lutmax::testkit::Rng;
+
+fn main() {
+    // accuracy side: MAE vs exact softmax on attention-like rows
+    let mut rng = Rng::new(31);
+    let n = 64;
+    let x = rng.normal_vec(1024 * n, 2.0);
+    let exact = engine(Mode::Exact, Precision::Uint8, None).apply(&x, n);
+    let mae = |out: &[f32]| -> f64 {
+        out.iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / out.len() as f64
+    };
+
+    println!("=== accuracy x hardware frontier (n=64 attention rows) ===");
+    println!(
+        "{:<22} {:>6} {:>9} {:>12} {:>10} {:>8} {:>8}",
+        "design", "prec", "MAE", "cycles/elem", "energy/el", "area", "LUT B"
+    );
+    let cfg = SimConfig { n, rows: 1024, lanes: 4 };
+    for p in ALL_PRECISIONS {
+        for d in all_designs(p) {
+            let r = simulate(&d, cfg);
+            let acc = match d.kind {
+                lutmax::hwsim::DesignKind::Rexp => {
+                    Some(mae(&engine(Mode::Rexp, p, None).apply(&x, n)))
+                }
+                lutmax::hwsim::DesignKind::Lut2d => {
+                    Some(mae(&engine(Mode::Lut2d, p, None).apply(&x, n)))
+                }
+                lutmax::hwsim::DesignKind::ExactDivider => Some(0.0),
+                _ => None,
+            };
+            let acc_s = acc.map(|a| format!("{a:.5}")).unwrap_or_else(|| "-".into());
+            println!(
+                "{:<22} {:>6} {:>9} {:>12.2} {:>10.2} {:>8.1} {:>8}",
+                r.design,
+                p.name(),
+                acc_s,
+                r.cycles_per_elem(),
+                r.energy_per_elem(),
+                r.area,
+                r.lut_bytes
+            );
+        }
+        println!();
+    }
+
+    println!("=== lane scaling (uint8, n=128) ===");
+    println!("{:<22} {:>6} {:>12} {:>10}", "design", "lanes", "cycles/elem", "area");
+    for lanes in [1usize, 2, 4, 8, 16] {
+        for d in all_designs(Precision::Uint8) {
+            let r = simulate(&d, SimConfig { n: 128, rows: 256, lanes });
+            println!(
+                "{:<22} {:>6} {:>12.2} {:>10.1}",
+                r.design,
+                lanes,
+                r.cycles_per_elem(),
+                r.area
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load a Pallas-lowered LUT-softmax artifact, execute it via
+//! PJRT with runtime-supplied tables, and compare against the exact
+//! softmax — the smallest end-to-end trip through all three layers.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use lutmax::lut::{rexp_tables, Precision};
+use lutmax::runtime::{Engine, Tensor};
+use lutmax::softmax::{engine as sw_engine, Mode};
+use lutmax::softmax::SoftmaxEngine as _;
+use lutmax::testkit::Rng;
+
+fn main() -> Result<()> {
+    let engine = Engine::new(&lutmax::artifacts_dir())?;
+
+    // the artifact computes a (256, 64) REXP softmax; tables are operands,
+    // so the same executable serves any reconfigured LUT contents
+    let meta = engine.manifest.artifact("softmax__rexp__uint8")?.clone();
+    let (rows, cols) = (meta.inputs[0].0[0], meta.inputs[0].0[1]);
+    println!("artifact {} over ({rows}, {cols})", meta.name);
+
+    let mut rng = Rng::new(2024);
+    let x = rng.normal_vec(rows * cols, 2.0);
+    let t = rexp_tables(Precision::Uint8, None);
+    println!(
+        "REXP tables: LUT_1/e 1x{} + LUT_alpha 1x{} = {} bytes",
+        t.recip_e.len(),
+        t.alpha.len(),
+        t.total_bytes()
+    );
+
+    let outputs = engine.execute(
+        "softmax__rexp__uint8",
+        &[
+            Tensor::f32(vec![rows, cols], x.clone()),
+            Tensor::i32(vec![t.recip_e.len()], t.recip_e.clone()),
+            Tensor::i32(vec![t.alpha.len()], t.alpha.clone()),
+        ],
+    )?;
+    let approx = outputs[0].as_f32()?;
+
+    // compare to the exact softmax + the rust SW model of the same datapath
+    let exact = sw_engine(Mode::Exact, Precision::Uint8, None).apply(&x, cols);
+    let sw = sw_engine(Mode::Rexp, Precision::Uint8, None).apply(&x, cols);
+
+    let mae = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32
+    };
+    let bit_identical = approx
+        .iter()
+        .zip(&sw)
+        .all(|(a, b)| (a * 255.0).round() == (b * 255.0).round());
+    println!("PJRT vs rust SW model: bit-identical integer stage = {bit_identical}");
+    println!("REXP vs exact softmax: mean |err| = {:.5}", mae(approx, &exact));
+    println!(
+        "row 0 sums: approx {:.4}, exact {:.4}",
+        approx[..cols].iter().sum::<f32>(),
+        exact[..cols].iter().sum::<f32>()
+    );
+    println!("quickstart OK");
+    Ok(())
+}

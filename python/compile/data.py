@@ -1,0 +1,280 @@
+"""Synthetic task generators standing in for the paper's datasets.
+
+Substitution rationale (DESIGN.md §2): the paper measures how LUT softmax
+approximation inside attention degrades task metrics. What matters is (a)
+the graph shape (softmax deep inside encoder/decoder stacks), (b) the
+metric (BLEU / accuracy / F1 / AP), and (c) the distribution of attention
+score rows (which sets sum(e^x), Fig. 4). These generators produce
+learnable attention-dependent tasks with the same metric structure:
+
+* NMT  (WMT14/WMT17 analog) — token-remap + reversal transduction; two
+  "corpora" differ by seed, vocabulary permutation and length profile.
+* SST-2 analog — keyword-polarity sentiment with negation tokens.
+* MRPC analog — sentence-pair equivalence, imbalanced 68/32 like MRPC.
+* COCO analog — synthetic scenes of colored rectangles for set-prediction
+  detection (DETR-lite); the +DC5 analog doubles token resolution.
+
+Everything is deterministic given a seed. Token conventions:
+PAD=0, BOS=1, EOS=2, SEP=3, content tokens start at 4.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+FIRST_TOKEN = 4
+
+__all__ = [
+    "PAD",
+    "BOS",
+    "EOS",
+    "SEP",
+    "FIRST_TOKEN",
+    "NmtConfig",
+    "nmt_batch",
+    "nmt_reference",
+    "SentimentConfig",
+    "sentiment_batch",
+    "MrpcConfig",
+    "mrpc_batch",
+    "SceneConfig",
+    "scene_batch",
+]
+
+
+# ---------------------------------------------------------------------------
+# NMT: token-remap + reversal "translation"
+
+
+@dataclass(frozen=True)
+class NmtConfig:
+    vocab: int = 64
+    max_len: int = 20          # source length incl. EOS
+    min_content: int = 4
+    max_content: int = 14
+    corpus_seed: int = 14      # 14 -> "WMT14" analog, 17 -> "WMT17" analog
+
+    @property
+    def permutation(self) -> np.ndarray:
+        """Fixed vocabulary remap of this corpus (identity on specials)."""
+        r = np.random.default_rng(1000 + self.corpus_seed)
+        content = np.arange(FIRST_TOKEN, self.vocab)
+        perm = r.permutation(content)
+        table = np.arange(self.vocab)
+        table[FIRST_TOKEN:] = perm
+        return table
+
+
+def nmt_reference(cfg: NmtConfig, src_row: np.ndarray) -> np.ndarray:
+    """Ground-truth translation of one padded source row: reverse the
+    content tokens and remap each through the corpus permutation."""
+    content = [t for t in src_row if t >= FIRST_TOKEN]
+    out = [int(cfg.permutation[t]) for t in reversed(content)]
+    return np.array(out, dtype=np.int32)
+
+
+def nmt_batch(
+    cfg: NmtConfig, batch: int, seed: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (src, tgt) of shapes (batch, max_len), (batch, max_len+1).
+
+    src:  content tokens then EOS, PAD-right.
+    tgt:  BOS + translated tokens + EOS, PAD-right (teacher-forcing ready).
+    """
+    r = np.random.default_rng(seed * 7919 + cfg.corpus_seed)
+    src = np.full((batch, cfg.max_len), PAD, np.int32)
+    tgt = np.full((batch, cfg.max_len + 1), PAD, np.int32)
+    for b in range(batch):
+        n = int(r.integers(cfg.min_content, cfg.max_content + 1))
+        toks = r.integers(FIRST_TOKEN, cfg.vocab, n).astype(np.int32)
+        src[b, :n] = toks
+        src[b, n] = EOS
+        ref = nmt_reference(cfg, src[b])
+        tgt[b, 0] = BOS
+        tgt[b, 1 : 1 + n] = ref
+        tgt[b, 1 + n] = EOS
+    return src, tgt
+
+
+# ---------------------------------------------------------------------------
+# SST-2 analog: keyword sentiment with negation
+
+
+@dataclass(frozen=True)
+class SentimentConfig:
+    vocab: int = 64
+    max_len: int = 24
+    min_content: int = 6
+    max_content: int = 20
+    n_polar: int = 8           # tokens [4, 4+n) positive, [4+n, 4+2n) negative
+    seed_base: int = 20
+
+    @property
+    def pos_range(self) -> tuple[int, int]:
+        return (FIRST_TOKEN, FIRST_TOKEN + self.n_polar)
+
+    @property
+    def neg_range(self) -> tuple[int, int]:
+        return (FIRST_TOKEN + self.n_polar, FIRST_TOKEN + 2 * self.n_polar)
+
+    @property
+    def not_token(self) -> int:
+        return FIRST_TOKEN + 2 * self.n_polar  # the negation word
+
+
+def sentiment_batch(
+    cfg: SentimentConfig, batch: int, seed: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (tokens, labels). Label = sign of negation-adjusted polarity.
+
+    A `not_token` immediately before a polar token flips its polarity —
+    classification requires attending to local context, not just a bag of
+    words.
+    """
+    r = np.random.default_rng(seed * 104729 + cfg.seed_base)
+    toks = np.full((batch, cfg.max_len), PAD, np.int32)
+    labels = np.zeros((batch,), np.int32)
+    p0, p1 = cfg.pos_range
+    n0, n1 = cfg.neg_range
+    neutral0 = cfg.not_token + 1
+    for b in range(batch):
+        n = int(r.integers(cfg.min_content, cfg.max_content + 1))
+        row = [BOS]
+        score = 0
+        while len(row) < n:
+            kind = r.random()
+            negate = r.random() < 0.25
+            if negate and len(row) < n - 1:
+                row.append(cfg.not_token)
+            if kind < 0.35:
+                row.append(int(r.integers(p0, p1)))
+                score += -1 if negate else 1
+            elif kind < 0.7:
+                row.append(int(r.integers(n0, n1)))
+                score += 1 if negate else -1
+            else:
+                if negate:
+                    score = score  # dangling "not" before a neutral word
+                row.append(int(r.integers(neutral0, cfg.vocab)))
+        if score == 0:
+            # force a decisive token to keep labels well-defined
+            row[-1] = int(r.integers(p0, p1))
+            score = 1
+        toks[b, : len(row)] = row
+        labels[b] = 1 if score > 0 else 0
+    return toks, labels
+
+
+# ---------------------------------------------------------------------------
+# MRPC analog: sentence-pair semantic equivalence (imbalanced 68/32)
+
+
+@dataclass(frozen=True)
+class MrpcConfig:
+    vocab: int = 64
+    sent_len: int = 9          # content tokens per sentence
+    max_len: int = 24          # BOS s1 SEP s2 EOS padded
+    pos_rate: float = 0.68     # MRPC's class imbalance
+    seed_base: int = 30
+
+    @property
+    def paraphrase_map(self) -> np.ndarray:
+        """Token-level "paraphrase" synonym map (an involution on content)."""
+        r = np.random.default_rng(2000 + self.seed_base)
+        content = np.arange(FIRST_TOKEN, self.vocab)
+        shuffled = r.permutation(content)
+        table = np.arange(self.vocab)
+        half = len(shuffled) // 2
+        a, b = shuffled[:half], shuffled[half : 2 * half]
+        table[a], table[b] = b, a  # swap pairs -> involution
+        return table
+
+
+def mrpc_batch(
+    cfg: MrpcConfig, batch: int, seed: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (tokens, labels). Positive pairs: s2 is the synonym-mapped s1
+    (possibly with one token swap); negatives: independent s2 or a corrupted
+    paraphrase with several replaced tokens."""
+    r = np.random.default_rng(seed * 15485863 + cfg.seed_base)
+    toks = np.full((batch, cfg.max_len), PAD, np.int32)
+    labels = np.zeros((batch,), np.int32)
+    pmap = cfg.paraphrase_map
+    for b in range(batch):
+        s1 = r.integers(FIRST_TOKEN, cfg.vocab, cfg.sent_len).astype(np.int32)
+        positive = r.random() < cfg.pos_rate
+        if positive:
+            s2 = pmap[s1].astype(np.int32)
+            if r.random() < 0.5:  # harmless local swap keeps it non-trivial
+                i = int(r.integers(0, cfg.sent_len - 1))
+                s2[[i, i + 1]] = s2[[i + 1, i]]
+        else:
+            s2 = pmap[s1].astype(np.int32)
+            k = int(r.integers(3, cfg.sent_len))  # corrupt >= 3 tokens
+            idx = r.choice(cfg.sent_len, k, replace=False)
+            s2[idx] = r.integers(FIRST_TOKEN, cfg.vocab, k)
+        row = np.concatenate(([BOS], s1, [SEP], s2, [EOS])).astype(np.int32)
+        toks[b, : len(row)] = row
+        labels[b] = int(positive)
+    return toks, labels
+
+
+# ---------------------------------------------------------------------------
+# COCO analog: synthetic rectangle scenes for DETR-lite
+
+
+@dataclass(frozen=True)
+class SceneConfig:
+    image_size: int = 32
+    channels: int = 3
+    max_objects: int = 4
+    num_classes: int = 3
+    noise: float = 0.08
+    seed_base: int = 40
+
+    #: class -> RGB fill color (distinct, learnable)
+    @property
+    def palette(self) -> np.ndarray:
+        return np.array(
+            [[0.9, 0.15, 0.1], [0.1, 0.85, 0.2], [0.15, 0.2, 0.95]], np.float32
+        )
+
+
+def scene_batch(
+    cfg: SceneConfig, batch: int, seed: int
+) -> tuple[np.ndarray, list[np.ndarray]]:
+    """Returns (images, gts).
+
+    images: (batch, H, W, C) float32 in [0, 1].
+    gts:    per image, array (n_obj, 5) of [class, cx, cy, w, h] normalized.
+    """
+    r = np.random.default_rng(seed * 32452843 + cfg.seed_base)
+    H = W = cfg.image_size
+    imgs = r.normal(0.5, cfg.noise, (batch, H, W, cfg.channels)).astype(np.float32)
+    gts: list[np.ndarray] = []
+    pal = cfg.palette
+    for b in range(batch):
+        n = int(r.integers(1, cfg.max_objects + 1))
+        rows = np.zeros((n, 5), np.float32)
+        for o in range(n):
+            cls = int(r.integers(0, cfg.num_classes))
+            w = int(r.integers(max(3, H // 8), H // 2))
+            h = int(r.integers(max(3, H // 8), H // 2))
+            x0 = int(r.integers(0, W - w))
+            y0 = int(r.integers(0, H - h))
+            imgs[b, y0 : y0 + h, x0 : x0 + w] = pal[cls] + r.normal(
+                0, cfg.noise / 2, (h, w, cfg.channels)
+            )
+            rows[o] = [
+                cls,
+                (x0 + w / 2) / W,
+                (y0 + h / 2) / H,
+                w / W,
+                h / H,
+            ]
+        gts.append(rows)
+    np.clip(imgs, 0.0, 1.0, out=imgs)
+    return imgs, gts

@@ -1,0 +1,21 @@
+"""L1: Pallas kernels + LUT builders + pure-jnp oracles.
+
+Public surface:
+  luts            — LUT constructors (Eq.(4), (7), (8)-(10)) and Precision
+  ref             — pure-jnp oracles / shared integer pipelines
+  softmax_exact   — exact-softmax Pallas kernel (fp baseline)
+  softmax_rexp    — REXP Pallas kernel (Algorithm 1)
+  softmax_lut2d   — 2D-LUT Pallas kernel (Algorithm 2)
+  attention       — fused SDPA with pluggable softmax approximation
+"""
+
+from . import attention, luts, ref, softmax_exact, softmax_lut2d, softmax_rexp
+
+__all__ = [
+    "attention",
+    "luts",
+    "ref",
+    "softmax_exact",
+    "softmax_lut2d",
+    "softmax_rexp",
+]

@@ -1,0 +1,164 @@
+"""Pallas kernel: fused scaled-dot-product attention with pluggable softmax.
+
+One grid program per (batch * heads) slice: scores = q k^T / sqrt(d_h) are
+formed in VMEM, the selected softmax variant (exact / REXP / 2D-LUT /
+prior arts) is applied row-wise, and the probs @ v product is written back.
+The approximation bodies are the same traced pipelines as ref.py, so fused
+attention is bit-consistent with the standalone kernels.
+
+TPU mapping: q/k/v tiles stream HBM->VMEM per head; the two matmuls hit the
+MXU (bf16-able), the LUT softmax stays on the VPU with the tables resident.
+Fusing removes the HBM round-trip of the (L, L) probability matrix — the
+paper's motivating data-movement cost (§2) — which is what
+`exp -- perf` quantifies as bytes moved per attention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import luts, ref
+
+__all__ = ["attention_pallas", "attention_ref", "make_attention_callable"]
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mode: str = "exact",
+    prec: str = "uint8",
+) -> jnp.ndarray:
+    """Pure-jnp oracle: softmax(q k^T / sqrt(d_h)) v with the chosen mode.
+
+    Shapes: q (..., L, d), k (..., S, d), v (..., S, d) -> (..., L, d).
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("...ld,...sd->...ls", q, k) / jnp.sqrt(
+        jnp.asarray(d, jnp.float32)
+    )
+    probs = ref.softmax_by_mode(scores, mode, prec)
+    return jnp.einsum("...ls,...sd->...ld", probs, v)
+
+
+def _mode_tables(mode: str, prec: str) -> list[jnp.ndarray]:
+    """Runtime table operands required by a softmax mode.
+
+    Tables are kernel *operands* (not baked constants) so the same compiled
+    attention executable accepts reconfigured LUTs from L3.
+    """
+    p = luts.precision(prec)
+    if mode == "rexp":
+        t = luts.rexp_tables(p)
+        return [
+            jnp.asarray(t.recip_e, jnp.int32),
+            jnp.asarray(t.alpha, jnp.int32),
+        ]
+    if mode == "lut2d":
+        t = luts.lut2d_tables(p)
+        return [
+            jnp.asarray(t.exp, jnp.int32),
+            jnp.asarray(t.row, jnp.int32),
+            jnp.asarray(t.sigma, jnp.int32),
+        ]
+    if mode == "aggressive":
+        return [jnp.asarray(luts.lut_recip_e(p), jnp.int32)]
+    return []
+
+
+def _apply_mode(scores, tables, mode: str, prec: str):
+    p = luts.precision(prec)
+    if mode == "exact":
+        return ref.softmax_exact(scores)
+    if mode == "rexp":
+        return ref.rexp_pipeline(scores, tables[0], tables[1], p.w, p.qmax)
+    if mode == "lut2d":
+        return ref.lut2d_pipeline(scores, tables[0], tables[1], tables[2], p.w, p.qmax)
+    if mode == "aggressive":
+        return ref.aggressive_pipeline(scores, tables[0], p.qmax)
+    if mode == "priorart_eq2":
+        return ref.softmax_priorart_eq2(scores, p)
+    if mode == "priorart_eq2plus":
+        return ref.softmax_priorart_eq2plus(scores, p)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def _attn_kernel(*refs, mode: str, prec: str):
+    q_ref, k_ref, v_ref = refs[:3]
+    o_ref = refs[-1]
+    tables = [t[...] for t in refs[3:-1]]
+    q = q_ref[...][0].astype(jnp.float32)  # (L, d)
+    k = k_ref[...][0].astype(jnp.float32)  # (S, d)
+    v = v_ref[...][0].astype(jnp.float32)  # (S, d)
+    d = q.shape[-1]
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    probs = _apply_mode(scores, tables, mode, prec)
+    o_ref[...] = (probs @ v)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "prec"))
+def attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    mode: str = "exact",
+    prec: str = "uint8",
+    tables: tuple = (),
+) -> jnp.ndarray:
+    """Fused attention; leading axes are flattened into the grid.
+
+    `tables` overrides the built-in LUT contents with traced operands (the
+    AOT path — see rexp_with_tables for why).
+    """
+    if mode not in ref.SOFTMAX_MODES:
+        raise ValueError(f"unknown mode {mode!r}")
+    tables = list(tables) if tables else _mode_tables(mode, prec)
+
+    lead = q.shape[:-2]
+    L, dh = q.shape[-2:]
+    S = k.shape[-2]
+    q3 = q.reshape(-1, L, dh).astype(jnp.float32)
+    k3 = k.reshape(-1, S, dh).astype(jnp.float32)
+    v3 = v.reshape(-1, S, dh).astype(jnp.float32)
+    heads = q3.shape[0]
+
+    kern = functools.partial(_attn_kernel, mode=mode, prec=prec)
+    table_specs = [
+        pl.BlockSpec(t.shape, (lambda i: (0,)) if t.ndim == 1 else (lambda i: (0, 0)))
+        for t in tables
+    ]
+    out = pl.pallas_call(
+        kern,
+        grid=(heads,),
+        in_specs=[
+            pl.BlockSpec((1, L, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S, dh), lambda i: (i, 0, 0)),
+            *table_specs,
+        ],
+        out_specs=pl.BlockSpec((1, L, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, L, dh), jnp.float32),
+        interpret=True,
+    )(q3, k3, v3, *tables)
+    return out.reshape(*lead, L, dh)
+
+
+def make_attention_callable(
+    heads: int, L: int, dh: int, mode: str = "exact", prec: str = "uint8"
+):
+    """AOT entry point: fixed-shape fused attention for aot.py to lower.
+    LUT tables are trailing runtime operands (reconfigurable, and baked s32
+    constants miscompile under xla_extension 0.5.1)."""
+
+    def fn(q, k, v, *tables):
+        return (attention_pallas(q, k, v, mode=mode, prec=prec, tables=tables),)
+
+    spec = jax.ShapeDtypeStruct((heads, L, dh), jnp.float32)
+    table_specs = tuple(
+        jax.ShapeDtypeStruct(t.shape, jnp.int32) for t in _mode_tables(mode, prec)
+    )
+    return fn, (spec, spec, spec, *table_specs)

@@ -1,0 +1,244 @@
+"""LookUp Table constructors for the REXP and 2D-LUT softmax approximations.
+
+Implements Eq.(4), Eq.(7) (REXP, paper §4.1) and Eq.(8)-(10) (2D LUT, §4.2)
+of Vasyltsov & Chang, "Efficient Softmax Approximation for Deep Neural
+Networks with Attention Mechanism" (2021).
+
+These builders are the single source of truth for LUT *content* on the
+python side.  The rust side (`rust/src/lut/`) re-implements them
+bit-identically; `aot.py` dumps golden JSON files of every table so the rust
+test-suite can assert equality entry by entry.
+
+Integer semantics (shared contract with rust — keep in sync!):
+
+* A precision `w` stores values scaled by ``qmax = 2**w - 1``.
+* ``LUT_recip_e[i] = floor(qmax / e**i)`` for ``i = 0..x_q+1`` with
+  ``x_q = ceil(ln(qmax))``  (Eq.(4)).  Out-of-range distance indices clamp
+  to the last entry (whose value is 0 by construction for every w).
+* ``LUT_alpha[j] = qmax if j == 0 else floor(qmax / j)`` for
+  ``j = 0..alpha_len-1``; indices ``>= alpha_len`` read as **0** — the
+  paper's ``LUT_alpha[x_s] = 0`` clipping, which is exactly what degrades
+  DETR+DC5 (right-tailed sum distribution, Fig. 4).
+* ``LUT_exp[k] = round(qmax * e**(-k*0.1))`` for ``k = 0..exp_len-1`` — the
+  1-D e^x table of the 2D-LUT method, step 0.1 over the per-precision
+  useful range (sizes match Table 8: 101/101/48/12 entries).
+* ``LUT_sigma[i][j-1] = min(qmax, floor(qmax * (i*0.1) / j))`` for
+  ``i = 0..10``, ``j = 1..sigma_cols``  (Eq.(8)); row index saturates at 10,
+  column index saturates at ``sigma_cols`` (values beyond ``max(sum e^x)``
+  underestimate alpha, again the Fig. 4 mechanism).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = [
+    "Precision",
+    "PRECISIONS",
+    "precision",
+    "parse_spec",
+    "lut_recip_e",
+    "lut_alpha",
+    "lut_exp",
+    "lut_row",
+    "lut_sigma",
+    "RexpTables",
+    "Lut2dTables",
+    "rexp_tables",
+    "lut2d_tables",
+    "lut_bytes",
+]
+
+
+@dataclass(frozen=True)
+class Precision:
+    """A quantization precision: `w` value bits, scale `qmax = 2**w - 1`."""
+
+    name: str
+    #: number of value bits (the paper's "bits per entry")
+    w: int
+    #: default LUT_alpha length for NLP workloads (Table 8)
+    alpha_len: int
+    #: LUT_exp length for the 2D-LUT method (Table 8)
+    exp_len: int
+    #: number of columns of LUT_sigma == assumed max(sum e^x) (Table 8)
+    sigma_cols: int
+
+    @property
+    def qmax(self) -> int:
+        return (1 << self.w) - 1
+
+    @property
+    def x_q(self) -> int:
+        """Efficient quantization boundary ``ceil(ln(2**w - 1))`` (Eq.(4))."""
+        return math.ceil(math.log(self.qmax))
+
+
+# Table 8 of the paper fixes the per-precision table shapes for the NLP
+# experiments; Table 5 overrides alpha_len for the DETR cases (256/320/512).
+PRECISIONS: dict[str, Precision] = {
+    "int16": Precision("int16", 15, alpha_len=16, exp_len=101, sigma_cols=60),
+    "uint8": Precision("uint8", 8, alpha_len=16, exp_len=101, sigma_cols=60),
+    "uint4": Precision("uint4", 4, alpha_len=16, exp_len=48, sigma_cols=29),
+    "uint2": Precision("uint2", 2, alpha_len=7, exp_len=12, sigma_cols=8),
+}
+
+#: step of the 1-D LUT_exp index in x units (paper: scale_ex = 0.1)
+EXP_STEP = 0.1
+#: row quantization of LUT_sigma (paper: scale_ex = 0.1 -> rows 0..10)
+SIGMA_ROWS = 11
+#: column quantization of LUT_sigma (paper: scale_sigma = 1.0)
+SIGMA_COL_SCALE = 1.0
+
+
+def precision(name: str) -> Precision:
+    if ":" in name:
+        name = name.split(":", 1)[0]
+    try:
+        return PRECISIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {name!r}; expected one of {sorted(PRECISIONS)}"
+        ) from None
+
+
+def parse_spec(spec: str) -> tuple[Precision, int | None]:
+    """Parse a precision spec string: ``"uint8"`` or ``"uint8:a512"``.
+
+    The ``:aN`` suffix overrides the LUT_alpha length (the paper's DETR
+    cases 1-3 use 256/320/512-entry alpha tables, Table 5) and is threaded
+    through the model stack as part of the precision string.
+    """
+    if ":" not in spec:
+        return precision(spec), None
+    base, suffix = spec.split(":", 1)
+    if not suffix.startswith("a"):
+        raise ValueError(f"bad precision spec {spec!r}; expected '<prec>:aN'")
+    return precision(base), int(suffix[1:])
+
+
+def lut_recip_e(prec: Precision) -> np.ndarray:
+    """Eq.(4): ``LUT_{1/e}[i] = floor((1/e**i) * qmax)``, i = 0..x_q+1.
+
+    Length is ``x_q + 2`` which reproduces the paper's Table 5/8 sizes:
+    int16 -> 1x13, uint8 -> 1x8, uint4 -> 1x5, uint2 -> 1x3.
+    """
+    i = np.arange(prec.x_q + 2, dtype=np.float64)
+    return np.floor(prec.qmax * np.exp(-i)).astype(np.int32)
+
+
+def lut_alpha(prec: Precision, length: int | None = None) -> np.ndarray:
+    """Eq.(7): ``LUT_alpha[j] = floor(qmax / j)`` with ``LUT_alpha[0] = qmax``.
+
+    `length` is the paper's ``x_s`` (reads at index >= length return 0;
+    callers implement that clipping — the table itself has `length` entries).
+    """
+    n = prec.alpha_len if length is None else length
+    if n < 1:
+        raise ValueError(f"LUT_alpha length must be >= 1, got {n}")
+    j = np.arange(n, dtype=np.float64)
+    with np.errstate(divide="ignore"):
+        vals = np.floor(prec.qmax / np.maximum(j, 1.0))
+    vals[0] = prec.qmax
+    return vals.astype(np.int32)
+
+
+def lut_exp(prec: Precision, length: int | None = None) -> np.ndarray:
+    """1-D e^x table of the 2D-LUT method: ``round(qmax * e**(-k*0.1))``.
+
+    Index k quantizes the max-normalized input ``d = max(x) - x`` with step
+    0.1; lengths per precision follow Table 8 (101/101/48/12).
+    """
+    n = prec.exp_len if length is None else length
+    k = np.arange(n, dtype=np.float64)
+    return np.rint(prec.qmax * np.exp(-k * EXP_STEP)).astype(np.int32)
+
+
+def lut_row(prec: Precision, length: int | None = None) -> np.ndarray:
+    """Row-index decode table of the 2D-LUT method.
+
+    The paper (§4.2) notes the first index of LUT_sigma "can be calculated
+    not from e^x but directly from input x" — this table does exactly
+    that: ``LUT_row[k]`` maps the distance index k (the LUT_exp address)
+    straight to the sigma-table row ``clamp(round(e^{-k*0.1} * 10), 0, 10)``
+    computed in the integer domain from LUT_exp. In hardware it is an
+    address-decode ROM folded into LUT_exp's output wiring (no arithmetic,
+    and in particular no divider, on the datapath).
+    """
+    e = lut_exp(prec, length)
+    q = prec.qmax
+    return np.clip((e * 10 + q // 2) // q, 0, SIGMA_ROWS - 1).astype(np.int32)
+
+
+def lut_sigma(prec: Precision, cols: int | None = None) -> np.ndarray:
+    """Eq.(8)-(10): the 2-D quotient table ``LUT_sigma[i][j-1]``.
+
+    Shape ``(11, cols)``; entry value ``min(qmax, floor(qmax * 0.1*i / j))``
+    where row i quantizes the numerator e^x in steps of 0.1 and column j-1
+    quantizes the denominator sum(e^x) in steps of 1.0.
+    """
+    c = prec.sigma_cols if cols is None else cols
+    i = np.arange(SIGMA_ROWS, dtype=np.float64)[:, None] * EXP_STEP
+    j = (np.arange(c, dtype=np.float64)[None, :] + 1.0) * SIGMA_COL_SCALE
+    vals = np.floor(prec.qmax * i / j)
+    return np.minimum(vals, prec.qmax).astype(np.int32)
+
+
+@dataclass(frozen=True)
+class RexpTables:
+    """The two 1-D tables of the REXP method (§4.1)."""
+
+    prec: Precision
+    recip_e: np.ndarray
+    alpha: np.ndarray
+
+    @property
+    def total_bytes(self) -> int:
+        return lut_bytes(self.prec, len(self.recip_e)) + lut_bytes(
+            self.prec, len(self.alpha)
+        )
+
+
+@dataclass(frozen=True)
+class Lut2dTables:
+    """The 1-D exp table + 2-D quotient table of the 2D-LUT method (§4.2).
+
+    `row` is the index-decode ROM (see :func:`lut_row`); it is wiring
+    folded into LUT_exp in hardware and therefore not counted in
+    `total_bytes` (which reproduces the paper's Table 8 accounting).
+    """
+
+    prec: Precision
+    exp: np.ndarray
+    row: np.ndarray
+    sigma: np.ndarray
+
+    @property
+    def total_bytes(self) -> int:
+        return lut_bytes(self.prec, len(self.exp)) + lut_bytes(
+            self.prec, int(self.sigma.size)
+        )
+
+
+def rexp_tables(prec: Precision | str, alpha_len: int | None = None) -> RexpTables:
+    p = precision(prec) if isinstance(prec, str) else prec
+    return RexpTables(p, lut_recip_e(p), lut_alpha(p, alpha_len))
+
+
+def lut2d_tables(prec: Precision | str, sigma_cols: int | None = None) -> Lut2dTables:
+    p = precision(prec) if isinstance(prec, str) else prec
+    return Lut2dTables(p, lut_exp(p), lut_row(p), lut_sigma(p, sigma_cols))
+
+
+def lut_bytes(prec: Precision, entries: int) -> int:
+    """Storage estimate used by Tables 5 and 8: ``ceil(w/8)`` bytes/entry.
+
+    The paper stores each entry in whole bytes (no sub-byte packing):
+    15-bit int16 entries take 2 B, and uint8/uint4/uint2 take 1 B. This
+    reproduces every total of Table 5 (e.g. int16 case 1: (13+256)*2 = 538)
+    and Table 8 (e.g. uint4 2D-LUT: 48 + 11*29 = 367).
+    """
+    return entries * math.ceil(prec.w / 8)

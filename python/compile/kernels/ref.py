@@ -1,0 +1,218 @@
+"""Pure-jnp oracles for every softmax variant — the pytest ground truth.
+
+Each function operates row-wise over the last axis and returns float32
+probabilities. The integer pipelines here define the *bit-exact* semantics
+that the Pallas kernels (softmax_rexp.py / softmax_lut2d.py) and the rust
+software models (rust/src/softmax/) must reproduce entry for entry.
+
+Shared integer contract (see luts.py for the table contents):
+
+REXP (Algorithm 1 of the paper):
+  1. ``d = max(x) - x``                      (float, >= 0)
+  2. ``idx = clamp(int(d), 0, len(recip)-1)``  — truncation == MSB indexing
+  3. ``e_int = LUT_recip[idx]``              (0..qmax)
+  4. ``s = sum(e_int)``                      (int32)
+  5. ``j = s >> w``                          — integer part of sum(sigma*)
+  6. ``a_int = 0 if j >= len(alpha) else LUT_alpha[j]``
+  7. ``sig_int = (e_int * a_int) >> w``
+  8. ``sigma = sig_int / qmax``
+
+2D-LUT (Algorithm 2):
+  1. ``d = max(x) - x``
+  2. ``k = clamp(int(d / 0.1), 0, len(exp)-1)``
+  3. ``e_int = LUT_exp[k]``
+  4. ``s = sum(e_int)``
+  5. ``row = clamp((e_int*10 + qmax//2) // qmax, 0, 10)`` — rounding divide
+  6. ``col = clamp(s >> w, 1, cols)``        (saturating both ends)
+  7. ``sig_int = LUT_sigma[row, col-1]``
+  8. ``sigma = sig_int / qmax``
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import luts
+
+__all__ = [
+    "softmax_exact",
+    "softmax_rexp",
+    "softmax_lut2d",
+    "softmax_priorart_eq2",
+    "softmax_priorart_eq2plus",
+    "softmax_aggressive",
+    "SOFTMAX_MODES",
+    "softmax_by_mode",
+]
+
+
+def softmax_exact(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable exact softmax (Eq.(2) with max subtraction)."""
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _rexp_e_int(x: jnp.ndarray, recip: jnp.ndarray) -> jnp.ndarray:
+    """Steps 1-3 of the REXP pipeline: integer reciprocal-exponentiation."""
+    x = x.astype(jnp.float32)
+    d = jnp.max(x, axis=-1, keepdims=True) - x
+    idx = jnp.clip(d.astype(jnp.int32), 0, recip.shape[0] - 1)
+    return jnp.take(recip, idx)
+
+
+def rexp_pipeline(
+    x: jnp.ndarray, recip: jnp.ndarray, alpha: jnp.ndarray, w: int, qmax: int
+) -> jnp.ndarray:
+    """Table-parameterized REXP integer pipeline (shared with the Pallas
+    kernel body so the two are bit-identical by construction)."""
+    e_int = _rexp_e_int(x, recip)
+    s = jnp.sum(e_int, axis=-1, keepdims=True)
+    j = s >> w
+    a_int = jnp.where(
+        j >= alpha.shape[0],
+        0,
+        jnp.take(alpha, jnp.clip(j, 0, alpha.shape[0] - 1)),
+    )
+    sig_int = (e_int * a_int) >> w
+    # multiply-by-reciprocal: the lowered HLO of the LUT paths must contain
+    # no divide op (the paper's "no divider" claim; asserted by test_aot's
+    # HLO op census)
+    return sig_int.astype(jnp.float32) * (1.0 / qmax)
+
+
+def lut2d_pipeline(
+    x: jnp.ndarray,
+    exp_t: jnp.ndarray,
+    row_t: jnp.ndarray,
+    sigma_t: jnp.ndarray,
+    w: int,
+    qmax: int,
+) -> jnp.ndarray:
+    """Table-parameterized 2D-LUT integer pipeline (shared with the Pallas
+    kernel body). The sigma row index is a pure LUT read (`row_t`, see
+    luts.lut_row) so the lowered datapath contains NO divide — asserted by
+    test_aot's HLO census."""
+    cols = sigma_t.shape[1]
+    x = x.astype(jnp.float32)
+    d = jnp.max(x, axis=-1, keepdims=True) - x
+    k = jnp.clip((d * (1.0 / luts.EXP_STEP)).astype(jnp.int32), 0, exp_t.shape[0] - 1)
+    e_int = jnp.take(exp_t, k)
+    s = jnp.sum(e_int, axis=-1, keepdims=True)
+    row = jnp.take(row_t, k)
+    col = jnp.clip(s >> w, 1, cols)
+    sig_int = sigma_t[row, jnp.broadcast_to(col, row.shape) - 1]
+    return sig_int.astype(jnp.float32) * (1.0 / qmax)
+
+
+def aggressive_pipeline(
+    x: jnp.ndarray, recip: jnp.ndarray, qmax: int
+) -> jnp.ndarray:
+    """Table-parameterized aggressive (unnormalized) pipeline of [29]."""
+    return _rexp_e_int(x, recip).astype(jnp.float32) * (1.0 / qmax)
+
+
+def softmax_rexp(
+    x: jnp.ndarray,
+    prec: luts.Precision | str = "uint8",
+    alpha_len: int | None = None,
+) -> jnp.ndarray:
+    """REXP approximation (paper §4.1, Algorithm 1), float-in/float-out."""
+    p = luts.precision(prec) if isinstance(prec, str) else prec
+    t = luts.rexp_tables(p, alpha_len)
+    recip = jnp.asarray(t.recip_e, dtype=jnp.int32)
+    alpha = jnp.asarray(t.alpha, dtype=jnp.int32)
+    return rexp_pipeline(x, recip, alpha, p.w, p.qmax)
+
+
+def softmax_lut2d(
+    x: jnp.ndarray,
+    prec: luts.Precision | str = "uint8",
+    sigma_cols: int | None = None,
+) -> jnp.ndarray:
+    """2D-LUT approximation (paper §4.2, Algorithm 2), float-in/float-out."""
+    p = luts.precision(prec) if isinstance(prec, str) else prec
+    t = luts.lut2d_tables(p, sigma_cols)
+    exp_t = jnp.asarray(t.exp, dtype=jnp.int32)
+    row_t = jnp.asarray(t.row, dtype=jnp.int32)
+    sigma_t = jnp.asarray(t.sigma, dtype=jnp.int32)
+    return lut2d_pipeline(x, exp_t, row_t, sigma_t, p.w, p.qmax)
+
+
+def _round_to_precision(y: jnp.ndarray, qmax: int) -> jnp.ndarray:
+    """The paper's HW-mimic quantization: ``round(y * prec) / prec``."""
+    return jnp.round(y * qmax) / qmax
+
+
+def softmax_priorart_eq2(
+    x: jnp.ndarray, prec: luts.Precision | str = "uint8"
+) -> jnp.ndarray:
+    """Prior art Eq.(11) (= Eq.(2) of [32]): exp(x - ln(sum e^x)), no
+    max-normalization, outer exp quantized to `prec` bits (Appendix A.1.2)."""
+    p = luts.precision(prec) if isinstance(prec, str) else prec
+    x = x.astype(jnp.float32)
+    y = jnp.exp(x - jnp.log(jnp.sum(jnp.exp(x), axis=-1, keepdims=True)))
+    return _round_to_precision(y, p.qmax)
+
+
+def softmax_priorart_eq2plus(
+    x: jnp.ndarray, prec: luts.Precision | str = "uint8"
+) -> jnp.ndarray:
+    """Prior art Eq.(12) (= Eq.(2)+ of [32]): Eq.(11) with max-normalization."""
+    p = luts.precision(prec) if isinstance(prec, str) else prec
+    x = x.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    xm = x - m
+    y = jnp.exp(xm - jnp.log(jnp.sum(jnp.exp(xm), axis=-1, keepdims=True)))
+    return _round_to_precision(y, p.qmax)
+
+
+def softmax_aggressive(
+    x: jnp.ndarray, prec: luts.Precision | str = "uint8"
+) -> jnp.ndarray:
+    """Aggressive reciprocal-exponentiation of [29] (Eq.(3)): the raw
+    UNNORMALIZED sigma* read from LUT_{1/e}. Collapses attention models
+    (paper Fig. 5) because rows no longer sum to ~1."""
+    p = luts.precision(prec) if isinstance(prec, str) else prec
+    recip = jnp.asarray(luts.lut_recip_e(p), dtype=jnp.int32)
+    return aggressive_pipeline(x, recip, p.qmax)
+
+
+#: mode name -> (fn(x, prec) -> probs). Shared vocabulary across L1/L2/L3.
+SOFTMAX_MODES = (
+    "exact",
+    "rexp",
+    "lut2d",
+    "priorart_eq2",
+    "priorart_eq2plus",
+    "aggressive",
+)
+
+
+def softmax_by_mode(
+    x: jnp.ndarray, mode: str, prec: luts.Precision | str = "uint8", **kw
+) -> jnp.ndarray:
+    """Dispatch a softmax variant by mode name (the L2 models' entry point).
+
+    `prec` accepts spec strings like ``"uint8:a512"`` (see luts.parse_spec)
+    to override the REXP alpha-table length per the paper's DETR cases.
+    """
+    if isinstance(prec, str):
+        p, alpha_len = luts.parse_spec(prec)
+    else:
+        p, alpha_len = prec, None
+    if mode == "exact":
+        return softmax_exact(x)
+    if mode == "rexp":
+        kw.setdefault("alpha_len", alpha_len)
+        return softmax_rexp(x, p, **kw)
+    if mode == "lut2d":
+        return softmax_lut2d(x, p, **kw)
+    if mode == "priorart_eq2":
+        return softmax_priorart_eq2(x, prec)
+    if mode == "priorart_eq2plus":
+        return softmax_priorart_eq2plus(x, prec)
+    if mode == "aggressive":
+        return softmax_aggressive(x, prec)
+    raise ValueError(f"unknown softmax mode {mode!r}; expected {SOFTMAX_MODES}")

@@ -1,0 +1,62 @@
+"""Pallas kernel: numerically-stable exact softmax (the fp reference datapath).
+
+Row-tiled: the grid walks blocks of rows; each program computes a stable
+softmax over the full last axis of its tile. This is the baseline the LUT
+kernels are compared against both for accuracy and for HBM<->VMEM traffic
+(DESIGN.md §Perf).
+
+All kernels in this package use ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret-mode lowers to plain HLO
+that the rust runtime can compile and run (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["softmax_exact_pallas", "DEFAULT_BLOCK_ROWS"]
+
+#: default row-tile; small enough that tile + exp temporaries fit VMEM for
+#: any n <= 4096 at fp32 (2 * 128 * 4096 * 4 B = 4 MiB of a 16 MiB VMEM).
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _exact_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _pad_rows(x2d: jnp.ndarray, bm: int) -> tuple[jnp.ndarray, int]:
+    rows = x2d.shape[0]
+    pad = (-rows) % bm
+    if pad:
+        x2d = jnp.concatenate([x2d, jnp.zeros((pad, x2d.shape[1]), x2d.dtype)])
+    return x2d, rows
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def softmax_exact_pallas(
+    x: jnp.ndarray, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> jnp.ndarray:
+    """Exact softmax over the last axis of `x` via a row-tiled Pallas kernel."""
+    shape = x.shape
+    n = shape[-1]
+    x2d = x.reshape(-1, n).astype(jnp.float32)
+    bm = min(block_rows, x2d.shape[0])
+    x2d, rows = _pad_rows(x2d, bm)
+
+    out = pl.pallas_call(
+        _exact_kernel,
+        grid=(x2d.shape[0] // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, jnp.float32),
+        interpret=True,
+    )(x2d)
+    return out[:rows].reshape(shape)

@@ -1,0 +1,110 @@
+"""Pallas kernel: 2D-LUT softmax approximation (paper §4.2, Algorithm 2).
+
+The quantized path contains **no divide and no multiply**: numerator and
+denominator MSBs index a precomputed (11 x cols) quotient table (Fig. 1).
+On TPU the whole table (<= 1.5 KB) is VMEM-resident; index math is a cast,
+a shift and two clamps on the VPU.
+
+Kernel body delegates to :func:`ref.lut2d_pipeline` — bit-identical to the
+oracle by construction. Tables are operands for runtime reconfigurability.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import luts, ref
+from .softmax_exact import DEFAULT_BLOCK_ROWS, _pad_rows
+
+__all__ = ["softmax_lut2d_pallas", "lut2d_with_tables", "make_lut2d_callable"]
+
+
+def _lut2d_kernel(x_ref, exp_ref, row_ref, sigma_ref, o_ref, *, w: int, qmax: int):
+    x = x_ref[...]
+    exp_t = exp_ref[...]
+    row_t = row_ref[...]
+    sigma_t = sigma_ref[...]
+    o_ref[...] = ref.lut2d_pipeline(x, exp_t, row_t, sigma_t, w, qmax)
+
+
+def _call(x2d, exp_t, row_t, sigma_t, w, qmax, bm):
+    n = x2d.shape[1]
+    kern = functools.partial(_lut2d_kernel, w=w, qmax=qmax)
+    return pl.pallas_call(
+        kern,
+        grid=(x2d.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec(exp_t.shape, lambda i: (0,)),
+            pl.BlockSpec(row_t.shape, lambda i: (0,)),
+            pl.BlockSpec(sigma_t.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, jnp.float32),
+        interpret=True,
+    )(x2d, exp_t, row_t, sigma_t)
+
+
+@functools.partial(jax.jit, static_argnames=("prec", "sigma_cols", "block_rows"))
+def softmax_lut2d_pallas(
+    x: jnp.ndarray,
+    prec: str = "uint8",
+    sigma_cols: int | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jnp.ndarray:
+    """2D-LUT softmax over the last axis of `x` (builds tables internally)."""
+    p = luts.precision(prec)
+    t = luts.lut2d_tables(p, sigma_cols)
+    exp_t = jnp.asarray(t.exp, dtype=jnp.int32)
+    row_t = jnp.asarray(t.row, dtype=jnp.int32)
+    sigma_t = jnp.asarray(t.sigma, dtype=jnp.int32)
+
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    bm = min(block_rows, x2d.shape[0])
+    x2d, rows = _pad_rows(x2d, bm)
+    out = _call(x2d, exp_t, row_t, sigma_t, p.w, p.qmax, bm)
+    return out[:rows].reshape(shape)
+
+
+def lut2d_with_tables(
+    x: jnp.ndarray,
+    exp_t: jnp.ndarray,
+    row_t: jnp.ndarray,
+    sigma_t: jnp.ndarray,
+    prec: str = "uint8",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jnp.ndarray:
+    """2D-LUT softmax with caller-supplied (traced) tables — see
+    rexp_with_tables for why model graphs must use operand tables."""
+    p = luts.precision(prec)
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    bm = min(block_rows, x2d.shape[0])
+    x2d, rows = _pad_rows(x2d, bm)
+    out = _call(x2d, exp_t, row_t, sigma_t, p.w, p.qmax, bm)
+    return out[:rows].reshape(shape)
+
+
+def make_lut2d_callable(rows: int, n: int, prec: str = "uint8"):
+    """AOT entry point mirroring :func:`make_rexp_callable`."""
+    p = luts.precision(prec)
+    t = luts.lut2d_tables(p)
+    bm = min(DEFAULT_BLOCK_ROWS, rows)
+
+    def fn(x, exp_t, row_t, sigma_t):
+        x2d, r = _pad_rows(x.reshape(-1, n).astype(jnp.float32), bm)
+        out = _call(x2d, exp_t, row_t, sigma_t, p.w, p.qmax, bm)
+        return (out[:r].reshape(rows, n),)
+
+    specs = (
+        jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        jax.ShapeDtypeStruct(t.exp.shape, jnp.int32),
+        jax.ShapeDtypeStruct(t.row.shape, jnp.int32),
+        jax.ShapeDtypeStruct(t.sigma.shape, jnp.int32),
+    )
+    return fn, specs

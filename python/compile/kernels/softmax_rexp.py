@@ -1,0 +1,116 @@
+"""Pallas kernel: REXP softmax approximation (paper §4.1, Algorithm 1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's datapath
+is LUT-ROM + adder-tree + one integer multiplier, no divider. On TPU the
+two tables (<= ~1 KB) are kernel-resident constants pinned in VMEM/SMEM for
+the whole grid; the "MSB wiring" index of Fig. 1 becomes an int cast + clamp
+on the VPU; and the row tiles stream HBM->VMEM via BlockSpec. No MXU is
+involved — the unit is matmul-free, mirroring the paper's claim.
+
+The kernel body delegates to :func:`ref.rexp_pipeline`, so the executed
+integer semantics are bit-identical to the pure-jnp oracle by construction;
+the pytest suite additionally asserts it on random tensors.
+
+Tables are passed as *operands*, not baked constants, to preserve the
+paper's "LUT can be reconfigured on demand" property: the same compiled
+executable serves any alpha-table length of the same shape (L3 swaps tables
+at dispatch time).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import luts, ref
+from .softmax_exact import DEFAULT_BLOCK_ROWS, _pad_rows
+
+__all__ = ["softmax_rexp_pallas", "rexp_with_tables", "make_rexp_callable"]
+
+
+def _rexp_kernel(x_ref, recip_ref, alpha_ref, o_ref, *, w: int, qmax: int):
+    x = x_ref[...]
+    recip = recip_ref[...]
+    alpha = alpha_ref[...]
+    o_ref[...] = ref.rexp_pipeline(x, recip, alpha, w, qmax)
+
+
+def _call(x2d, recip, alpha, w, qmax, bm):
+    n = x2d.shape[1]
+    kern = functools.partial(_rexp_kernel, w=w, qmax=qmax)
+    return pl.pallas_call(
+        kern,
+        grid=(x2d.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec(recip.shape, lambda i: (0,)),
+            pl.BlockSpec(alpha.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, jnp.float32),
+        interpret=True,
+    )(x2d, recip, alpha)
+
+
+@functools.partial(jax.jit, static_argnames=("prec", "alpha_len", "block_rows"))
+def softmax_rexp_pallas(
+    x: jnp.ndarray,
+    prec: str = "uint8",
+    alpha_len: int | None = None,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jnp.ndarray:
+    """REXP softmax over the last axis of `x` (builds tables internally)."""
+    p = luts.precision(prec)
+    t = luts.rexp_tables(p, alpha_len)
+    recip = jnp.asarray(t.recip_e, dtype=jnp.int32)
+    alpha = jnp.asarray(t.alpha, dtype=jnp.int32)
+
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    bm = min(block_rows, x2d.shape[0])
+    x2d, rows = _pad_rows(x2d, bm)
+    out = _call(x2d, recip, alpha, p.w, p.qmax, bm)
+    return out[:rows].reshape(shape)
+
+
+def rexp_with_tables(
+    x: jnp.ndarray,
+    recip: jnp.ndarray,
+    alpha: jnp.ndarray,
+    prec: str = "uint8",
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+) -> jnp.ndarray:
+    """REXP softmax with caller-supplied (traced) tables — used by the L2
+    model graphs so tables lower to runtime OPERANDS. (Baked s32 constants
+    miscompile under xla_extension 0.5.1; operands round-trip bit-exactly,
+    and operand tables are the paper's reconfigurability story anyway.)"""
+    p = luts.precision(prec)
+    shape = x.shape
+    x2d = x.reshape(-1, shape[-1]).astype(jnp.float32)
+    bm = min(block_rows, x2d.shape[0])
+    x2d, rows = _pad_rows(x2d, bm)
+    out = _call(x2d, recip, alpha, p.w, p.qmax, bm)
+    return out[:rows].reshape(shape)
+
+
+def make_rexp_callable(rows: int, n: int, prec: str = "uint8"):
+    """AOT entry point: a (x, recip, alpha) -> sigma function of fixed shape
+    for `aot.py` to lower; tables stay runtime operands so L3 can swap them."""
+    p = luts.precision(prec)
+    t = luts.rexp_tables(p)
+    bm = min(DEFAULT_BLOCK_ROWS, rows)
+
+    def fn(x, recip, alpha):
+        x2d, r = _pad_rows(x.reshape(-1, n).astype(jnp.float32), bm)
+        out = _call(x2d, recip, alpha, p.w, p.qmax, bm)
+        return (out[:r].reshape(rows, n),)
+
+    specs = (
+        jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        jax.ShapeDtypeStruct(t.recip_e.shape, jnp.int32),
+        jax.ShapeDtypeStruct(t.alpha.shape, jnp.int32),
+    )
+    return fn, specs

@@ -1,0 +1,215 @@
+"""L2 variant registry: every (model, weights, softmax mode, precision)
+inference graph the AOT pipeline lowers, and the python-side entry points
+for building them.
+
+A *variant* is identified by a string ``<model>__<weights>__<mode>__<spec>``:
+
+    model   nmt14 | nmt17 | sst2 | mrpc | detr | detr_dc5
+    weights fp32 | ptqd            (ptqd = dynamic int8 PTQ, Appendix A.3)
+    mode    exact | rexp | lut2d | priorart_eq2 | priorart_eq2plus | aggressive
+    spec    fp32 | int16 | uint8 | uint4 | uint2, optionally ':aN' for the
+            REXP alpha-table length (the paper's DETR cases 1..3)
+
+NMT variants lower to TWO artifacts (encode + decode step) because the
+rust coordinator owns the autoregressive loop. Model weights are runtime
+*operands* (not baked constants): artifacts stay small and the same
+weight bundle feeds every softmax variant of a model.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from . import data
+from .kernels import luts
+from .models import bert, common, detr, nmt
+
+#: evaluation batch sizes baked into artifact shapes (the coordinator's
+#: dynamic batcher packs requests up to this size)
+NMT_BATCH = 8
+CLS_BATCH = 8
+DETR_BATCH = 4
+
+NMT_DATA = {14: data.NmtConfig(corpus_seed=14), 17: data.NmtConfig(corpus_seed=17)}
+NMT_CFG = nmt.NmtModelConfig()
+BERT_CFG = bert.BertModelConfig()
+DETR_CFG = detr.DetrModelConfig()
+DETR_DC5_CFG = detr.dc5_variant(DETR_CFG)
+
+
+@dataclass(frozen=True)
+class Variant:
+    model: str          # nmt14 / nmt17 / sst2 / mrpc / detr / detr_dc5
+    weights: str        # fp32 / ptqd
+    mode: str           # softmax mode
+    spec: str           # precision spec ("fp32" only with mode == exact)
+
+    @property
+    def name(self) -> str:
+        spec = self.spec.replace(":", "-")
+        return f"{self.model}__{self.weights}__{self.mode}__{spec}"
+
+    @property
+    def quantized(self) -> bool:
+        return self.weights == "ptqd"
+
+    @property
+    def ckpt(self) -> str:
+        return self.model  # one checkpoint per model name
+
+
+def _nmt_variants(model: str) -> list[Variant]:
+    out = [Variant(model, "fp32", "exact", "fp32"), Variant(model, "ptqd", "exact", "fp32")]
+    for mode in ("rexp", "lut2d"):
+        for spec in ("int16", "uint8", "uint4", "uint2"):
+            out.append(Variant(model, "ptqd", mode, spec))
+    return out
+
+
+def _cls_variants(model: str) -> list[Variant]:
+    return _nmt_variants(model)  # same grid (Table 2)
+
+
+def _detr_variants(model: str) -> list[Variant]:
+    out = [Variant(model, "fp32", "exact", "fp32"), Variant(model, "ptqd", "exact", "fp32")]
+    # Tables 6/7 + Fig 2: PTQ-D x {int16, uint8} x alpha cases 256/320/512
+    for spec_base in ("int16", "uint8"):
+        for alpha in (256, 320, 512):
+            out.append(Variant(model, "ptqd", "rexp", f"{spec_base}:a{alpha}"))
+    # Tables 1/3: prior arts at fp32 weights, uint8 outer rounding
+    out.append(Variant(model, "fp32", "priorart_eq2", "uint8"))
+    out.append(Variant(model, "fp32", "priorart_eq2plus", "uint8"))
+    # REXP row of Table 1 at fp32 weights (prior-art comparison conditions)
+    out.append(Variant(model, "fp32", "rexp", "uint8:a256"))
+    # Fig 5: aggressive approximation collapse
+    out.append(Variant(model, "fp32", "aggressive", "uint8"))
+    return out
+
+
+def all_variants() -> list[Variant]:
+    vs: list[Variant] = []
+    for m in ("nmt14", "nmt17"):
+        vs += _nmt_variants(m)
+    for m in ("sst2", "mrpc"):
+        vs += _cls_variants(m)
+    for m in ("detr", "detr_dc5"):
+        vs += _detr_variants(m)
+    return vs
+
+
+def _mode_spec(v: Variant) -> tuple[str, str]:
+    """(softmax_mode, prec-spec) as consumed by the model stack."""
+    return v.mode, (v.spec if v.spec != "fp32" else "uint8")
+
+
+def variant_tables(v: Variant) -> list[np.ndarray]:
+    """LUT contents a variant's artifact takes as runtime operands.
+
+    The rust runtime rebuilds EXACTLY these from its own lut substrate
+    (mode + spec are in the manifest) and feeds them on every execution —
+    tables never live inside the compiled artifact.
+    """
+    mode, spec = _mode_spec(v)
+    p, alpha_len = luts.parse_spec(spec)
+    if mode == "rexp":
+        t = luts.rexp_tables(p, alpha_len)
+        return [t.recip_e, t.alpha]
+    if mode == "lut2d":
+        t = luts.lut2d_tables(p)
+        return [t.exp, t.row, t.sigma]
+    if mode == "aggressive":
+        return [luts.lut_recip_e(p)]
+    return []
+
+
+class _tables_ctx:
+    """Scoped install of traced table operands into the model stack."""
+
+    def __init__(self, tables):
+        self.tables = list(tables)
+
+    def __enter__(self):
+        common.RUNTIME_TABLES = self.tables if self.tables else None
+
+    def __exit__(self, *exc):
+        common.RUNTIME_TABLES = None
+
+
+# ---------------------------------------------------------------------------
+# graph builders: fn(params, *inputs) -> tuple of outputs
+
+
+def nmt_encode_fn(v: Variant):
+    mode, spec = _mode_spec(v)
+
+    def fn(params, tables, src):
+        with _tables_ctx(tables):
+            return (nmt.encode(params, src, NMT_CFG, mode, spec, v.quantized),)
+
+    args = (jax.ShapeDtypeStruct((NMT_BATCH, NMT_CFG.max_src), jnp.int32),)
+    return fn, args
+
+
+def nmt_decode_fn(v: Variant):
+    mode, spec = _mode_spec(v)
+
+    def fn(params, tables, memory, src, tgt):
+        with _tables_ctx(tables):
+            return (
+                nmt.decode_logits(
+                    params, memory, src, tgt, NMT_CFG, mode, spec, v.quantized
+                ),
+            )
+
+    args = (
+        jax.ShapeDtypeStruct((NMT_BATCH, NMT_CFG.max_src, NMT_CFG.d_model), jnp.float32),
+        jax.ShapeDtypeStruct((NMT_BATCH, NMT_CFG.max_src), jnp.int32),
+        jax.ShapeDtypeStruct((NMT_BATCH, NMT_CFG.max_tgt), jnp.int32),
+    )
+    return fn, args
+
+
+def cls_fn(v: Variant):
+    mode, spec = _mode_spec(v)
+
+    def fn(params, tables, tokens):
+        with _tables_ctx(tables):
+            return (bert.forward(params, tokens, BERT_CFG, mode, spec, v.quantized),)
+
+    args = (jax.ShapeDtypeStruct((CLS_BATCH, BERT_CFG.max_len), jnp.int32),)
+    return fn, args
+
+
+def detr_fn(v: Variant):
+    mode, spec = _mode_spec(v)
+    cfg = DETR_DC5_CFG if v.model == "detr_dc5" else DETR_CFG
+
+    def fn(params, tables, images):
+        with _tables_ctx(tables):
+            cls_logits, boxes = detr.forward(
+                params, images, cfg, mode, spec, v.quantized
+            )
+        return (cls_logits, boxes)
+
+    s = cfg.image_size
+    args = (jax.ShapeDtypeStruct((DETR_BATCH, s, s, cfg.channels), jnp.float32),)
+    return fn, args
+
+
+def artifact_graphs(v: Variant) -> dict[str, tuple]:
+    """Variant -> {artifact suffix: (fn, example_args)}."""
+    if v.model.startswith("nmt"):
+        return {"enc": nmt_encode_fn(v), "dec": nmt_decode_fn(v)}
+    if v.model in ("sst2", "mrpc"):
+        return {"cls": cls_fn(v)}
+    return {"det": detr_fn(v)}
+
+
+def load_ckpt(out_dir: str, model: str) -> common.Params:
+    return common.load_params(os.path.join(out_dir, "ckpt", f"{model}.npz"))

@@ -1,0 +1,11 @@
+"""L2: pure-JAX model zoo (no flax/optax in this environment).
+
+Models are parameter-pytree functions; every attention goes through
+`kernels.attention.attention_ref` semantics with a pluggable softmax mode,
+so post-training softmax substitution (the paper's experiment) is a pure
+config change on the inference graph.
+"""
+
+from . import bert, common, detr, nmt
+
+__all__ = ["bert", "common", "detr", "nmt"]

@@ -1,0 +1,76 @@
+"""bert_lite: encoder-only classifier (the paper's BERT/GLUE analog).
+
+Encoder stack + CLS-position head, used for both the SST-2-analog
+(sentiment) and MRPC-analog (pair equivalence) tasks; the two tasks share
+the architecture and differ only in trained weights, like fine-tuned BERT.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import data
+from . import common
+
+
+@dataclass(frozen=True)
+class BertModelConfig:
+    vocab: int = 64
+    d_model: int = 64
+    d_ff: int = 128
+    heads: int = 4
+    layers: int = 2
+    max_len: int = 24
+    num_classes: int = 2
+
+
+def init_params(key, cfg: BertModelConfig) -> common.Params:
+    ks = jax.random.split(key, cfg.layers + 3)
+    return {
+        "embed": common.embedding_init(ks[0], cfg.vocab, cfg.d_model),
+        "enc": {
+            str(i): common.block_init(ks[1 + i], cfg.d_model, cfg.d_ff)
+            for i in range(cfg.layers)
+        },
+        "pool": common.dense_init(ks[-2], cfg.d_model, cfg.d_model),
+        "head": common.dense_init(ks[-1], cfg.d_model, cfg.num_classes),
+    }
+
+
+def forward(
+    params,
+    tokens: jnp.ndarray,
+    cfg: BertModelConfig,
+    softmax_mode: str = "exact",
+    prec: str = "uint8",
+    quantized: bool = False,
+    stats: list | None = None,
+) -> jnp.ndarray:
+    """(batch, max_len) tokens -> (batch, num_classes) logits."""
+    mask = common.padding_mask(tokens)
+    x = params["embed"][tokens] + common.sinusoidal_positions(
+        tokens.shape[1], cfg.d_model
+    )
+    for i in range(cfg.layers):
+        x = common.encoder_block(
+            params["enc"][str(i)], x, cfg.heads, mask, softmax_mode, prec, quantized, stats
+        )
+    cls = jnp.tanh(common.dense(params["pool"], x[:, 0], quantized))
+    return common.dense(params["head"], cls, quantized)
+
+
+def loss_fn(params, tokens, labels, cfg: BertModelConfig) -> jnp.ndarray:
+    logits = forward(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], -1))
+
+
+def accuracy(params, tokens, labels, cfg: BertModelConfig, **kw) -> float:
+    pred = jnp.argmax(forward(params, tokens, cfg, **kw), -1)
+    return float(jnp.mean((pred == labels).astype(jnp.float32)))
+
+
+_ = data  # re-exported conventions (PAD etc.) used by callers

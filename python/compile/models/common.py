@@ -1,0 +1,318 @@
+"""Shared transformer building blocks and a hand-rolled Adam.
+
+flax/optax are unavailable offline, so parameters are plain nested dicts of
+jnp arrays, initializers use jax.random, and Adam is implemented directly
+on pytrees. Every attention call takes ``softmax_mode``/``prec`` so the
+inference graph can swap the softmax approximation without retraining
+(post-training substitution, paper §5).
+
+Quantized inference (PTQ-D, Appendix A.3) is driven by the ``quantized``
+flag: dense layers then run the dynamic int8 scheme from `compile.quant`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import quant
+from ..kernels import ref
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+
+
+def dense_init(key, d_in: int, d_out: int) -> Params:
+    k1, _ = jax.random.split(key)
+    scale = math.sqrt(2.0 / (d_in + d_out))
+    return {
+        "w": jax.random.normal(k1, (d_in, d_out), jnp.float32) * scale,
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def layernorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def embedding_init(key, vocab: int, d: int) -> jnp.ndarray:
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+def mha_init(key, d_model: int) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, d_model),
+        "wk": dense_init(ks[1], d_model, d_model),
+        "wv": dense_init(ks[2], d_model, d_model),
+        "wo": dense_init(ks[3], d_model, d_model),
+    }
+
+
+def ffn_init(key, d_model: int, d_ff: int) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, d_model, d_ff), "down": dense_init(k2, d_ff, d_model)}
+
+
+def block_init(key, d_model: int, d_ff: int, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "attn": mha_init(ks[0], d_model),
+        "ffn": ffn_init(ks[1], d_model, d_ff),
+        "ln1": layernorm_init(d_model),
+        "ln2": layernorm_init(d_model),
+    }
+    if cross:
+        p["xattn"] = mha_init(ks[2], d_model)
+        p["ln3"] = layernorm_init(d_model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward ops
+
+
+def dense(p: Params, x: jnp.ndarray, quantized: bool = False) -> jnp.ndarray:
+    """Dense layer; quantized=True adds the *dynamic activation* half of
+    PTQ-D (weights are fake-quantized offline by quant.quantize_params, so
+    quantized graphs must be fed quantized param pytrees)."""
+    if quantized:
+        x = quant.fake_quant_array(x)
+    return x @ p["w"] + p["b"]
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def sinusoidal_positions(length: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def split_heads(x: jnp.ndarray, heads: int) -> jnp.ndarray:
+    b, l, d = x.shape
+    return x.reshape(b, l, heads, d // heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x: jnp.ndarray) -> jnp.ndarray:
+    b, h, l, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * dh)
+
+
+def mha(
+    p: Params,
+    q_in: jnp.ndarray,
+    kv_in: jnp.ndarray,
+    heads: int,
+    mask: jnp.ndarray | None = None,
+    softmax_mode: str = "exact",
+    prec: str = "uint8",
+    quantized: bool = False,
+    stats: list | None = None,
+) -> jnp.ndarray:
+    """Multi-head attention with pluggable softmax approximation.
+
+    `mask` is additive (0 = keep, -inf-ish = drop), broadcastable to
+    (batch, heads, Lq, Lk). When `stats` is a list, the per-row sum(e^x)
+    values of the exact softmax are appended (Fig. 4 instrumentation).
+    """
+    d_model = q_in.shape[-1]
+    dh = d_model // heads
+    q = split_heads(dense(p["wq"], q_in, quantized), heads)
+    k = split_heads(dense(p["wk"], kv_in, quantized), heads)
+    v = split_heads(dense(p["wv"], kv_in, quantized), heads)
+
+    scores = jnp.einsum("bhld,bhsd->bhls", q, k) * (1.0 / math.sqrt(dh))
+    if mask is not None:
+        scores = scores + mask
+    if stats is not None:
+        m = jnp.max(scores, -1, keepdims=True)
+        stats.append(jnp.sum(jnp.exp(scores - m), -1))
+    probs = _softmax(scores, softmax_mode, prec)
+    out = merge_heads(jnp.einsum("bhls,bhsd->bhld", probs, v))
+    return dense(p["wo"], out, quantized)
+
+
+#: when True, mha routes exact/rexp/lut2d through the L1 *Pallas kernels*
+#: so they lower into the model's HLO (the AOT contract); ref-jnp otherwise
+#: (training / quick python eval — numerically identical, kernel==oracle is
+#: asserted by tests/test_kernels.py).
+USE_PALLAS_SOFTMAX = False
+
+#: when set (by the AOT graph builders in model.py), LUT contents come from
+#: these *traced* arrays so they lower to runtime HLO OPERANDS instead of
+#: baked constants. Two reasons: (a) the paper's "LUT reconfigurable on
+#: demand" property — L3 swaps tables without recompiling; (b) s32 constant
+#: tables miscompile through the xla_extension 0.5.1 text round-trip,
+#: operands execute bit-exactly (see DESIGN.md §Perf notes).
+RUNTIME_TABLES: list | None = None
+
+
+def _softmax(scores: jnp.ndarray, mode: str, prec: str) -> jnp.ndarray:
+    from ..kernels import luts
+
+    if RUNTIME_TABLES is not None and mode in ("rexp", "lut2d", "aggressive"):
+        t = RUNTIME_TABLES
+        p, _ = luts.parse_spec(prec)
+        if mode == "rexp":
+            from ..kernels.softmax_rexp import rexp_with_tables
+
+            return rexp_with_tables(scores, t[0], t[1], p.name)
+        if mode == "lut2d":
+            from ..kernels.softmax_lut2d import lut2d_with_tables
+
+            return lut2d_with_tables(scores, t[0], t[1], t[2], p.name)
+        return ref.aggressive_pipeline(scores, t[0], p.qmax)
+    if USE_PALLAS_SOFTMAX and mode in ("exact", "rexp", "lut2d"):
+        from ..kernels.softmax_exact import softmax_exact_pallas
+        from ..kernels.softmax_lut2d import softmax_lut2d_pallas
+        from ..kernels.softmax_rexp import softmax_rexp_pallas
+
+        if mode == "exact":
+            return softmax_exact_pallas(scores)
+        p, alpha_len = luts.parse_spec(prec)
+        if mode == "rexp":
+            return softmax_rexp_pallas(scores, p.name, alpha_len)
+        return softmax_lut2d_pallas(scores, p.name)
+    return ref.softmax_by_mode(scores, mode, prec)
+
+
+def ffn(p: Params, x: jnp.ndarray, quantized: bool = False) -> jnp.ndarray:
+    return dense(p["down"], jax.nn.relu(dense(p["up"], x, quantized)), quantized)
+
+
+def encoder_block(
+    p: Params,
+    x: jnp.ndarray,
+    heads: int,
+    mask=None,
+    softmax_mode="exact",
+    prec="uint8",
+    quantized=False,
+    stats=None,
+) -> jnp.ndarray:
+    x = layernorm(
+        p["ln1"],
+        x + mha(p["attn"], x, x, heads, mask, softmax_mode, prec, quantized, stats),
+    )
+    return layernorm(p["ln2"], x + ffn(p["ffn"], x, quantized))
+
+
+def decoder_block(
+    p: Params,
+    x: jnp.ndarray,
+    memory: jnp.ndarray,
+    heads: int,
+    self_mask=None,
+    cross_mask=None,
+    softmax_mode="exact",
+    prec="uint8",
+    quantized=False,
+    stats=None,
+) -> jnp.ndarray:
+    x = layernorm(
+        p["ln1"],
+        x + mha(p["attn"], x, x, heads, self_mask, softmax_mode, prec, quantized, stats),
+    )
+    x = layernorm(
+        p["ln3"],
+        x
+        + mha(
+            p["xattn"], x, memory, heads, cross_mask, softmax_mode, prec, quantized, stats
+        ),
+    )
+    return layernorm(p["ln2"], x + ffn(p["ffn"], x, quantized))
+
+
+def causal_mask(length: int) -> jnp.ndarray:
+    m = jnp.tril(jnp.ones((length, length), jnp.float32))
+    return jnp.where(m == 0, -1e9, 0.0)[None, None]
+
+
+def padding_mask(tokens: jnp.ndarray, pad_id: int = 0) -> jnp.ndarray:
+    """(batch, L) tokens -> additive mask (batch, 1, 1, L)."""
+    return jnp.where(tokens == pad_id, -1e9, 0.0)[:, None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Adam on pytrees (optax is unavailable offline)
+
+
+def adam_init(params: Params) -> Params:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    state: Params,
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> tuple[Params, Params]:
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint (flat .npz; keys are /-joined paths)
+
+
+def flatten(params: Params, prefix: str = "") -> dict[str, jnp.ndarray]:
+    out = {}
+    for k, v in params.items():
+        key = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten(v, key))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten(flat: dict[str, jnp.ndarray]) -> Params:
+    root: Params = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(v)
+    return root
+
+
+def save_params(path: str, params: Params) -> None:
+    import numpy as np
+
+    np.savez(path, **{k: np.asarray(v) for k, v in flatten(params).items()})
+
+
+def load_params(path: str) -> Params:
+    import numpy as np
+
+    with np.load(path) as z:
+        return unflatten({k: z[k] for k in z.files})

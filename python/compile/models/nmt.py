@@ -1,0 +1,137 @@
+"""nmt_lite: transformer encoder-decoder (the paper's OpenNMT analog).
+
+Architecture: Transformer-base scaled down for CPU training — shared token
+embeddings, sinusoidal positions, N encoder + N decoder blocks, tied output
+projection. The inference graph splits into `encode` and `decode_step`
+artifacts so the **rust coordinator owns the autoregressive loop** (the
+serving-runtime framing of DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .. import data
+from . import common
+
+
+@dataclass(frozen=True)
+class NmtModelConfig:
+    vocab: int = 64
+    d_model: int = 64
+    d_ff: int = 128
+    heads: int = 4
+    layers: int = 2
+    max_src: int = 20
+    max_tgt: int = 21
+
+
+def init_params(key, cfg: NmtModelConfig) -> common.Params:
+    ks = jax.random.split(key, 2 * cfg.layers + 2)
+    return {
+        "embed": common.embedding_init(ks[0], cfg.vocab, cfg.d_model),
+        "enc": {
+            str(i): common.block_init(ks[1 + i], cfg.d_model, cfg.d_ff)
+            for i in range(cfg.layers)
+        },
+        "dec": {
+            str(i): common.block_init(
+                ks[1 + cfg.layers + i], cfg.d_model, cfg.d_ff, cross=True
+            )
+            for i in range(cfg.layers)
+        },
+        "out": common.dense_init(ks[-1], cfg.d_model, cfg.vocab),
+    }
+
+
+def encode(
+    params,
+    src: jnp.ndarray,
+    cfg: NmtModelConfig,
+    softmax_mode: str = "exact",
+    prec: str = "uint8",
+    quantized: bool = False,
+    stats: list | None = None,
+) -> jnp.ndarray:
+    """(batch, max_src) tokens -> (batch, max_src, d_model) memory."""
+    mask = common.padding_mask(src)
+    x = params["embed"][src] + common.sinusoidal_positions(src.shape[1], cfg.d_model)
+    for i in range(cfg.layers):
+        x = common.encoder_block(
+            params["enc"][str(i)], x, cfg.heads, mask, softmax_mode, prec, quantized, stats
+        )
+    return x
+
+
+def decode_logits(
+    params,
+    memory: jnp.ndarray,
+    src: jnp.ndarray,
+    tgt: jnp.ndarray,
+    cfg: NmtModelConfig,
+    softmax_mode: str = "exact",
+    prec: str = "uint8",
+    quantized: bool = False,
+    stats: list | None = None,
+) -> jnp.ndarray:
+    """Teacher-forced decoder: (batch, T) prefix -> (batch, T, vocab) logits."""
+    T = tgt.shape[1]
+    self_mask = common.causal_mask(T) + common.padding_mask(tgt)
+    cross_mask = common.padding_mask(src)
+    x = params["embed"][tgt] + common.sinusoidal_positions(T, cfg.d_model)
+    for i in range(cfg.layers):
+        x = common.decoder_block(
+            params["dec"][str(i)],
+            x,
+            memory,
+            cfg.heads,
+            self_mask,
+            cross_mask,
+            softmax_mode,
+            prec,
+            quantized,
+            stats,
+        )
+    return common.dense(params["out"], x, quantized)
+
+
+def loss_fn(params, src, tgt, cfg: NmtModelConfig) -> jnp.ndarray:
+    """Cross-entropy over next-token prediction, PAD positions masked."""
+    memory = encode(params, src, cfg)
+    logits = decode_logits(params, memory, src, tgt[:, :-1], cfg)
+    targets = tgt[:, 1:]
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], -1)[..., 0]
+    mask = (targets != data.PAD).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def greedy_decode(
+    params,
+    src: jnp.ndarray,
+    cfg: NmtModelConfig,
+    softmax_mode: str = "exact",
+    prec: str = "uint8",
+    quantized: bool = False,
+) -> jnp.ndarray:
+    """Python-side greedy decoding (build-time eval only; the serving path
+    re-implements this loop in rust over the AOT artifacts)."""
+    memory = encode(params, src, cfg, softmax_mode, prec, quantized)
+    batch = src.shape[0]
+    tgt = jnp.full((batch, cfg.max_tgt), data.PAD, jnp.int32)
+    tgt = tgt.at[:, 0].set(data.BOS)
+    done = jnp.zeros((batch,), bool)
+    for t in range(1, cfg.max_tgt):
+        logits = decode_logits(
+            params, memory, src, tgt[:, :t], cfg, softmax_mode, prec, quantized
+        )
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        nxt = jnp.where(done, data.PAD, nxt)
+        tgt = tgt.at[:, t].set(nxt)
+        done = done | (nxt == data.EOS)
+        if bool(jnp.all(done)):
+            break
+    return tgt

@@ -1,0 +1,118 @@
+"""PTQ-D: dynamic post-training quantization simulation (Appendix A.3).
+
+Mirrors PyTorch's ``torch.quantization.quantize_dynamic`` defaults used by
+the paper: linear-layer weights stored as per-tensor affine **qint8**, and
+activations quantized dynamically per tensor at matmul time. The matmul is
+computed in the integer domain and dequantized with the product of the two
+scales, reproducing the accuracy characteristics (Table 4) without needing
+actual int8 BLAS.
+
+All other ops (layernorm, residuals, softmax inputs) stay fp32, exactly as
+in the paper's PTQ-D setup — the LUT softmax approximation is then layered
+on top of this quantized model.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_weight",
+    "fake_quant_array",
+    "quantize_params",
+    "qdense",
+    "model_size_bytes",
+]
+
+QMIN, QMAX = -128, 127
+
+
+def _affine_params(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor affine (scale, zero_point) covering [min, max] — the
+    torch.per_tensor_affine scheme."""
+    lo = jnp.minimum(jnp.min(x), 0.0)
+    hi = jnp.maximum(jnp.max(x), 0.0)
+    scale = jnp.maximum((hi - lo) / (QMAX - QMIN), 1e-12)
+    zp = jnp.clip(jnp.round(QMIN - lo / scale), QMIN, QMAX)
+    return scale, zp
+
+
+def quantize_weight(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """fp32 weight -> (int8 values, scale, zero_point)."""
+    scale, zp = _affine_params(w)
+    q = jnp.clip(jnp.round(w / scale) + zp, QMIN, QMAX).astype(jnp.int8)
+    return q, scale, zp
+
+
+def _dynamic_quant(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    scale, zp = _affine_params(x)
+    q = jnp.clip(jnp.round(x / scale) + zp, QMIN, QMAX).astype(jnp.int8)
+    return q, scale, zp
+
+
+def qdense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Dynamically-quantized dense layer: int8 x @ int8 w, fp32 dequant.
+
+    Equivalent to torch dynamic quantization of nn.Linear: weights are
+    quantized once (here: on the fly from the fp32 master copy — bit-wise
+    the same result), activations per call.
+    """
+    wq, ws, wz = quantize_weight(p["w"])
+    xq, xs, xz = _dynamic_quant(x)
+    # integer matmul in int32, then affine dequant:
+    #   y = xs*ws * (xq - xz) @ (wq - wz)
+    acc = (xq.astype(jnp.int32) - xz.astype(jnp.int32)) @ (
+        wq.astype(jnp.int32) - wz.astype(jnp.int32)
+    )
+    return acc.astype(jnp.float32) * (xs * ws) + p["b"]
+
+
+def fake_quant_array(x: jnp.ndarray) -> jnp.ndarray:
+    """Quantize-dequantize round trip (int8 per-tensor affine).
+
+    Used two ways: offline on weights (`quantize_params`) and *inside the
+    lowered graph* on activations (`models.common.dense` with
+    quantized=True) — together they reproduce torch dynamic quantization's
+    numerics in a weights-as-operands graph.
+    """
+    scale, zp = _affine_params(x)
+    q = jnp.clip(jnp.round(x / scale) + zp, QMIN, QMAX)
+    return (q - zp) * scale
+
+
+def quantize_params(params: dict) -> dict:
+    """PTQ-D weight pass: fake-quantize every dense kernel ('w' leaf).
+
+    Returns a new pytree; embeddings/layernorms stay fp32 (torch dynamic
+    quantization only touches nn.Linear).
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "w" and not isinstance(v, dict):
+                    out[k] = fake_quant_array(v)
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+
+    return walk(params)
+
+
+def model_size_bytes(params: dict, quantized: bool) -> int:
+    """Storage bytes of a parameter pytree for Table 4's size-ratio column.
+
+    Dense kernels ('w' leaves) count 1 B/element when quantized (+ 8 B of
+    scale/zero-point per tensor); everything else stays fp32 (4 B).
+    """
+    from .models import common
+
+    total = 0
+    for key, leaf in common.flatten(params).items():
+        n = int(leaf.size)
+        if quantized and key.endswith("/w"):
+            total += n + 8
+        else:
+            total += 4 * n
+    return total

@@ -1,0 +1,67 @@
+"""LTB1: a minimal tensor-bundle binary format shared with rust.
+
+Datasets, golden LUTs and checkpoint-derived constants cross the
+python -> rust boundary through these bundles (serde/npz are unavailable
+offline; this format is ~40 lines on each side and fully specified here).
+
+Layout (little-endian):
+    magic   4 bytes  b"LTB1"
+    count   u32
+    then per tensor:
+        name_len u16, name utf8 bytes
+        dtype    u8   (0 = f32, 1 = i32)
+        ndim     u8
+        dims     ndim x u32
+        data     product(dims) elements, LE
+Rust reader: rust/src/runtime/tensorio.rs (kept in sync by the golden-file
+integration test `integration_runtime::ltb_roundtrip`).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"LTB1"
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_bundle(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.int64:
+                arr = arr.astype(np.int32)
+            if arr.dtype == np.float64:
+                arr = arr.astype(np.float32)
+            code = _CODES.get(arr.dtype)
+            if code is None:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.astype(arr.dtype.newbyteorder("<")).tobytes())
+
+
+def read_bundle(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            dt = np.dtype(_DTYPES[code]).newbyteorder("<")
+            n = int(np.prod(dims)) if ndim else 1
+            arr = np.frombuffer(f.read(n * dt.itemsize), dtype=dt).reshape(dims)
+            out[name] = arr.astype(_DTYPES[code])
+    return out

@@ -1,0 +1,181 @@
+"""Build-time training of the three lite models on the synthetic tasks.
+
+Runs as part of `make artifacts` (via aot.py). Each model trains for a few
+hundred Adam steps on CPU (seconds-to-minutes at these sizes), logs its
+loss curve to artifacts/train_log_<name>.json and saves a .npz checkpoint.
+Training always uses exact fp32 softmax; LUT substitution is strictly
+post-training, as in the paper.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .models import bert, common, detr, nmt
+
+__all__ = ["train_nmt", "train_bert", "train_detr", "train_all", "CKPT_NAMES"]
+
+CKPT_NAMES = ("nmt14", "nmt17", "sst2", "mrpc", "detr", "detr_dc5")
+
+
+def _cosine_lr(base: float, step: int, total: int) -> float:
+    """Cosine decay to 10% of the base rate (simple, optimizer-agnostic)."""
+    import math
+
+    frac = min(step / max(total, 1), 1.0)
+    return base * (0.1 + 0.9 * 0.5 * (1.0 + math.cos(math.pi * frac)))
+
+
+def _log(out_dir: str, name: str, losses: list[float], seconds: float) -> None:
+    path = os.path.join(out_dir, f"train_log_{name}.json")
+    with open(path, "w") as f:
+        json.dump(
+            {
+                "model": name,
+                "steps": len(losses),
+                "seconds": round(seconds, 2),
+                "loss": [round(float(x), 5) for x in losses],
+            },
+            f,
+        )
+    print(
+        f"[train] {name}: {len(losses)} steps in {seconds:.1f}s "
+        f"loss {losses[0]:.3f} -> {losses[-1]:.3f}"
+    )
+
+
+def train_nmt(
+    out_dir: str, corpus_seed: int, steps: int = 400, batch: int = 48, seed: int = 0
+) -> str:
+    name = f"nmt{corpus_seed}"
+    dcfg = data.NmtConfig(corpus_seed=corpus_seed)
+    mcfg = nmt.NmtModelConfig(vocab=dcfg.vocab, max_src=dcfg.max_len, max_tgt=dcfg.max_len + 1)
+    params = nmt.init_params(jax.random.PRNGKey(seed), mcfg)
+    opt = common.adam_init(params)
+
+    @jax.jit
+    def step(params, opt, src, tgt, lr):
+        loss, grads = jax.value_and_grad(nmt.loss_fn)(params, src, tgt, mcfg)
+        params, opt = common.adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        src, tgt = data.nmt_batch(dcfg, batch, seed=i)
+        params, opt, loss = step(
+            params, opt, jnp.asarray(src), jnp.asarray(tgt), _cosine_lr(2e-3, i, steps)
+        )
+        losses.append(float(loss))
+    _log(out_dir, name, losses, time.time() - t0)
+    path = os.path.join(out_dir, "ckpt", f"{name}.npz")
+    common.save_params(path, params)
+    return path
+
+
+def train_bert(
+    out_dir: str, task: str, steps: int = 400, batch: int = 64, seed: int = 0
+) -> str:
+    assert task in ("sst2", "mrpc")
+    mcfg = bert.BertModelConfig()
+    params = bert.init_params(jax.random.PRNGKey(seed + 1), mcfg)
+    opt = common.adam_init(params)
+
+    def make_batch(i: int):
+        if task == "sst2":
+            return data.sentiment_batch(data.SentimentConfig(), batch, seed=i)
+        return data.mrpc_batch(data.MrpcConfig(), batch, seed=i)
+
+    @jax.jit
+    def step(params, opt, toks, labels, lr):
+        loss, grads = jax.value_and_grad(bert.loss_fn)(params, toks, labels, mcfg)
+        params, opt = common.adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        toks, labels = make_batch(i)
+        params, opt, loss = step(
+            params, opt, jnp.asarray(toks), jnp.asarray(labels), _cosine_lr(2e-3, i, steps)
+        )
+        losses.append(float(loss))
+    _log(out_dir, task, losses, time.time() - t0)
+    path = os.path.join(out_dir, "ckpt", f"{task}.npz")
+    common.save_params(path, params)
+    return path
+
+
+def train_detr(
+    out_dir: str, dc5: bool, steps: int = 300, batch: int = 16, seed: int = 0
+) -> str:
+    name = "detr_dc5" if dc5 else "detr"
+    scfg = data.SceneConfig()
+    mcfg = detr.DetrModelConfig(image_size=scfg.image_size)
+    if dc5:
+        mcfg = detr.dc5_variant(mcfg)
+    params = detr.init_params(jax.random.PRNGKey(seed + 2), mcfg)
+    opt = common.adam_init(params)
+
+    # Hungarian matching runs in numpy between two jitted stages so the
+    # expensive forward/backward stays compile-cached across steps.
+    fwd = jax.jit(lambda p, im: detr.forward(p, im, mcfg))
+
+    @jax.jit
+    def step(params, opt, imgs, tc, tb, bm, lr):
+        loss, grads = jax.value_and_grad(detr.loss_from_targets)(
+            params, imgs, tc, tb, bm, mcfg
+        )
+        params, opt = common.adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for i in range(steps):
+        imgs, gts = data.scene_batch(scfg, batch, seed=i)
+        imgs_j = jnp.asarray(imgs)
+        cls_logits, boxes = fwd(params, imgs_j)
+        assignments = detr.match(cls_logits, boxes, gts)
+        tc, tb, bm = detr.build_targets(assignments, gts, batch, mcfg)
+        params, opt, loss = step(
+            params, opt, imgs_j, jnp.asarray(tc), jnp.asarray(tb), jnp.asarray(bm),
+            _cosine_lr(1e-3, i, steps),
+        )
+        losses.append(float(loss))
+    _log(out_dir, name, losses, time.time() - t0)
+    path = os.path.join(out_dir, "ckpt", f"{name}.npz")
+    common.save_params(path, params)
+    return path
+
+
+def train_all(out_dir: str, quick: bool = False) -> dict[str, str]:
+    """Train every lite model (skipping ones whose checkpoint exists)."""
+    os.makedirs(os.path.join(out_dir, "ckpt"), exist_ok=True)
+    k = 0.25 if quick else 1.0
+    paths = {}
+    jobs = {
+        "nmt14": lambda: train_nmt(out_dir, 14, steps=int(3000 * k)),
+        "nmt17": lambda: train_nmt(out_dir, 17, steps=int(3000 * k)),
+        "sst2": lambda: train_bert(out_dir, "sst2", steps=int(2500 * k)),
+        "mrpc": lambda: train_bert(out_dir, "mrpc", steps=int(4000 * k)),
+        "detr": lambda: train_detr(out_dir, dc5=False, steps=int(1500 * k)),
+        "detr_dc5": lambda: train_detr(out_dir, dc5=True, steps=int(900 * k)),
+    }
+    for name, job in jobs.items():
+        ckpt = os.path.join(out_dir, "ckpt", f"{name}.npz")
+        if os.path.exists(ckpt):
+            print(f"[train] {name}: checkpoint exists, skipping")
+            paths[name] = ckpt
+        else:
+            paths[name] = job()
+    return paths
+
+
+_ = np  # imported for side-typing clarity in annotations

@@ -1,0 +1,139 @@
+"""Tests of the synthetic dataset generators (the paper-dataset analogs)."""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+class TestNmt:
+    def test_determinism(self):
+        cfg = data.NmtConfig(corpus_seed=14)
+        a = data.nmt_batch(cfg, 8, seed=3)
+        b = data.nmt_batch(cfg, 8, seed=3)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+    def test_corpora_differ(self):
+        a = data.nmt_batch(data.NmtConfig(corpus_seed=14), 8, seed=3)
+        b = data.nmt_batch(data.NmtConfig(corpus_seed=17), 8, seed=3)
+        assert not np.array_equal(a[1], b[1])
+
+    def test_target_is_reversed_remap(self):
+        cfg = data.NmtConfig(corpus_seed=14)
+        src, tgt = data.nmt_batch(cfg, 4, seed=0)
+        for b in range(4):
+            content = [t for t in src[b] if t >= data.FIRST_TOKEN]
+            want = [cfg.permutation[t] for t in reversed(content)]
+            got = list(tgt[b][1 : 1 + len(content)])
+            assert got == want
+            assert tgt[b][0] == data.BOS
+            assert tgt[b][1 + len(content)] == data.EOS
+
+    def test_permutation_is_bijection_on_content(self):
+        cfg = data.NmtConfig(corpus_seed=14)
+        p = cfg.permutation
+        content = p[data.FIRST_TOKEN:]
+        assert sorted(content) == list(range(data.FIRST_TOKEN, cfg.vocab))
+
+    def test_shapes_and_padding(self):
+        cfg = data.NmtConfig()
+        src, tgt = data.nmt_batch(cfg, 16, seed=1)
+        assert src.shape == (16, cfg.max_len)
+        assert tgt.shape == (16, cfg.max_len + 1)
+        assert (src >= 0).all() and (src < cfg.vocab).all()
+
+
+class TestSentiment:
+    def test_labels_balanced_enough(self):
+        toks, labels = data.sentiment_batch(data.SentimentConfig(), 512, seed=5)
+        rate = labels.mean()
+        assert 0.25 < rate < 0.75, rate
+
+    def test_negation_flips_polarity(self):
+        # construct check: a "not" immediately before a positive token
+        # counts negative in the generator's scoring (verified indirectly:
+        # generator is deterministic, so fixed seeds keep coverage of both
+        # label classes with the not-token present)
+        cfg = data.SentimentConfig()
+        toks, labels = data.sentiment_batch(cfg, 256, seed=9)
+        has_not = (toks == cfg.not_token).any(axis=1)
+        assert has_not.any()
+        assert labels[has_not].std() > 0  # both classes appear under negation
+
+    def test_token_range(self):
+        cfg = data.SentimentConfig()
+        toks, _ = data.sentiment_batch(cfg, 64, seed=2)
+        assert toks.max() < cfg.vocab
+        assert toks.min() >= 0
+
+
+class TestMrpc:
+    def test_imbalance_matches_config(self):
+        cfg = data.MrpcConfig()
+        _, labels = data.mrpc_batch(cfg, 2000, seed=11)
+        rate = labels.mean()
+        assert abs(rate - cfg.pos_rate) < 0.05, rate
+
+    def test_paraphrase_map_is_involution(self):
+        cfg = data.MrpcConfig()
+        m = cfg.paraphrase_map
+        content = np.arange(data.FIRST_TOKEN, cfg.vocab)
+        np.testing.assert_array_equal(m[m[content]], content)
+
+    def test_row_structure(self):
+        cfg = data.MrpcConfig()
+        toks, _ = data.mrpc_batch(cfg, 8, seed=0)
+        for row in toks:
+            assert row[0] == data.BOS
+            assert data.SEP in row
+            assert data.EOS in row
+
+
+class TestScenes:
+    def test_image_range_and_gt(self):
+        cfg = data.SceneConfig()
+        imgs, gts = data.scene_batch(cfg, 8, seed=4)
+        assert imgs.shape == (8, 32, 32, 3)
+        assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+        for g in gts:
+            assert 1 <= len(g) <= cfg.max_objects
+            assert (g[:, 0] < cfg.num_classes).all()
+            assert (g[:, 1:] >= 0).all() and (g[:, 1:] <= 1).all()
+
+    def test_objects_are_visible(self):
+        # rendered rectangles must move pixel stats away from background
+        cfg = data.SceneConfig()
+        imgs, gts = data.scene_batch(cfg, 4, seed=7)
+        for b, g in enumerate(gts):
+            cls, cx, cy, w, h = g[0]
+            x0 = int((cx - w / 2) * 32)
+            y0 = int((cy - h / 2) * 32)
+            patch = imgs[b, y0 : y0 + max(int(h * 32), 1), x0 : x0 + max(int(w * 32), 1)]
+            pal = cfg.palette[int(cls)]
+            assert np.abs(patch.mean(axis=(0, 1)) - pal).mean() < 0.25
+
+
+class TestRoundTripWithRust:
+    """Tensorio self-consistency (the rust side re-checks the same file)."""
+
+    def test_bundle_roundtrip(self, tmp_path):
+        from compile import tensorio
+
+        path = str(tmp_path / "t.ltb")
+        t = {
+            "a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b/c": np.array([-1, 5], dtype=np.int32),
+        }
+        tensorio.write_bundle(path, t)
+        back = tensorio.read_bundle(path)
+        np.testing.assert_array_equal(back["a"], t["a"])
+        np.testing.assert_array_equal(back["b/c"], t["b/c"])
+
+    def test_rejects_unknown_dtype(self, tmp_path):
+        from compile import tensorio
+
+        with pytest.raises(TypeError):
+            tensorio.write_bundle(
+                str(tmp_path / "bad.ltb"), {"x": np.array(["a"], dtype=object)}
+            )

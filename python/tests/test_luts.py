@@ -1,0 +1,145 @@
+"""Unit tests for the LUT constructors (paper Eq.(4), (7), (8)-(10))."""
+
+import math
+
+import numpy as np
+import pytest
+
+from compile.kernels import luts
+
+ALL_PRECS = list(luts.PRECISIONS)
+
+
+class TestPrecision:
+    def test_qmax(self):
+        assert luts.precision("int16").qmax == 32767
+        assert luts.precision("uint8").qmax == 255
+        assert luts.precision("uint4").qmax == 15
+        assert luts.precision("uint2").qmax == 3
+
+    def test_xq_matches_eq4(self):
+        # x_q = ceil(ln(2^w - 1)) — Eq.(4)
+        for name in ALL_PRECS:
+            p = luts.precision(name)
+            assert p.x_q == math.ceil(math.log(p.qmax))
+
+    def test_unknown_precision_raises(self):
+        with pytest.raises(ValueError, match="unknown precision"):
+            luts.precision("uint7")
+
+
+class TestRecipE:
+    @pytest.mark.parametrize("name", ALL_PRECS)
+    def test_values_match_eq4(self, name):
+        p = luts.precision(name)
+        t = luts.lut_recip_e(p)
+        for i, v in enumerate(t):
+            assert v == math.floor(p.qmax / math.exp(i))
+
+    def test_shapes_match_paper_tables(self):
+        # Table 5: int16 -> 1x13, uint8 -> 1x8; Table 8: uint4 -> 1x5.
+        assert luts.lut_recip_e(luts.precision("int16")).shape == (13,)
+        assert luts.lut_recip_e(luts.precision("uint8")).shape == (8,)
+        assert luts.lut_recip_e(luts.precision("uint4")).shape == (5,)
+
+    @pytest.mark.parametrize("name", ALL_PRECS)
+    def test_monotone_nonincreasing_ends_at_zero(self, name):
+        t = luts.lut_recip_e(luts.precision(name))
+        assert (np.diff(t) <= 0).all()
+        assert t[0] == luts.precision(name).qmax
+        assert t[-1] == 0  # out-of-range distances decay to zero weight
+
+
+class TestAlpha:
+    @pytest.mark.parametrize("name", ALL_PRECS)
+    def test_values_match_eq7(self, name):
+        p = luts.precision(name)
+        t = luts.lut_alpha(p, 32)
+        assert t[0] == p.qmax
+        for j in range(1, 32):
+            assert t[j] == math.floor(p.qmax / j)
+
+    def test_custom_length(self):
+        p = luts.precision("uint8")
+        for n in (16, 256, 320, 512):
+            assert luts.lut_alpha(p, n).shape == (n,)
+
+    def test_zero_length_rejected(self):
+        with pytest.raises(ValueError):
+            luts.lut_alpha(luts.precision("uint8"), 0)
+
+    @pytest.mark.parametrize("name", ALL_PRECS)
+    def test_monotone(self, name):
+        t = luts.lut_alpha(luts.precision(name), 64)
+        assert (np.diff(t) <= 0).all()
+
+
+class TestExpTable:
+    @pytest.mark.parametrize("name", ALL_PRECS)
+    def test_shape_matches_table8(self, name):
+        p = luts.precision(name)
+        expected = {"int16": 101, "uint8": 101, "uint4": 48, "uint2": 12}
+        assert luts.lut_exp(p).shape == (expected[name],)
+
+    def test_values(self):
+        p = luts.precision("uint8")
+        t = luts.lut_exp(p)
+        assert t[0] == p.qmax
+        for k in (1, 10, 50, 100):
+            assert t[k] == round(p.qmax * math.exp(-k * 0.1))
+
+    @pytest.mark.parametrize("name", ALL_PRECS)
+    def test_monotone(self, name):
+        assert (np.diff(luts.lut_exp(luts.precision(name))) <= 0).all()
+
+
+class TestSigmaTable:
+    @pytest.mark.parametrize("name", ALL_PRECS)
+    def test_shape_matches_table8(self, name):
+        p = luts.precision(name)
+        expected = {"int16": 60, "uint8": 60, "uint4": 29, "uint2": 8}
+        assert luts.lut_sigma(p).shape == (11, expected[name])
+
+    def test_values_match_eq8(self):
+        p = luts.precision("uint8")
+        t = luts.lut_sigma(p)
+        for i in range(11):
+            for j in range(1, t.shape[1] + 1):
+                want = min(p.qmax, math.floor(p.qmax * (i * 0.1) / j))
+                assert t[i, j - 1] == want
+
+    def test_row_zero_is_zero(self):
+        # numerator e^x ~ 0 -> sigma = 0 regardless of the denominator
+        for name in ALL_PRECS:
+            assert (luts.lut_sigma(luts.precision(name))[0] == 0).all()
+
+    def test_rows_monotone_nondecreasing(self):
+        t = luts.lut_sigma(luts.precision("int16"))
+        assert (np.diff(t, axis=0) >= 0).all()  # larger numerator, larger sigma
+
+    def test_cols_monotone_nonincreasing(self):
+        t = luts.lut_sigma(luts.precision("int16"))
+        assert (np.diff(t, axis=1) <= 0).all()  # larger denominator, smaller sigma
+
+
+class TestByteAccounting:
+    def test_nlp_sizes_match_table8(self):
+        # (precision, 2D-LUT total, REXP total) rows of Table 8. The uint2
+        # REXP entry differs by one table entry (paper trims LUT_{1/e} to
+        # 1x3 where Eq.(4)'s i=0..x_q+1 yields 1x4); we keep the formula.
+        expect_2d = {"int16": 1522, "uint8": 761, "uint4": 367, "uint2": 100}
+        expect_rexp = {"int16": 58, "uint8": 24, "uint4": 21, "uint2": 11}
+        for name in ALL_PRECS:
+            p = luts.precision(name)
+            assert luts.lut2d_tables(p).total_bytes == expect_2d[name]
+            assert luts.rexp_tables(p).total_bytes == expect_rexp[name]
+
+    def test_detr_sizes_match_table5(self):
+        # Table 5: LUT_{1/e} + LUT_alpha of 256/320/512 entries.
+        for alpha_len, want16, want8 in ((256, 538, 264), (320, 666, 328), (512, 1050, 520)):
+            assert luts.rexp_tables("int16", alpha_len).total_bytes == want16
+            assert luts.rexp_tables("uint8", alpha_len).total_bytes == want8
+
+    def test_paper_headline_700_bytes(self):
+        # §Abstract: "about 700 Bytes" for the uint8 2D-LUT method.
+        assert luts.lut2d_tables("uint8").total_bytes == 761  # ~700 B

@@ -1,0 +1,213 @@
+"""Model-zoo tests: shapes, masking, softmax-mode plumbing, learnability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data
+from compile.models import bert, common, detr, nmt
+
+
+class TestCommon:
+    def test_layernorm_normalizes(self):
+        p = common.layernorm_init(16)
+        x = jnp.asarray(np.random.default_rng(0).normal(3, 5, (4, 16)).astype(np.float32))
+        y = common.layernorm(p, x)
+        np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1.0, atol=1e-2)
+
+    def test_positions_shape_and_range(self):
+        pos = common.sinusoidal_positions(10, 8)
+        assert pos.shape == (10, 8)
+        assert float(jnp.max(jnp.abs(pos))) <= 1.0
+
+    def test_split_merge_heads_roundtrip(self):
+        x = jnp.arange(2 * 5 * 8, dtype=jnp.float32).reshape(2, 5, 8)
+        np.testing.assert_array_equal(
+            np.asarray(common.merge_heads(common.split_heads(x, 4))), np.asarray(x)
+        )
+
+    def test_causal_mask_blocks_future(self):
+        m = common.causal_mask(4)[0, 0]
+        assert float(m[0, 1]) < -1e8
+        assert float(m[3, 0]) == 0.0
+
+    def test_padding_mask_blocks_pad_keys(self):
+        toks = jnp.asarray([[5, 6, 0, 0]], jnp.int32)
+        m = common.padding_mask(toks)[0, 0, 0]
+        assert float(m[0]) == 0.0 and float(m[2]) < -1e8
+
+    def test_mha_mode_changes_output(self):
+        key = jax.random.PRNGKey(0)
+        p = common.mha_init(key, 16)
+        x = jax.random.normal(key, (2, 6, 16))
+        exact = common.mha(p, x, x, 4, softmax_mode="exact")
+        approx = common.mha(p, x, x, 4, softmax_mode="rexp", prec="uint2")
+        assert not np.allclose(np.asarray(exact), np.asarray(approx))
+
+    def test_adam_reduces_quadratic(self):
+        params = {"x": jnp.asarray([5.0, -3.0])}
+        opt = common.adam_init(params)
+        loss = lambda p: jnp.sum(p["x"] ** 2)  # noqa: E731
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            params, opt = common.adam_update(params, g, opt, lr=0.1)
+        assert float(loss(params)) < 0.1
+
+    def test_checkpoint_roundtrip(self, tmp_path):
+        key = jax.random.PRNGKey(1)
+        p = {"a": common.dense_init(key, 4, 4), "b": {"c": jnp.ones((3,))}}
+        path = str(tmp_path / "ck.npz")
+        common.save_params(path, p)
+        q = common.load_params(path)
+        np.testing.assert_array_equal(np.asarray(q["a"]["w"]), np.asarray(p["a"]["w"]))
+        np.testing.assert_array_equal(np.asarray(q["b"]["c"]), np.asarray(p["b"]["c"]))
+
+
+class TestNmt:
+    CFG = nmt.NmtModelConfig(d_model=32, d_ff=64, heads=2, layers=1)
+
+    def test_shapes(self):
+        params = nmt.init_params(jax.random.PRNGKey(0), self.CFG)
+        src, tgt = data.nmt_batch(data.NmtConfig(), 4, seed=0)
+        mem = nmt.encode(params, jnp.asarray(src), self.CFG)
+        assert mem.shape == (4, self.CFG.max_src, self.CFG.d_model)
+        logits = nmt.decode_logits(params, mem, jnp.asarray(src), jnp.asarray(tgt[:, :-1]), self.CFG)
+        assert logits.shape == (4, tgt.shape[1] - 1, self.CFG.vocab)
+
+    def test_loss_decreases_quickly(self):
+        dcfg = data.NmtConfig()
+        params = nmt.init_params(jax.random.PRNGKey(0), self.CFG)
+        opt = common.adam_init(params)
+        src, tgt = data.nmt_batch(dcfg, 32, seed=0)
+        src, tgt = jnp.asarray(src), jnp.asarray(tgt)
+
+        @jax.jit
+        def step(params, opt):
+            loss, g = jax.value_and_grad(nmt.loss_fn)(params, src, tgt, self.CFG)
+            params, opt = common.adam_update(params, g, opt, lr=3e-3)
+            return params, opt, loss
+
+        first = None
+        for i in range(60):
+            params, opt, loss = step(params, opt)
+            first = first if first is not None else float(loss)
+        assert float(loss) < first * 0.8, (first, float(loss))
+
+    def test_greedy_decode_terminates(self):
+        params = nmt.init_params(jax.random.PRNGKey(0), self.CFG)
+        src, _ = data.nmt_batch(data.NmtConfig(), 2, seed=0)
+        out = nmt.greedy_decode(params, jnp.asarray(src), self.CFG)
+        assert out.shape == (2, self.CFG.max_tgt)
+        assert (np.asarray(out[:, 0]) == data.BOS).all()
+
+    def test_softmax_mode_affects_inference_not_shapes(self):
+        params = nmt.init_params(jax.random.PRNGKey(0), self.CFG)
+        src, _ = data.nmt_batch(data.NmtConfig(), 2, seed=0)
+        m1 = nmt.encode(params, jnp.asarray(src), self.CFG, "exact")
+        m2 = nmt.encode(params, jnp.asarray(src), self.CFG, "rexp", "uint4")
+        assert m1.shape == m2.shape
+        assert not np.allclose(np.asarray(m1), np.asarray(m2), atol=1e-4)
+
+
+class TestBert:
+    CFG = bert.BertModelConfig(d_model=32, d_ff=64, heads=2, layers=1)
+
+    def test_forward_shape(self):
+        params = bert.init_params(jax.random.PRNGKey(0), self.CFG)
+        toks, _ = data.sentiment_batch(data.SentimentConfig(), 4, seed=0)
+        logits = bert.forward(params, jnp.asarray(toks), self.CFG)
+        assert logits.shape == (4, 2)
+
+    def test_learns_sentiment_quickly(self):
+        params = bert.init_params(jax.random.PRNGKey(0), self.CFG)
+        opt = common.adam_init(params)
+
+        @jax.jit
+        def step(params, opt, toks, labels):
+            loss, g = jax.value_and_grad(bert.loss_fn)(params, toks, labels, self.CFG)
+            params, opt = common.adam_update(params, g, opt, lr=3e-3)
+            return params, opt, loss
+
+        for i in range(150):
+            toks, labels = data.sentiment_batch(data.SentimentConfig(), 64, seed=i)
+            params, opt, loss = step(params, opt, jnp.asarray(toks), jnp.asarray(labels))
+        toks, labels = data.sentiment_batch(data.SentimentConfig(), 256, seed=999)
+        acc = bert.accuracy(params, jnp.asarray(toks), jnp.asarray(labels), self.CFG)
+        assert acc > 0.62, acc
+
+
+class TestDetr:
+    CFG = detr.DetrModelConfig(d_model=32, d_ff=64, heads=2, enc_layers=1, dec_layers=1)
+
+    def test_patchify_shapes(self):
+        imgs, _ = data.scene_batch(data.SceneConfig(), 2, seed=0)
+        x = detr.patchify(jnp.asarray(imgs), self.CFG)
+        assert x.shape == (2, self.CFG.tokens, self.CFG.patch_dim)
+
+    def test_dc5_quadruples_tokens(self):
+        dc5 = detr.dc5_variant(self.CFG)
+        assert dc5.tokens == 4 * self.CFG.tokens
+
+    def test_forward_shapes(self):
+        params = detr.init_params(jax.random.PRNGKey(0), self.CFG)
+        imgs, _ = data.scene_batch(data.SceneConfig(), 2, seed=0)
+        cls, box = detr.forward(params, jnp.asarray(imgs), self.CFG)
+        assert cls.shape == (2, self.CFG.num_queries, self.CFG.num_classes + 1)
+        assert box.shape == (2, self.CFG.num_queries, 4)
+        assert float(box.min()) >= 0.0 and float(box.max()) <= 1.0
+
+    def test_match_assigns_each_gt_once(self):
+        params = detr.init_params(jax.random.PRNGKey(0), self.CFG)
+        imgs, gts = data.scene_batch(data.SceneConfig(), 3, seed=1)
+        cls, box = detr.forward(params, jnp.asarray(imgs), self.CFG)
+        for (qi, gi), g in zip(detr.match(cls, box, gts), gts):
+            assert len(set(qi)) == len(qi)
+            assert sorted(gi) == list(range(len(g)))
+
+    def test_loss_finite_and_decreases(self):
+        params = detr.init_params(jax.random.PRNGKey(0), self.CFG)
+        opt = common.adam_init(params)
+        imgs, gts = data.scene_batch(data.SceneConfig(), 8, seed=0)
+        imgs = jnp.asarray(imgs)
+        first = None
+        for _ in range(25):
+            loss, g = jax.value_and_grad(detr.loss_fn)(params, imgs, gts, self.CFG)
+            params, opt = common.adam_update(params, g, opt, lr=1e-3)
+            first = first if first is not None else float(loss)
+        assert np.isfinite(first)
+        assert float(loss) < first
+
+
+class TestStatsHook:
+    def test_fig4_stats_collect_sums(self):
+        cfg = TestDetr.CFG
+        params = detr.init_params(jax.random.PRNGKey(0), cfg)
+        imgs, _ = data.scene_batch(data.SceneConfig(), 2, seed=0)
+        stats: list = []
+        detr.forward(params, jnp.asarray(imgs), cfg, stats=stats)
+        # enc 1 + dec (self + cross) = 3 attention tensors
+        assert len(stats) == 3
+        for s in stats:
+            assert float(jnp.min(s)) >= 1.0  # sum e^{x-max} >= 1 always
+
+
+@pytest.mark.parametrize("mode", ["exact", "rexp", "lut2d"])
+def test_pallas_softmax_flag_consistency(mode):
+    """USE_PALLAS_SOFTMAX=True must not change model numerics (kernel ==
+    oracle) — the property the AOT path relies on."""
+    cfg = TestBert.CFG
+    params = bert.init_params(jax.random.PRNGKey(3), cfg)
+    toks, _ = data.sentiment_batch(data.SentimentConfig(), 4, seed=0)
+    toks = jnp.asarray(toks)
+    try:
+        common.USE_PALLAS_SOFTMAX = False
+        ref_out = bert.forward(params, toks, cfg, mode, "uint8")
+        common.USE_PALLAS_SOFTMAX = True
+        pallas_out = bert.forward(params, toks, cfg, mode, "uint8")
+    finally:
+        common.USE_PALLAS_SOFTMAX = False
+    np.testing.assert_allclose(
+        np.asarray(ref_out), np.asarray(pallas_out), atol=2e-4
+    )

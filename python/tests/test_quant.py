@@ -1,0 +1,82 @@
+"""Tests of the PTQ-D dynamic quantization simulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+from compile.models import common
+
+RNG = np.random.default_rng(55)
+
+
+class TestAffine:
+    def test_roundtrip_error_half_step(self):
+        w = jnp.asarray(RNG.normal(0, 1, (32, 16)).astype(np.float32))
+        q, scale, zp = quant.quantize_weight(w)
+        deq = (q.astype(jnp.float32) - zp) * scale
+        assert float(jnp.max(jnp.abs(deq - w))) <= float(scale) * 0.5 + 1e-6
+
+    def test_int8_range(self):
+        w = jnp.asarray(RNG.normal(0, 10, (64,)).astype(np.float32))
+        q, _, _ = quant.quantize_weight(w)
+        assert int(q.min()) >= quant.QMIN and int(q.max()) <= quant.QMAX
+
+    @settings(max_examples=20, deadline=None)
+    @given(scale=st.floats(0.01, 50.0), seed=st.integers(0, 2**31 - 1))
+    def test_fake_quant_bounded_error(self, scale, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.normal(0, scale, (64,)).astype(np.float32))
+        fq = quant.fake_quant_array(x)
+        step = (float(x.max()) - min(float(x.min()), 0.0)) / 255.0
+        assert float(jnp.max(jnp.abs(fq - x))) <= max(step, 1e-6) * 0.51 + 1e-6
+
+
+class TestQuantizeParams:
+    def _params(self):
+        key = jax.random.PRNGKey(0)
+        return {
+            "embed": common.embedding_init(key, 16, 8),
+            "layer": common.dense_init(key, 8, 8),
+            "ln": common.layernorm_init(8),
+        }
+
+    def test_only_dense_kernels_touched(self):
+        p = self._params()
+        q = quant.quantize_params(p)
+        # embeddings and layernorm untouched
+        np.testing.assert_array_equal(q["embed"], p["embed"])
+        np.testing.assert_array_equal(q["ln"]["g"], p["ln"]["g"])
+        np.testing.assert_array_equal(q["layer"]["b"], p["layer"]["b"])
+        # dense kernel is changed but close
+        assert not np.array_equal(q["layer"]["w"], p["layer"]["w"])
+        assert float(jnp.max(jnp.abs(q["layer"]["w"] - p["layer"]["w"]))) < 0.05
+
+    def test_size_accounting_table4(self):
+        p = self._params()
+        fp = quant.model_size_bytes(p, quantized=False)
+        pq = quant.model_size_bytes(p, quantized=True)
+        n_w = int(p["layer"]["w"].size)
+        # quantized: dense kernel 1 B/elem + 8 B params; everything else 4 B
+        assert fp - pq == n_w * 3 - 8
+        assert pq < fp
+
+    def test_qdense_close_to_dense(self):
+        p = common.dense_init(jax.random.PRNGKey(1), 12, 6)
+        x = jnp.asarray(RNG.normal(0, 1, (4, 12)).astype(np.float32))
+        y = x @ p["w"] + p["b"]
+        yq = quant.qdense(p, x)
+        assert float(jnp.max(jnp.abs(y - yq))) < 0.15
+
+
+class TestQuantizedGraphPath:
+    def test_dense_quantized_flag(self):
+        p = common.dense_init(jax.random.PRNGKey(2), 8, 8)
+        pq = {"w": quant.fake_quant_array(p["w"]), "b": p["b"]}
+        x = jnp.asarray(RNG.normal(0, 1, (3, 8)).astype(np.float32))
+        y_fp = common.dense(p, x, quantized=False)
+        y_q = common.dense(pq, x, quantized=True)
+        # same function approximately, exactly quantized weights+activations
+        assert float(jnp.max(jnp.abs(y_fp - y_q))) < 0.2

@@ -1,0 +1,156 @@
+"""Property and behaviour tests of the pure-jnp softmax oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import luts, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def rand(shape, scale=3.0):
+    return jnp.asarray(RNG.normal(0.0, scale, shape).astype(np.float32))
+
+
+class TestExact:
+    def test_matches_jax_nn(self):
+        x = rand((17, 33))
+        np.testing.assert_allclose(
+            ref.softmax_exact(x), jax.nn.softmax(x, axis=-1), rtol=1e-6
+        )
+
+    def test_rows_sum_to_one(self):
+        x = rand((8, 64))
+        np.testing.assert_allclose(
+            jnp.sum(ref.softmax_exact(x), -1), 1.0, rtol=1e-6
+        )
+
+    def test_translation_invariance(self):
+        x = rand((4, 16))
+        np.testing.assert_allclose(
+            ref.softmax_exact(x), ref.softmax_exact(x + 100.0), rtol=1e-5
+        )
+
+    def test_large_magnitudes_stable(self):
+        x = jnp.asarray([[1e4, 1e4 - 1.0, 0.0]], jnp.float32)
+        out = ref.softmax_exact(x)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("prec", list(luts.PRECISIONS))
+@pytest.mark.parametrize("mode", ["rexp", "lut2d"])
+class TestLutApprox:
+    def test_output_in_unit_interval(self, mode, prec):
+        out = ref.softmax_by_mode(rand((16, 40)), mode, prec)
+        assert bool(jnp.all(out >= 0.0)) and bool(jnp.all(out <= 1.0))
+
+    def test_output_is_quantized_grid(self, mode, prec):
+        # every output must be an integer multiple of 1/qmax
+        p = luts.precision(prec)
+        out = ref.softmax_by_mode(rand((8, 24)), mode, prec)
+        grid = out * p.qmax
+        np.testing.assert_allclose(grid, jnp.round(grid), atol=1e-3)
+
+    def test_argmax_preserved(self, mode, prec):
+        # the winning logit keeps the (weakly) largest probability
+        x = rand((32, 20))
+        out = ref.softmax_by_mode(x, mode, prec)
+        win = jnp.argmax(x, -1)
+        rowmax = jnp.max(out, -1)
+        np.testing.assert_allclose(
+            out[jnp.arange(x.shape[0]), win], rowmax, atol=1e-6
+        )
+
+    def test_order_preserved(self, mode, prec):
+        # monotone: larger logits never get smaller probabilities
+        x = jnp.sort(rand((16, 12)), axis=-1)
+        out = ref.softmax_by_mode(x, mode, prec)
+        assert bool(jnp.all(jnp.diff(out, axis=-1) >= -1e-6))
+
+    def test_translation_invariance(self, mode, prec):
+        # max-normalization makes the LUT methods exactly shift-invariant
+        x = rand((8, 16))
+        a = ref.softmax_by_mode(x, mode, prec)
+        b = ref.softmax_by_mode(x + 57.25, mode, prec)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestAccuracyOrdering:
+    """The paper's headline: accuracy improves with precision, and the
+    proposed methods at uint8 are far closer to exact than prior arts."""
+
+    def setup_method(self):
+        # attention-like scores: moderate spread, many rows
+        self.x = rand((256, 64), scale=2.0)
+        self.exact = ref.softmax_exact(self.x)
+
+    def _mae(self, mode, prec):
+        out = ref.softmax_by_mode(self.x, mode, prec)
+        return float(jnp.mean(jnp.abs(out - self.exact)))
+
+    @pytest.mark.parametrize("mode", ["rexp", "lut2d"])
+    def test_error_decreases_with_precision(self, mode):
+        errs = [self._mae(mode, p) for p in ("uint2", "uint4", "uint8")]
+        assert errs[2] <= errs[1] <= errs[0]
+
+    def test_uint8_rexp_reasonable(self):
+        assert self._mae("rexp", "uint8") < 0.02
+
+    def test_aggressive_unnormalized(self):
+        # Fig. 5 mechanism: aggressive rows do not sum to ~1
+        out = ref.softmax_aggressive(self.x, "uint8")
+        sums = jnp.sum(out, -1)
+        assert float(jnp.max(jnp.abs(sums - 1.0))) > 0.5
+
+    def test_priorart_eq2plus_better_than_eq2(self):
+        big = self.x + 20.0  # un-normalized inputs hurt Eq.(2)
+        e1 = float(
+            jnp.mean(jnp.abs(ref.softmax_priorart_eq2(big, "uint4") - ref.softmax_exact(big)))
+        )
+        e2 = float(
+            jnp.mean(jnp.abs(ref.softmax_priorart_eq2plus(big, "uint4") - ref.softmax_exact(big)))
+        )
+        assert e2 <= e1
+
+    def test_dispatch_unknown_mode(self):
+        with pytest.raises(ValueError, match="unknown softmax mode"):
+            ref.softmax_by_mode(self.x, "nope")
+
+
+class TestHypothesisSweeps:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        rows=st.integers(1, 33),
+        n=st.integers(2, 65),
+        scale=st.floats(0.1, 8.0),
+        seed=st.integers(0, 2**31 - 1),
+        mode=st.sampled_from(["rexp", "lut2d"]),
+        prec=st.sampled_from(list(luts.PRECISIONS)),
+    )
+    def test_bounded_and_finite(self, rows, n, scale, seed, mode, prec):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.normal(0, scale, (rows, n)).astype(np.float32))
+        out = ref.softmax_by_mode(x, mode, prec)
+        assert out.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(out)))
+        assert bool(jnp.all(out >= 0.0)) and bool(jnp.all(out <= 1.0))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(2, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_rexp_rowsum_near_one_uint8(self, n, seed):
+        # PDF normalization (Eq.(5)-(6)) keeps row sums near 1 — that is the
+        # paper's improvement over the raw reciprocal of [29]. The >>w
+        # truncation of the alpha index bounds the row-sum overshoot by
+        # ~1/S; with S >= 1 we can guarantee a loose global bound.
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.normal(0, 2.0, (16, n)).astype(np.float32))
+        sums = jnp.sum(ref.softmax_rexp(x, "uint8"), -1)
+        assert bool(jnp.all(sums <= 2.05))
+        assert bool(jnp.all(sums >= 0.4))

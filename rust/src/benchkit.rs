@@ -1,0 +1,180 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Benches are plain binaries (`harness = false`) that call [`bench`] /
+//! [`Suite`]: warmup, then timed batches until both a minimum wall-time
+//! and iteration count are reached; reports mean / p50 / p99 per op and
+//! throughput. Set `BENCH_FAST=1` to shrink budgets (CI smoke).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// items per op (for throughput lines), settable via `Bench::items`
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn ops_per_sec(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+
+    pub fn items_per_sec(&self) -> f64 {
+        self.ops_per_sec() * self.items_per_iter
+    }
+
+    pub fn report(&self) {
+        let unit = |ns: f64| -> String {
+            if ns < 1e3 {
+                format!("{ns:.0} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} us", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.2} s", ns / 1e9)
+            }
+        };
+        if self.items_per_iter > 1.0 {
+            println!(
+                "{:<44} {:>10}/op  p50 {:>9}  p99 {:>9}  {:>12.0} elem/s",
+                self.name,
+                unit(self.mean_ns),
+                unit(self.p50_ns),
+                unit(self.p99_ns),
+                self.items_per_sec()
+            );
+        } else {
+            println!(
+                "{:<44} {:>10}/op  p50 {:>9}  p99 {:>9}  {:>10.0} op/s",
+                self.name,
+                unit(self.mean_ns),
+                unit(self.p50_ns),
+                unit(self.p99_ns),
+                self.ops_per_sec()
+            );
+        }
+    }
+}
+
+pub struct Bench {
+    name: String,
+    min_time: Duration,
+    min_iters: u64,
+    items: f64,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        let fast = std::env::var("BENCH_FAST").is_ok();
+        Self {
+            name: name.into(),
+            min_time: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(700)
+            },
+            min_iters: if fast { 5 } else { 20 },
+            items: 1.0,
+        }
+    }
+
+    /// items processed per iteration (for element-throughput reporting)
+    pub fn items(mut self, n: usize) -> Self {
+        self.items = n as f64;
+        self
+    }
+
+    pub fn min_time_ms(mut self, ms: u64) -> Self {
+        self.min_time = Duration::from_millis(ms);
+        self
+    }
+
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchResult {
+        // warmup
+        let warm_until = Instant::now() + self.min_time / 5;
+        while Instant::now() < warm_until {
+            f();
+        }
+        let mut samples: Vec<u64> = Vec::with_capacity(1024);
+        let start = Instant::now();
+        while start.elapsed() < self.min_time || (samples.len() as u64) < self.min_iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as u64);
+        }
+        samples.sort_unstable();
+        let iters = samples.len() as u64;
+        let mean = samples.iter().sum::<u64>() as f64 / iters as f64;
+        let pct = |p: f64| samples[((iters as f64 * p) as usize).min(samples.len() - 1)] as f64;
+        let res = BenchResult {
+            name: self.name,
+            iters,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p99_ns: pct(0.99),
+            items_per_iter: self.items,
+        };
+        res.report();
+        res
+    }
+}
+
+/// Convenience: run and report one benchmark.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    Bench::new(name).run(f)
+}
+
+/// A named group printed with a header (mirrors criterion's groups).
+pub struct Suite {
+    pub results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        Self { results: Vec::new() }
+    }
+
+    pub fn add(&mut self, r: BenchResult) -> &mut Self {
+        self.results.push(r);
+        self
+    }
+
+    /// Ratio line between two recorded results (speedup reporting).
+    pub fn ratio(&self, a: &str, b: &str) {
+        let f = |n: &str| self.results.iter().find(|r| r.name == n);
+        if let (Some(x), Some(y)) = (f(a), f(b)) {
+            println!("    {a} vs {b}: {:.2}x", y.mean_ns / x.mean_ns);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        std::env::set_var("BENCH_FAST", "1");
+        let r = Bench::new("noop").min_time_ms(10).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn items_throughput() {
+        std::env::set_var("BENCH_FAST", "1");
+        let r = Bench::new("items").min_time_ms(5).items(100).run(|| {
+            std::hint::black_box([0u8; 100]);
+        });
+        assert!(r.items_per_sec() >= r.ops_per_sec());
+    }
+}

@@ -1,0 +1,66 @@
+//! `exp` — the experiment harness that regenerates every table and figure
+//! of the paper (see DESIGN.md §4 for the experiment index).
+//!
+//! Usage: exp <table1|table2|table3|table4|table5|table6|table7|table8|
+//!             fig2|fig3|fig4|fig5|hw|perf|all> [--artifacts DIR]
+
+use anyhow::{anyhow, Result};
+use lutmax::config::Args;
+
+mod experiments {
+    include!("exp/common.rs");
+    include!("exp/detr.rs");
+    include!("exp/hw.rs");
+    include!("exp/nlp.rs");
+    include!("exp/perf.rs");
+    include!("exp/tables.rs");
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["artifacts", "samples", "lanes", "n"])?;
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    let dir = args
+        .opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(lutmax::artifacts_dir);
+    match cmd {
+        "table1" => experiments::table1(&dir, &args),
+        "table2" => experiments::table2(&dir, &args),
+        "table3" => experiments::table3(&dir, &args),
+        "table4" => experiments::table4(&dir, &args),
+        "table5" => experiments::table5(),
+        "table6" => experiments::table6(&dir, &args, "ap"),
+        "table7" => experiments::table6(&dir, &args, "ar"),
+        "table8" => experiments::table8(),
+        "fig2" => experiments::fig2(&dir, &args),
+        "fig3" => experiments::fig3(&dir, &args),
+        "fig4" => experiments::fig4(&dir),
+        "fig5" => experiments::fig5(&dir, &args),
+        "hw" => experiments::hw(&args),
+        "perf" => experiments::perf(&dir, &args),
+        "eval" => experiments::eval_one(&dir, &args),
+        "all" => {
+            experiments::table5()?;
+            experiments::table8()?;
+            experiments::hw(&args)?;
+            experiments::table4(&dir, &args)?;
+            experiments::fig4(&dir)?;
+            experiments::table2(&dir, &args)?;
+            experiments::fig3(&dir, &args)?;
+            experiments::table6(&dir, &args, "ap")?;
+            experiments::table6(&dir, &args, "ar")?;
+            experiments::fig2(&dir, &args)?;
+            experiments::table1(&dir, &args)?;
+            experiments::table3(&dir, &args)?;
+            experiments::fig5(&dir, &args)?;
+            Ok(())
+        }
+        _ => Err(anyhow!(
+            "usage: exp <table1..table8|fig2..fig5|hw|perf|all> [--artifacts DIR]"
+        )),
+    }
+}

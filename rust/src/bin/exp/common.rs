@@ -1,0 +1,174 @@
+// Shared imports + helpers for the experiment harness (all exp/*.rs files
+// are `include!`d into one module; `use` statements live here only).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use lutmax::config::{Args, Json};
+use lutmax::jobj;
+use lutmax::coordinator::{ClsPipeline, DetPipeline, NmtPipeline};
+use lutmax::eval::{self, DetectionBox, GroundTruth};
+use lutmax::hwsim;
+use lutmax::lut::{self, Precision};
+use lutmax::runtime::{tensorio, Engine, Tensor};
+use lutmax::workload::{BOS, EOS, PAD};
+
+/// Write an experiment report JSON under artifacts/results/.
+pub fn write_report(dir: &Path, name: &str, json: &Json) -> Result<()> {
+    let results = dir.join("results");
+    std::fs::create_dir_all(&results)?;
+    let path = results.join(format!("{name}.json"));
+    std::fs::write(&path, json.to_string_pretty())?;
+    println!("[report] {}", path.display());
+    Ok(())
+}
+
+/// Strip a teacher-forcing target row to the BLEU reference tokens.
+pub fn reference_tokens(row: &[i32]) -> Vec<i32> {
+    row.iter()
+        .copied()
+        .skip_while(|&t| t == BOS)
+        .take_while(|&t| t != EOS && t != PAD)
+        .collect()
+}
+
+/// Load the NMT eval bundle -> (src rows, reference rows).
+pub fn load_nmt_eval(
+    dir: &Path,
+    corpus: &str,
+    limit: usize,
+) -> Result<(Vec<Vec<i32>>, Vec<Vec<i32>>)> {
+    let b = tensorio::read_bundle(&dir.join(format!("eval_{corpus}.ltb")))?;
+    let src = b.get("src").ok_or_else(|| anyhow!("bundle missing src"))?;
+    let tgt = b.get("tgt").ok_or_else(|| anyhow!("bundle missing tgt"))?;
+    let n = src.dims[0].min(limit);
+    let mut srcs = Vec::with_capacity(n);
+    let mut refs = Vec::with_capacity(n);
+    for i in 0..n {
+        srcs.push(src.row_i32(i)?.to_vec());
+        refs.push(reference_tokens(tgt.row_i32(i)?));
+    }
+    Ok((srcs, refs))
+}
+
+/// Load a classification eval bundle -> (token rows, labels).
+pub fn load_cls_eval(dir: &Path, task: &str, limit: usize) -> Result<(Vec<Vec<i32>>, Vec<i32>)> {
+    let b = tensorio::read_bundle(&dir.join(format!("eval_{task}.ltb")))?;
+    let toks = b.get("tokens").ok_or_else(|| anyhow!("missing tokens"))?;
+    let labels = b.get("labels").ok_or_else(|| anyhow!("missing labels"))?;
+    let n = toks.dims[0].min(limit);
+    let rows = (0..n).map(|i| toks.row_i32(i).map(|r| r.to_vec())).collect::<Result<_>>()?;
+    Ok((rows, labels.as_i32()?[..n].to_vec()))
+}
+
+/// Load the detection eval bundle -> (images, ground truth).
+pub fn load_det_eval(
+    dir: &Path,
+    limit: usize,
+) -> Result<(Vec<Tensor>, Vec<GroundTruth>)> {
+    let b = tensorio::read_bundle(&dir.join("eval_detr.ltb"))?;
+    let images = b.get("images").ok_or_else(|| anyhow!("missing images"))?;
+    let gt = b.get("gt").ok_or_else(|| anyhow!("missing gt"))?;
+    let n = images.dims[0].min(limit);
+    let pix: usize = images.dims[1..].iter().product();
+    let data = images.as_f32()?;
+    let imgs: Vec<Tensor> = (0..n)
+        .map(|i| {
+            Tensor::f32(
+                images.dims[1..].to_vec(),
+                data[i * pix..(i + 1) * pix].to_vec(),
+            )
+        })
+        .collect();
+    let mut gts = Vec::new();
+    let gv = gt.as_f32()?;
+    for row in gv.chunks_exact(6) {
+        let image = row[0] as usize;
+        if image >= n {
+            continue;
+        }
+        gts.push(GroundTruth {
+            image,
+            class: row[1] as usize,
+            cx: row[2] as f64,
+            cy: row[3] as f64,
+            w: row[4] as f64,
+            h: row[5] as f64,
+        });
+    }
+    Ok((imgs, gts))
+}
+
+/// BLEU of one NMT variant over the eval corpus.
+pub fn eval_nmt_variant(
+    engine: &Engine,
+    dir: &Path,
+    corpus: &str,
+    variant: &str,
+    limit: usize,
+) -> Result<f64> {
+    let (srcs, refs) = load_nmt_eval(dir, corpus, limit)?;
+    let pipe = NmtPipeline::load(engine, variant)
+        .with_context(|| format!("loading {variant}"))?;
+    let hyps = pipe.translate(engine, &srcs)?;
+    let pairs: Vec<(Vec<i32>, Vec<i32>)> = hyps.into_iter().zip(refs).collect();
+    Ok(eval::bleu_corpus(&pairs))
+}
+
+/// Accuracy (task=sst2) or F1 (task=mrpc) of a classifier variant, percent.
+pub fn eval_cls_variant(
+    engine: &Engine,
+    dir: &Path,
+    task: &str,
+    variant: &str,
+    limit: usize,
+) -> Result<f64> {
+    let (rows, labels) = load_cls_eval(dir, task, limit)?;
+    let pipe = ClsPipeline::load(engine, variant)?;
+    let preds = pipe.classify(engine, &rows)?;
+    Ok(if task == "mrpc" {
+        eval::f1_binary(&preds, &labels)
+    } else {
+        eval::accuracy(&preds, &labels)
+    })
+}
+
+/// `exp eval <variant>`: evaluate a single model variant (debug utility).
+pub fn eval_one(dir: &Path, args: &Args) -> Result<()> {
+    let variant = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: exp eval <variant> [--samples N]"))?
+        .clone();
+    let limit = args.opt_usize("samples", 200)?;
+    let engine = Engine::new(dir)?;
+    let model = variant.split("__").next().unwrap_or("");
+    let metric = match model {
+        "nmt14" | "nmt17" => {
+            ("BLEU", eval_nmt_variant(&engine, dir, model, &variant, limit)?)
+        }
+        "sst2" => ("acc%", eval_cls_variant(&engine, dir, "sst2", &variant, limit)?),
+        "mrpc" => ("F1%", eval_cls_variant(&engine, dir, "mrpc", &variant, limit)?),
+        "detr" | "detr_dc5" => {
+            let e = eval_det_variant(&engine, dir, &variant, limit)?;
+            ("AP%", e.ap * 100.0)
+        }
+        m => return Err(anyhow!("unknown model prefix {m:?}")),
+    };
+    println!("{variant}: {} = {:.2}", metric.0, metric.1);
+    Ok(())
+}
+
+/// Detection AP/AR of a detr variant.
+pub fn eval_det_variant(
+    engine: &Engine,
+    dir: &Path,
+    variant: &str,
+    limit: usize,
+) -> Result<eval::DetEval> {
+    let (imgs, gts) = load_det_eval(dir, limit)?;
+    let pipe = DetPipeline::load(engine, variant)?;
+    let dets: Vec<DetectionBox> = pipe.detect(engine, &imgs, 0)?;
+    Ok(eval::average_precision(&dets, &gts, pipe.num_classes))
+}

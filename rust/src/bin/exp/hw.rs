@@ -1,0 +1,55 @@
+// HW experiment: the paper's architectural claims on the cycle/area/energy
+// simulator (no divider, tiny LUTs, minimal overhead).
+
+pub fn hw(args: &Args) -> Result<()> {
+    let n = args.opt_usize("n", 128)?;
+    let lanes = args.opt_usize("lanes", 4)?;
+    println!("\n== HW: softmax unit designs on the cycle/area/energy model ==");
+    println!("row length n={n}, lanes={lanes}, 1024 rows\n");
+    println!(
+        "{:<20} {:>6} {:>11} {:>10} {:>9} {:>9} {:>5} {:>5}",
+        "design", "prec", "cycles/elem", "energy/el", "area", "LUT B", "div", "mul"
+    );
+    for prec in [Precision::Uint8, Precision::Int16] {
+        for d in hwsim::all_designs(prec) {
+            let r = hwsim::simulate(
+                &d,
+                hwsim::SimConfig { n, rows: 1024, lanes },
+            );
+            println!(
+                "{:<20} {:>6} {:>11.2} {:>10.2} {:>9.1} {:>9} {:>5} {:>5}",
+                r.design,
+                prec.name(),
+                r.cycles_per_elem(),
+                r.energy_per_elem(),
+                r.area,
+                r.lut_bytes,
+                if r.has_divider { "yes" } else { "-" },
+                if r.has_multiplier { "yes" } else { "-" }
+            );
+        }
+        println!();
+    }
+    // headline ratios at uint8
+    let div = hwsim::simulate(
+        &hwsim::Design::new(hwsim::DesignKind::ExactDivider, Precision::Uint8),
+        hwsim::SimConfig { n, rows: 1024, lanes },
+    );
+    let l2d = hwsim::simulate(
+        &hwsim::Design::new(hwsim::DesignKind::Lut2d, Precision::Uint8),
+        hwsim::SimConfig { n, rows: 1024, lanes },
+    );
+    let rexp = hwsim::simulate(
+        &hwsim::Design::new(hwsim::DesignKind::Rexp, Precision::Uint8),
+        hwsim::SimConfig { n, rows: 1024, lanes },
+    );
+    println!(
+        "speedup vs exact divider: rexp {:.2}x, 2d-lut {:.2}x; area {:.1}% / {:.1}%",
+        div.cycles as f64 / rexp.cycles as f64,
+        div.cycles as f64 / l2d.cycles as f64,
+        100.0 * rexp.area / div.area,
+        100.0 * l2d.area / div.area,
+    );
+    println!("paper claims: no divider; 2D-LUT needs no multiplier; LUTs ~700 B (uint8 2D)");
+    Ok(())
+}

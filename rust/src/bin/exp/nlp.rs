@@ -1,0 +1,144 @@
+// Table 2 + Figure 3: NLP accuracy across precisions and methods.
+
+const NLP_PRECS: [&str; 4] = ["int16", "uint8", "uint4", "uint2"];
+
+/// Evaluate the full NLP grid. Returns
+/// (model, method, precision-label) -> metric.
+fn nlp_grid(
+    engine: &Engine,
+    dir: &Path,
+    limit: usize,
+) -> Result<BTreeMap<(String, String, String), f64>> {
+    let mut out = BTreeMap::new();
+    for model in ["nmt14", "nmt17", "sst2", "mrpc"] {
+        let eval = |variant: &str| -> Result<f64> {
+            if model.starts_with("nmt") {
+                eval_nmt_variant(engine, dir, model, variant, limit)
+            } else {
+                eval_cls_variant(engine, dir, model, variant, limit)
+            }
+        };
+        let fp32 = eval(&format!("{model}__fp32__exact__fp32"))?;
+        let ptqd = eval(&format!("{model}__ptqd__exact__fp32"))?;
+        for method in ["2dlut", "rexp"] {
+            out.insert((model.into(), method.into(), "FP32".into()), fp32);
+            out.insert((model.into(), method.into(), "PTQ-D".into()), ptqd);
+            let mode = if method == "2dlut" { "lut2d" } else { "rexp" };
+            for prec in NLP_PRECS {
+                let v = eval(&format!("{model}__ptqd__{mode}__{prec}"))?;
+                out.insert((model.into(), method.into(), prec.to_uppercase()), v);
+                println!("  [{model}/{method}/{prec}] = {v:.2}");
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Table 2: experimental validation over the NLP models and datasets.
+pub fn table2(dir: &Path, args: &Args) -> Result<()> {
+    let limit = args.opt_usize("samples", 200)?;
+    let engine = Engine::new(dir)?;
+    println!("\n== Table 2: NLP validation (Transformer BLEU, BERT acc/F1) ==");
+    let grid = nlp_grid(&engine, dir, limit)?;
+
+    let rows = ["FP32", "PTQ-D", "INT16", "UINT8", "UINT4", "UINT2"];
+    println!(
+        "{:<7} | {:>9} {:>9} {:>9} {:>9} | {:>9} {:>9} {:>9} {:>9}",
+        "prec",
+        "2D nmt14",
+        "2D nmt17",
+        "RX nmt14",
+        "RX nmt17",
+        "2D sst2",
+        "2D mrpc",
+        "RX sst2",
+        "RX mrpc"
+    );
+    let mut report = Vec::new();
+    for r in rows {
+        let g = |model: &str, method: &str| -> f64 {
+            grid.get(&(model.into(), method.into(), r.into()))
+                .copied()
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "{:<7} | {:>9.2} {:>9.2} {:>9.2} {:>9.2} | {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            r,
+            g("nmt14", "2dlut"),
+            g("nmt17", "2dlut"),
+            g("nmt14", "rexp"),
+            g("nmt17", "rexp"),
+            g("sst2", "2dlut"),
+            g("mrpc", "2dlut"),
+            g("sst2", "rexp"),
+            g("mrpc", "rexp"),
+        );
+        report.push(jobj![
+            ("precision", r),
+            ("nmt14_2dlut", g("nmt14", "2dlut")),
+            ("nmt17_2dlut", g("nmt17", "2dlut")),
+            ("nmt14_rexp", g("nmt14", "rexp")),
+            ("nmt17_rexp", g("nmt17", "rexp")),
+            ("sst2_2dlut", g("sst2", "2dlut")),
+            ("mrpc_2dlut", g("mrpc", "2dlut")),
+            ("sst2_rexp", g("sst2", "rexp")),
+            ("mrpc_rexp", g("mrpc", "rexp")),
+        ]);
+    }
+    println!("paper shape: <1% drop down to uint8; uint2 degrades (esp. MRPC F1 via 2D LUT)");
+    write_report(dir, "table2", &Json::Arr(report))
+}
+
+/// Figure 3: accuracy DROP of approximated models vs FP32 (left) and vs
+/// plain PTQ-D (right).
+pub fn fig3(dir: &Path, args: &Args) -> Result<()> {
+    let limit = args.opt_usize("samples", 200)?;
+    let engine = Engine::new(dir)?;
+    println!("\n== Figure 3: NLP accuracy drop curves ==");
+    let grid = nlp_grid(&engine, dir, limit)?;
+
+    let mut report = Vec::new();
+    for vs in ["FP32", "PTQ-D"] {
+        println!("-- drop vs {vs} (percentage points) --");
+        println!(
+            "{:<7} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "prec",
+            "2D nmt14",
+            "2D nmt17",
+            "RX nmt14",
+            "RX nmt17",
+            "2D sst2",
+            "2D mrpc",
+            "RX sst2",
+            "RX mrpc"
+        );
+        for prec in ["INT16", "UINT8", "UINT4", "UINT2"] {
+            let mut vals = Vec::new();
+            for (model, method) in [
+                ("nmt14", "2dlut"),
+                ("nmt17", "2dlut"),
+                ("nmt14", "rexp"),
+                ("nmt17", "rexp"),
+                ("sst2", "2dlut"),
+                ("mrpc", "2dlut"),
+                ("sst2", "rexp"),
+                ("mrpc", "rexp"),
+            ] {
+                let base = grid[&(model.into(), method.into(), vs.into())];
+                let v = grid[&(model.into(), method.into(), prec.into())];
+                vals.push(base - v);
+            }
+            println!(
+                "{:<7} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+                prec, vals[0], vals[1], vals[2], vals[3], vals[4], vals[5], vals[6], vals[7]
+            );
+            report.push(jobj![
+                ("vs", vs),
+                ("precision", prec),
+                ("drops", vals.clone()),
+            ]);
+        }
+    }
+    println!("paper shape: drops < 1 down to uint8; drop vs PTQ-D sometimes negative (recovery)");
+    write_report(dir, "fig3", &Json::Arr(report))
+}

@@ -1,0 +1,101 @@
+// Perf probe: request-path timings used by EXPERIMENTS.md §Perf.
+
+pub fn perf(dir: &Path, args: &Args) -> Result<()> {
+    use std::time::Instant;
+
+    let iters = args.opt_usize("samples", 50)?;
+    let engine = Engine::new(dir)?;
+    println!("\n== Perf probe (request path) ==");
+
+    // 1. standalone softmax artifact latency (compile once, execute many)
+    let shape = {
+        let meta = engine.manifest.artifact("softmax__rexp__uint8")?;
+        meta.inputs[0].0.clone()
+    };
+    let (rows, cols) = (shape[0], shape[1]);
+    let mut rng = lutmax::testkit::Rng::new(3);
+    let x = Tensor::f32(vec![rows, cols], rng.normal_vec(rows * cols, 2.0));
+    let t = lut::rexp_tables(Precision::Uint8, None);
+    let recip = Tensor::i32(vec![t.recip_e.len()], t.recip_e.clone());
+    let alpha = Tensor::i32(vec![t.alpha.len()], t.alpha.clone());
+    engine.execute("softmax__rexp__uint8", &[x.clone(), recip.clone(), alpha.clone()])?;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine.execute("softmax__rexp__uint8", &[x.clone(), recip.clone(), alpha.clone()])?;
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "softmax__rexp__uint8 ({rows}x{cols}): {:.3} ms/exec  ({:.1} M elem/s)",
+        per * 1e3,
+        rows as f64 * cols as f64 / per / 1e6
+    );
+
+    // 2. rust SW-model softmax throughput (the paper's datapath, no PJRT)
+    let xs = rng.normal_vec(rows * cols, 2.0);
+    let eng = lutmax::softmax::engine(
+        lutmax::softmax::Mode::Rexp,
+        Precision::Uint8,
+        None,
+    );
+    let mut out = vec![0.0f32; xs.len()];
+    let t0 = Instant::now();
+    let reps = iters * 20;
+    for _ in 0..reps {
+        eng.run(&xs, cols, &mut out);
+    }
+    let per_sw = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "rexp SW model        ({rows}x{cols}): {:.3} ms/run   ({:.1} M elem/s)",
+        per_sw * 1e3,
+        xs.len() as f64 / per_sw / 1e6
+    );
+
+    // 3. fused attention artifacts: exact vs REXP softmax inside the kernel
+    for mode in ["exact", "rexp"] {
+        let name = format!("attention__{mode}__uint8");
+        if engine.manifest.artifact(&name).is_err() {
+            continue;
+        }
+        let meta = engine.manifest.artifact(&name)?;
+        let dims = meta.inputs[0].0.clone();
+        let n: usize = dims.iter().product();
+        let mut args = vec![
+            Tensor::f32(dims.clone(), rng.normal_vec(n, 1.0)),
+            Tensor::f32(dims.clone(), rng.normal_vec(n, 1.0)),
+            Tensor::f32(dims.clone(), rng.normal_vec(n, 1.0)),
+        ];
+        args.extend(lutmax::runtime::mode_tables(mode, "uint8")?);
+        engine.execute(&name, &args)?;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            engine.execute(&name, &args)?;
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "{name} ({dims:?}):  {:.3} ms/exec",
+            per * 1e3
+        );
+    }
+
+    // 4. model-step latency (nmt decode step — the serving inner loop)
+    let pipe = NmtPipeline::load(&engine, "nmt14__ptqd__rexp__uint8")?;
+    let mut srcs = Vec::new();
+    for _ in 0..pipe.batch {
+        srcs.push(lutmax::workload::random_src_row(&mut rng, pipe.max_src, 64));
+    }
+    let t0 = Instant::now();
+    let n_translate = (iters / 10).max(2);
+    for _ in 0..n_translate {
+        pipe.translate(&engine, &srcs)?;
+    }
+    let per_tr = t0.elapsed().as_secs_f64() / n_translate as f64;
+    println!(
+        "nmt translate batch={}: {:.1} ms/batch ({:.1} ms/seq, incl. up to {} decode steps)",
+        pipe.batch,
+        per_tr * 1e3,
+        per_tr * 1e3 / pipe.batch as f64,
+        pipe.max_tgt - 1
+    );
+    println!("pjrt executions so far: {}", engine.exec_count.borrow());
+    Ok(())
+}

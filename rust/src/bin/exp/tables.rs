@@ -1,0 +1,112 @@
+// Tables 5 and 8: LUT storage accounting (pure LUT substrate, no PJRT).
+
+/// Table 5: LUT sizes for the DETR experiments (REXP cases 1-3).
+pub fn table5() -> Result<()> {
+    println!("\n== Table 5: LUTs size used for DETR experiments ==");
+    println!(
+        "{:<10} {:>5} | {:>16} {:>7} | {:>16} {:>7} | {:>16} {:>7}",
+        "precision", "bits", "case1 LUTs", "bytes", "case2 LUTs", "bytes", "case3 LUTs", "bytes"
+    );
+    for p in [Precision::Int16, Precision::Uint8] {
+        let mut cells = Vec::new();
+        for alpha in [256usize, 320, 512] {
+            let t = lut::rexp_tables(p, Some(alpha));
+            cells.push((
+                format!("1x{} + 1x{}", t.recip_e.len(), t.alpha.len()),
+                t.total_bytes(),
+            ));
+        }
+        println!(
+            "{:<10} {:>5} | {:>16} {:>7} | {:>16} {:>7} | {:>16} {:>7}",
+            p.name(),
+            p.w(),
+            cells[0].0,
+            cells[0].1,
+            cells[1].0,
+            cells[1].1,
+            cells[2].0,
+            cells[2].1
+        );
+    }
+    println!("paper (int16): 538 / 666 / 1050 B; (uint8): 264 / 328 / 520 B");
+    Ok(())
+}
+
+/// Table 8: LUT sizes for the NLP experiments.
+pub fn table8() -> Result<()> {
+    println!("\n== Table 8: LUTs size used for NLP experiments ==");
+    println!(
+        "{:<10} {:>5} | {:>18} {:>7} | {:>14} {:>7}",
+        "precision", "bits", "2D-LUT tables", "bytes", "REXP tables", "bytes"
+    );
+    for p in lut::ALL_PRECISIONS {
+        let l = lut::lut2d_tables(p, None);
+        let r = lut::rexp_tables(p, None);
+        println!(
+            "{:<10} {:>5} | {:>18} {:>7} | {:>14} {:>7}",
+            p.name(),
+            p.w(),
+            format!("1x{} + 11x{}", l.exp.len(), l.cols),
+            l.total_bytes(),
+            format!("1x{} + 1x{}", r.recip_e.len(), r.alpha.len()),
+            r.total_bytes()
+        );
+    }
+    println!("paper 2D-LUT: 1522 / 761 / 367 / 100 B; REXP: 58 / 24 / 21 / 10 B");
+    println!("(uint2 REXP differs by one LUT_1/e entry: Eq.(4) yields 1x4, the paper trims to 1x3)");
+    Ok(())
+}
+
+/// Table 4: PTQ-D model sizes and quantization accuracy drop.
+pub fn table4(dir: &Path, args: &Args) -> Result<()> {
+    let limit = args.opt_usize("samples", 400)?;
+    let engine = Engine::new(dir)?;
+    println!("\n== Table 4: properties of dynamically quantized PTQ-D models ==");
+    println!(
+        "{:<12} {:>10} {:>10} {:>7} | {:>9} {:>9} {:>7}",
+        "model", "fp32 MB", "ptqd MB", "ratio%", "fp32 acc", "ptqd acc", "drop"
+    );
+    let mut rows = Vec::new();
+    let models: Vec<String> = engine.manifest.model_bytes.keys().cloned().collect();
+    for model in models {
+        let (fp, pq) = engine.manifest.model_bytes[&model];
+        let (metric_fp, metric_pq): (f64, f64) = match model.as_str() {
+            m @ ("nmt14" | "nmt17") => (
+                eval_nmt_variant(&engine, dir, m, &format!("{m}__fp32__exact__fp32"), limit)?,
+                eval_nmt_variant(&engine, dir, m, &format!("{m}__ptqd__exact__fp32"), limit)?,
+            ),
+            m @ ("sst2" | "mrpc") => (
+                eval_cls_variant(&engine, dir, m, &format!("{m}__fp32__exact__fp32"), limit)?,
+                eval_cls_variant(&engine, dir, m, &format!("{m}__ptqd__exact__fp32"), limit)?,
+            ),
+            m => {
+                let a = eval_det_variant(&engine, dir, &format!("{m}__fp32__exact__fp32"), limit)?;
+                let b = eval_det_variant(&engine, dir, &format!("{m}__ptqd__exact__fp32"), limit)?;
+                (a.ap * 100.0, b.ap * 100.0)
+            }
+        };
+        let ratio = 100.0 * pq as f64 / fp as f64;
+        let drop = metric_fp - metric_pq;
+        println!(
+            "{:<12} {:>10.2} {:>10.2} {:>7.0} | {:>9.2} {:>9.2} {:>7.2}",
+            model,
+            fp as f64 / 1e6,
+            pq as f64 / 1e6,
+            ratio,
+            metric_fp,
+            metric_pq,
+            drop
+        );
+        rows.push(jobj![
+            ("model", model.as_str()),
+            ("fp32_bytes", fp),
+            ("ptqd_bytes", pq),
+            ("ratio_pct", ratio),
+            ("metric_fp32", metric_fp),
+            ("metric_ptqd", metric_pq),
+            ("drop", drop),
+        ]);
+    }
+    println!("paper: size ratios 41-84%, accuracy drop 0.0-0.66%");
+    write_report(dir, "table4", &Json::Arr(rows))
+}

@@ -1,0 +1,67 @@
+//! `runhlo` — debug utility: execute any HLO-text file via PJRT with
+//! inputs from an LTB bundle, writing outputs to another bundle.
+//!
+//! Usage: runhlo <file.hlo.txt> <inputs.ltb> <outputs.ltb>
+//!
+//! Inputs are fed in key order (name the tensors 000, 001, ... in the
+//! bundle). Used to bisect python-vs-rust numerical mismatches down to a
+//! single lowered computation without manifest plumbing.
+
+use anyhow::{anyhow, Context, Result};
+use lutmax::runtime::{tensorio, Tensor, TensorData};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [hlo, inputs, outputs] = match args.as_slice() {
+        [a, b, c] => [a, b, c],
+        _ => return Err(anyhow!("usage: runhlo <file.hlo.txt> <in.ltb> <out.ltb>")),
+    };
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e}"))?;
+    let proto = xla::HloModuleProto::from_text_file(hlo).map_err(|e| anyhow!("{e}"))?;
+    let exe = client
+        .compile(&xla::XlaComputation::from_proto(&proto))
+        .map_err(|e| anyhow!("{e}"))?;
+
+    let bundle = tensorio::read_bundle(std::path::Path::new(inputs))?;
+    let mut bufs = Vec::new();
+    for (name, t) in &bundle {
+        let buf = match &t.data {
+            TensorData::F32(v) => client.buffer_from_host_buffer(v, &t.dims, None),
+            TensorData::I32(v) => client.buffer_from_host_buffer(v, &t.dims, None),
+        }
+        .map_err(|e| anyhow!("{name}: {e}"))?;
+        bufs.push(buf);
+    }
+    let result = exe.execute_b(&bufs).map_err(|e| anyhow!("{e}"))?;
+    let mut out = std::collections::BTreeMap::new();
+    for (i, buf) in result
+        .into_iter()
+        .next()
+        .context("no output")?
+        .into_iter()
+        .enumerate()
+    {
+        let mut lit = buf.to_literal_sync().map_err(|e| anyhow!("{e}"))?;
+        let parts = match lit.shape().map_err(|e| anyhow!("{e}"))? {
+            xla::Shape::Tuple(_) => lit.decompose_tuple().map_err(|e| anyhow!("{e}"))?,
+            _ => vec![lit],
+        };
+        for (j, p) in parts.into_iter().enumerate() {
+            let shape = p.array_shape().map_err(|e| anyhow!("{e}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let t = match shape.ty() {
+                xla::ElementType::F32 => {
+                    Tensor::f32(dims, p.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?)
+                }
+                xla::ElementType::S32 => {
+                    Tensor::i32(dims, p.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?)
+                }
+                ty => return Err(anyhow!("unsupported output type {ty:?}")),
+            };
+            out.insert(format!("out{i}_{j}"), t);
+        }
+    }
+    tensorio::write_bundle(std::path::Path::new(outputs), &out)?;
+    println!("wrote {} outputs to {outputs}", out.len());
+    Ok(())
+}

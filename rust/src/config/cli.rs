@@ -1,0 +1,107 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args. `value_opts` lists option names that consume a value;
+    /// any other `--name` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_opts: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if value_opts.contains(&rest) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{rest} needs a value"))?;
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(value_opts: &[&str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], vals: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), vals).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(
+            &["serve", "--batch", "8", "--quiet", "--mode=rexp", "extra"],
+            &["batch"],
+        );
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.opt("batch"), Some("8"));
+        assert_eq!(a.opt("mode"), Some("rexp"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("loud"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(&["--n", "12", "--rate=0.5"], &["n"]);
+        assert_eq!(a.opt_usize("n", 1).unwrap(), 12);
+        assert_eq!(a.opt_usize("m", 7).unwrap(), 7);
+        assert_eq!(a.opt_f64("rate", 0.0).unwrap(), 0.5);
+        let bad = parse(&["--n=xyz"], &[]);
+        assert!(bad.opt_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["--batch".to_string()], &["batch"]).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Configuration substrate: JSON, CLI parsing, and typed server config.
+
+mod cli;
+mod json;
+
+pub use cli::Args;
+pub use json::Json;
+
+use anyhow::Result;
+
+/// Coordinator/server configuration (loadable from a JSON file, every field
+/// overridable from the CLI).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// artifacts directory (manifest.json, *.hlo.txt, *.ltb)
+    pub artifacts: std::path::PathBuf,
+    /// dynamic batcher: max requests folded into one execution
+    pub max_batch: usize,
+    /// dynamic batcher: max microseconds a request may wait for batchmates
+    pub batch_timeout_us: u64,
+    /// worker threads executing batches
+    pub workers: usize,
+    /// bounded queue depth before backpressure rejects new requests
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts: std::path::PathBuf::from("artifacts"),
+            max_batch: 8,
+            batch_timeout_us: 2_000,
+            workers: 2,
+            queue_depth: 256,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        if let Some(v) = j.get("artifacts").and_then(Json::as_str) {
+            c.artifacts = v.into();
+        }
+        if let Some(v) = j.get("max_batch").and_then(Json::as_usize) {
+            c.max_batch = v;
+        }
+        if let Some(v) = j.get("batch_timeout_us").and_then(Json::as_usize) {
+            c.batch_timeout_us = v as u64;
+        }
+        if let Some(v) = j.get("workers").and_then(Json::as_usize) {
+            c.workers = v;
+        }
+        if let Some(v) = j.get("queue_depth").and_then(Json::as_usize) {
+            c.queue_depth = v;
+        }
+        Ok(c)
+    }
+
+    /// Apply CLI overrides (`--artifacts`, `--max-batch`, `--workers`, ...).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.opt("artifacts") {
+            self.artifacts = v.into();
+        }
+        self.max_batch = args.opt_usize("max-batch", self.max_batch)?;
+        self.batch_timeout_us =
+            args.opt_usize("batch-timeout-us", self.batch_timeout_us as usize)? as u64;
+        self.workers = args.opt_usize("workers", self.workers)?;
+        self.queue_depth = args.opt_usize("queue-depth", self.queue_depth)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_from_json_with_defaults() {
+        let j = Json::parse(r#"{"max_batch": 16, "workers": 4}"#).unwrap();
+        let c = ServerConfig::from_json(&j).unwrap();
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.queue_depth, ServerConfig::default().queue_depth);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = ServerConfig::default();
+        let args = Args::parse(
+            ["--max-batch".to_string(), "32".to_string(), "--artifacts=/tmp/a".into()],
+            &["max-batch"],
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.max_batch, 32);
+        assert_eq!(c.artifacts, std::path::PathBuf::from("/tmp/a"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Dynamic batcher: a pure, thread-free queue the engine loop drives.
+//!
+//! Requests accumulate per task; a batch is released when it reaches
+//! `max_batch` or the oldest entry has waited `timeout`. Keeping it a
+//! plain data structure makes the policy unit-testable without threads,
+//! and lets the serving loop and the benches share one implementation.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+pub struct Batcher<T> {
+    queue: VecDeque<(T, Instant)>,
+    max_batch: usize,
+    timeout: Duration,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, timeout: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Self { queue: VecDeque::new(), max_batch, timeout }
+    }
+
+    pub fn push(&mut self, item: T) {
+        self.queue.push_back((item, Instant::now()));
+    }
+
+    pub fn push_at(&mut self, item: T, at: Instant) {
+        self.queue.push_back((item, at));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Release a batch if the policy allows at time `now`.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let oldest = self.queue.front().unwrap().1;
+        if self.queue.len() >= self.max_batch || now.duration_since(oldest) >= self.timeout {
+            let take = self.queue.len().min(self.max_batch);
+            return Some(self.queue.drain(..take).map(|(t, _)| t).collect());
+        }
+        None
+    }
+
+    /// Drain everything regardless of policy (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<T> {
+        self.queue.drain(..).map(|(t, _)| t).collect()
+    }
+
+    /// How long the engine may sleep before the timeout forces a release.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|(_, t)| {
+            let elapsed = now.duration_since(*t);
+            self.timeout.saturating_sub(elapsed)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn releases_on_max_batch() {
+        let mut b = Batcher::new(3, Duration::from_secs(60));
+        let now = Instant::now();
+        b.push_at(1, now);
+        b.push_at(2, now);
+        assert!(b.pop_ready(now).is_none());
+        b.push_at(3, now);
+        assert_eq!(b.pop_ready(now), Some(vec![1, 2, 3]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn releases_on_timeout() {
+        let mut b = Batcher::new(8, Duration::from_millis(5));
+        let t0 = Instant::now();
+        b.push_at(42, t0);
+        assert!(b.pop_ready(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        assert_eq!(b.pop_ready(later), Some(vec![42]));
+    }
+
+    #[test]
+    fn batch_never_exceeds_max() {
+        let mut b = Batcher::new(2, Duration::from_millis(0));
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push_at(i, now);
+        }
+        assert_eq!(b.pop_ready(now).unwrap().len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn deadline_shrinks_with_age() {
+        let mut b = Batcher::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push_at(1, t0);
+        let d1 = b.next_deadline(t0).unwrap();
+        let d2 = b.next_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d2 < d1);
+        assert!(b.next_deadline(t0 + Duration::from_millis(20)).unwrap().is_zero());
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = Batcher::new(4, Duration::from_secs(1));
+        b.push(1);
+        b.push(2);
+        assert_eq!(b.drain_all(), vec![1, 2]);
+        assert!(b.is_empty());
+    }
+}

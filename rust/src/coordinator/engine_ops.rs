@@ -1,0 +1,272 @@
+//! Model pipelines over the PJRT engine: translate / classify / detect.
+//!
+//! These are shared by the serving loop AND the experiment harness (the
+//! `exp` binary evaluates Table 2/6/7 through exactly the code that
+//! serves requests). The rust side owns the autoregressive decode loop;
+//! the artifacts are single fixed-shape steps.
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::DetectionBox;
+use crate::runtime::{Engine, ModelRunner, Tensor};
+use crate::softmax::{SoftmaxEngine, SoftmaxExact};
+use crate::workload::{BOS, EOS, PAD};
+
+/// NMT encoder + decode-step pair with greedy decoding.
+pub struct NmtPipeline {
+    enc: ModelRunner,
+    dec: ModelRunner,
+    pub batch: usize,
+    pub max_src: usize,
+    pub max_tgt: usize,
+    pub variant: String,
+}
+
+impl NmtPipeline {
+    /// `variant` e.g. `"nmt14__ptqd__rexp__uint8"`.
+    pub fn load(engine: &Engine, variant: &str) -> Result<Self> {
+        let enc = engine.model_runner(&format!("{variant}__enc"))?;
+        let dec = engine.model_runner(&format!("{variant}__dec"))?;
+        let m = &engine.manifest;
+        Ok(Self {
+            enc,
+            dec,
+            batch: m.batch_nmt,
+            max_src: m.nmt_max_src,
+            max_tgt: m.nmt_max_tgt,
+            variant: variant.to_string(),
+        })
+    }
+
+    /// Greedy-decode a set of padded source rows (any count; batched and
+    /// tail-padded internally). Returns EOS-terminated outputs, BOS/PAD
+    /// stripped.
+    pub fn translate(&self, engine: &Engine, src_rows: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        let mut out = Vec::with_capacity(src_rows.len());
+        for chunk in src_rows.chunks(self.batch) {
+            out.extend(self.translate_batch(engine, chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn translate_batch(&self, engine: &Engine, rows: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        let b = self.batch;
+        let mut src = vec![PAD; b * self.max_src];
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != self.max_src {
+                return Err(anyhow!(
+                    "source row {} has length {}, expected {}",
+                    i,
+                    row.len(),
+                    self.max_src
+                ));
+            }
+            src[i * self.max_src..(i + 1) * self.max_src].copy_from_slice(row);
+        }
+        let src_t = Tensor::i32(vec![b, self.max_src], src);
+        let memory = engine
+            .run_model(&self.enc, &[src_t.clone()])?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("encoder produced no output"))?;
+
+        // §Perf: memory + src stay device-resident across the decode loop;
+        // only the (small) growing tgt tensor is uploaded per step.
+        let memory_dev = engine.host_to_device(&memory)?;
+        let src_dev = engine.host_to_device(&src_t)?;
+
+        let vocab = engine.manifest.nmt_vocab;
+        let mut tgt = vec![PAD; b * self.max_tgt];
+        for i in 0..b {
+            tgt[i * self.max_tgt] = BOS;
+        }
+        let mut done = vec![false; rows.len()];
+        for t in 1..self.max_tgt {
+            let tgt_t = Tensor::i32(vec![b, self.max_tgt], tgt.clone());
+            let logits = engine
+                .run_model_mixed(
+                    &self.dec,
+                    &[None, None, Some(&tgt_t)],
+                    &[&memory_dev, &src_dev],
+                )?
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("decoder produced no output"))?;
+            let lv = logits.as_f32()?;
+            // logits shape (b, max_tgt, vocab); position t-1 predicts token t
+            for (i, d) in done.iter_mut().enumerate() {
+                if *d {
+                    continue;
+                }
+                let base = (i * self.max_tgt + (t - 1)) * vocab;
+                let row = &lv[base..base + vocab];
+                let mut best = 0usize;
+                for (k, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = k;
+                    }
+                }
+                let tok = best as i32;
+                tgt[i * self.max_tgt + t] = tok;
+                if tok == EOS {
+                    *d = true;
+                }
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+        }
+
+        Ok((0..rows.len())
+            .map(|i| {
+                let row = &tgt[i * self.max_tgt..(i + 1) * self.max_tgt];
+                row[1..]
+                    .iter()
+                    .copied()
+                    .take_while(|&t| t != EOS && t != PAD)
+                    .collect()
+            })
+            .collect())
+    }
+}
+
+/// Encoder-classifier pipeline (sst2 / mrpc variants).
+pub struct ClsPipeline {
+    runner: ModelRunner,
+    pub batch: usize,
+    pub max_len: usize,
+    pub variant: String,
+}
+
+impl ClsPipeline {
+    pub fn load(engine: &Engine, variant: &str) -> Result<Self> {
+        let runner = engine.model_runner(&format!("{variant}__cls"))?;
+        let max_len = runner
+            .meta
+            .inputs
+            .first()
+            .map(|(d, _)| d[1])
+            .ok_or_else(|| anyhow!("classifier artifact has no inputs"))?;
+        Ok(Self {
+            batch: engine.manifest.batch_cls,
+            runner,
+            max_len,
+            variant: variant.to_string(),
+        })
+    }
+
+    pub fn classify(&self, engine: &Engine, rows: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(self.batch) {
+            let mut toks = vec![PAD; self.batch * self.max_len];
+            for (i, row) in chunk.iter().enumerate() {
+                toks[i * self.max_len..(i + 1) * self.max_len].copy_from_slice(row);
+            }
+            let logits = engine
+                .run_model(&self.runner, &[Tensor::i32(vec![self.batch, self.max_len], toks)])?
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("classifier produced no output"))?;
+            let lv = logits.as_f32()?;
+            let classes = logits.dims[1];
+            for i in 0..chunk.len() {
+                let row = &lv[i * classes..(i + 1) * classes];
+                let mut best = 0usize;
+                for (k, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = k;
+                    }
+                }
+                out.push(best as i32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Set-prediction detector pipeline (detr / detr_dc5 variants).
+pub struct DetPipeline {
+    runner: ModelRunner,
+    pub batch: usize,
+    pub image_dims: Vec<usize>,
+    pub num_classes: usize,
+    pub score_threshold: f64,
+    pub variant: String,
+}
+
+impl DetPipeline {
+    pub fn load(engine: &Engine, variant: &str) -> Result<Self> {
+        let runner = engine.model_runner(&format!("{variant}__det"))?;
+        let image_dims = runner
+            .meta
+            .inputs
+            .first()
+            .map(|(d, _)| d[1..].to_vec())
+            .ok_or_else(|| anyhow!("detector artifact has no inputs"))?;
+        Ok(Self {
+            batch: engine.manifest.batch_detr,
+            runner,
+            image_dims,
+            num_classes: 3,
+            score_threshold: 0.30,
+            variant: variant.to_string(),
+        })
+    }
+
+    /// Run detection over images; returns kept boxes per image, with
+    /// image indices assigned sequentially from `first_image_id`.
+    pub fn detect(
+        &self,
+        engine: &Engine,
+        images: &[Tensor],
+        first_image_id: usize,
+    ) -> Result<Vec<DetectionBox>> {
+        let mut out = Vec::new();
+        let pix: usize = self.image_dims.iter().product();
+        for (ci, chunk) in images.chunks(self.batch).enumerate() {
+            let mut data = vec![0.0f32; self.batch * pix];
+            for (i, img) in chunk.iter().enumerate() {
+                data[i * pix..(i + 1) * pix].copy_from_slice(img.as_f32()?);
+            }
+            let mut dims = vec![self.batch];
+            dims.extend(&self.image_dims);
+            let outputs = engine.run_model(&self.runner, &[Tensor::f32(dims, data)])?;
+            let (cls_logits, boxes) = (&outputs[0], &outputs[1]);
+            let q = cls_logits.dims[1];
+            let c1 = cls_logits.dims[2]; // num_classes + 1
+            let lv = cls_logits.as_f32()?;
+            let bv = boxes.as_f32()?;
+            let mut probs = vec![0.0f32; lv.len()];
+            SoftmaxExact.run(lv, c1, &mut probs);
+            for (i, _) in chunk.iter().enumerate() {
+                let image = first_image_id + ci * self.batch + i;
+                for qi in 0..q {
+                    let p = &probs[(i * q + qi) * c1..(i * q + qi + 1) * c1];
+                    // argmax over REAL classes (last class = no-object)
+                    let mut best = 0usize;
+                    for k in 1..self.num_classes {
+                        if p[k] > p[best] {
+                            best = k;
+                        }
+                    }
+                    let score = p[best] as f64;
+                    let no_obj = p[self.num_classes] as f64;
+                    if score < self.score_threshold || no_obj > score {
+                        continue;
+                    }
+                    let b = &bv[(i * q + qi) * 4..(i * q + qi + 1) * 4];
+                    out.push(DetectionBox {
+                        image,
+                        class: best,
+                        score,
+                        cx: b[0] as f64,
+                        cy: b[1] as f64,
+                        w: b[2] as f64,
+                        h: b[3] as f64,
+                    });
+                }
+            }
+        }
+        Ok(out)
+    }
+}

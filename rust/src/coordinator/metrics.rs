@@ -1,0 +1,122 @@
+//! Serving metrics: counters and log-bucketed latency histograms.
+
+use std::time::Duration;
+
+/// Log2-bucketed latency histogram (1 us .. ~1 h), lock-free enough for a
+/// single-writer engine thread; readers take a snapshot clone.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) microseconds
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { buckets: vec![0; 32], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let b = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Percentile estimate from bucket boundaries (upper bound of bucket).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (self.count as f64 * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Per-task serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub rejected: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub latency: Histogram,
+    pub queue_wait: Histogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { latency: Histogram::new(), queue_wait: Histogram::new(), ..Default::default() }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batched_requests as f64 / self.batches as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = Histogram::new();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.percentile_us(0.5) <= h.percentile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 100_000);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn batch_size_mean() {
+        let mut m = Metrics::new();
+        m.batches = 2;
+        m.batched_requests = 12;
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordinator: request types, dynamic batcher, model pipelines and the
+//! serving loop.
+//!
+//! Threading model: PJRT handles are `Rc`-based (thread-confined), so one
+//! **engine thread** owns the [`crate::runtime::Engine`], all compiled
+//! executables and the device-resident weights. Callers submit requests
+//! through a bounded channel (backpressure) and receive replies on
+//! per-request channels. The dynamic batcher folds compatible requests
+//! into one fixed-shape execution (the batch size baked into the
+//! artifact), padding the tail — the same structure a vLLM-style router
+//! uses, scaled to this paper's workloads.
+
+mod batcher;
+mod engine_ops;
+mod metrics;
+mod request;
+mod server;
+
+pub use batcher::Batcher;
+pub use engine_ops::{ClsPipeline, DetPipeline, NmtPipeline};
+pub use metrics::{Histogram, Metrics};
+pub use request::{Payload, Reply, Request, TaskKind};
+pub use server::{Coordinator, RouteTable, ServerStats};

@@ -1,0 +1,106 @@
+//! Request/response vocabulary of the serving API.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::runtime::Tensor;
+
+/// Task families the router understands. Each maps to a model variant
+/// (artifact set) chosen at server construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TaskKind {
+    Translate,
+    Classify,
+    Detect,
+    Softmax,
+}
+
+impl TaskKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Translate => "translate",
+            Self::Classify => "classify",
+            Self::Detect => "detect",
+            Self::Softmax => "softmax",
+        }
+    }
+}
+
+/// Request payloads (one per task family).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// padded source token row (max_src)
+    Translate(Vec<i32>),
+    /// padded token row (max_len)
+    Classify(Vec<i32>),
+    /// (H, W, C) image tensor
+    Detect(Tensor),
+    /// rows to softmax through the standalone LUT artifact
+    Softmax(Tensor),
+}
+
+impl Payload {
+    pub fn kind(&self) -> TaskKind {
+        match self {
+            Payload::Translate(_) => TaskKind::Translate,
+            Payload::Classify(_) => TaskKind::Classify,
+            Payload::Detect(_) => TaskKind::Detect,
+            Payload::Softmax(_) => TaskKind::Softmax,
+        }
+    }
+}
+
+/// Replies mirrored per payload.
+#[derive(Clone, Debug)]
+pub enum Reply {
+    /// decoded target tokens (EOS-terminated, no BOS)
+    Translate(Vec<i32>),
+    /// predicted class id
+    Classify(i32),
+    /// (class, score, cx, cy, w, h) per kept query
+    Detect(Vec<(usize, f64, f64, f64, f64, f64)>),
+    Softmax(Tensor),
+    /// the server rejected or failed the request
+    Error(String),
+}
+
+/// An in-flight request: payload + reply channel + arrival time.
+pub struct Request {
+    pub payload: Payload,
+    pub reply: mpsc::Sender<Reply>,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(payload: Payload) -> (Self, mpsc::Receiver<Reply>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Self { payload, reply: tx, arrived: Instant::now() },
+            rx,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_kind_mapping() {
+        assert_eq!(Payload::Translate(vec![1]).kind(), TaskKind::Translate);
+        assert_eq!(
+            Payload::Softmax(Tensor::zeros_f32(vec![1, 4])).kind(),
+            TaskKind::Softmax
+        );
+    }
+
+    #[test]
+    fn reply_channel_roundtrip() {
+        let (req, rx) = Request::new(Payload::Classify(vec![1, 2]));
+        req.reply.send(Reply::Classify(1)).unwrap();
+        match rx.recv().unwrap() {
+            Reply::Classify(c) => assert_eq!(c, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

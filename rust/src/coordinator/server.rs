@@ -1,0 +1,377 @@
+//! The serving loop: bounded ingress, per-task dynamic batching, one
+//! engine thread owning all PJRT state.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::Batcher;
+use super::engine_ops::{ClsPipeline, DetPipeline, NmtPipeline};
+use super::metrics::Metrics;
+use super::request::{Payload, Reply, Request, TaskKind};
+use crate::config::ServerConfig;
+use crate::runtime::Engine;
+
+/// Which model variant serves each task family.
+#[derive(Clone, Debug, Default)]
+pub struct RouteTable {
+    pub translate: Option<String>,
+    pub classify: Option<String>,
+    pub detect: Option<String>,
+    /// standalone softmax artifact name
+    pub softmax: Option<String>,
+}
+
+/// Snapshot of serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub per_task: BTreeMap<&'static str, Metrics>,
+    pub executions: u64,
+}
+
+enum Ctl {
+    Req(Request),
+    Stats(mpsc::Sender<ServerStats>),
+    Shutdown,
+}
+
+/// Client handle to the serving loop.
+pub struct Coordinator {
+    tx: mpsc::Sender<Ctl>,
+    inflight: Arc<AtomicUsize>,
+    queue_depth: usize,
+    handle: Option<JoinHandle<Result<()>>>,
+}
+
+impl Coordinator {
+    /// Start the engine thread. Fails fast (on the calling thread) if the
+    /// artifacts directory is missing.
+    pub fn start(cfg: ServerConfig, routes: RouteTable) -> Result<Self> {
+        if !cfg.artifacts.join("manifest.json").exists() {
+            return Err(anyhow!(
+                "no manifest at {:?}; run `make artifacts`",
+                cfg.artifacts
+            ));
+        }
+        let (tx, rx) = mpsc::channel::<Ctl>();
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let inflight2 = inflight.clone();
+        let queue_depth = cfg.queue_depth;
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("lutmax-engine".into())
+            .spawn(move || engine_thread(cfg, routes, rx, inflight2, ready_tx))?;
+        // wait for pipelines to compile (or fail)
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(Self {
+            tx,
+            inflight,
+            queue_depth,
+            handle: Some(handle),
+        })
+    }
+
+    pub fn set_queue_depth(&mut self, d: usize) {
+        self.queue_depth = d;
+    }
+
+    /// Submit a request; returns the reply receiver, or an error when the
+    /// server is saturated (backpressure).
+    pub fn submit(&self, payload: Payload) -> Result<mpsc::Receiver<Reply>> {
+        let cur = self.inflight.load(Ordering::Relaxed);
+        if cur >= self.queue_depth {
+            return Err(anyhow!("server saturated ({cur} in flight)"));
+        }
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        let (req, rx) = Request::new(payload);
+        self.tx
+            .send(Ctl::Req(req))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        Ok(rx)
+    }
+
+    /// Blocking call convenience: submit and wait.
+    pub fn call(&self, payload: Payload) -> Result<Reply> {
+        let rx = self.submit(payload)?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the request"))
+    }
+
+    pub fn stats(&self) -> Result<ServerStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Ctl::Stats(tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Ctl::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow!("engine thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Ctl::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Pipelines {
+    nmt: Option<NmtPipeline>,
+    cls: Option<ClsPipeline>,
+    det: Option<DetPipeline>,
+    softmax: Option<String>,
+}
+
+fn engine_thread(
+    cfg: ServerConfig,
+    routes: RouteTable,
+    rx: mpsc::Receiver<Ctl>,
+    inflight: Arc<AtomicUsize>,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    let setup = (|| -> Result<(Engine, Pipelines)> {
+        let engine = Engine::new(&cfg.artifacts)?;
+        let pipes = Pipelines {
+            nmt: routes
+                .translate
+                .as_deref()
+                .map(|v| NmtPipeline::load(&engine, v))
+                .transpose()?,
+            cls: routes
+                .classify
+                .as_deref()
+                .map(|v| ClsPipeline::load(&engine, v))
+                .transpose()?,
+            det: routes
+                .detect
+                .as_deref()
+                .map(|v| DetPipeline::load(&engine, v))
+                .transpose()?,
+            softmax: routes.softmax.clone(),
+        };
+        if let Some(name) = &pipes.softmax {
+            engine.compile(name)?; // pre-compile
+        }
+        Ok((engine, pipes))
+    })();
+    let (engine, pipes) = match setup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return Ok(());
+        }
+    };
+
+    let timeout = Duration::from_micros(cfg.batch_timeout_us);
+    let mut queues: BTreeMap<TaskKind, Batcher<Request>> = BTreeMap::new();
+    for k in [TaskKind::Translate, TaskKind::Classify, TaskKind::Detect, TaskKind::Softmax] {
+        queues.insert(k, Batcher::new(cfg.max_batch, timeout));
+    }
+    let mut metrics: BTreeMap<&'static str, Metrics> =
+        queues.keys().map(|k| (k.name(), Metrics::new())).collect();
+
+    loop {
+        // sleep until the nearest batch deadline (or a new request)
+        let now = Instant::now();
+        let wait = queues
+            .values()
+            .filter_map(|q| q.next_deadline(now))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(Ctl::Req(req)) => {
+                let kind = req.payload.kind();
+                metrics.get_mut(kind.name()).unwrap().requests += 1;
+                queues.get_mut(&kind).unwrap().push(req);
+            }
+            Ok(Ctl::Stats(tx)) => {
+                let _ = tx.send(ServerStats {
+                    per_task: metrics.clone(),
+                    executions: *engine.exec_count.borrow(),
+                });
+            }
+            Ok(Ctl::Shutdown) => {
+                for q in queues.values_mut() {
+                    for req in q.drain_all() {
+                        let _ = req.reply.send(Reply::Error("server shutting down".into()));
+                        inflight.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+                return Ok(());
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+        }
+
+        let now = Instant::now();
+        for (kind, q) in queues.iter_mut() {
+            while let Some(batch) = q.pop_ready(now) {
+                let n = batch.len();
+                let m = metrics.get_mut(kind.name()).unwrap();
+                m.batches += 1;
+                m.batched_requests += n as u64;
+                for r in &batch {
+                    m.queue_wait.record(now.duration_since(r.arrived));
+                }
+                process_batch(&engine, &pipes, *kind, batch, m);
+                inflight.fetch_sub(n, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn process_batch(
+    engine: &Engine,
+    pipes: &Pipelines,
+    kind: TaskKind,
+    batch: Vec<Request>,
+    metrics: &mut Metrics,
+) {
+    let started: Vec<Instant> = batch.iter().map(|r| r.arrived).collect();
+    let replies: Vec<Reply> = match kind {
+        TaskKind::Translate => match &pipes.nmt {
+            None => vec![Reply::Error("no translate route".into()); batch.len()],
+            Some(p) => {
+                let rows: Vec<Vec<i32>> = batch
+                    .iter()
+                    .map(|r| match &r.payload {
+                        Payload::Translate(t) => t.clone(),
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                match p.translate(engine, &rows) {
+                    Ok(outs) => outs.into_iter().map(Reply::Translate).collect(),
+                    Err(e) => vec![Reply::Error(e.to_string()); batch.len()],
+                }
+            }
+        },
+        TaskKind::Classify => match &pipes.cls {
+            None => vec![Reply::Error("no classify route".into()); batch.len()],
+            Some(p) => {
+                let rows: Vec<Vec<i32>> = batch
+                    .iter()
+                    .map(|r| match &r.payload {
+                        Payload::Classify(t) => t.clone(),
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                match p.classify(engine, &rows) {
+                    Ok(preds) => preds.into_iter().map(Reply::Classify).collect(),
+                    Err(e) => vec![Reply::Error(e.to_string()); batch.len()],
+                }
+            }
+        },
+        TaskKind::Detect => match &pipes.det {
+            None => vec![Reply::Error("no detect route".into()); batch.len()],
+            Some(p) => {
+                let images: Vec<_> = batch
+                    .iter()
+                    .map(|r| match &r.payload {
+                        Payload::Detect(t) => t.clone(),
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                match p.detect(engine, &images, 0) {
+                    Ok(all) => (0..batch.len())
+                        .map(|i| {
+                            Reply::Detect(
+                                all.iter()
+                                    .filter(|d| d.image == i)
+                                    .map(|d| (d.class, d.score, d.cx, d.cy, d.w, d.h))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                    Err(e) => vec![Reply::Error(e.to_string()); batch.len()],
+                }
+            }
+        },
+        TaskKind::Softmax => match &pipes.softmax {
+            None => vec![Reply::Error("no softmax route".into()); batch.len()],
+            Some(name) => batch
+                .iter()
+                .map(|r| match &r.payload {
+                    Payload::Softmax(t) => {
+                        match softmax_call(engine, name, t) {
+                            Ok(out) => Reply::Softmax(out),
+                            Err(e) => Reply::Error(e.to_string()),
+                        }
+                    }
+                    _ => unreachable!(),
+                })
+                .collect(),
+        },
+    };
+    let now = Instant::now();
+    for ((req, reply), t0) in batch.iter().zip(replies).zip(started) {
+        metrics.latency.record(now.duration_since(t0));
+        let _ = req.reply.send(reply);
+    }
+}
+
+/// Run the standalone softmax artifact: pads rows to the artifact shape
+/// and appends the LUT operand tensors from the lut substrate.
+fn softmax_call(engine: &Engine, name: &str, x: &crate::runtime::Tensor) -> Result<crate::runtime::Tensor> {
+    use crate::lut::{lut2d_tables, rexp_tables, Precision};
+    use crate::runtime::Tensor;
+
+    let meta = engine.manifest.artifact(name)?.clone();
+    let (rows, cols) = {
+        let d = &meta.inputs[0].0;
+        (d[0], d[1])
+    };
+    if x.dims.len() != 2 || x.dims[1] != cols || x.dims[0] > rows {
+        return Err(anyhow!(
+            "softmax payload {:?} incompatible with artifact shape [{rows}, {cols}]",
+            x.dims
+        ));
+    }
+    let mut data = vec![0.0f32; rows * cols];
+    data[..x.len()].copy_from_slice(x.as_f32()?);
+    let input = Tensor::f32(vec![rows, cols], data);
+
+    let prec = Precision::parse(&meta.spec).unwrap_or(Precision::Uint8);
+    let mut args = vec![input];
+    match meta.mode.as_str() {
+        "rexp" => {
+            let t = rexp_tables(prec, None);
+            args.push(Tensor::i32(vec![t.recip_e.len()], t.recip_e.clone()));
+            args.push(Tensor::i32(vec![t.alpha.len()], t.alpha.clone()));
+        }
+        "lut2d" => {
+            let t = lut2d_tables(prec, None);
+            args.push(Tensor::i32(vec![t.exp.len()], t.exp.clone()));
+            args.push(Tensor::i32(vec![t.row.len()], t.row.clone()));
+            args.push(Tensor::i32(
+                vec![crate::lut::SIGMA_ROWS, t.cols],
+                t.sigma.clone(),
+            ));
+        }
+        _ => {}
+    }
+    let out = engine
+        .execute(name, &args)?
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("softmax artifact returned nothing"))?;
+    // slice back the caller's rows
+    let keep = x.dims[0] * cols;
+    let v = out.as_f32()?[..keep].to_vec();
+    Ok(Tensor::f32(vec![x.dims[0], cols], v))
+}

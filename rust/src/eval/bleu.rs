@@ -1,0 +1,116 @@
+//! Corpus BLEU with the `multi-bleu.perl` conventions the paper uses:
+//! up-to-4-gram modified precision, geometric mean, brevity penalty,
+//! corpus-level statistics (not sentence-averaged).
+
+use std::collections::HashMap;
+
+const MAX_N: usize = 4;
+
+/// n-gram counts of a token sequence
+fn ngram_counts(toks: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if toks.len() >= n {
+        for w in toks.windows(n) {
+            *m.entry(w).or_default() += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU over (hypothesis, reference) token pairs; returns percent
+/// (0..100) like multi-bleu.perl.
+pub fn bleu_corpus(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
+    let mut match_n = [0usize; MAX_N];
+    let mut total_n = [0usize; MAX_N];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (hyp, rf) in pairs {
+        hyp_len += hyp.len();
+        ref_len += rf.len();
+        for n in 1..=MAX_N {
+            let h = ngram_counts(hyp, n);
+            let r = ngram_counts(rf, n);
+            for (g, c) in &h {
+                let rc = r.get(g).copied().unwrap_or(0);
+                match_n[n - 1] += (*c).min(rc);
+            }
+            total_n[n - 1] += hyp.len().saturating_sub(n - 1);
+        }
+    }
+    if hyp_len == 0 {
+        return 0.0;
+    }
+    // smoothed log precision (multi-bleu returns 0 when any count is 0;
+    // we use the standard +epsilon floor to keep short-corpus runs stable)
+    let mut logp = 0.0f64;
+    for n in 0..MAX_N {
+        if total_n[n] == 0 {
+            return 0.0;
+        }
+        let p = match_n[n] as f64 / total_n[n] as f64;
+        if p == 0.0 {
+            return 0.0;
+        }
+        logp += p.ln();
+    }
+    logp /= MAX_N as f64;
+    let bp = if hyp_len > ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * logp.exp()
+}
+
+/// Single-pair BLEU convenience.
+pub fn bleu(hyp: &[i32], rf: &[i32]) -> f64 {
+    bleu_corpus(&[(hyp.to_vec(), rf.to_vec())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let s = vec![5, 6, 7, 8, 9, 10];
+        assert!((bleu(&s, &s) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_hypothesis_is_0() {
+        assert_eq!(bleu(&[], &[1, 2, 3]), 0.0);
+    }
+
+    #[test]
+    fn disjoint_is_0() {
+        assert_eq!(bleu(&[1, 2, 3, 4, 5], &[6, 7, 8, 9, 10]), 0.0);
+    }
+
+    #[test]
+    fn brevity_penalty_applies() {
+        // hypothesis = exact prefix of the reference: precisions are 1 but
+        // BP < 1 must bite
+        let rf = vec![4, 5, 6, 7, 8, 9, 10, 11];
+        let hyp = rf[..6].to_vec();
+        let b = bleu(&hyp, &rf);
+        assert!(b < 100.0 && b > 50.0, "{b}");
+    }
+
+    #[test]
+    fn corpus_vs_sentence_stats() {
+        // corpus BLEU pools counts; one bad pair hurts less than averaging
+        let good = (vec![1, 2, 3, 4, 5, 6], vec![1, 2, 3, 4, 5, 6]);
+        let bad = (vec![9, 9, 9, 9], vec![1, 2, 3, 4]);
+        let pooled = bleu_corpus(&[good.clone(), bad]);
+        assert!(pooled > 0.0 && pooled < 100.0);
+    }
+
+    #[test]
+    fn partial_overlap_monotone() {
+        let rf = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let h1 = vec![1, 2, 3, 4, 9, 9, 9, 9];
+        let h2 = vec![1, 2, 3, 4, 5, 6, 9, 9];
+        assert!(bleu(&h2, &rf) > bleu(&h1, &rf));
+    }
+}

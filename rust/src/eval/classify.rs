@@ -1,0 +1,108 @@
+//! Classification metrics: accuracy (SST-2 analog) and binary F1 on the
+//! positive class (MRPC analog — the paper follows GLUE and reports F1
+//! because MRPC is 68/32 imbalanced).
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassifyReport {
+    pub total: usize,
+    pub correct: usize,
+    pub tp: usize,
+    pub fp: usize,
+    pub fn_: usize,
+}
+
+impl ClassifyReport {
+    pub fn from_preds(preds: &[i32], labels: &[i32]) -> Self {
+        assert_eq!(preds.len(), labels.len());
+        let mut r = Self { total: preds.len(), ..Default::default() };
+        for (&p, &l) in preds.iter().zip(labels) {
+            if p == l {
+                r.correct += 1;
+            }
+            match (p, l) {
+                (1, 1) => r.tp += 1,
+                (1, 0) => r.fp += 1,
+                (0, 1) => r.fn_ += 1,
+                _ => {}
+            }
+        }
+        r
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.correct as f64 / self.total as f64
+    }
+
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fp) as f64
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            return 0.0;
+        }
+        self.tp as f64 / (self.tp + self.fn_) as f64
+    }
+
+    pub fn f1(&self) -> f64 {
+        let (p, r) = (self.precision(), self.recall());
+        if p + r == 0.0 {
+            return 0.0;
+        }
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// accuracy in percent (Table 2's SST-2 column)
+pub fn accuracy(preds: &[i32], labels: &[i32]) -> f64 {
+    ClassifyReport::from_preds(preds, labels).accuracy() * 100.0
+}
+
+/// binary F1 in percent (Table 2's MRPC column)
+pub fn f1_binary(preds: &[i32], labels: &[i32]) -> f64 {
+    ClassifyReport::from_preds(preds, labels).f1() * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect() {
+        let l = vec![0, 1, 1, 0];
+        assert_eq!(accuracy(&l, &l), 100.0);
+        assert_eq!(f1_binary(&l, &l), 100.0);
+    }
+
+    #[test]
+    fn all_wrong() {
+        let p = vec![1, 0, 0, 1];
+        let l = vec![0, 1, 1, 0];
+        assert_eq!(accuracy(&p, &l), 0.0);
+        assert_eq!(f1_binary(&p, &l), 0.0);
+    }
+
+    #[test]
+    fn f1_counts() {
+        // tp=1 (idx0), fp=1 (idx1), fn=1 (idx2), tn=1 (idx3)
+        let p = vec![1, 1, 0, 0];
+        let l = vec![1, 0, 1, 0];
+        let r = ClassifyReport::from_preds(&p, &l);
+        assert_eq!((r.tp, r.fp, r.fn_), (1, 1, 1));
+        assert!((r.f1() - 0.5).abs() < 1e-9);
+        assert_eq!(r.accuracy(), 0.5);
+    }
+
+    #[test]
+    fn degenerate_no_positive_predictions() {
+        let p = vec![0, 0];
+        let l = vec![1, 1];
+        assert_eq!(f1_binary(&p, &l), 0.0);
+    }
+}

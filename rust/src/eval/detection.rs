@@ -1,0 +1,258 @@
+//! Detection metrics: COCO-style Average Precision / Average Recall over
+//! IoU thresholds 0.50:0.95, evaluated on set predictions (detr_lite).
+
+/// A predicted box: class, confidence, center-format coords in [0, 1].
+#[derive(Clone, Copy, Debug)]
+pub struct DetectionBox {
+    pub image: usize,
+    pub class: usize,
+    pub score: f64,
+    pub cx: f64,
+    pub cy: f64,
+    pub w: f64,
+    pub h: f64,
+}
+
+/// A ground-truth object.
+#[derive(Clone, Copy, Debug)]
+pub struct GroundTruth {
+    pub image: usize,
+    pub class: usize,
+    pub cx: f64,
+    pub cy: f64,
+    pub w: f64,
+    pub h: f64,
+}
+
+fn iou(a: (f64, f64, f64, f64), b: (f64, f64, f64, f64)) -> f64 {
+    let (ax0, ay0, ax1, ay1) = (a.0 - a.2 / 2.0, a.1 - a.3 / 2.0, a.0 + a.2 / 2.0, a.1 + a.3 / 2.0);
+    let (bx0, by0, bx1, by1) = (b.0 - b.2 / 2.0, b.1 - b.3 / 2.0, b.0 + b.2 / 2.0, b.1 + b.3 / 2.0);
+    let ix = (ax1.min(bx1) - ax0.max(bx0)).max(0.0);
+    let iy = (ay1.min(by1) - ay0.max(by0)).max(0.0);
+    let inter = ix * iy;
+    let union = (ax1 - ax0) * (ay1 - ay0) + (bx1 - bx0) * (by1 - by0) - inter;
+    if union <= 0.0 {
+        0.0
+    } else {
+        inter / union
+    }
+}
+
+/// AP at one IoU threshold for one class (VOC-style all-point interpolation).
+fn ap_single(dets: &[&DetectionBox], gts: &[&GroundTruth], thr: f64) -> Option<f64> {
+    if gts.is_empty() {
+        return None; // class absent from ground truth: skipped in the mean
+    }
+    let mut order: Vec<usize> = (0..dets.len()).collect();
+    order.sort_by(|&a, &b| dets[b].score.total_cmp(&dets[a].score));
+    let mut matched = vec![false; gts.len()];
+    let mut tp = Vec::with_capacity(dets.len());
+    for &di in &order {
+        let d = dets[di];
+        let mut best = 0.0;
+        let mut best_g = None;
+        for (gi, g) in gts.iter().enumerate() {
+            if g.image != d.image || matched[gi] {
+                continue;
+            }
+            let v = iou((d.cx, d.cy, d.w, d.h), (g.cx, g.cy, g.w, g.h));
+            if v > best {
+                best = v;
+                best_g = Some(gi);
+            }
+        }
+        if best >= thr {
+            matched[best_g.unwrap()] = true;
+            tp.push(true);
+        } else {
+            tp.push(false);
+        }
+    }
+    // precision-recall sweep
+    let mut cum_tp = 0usize;
+    let mut prec_at_recall = Vec::new();
+    for (i, &hit) in tp.iter().enumerate() {
+        if hit {
+            cum_tp += 1;
+            prec_at_recall.push((
+                cum_tp as f64 / gts.len() as f64,
+                cum_tp as f64 / (i + 1) as f64,
+            ));
+        }
+    }
+    // all-point interpolation: AP = sum over recall steps of max precision to the right
+    let mut ap = 0.0;
+    let mut prev_r = 0.0;
+    for i in 0..prec_at_recall.len() {
+        let (r, _) = prec_at_recall[i];
+        let pmax = prec_at_recall[i..]
+            .iter()
+            .map(|&(_, p)| p)
+            .fold(0.0, f64::max);
+        ap += (r - prev_r) * pmax;
+        prev_r = r;
+    }
+    Some(ap)
+}
+
+/// Recall at one threshold (fraction of GT matched by any detection).
+fn recall_single(dets: &[&DetectionBox], gts: &[&GroundTruth], thr: f64) -> Option<f64> {
+    if gts.is_empty() {
+        return None;
+    }
+    let mut order: Vec<usize> = (0..dets.len()).collect();
+    order.sort_by(|&a, &b| dets[b].score.total_cmp(&dets[a].score));
+    let mut matched = vec![false; gts.len()];
+    for &di in &order {
+        let d = dets[di];
+        let mut best = 0.0;
+        let mut best_g = None;
+        for (gi, g) in gts.iter().enumerate() {
+            if g.image != d.image || matched[gi] {
+                continue;
+            }
+            let v = iou((d.cx, d.cy, d.w, d.h), (g.cx, g.cy, g.w, g.h));
+            if v > best {
+                best = v;
+                best_g = Some(gi);
+            }
+        }
+        if best >= thr {
+            matched[best_g.unwrap()] = true;
+        }
+    }
+    Some(matched.iter().filter(|&&m| m).count() as f64 / gts.len() as f64)
+}
+
+/// Full evaluation report (the paper's Table 6/7 metric set).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DetEval {
+    /// mean AP over IoU 0.50:0.05:0.95 (COCO "AP")
+    pub ap: f64,
+    pub ap50: f64,
+    pub ap75: f64,
+    /// mean AR over IoU 0.50:0.05:0.95
+    pub ar: f64,
+    pub ar50: f64,
+    pub ar75: f64,
+}
+
+/// Evaluate predictions vs ground truth, macro-averaged over classes.
+pub fn average_precision(
+    dets: &[DetectionBox],
+    gts: &[GroundTruth],
+    num_classes: usize,
+) -> DetEval {
+    let thrs: Vec<f64> = (0..10).map(|i| 0.5 + 0.05 * i as f64).collect();
+    let mut ap_sum = 0.0;
+    let mut ap50_sum = 0.0;
+    let mut ap75_sum = 0.0;
+    let mut ar_sum = 0.0;
+    let mut ar50_sum = 0.0;
+    let mut ar75_sum = 0.0;
+    let mut classes = 0usize;
+    for c in 0..num_classes {
+        let d: Vec<&DetectionBox> = dets.iter().filter(|d| d.class == c).collect();
+        let g: Vec<&GroundTruth> = gts.iter().filter(|g| g.class == c).collect();
+        if g.is_empty() {
+            continue;
+        }
+        classes += 1;
+        let mut aps = Vec::new();
+        let mut ars = Vec::new();
+        for &t in &thrs {
+            aps.push(ap_single(&d, &g, t).unwrap_or(0.0));
+            ars.push(recall_single(&d, &g, t).unwrap_or(0.0));
+        }
+        ap_sum += aps.iter().sum::<f64>() / thrs.len() as f64;
+        ap50_sum += aps[0];
+        ap75_sum += aps[5];
+        ar_sum += ars.iter().sum::<f64>() / thrs.len() as f64;
+        ar50_sum += ars[0];
+        ar75_sum += ars[5];
+    }
+    if classes == 0 {
+        return DetEval::default();
+    }
+    let k = classes as f64;
+    DetEval {
+        ap: ap_sum / k,
+        ap50: ap50_sum / k,
+        ap75: ap75_sum / k,
+        ar: ar_sum / k,
+        ar50: ar50_sum / k,
+        ar75: ar75_sum / k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(image: usize, class: usize, score: f64, c: (f64, f64, f64, f64)) -> DetectionBox {
+        DetectionBox { image, class, score, cx: c.0, cy: c.1, w: c.2, h: c.3 }
+    }
+
+    fn g(image: usize, class: usize, c: (f64, f64, f64, f64)) -> GroundTruth {
+        GroundTruth { image, class, cx: c.0, cy: c.1, w: c.2, h: c.3 }
+    }
+
+    #[test]
+    fn iou_identical_is_one() {
+        assert!((iou((0.5, 0.5, 0.2, 0.2), (0.5, 0.5, 0.2, 0.2)) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        assert_eq!(iou((0.2, 0.2, 0.1, 0.1), (0.8, 0.8, 0.1, 0.1)), 0.0);
+    }
+
+    #[test]
+    fn perfect_detection_ap_one() {
+        let gts = vec![g(0, 0, (0.5, 0.5, 0.2, 0.2)), g(1, 0, (0.3, 0.3, 0.4, 0.4))];
+        let dets = vec![
+            d(0, 0, 0.9, (0.5, 0.5, 0.2, 0.2)),
+            d(1, 0, 0.8, (0.3, 0.3, 0.4, 0.4)),
+        ];
+        let e = average_precision(&dets, &gts, 1);
+        assert!((e.ap - 1.0).abs() < 1e-9, "{e:?}");
+        assert!((e.ar - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_detections_ap_zero() {
+        let gts = vec![g(0, 0, (0.5, 0.5, 0.2, 0.2))];
+        let e = average_precision(&[], &gts, 1);
+        assert_eq!(e.ap, 0.0);
+    }
+
+    #[test]
+    fn false_positive_lowers_precision_not_recall() {
+        let gts = vec![g(0, 0, (0.5, 0.5, 0.2, 0.2))];
+        let dets = vec![
+            d(0, 0, 0.9, (0.5, 0.5, 0.2, 0.2)),
+            d(0, 0, 0.95, (0.1, 0.1, 0.05, 0.05)), // high-scoring FP
+        ];
+        let e = average_precision(&dets, &gts, 1);
+        assert!(e.ap < 1.0);
+        assert!((e.ar50 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loose_box_passes_50_fails_75() {
+        // IoU ~ 0.58: counts at 0.50, not at 0.75
+        let gts = vec![g(0, 0, (0.5, 0.5, 0.30, 0.30))];
+        let dets = vec![d(0, 0, 0.9, (0.55, 0.5, 0.30, 0.30))];
+        let e = average_precision(&dets, &gts, 1);
+        assert!(e.ap50 > 0.9, "{e:?}");
+        assert!(e.ap75 < 0.1, "{e:?}");
+    }
+
+    #[test]
+    fn class_confusion_is_penalized() {
+        let gts = vec![g(0, 1, (0.5, 0.5, 0.2, 0.2))];
+        let dets = vec![d(0, 0, 0.9, (0.5, 0.5, 0.2, 0.2))]; // wrong class
+        let e = average_precision(&dets, &gts, 2);
+        assert_eq!(e.ap, 0.0);
+    }
+}

@@ -1,0 +1,206 @@
+//! Hungarian algorithm (Kuhn-Munkres, O(n^3) Jonker-style potentials) for
+//! minimum-cost bipartite assignment — the DETR matcher substrate.
+
+/// Solve min-cost assignment for an `n x m` cost matrix (row-major).
+/// Returns `assign[row] = Some(col)` for the min(n, m) matched rows.
+pub fn hungarian_min(cost: &[f64], n: usize, m: usize) -> Vec<Option<usize>> {
+    if n == 0 || m == 0 {
+        return vec![None; n];
+    }
+    // pad to square with transposition handled by working on rows <= cols
+    let transpose = n > m;
+    let (rows, cols) = if transpose { (m, n) } else { (n, m) };
+    let at = |r: usize, c: usize| -> f64 {
+        if transpose {
+            cost[c * m + r]
+        } else {
+            cost[r * m + c]
+        }
+    };
+
+    // potentials + matching (1-based internal arrays, classic formulation)
+    let inf = f64::INFINITY;
+    let mut u = vec![0.0; rows + 1];
+    let mut v = vec![0.0; cols + 1];
+    let mut p = vec![0usize; cols + 1]; // p[col] = row matched to col
+    let mut way = vec![0usize; cols + 1];
+    for i in 1..=rows {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; cols + 1];
+        let mut used = vec![false; cols + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=cols {
+                if used[j] {
+                    continue;
+                }
+                let cur = at(i0 - 1, j - 1) - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=cols {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut row_to_col = vec![None; rows];
+    for j in 1..=cols {
+        if p[j] != 0 {
+            row_to_col[p[j] - 1] = Some(j - 1);
+        }
+    }
+    if transpose {
+        // row_to_col maps cost-columns -> cost-rows; invert
+        let mut out = vec![None; n];
+        for (c, r) in row_to_col.into_iter().enumerate() {
+            if let Some(r) = r {
+                out[r] = Some(c);
+            }
+        }
+        out
+    } else {
+        row_to_col
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn total(cost: &[f64], m: usize, assign: &[Option<usize>]) -> f64 {
+        assign
+            .iter()
+            .enumerate()
+            .filter_map(|(r, c)| c.map(|c| cost[r * m + c]))
+            .sum()
+    }
+
+    #[test]
+    fn identity_diagonal() {
+        // strongly diagonal-dominant: optimal is the diagonal
+        let cost = vec![
+            0.0, 9.0, 9.0, //
+            9.0, 0.0, 9.0, //
+            9.0, 9.0, 0.0,
+        ];
+        let a = hungarian_min(&cost, 3, 3);
+        assert_eq!(a, vec![Some(0), Some(1), Some(2)]);
+    }
+
+    #[test]
+    fn classic_example() {
+        // known optimum 5 (1+2+2? -> rows pick 2,1,2)
+        let cost = vec![
+            4.0, 1.0, 3.0, //
+            2.0, 0.0, 5.0, //
+            3.0, 2.0, 2.0,
+        ];
+        let a = hungarian_min(&cost, 3, 3);
+        assert_eq!(total(&cost, 3, &a), 5.0);
+    }
+
+    #[test]
+    fn rectangular_more_rows() {
+        let cost = vec![
+            1.0, 10.0, //
+            10.0, 1.0, //
+            5.0, 5.0,
+        ];
+        let a = hungarian_min(&cost, 3, 2);
+        // only two rows can be matched
+        let matched: Vec<_> = a.iter().flatten().collect();
+        assert_eq!(matched.len(), 2);
+        assert_eq!(total(&cost, 2, &a), 2.0);
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_instances() {
+        testkit::check("hungarian vs brute force", 40, |rng| {
+            let n = rng.usize(1, 5);
+            let m = rng.usize(1, 5);
+            let cost: Vec<f64> = (0..n * m).map(|_| rng.f64() * 10.0).collect();
+            let a = hungarian_min(&cost, n, m);
+            let got = total(&cost, m, &a);
+            // brute force over column permutations of min(n,m) size
+            let best = brute(&cost, n, m);
+            assert!((got - best).abs() < 1e-9, "got {got}, best {best}");
+        });
+    }
+
+    fn brute(cost: &[f64], n: usize, m: usize) -> f64 {
+        let k = n.min(m);
+        let cols: Vec<usize> = (0..m).collect();
+        let rows: Vec<usize> = (0..n).collect();
+        let mut best = f64::INFINITY;
+        // choose k rows (if n > m) and permute columns
+        fn perms(items: &[usize]) -> Vec<Vec<usize>> {
+            if items.len() <= 1 {
+                return vec![items.to_vec()];
+            }
+            let mut out = Vec::new();
+            for (i, &x) in items.iter().enumerate() {
+                let rest: Vec<usize> =
+                    items.iter().enumerate().filter(|(j, _)| *j != i).map(|(_, &v)| v).collect();
+                for mut p in perms(&rest) {
+                    p.insert(0, x);
+                    out.push(p);
+                }
+            }
+            out
+        }
+        fn combos(items: &[usize], k: usize) -> Vec<Vec<usize>> {
+            if k == 0 {
+                return vec![vec![]];
+            }
+            if items.len() < k {
+                return vec![];
+            }
+            let mut out = Vec::new();
+            for i in 0..items.len() {
+                for mut c in combos(&items[i + 1..], k - 1) {
+                    c.insert(0, items[i]);
+                    out.push(c);
+                }
+            }
+            out
+        }
+        for rsel in combos(&rows, k) {
+            for csel in combos(&cols, k) {
+                for cp in perms(&csel) {
+                    let s: f64 = rsel.iter().zip(&cp).map(|(&r, &c)| cost[r * m + c]).sum();
+                    best = best.min(s);
+                }
+            }
+        }
+        best
+    }
+}

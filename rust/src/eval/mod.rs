@@ -1,0 +1,13 @@
+//! Evaluation metrics: BLEU (multi-bleu semantics), classification
+//! accuracy/F1, and COCO-style AP/AR with Hungarian-free greedy IoU
+//! matching over set predictions.
+
+mod bleu;
+mod classify;
+mod detection;
+mod hungarian;
+
+pub use bleu::{bleu, bleu_corpus};
+pub use classify::{accuracy, f1_binary, ClassifyReport};
+pub use detection::{average_precision, DetEval, DetectionBox, GroundTruth};
+pub use hungarian::hungarian_min;

@@ -1,0 +1,208 @@
+//! Candidate softmax unit designs as datapath op sequences.
+//!
+//! Every design computes a length-`n` row in two passes over the elements
+//! (the streaming structure shared by all published units):
+//!
+//!   pass 1, per element: normalize + exponentiate + accumulate
+//!   pass 2, per row:     prepare the normalizer once
+//!   pass 2, per element: produce the output
+//!
+//! The designs:
+//! * `ExactDivider`   — baseline Eq.(2): exp unit + divider.
+//! * `LogTransform`   — [32]/[35]: ln-LUT + subtract + exp, no divider.
+//! * `BasicSplit`     — [26]: LUT-decomposed exp with recovery multiplies,
+//!                      divider still present.
+//! * `Rexp`           — paper §4.1: two LUT reads + ONE multiply.
+//! * `Lut2d`          — paper §4.2: LUT reads + wiring only.
+
+use super::units::OpKind;
+use crate::lut::{lut2d_tables, rexp_tables, Precision};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DesignKind {
+    ExactDivider,
+    LogTransform,
+    BasicSplit,
+    Rexp,
+    Lut2d,
+}
+
+/// A softmax unit design: op recipes + LUT storage.
+#[derive(Clone, Debug)]
+pub struct Design {
+    pub kind: DesignKind,
+    pub prec: Precision,
+    /// ops applied to every element in pass 1
+    pub per_elem_pass1: Vec<OpKind>,
+    /// ops applied once per row between the passes
+    pub per_row: Vec<OpKind>,
+    /// ops applied to every element in pass 2
+    pub per_elem_pass2: Vec<OpKind>,
+    /// LUT/ROM storage the design instantiates
+    pub lut_bytes: usize,
+}
+
+impl Design {
+    pub fn new(kind: DesignKind, prec: Precision) -> Self {
+        use OpKind::*;
+        match kind {
+            DesignKind::ExactDivider => Self {
+                kind,
+                prec,
+                // max-subtract, exp, accumulate
+                per_elem_pass1: vec![Add, ExpUnit, Add],
+                per_row: vec![],
+                // divide by the accumulated sum
+                per_elem_pass2: vec![Div],
+                lut_bytes: 0,
+            },
+            DesignKind::LogTransform => Self {
+                kind,
+                prec,
+                per_elem_pass1: vec![Add, ExpUnit, Add],
+                // ln(sum) once per row
+                per_row: vec![LnUnit],
+                // exp(x - lnsum): subtract + exp
+                per_elem_pass2: vec![Add, ExpUnit],
+                lut_bytes: lut_log_bytes(prec),
+            },
+            DesignKind::BasicSplit => Self {
+                kind,
+                prec,
+                // split exponent: 2 LUT reads + recovery multiply + acc
+                per_elem_pass1: vec![Add, LutRead, LutRead, Mul, Add],
+                per_row: vec![],
+                per_elem_pass2: vec![Div],
+                lut_bytes: 2 * 32 * prec.bytes_per_entry(),
+            },
+            DesignKind::Rexp => {
+                let t = rexp_tables(prec, None);
+                Self {
+                    kind,
+                    prec,
+                    // max-subtract (wiring-adjacent index) + LUT + acc
+                    per_elem_pass1: vec![Add, Shift, LutRead, Add],
+                    // alpha lookup once per row (MSB wiring + read)
+                    per_row: vec![Shift, LutRead],
+                    // one multiply + shift per element
+                    per_elem_pass2: vec![Mul, Shift],
+                    lut_bytes: t.total_bytes(),
+                }
+            }
+            DesignKind::Lut2d => {
+                let t = lut2d_tables(prec, None);
+                Self {
+                    kind,
+                    prec,
+                    per_elem_pass1: vec![Add, Shift, LutRead, Add],
+                    per_row: vec![Shift],
+                    // row-decode ROM + 2-D LUT read, addressed by wiring —
+                    // no arithmetic on the datapath
+                    per_elem_pass2: vec![Shift, LutRead, LutRead],
+                    lut_bytes: t.total_bytes(),
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            DesignKind::ExactDivider => "exact_divider",
+            DesignKind::LogTransform => "log_transform[32]",
+            DesignKind::BasicSplit => "basic_split[26]",
+            DesignKind::Rexp => "rexp(ours)",
+            DesignKind::Lut2d => "lut2d(ours)",
+        }
+    }
+
+    /// Does the design instantiate a divider? (the paper's headline)
+    pub fn has_divider(&self) -> bool {
+        self.all_ops().any(|o| o == OpKind::Div)
+    }
+
+    /// Does pass 2 use a data-dependent multiplier?
+    pub fn has_multiplier(&self) -> bool {
+        self.all_ops().any(|o| o == OpKind::Mul)
+    }
+
+    fn all_ops(&self) -> impl Iterator<Item = OpKind> + '_ {
+        self.per_elem_pass1
+            .iter()
+            .chain(&self.per_row)
+            .chain(&self.per_elem_pass2)
+            .copied()
+    }
+
+    /// Total unit area in adder-equivalents: one instance of each distinct
+    /// functional unit per lane (ROM area accounted via bytes separately).
+    pub fn area_per_lane(&self) -> f64 {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        let mut area = 0.0;
+        for op in self.all_ops() {
+            if seen.insert(op) {
+                area += op.cost(self.prec.w()).area;
+            }
+        }
+        area
+    }
+}
+
+fn lut_log_bytes(prec: Precision) -> usize {
+    // [35]-style log LUT sized like the exp table
+    prec.exp_len() * prec.bytes_per_entry()
+}
+
+/// The design grid used by the HW experiment and bench.
+pub fn all_designs(prec: Precision) -> Vec<Design> {
+    [
+        DesignKind::ExactDivider,
+        DesignKind::LogTransform,
+        DesignKind::BasicSplit,
+        DesignKind::Rexp,
+        DesignKind::Lut2d,
+    ]
+    .into_iter()
+    .map(|k| Design::new(k, prec))
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_designs_have_no_divider() {
+        for p in crate::lut::ALL_PRECISIONS {
+            assert!(!Design::new(DesignKind::Rexp, p).has_divider());
+            assert!(!Design::new(DesignKind::Lut2d, p).has_divider());
+            assert!(Design::new(DesignKind::ExactDivider, p).has_divider());
+            assert!(Design::new(DesignKind::BasicSplit, p).has_divider());
+            assert!(!Design::new(DesignKind::LogTransform, p).has_divider());
+        }
+    }
+
+    #[test]
+    fn lut2d_has_no_multiplier_either() {
+        let d = Design::new(DesignKind::Lut2d, Precision::Uint8);
+        assert!(!d.has_multiplier());
+        let r = Design::new(DesignKind::Rexp, Precision::Uint8);
+        assert!(r.has_multiplier()); // exactly one Mul stage
+    }
+
+    #[test]
+    fn lut_bytes_match_paper() {
+        assert_eq!(Design::new(DesignKind::Rexp, Precision::Uint8).lut_bytes, 24);
+        assert_eq!(Design::new(DesignKind::Lut2d, Precision::Uint8).lut_bytes, 761);
+    }
+
+    #[test]
+    fn area_ordering_matches_claims() {
+        let p = Precision::Uint8;
+        let div = Design::new(DesignKind::ExactDivider, p).area_per_lane();
+        let rexp = Design::new(DesignKind::Rexp, p).area_per_lane();
+        let l2d = Design::new(DesignKind::Lut2d, p).area_per_lane();
+        assert!(rexp < div, "rexp {rexp} vs divider {div}");
+        assert!(l2d < rexp, "lut2d {l2d} vs rexp {rexp}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Hardware simulator: cycle / area / energy model of softmax units.
+//!
+//! The paper's claims are architectural — "no divider", "~700 B of LUT",
+//! "minimal overhead, almost free in a DRAM-based accelerator". This
+//! module makes them measurable on a common cost model: each candidate
+//! design is decomposed into datapath ops whose relative area/energy/
+//! latency follow the published ASIC softmax implementations ([32], [8],
+//! [35]); a simple lane-pipelined execution model then yields cycles per
+//! row, total area and energy per element.
+//!
+//! Absolute numbers are not the point (we have no 65 nm library); the
+//! *ordering and factors* between designs are what the paper argues.
+
+mod design;
+mod pipeline;
+mod units;
+
+pub use design::{all_designs, Design, DesignKind};
+pub use pipeline::{simulate, SimConfig, SimReport};
+pub use units::{Cost, OpKind};

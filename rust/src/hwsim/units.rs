@@ -1,0 +1,107 @@
+//! Datapath op cost table.
+//!
+//! Relative costs (area in adder-equivalents, energy in adder-op units,
+//! latency in cycles) follow the ratios used in the ASIC softmax designs
+//! the paper compares against: a w-bit array multiplier is ~w/2 adder
+//! areas, an SRT/non-restoring divider is ~2 multipliers of area and
+//! iterates ~w cycles unless fully pipelined, an exp unit (LUT + degree-2
+//! polynomial) costs a couple of multipliers, and ROM reads are cheap and
+//! single-cycle. Shifts and MSB "wiring" selections are free (that is the
+//! 2D-LUT method's point).
+
+/// A datapath operation of a softmax unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// w-bit add / subtract / compare (also max-scan steps)
+    Add,
+    /// w-bit integer multiply
+    Mul,
+    /// w-bit divide (iterative, non-pipelined)
+    Div,
+    /// transcendental exp evaluation (poly+LUT unit, as in [17]/[32])
+    ExpUnit,
+    /// transcendental ln evaluation (log-LUT + fit, as in [35])
+    LnUnit,
+    /// LUT/ROM read of a w-bit entry
+    LutRead,
+    /// bit shift / MSB selection — wiring only
+    Shift,
+}
+
+/// Cost triple of one op at bit-width `w`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Cost {
+    /// area in adder-equivalents (amortized per instantiated unit)
+    pub area: f64,
+    /// energy per operation, adder-op units
+    pub energy: f64,
+    /// latency in cycles
+    pub latency: u32,
+    /// true if a new op can issue every cycle (pipelined); false = the
+    /// unit stalls `latency` cycles per op (iterative divider)
+    pub pipelined: bool,
+}
+
+impl OpKind {
+    pub fn cost(self, w: u32) -> Cost {
+        let wf = w as f64;
+        match self {
+            OpKind::Add => Cost { area: 1.0, energy: 1.0, latency: 1, pipelined: true },
+            OpKind::Mul => Cost {
+                area: wf / 2.0,
+                energy: wf / 2.0,
+                latency: 1,
+                pipelined: true,
+            },
+            OpKind::Div => Cost {
+                area: wf,
+                energy: wf * 1.5,
+                latency: w.max(4),
+                pipelined: false,
+            },
+            OpKind::ExpUnit => Cost {
+                area: wf * 1.5,
+                energy: wf,
+                latency: 2,
+                pipelined: true,
+            },
+            OpKind::LnUnit => Cost {
+                area: wf * 1.2,
+                energy: wf * 0.8,
+                latency: 2,
+                pipelined: true,
+            },
+            OpKind::LutRead => Cost { area: 0.0, energy: 0.5, latency: 1, pipelined: true },
+            OpKind::Shift => Cost { area: 0.0, energy: 0.0, latency: 0, pipelined: true },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divider_dominates_area_and_latency() {
+        let w = 8;
+        let div = OpKind::Div.cost(w);
+        let mul = OpKind::Mul.cost(w);
+        let add = OpKind::Add.cost(w);
+        assert!(div.area > mul.area && mul.area > add.area);
+        assert!(div.latency > add.latency);
+        assert!(!div.pipelined);
+    }
+
+    #[test]
+    fn wiring_is_free() {
+        let s = OpKind::Shift.cost(16);
+        assert_eq!(s.area, 0.0);
+        assert_eq!(s.latency, 0);
+    }
+
+    #[test]
+    fn costs_scale_with_width() {
+        assert!(OpKind::Mul.cost(16).area > OpKind::Mul.cost(4).area);
+        assert!(OpKind::Div.cost(15).latency > OpKind::Div.cost(4).latency);
+    }
+}

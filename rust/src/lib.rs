@@ -1,0 +1,52 @@
+//! # lutmax — LUT-based division-free softmax for attention DNNs
+//!
+//! Three-layer reproduction of Vasyltsov & Chang, *Efficient Softmax
+//! Approximation for Deep Neural Networks with Attention Mechanism* (2021):
+//!
+//! * **L1** (build-time python): Pallas kernels for the REXP (§4.1) and
+//!   2D-LUT (§4.2) approximations (`python/compile/kernels/`).
+//! * **L2** (build-time python): JAX models (nmt/bert/detr lite) whose
+//!   attention routes through the L1 kernels; AOT-lowered to HLO text.
+//! * **L3** (this crate): the serving coordinator, PJRT runtime, LUT and
+//!   quantization substrates, bit-exact software models of the paper's
+//!   hardware datapath, a cycle/area/energy hardware simulator, and the
+//!   experiment/benchmark harness that regenerates every table and figure
+//!   of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the rust
+//! binaries are self-contained.
+//!
+//! Module map (see DESIGN.md for the per-experiment index):
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | [`lut`]       | LUT builders, bit-identical to `python/compile/kernels/luts.py` |
+//! | [`quant`]     | integer quantization helpers (PTQ-D int8 affine) |
+//! | [`softmax`]   | bit-exact SW models of the LUT datapaths + baselines |
+//! | [`hwsim`]     | cycle/area/energy simulator of softmax HW designs |
+//! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` |
+//! | [`eval`]      | BLEU / accuracy / F1 / Hungarian-matched AP metrics |
+//! | [`workload`]  | synthetic request & scene generators (load tests) |
+//! | [`coordinator`] | request router, dynamic batcher, server loop |
+//! | [`config`]    | hand-rolled JSON + CLI (serde/clap are offline-unavailable) |
+//! | [`testkit`]   | seeded PRNG + property-test helpers (proptest substitute) |
+//! | [`benchkit`]  | micro-benchmark harness (criterion substitute) |
+
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod hwsim;
+pub mod lut;
+pub mod quant;
+pub mod runtime;
+pub mod softmax;
+pub mod testkit;
+pub mod workload;
+
+/// Default artifacts directory, overridable with `LUTMAX_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("LUTMAX_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

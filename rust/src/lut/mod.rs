@@ -1,0 +1,12 @@
+//! LUT substrate: precisions and table builders, bit-identical to
+//! `python/compile/kernels/luts.py` (asserted against the golden bundle
+//! `artifacts/luts.ltb` by `tests/integration_lut.rs`).
+
+mod precision;
+mod tables;
+
+pub use precision::{Precision, ALL_PRECISIONS};
+pub use tables::{
+    lut2d_tables, lut_alpha, lut_bytes, lut_exp, lut_recip_e, lut_row,
+    lut_sigma, rexp_tables, Lut2dTables, RexpTables, EXP_STEP, SIGMA_ROWS,
+};

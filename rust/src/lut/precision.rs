@@ -1,0 +1,155 @@
+//! Quantization precisions (the paper's int16 / uint8 / uint4 / uint2).
+
+/// A quantization precision: `w` value bits, scale `qmax = 2^w - 1`.
+///
+/// The per-precision table shapes follow Table 8 of the paper (`alpha_len`
+/// is the NLP default; the DETR experiments override it with the 256/320/
+/// 512-entry cases of Table 5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Int16,
+    Uint8,
+    Uint4,
+    Uint2,
+}
+
+pub const ALL_PRECISIONS: [Precision; 4] = [
+    Precision::Int16,
+    Precision::Uint8,
+    Precision::Uint4,
+    Precision::Uint2,
+];
+
+impl Precision {
+    /// Parse `"uint8"` (also accepts spec strings `"uint8:a512"`, ignoring
+    /// the alpha suffix — callers that need it use [`Precision::parse_spec`]).
+    pub fn parse(name: &str) -> Option<Self> {
+        let base = name.split(':').next().unwrap_or(name);
+        Some(match base {
+            "int16" => Self::Int16,
+            "uint8" => Self::Uint8,
+            "uint4" => Self::Uint4,
+            "uint2" => Self::Uint2,
+            _ => return None,
+        })
+    }
+
+    /// Parse a full spec string `"uint8:a512"` -> (precision, alpha_len).
+    pub fn parse_spec(spec: &str) -> Option<(Self, Option<usize>)> {
+        let mut it = spec.splitn(2, ':');
+        let p = Self::parse(it.next()?)?;
+        match it.next() {
+            None => Some((p, None)),
+            Some(s) => {
+                let n = s.strip_prefix('a')?.parse().ok()?;
+                Some((p, Some(n)))
+            }
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Int16 => "int16",
+            Self::Uint8 => "uint8",
+            Self::Uint4 => "uint4",
+            Self::Uint2 => "uint2",
+        }
+    }
+
+    /// value bits (the paper's "bits per entry")
+    pub fn w(self) -> u32 {
+        match self {
+            Self::Int16 => 15,
+            Self::Uint8 => 8,
+            Self::Uint4 => 4,
+            Self::Uint2 => 2,
+        }
+    }
+
+    /// full-scale value `2^w - 1`
+    pub fn qmax(self) -> i32 {
+        (1i32 << self.w()) - 1
+    }
+
+    /// Eq.(4)'s efficient quantization boundary `ceil(ln(qmax))`.
+    pub fn x_q(self) -> usize {
+        (self.qmax() as f64).ln().ceil() as usize
+    }
+
+    /// default LUT_alpha length for NLP workloads (Table 8)
+    pub fn alpha_len(self) -> usize {
+        match self {
+            Self::Uint2 => 7,
+            _ => 16,
+        }
+    }
+
+    /// LUT_exp length for the 2D-LUT method (Table 8)
+    pub fn exp_len(self) -> usize {
+        match self {
+            Self::Int16 | Self::Uint8 => 101,
+            Self::Uint4 => 48,
+            Self::Uint2 => 12,
+        }
+    }
+
+    /// columns of LUT_sigma == assumed max(sum e^x) (Table 8)
+    pub fn sigma_cols(self) -> usize {
+        match self {
+            Self::Int16 | Self::Uint8 => 60,
+            Self::Uint4 => 29,
+            Self::Uint2 => 8,
+        }
+    }
+
+    /// whole bytes per stored entry (paper Tables 5/8 accounting)
+    pub fn bytes_per_entry(self) -> usize {
+        (self.w() as usize).div_ceil(8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(Precision::Int16.qmax(), 32767);
+        assert_eq!(Precision::Uint8.qmax(), 255);
+        assert_eq!(Precision::Uint4.qmax(), 15);
+        assert_eq!(Precision::Uint2.qmax(), 3);
+    }
+
+    #[test]
+    fn x_q_matches_eq4() {
+        assert_eq!(Precision::Int16.x_q(), 11);
+        assert_eq!(Precision::Uint8.x_q(), 6);
+        assert_eq!(Precision::Uint4.x_q(), 3);
+        assert_eq!(Precision::Uint2.x_q(), 2);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in ALL_PRECISIONS {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("float64"), None);
+    }
+
+    #[test]
+    fn parse_spec_alpha() {
+        assert_eq!(
+            Precision::parse_spec("uint8:a512"),
+            Some((Precision::Uint8, Some(512)))
+        );
+        assert_eq!(Precision::parse_spec("int16"), Some((Precision::Int16, None)));
+        assert_eq!(Precision::parse_spec("uint8:b12"), None);
+    }
+
+    #[test]
+    fn bytes_per_entry() {
+        assert_eq!(Precision::Int16.bytes_per_entry(), 2);
+        assert_eq!(Precision::Uint8.bytes_per_entry(), 1);
+        assert_eq!(Precision::Uint2.bytes_per_entry(), 1);
+    }
+}

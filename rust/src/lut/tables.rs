@@ -1,0 +1,205 @@
+//! Table builders — Eq.(4), Eq.(7), Eq.(8)-(10) of the paper.
+//!
+//! Contents must stay bit-identical to `python/compile/kernels/luts.py`
+//! (same f64 expression order); `tests/integration_lut.rs` asserts every
+//! entry against the python-emitted golden bundle.
+
+use super::Precision;
+
+/// step of the 1-D LUT_exp index in x units (paper: scale_ex = 0.1)
+pub const EXP_STEP: f64 = 0.1;
+/// rows of LUT_sigma (numerator e^x quantized in steps of 0.1 over (0, 1])
+pub const SIGMA_ROWS: usize = 11;
+
+/// Eq.(4): `LUT_{1/e}[i] = floor(qmax / e^i)` for `i = 0..=x_q+1`.
+pub fn lut_recip_e(p: Precision) -> Vec<i32> {
+    let qmax = p.qmax() as f64;
+    (0..p.x_q() + 2)
+        .map(|i| (qmax * (-(i as f64)).exp()).floor() as i32)
+        .collect()
+}
+
+/// Eq.(7): `LUT_alpha[j] = floor(qmax / j)`, with `LUT_alpha[0] = qmax`.
+/// Reads at index >= len are defined as 0 (the paper's `LUT_alpha[x_s]=0`).
+pub fn lut_alpha(p: Precision, len: usize) -> Vec<i32> {
+    assert!(len >= 1, "LUT_alpha length must be >= 1");
+    let qmax = p.qmax() as f64;
+    (0..len)
+        .map(|j| {
+            if j == 0 {
+                p.qmax()
+            } else {
+                (qmax / j as f64).floor() as i32
+            }
+        })
+        .collect()
+}
+
+/// 1-D e^x table of the 2D-LUT method: `round(qmax * e^(-k*0.1))`.
+pub fn lut_exp(p: Precision) -> Vec<i32> {
+    let qmax = p.qmax() as f64;
+    (0..p.exp_len())
+        .map(|k| (qmax * (-(k as f64) * EXP_STEP).exp()).round() as i32)
+        .collect()
+}
+
+/// Row-index decode table of the 2D-LUT method: maps the LUT_exp address
+/// k straight to the sigma row (the paper's "first index computed directly
+/// from input x" variant — address-decode wiring, no datapath arithmetic).
+/// Built in the integer domain from LUT_exp so python and rust agree
+/// bit-exactly: `clamp((LUT_exp[k]*10 + qmax/2) / qmax, 0, 10)`.
+pub fn lut_row(p: Precision) -> Vec<i32> {
+    let q = p.qmax();
+    lut_exp(p)
+        .into_iter()
+        .map(|e| ((e * 10 + q / 2) / q).clamp(0, SIGMA_ROWS as i32 - 1))
+        .collect()
+}
+
+/// Eq.(8)-(10): the (11 x cols) quotient table, row-major.
+/// Entry `[i][j-1] = min(qmax, floor(qmax * (i*0.1) / j))`.
+pub fn lut_sigma(p: Precision, cols: usize) -> Vec<i32> {
+    let qmax = p.qmax() as f64;
+    let mut out = Vec::with_capacity(SIGMA_ROWS * cols);
+    for i in 0..SIGMA_ROWS {
+        // mirror python's evaluation order: qmax * (i*0.1) / j
+        let num = qmax * (i as f64 * EXP_STEP);
+        for j in 1..=cols {
+            let v = (num / j as f64).floor();
+            out.push(v.min(qmax) as i32);
+        }
+    }
+    out
+}
+
+/// Storage bytes (Tables 5/8): whole bytes per entry, no sub-byte packing.
+pub fn lut_bytes(p: Precision, entries: usize) -> usize {
+    entries * p.bytes_per_entry()
+}
+
+/// The two 1-D tables of the REXP method (§4.1).
+#[derive(Clone, Debug)]
+pub struct RexpTables {
+    pub prec: Precision,
+    pub recip_e: Vec<i32>,
+    pub alpha: Vec<i32>,
+}
+
+impl RexpTables {
+    pub fn total_bytes(&self) -> usize {
+        lut_bytes(self.prec, self.recip_e.len() + self.alpha.len())
+    }
+}
+
+/// Build REXP tables; `alpha_len = None` uses the NLP default (Table 8).
+pub fn rexp_tables(p: Precision, alpha_len: Option<usize>) -> RexpTables {
+    RexpTables {
+        prec: p,
+        recip_e: lut_recip_e(p),
+        alpha: lut_alpha(p, alpha_len.unwrap_or(p.alpha_len())),
+    }
+}
+
+/// The exp + quotient tables of the 2D-LUT method (§4.2).
+#[derive(Clone, Debug)]
+pub struct Lut2dTables {
+    pub prec: Precision,
+    pub exp: Vec<i32>,
+    /// row-index decode ROM (see [`lut_row`]; wiring, not counted in bytes)
+    pub row: Vec<i32>,
+    /// row-major (SIGMA_ROWS x cols)
+    pub sigma: Vec<i32>,
+    pub cols: usize,
+}
+
+impl Lut2dTables {
+    pub fn total_bytes(&self) -> usize {
+        lut_bytes(self.prec, self.exp.len() + self.sigma.len())
+    }
+
+    #[inline]
+    pub fn sigma_at(&self, row: usize, col1: usize) -> i32 {
+        // col1 is the paper's 1-based denominator index j
+        self.sigma[row * self.cols + (col1 - 1)]
+    }
+}
+
+pub fn lut2d_tables(p: Precision, sigma_cols: Option<usize>) -> Lut2dTables {
+    let cols = sigma_cols.unwrap_or(p.sigma_cols());
+    Lut2dTables {
+        prec: p,
+        exp: lut_exp(p),
+        row: lut_row(p),
+        sigma: lut_sigma(p, cols),
+        cols,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::ALL_PRECISIONS;
+
+    #[test]
+    fn recip_shapes_match_paper() {
+        assert_eq!(lut_recip_e(Precision::Int16).len(), 13);
+        assert_eq!(lut_recip_e(Precision::Uint8).len(), 8);
+        assert_eq!(lut_recip_e(Precision::Uint4).len(), 5);
+    }
+
+    #[test]
+    fn recip_monotone_first_full_last_zero() {
+        for p in ALL_PRECISIONS {
+            let t = lut_recip_e(p);
+            assert_eq!(t[0], p.qmax());
+            assert_eq!(*t.last().unwrap(), 0);
+            assert!(t.windows(2).all(|w| w[0] >= w[1]));
+        }
+    }
+
+    #[test]
+    fn alpha_values_eq7() {
+        let t = lut_alpha(Precision::Uint8, 16);
+        assert_eq!(t[0], 255);
+        assert_eq!(t[1], 255);
+        assert_eq!(t[2], 127);
+        assert_eq!(t[5], 51);
+        assert_eq!(t[15], 17);
+    }
+
+    #[test]
+    fn sigma_shape_and_bounds() {
+        for p in ALL_PRECISIONS {
+            let t = lut2d_tables(p, None);
+            assert_eq!(t.sigma.len(), SIGMA_ROWS * p.sigma_cols());
+            assert!(t.sigma.iter().all(|&v| v >= 0 && v <= p.qmax()));
+            // row 0: zero numerator -> zero everywhere
+            assert!(t.sigma[..t.cols].iter().all(|&v| v == 0));
+        }
+    }
+
+    #[test]
+    fn byte_totals_match_table5_and_8() {
+        assert_eq!(rexp_tables(Precision::Int16, Some(256)).total_bytes(), 538);
+        assert_eq!(rexp_tables(Precision::Int16, Some(320)).total_bytes(), 666);
+        assert_eq!(rexp_tables(Precision::Int16, Some(512)).total_bytes(), 1050);
+        assert_eq!(rexp_tables(Precision::Uint8, Some(256)).total_bytes(), 264);
+        assert_eq!(rexp_tables(Precision::Uint8, Some(512)).total_bytes(), 520);
+        assert_eq!(lut2d_tables(Precision::Int16, None).total_bytes(), 1522);
+        assert_eq!(lut2d_tables(Precision::Uint8, None).total_bytes(), 761);
+        assert_eq!(lut2d_tables(Precision::Uint4, None).total_bytes(), 367);
+        assert_eq!(lut2d_tables(Precision::Uint2, None).total_bytes(), 100);
+        assert_eq!(rexp_tables(Precision::Int16, None).total_bytes(), 58);
+        assert_eq!(rexp_tables(Precision::Uint8, None).total_bytes(), 24);
+        assert_eq!(rexp_tables(Precision::Uint4, None).total_bytes(), 21);
+    }
+
+    #[test]
+    fn sigma_at_indexing() {
+        let t = lut2d_tables(Precision::Uint8, None);
+        // i=10 (e^x = 1.0), j=1 -> floor(255 * 1.0 / 1) = 255
+        assert_eq!(t.sigma_at(10, 1), 255);
+        // i=5 (0.5), j=2 -> floor(255 * 0.5 / 2) = 63
+        assert_eq!(t.sigma_at(5, 2), 63);
+    }
+}

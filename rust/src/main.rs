@@ -1,0 +1,164 @@
+//! `lutmax` CLI — the serving binary.
+//!
+//! Subcommands:
+//!   info                       artifact inventory + LUT summary
+//!   serve  [--task ...]        start the coordinator and run a load test
+//!   softmax [--mode --prec]    one-shot LUT softmax through PJRT
+//!
+//! Experiments and paper tables live in the `exp` binary.
+
+use anyhow::{anyhow, Result};
+use lutmax::config::{Args, ServerConfig};
+use lutmax::coordinator::{Coordinator, Payload, Reply, RouteTable};
+use lutmax::runtime::Tensor;
+use lutmax::testkit::Rng;
+use lutmax::workload;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[
+        "artifacts",
+        "max-batch",
+        "batch-timeout-us",
+        "workers",
+        "queue-depth",
+        "task",
+        "variant",
+        "requests",
+        "rate",
+        "mode",
+        "prec",
+    ])?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("info");
+    match cmd {
+        "info" => info(&args),
+        "serve" => serve(&args),
+        "softmax" => softmax(&args),
+        other => Err(anyhow!(
+            "unknown command {other:?}; expected info | serve | softmax"
+        )),
+    }
+}
+
+fn config(args: &Args) -> Result<ServerConfig> {
+    let mut cfg = ServerConfig {
+        artifacts: lutmax::artifacts_dir(),
+        ..Default::default()
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn info(args: &Args) -> Result<()> {
+    let cfg = config(args)?;
+    let m = lutmax::runtime::Manifest::load(&cfg.artifacts)?;
+    println!("artifacts dir : {}", m.dir.display());
+    println!("artifacts     : {}", m.artifacts.len());
+    let mut kinds = std::collections::BTreeMap::new();
+    for a in m.artifacts.values() {
+        *kinds.entry(a.kind.clone()).or_insert(0usize) += 1;
+    }
+    for (k, n) in kinds {
+        println!("  {k:<8} {n}");
+    }
+    println!("models        : {:?}", m.param_order.keys().collect::<Vec<_>>());
+    for p in lutmax::lut::ALL_PRECISIONS {
+        let r = lutmax::lut::rexp_tables(p, None);
+        let l = lutmax::lut::lut2d_tables(p, None);
+        println!(
+            "LUT {:>5}: rexp {:>4} B   2d-lut {:>5} B",
+            p.name(),
+            r.total_bytes(),
+            l.total_bytes()
+        );
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = config(args)?;
+    let task = args.opt("task").unwrap_or("translate");
+    let variant = args
+        .opt("variant")
+        .unwrap_or("nmt14__ptqd__rexp__uint8")
+        .to_string();
+    let requests = args.opt_usize("requests", 64)?;
+    let rate = args.opt_f64("rate", 200.0)?;
+
+    let mut routes = RouteTable::default();
+    match task {
+        "translate" => routes.translate = Some(variant.clone()),
+        "classify" => routes.classify = Some(variant.clone()),
+        "detect" => routes.detect = Some(variant.clone()),
+        other => return Err(anyhow!("unknown task {other:?}")),
+    }
+    println!("starting coordinator: task={task} variant={variant}");
+    let coordinator = Coordinator::start(cfg, routes)?;
+
+    let mut rng = Rng::new(7);
+    let gaps = workload::poisson_arrivals_us(&mut rng, requests, rate);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for gap in gaps {
+        std::thread::sleep(std::time::Duration::from_micros(gap));
+        let payload = match task {
+            "translate" => Payload::Translate(workload::random_src_row(&mut rng, 20, 64)),
+            "classify" => Payload::Classify(workload::random_cls_row(&mut rng, 24, 64)),
+            _ => Payload::Detect(workload::random_image(&mut rng, 32, 3)),
+        };
+        match coordinator.submit(payload) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => println!("rejected: {e}"),
+        }
+    }
+    let mut ok = 0;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Reply::Error(e)) => println!("error: {e}"),
+            Ok(_) => ok += 1,
+            Err(_) => println!("dropped"),
+        }
+    }
+    let dt = t0.elapsed();
+    let stats = coordinator.stats()?;
+    println!(
+        "served {ok}/{requests} in {:.2}s ({:.1} req/s)",
+        dt.as_secs_f64(),
+        ok as f64 / dt.as_secs_f64()
+    );
+    for (task, m) in &stats.per_task {
+        if m.requests == 0 {
+            continue;
+        }
+        println!(
+            "  {task:<10} n={:<5} mean batch {:.2}  latency p50 {} us  p99 {} us",
+            m.requests,
+            m.mean_batch_size(),
+            m.latency.percentile_us(0.50),
+            m.latency.percentile_us(0.99),
+        );
+    }
+    println!("  pjrt executions: {}", stats.executions);
+    coordinator.shutdown()
+}
+
+fn softmax(args: &Args) -> Result<()> {
+    let cfg = config(args)?;
+    let mode = args.opt("mode").unwrap_or("rexp");
+    let prec = args.opt("prec").unwrap_or("uint8");
+    let name = format!("softmax__{mode}__{prec}");
+    let mut routes = RouteTable::default();
+    routes.softmax = Some(name.clone());
+    let coordinator = Coordinator::start(cfg, routes)?;
+    let mut rng = Rng::new(1);
+    let x = Tensor::f32(vec![4, 64], rng.normal_vec(4 * 64, 2.0));
+    match coordinator.call(Payload::Softmax(x))? {
+        Reply::Softmax(t) => {
+            let row = t.row_f32(0)?;
+            let sum: f32 = row.iter().sum();
+            println!("{name}: row0 sum = {sum:.4}, first 8 = {:?}", &row[..8]);
+        }
+        Reply::Error(e) => return Err(anyhow!(e)),
+        _ => unreachable!(),
+    }
+    coordinator.shutdown()
+}

@@ -1,0 +1,94 @@
+//! Integer quantization substrate (PTQ-D int8 per-tensor affine, mirroring
+//! `python/compile/quant.py` / torch dynamic quantization defaults).
+
+/// int8 range of the affine scheme
+pub const QMIN: i32 = -128;
+pub const QMAX: i32 = 127;
+
+/// Per-tensor affine parameters covering `[min(x), max(x)] U {0}`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Affine {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl Affine {
+    pub fn fit(x: &[f32]) -> Self {
+        let (mut lo, mut hi) = (0.0f32, 0.0f32);
+        for &v in x {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let scale = ((hi - lo) / (QMAX - QMIN) as f32).max(1e-12);
+        let zp = (QMIN as f32 - lo / scale).round().clamp(QMIN as f32, QMAX as f32);
+        Self { scale, zero_point: zp as i32 }
+    }
+
+    #[inline]
+    pub fn quantize(&self, v: f32) -> i8 {
+        ((v / self.scale).round() as i32 + self.zero_point).clamp(QMIN, QMAX) as i8
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+}
+
+/// Quantize a tensor; returns (int8 data, affine params).
+pub fn quantize(x: &[f32]) -> (Vec<i8>, Affine) {
+    let a = Affine::fit(x);
+    (x.iter().map(|&v| a.quantize(v)).collect(), a)
+}
+
+/// Quantize-dequantize round trip ("fake quant") — the graph-side op.
+pub fn fake_quant(x: &[f32]) -> Vec<f32> {
+    let a = Affine::fit(x);
+    x.iter().map(|&v| a.dequantize(a.quantize(v))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        testkit::check("affine roundtrip", 25, |rng| {
+            let n = rng.usize(2, 200);
+            let x = rng.normal_vec(n, 2.0);
+            let a = Affine::fit(&x);
+            for &v in &x {
+                let err = (a.dequantize(a.quantize(v)) - v).abs();
+                assert!(err <= a.scale * 0.5 + 1e-6, "err {err} scale {}", a.scale);
+            }
+        });
+    }
+
+    #[test]
+    fn zero_maps_near_zero() {
+        // affine with zero in range keeps 0 representable within half a step
+        let x = vec![-1.0, 0.0, 3.0];
+        let a = Affine::fit(&x);
+        assert!(a.dequantize(a.quantize(0.0)).abs() <= a.scale * 0.5);
+    }
+
+    #[test]
+    fn constant_tensor() {
+        let (q, a) = quantize(&[0.5; 8]);
+        for &v in &q {
+            assert!((a.dequantize(v) - 0.5).abs() <= a.scale);
+        }
+    }
+
+    #[test]
+    fn fake_quant_idempotent() {
+        let mut rng = testkit::Rng::new(2);
+        let x = rng.normal_vec(64, 1.0);
+        let once = fake_quant(&x);
+        let twice = fake_quant(&once);
+        for (a, b) in once.iter().zip(&twice) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

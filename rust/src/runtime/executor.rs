@@ -1,0 +1,339 @@
+//! PJRT executor: load HLO text artifacts, compile once, execute many.
+//!
+//! HLO *text* is the interchange format (jax >= 0.5 emits HloModuleProto
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids — /opt/xla-example/README.md).
+//!
+//! PJRT handles in the `xla` crate are `Rc`-based and thread-confined, so
+//! an [`Engine`] lives on ONE thread; the coordinator talks to it through
+//! channels (see `coordinator::server`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensor::{Tensor, TensorData};
+use super::tensorio;
+
+/// A compiled artifact plus device-resident weight + LUT-table buffers.
+pub struct ModelRunner {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    weights: Rc<Vec<xla::PjRtBuffer>>,
+    /// LUT operands rebuilt from the lut substrate per (mode, spec) — the
+    /// paper's reconfigure-on-demand: swap tables without recompiling
+    tables: Vec<xla::PjRtBuffer>,
+    pub meta: ArtifactMeta,
+}
+
+/// LUT operands a (mode, spec) pair requires, in artifact order — mirrors
+/// `python/compile/model.py::variant_tables`.
+pub fn mode_tables(mode: &str, spec: &str) -> Result<Vec<Tensor>> {
+    use crate::lut::{lut2d_tables, lut_recip_e, rexp_tables, Precision, SIGMA_ROWS};
+
+    let parse = || {
+        Precision::parse_spec(spec)
+            .ok_or_else(|| anyhow!("bad precision spec {spec:?}"))
+    };
+    Ok(match mode {
+        "rexp" => {
+            let (p, alpha_len) = parse()?;
+            let t = rexp_tables(p, alpha_len);
+            vec![
+                Tensor::i32(vec![t.recip_e.len()], t.recip_e),
+                Tensor::i32(vec![t.alpha.len()], t.alpha),
+            ]
+        }
+        "lut2d" => {
+            let (p, _) = parse()?;
+            let t = lut2d_tables(p, None);
+            vec![
+                Tensor::i32(vec![t.exp.len()], t.exp),
+                Tensor::i32(vec![t.row.len()], t.row),
+                Tensor::i32(vec![SIGMA_ROWS, t.cols], t.sigma),
+            ]
+        }
+        "aggressive" => {
+            let (p, _) = parse()?;
+            let r = lut_recip_e(p);
+            vec![Tensor::i32(vec![r.len()], r)]
+        }
+        _ => vec![],
+    })
+}
+
+/// Thread-confined PJRT engine with executable + weight caches.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    weights: RefCell<HashMap<String, Rc<Vec<xla::PjRtBuffer>>>>,
+    /// executions performed (metrics)
+    pub exec_count: RefCell<u64>,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| "loading manifest (run `make artifacts` first?)")?;
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Self {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest name.
+    pub fn compile(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.hlo_path(&meta);
+        let proto = xla::HloModuleProto::from_text_file(&path).map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).map_err(wrap)?);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Device-resident weight buffers for `(model, weights)`, loaded from
+    /// `weights_<model>_<weights>.ltb` in manifest param order and cached.
+    pub fn weight_buffers(
+        &self,
+        model: &str,
+        weights: &str,
+    ) -> Result<Rc<Vec<xla::PjRtBuffer>>> {
+        let key = format!("{model}_{weights}");
+        if let Some(w) = self.weights.borrow().get(&key) {
+            return Ok(w.clone());
+        }
+        let path = self.manifest.dir.join(format!("weights_{key}.ltb"));
+        let bundle = tensorio::read_bundle(&path)?;
+        // bundle keys are "NNN:leaf/path" — numeric prefix fixes the order
+        let mut entries: Vec<_> = bundle.into_iter().collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut bufs = Vec::with_capacity(entries.len());
+        for (_, t) in entries {
+            bufs.push(self.host_to_device(&t)?);
+        }
+        let rc = Rc::new(bufs);
+        self.weights.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    pub fn host_to_device(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let b = match &t.data {
+            TensorData::F32(v) => self
+                .client
+                .buffer_from_host_buffer(v, &t.dims, None)
+                .map_err(wrap)?,
+            TensorData::I32(v) => self
+                .client
+                .buffer_from_host_buffer(v, &t.dims, None)
+                .map_err(wrap)?,
+        };
+        Ok(b)
+    }
+
+    /// Build a [`ModelRunner`] for a model-variant artifact.
+    pub fn model_runner(&self, artifact_name: &str) -> Result<ModelRunner> {
+        let meta = self.manifest.artifact(artifact_name)?.clone();
+        let model = meta
+            .model
+            .clone()
+            .ok_or_else(|| anyhow!("{artifact_name} is not a model artifact"))?;
+        let weights = meta
+            .weights
+            .clone()
+            .ok_or_else(|| anyhow!("{artifact_name} has no weights field"))?;
+        let table_tensors = mode_tables(&meta.mode, &meta.spec)?;
+        if table_tensors.len() != meta.tables {
+            bail!(
+                "{artifact_name}: manifest declares {} table operands, lut \
+                 substrate built {}",
+                meta.tables,
+                table_tensors.len()
+            );
+        }
+        let tables = table_tensors
+            .iter()
+            .map(|t| self.host_to_device(t))
+            .collect::<Result<_>>()?;
+        Ok(ModelRunner {
+            exe: self.compile(artifact_name)?,
+            weights: self.weight_buffers(&model, &weights)?,
+            tables,
+            meta,
+        })
+    }
+
+    /// Execute a *standalone* artifact (no weights), literals in/out.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.compile(name)?;
+        let bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| self.host_to_device(t))
+            .collect::<Result<_>>()?;
+        self.run_exe(&exe, &bufs)
+    }
+
+    pub(crate) fn run_exe(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        *self.exec_count.borrow_mut() += 1;
+        let outputs = exe.execute_b(args).map_err(wrap)?;
+        let first = outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no output from executable"))?;
+        let mut tensors = Vec::new();
+        for buf in first {
+            let lit = buf.to_literal_sync().map_err(wrap)?;
+            // lowering uses return_tuple=True -> a single tuple output
+            for t in untuple(lit)? {
+                tensors.push(t);
+            }
+        }
+        Ok(tensors)
+    }
+
+    /// Execute a model runner with some inputs already device-resident
+    /// (§Perf: the NMT decode loop keeps memory/src on device across the
+    /// up-to-20 step executions instead of re-uploading per step).
+    /// `inputs[i] = None` means "use `device_inputs` next in order".
+    pub fn run_model_mixed(
+        &self,
+        runner: &ModelRunner,
+        inputs: &[Option<&Tensor>],
+        device_inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        if inputs.len() != runner.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                runner.meta.name,
+                runner.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut host_bufs = Vec::new();
+        for t in inputs.iter().flatten() {
+            host_bufs.push(self.host_to_device(t)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = runner.weights.iter().collect();
+        args.extend(runner.tables.iter());
+        let mut hi = 0;
+        let mut di = 0;
+        for t in inputs {
+            match t {
+                Some(_) => {
+                    args.push(&host_bufs[hi]);
+                    hi += 1;
+                }
+                None => {
+                    args.push(
+                        device_inputs
+                            .get(di)
+                            .copied()
+                            .ok_or_else(|| anyhow!("missing device input {di}"))?,
+                    );
+                    di += 1;
+                }
+            }
+        }
+        *self.exec_count.borrow_mut() += 1;
+        let outputs = runner.exe.execute_b(&args).map_err(wrap)?;
+        let first = outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no output"))?;
+        let mut tensors = Vec::new();
+        for buf in first {
+            let lit = buf.to_literal_sync().map_err(wrap)?;
+            for t in untuple(lit)? {
+                tensors.push(t);
+            }
+        }
+        Ok(tensors)
+    }
+
+    /// Execute a model runner: weights are prepended to the inputs.
+    pub fn run_model(&self, runner: &ModelRunner, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        // signature check against the manifest
+        if inputs.len() != runner.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                runner.meta.name,
+                runner.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, (dims, _)) in inputs.iter().zip(&runner.meta.inputs) {
+            t.expect_dims(dims)
+                .with_context(|| runner.meta.name.clone())?;
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = runner.weights.iter().collect();
+        args.extend(runner.tables.iter());
+        let input_bufs: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|t| self.host_to_device(t))
+            .collect::<Result<_>>()?;
+        args.extend(input_bufs.iter());
+        // execute_b takes Borrow<PjRtBuffer>; &PjRtBuffer works
+        *self.exec_count.borrow_mut() += 1;
+        let outputs = runner.exe.execute_b(&args).map_err(wrap)?;
+        let first = outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no output"))?;
+        let mut tensors = Vec::new();
+        for buf in first {
+            let lit = buf.to_literal_sync().map_err(wrap)?;
+            for t in untuple(lit)? {
+                tensors.push(t);
+            }
+        }
+        Ok(tensors)
+    }
+}
+
+/// Convert a (possibly tuple) literal into host tensors.
+fn untuple(lit: xla::Literal) -> Result<Vec<Tensor>> {
+    let shape = lit.shape().map_err(wrap)?;
+    match shape {
+        xla::Shape::Tuple(_) => {
+            let mut lit = lit;
+            let parts = lit.decompose_tuple().map_err(wrap)?;
+            let mut out = Vec::new();
+            for p in parts {
+                out.extend(untuple(p)?);
+            }
+            Ok(out)
+        }
+        xla::Shape::Array(a) => {
+            let dims: Vec<usize> = a.dims().iter().map(|&d| d as usize).collect();
+            match a.ty() {
+                xla::ElementType::F32 => {
+                    Ok(vec![Tensor::f32(dims, lit.to_vec::<f32>().map_err(wrap)?)])
+                }
+                xla::ElementType::S32 => {
+                    Ok(vec![Tensor::i32(dims, lit.to_vec::<i32>().map_err(wrap)?)])
+                }
+                t => bail!("unsupported output element type {t:?}"),
+            }
+        }
+        s => bail!("unsupported output shape {s:?}"),
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

@@ -1,0 +1,162 @@
+//! `artifacts/manifest.json` — the index the runtime loads everything from.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Json;
+
+/// One lowered HLO artifact (a model graph or a standalone softmax kernel).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// enc / dec / cls / det / softmax
+    pub kind: String,
+    pub model: Option<String>,
+    pub weights: Option<String>,
+    pub mode: String,
+    pub spec: String,
+    pub file: String,
+    /// number of LUT-table operands the artifact takes between the weights
+    /// and the data inputs (rebuilt by the rust lut substrate at load)
+    pub tables: usize,
+    /// non-weight, non-table input signature (shape, dtype) in call order
+    pub inputs: Vec<(Vec<usize>, String)>,
+}
+
+/// Parsed manifest + typed views of the fields the runtime needs.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    /// model name -> ordered param leaf names (the HLO parameter order)
+    pub param_order: BTreeMap<String, Vec<String>>,
+    /// model name -> (fp32_bytes, ptqd_bytes) for Table 4
+    pub model_bytes: BTreeMap<String, (usize, usize)>,
+    pub nmt_max_src: usize,
+    pub nmt_max_tgt: usize,
+    pub nmt_vocab: usize,
+    pub batch_nmt: usize,
+    pub batch_cls: usize,
+    pub batch_detr: usize,
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let raw = Json::parse_file(&dir.join("manifest.json"))?;
+        let mut artifacts = BTreeMap::new();
+        for a in raw
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts not an array"))?
+        {
+            let name = a.req("name")?.as_str().unwrap_or_default().to_string();
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| {
+                    let dims = i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default();
+                    let dt = i
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string();
+                    (dims, dt)
+                })
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    kind: a.req("kind")?.as_str().unwrap_or_default().into(),
+                    model: a.get("model").and_then(Json::as_str).map(Into::into),
+                    weights: a.get("weights").and_then(Json::as_str).map(Into::into),
+                    mode: a.get("mode").and_then(Json::as_str).unwrap_or("").into(),
+                    spec: a.get("spec").and_then(Json::as_str).unwrap_or("").into(),
+                    file: a.req("file")?.as_str().unwrap_or_default().into(),
+                    tables: a.get("tables").and_then(Json::as_usize).unwrap_or(0),
+                    inputs,
+                },
+            );
+        }
+
+        let mut param_order = BTreeMap::new();
+        let mut model_bytes = BTreeMap::new();
+        if let Some(w) = raw.get("weights").and_then(Json::as_obj) {
+            for (model, meta) in w {
+                let order = meta
+                    .get("param_order")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(Json::as_str)
+                            .map(String::from)
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                param_order.insert(model.clone(), order);
+                let fp = meta
+                    .get("fp32_bytes")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0);
+                let pq = meta
+                    .get("ptqd_bytes")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0);
+                model_bytes.insert(model.clone(), (fp, pq));
+            }
+        }
+
+        let g = |a: &str, b: &str, d: usize| -> usize {
+            raw.get(a)
+                .and_then(|v| v.get(b))
+                .and_then(Json::as_usize)
+                .unwrap_or(d)
+        };
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            artifacts,
+            param_order,
+            model_bytes,
+            nmt_max_src: g("nmt", "max_src", 20),
+            nmt_max_tgt: g("nmt", "max_tgt", 21),
+            nmt_vocab: g("nmt", "vocab", 64),
+            batch_nmt: g("batch", "nmt", 8),
+            batch_cls: g("batch", "cls", 8),
+            batch_detr: g("batch", "detr", 4),
+            raw,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// All artifacts of a given model (e.g. "nmt14"), sorted by name.
+    pub fn model_artifacts(&self, model: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts
+            .values()
+            .filter(|a| a.model.as_deref() == Some(model))
+            .collect()
+    }
+
+    /// Variant name prefix -> artifact of the given kind, e.g.
+    /// (`"nmt14__ptqd__rexp__uint8"`, `"dec"`).
+    pub fn variant_artifact(&self, variant: &str, kind: &str) -> Result<&ArtifactMeta> {
+        self.artifact(&format!("{variant}__{kind}"))
+    }
+}

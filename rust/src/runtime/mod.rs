@@ -1,0 +1,12 @@
+//! PJRT runtime: artifact manifest, LTB tensor bundles, and the engine
+//! that compiles `artifacts/*.hlo.txt` once and executes them from the
+//! request path.
+
+mod executor;
+mod manifest;
+mod tensor;
+pub mod tensorio;
+
+pub use executor::{mode_tables, Engine, ModelRunner};
+pub use manifest::{ArtifactMeta, Manifest};
+pub use tensor::{Tensor, TensorData};

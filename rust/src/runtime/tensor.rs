@@ -1,0 +1,102 @@
+//! Host-side tensor type crossing the L3 <-> PJRT boundary.
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self { dims, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Self::f32(dims, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "float32",
+            TensorData::I32(_) => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is int32, expected float32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is float32, expected int32")),
+        }
+    }
+
+    /// Row `i` of a 2-D tensor, as a slice.
+    pub fn row_f32(&self, i: usize) -> Result<&[f32]> {
+        let n = *self.dims.last().ok_or_else(|| anyhow!("0-d tensor"))?;
+        let v = self.as_f32()?;
+        Ok(&v[i * n..(i + 1) * n])
+    }
+
+    pub fn row_i32(&self, i: usize) -> Result<&[i32]> {
+        let n = *self.dims.last().ok_or_else(|| anyhow!("0-d tensor"))?;
+        let v = self.as_i32()?;
+        Ok(&v[i * n..(i + 1) * n])
+    }
+
+    /// Check dims match, for validating artifact input signatures.
+    pub fn expect_dims(&self, dims: &[usize]) -> Result<()> {
+        if self.dims != dims {
+            bail!("shape mismatch: got {:?}, expected {:?}", self.dims, dims);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_and_rows() {
+        let t = Tensor::f32(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.row_f32(1).unwrap(), &[3., 4., 5.]);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn expect_dims() {
+        let t = Tensor::i32(vec![4], vec![1, 2, 3, 4]);
+        assert!(t.expect_dims(&[4]).is_ok());
+        assert!(t.expect_dims(&[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! LTB1 tensor bundles — rust side of `python/compile/tensorio.py`.
+//!
+//! Layout (little-endian): magic `LTB1`, u32 count, then per tensor:
+//! u16 name_len + name, u8 dtype (0=f32, 1=i32), u8 ndim, ndim x u32 dims,
+//! raw LE data.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::tensor::{Tensor, TensorData};
+
+const MAGIC: &[u8; 4] = b"LTB1";
+
+pub fn read_bundle(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let bytes = std::fs::read(path).with_context(|| path.display().to_string())?;
+    read_bundle_bytes(&bytes).with_context(|| path.display().to_string())
+}
+
+pub fn read_bundle_bytes(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut r = bytes;
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("bad LTB magic {magic:?}");
+    }
+    let count = read_u32(&mut r)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = read_u16(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)?;
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr)?;
+        let (dtype, ndim) = (hdr[0], hdr[1] as usize);
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let data = match dtype {
+            0 => {
+                let mut buf = vec![0u8; n * 4];
+                r.read_exact(&mut buf)?;
+                TensorData::F32(
+                    buf.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            1 => {
+                let mut buf = vec![0u8; n * 4];
+                r.read_exact(&mut buf)?;
+                TensorData::I32(
+                    buf.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )
+            }
+            d => bail!("tensor {name}: unknown dtype code {d}"),
+        };
+        out.insert(name, Tensor { dims, data });
+    }
+    Ok(out)
+}
+
+pub fn write_bundle(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        out.extend_from_slice(nb);
+        let code: u8 = match t.data {
+            TensorData::F32(_) => 0,
+            TensorData::I32(_) => 1,
+        };
+        out.push(code);
+        out.push(t.dims.len() as u8);
+        for &d in &t.dims {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+    let mut f = std::fs::File::create(path).with_context(|| path.display().to_string())?;
+    f.write_all(&out)?;
+    Ok(())
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).map_err(|_| anyhow!("truncated LTB"))?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut &[u8]) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b).map_err(|_| anyhow!("truncated LTB"))?;
+    Ok(u16::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::f32(vec![2, 3], vec![1.5; 6]));
+        m.insert("b/c".into(), Tensor::i32(vec![4], vec![-1, 0, 7, 42]));
+        let dir = std::env::temp_dir().join("lutmax_ltb_test.ltb");
+        write_bundle(&dir, &m).unwrap();
+        let back = read_bundle(&dir).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back["a"].dims, vec![2, 3]);
+        assert_eq!(back["a"].as_f32().unwrap(), &[1.5; 6][..]);
+        assert_eq!(back["b/c"].as_i32().unwrap(), &[-1, 0, 7, 42][..]);
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_bundle_bytes(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut m = BTreeMap::new();
+        m.insert("t".into(), Tensor::f32(vec![8], vec![0.0; 8]));
+        let p = std::env::temp_dir().join("lutmax_ltb_trunc.ltb");
+        write_bundle(&p, &m).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.truncate(bytes.len() - 5);
+        assert!(read_bundle_bytes(&bytes).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

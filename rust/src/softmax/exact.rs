@@ -1,0 +1,68 @@
+//! Numerically-stable exact softmax — the fp32 reference datapath
+//! (requires the divider the paper's designs eliminate).
+
+use super::{row_max, SoftmaxEngine};
+
+pub struct SoftmaxExact;
+
+impl SoftmaxEngine for SoftmaxExact {
+    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len() % n, 0);
+        debug_assert_eq!(x.len(), out.len());
+        for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = row_max(row);
+            let mut sum = 0.0f32;
+            for (o, &v) in orow.iter_mut().zip(row) {
+                let e = (v - m).exp();
+                *o = e;
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_sum_to_one() {
+        let x = vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0];
+        let out = SoftmaxExact.apply(&x, 3);
+        for row in out.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6, "sum {s}");
+        }
+    }
+
+    #[test]
+    fn shift_invariant() {
+        let x = vec![0.5, -0.25, 2.0, 1.5];
+        let shifted: Vec<f32> = x.iter().map(|v| v + 1000.0).collect();
+        let a = SoftmaxExact.apply(&x, 4);
+        let b = SoftmaxExact.apply(&shifted, 4);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        let out = SoftmaxExact.apply(&[0.0, 0.0], 2);
+        assert!((out[0] - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn extreme_logits_stable() {
+        let out = SoftmaxExact.apply(&[1.0e4, 1.0e4 - 1.0, 0.0], 3);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,151 @@
+//! 2D-LUT softmax (paper §4.2, Algorithm 2) — bit-exact integer pipeline.
+//!
+//! Per row (matches `kernels/ref.py::lut2d_pipeline`):
+//!   1. `d = max(x) - x`                          (f32)
+//!   2. `k = clamp(trunc(d * 10), 0, len-1)`      — LUT_exp index
+//!   3. `e = LUT_exp[k]`;  `s = sum(e)`
+//!   4. `row = clamp((e*10 + qmax/2) / qmax, 0, 10)`   (rounding divide by
+//!      the constant qmax — a multiply+shift in HW)
+//!   5. `col = clamp(s >> w, 1, cols)`
+//!   6. `out = LUT_sigma[row][col-1] * (1/qmax)`
+//!
+//! No divider and no data-dependent multiplier: the quantized path is
+//! wiring + adds (the paper's headline HW property).
+
+use std::cell::RefCell;
+
+use super::{row_max, SoftmaxEngine};
+use crate::lut::{lut2d_tables, Lut2dTables, Precision};
+
+thread_local! {
+    static SCRATCH: RefCell<Vec<i32>> = const { RefCell::new(Vec::new()) };
+}
+
+pub struct SoftmaxLut2d {
+    tables: Lut2dTables,
+    w: u32,
+    inv_qmax: f32,
+}
+
+impl SoftmaxLut2d {
+    pub fn new(prec: Precision) -> Self {
+        Self::with_tables(lut2d_tables(prec, None))
+    }
+
+    pub fn with_tables(tables: Lut2dTables) -> Self {
+        let w = tables.prec.w();
+        let qmax = tables.prec.qmax();
+        Self { tables, w, inv_qmax: 1.0 / qmax as f32 }
+    }
+
+    pub fn tables(&self) -> &Lut2dTables {
+        &self.tables
+    }
+
+    pub fn run_int(&self, x: &[f32], n: usize, out: &mut [i32]) {
+        let exp_t = &self.tables.exp;
+        let row_t = &self.tables.row;
+        let last = (exp_t.len() - 1) as i32;
+        let cols = self.tables.cols as i32;
+        for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = row_max(row);
+            let mut s: i32 = 0;
+            for (o, &v) in orow.iter_mut().zip(row) {
+                // mirror jnp: (d * 10.0f32) truncated toward zero; keep the
+                // table ADDRESS k so phase 2 is a pure row_t read
+                let k = (((m - v) * 10.0) as i32).clamp(0, last);
+                s += exp_t[k as usize];
+                *o = k;
+            }
+            let col = (s >> self.w).clamp(1, cols) as usize;
+            for o in orow.iter_mut() {
+                let r = row_t[*o as usize] as usize;
+                *o = self.tables.sigma_at(r, col);
+            }
+        }
+    }
+}
+
+impl SoftmaxEngine for SoftmaxLut2d {
+    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len() % n, 0);
+        // §Perf: i32 two-pass + thread-local scratch (see rexp.rs).
+        SCRATCH.with(|cell| {
+            let mut ints = cell.borrow_mut();
+            ints.resize(x.len(), 0);
+            self.run_int(x, n, &mut ints);
+            for (o, &v) in out.iter_mut().zip(ints.iter()) {
+                *o = v as f32 * self.inv_qmax;
+            }
+        });
+    }
+
+    fn name(&self) -> &'static str {
+        "lut2d"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::{SoftmaxEngine, SoftmaxExact};
+    use crate::testkit;
+
+    #[test]
+    fn bounded_and_quantized() {
+        testkit::check("lut2d bounded", 30, |rng| {
+            let n = rng.usize(2, 48);
+            let x = rng.normal_vec(n * 4, 3.0);
+            let e = SoftmaxLut2d::new(Precision::Uint8);
+            for v in e.apply(&x, n) {
+                assert!((0.0..=1.0).contains(&v));
+                let grid = v * 255.0;
+                assert!((grid - grid.round()).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn winner_row_reads_high_sigma() {
+        // a dominant logit with a small sum lands in the top-right of the
+        // table: row 10, col 1 -> sigma = qmax
+        let e = SoftmaxLut2d::new(Precision::Uint8);
+        let out = e.apply(&[10.0, -10.0, -10.0], 3);
+        assert!((out[0] - 1.0).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn close_to_exact_at_int16() {
+        let mut rng = testkit::Rng::new(11);
+        let n = 32;
+        let x = rng.normal_vec(128 * n, 1.5);
+        let approx = SoftmaxLut2d::new(Precision::Int16).apply(&x, n);
+        let exact = SoftmaxExact.apply(&x, n);
+        let mae: f32 = approx
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / approx.len() as f32;
+        assert!(mae < 0.05, "mae {mae}");
+    }
+
+    #[test]
+    fn col_saturates_for_long_rows() {
+        // sum(e^x) beyond the table's max column must saturate, not panic
+        // (the Fig. 4 mechanism for DETR+DC5)
+        let e = SoftmaxLut2d::new(Precision::Uint8);
+        let x = vec![0.0f32; 100]; // sum e^x = 100 > 60 cols
+        let out = e.apply(&x, 100);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn shift_invariant_exactly() {
+        let mut rng = testkit::Rng::new(5);
+        let x = rng.normal_vec(24, 2.0);
+        let shifted: Vec<f32> = x.iter().map(|v| v + 12.0).collect();
+        let e = SoftmaxLut2d::new(Precision::Int16);
+        assert_eq!(e.apply(&x, 24), e.apply(&shifted, 24));
+    }
+}

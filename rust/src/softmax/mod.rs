@@ -1,0 +1,124 @@
+//! Bit-exact software models of the softmax datapaths.
+//!
+//! These are the "HW functional model" of the paper's Algorithms 1 and 2:
+//! the integer stages reproduce, entry for entry, the Pallas kernels and
+//! jnp oracles on the python side (asserted against
+//! `artifacts/golden_softmax.ltb`). They serve three roles:
+//!
+//! 1. the request-path hot loop of the standalone softmax service,
+//! 2. the functional layer under the cycle-accurate [`crate::hwsim`],
+//! 3. the rust-side baseline for the criterion-style benches.
+
+mod exact;
+mod lut2d;
+mod priorart;
+mod rexp;
+
+pub use exact::SoftmaxExact;
+pub use lut2d::SoftmaxLut2d;
+pub use priorart::{SoftmaxAggressive, SoftmaxEq2, SoftmaxEq2Plus};
+pub use rexp::SoftmaxRexp;
+
+use crate::lut::Precision;
+
+/// Shared vocabulary with the python side (`kernels.ref.SOFTMAX_MODES`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Exact,
+    Rexp,
+    Lut2d,
+    PriorartEq2,
+    PriorartEq2Plus,
+    Aggressive,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "exact" => Self::Exact,
+            "rexp" => Self::Rexp,
+            "lut2d" => Self::Lut2d,
+            "priorart_eq2" => Self::PriorartEq2,
+            "priorart_eq2plus" => Self::PriorartEq2Plus,
+            "aggressive" => Self::Aggressive,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Exact => "exact",
+            Self::Rexp => "rexp",
+            Self::Lut2d => "lut2d",
+            Self::PriorartEq2 => "priorart_eq2",
+            Self::PriorartEq2Plus => "priorart_eq2plus",
+            Self::Aggressive => "aggressive",
+        }
+    }
+}
+
+/// A row-wise softmax engine: `run` fills `out` with probabilities for each
+/// length-`n` row of `x` (row-major, `x.len() == rows * n`).
+pub trait SoftmaxEngine: Send + Sync {
+    fn run(&self, x: &[f32], n: usize, out: &mut [f32]);
+
+    fn name(&self) -> &'static str;
+
+    /// convenience: allocate and return the result
+    fn apply(&self, x: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0.0; x.len()];
+        self.run(x, n, &mut out);
+        out
+    }
+}
+
+/// Build an engine by (mode, precision, alpha override) — the L3 dispatch
+/// used by the coordinator and the experiment harness.
+pub fn engine(
+    mode: Mode,
+    prec: Precision,
+    alpha_len: Option<usize>,
+) -> Box<dyn SoftmaxEngine> {
+    match mode {
+        Mode::Exact => Box::new(SoftmaxExact),
+        Mode::Rexp => Box::new(SoftmaxRexp::new(prec, alpha_len)),
+        Mode::Lut2d => Box::new(SoftmaxLut2d::new(prec)),
+        Mode::PriorartEq2 => Box::new(SoftmaxEq2::new(prec)),
+        Mode::PriorartEq2Plus => Box::new(SoftmaxEq2Plus::new(prec)),
+        Mode::Aggressive => Box::new(SoftmaxAggressive::new(prec)),
+    }
+}
+
+/// max of a row (f32, NaN-free inputs assumed — attention scores)
+#[inline]
+pub(crate) fn row_max(row: &[f32]) -> f32 {
+    row.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for m in [
+            Mode::Exact,
+            Mode::Rexp,
+            Mode::Lut2d,
+            Mode::PriorartEq2,
+            Mode::PriorartEq2Plus,
+            Mode::Aggressive,
+        ] {
+            assert_eq!(Mode::parse(m.name()), Some(m));
+        }
+        assert_eq!(Mode::parse("softmax9000"), None);
+    }
+
+    #[test]
+    fn engine_dispatch_names() {
+        let e = engine(Mode::Rexp, Precision::Uint8, None);
+        assert_eq!(e.name(), "rexp");
+        let e = engine(Mode::Exact, Precision::Uint8, None);
+        assert_eq!(e.name(), "exact");
+    }
+}

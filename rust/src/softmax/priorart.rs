@@ -1,0 +1,156 @@
+//! Prior-art softmax baselines (paper Appendix A.1).
+//!
+//! * [`SoftmaxEq2`]      — Eq.(11): `exp(x - ln(sum e^x))`, no max-norm,
+//!   outer exp rounded to the target precision ([32]'s Eq.(2)).
+//! * [`SoftmaxEq2Plus`]  — Eq.(12): same with max-normalization.
+//! * [`SoftmaxAggressive`] — [29]'s raw reciprocal exponentiation
+//!   (Eq.(3)): UNNORMALIZED, collapses attention models (paper Fig. 5).
+//!
+//! These are float-transcendental models (the accuracy experiments run
+//! them through the PJRT artifacts; these rust twins exist for hwsim and
+//! the benches, where 1-ULP libm differences are irrelevant).
+
+use super::{row_max, SoftmaxEngine};
+use crate::lut::{lut_recip_e, Precision};
+
+fn round_to_precision(v: f32, qmax: f32) -> f32 {
+    (v * qmax).round() / qmax
+}
+
+pub struct SoftmaxEq2 {
+    qmax: f32,
+}
+
+impl SoftmaxEq2 {
+    pub fn new(prec: Precision) -> Self {
+        Self { qmax: prec.qmax() as f32 }
+    }
+}
+
+impl SoftmaxEngine for SoftmaxEq2 {
+    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let sum: f32 = row.iter().map(|v| v.exp()).sum();
+            let ln_sum = sum.ln();
+            for (o, &v) in orow.iter_mut().zip(row) {
+                *o = round_to_precision((v - ln_sum).exp(), self.qmax);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "priorart_eq2"
+    }
+}
+
+pub struct SoftmaxEq2Plus {
+    qmax: f32,
+}
+
+impl SoftmaxEq2Plus {
+    pub fn new(prec: Precision) -> Self {
+        Self { qmax: prec.qmax() as f32 }
+    }
+}
+
+impl SoftmaxEngine for SoftmaxEq2Plus {
+    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = row_max(row);
+            let sum: f32 = row.iter().map(|v| (v - m).exp()).sum();
+            let ln_sum = sum.ln();
+            for (o, &v) in orow.iter_mut().zip(row) {
+                *o = round_to_precision((v - m - ln_sum).exp(), self.qmax);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "priorart_eq2plus"
+    }
+}
+
+pub struct SoftmaxAggressive {
+    recip: Vec<i32>,
+    inv_qmax: f32,
+}
+
+impl SoftmaxAggressive {
+    pub fn new(prec: Precision) -> Self {
+        Self {
+            recip: lut_recip_e(prec),
+            inv_qmax: 1.0 / prec.qmax() as f32,
+        }
+    }
+}
+
+impl SoftmaxEngine for SoftmaxAggressive {
+    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        let last = (self.recip.len() - 1) as i32;
+        for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = row_max(row);
+            for (o, &v) in orow.iter_mut().zip(row) {
+                let idx = ((m - v) as i32).clamp(0, last);
+                *o = self.recip[idx as usize] as f32 * self.inv_qmax;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "aggressive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::{SoftmaxEngine, SoftmaxExact};
+    use crate::testkit;
+
+    #[test]
+    fn eq2plus_close_to_exact_before_rounding() {
+        let mut rng = testkit::Rng::new(3);
+        let x = rng.normal_vec(64, 2.0);
+        let a = SoftmaxEq2Plus::new(Precision::Int16).apply(&x, 16);
+        let e = SoftmaxExact.apply(&x, 16);
+        for (u, v) in a.iter().zip(&e) {
+            assert!((u - v).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn eq2_degrades_on_shifted_inputs() {
+        // without max-normalization, large-magnitude inputs overflow exp
+        let x: Vec<f32> = vec![90.0, 91.0, 92.0, 89.0];
+        let out = SoftmaxEq2::new(Precision::Uint8).apply(&x, 4);
+        let exact = SoftmaxExact.apply(&x, 4);
+        let err: f32 = out
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        // exp(90+) is inf in f32 -> ln(inf) = inf -> exp(-inf) = 0 rows
+        assert!(err > 0.1 || out.iter().any(|v| !v.is_finite() || *v == 0.0));
+    }
+
+    #[test]
+    fn aggressive_rows_do_not_normalize() {
+        let mut rng = testkit::Rng::new(4);
+        let x = rng.normal_vec(64, 2.0);
+        let out = SoftmaxAggressive::new(Precision::Uint8).apply(&x, 16);
+        let worst = out
+            .chunks(16)
+            .map(|r| (r.iter().sum::<f32>() - 1.0).abs())
+            .fold(0.0, f32::max);
+        assert!(worst > 0.5, "rows unexpectedly normalized: {worst}");
+    }
+
+    #[test]
+    fn quantization_grid_respected() {
+        let x = vec![0.3, -1.0, 0.7, 2.2];
+        for v in SoftmaxEq2Plus::new(Precision::Uint4).apply(&x, 4) {
+            let g = v * 15.0;
+            assert!((g - g.round()).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! REXP softmax (paper §4.1, Algorithm 1) — bit-exact integer pipeline.
+//!
+//! Datapath per row (matches `kernels/ref.py::rexp_pipeline`):
+//!   1. `d = max(x) - x`                        (f32)
+//!   2. `idx = clamp(trunc(d), 0, len-1)`       — the MSB index
+//!   3. `e = LUT_{1/e}[idx]`
+//!   4. `s = sum(e)`;  `j = s >> w`
+//!   5. `a = if j >= alpha_len { 0 } else { LUT_alpha[j] }`
+//!   6. `sig = (e * a) >> w`;  `out = sig * (1/qmax)`
+//!
+//! No divide anywhere; one integer multiply per element (step 6).
+
+use std::cell::RefCell;
+
+use super::{row_max, SoftmaxEngine};
+use crate::lut::{rexp_tables, Precision, RexpTables};
+
+thread_local! {
+    static SCRATCH: RefCell<Vec<i32>> = const { RefCell::new(Vec::new()) };
+}
+
+pub struct SoftmaxRexp {
+    tables: RexpTables,
+    w: u32,
+    inv_qmax: f32,
+}
+
+impl SoftmaxRexp {
+    pub fn new(prec: Precision, alpha_len: Option<usize>) -> Self {
+        Self::with_tables(rexp_tables(prec, alpha_len))
+    }
+
+    /// Reconfigure-on-demand entry point (the paper's LUT swap property).
+    pub fn with_tables(tables: RexpTables) -> Self {
+        let w = tables.prec.w();
+        let inv_qmax = 1.0 / tables.prec.qmax() as f32;
+        Self { tables, w, inv_qmax }
+    }
+
+    pub fn tables(&self) -> &RexpTables {
+        &self.tables
+    }
+
+    /// Integer-stage output (`sig_int`), useful for bit-exactness tests and
+    /// as the value a fixed-point consumer would read before dequant.
+    pub fn run_int(&self, x: &[f32], n: usize, out: &mut [i32]) {
+        let recip = &self.tables.recip_e;
+        let alpha = &self.tables.alpha;
+        let last = (recip.len() - 1) as i32;
+        for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = row_max(row);
+            let mut s: i32 = 0;
+            for (o, &v) in orow.iter_mut().zip(row) {
+                let idx = ((m - v) as i32).clamp(0, last);
+                let e = recip[idx as usize];
+                *o = e;
+                s += e;
+            }
+            let j = (s >> self.w) as usize;
+            let a = if j >= alpha.len() { 0 } else { alpha[j] };
+            for o in orow.iter_mut() {
+                *o = (*o * a) >> self.w;
+            }
+        }
+    }
+}
+
+impl SoftmaxEngine for SoftmaxRexp {
+    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len() % n, 0);
+        // §Perf: the integer two-pass pipeline vectorizes best on i32
+        // slices; a thread-local scratch keeps the hot loop allocation-free
+        // without losing that codegen.
+        SCRATCH.with(|cell| {
+            let mut ints = cell.borrow_mut();
+            ints.resize(x.len(), 0);
+            self.run_int(x, n, &mut ints);
+            for (o, &v) in out.iter_mut().zip(ints.iter()) {
+                *o = v as f32 * self.inv_qmax;
+            }
+        });
+    }
+
+    fn name(&self) -> &'static str {
+        "rexp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::{SoftmaxEngine, SoftmaxExact};
+    use crate::testkit;
+
+    #[test]
+    fn uniform_row_uint8() {
+        // two equal logits: d = 0 for both, e = qmax; s = 2*qmax;
+        // j = (2*255) >> 8 = 1 -> alpha = 255; sig = (255*255)>>8 = 254.
+        let e = SoftmaxRexp::new(Precision::Uint8, None);
+        let mut out = [0i32; 2];
+        e.run_int(&[1.0, 1.0], 2, &mut out);
+        assert_eq!(out, [254, 254]);
+    }
+
+    #[test]
+    fn output_bounded_unit_interval() {
+        testkit::check("rexp bounded", 30, |rng| {
+            let n = rng.usize(2, 64);
+            let rows = rng.usize(1, 8);
+            let x = rng.normal_vec(rows * n, 3.0);
+            let e = SoftmaxRexp::new(Precision::Uint8, None);
+            for v in e.apply(&x, n) {
+                assert!((0.0..=1.0).contains(&v), "{v}");
+            }
+        });
+    }
+
+    #[test]
+    fn argmax_preserved() {
+        testkit::check("rexp argmax", 30, |rng| {
+            let n = rng.usize(3, 32);
+            let x = rng.normal_vec(n, 2.0);
+            let e = SoftmaxRexp::new(Precision::Int16, None);
+            let out = e.apply(&x, n);
+            let win = x
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .unwrap()
+                .0;
+            let max = out.iter().copied().fold(0.0f32, f32::max);
+            assert_eq!(out[win], max);
+        });
+    }
+
+    #[test]
+    fn shift_invariant_exactly() {
+        testkit::check("rexp shift", 20, |rng| {
+            let n = rng.usize(2, 24);
+            let x = rng.normal_vec(n, 2.0);
+            let shifted: Vec<f32> = x.iter().map(|v| v + 37.5).collect();
+            let e = SoftmaxRexp::new(Precision::Uint8, None);
+            assert_eq!(e.apply(&x, n), e.apply(&shifted, n));
+        });
+    }
+
+    #[test]
+    fn close_to_exact_at_uint8() {
+        let mut rng = testkit::Rng::new(9);
+        let n = 48;
+        let x = rng.normal_vec(256 * n, 2.0);
+        let approx = SoftmaxRexp::new(Precision::Uint8, None).apply(&x, n);
+        let exact = SoftmaxExact.apply(&x, n);
+        let mae: f32 = approx
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / approx.len() as f32;
+        assert!(mae < 0.02, "mae {mae}");
+    }
+
+    #[test]
+    fn alpha_overflow_clips_to_zero() {
+        // enough identical logits that s >> w exceeds the alpha table:
+        // uint8 NLP alpha has 16 entries; 17 equal logits -> j = 16 -> 0.
+        let e = SoftmaxRexp::new(Precision::Uint8, None);
+        let x = vec![0.0f32; 17];
+        let out = e.apply(&x, 17);
+        assert!(out.iter().all(|&v| v == 0.0), "{out:?}");
+        // the DETR-case 256-entry table handles the same row fine
+        let e = SoftmaxRexp::new(Precision::Uint8, Some(256));
+        let out = e.apply(&x, 17);
+        assert!(out.iter().all(|&v| v > 0.0));
+    }
+}

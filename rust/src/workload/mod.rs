@@ -1,0 +1,121 @@
+//! Workload generators for load tests and benches.
+//!
+//! Correctness datasets cross from python via LTB bundles (no mirror
+//! drift); these generators only produce *shapes and arrival processes*
+//! for serving experiments: random token sequences, scenes and Poisson
+//! arrivals matching the evaluation distributions.
+
+use crate::runtime::Tensor;
+use crate::testkit::Rng;
+
+/// Token conventions shared with `python/compile/data.py`.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const FIRST_TOKEN: i32 = 4;
+
+/// A padded random source sentence (content tokens + EOS, PAD right).
+pub fn random_src_row(rng: &mut Rng, max_len: usize, vocab: i32) -> Vec<i32> {
+    let n = rng.usize(4, (max_len - 1).min(14));
+    let mut row = vec![PAD; max_len];
+    for slot in row.iter_mut().take(n) {
+        *slot = rng.int(FIRST_TOKEN as i64, vocab as i64 - 1) as i32;
+    }
+    row[n] = EOS;
+    row
+}
+
+/// A batch of random source rows as an i32 tensor (batch, max_len).
+pub fn random_src_batch(rng: &mut Rng, batch: usize, max_len: usize, vocab: i32) -> Tensor {
+    let mut data = Vec::with_capacity(batch * max_len);
+    for _ in 0..batch {
+        data.extend(random_src_row(rng, max_len, vocab));
+    }
+    Tensor::i32(vec![batch, max_len], data)
+}
+
+/// A random classification row (BOS + content, PAD right).
+pub fn random_cls_row(rng: &mut Rng, max_len: usize, vocab: i32) -> Vec<i32> {
+    let n = rng.usize(6, max_len - 2);
+    let mut row = vec![PAD; max_len];
+    row[0] = BOS;
+    for slot in row.iter_mut().take(n + 1).skip(1) {
+        *slot = rng.int(FIRST_TOKEN as i64, vocab as i64 - 1) as i32;
+    }
+    row
+}
+
+/// A random scene image tensor (H, W, C) with a colored rectangle.
+pub fn random_image(rng: &mut Rng, size: usize, channels: usize) -> Tensor {
+    let mut data = vec![0.5f32; size * size * channels];
+    for v in data.iter_mut() {
+        *v += rng.normal() as f32 * 0.08;
+    }
+    let w = rng.usize(size / 8, size / 2);
+    let h = rng.usize(size / 8, size / 2);
+    let x0 = rng.usize(0, size - w);
+    let y0 = rng.usize(0, size - h);
+    let cls = rng.usize(0, 2);
+    let palette = [[0.9f32, 0.15, 0.1], [0.1, 0.85, 0.2], [0.15, 0.2, 0.95]];
+    for y in y0..y0 + h {
+        for x in x0..x0 + w {
+            for c in 0..channels.min(3) {
+                data[(y * size + x) * channels + c] = palette[cls][c];
+            }
+        }
+    }
+    Tensor::f32(vec![size, size, channels], data)
+}
+
+/// Poisson inter-arrival gaps (in microseconds) for open-loop load tests.
+pub fn poisson_arrivals_us(rng: &mut Rng, count: usize, rate_per_sec: f64) -> Vec<u64> {
+    let mean_us = 1e6 / rate_per_sec;
+    (0..count)
+        .map(|_| {
+            let u = rng.f64().max(1e-12);
+            (-u.ln() * mean_us) as u64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn src_rows_are_well_formed() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let row = random_src_row(&mut rng, 20, 64);
+            assert_eq!(row.len(), 20);
+            let eos = row.iter().position(|&t| t == EOS).expect("has EOS");
+            assert!(row[..eos].iter().all(|&t| t >= FIRST_TOKEN));
+            assert!(row[eos + 1..].iter().all(|&t| t == PAD));
+        }
+    }
+
+    #[test]
+    fn batch_tensor_shape() {
+        let mut rng = Rng::new(2);
+        let t = random_src_batch(&mut rng, 8, 20, 64);
+        assert_eq!(t.dims, vec![8, 20]);
+    }
+
+    #[test]
+    fn image_values_bounded() {
+        let mut rng = Rng::new(3);
+        let t = random_image(&mut rng, 32, 3);
+        assert_eq!(t.dims, vec![32, 32, 3]);
+        let v = t.as_f32().unwrap();
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn poisson_mean_roughly_matches_rate() {
+        let mut rng = Rng::new(4);
+        let gaps = poisson_arrivals_us(&mut rng, 5000, 1000.0); // 1k rps
+        let mean = gaps.iter().sum::<u64>() as f64 / gaps.len() as f64;
+        assert!((mean - 1000.0).abs() < 100.0, "mean {mean}");
+    }
+}

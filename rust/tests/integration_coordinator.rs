@@ -1,0 +1,146 @@
+//! Coordinator integration: the serving loop end to end over real
+//! artifacts (softmax + classification routes), backpressure, batching
+//! and metrics.
+
+use std::time::Duration;
+
+use lutmax::config::ServerConfig;
+use lutmax::coordinator::{Batcher, Coordinator, Payload, Reply, RouteTable};
+use lutmax::runtime::Tensor;
+use lutmax::testkit::Rng;
+use lutmax::workload;
+
+fn have_artifacts() -> bool {
+    lutmax::artifacts_dir().join("manifest.json").exists()
+}
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig {
+        artifacts: lutmax::artifacts_dir(),
+        max_batch: 4,
+        batch_timeout_us: 500,
+        workers: 1,
+        queue_depth: 64,
+    }
+}
+
+#[test]
+fn softmax_service_round_trip() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let routes = RouteTable {
+        softmax: Some("softmax__rexp__uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(server_cfg(), routes).unwrap();
+    let mut rng = Rng::new(1);
+    let x = Tensor::f32(vec![2, 64], rng.normal_vec(2 * 64, 2.0));
+    match c.call(Payload::Softmax(x)).unwrap() {
+        Reply::Softmax(t) => {
+            assert_eq!(t.dims, vec![2, 64]);
+            let s: f32 = t.row_f32(0).unwrap().iter().sum();
+            assert!(s > 0.2 && s < 2.2, "row sum {s}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    c.shutdown().unwrap();
+}
+
+#[test]
+fn classify_batch_of_concurrent_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let routes = RouteTable {
+        classify: Some("sst2__ptqd__rexp__uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(server_cfg(), routes).unwrap();
+    let mut rng = Rng::new(2);
+    let rxs: Vec<_> = (0..10)
+        .map(|_| {
+            c.submit(Payload::Classify(workload::random_cls_row(&mut rng, 24, 64)))
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            Reply::Classify(cls) => assert!(cls == 0 || cls == 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let stats = c.stats().unwrap();
+    let m = &stats.per_task["classify"];
+    assert_eq!(m.requests, 10);
+    assert!(m.batches >= 3, "10 reqs / max_batch 4 -> >= 3 batches");
+    assert!(m.mean_batch_size() > 1.0, "batching never engaged");
+    c.shutdown().unwrap();
+}
+
+#[test]
+fn unrouted_task_gets_error_reply() {
+    if !have_artifacts() {
+        return;
+    }
+    let routes = RouteTable {
+        softmax: Some("softmax__rexp__uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(server_cfg(), routes).unwrap();
+    match c
+        .call(Payload::Classify(vec![0; 24]))
+        .unwrap()
+    {
+        Reply::Error(e) => assert!(e.contains("no classify route"), "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    c.shutdown().unwrap();
+}
+
+#[test]
+fn bad_route_fails_at_startup_not_at_request_time() {
+    if !have_artifacts() {
+        return;
+    }
+    let routes = RouteTable {
+        classify: Some("no_such_variant".into()),
+        ..Default::default()
+    };
+    assert!(Coordinator::start(server_cfg(), routes).is_err());
+}
+
+#[test]
+fn batcher_policy_respects_order() {
+    // FIFO within a task queue
+    let mut b = Batcher::new(3, Duration::from_secs(1));
+    for i in 0..3 {
+        b.push(i);
+    }
+    assert_eq!(b.pop_ready(std::time::Instant::now()), Some(vec![0, 1, 2]));
+}
+
+#[test]
+fn shutdown_drains_pending_with_errors() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = server_cfg();
+    cfg.batch_timeout_us = 5_000_000; // park requests in the queue
+    cfg.max_batch = 64;
+    let routes = RouteTable {
+        softmax: Some("softmax__rexp__uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg, routes).unwrap();
+    let mut rng = Rng::new(3);
+    let rx = c
+        .submit(Payload::Softmax(Tensor::f32(vec![1, 64], rng.normal_vec(64, 1.0))))
+        .unwrap();
+    c.shutdown().unwrap();
+    match rx.recv().unwrap() {
+        Reply::Error(e) => assert!(e.contains("shutting down"), "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+}

@@ -1,0 +1,102 @@
+//! Cross-module evaluation tests: metrics over realistic generated data
+//! and against simple closed-form cases.
+
+use lutmax::eval::{
+    self, average_precision, bleu_corpus, hungarian_min, DetectionBox, GroundTruth,
+};
+use lutmax::testkit;
+
+#[test]
+fn bleu_of_noisy_copies_degrades_smoothly() {
+    // corrupt k of 12 tokens; BLEU must decrease monotonically in k
+    let mut rng = testkit::Rng::new(1);
+    let mut prev = 101.0;
+    for k in 0..6 {
+        let mut pairs = Vec::new();
+        for _ in 0..40 {
+            let rf: Vec<i32> = (0..12).map(|_| rng.int(4, 63) as i32).collect();
+            let mut hyp = rf.clone();
+            for j in 0..k {
+                hyp[j * 2] = 99; // out-of-vocab corruption
+            }
+            pairs.push((hyp, rf));
+        }
+        let b = bleu_corpus(&pairs);
+        assert!(b < prev + 1e-9, "k={k}: {b} !< {prev}");
+        prev = b;
+    }
+}
+
+#[test]
+fn hungarian_used_as_detr_matcher() {
+    // queries x gt cost built like the DETR matcher (class prob + L1);
+    // the assignment must prefer the aligned query
+    let cost = vec![
+        0.1, 5.0, // query 0 close to gt 0
+        5.0, 0.2, // query 1 close to gt 1
+        3.0, 3.0, // spare query
+    ];
+    let a = hungarian_min(&cost, 3, 2);
+    assert_eq!(a[0], Some(0));
+    assert_eq!(a[1], Some(1));
+    assert_eq!(a[2], None);
+}
+
+#[test]
+fn detection_metric_tracks_box_noise() {
+    // AP must fall monotonically (statistically) as box jitter grows
+    let mut rng = testkit::Rng::new(3);
+    let mut gts = Vec::new();
+    for i in 0..60 {
+        gts.push(GroundTruth {
+            image: i,
+            class: (i % 3) as usize,
+            cx: 0.3 + 0.4 * rng.f64(),
+            cy: 0.3 + 0.4 * rng.f64(),
+            w: 0.2 + 0.2 * rng.f64(),
+            h: 0.2 + 0.2 * rng.f64(),
+        });
+    }
+    let eval_with_noise = |noise: f64, rng: &mut testkit::Rng| {
+        let dets: Vec<DetectionBox> = gts
+            .iter()
+            .map(|g| DetectionBox {
+                image: g.image,
+                class: g.class,
+                score: 0.9,
+                cx: g.cx + rng.normal() * noise,
+                cy: g.cy + rng.normal() * noise,
+                w: g.w,
+                h: g.h,
+            })
+            .collect();
+        average_precision(&dets, &gts, 3).ap
+    };
+    let clean = eval_with_noise(0.0, &mut rng);
+    let small = eval_with_noise(0.02, &mut rng);
+    let large = eval_with_noise(0.15, &mut rng);
+    assert!((clean - 1.0).abs() < 1e-9, "clean {clean}");
+    assert!(small <= clean + 1e-9);
+    assert!(large < small, "large {large} !< small {small}");
+}
+
+#[test]
+fn f1_on_imbalanced_labels_beats_trivial_baseline_semantics() {
+    // the MRPC rationale: all-positive prediction gets high accuracy-ish
+    // F1 but the report must expose precision correctly
+    let labels: Vec<i32> = (0..100).map(|i| i32::from(i % 100 < 68)).collect();
+    let all_pos = vec![1i32; 100];
+    let r = eval::ClassifyReport::from_preds(&all_pos, &labels);
+    assert!((r.recall() - 1.0).abs() < 1e-9);
+    assert!((r.precision() - 0.68).abs() < 1e-9);
+    assert!(r.f1() < 0.82);
+}
+
+#[test]
+fn ap_handles_empty_and_degenerate_inputs() {
+    assert_eq!(average_precision(&[], &[], 3).ap, 0.0);
+    let gts = vec![GroundTruth { image: 0, class: 0, cx: 0.5, cy: 0.5, w: 0.1, h: 0.1 }];
+    let e = average_precision(&[], &gts, 3);
+    assert_eq!(e.ap, 0.0);
+    assert_eq!(e.ar, 0.0);
+}

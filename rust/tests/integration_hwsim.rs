@@ -1,0 +1,77 @@
+//! HW-simulator integration: the paper's architectural claims must hold
+//! across the whole (design x precision x geometry) grid.
+
+use lutmax::hwsim::{all_designs, simulate, Design, DesignKind, SimConfig};
+use lutmax::lut::{Precision, ALL_PRECISIONS};
+use lutmax::testkit;
+
+#[test]
+fn proposed_designs_never_lose_across_grid() {
+    // at every precision, row length and lane count, rexp/2d-lut beat the
+    // exact divider design on cycles AND energy
+    testkit::check("hwsim dominance", 25, |rng| {
+        let p = *rng.choice(&ALL_PRECISIONS);
+        let cfg = SimConfig {
+            n: rng.usize(8, 512),
+            rows: rng.usize(1, 64),
+            lanes: rng.usize(1, 16),
+        };
+        let div = simulate(&Design::new(DesignKind::ExactDivider, p), cfg);
+        for kind in [DesignKind::Rexp, DesignKind::Lut2d] {
+            let ours = simulate(&Design::new(kind, p), cfg);
+            assert!(
+                ours.cycles <= div.cycles,
+                "{kind:?}@{} cycles {} > divider {} (cfg {cfg:?})",
+                p.name(),
+                ours.cycles,
+                div.cycles
+            );
+            assert!(ours.energy <= div.energy);
+            assert!(ours.area <= div.area);
+        }
+    });
+}
+
+#[test]
+fn divider_free_claims_hold_for_full_grid() {
+    for p in ALL_PRECISIONS {
+        for d in all_designs(p) {
+            match d.kind {
+                DesignKind::Rexp | DesignKind::Lut2d | DesignKind::LogTransform => {
+                    assert!(!d.has_divider(), "{:?} has a divider", d.kind)
+                }
+                DesignKind::ExactDivider | DesignKind::BasicSplit => {
+                    assert!(d.has_divider())
+                }
+            }
+        }
+        assert!(!Design::new(DesignKind::Lut2d, p).has_multiplier());
+    }
+}
+
+#[test]
+fn cycles_scale_linearly_in_rows() {
+    let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+    let one = simulate(&d, SimConfig { n: 64, rows: 1, lanes: 4 });
+    let many = simulate(&d, SimConfig { n: 64, rows: 10, lanes: 4 });
+    assert_eq!(many.cycles, one.cycles * 10);
+}
+
+#[test]
+fn lut_bytes_are_the_papers_headline_sizes() {
+    assert_eq!(Design::new(DesignKind::Lut2d, Precision::Uint8).lut_bytes, 761);
+    assert_eq!(Design::new(DesignKind::Rexp, Precision::Uint8).lut_bytes, 24);
+    assert_eq!(Design::new(DesignKind::Rexp, Precision::Int16).lut_bytes, 58);
+}
+
+#[test]
+fn speedup_factor_in_plausible_band() {
+    // the divider's iterative stall should put the end-to-end advantage
+    // of the LUT designs in the single-digit-x band for typical rows
+    // (not 1.0x, not absurd)
+    let cfg = SimConfig { n: 128, rows: 256, lanes: 4 };
+    let div = simulate(&Design::new(DesignKind::ExactDivider, Precision::Uint8), cfg);
+    let l2d = simulate(&Design::new(DesignKind::Lut2d, Precision::Uint8), cfg);
+    let speedup = div.cycles as f64 / l2d.cycles as f64;
+    assert!((1.5..50.0).contains(&speedup), "speedup {speedup}");
+}

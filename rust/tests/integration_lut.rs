@@ -1,0 +1,93 @@
+//! Golden-file test: rust LUT builders must be bit-identical to the
+//! python builders (artifacts/luts.ltb, written by compile/aot.py).
+
+use lutmax::lut::{self, Precision, ALL_PRECISIONS};
+use lutmax::runtime::tensorio;
+
+fn artifacts() -> std::path::PathBuf {
+    lutmax::artifacts_dir()
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("luts.ltb").exists()
+}
+
+#[test]
+fn lut_tables_match_python_golden() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let bundle = tensorio::read_bundle(&artifacts().join("luts.ltb")).unwrap();
+    for p in ALL_PRECISIONS {
+        let name = p.name();
+        let get = |suffix: &str| -> &[i32] {
+            bundle
+                .get(&format!("{name}/{suffix}"))
+                .unwrap_or_else(|| panic!("golden missing {name}/{suffix}"))
+                .as_i32()
+                .unwrap()
+        };
+        assert_eq!(lut::lut_recip_e(p), get("recip_e"), "{name} recip_e");
+        assert_eq!(
+            lut::lut_alpha(p, p.alpha_len()),
+            get("alpha"),
+            "{name} alpha"
+        );
+        assert_eq!(lut::lut_exp(p), get("exp"), "{name} exp");
+        assert_eq!(
+            lut::lut_sigma(p, p.sigma_cols()),
+            get("sigma"),
+            "{name} sigma"
+        );
+        for alen in [256usize, 320, 512] {
+            assert_eq!(
+                lut::lut_alpha(p, alen),
+                get(&format!("alpha_{alen}")),
+                "{name} alpha_{alen}"
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_lut_bytes_match_rust_accounting() {
+    if !have_artifacts() {
+        return;
+    }
+    let manifest =
+        lutmax::config::Json::parse_file(&artifacts().join("manifest.json")).unwrap();
+    let precs = manifest.req("luts").unwrap().req("precisions").unwrap();
+    for p in ALL_PRECISIONS {
+        let m = precs.req(p.name()).unwrap();
+        assert_eq!(
+            m.req("rexp_bytes").unwrap().as_usize().unwrap(),
+            lut::rexp_tables(p, None).total_bytes(),
+            "{} rexp bytes",
+            p.name()
+        );
+        assert_eq!(
+            m.req("lut2d_bytes").unwrap().as_usize().unwrap(),
+            lut::lut2d_tables(p, None).total_bytes(),
+            "{} 2d bytes",
+            p.name()
+        );
+        assert_eq!(m.req("w").unwrap().as_usize().unwrap(), p.w() as usize);
+        assert_eq!(m.req("qmax").unwrap().as_i64().unwrap(), p.qmax() as i64);
+    }
+}
+
+#[test]
+fn alpha_case_sizes_match_table5() {
+    // independent of artifacts: Table 5 totals
+    for (alpha, want16, want8) in [(256usize, 538, 264), (320, 666, 328), (512, 1050, 520)] {
+        assert_eq!(
+            lut::rexp_tables(Precision::Int16, Some(alpha)).total_bytes(),
+            want16
+        );
+        assert_eq!(
+            lut::rexp_tables(Precision::Uint8, Some(alpha)).total_bytes(),
+            want8
+        );
+    }
+}

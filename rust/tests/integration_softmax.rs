@@ -1,0 +1,113 @@
+//! Bit-exactness of the rust softmax software models against the python
+//! oracle (artifacts/golden_softmax.ltb), plus cross-mode properties.
+
+use lutmax::lut::{Precision, ALL_PRECISIONS};
+use lutmax::runtime::tensorio;
+use lutmax::softmax::{self, Mode, SoftmaxEngine};
+use lutmax::testkit;
+
+fn artifacts() -> std::path::PathBuf {
+    lutmax::artifacts_dir()
+}
+
+#[test]
+fn integer_stage_matches_python_golden() {
+    let path = artifacts().join("golden_softmax.ltb");
+    if !path.exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let bundle = tensorio::read_bundle(&path).unwrap();
+    let x = bundle["x"].as_f32().unwrap();
+    let n = bundle["x"].dims[1];
+    for p in ALL_PRECISIONS {
+        for mode in ["rexp", "lut2d", "aggressive"] {
+            let want = bundle[&format!("{mode}/{}", p.name())].as_i32().unwrap();
+            let engine = softmax::engine(Mode::parse(mode).unwrap(), p, None);
+            let out = engine.apply(x, n);
+            let got: Vec<i32> = out
+                .iter()
+                .map(|&v| (v * p.qmax() as f32).round() as i32)
+                .collect();
+            assert_eq!(got, want, "{mode}/{} integer stage", p.name());
+        }
+    }
+}
+
+#[test]
+fn exact_model_matches_python_exact() {
+    let path = artifacts().join("golden_softmax.ltb");
+    if !path.exists() {
+        return;
+    }
+    let bundle = tensorio::read_bundle(&path).unwrap();
+    let x = bundle["x"].as_f32().unwrap();
+    let n = bundle["x"].dims[1];
+    let want = bundle["exact"].as_f32().unwrap();
+    let got = softmax::engine(Mode::Exact, Precision::Uint8, None).apply(x, n);
+    for (a, b) in got.iter().zip(want) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn approximation_error_ordering_across_precisions() {
+    // property: at equal inputs, increasing precision never increases MAE
+    // (statistically — checked on a large fixed sample)
+    let mut rng = testkit::Rng::new(123);
+    let n = 48;
+    let x = rng.normal_vec(512 * n, 2.0);
+    let exact = softmax::engine(Mode::Exact, Precision::Uint8, None).apply(&x, n);
+    for mode in [Mode::Rexp, Mode::Lut2d] {
+        let mut last = f64::INFINITY;
+        for p in [Precision::Uint2, Precision::Uint4, Precision::Uint8] {
+            let out = softmax::engine(mode, p, None).apply(&x, n);
+            let mae: f64 = out
+                .iter()
+                .zip(&exact)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / out.len() as f64;
+            assert!(
+                mae <= last + 1e-4,
+                "{:?} {} mae {mae} > previous {last}",
+                mode,
+                p.name()
+            );
+            last = mae;
+        }
+    }
+}
+
+#[test]
+fn rexp_reconfigurable_alpha_tables() {
+    // swapping LUT_alpha at runtime changes only the clipping boundary:
+    // rows whose integer sum stays below the short table agree exactly
+    let mut rng = testkit::Rng::new(5);
+    let n = 12;
+    let x = rng.normal_vec(16 * n, 1.0);
+    let small = softmax::engine(Mode::Rexp, Precision::Uint8, Some(16)).apply(&x, n);
+    let big = softmax::engine(Mode::Rexp, Precision::Uint8, Some(512)).apply(&x, n);
+    assert_eq!(small, big, "in-range rows must not depend on table length");
+}
+
+#[test]
+fn all_modes_run_on_edge_shapes() {
+    for mode in [
+        Mode::Exact,
+        Mode::Rexp,
+        Mode::Lut2d,
+        Mode::PriorartEq2,
+        Mode::PriorartEq2Plus,
+        Mode::Aggressive,
+    ] {
+        let e = softmax::engine(mode, Precision::Uint8, None);
+        // single-element rows
+        let out = e.apply(&[1.0, 2.0, 3.0], 1);
+        assert_eq!(out.len(), 3);
+        // single row
+        let out = e.apply(&[0.5, -0.5], 2);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}
