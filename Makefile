@@ -1,0 +1,32 @@
+# lutmax — build / verify / bench entry points.
+#
+# `make artifacts` (python + jax side) is a prerequisite only for the
+# PJRT-backed paths; everything else (software models, hwsim, CPU-fallback
+# serving, benches) runs from the rust tree alone.
+
+.PHONY: all build test bench-smoke bench clean
+
+all: build
+
+build:
+	cargo build --release
+
+# Tier-1 verification: build + full test suite, then exercise the bench
+# path in smoke mode (refreshes the BENCH_*.json trajectory files).
+test:
+	cargo build --release
+	cargo test -q
+
+bench-smoke: test
+	bash scripts/bench_smoke.sh
+
+# full-budget benches (slow; honest numbers for ROADMAP "Performance")
+bench:
+	cargo bench --bench softmax_bench
+	cargo bench --bench hwsim_bench
+	cargo bench --bench eval_bench
+	cargo bench --bench coordinator_bench
+	cargo bench --bench runtime_bench
+
+clean:
+	cargo clean

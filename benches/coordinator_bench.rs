@@ -3,7 +3,7 @@
 
 use std::time::{Duration, Instant};
 
-use lutmax::benchkit::Bench;
+use lutmax::benchkit::{flush_json, Bench};
 use lutmax::config::ServerConfig;
 use lutmax::coordinator::{Batcher, Coordinator, Payload, Reply, RouteTable};
 use lutmax::testkit::Rng;
@@ -23,6 +23,7 @@ fn main() {
     let dir = lutmax::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("coordinator_bench: no artifacts; skipping serving section");
+        flush_json().expect("write BENCH_JSON");
         return;
     }
     let cfg = ServerConfig {
@@ -69,4 +70,8 @@ fn main() {
         m.queue_wait.percentile_us(0.99)
     );
     c.shutdown().unwrap();
+
+    if let Some(path) = flush_json().expect("write BENCH_JSON") {
+        println!("\n[bench] wrote {}", path.display());
+    }
 }

@@ -1,7 +1,7 @@
 //! Metric-substrate benchmarks: BLEU and the Hungarian matcher (these run
 //! inside every experiment sweep; they must never dominate eval time).
 
-use lutmax::benchkit::Bench;
+use lutmax::benchkit::{flush_json, Bench};
 use lutmax::eval::{bleu_corpus, hungarian_min};
 use lutmax::testkit::Rng;
 
@@ -32,5 +32,9 @@ fn main() {
         Bench::new(format!("hungarian/{q}x{o}")).run(|| {
             std::hint::black_box(hungarian_min(&cost, q, o));
         });
+    }
+
+    if let Some(path) = flush_json().expect("write BENCH_JSON") {
+        println!("\n[bench] wrote {}", path.display());
     }
 }

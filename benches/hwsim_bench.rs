@@ -2,8 +2,8 @@
 //! (cycles / area / energy per design) across geometries, and measures
 //! the simulator's own throughput.
 
-use lutmax::benchkit::Bench;
-use lutmax::hwsim::{all_designs, simulate, SimConfig};
+use lutmax::benchkit::{flush_json, Bench};
+use lutmax::hwsim::{all_designs, simulate, simulate_row_parallel, Design, DesignKind, SimConfig};
 use lutmax::lut::Precision;
 
 fn main() {
@@ -35,6 +35,20 @@ fn main() {
         }
     }
 
+    println!("\n=== row-parallel units (rexp uint8, n=128, 1024 rows) ===");
+    println!("{:<8} {:>11} {:>9} {:>9}", "units", "cycles/elem", "area", "LUT B");
+    let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+    for units in [1usize, 2, 4, 8] {
+        let r = simulate_row_parallel(&d, SimConfig { n: 128, rows: 1024, lanes: 4 }, units);
+        println!(
+            "{:<8} {:>11.2} {:>9.1} {:>9}",
+            units,
+            r.cycles_per_elem(),
+            r.area,
+            r.lut_bytes
+        );
+    }
+
     println!("\n=== simulator throughput ===");
     let designs = all_designs(Precision::Uint8);
     for d in &designs {
@@ -44,5 +58,9 @@ fn main() {
             .run(|| {
                 std::hint::black_box(simulate(d, cfg));
             });
+    }
+
+    if let Some(path) = flush_json().expect("write BENCH_JSON") {
+        println!("\n[bench] wrote {}", path.display());
     }
 }

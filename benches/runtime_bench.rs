@@ -2,7 +2,7 @@
 //! softmax kernels and the model steps (the serving inner loops).
 //! Requires `make artifacts`.
 
-use lutmax::benchkit::{Bench, Suite};
+use lutmax::benchkit::{flush_json, Bench, Suite};
 use lutmax::coordinator::{ClsPipeline, NmtPipeline};
 use lutmax::lut::{lut2d_tables, rexp_tables, Precision, SIGMA_ROWS};
 use lutmax::runtime::{Engine, Tensor};
@@ -13,6 +13,7 @@ fn main() {
     let dir = lutmax::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("runtime_bench: no artifacts; run `make artifacts` first");
+        flush_json().expect("write BENCH_JSON");
         return;
     }
     let engine = Engine::new(&dir).unwrap();
@@ -95,4 +96,8 @@ fn main() {
             }),
     );
     println!("\npjrt executions: {}", engine.exec_count.borrow());
+
+    if let Some(path) = flush_json().expect("write BENCH_JSON") {
+        println!("\n[bench] wrote {}", path.display());
+    }
 }

@@ -1,9 +1,18 @@
 //! Softmax software-model benchmarks: the paper's datapaths vs baselines
 //! on the rust hot path (per-element throughput, Table-1-adjacent).
+//!
+//! Labels are STABLE — `BENCH_JSON=BENCH_softmax.json` makes this binary
+//! the repo's perf trajectory file (refreshed by `make bench-smoke`):
+//!   uint8/<mode>          fused single-thread hot path (256 rows x 128)
+//!   rexp/<prec>           precision sweep
+//!   lut2d/n=<n>           row-length scaling
+//!   par/<mode>/w<k>       row-parallel scaling over worker counts
 
-use lutmax::benchkit::{Bench, Suite};
+use std::sync::Arc;
+
+use lutmax::benchkit::{flush_json, Bench, Suite};
 use lutmax::lut::Precision;
-use lutmax::softmax::{engine, Mode};
+use lutmax::softmax::{engine, Mode, ParSoftmax, Scratch, SoftmaxEngine};
 use lutmax::testkit::Rng;
 
 fn main() {
@@ -12,8 +21,9 @@ fn main() {
     let rows = 256usize;
     let x = rng.normal_vec(rows * n, 2.0);
     let mut out = vec![0.0f32; x.len()];
+    let mut scratch = Scratch::new();
 
-    let mut suite = Suite::new("softmax SW models (256 rows x 128)");
+    let mut suite = Suite::new("softmax SW models (256 rows x 128, fused run_with)");
     for mode in [
         Mode::Exact,
         Mode::PriorartEq2Plus,
@@ -24,7 +34,7 @@ fn main() {
         let e = engine(mode, Precision::Uint8, None);
         let r = Bench::new(format!("uint8/{}", mode.name()))
             .items(x.len())
-            .run(|| e.run(&x, n, &mut out));
+            .run(|| e.run_with(&x, n, &mut out, &mut scratch));
         suite.add(r);
     }
     suite.ratio("uint8/rexp", "uint8/exact");
@@ -36,7 +46,7 @@ fn main() {
         suite.add(
             Bench::new(format!("rexp/{}", p.name()))
                 .items(x.len())
-                .run(|| e.run(&x, n, &mut out)),
+                .run(|| e.run_with(&x, n, &mut out, &mut scratch)),
         );
     }
 
@@ -48,7 +58,38 @@ fn main() {
         suite.add(
             Bench::new(format!("lut2d/n={n}"))
                 .items(x.len())
-                .run(|| e.run(&x, n, &mut out)),
+                .run(|| e.run_with(&x, n, &mut out, &mut scratch)),
         );
+    }
+
+    // row-parallel scaling: the same 256x128 batch sharded across workers
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let title = format!("row-parallel softmax (256 rows x 128, {cores} cores available)");
+    let mut suite = Suite::new(&title);
+    // dedup so 2- or 4-core machines don't emit duplicate trajectory labels
+    let mut worker_counts = vec![2usize, 4, cores];
+    worker_counts.sort_unstable();
+    worker_counts.dedup();
+    for mode in [Mode::Rexp, Mode::Lut2d] {
+        for &w in &worker_counts {
+            let p = ParSoftmax::with_workers(Arc::from(engine(mode, Precision::Uint8, None)), w);
+            suite.add(
+                Bench::new(format!("par/{}/w{w}", mode.name()))
+                    .items(x.len())
+                    .run(|| p.run_with(&x, n, &mut out, &mut scratch)),
+            );
+        }
+        if let (Some(&lo), Some(&hi)) = (worker_counts.first(), worker_counts.last()) {
+            if lo != hi {
+                suite.ratio(
+                    &format!("par/{}/w{hi}", mode.name()),
+                    &format!("par/{}/w{lo}", mode.name()),
+                );
+            }
+        }
+    }
+
+    if let Some(path) = flush_json().expect("write BENCH_JSON") {
+        println!("\n[bench] wrote {}", path.display());
     }
 }

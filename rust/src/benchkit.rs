@@ -4,8 +4,45 @@
 //! [`Suite`]: warmup, then timed batches until both a minimum wall-time
 //! and iteration count are reached; reports mean / p50 / p99 per op and
 //! throughput. Set `BENCH_FAST=1` to shrink budgets (CI smoke).
+//!
+//! Set `BENCH_JSON=<path>` and call [`flush_json`] at the end of a bench
+//! binary to dump every recorded result as a JSON array of
+//! `{name, mean_ns, p50_ns, p99_ns, items_per_sec}` — the repo's perf
+//! trajectory files (`BENCH_*.json`, refreshed by `make bench-smoke`).
 
+use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
+fn registry() -> &'static Mutex<Vec<BenchResult>> {
+    static REGISTRY: OnceLock<Mutex<Vec<BenchResult>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Write all results recorded so far to `$BENCH_JSON` (no-op when the
+/// variable is unset). Returns the path written, if any.
+pub fn flush_json() -> std::io::Result<Option<std::path::PathBuf>> {
+    let Some(path) = std::env::var_os("BENCH_JSON") else {
+        return Ok(None);
+    };
+    let path = std::path::PathBuf::from(path);
+    let results = registry().lock().unwrap();
+    let arr = crate::config::Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                crate::jobj![
+                    ("name", r.name.as_str()),
+                    ("mean_ns", r.mean_ns),
+                    ("p50_ns", r.p50_ns),
+                    ("p99_ns", r.p99_ns),
+                    ("items_per_sec", r.items_per_sec()),
+                ]
+            })
+            .collect(),
+    );
+    std::fs::write(&path, arr.to_string_pretty())?;
+    Ok(Some(path))
+}
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -120,6 +157,7 @@ impl Bench {
             items_per_iter: self.items,
         };
         res.report();
+        registry().lock().unwrap().push(res.clone());
         res
     }
 }
@@ -176,5 +214,23 @@ mod tests {
             std::hint::black_box([0u8; 100]);
         });
         assert!(r.items_per_sec() >= r.ops_per_sec());
+    }
+
+    #[test]
+    fn results_land_in_the_registry() {
+        std::env::set_var("BENCH_FAST", "1");
+        Bench::new("registry_probe_xyz").min_time_ms(5).run(|| {
+            std::hint::black_box(2 + 2);
+        });
+        let reg = registry().lock().unwrap();
+        assert!(reg.iter().any(|r| r.name == "registry_probe_xyz"));
+    }
+
+    #[test]
+    fn flush_json_without_env_is_noop() {
+        // BENCH_JSON is deliberately not set in the test environment
+        if std::env::var_os("BENCH_JSON").is_none() {
+            assert!(flush_json().unwrap().is_none());
+        }
     }
 }

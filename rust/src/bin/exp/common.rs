@@ -12,6 +12,7 @@ use lutmax::eval::{self, DetectionBox, GroundTruth};
 use lutmax::hwsim;
 use lutmax::lut::{self, Precision};
 use lutmax::runtime::{tensorio, Engine, Tensor};
+use lutmax::softmax::SoftmaxEngine as _;
 use lutmax::workload::{BOS, EOS, PAD};
 
 /// Write an experiment report JSON under artifacts/results/.

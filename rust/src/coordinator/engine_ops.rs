@@ -5,11 +5,16 @@
 //! serves requests). The rust side owns the autoregressive decode loop;
 //! the artifacts are single fixed-shape steps.
 
-use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
 
 use crate::eval::DetectionBox;
-use crate::runtime::{Engine, ModelRunner, Tensor};
-use crate::softmax::{SoftmaxEngine, SoftmaxExact};
+use crate::lut::Precision;
+use crate::runtime::{mode_tables, Engine, ModelRunner, Tensor};
+use crate::softmax::{self, Mode, ParSoftmax, Scratch, SoftmaxEngine, SoftmaxExact};
 use crate::workload::{BOS, EOS, PAD};
 
 /// NMT encoder + decode-step pair with greedy decoding.
@@ -269,4 +274,269 @@ impl DetPipeline {
         }
         Ok(out)
     }
+}
+
+/// Standalone softmax serving pipeline — built ONCE at server startup,
+/// like [`NmtPipeline`]. Everything the old per-request `softmax_call`
+/// rebuilt on every request (manifest lookup, LUT operand tensors,
+/// host→device table staging) is cached here, and a whole ready batch is
+/// coalesced into padded `execute` calls: one PJRT execution per
+/// artifact-shaped chunk instead of one per request.
+///
+/// Route specs:
+/// * an artifact name (e.g. `"softmax__rexp__uint8"`) → PJRT backend;
+/// * `"cpu:<mode>:<prec[:aN]>"` (e.g. `"cpu:rexp:uint8"`) → CPU fallback
+///   through the row-parallel [`ParSoftmax`] software engine (no
+///   artifacts or PJRT needed).
+pub struct SoftmaxPipeline {
+    pub variant: String,
+    backend: SoftmaxBackend,
+}
+
+enum SoftmaxBackend {
+    Pjrt {
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        /// LUT operand tensors, staged device-side once at load
+        tables: Vec<xla::PjRtBuffer>,
+        /// artifact batch shape
+        rows: usize,
+        cols: usize,
+    },
+    Cpu {
+        engine: ParSoftmax,
+        /// engine-thread-resident scratch: batched requests reuse one
+        /// allocation instead of a fresh `Scratch` per request
+        scratch: RefCell<Scratch>,
+    },
+}
+
+impl SoftmaxPipeline {
+    /// Build the pipeline for a route spec; `workers` sizes the CPU
+    /// fallback's worker pool (from `ServerConfig::workers`).
+    pub fn load(engine: &Engine, spec: &str, workers: usize) -> Result<Self> {
+        if let Some(rest) = spec.strip_prefix("cpu:") {
+            let (mode_s, prec_s) = rest
+                .split_once(':')
+                .ok_or_else(|| anyhow!("cpu softmax route {spec:?}: want cpu:<mode>:<prec>"))?;
+            let mode = Mode::parse(mode_s)
+                .ok_or_else(|| anyhow!("cpu softmax route {spec:?}: unknown mode {mode_s:?}"))?;
+            let (prec, alpha_len) = Precision::parse_spec(prec_s)
+                .ok_or_else(|| anyhow!("cpu softmax route {spec:?}: bad precision {prec_s:?}"))?;
+            let inner: Arc<dyn SoftmaxEngine> = Arc::from(softmax::engine(mode, prec, alpha_len));
+            return Ok(Self {
+                variant: spec.to_string(),
+                backend: SoftmaxBackend::Cpu {
+                    engine: ParSoftmax::with_workers(inner, workers.max(1)),
+                    scratch: RefCell::new(Scratch::new()),
+                },
+            });
+        }
+
+        let meta = engine.manifest.artifact(spec)?.clone();
+        let dims = &meta
+            .inputs
+            .first()
+            .ok_or_else(|| anyhow!("{spec}: softmax artifact has no inputs"))?
+            .0;
+        if dims.len() != 2 {
+            bail!("{spec}: expected a 2-D input signature, got {dims:?}");
+        }
+        let (rows, cols) = (dims[0], dims[1]);
+        let table_tensors = mode_tables(&meta.mode, &meta.spec)?;
+        if table_tensors.len() != meta.tables {
+            bail!(
+                "{spec}: manifest declares {} table operands, lut substrate built {}",
+                meta.tables,
+                table_tensors.len()
+            );
+        }
+        let tables = table_tensors
+            .iter()
+            .map(|t| engine.host_to_device(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            variant: spec.to_string(),
+            backend: SoftmaxBackend::Pjrt {
+                exe: engine.compile(spec)?,
+                tables,
+                rows,
+                cols,
+            },
+        })
+    }
+
+    /// Serve a coalesced batch: per-request results so one malformed
+    /// payload cannot fail its batchmates.
+    pub fn run_batch(&self, engine: &Engine, xs: &[&Tensor]) -> Vec<Result<Tensor>> {
+        match &self.backend {
+            SoftmaxBackend::Cpu { engine: par, scratch } => {
+                cpu_batch(par, &mut scratch.borrow_mut(), xs)
+            }
+            SoftmaxBackend::Pjrt { exe, tables, rows, cols } => {
+                pjrt_batch(engine, exe, tables, *rows, *cols, xs)
+            }
+        }
+    }
+}
+
+/// CPU fallback: coalesce same-width requests into one row-concatenated
+/// `ParSoftmax` call (rows are independent, so the split-back is exact),
+/// reusing the pipeline's scratch across the whole batch. Small batched
+/// requests thereby reach the worker pool's fan-out threshold together.
+fn cpu_batch(par: &ParSoftmax, scratch: &mut Scratch, xs: &[&Tensor]) -> Vec<Result<Tensor>> {
+    let mut results: Vec<Option<Result<Tensor>>> = xs.iter().map(|_| None).collect();
+    // group valid requests by row width, preserving order within a group
+    let mut groups: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for (i, x) in xs.iter().enumerate() {
+        match validate_softmax_payload(x, None) {
+            Ok(n) => groups.entry(n).or_default().push(i),
+            Err(e) => results[i] = Some(Err(e)),
+        }
+    }
+    for (n, idxs) in groups {
+        let total: usize = idxs.iter().map(|&i| xs[i].len()).sum();
+        let mut data = Vec::with_capacity(total);
+        for &i in &idxs {
+            // validated f32 above
+            data.extend_from_slice(xs[i].as_f32().expect("validated f32"));
+        }
+        let mut out = vec![0.0f32; total];
+        par.run_with(&data, n, &mut out, scratch);
+        let mut off = 0;
+        for &i in &idxs {
+            let len = xs[i].len();
+            results[i] = Some(Ok(Tensor::f32(
+                xs[i].dims.clone(),
+                out[off..off + len].to_vec(),
+            )));
+            off += len;
+        }
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("every request resolved"))
+        .collect()
+}
+
+/// A softmax payload must be 2-D with non-zero columns (and match the
+/// artifact width when one is fixed). Returns the row length.
+fn validate_softmax_payload(x: &Tensor, want_cols: Option<usize>) -> Result<usize> {
+    if x.dims.len() != 2 {
+        bail!("softmax payload must be 2-D, got {:?}", x.dims);
+    }
+    let n = x.dims[1];
+    if n == 0 {
+        bail!("softmax payload has zero-length rows");
+    }
+    if let Some(c) = want_cols {
+        if n != c {
+            bail!("softmax payload {:?} incompatible with artifact width {c}", x.dims);
+        }
+    }
+    x.as_f32()?;
+    Ok(n)
+}
+
+fn pjrt_batch(
+    engine: &Engine,
+    exe: &xla::PjRtLoadedExecutable,
+    tables: &[xla::PjRtBuffer],
+    rows: usize,
+    cols: usize,
+    xs: &[&Tensor],
+) -> Vec<Result<Tensor>> {
+    // validate up front; invalid requests error individually
+    // (shape_errs[i].is_none() <=> request i is in `work`)
+    let mut shape_errs: Vec<Option<anyhow::Error>> = Vec::with_capacity(xs.len());
+    let mut work: Vec<usize> = Vec::new();
+    for (i, x) in xs.iter().enumerate() {
+        match validate_softmax_payload(x, Some(cols)) {
+            Ok(_) => {
+                shape_errs.push(None);
+                work.push(i);
+            }
+            Err(e) => {
+                shape_errs.push(Some(e));
+            }
+        }
+    }
+
+    let run = || -> Result<Vec<Vec<f32>>> {
+        let mut bufs: Vec<Vec<f32>> = work.iter().map(|&i| vec![0.0f32; xs[i].len()]).collect();
+        let mut input = vec![0.0f32; rows * cols];
+        // (work slot, request row) for each filled chunk row
+        let mut chunk: Vec<(usize, usize)> = Vec::with_capacity(rows);
+        for (wi, &i) in work.iter().enumerate() {
+            let data = xs[i].as_f32()?;
+            for ri in 0..xs[i].dims[0] {
+                let c = chunk.len();
+                input[c * cols..(c + 1) * cols]
+                    .copy_from_slice(&data[ri * cols..(ri + 1) * cols]);
+                chunk.push((wi, ri));
+                if chunk.len() == rows {
+                    flush_chunk(engine, exe, tables, rows, cols, &input, &mut chunk, &mut bufs)?;
+                }
+            }
+        }
+        if !chunk.is_empty() {
+            // zero the padding rows left over from the previous chunk
+            for r in chunk.len()..rows {
+                input[r * cols..(r + 1) * cols].fill(0.0);
+            }
+            flush_chunk(engine, exe, tables, rows, cols, &input, &mut chunk, &mut bufs)?;
+        }
+        Ok(bufs)
+    };
+
+    match run() {
+        Ok(bufs) => {
+            let mut outs = bufs.into_iter();
+            xs.iter()
+                .enumerate()
+                .map(|(i, x)| match shape_errs[i].take() {
+                    None => Ok(Tensor::f32(x.dims.clone(), outs.next().expect("one buf per ok"))),
+                    Some(e) => Err(e),
+                })
+                .collect()
+        }
+        Err(e) => {
+            // execution failure fails the whole coalesced batch
+            let msg = e.to_string();
+            (0..xs.len())
+                .map(|i| match shape_errs[i].take() {
+                    None => Err(anyhow!("{msg}")),
+                    Some(e) => Err(e),
+                })
+                .collect()
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn flush_chunk(
+    engine: &Engine,
+    exe: &xla::PjRtLoadedExecutable,
+    tables: &[xla::PjRtBuffer],
+    rows: usize,
+    cols: usize,
+    input: &[f32],
+    chunk: &mut Vec<(usize, usize)>,
+    bufs: &mut [Vec<f32>],
+) -> Result<()> {
+    let t = Tensor::f32(vec![rows, cols], input.to_vec());
+    let in_buf = engine.host_to_device(&t)?;
+    let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + tables.len());
+    args.push(&in_buf);
+    args.extend(tables.iter());
+    let out = engine
+        .run_exe(exe, &args)?
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("softmax artifact returned nothing"))?;
+    let ov = out.as_f32()?;
+    for (ci, &(wi, ri)) in chunk.iter().enumerate() {
+        bufs[wi][ri * cols..(ri + 1) * cols].copy_from_slice(&ov[ci * cols..(ci + 1) * cols]);
+    }
+    chunk.clear();
+    Ok(())
 }

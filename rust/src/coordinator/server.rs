@@ -10,11 +10,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::Batcher;
-use super::engine_ops::{ClsPipeline, DetPipeline, NmtPipeline};
+use super::engine_ops::{ClsPipeline, DetPipeline, NmtPipeline, SoftmaxPipeline};
 use super::metrics::Metrics;
 use super::request::{Payload, Reply, Request, TaskKind};
 use crate::config::ServerConfig;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, Tensor};
 
 /// Which model variant serves each task family.
 #[derive(Clone, Debug, Default)]
@@ -22,7 +22,9 @@ pub struct RouteTable {
     pub translate: Option<String>,
     pub classify: Option<String>,
     pub detect: Option<String>,
-    /// standalone softmax artifact name
+    /// standalone softmax route: an artifact name, or `"cpu:<mode>:<prec>"`
+    /// for the row-parallel software fallback (see
+    /// [`SoftmaxPipeline`](super::SoftmaxPipeline))
     pub softmax: Option<String>,
 }
 
@@ -39,11 +41,55 @@ enum Ctl {
     Shutdown,
 }
 
-/// Client handle to the serving loop.
-pub struct Coordinator {
+/// Cheap cloneable submission handle: lets any number of client threads
+/// submit without sharing the [`Coordinator`] itself. Backpressure is a
+/// single atomic reservation (see [`CoordinatorClient::submit`]).
+#[derive(Clone)]
+pub struct CoordinatorClient {
     tx: mpsc::Sender<Ctl>,
     inflight: Arc<AtomicUsize>,
     queue_depth: usize,
+}
+
+impl CoordinatorClient {
+    /// Submit a request; returns the reply receiver, or an error when the
+    /// server is saturated (backpressure).
+    ///
+    /// The admission check and the in-flight increment are ONE atomic
+    /// `fetch_update` (compare-and-swap loop): with the former separate
+    /// `load` + `fetch_add`, N racing submitters could all pass the check
+    /// and overshoot `queue_depth` by up to N-1.
+    pub fn submit(&self, payload: Payload) -> Result<mpsc::Receiver<Reply>> {
+        let depth = self.queue_depth;
+        if self
+            .inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                (cur < depth).then_some(cur + 1)
+            })
+            .is_err()
+        {
+            return Err(anyhow!("server saturated ({depth} in flight)"));
+        }
+        let (req, rx) = Request::new(payload);
+        if self.tx.send(Ctl::Req(req)).is_err() {
+            // release the reservation: the request never reached the queue
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return Err(anyhow!("engine thread gone"));
+        }
+        Ok(rx)
+    }
+
+    /// Blocking call convenience: submit and wait.
+    pub fn call(&self, payload: Payload) -> Result<Reply> {
+        let rx = self.submit(payload)?;
+        rx.recv().map_err(|_| anyhow!("engine dropped the request"))
+    }
+}
+
+/// Client handle to the serving loop.
+pub struct Coordinator {
+    client: CoordinatorClient,
+    tx: mpsc::Sender<Ctl>,
     handle: Option<JoinHandle<Result<()>>>,
 }
 
@@ -70,36 +116,31 @@ impl Coordinator {
             .recv()
             .map_err(|_| anyhow!("engine thread died during startup"))??;
         Ok(Self {
+            client: CoordinatorClient { tx: tx.clone(), inflight, queue_depth },
             tx,
-            inflight,
-            queue_depth,
             handle: Some(handle),
         })
     }
 
     pub fn set_queue_depth(&mut self, d: usize) {
-        self.queue_depth = d;
+        self.client.queue_depth = d;
+    }
+
+    /// A cheap cloneable submission handle for concurrent client threads.
+    /// (Snapshots the current queue depth.)
+    pub fn client(&self) -> CoordinatorClient {
+        self.client.clone()
     }
 
     /// Submit a request; returns the reply receiver, or an error when the
     /// server is saturated (backpressure).
     pub fn submit(&self, payload: Payload) -> Result<mpsc::Receiver<Reply>> {
-        let cur = self.inflight.load(Ordering::Relaxed);
-        if cur >= self.queue_depth {
-            return Err(anyhow!("server saturated ({cur} in flight)"));
-        }
-        self.inflight.fetch_add(1, Ordering::Relaxed);
-        let (req, rx) = Request::new(payload);
-        self.tx
-            .send(Ctl::Req(req))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        Ok(rx)
+        self.client.submit(payload)
     }
 
     /// Blocking call convenience: submit and wait.
     pub fn call(&self, payload: Payload) -> Result<Reply> {
-        let rx = self.submit(payload)?;
-        rx.recv().map_err(|_| anyhow!("engine dropped the request"))
+        self.client.call(payload)
     }
 
     pub fn stats(&self) -> Result<ServerStats> {
@@ -132,7 +173,7 @@ struct Pipelines {
     nmt: Option<NmtPipeline>,
     cls: Option<ClsPipeline>,
     det: Option<DetPipeline>,
-    softmax: Option<String>,
+    softmax: Option<SoftmaxPipeline>,
 }
 
 fn engine_thread(
@@ -160,11 +201,15 @@ fn engine_thread(
                 .as_deref()
                 .map(|v| DetPipeline::load(&engine, v))
                 .transpose()?,
-            softmax: routes.softmax.clone(),
+            // built ONCE: compiles the artifact and stages the LUT operand
+            // tensors device-side (or spins up the CPU fallback pool) —
+            // nothing softmax-shaped is rebuilt on the request path
+            softmax: routes
+                .softmax
+                .as_deref()
+                .map(|v| SoftmaxPipeline::load(&engine, v, cfg.workers))
+                .transpose()?,
         };
-        if let Some(name) = &pipes.softmax {
-            engine.compile(name)?; // pre-compile
-        }
         Ok((engine, pipes))
     })();
     let (engine, pipes) = match setup {
@@ -210,7 +255,7 @@ fn engine_thread(
                 for q in queues.values_mut() {
                     for req in q.drain_all() {
                         let _ = req.reply.send(Reply::Error("server shutting down".into()));
-                        inflight.fetch_sub(1, Ordering::Relaxed);
+                        inflight.fetch_sub(1, Ordering::AcqRel);
                     }
                 }
                 return Ok(());
@@ -230,7 +275,7 @@ fn engine_thread(
                     m.queue_wait.record(now.duration_since(r.arrived));
                 }
                 process_batch(&engine, &pipes, *kind, batch, m);
-                inflight.fetch_sub(n, Ordering::Relaxed);
+                inflight.fetch_sub(n, Ordering::AcqRel);
             }
         }
     }
@@ -304,18 +349,25 @@ fn process_batch(
         },
         TaskKind::Softmax => match &pipes.softmax {
             None => vec![Reply::Error("no softmax route".into()); batch.len()],
-            Some(name) => batch
-                .iter()
-                .map(|r| match &r.payload {
-                    Payload::Softmax(t) => {
-                        match softmax_call(engine, name, t) {
-                            Ok(out) => Reply::Softmax(out),
-                            Err(e) => Reply::Error(e.to_string()),
-                        }
-                    }
-                    _ => unreachable!(),
-                })
-                .collect(),
+            Some(p) => {
+                // the whole ready batch goes down in ONE coalesced pipeline
+                // call (padded artifact-shaped executes, or the row-parallel
+                // CPU engine) — no per-request table rebuilds
+                let xs: Vec<&Tensor> = batch
+                    .iter()
+                    .map(|r| match &r.payload {
+                        Payload::Softmax(t) => t,
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                p.run_batch(engine, &xs)
+                    .into_iter()
+                    .map(|r| match r {
+                        Ok(t) => Reply::Softmax(t),
+                        Err(e) => Reply::Error(e.to_string()),
+                    })
+                    .collect()
+            }
         },
     };
     let now = Instant::now();
@@ -323,55 +375,4 @@ fn process_batch(
         metrics.latency.record(now.duration_since(t0));
         let _ = req.reply.send(reply);
     }
-}
-
-/// Run the standalone softmax artifact: pads rows to the artifact shape
-/// and appends the LUT operand tensors from the lut substrate.
-fn softmax_call(engine: &Engine, name: &str, x: &crate::runtime::Tensor) -> Result<crate::runtime::Tensor> {
-    use crate::lut::{lut2d_tables, rexp_tables, Precision};
-    use crate::runtime::Tensor;
-
-    let meta = engine.manifest.artifact(name)?.clone();
-    let (rows, cols) = {
-        let d = &meta.inputs[0].0;
-        (d[0], d[1])
-    };
-    if x.dims.len() != 2 || x.dims[1] != cols || x.dims[0] > rows {
-        return Err(anyhow!(
-            "softmax payload {:?} incompatible with artifact shape [{rows}, {cols}]",
-            x.dims
-        ));
-    }
-    let mut data = vec![0.0f32; rows * cols];
-    data[..x.len()].copy_from_slice(x.as_f32()?);
-    let input = Tensor::f32(vec![rows, cols], data);
-
-    let prec = Precision::parse(&meta.spec).unwrap_or(Precision::Uint8);
-    let mut args = vec![input];
-    match meta.mode.as_str() {
-        "rexp" => {
-            let t = rexp_tables(prec, None);
-            args.push(Tensor::i32(vec![t.recip_e.len()], t.recip_e.clone()));
-            args.push(Tensor::i32(vec![t.alpha.len()], t.alpha.clone()));
-        }
-        "lut2d" => {
-            let t = lut2d_tables(prec, None);
-            args.push(Tensor::i32(vec![t.exp.len()], t.exp.clone()));
-            args.push(Tensor::i32(vec![t.row.len()], t.row.clone()));
-            args.push(Tensor::i32(
-                vec![crate::lut::SIGMA_ROWS, t.cols],
-                t.sigma.clone(),
-            ));
-        }
-        _ => {}
-    }
-    let out = engine
-        .execute(name, &args)?
-        .into_iter()
-        .next()
-        .ok_or_else(|| anyhow!("softmax artifact returned nothing"))?;
-    // slice back the caller's rows
-    let keep = x.dims[0] * cols;
-    let v = out.as_f32()?[..keep].to_vec();
-    Ok(Tensor::f32(vec![x.dims[0], cols], v))
 }

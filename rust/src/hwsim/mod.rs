@@ -16,5 +16,5 @@ mod pipeline;
 mod units;
 
 pub use design::{all_designs, Design, DesignKind};
-pub use pipeline::{simulate, SimConfig, SimReport};
+pub use pipeline::{simulate, simulate_row_parallel, SimConfig, SimReport};
 pub use units::{Cost, OpKind};

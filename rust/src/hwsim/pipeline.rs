@@ -102,6 +102,28 @@ pub fn simulate(design: &Design, cfg: SimConfig) -> SimReport {
     }
 }
 
+/// Row-parallel aggregate: `units` independent softmax units each process
+/// a contiguous block of rows — the hwsim mirror of
+/// [`crate::softmax::ParSoftmax`]'s sharding. Latency is the slowest
+/// unit's block; area and LUT storage are instantiated per unit; total
+/// energy is unchanged (same work, spread out).
+pub fn simulate_row_parallel(design: &Design, cfg: SimConfig, units: usize) -> SimReport {
+    let full = simulate(design, cfg);
+    let units = units.max(1).min(cfg.rows.max(1));
+    if units <= 1 {
+        return full;
+    }
+    let block = cfg.rows.div_ceil(units);
+    let units_used = cfg.rows.div_ceil(block);
+    let slowest = simulate(design, SimConfig { rows: block, ..cfg });
+    SimReport {
+        cycles: slowest.cycles,
+        area: full.area * units_used as f64,
+        lut_bytes: full.lut_bytes * units_used,
+        ..full
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,6 +169,27 @@ mod tests {
         let r = sim(DesignKind::Rexp, 2);
         assert_eq!(r.elems, 128 * 64);
         assert!(r.energy > 0.0);
+    }
+
+    #[test]
+    fn row_parallel_units_scale_latency_and_area() {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = SimConfig { n: 128, rows: 64, lanes: 4 };
+        let one = simulate_row_parallel(&d, cfg, 1);
+        assert_eq!(one.cycles, simulate(&d, cfg).cycles);
+        let four = simulate_row_parallel(&d, cfg, 4);
+        // 64 rows / 4 units = 16 rows per unit: exactly 1/4 the row loop
+        assert_eq!(four.cycles * 4, one.cycles);
+        assert_eq!(four.area, one.area * 4.0);
+        assert_eq!(four.lut_bytes, one.lut_bytes * 4);
+        assert_eq!(four.energy, one.energy);
+        assert_eq!(four.elems, one.elems);
+        // more units than rows clamps to rows
+        let huge = simulate_row_parallel(&d, SimConfig { n: 16, rows: 3, lanes: 1 }, 64);
+        assert_eq!(
+            huge.cycles,
+            simulate(&d, SimConfig { n: 16, rows: 1, lanes: 1 }).cycles
+        );
     }
 
     #[test]

@@ -89,6 +89,8 @@ fn serve(args: &Args) -> Result<()> {
         "translate" => routes.translate = Some(variant.clone()),
         "classify" => routes.classify = Some(variant.clone()),
         "detect" => routes.detect = Some(variant.clone()),
+        // e.g. --variant softmax__rexp__uint8 or --variant cpu:rexp:uint8
+        "softmax" => routes.softmax = Some(variant.clone()),
         other => return Err(anyhow!("unknown task {other:?}")),
     }
     println!("starting coordinator: task={task} variant={variant}");
@@ -103,6 +105,9 @@ fn serve(args: &Args) -> Result<()> {
         let payload = match task {
             "translate" => Payload::Translate(workload::random_src_row(&mut rng, 20, 64)),
             "classify" => Payload::Classify(workload::random_cls_row(&mut rng, 24, 64)),
+            "softmax" => {
+                Payload::Softmax(Tensor::f32(vec![4, 64], rng.normal_vec(4 * 64, 2.0)))
+            }
             _ => Payload::Detect(workload::random_image(&mut rng, 32, 3)),
         };
         match coordinator.submit(payload) {
@@ -145,7 +150,22 @@ fn softmax(args: &Args) -> Result<()> {
     let cfg = config(args)?;
     let mode = args.opt("mode").unwrap_or("rexp");
     let prec = args.opt("prec").unwrap_or("uint8");
-    let name = format!("softmax__{mode}__{prec}");
+    // --cpu forces the row-parallel software fallback; it also kicks in
+    // (with a notice) when the artifact is not in the manifest
+    let name = if args.flag("cpu") {
+        format!("cpu:{mode}:{prec}")
+    } else {
+        let artifact = format!("softmax__{mode}__{prec}");
+        let have = lutmax::runtime::Manifest::load(&cfg.artifacts)
+            .map(|m| m.artifacts.contains_key(&artifact))
+            .unwrap_or(false);
+        if have {
+            artifact
+        } else {
+            println!("(artifact {artifact} not found; serving via cpu:{mode}:{prec})");
+            format!("cpu:{mode}:{prec}")
+        }
+    };
     let mut routes = RouteTable::default();
     routes.softmax = Some(name.clone());
     let coordinator = Coordinator::start(cfg, routes)?;

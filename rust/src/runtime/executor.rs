@@ -184,10 +184,10 @@ impl Engine {
         self.run_exe(&exe, &bufs)
     }
 
-    pub(crate) fn run_exe(
+    pub(crate) fn run_exe<T: std::borrow::Borrow<xla::PjRtBuffer>>(
         &self,
         exe: &xla::PjRtLoadedExecutable,
-        args: &[xla::PjRtBuffer],
+        args: &[T],
     ) -> Result<Vec<Tensor>> {
         *self.exec_count.borrow_mut() += 1;
         let outputs = exe.execute_b(args).map_err(wrap)?;

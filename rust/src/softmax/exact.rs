@@ -1,14 +1,16 @@
 //! Numerically-stable exact softmax — the fp32 reference datapath
 //! (requires the divider the paper's designs eliminate).
 
-use super::{row_max, SoftmaxEngine};
+use super::{debug_check_shape, row_max, Scratch, SoftmaxEngine};
 
 pub struct SoftmaxExact;
 
 impl SoftmaxEngine for SoftmaxExact {
-    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
-        debug_assert_eq!(x.len() % n, 0);
-        debug_assert_eq!(x.len(), out.len());
+    fn run_with(&self, x: &[f32], n: usize, out: &mut [f32], _scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
         for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
             let m = row_max(row);
             let mut sum = 0.0f32;

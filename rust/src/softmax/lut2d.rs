@@ -11,15 +11,18 @@
 //!
 //! No divider and no data-dependent multiplier: the quantized path is
 //! wiring + adds (the paper's headline HW property).
+//!
+//! §Perf: the fused [`SoftmaxEngine::run_with`] keeps the table ADDRESS
+//! `k` from pass 1 in the caller's [`Scratch`], resolves the column once
+//! per row, and — when the row is at least as long as `LUT_exp` — hoists
+//! the `row-decode → sigma → dequant` chain into a per-row f32 table
+//! (`deq[k] = sigma[row[k]][col-1] · 1/qmax`), making pass 2 one
+//! branchless gather per element. Short rows gather the chain directly.
+//! Both paths are bit-identical to the old three-pass loop; the third
+//! f32 pass and its `thread_local!` scratch are gone.
 
-use std::cell::RefCell;
-
-use super::{row_max, SoftmaxEngine};
+use super::{debug_check_shape, row_max, Scratch, SoftmaxEngine};
 use crate::lut::{lut2d_tables, Lut2dTables, Precision};
-
-thread_local! {
-    static SCRATCH: RefCell<Vec<i32>> = const { RefCell::new(Vec::new()) };
-}
 
 pub struct SoftmaxLut2d {
     tables: Lut2dTables,
@@ -67,17 +70,42 @@ impl SoftmaxLut2d {
 }
 
 impl SoftmaxEngine for SoftmaxLut2d {
-    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
-        debug_assert_eq!(x.len() % n, 0);
-        // §Perf: i32 two-pass + thread-local scratch (see rexp.rs).
-        SCRATCH.with(|cell| {
-            let mut ints = cell.borrow_mut();
-            ints.resize(x.len(), 0);
-            self.run_int(x, n, &mut ints);
-            for (o, &v) in out.iter_mut().zip(ints.iter()) {
-                *o = v as f32 * self.inv_qmax;
+    fn run_with(&self, x: &[f32], n: usize, out: &mut [f32], scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
+        let exp_t = &self.tables.exp;
+        let row_t = &self.tables.row;
+        let last = (exp_t.len() - 1) as i32;
+        let cols = self.tables.cols as i32;
+        let hoist = n >= exp_t.len();
+        let (idx, deq) = scratch.borrow2(n, exp_t.len());
+        for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = row_max(row);
+            let mut s: i32 = 0;
+            for (slot, &v) in idx.iter_mut().zip(row) {
+                let k = (((m - v) * 10.0) as i32).clamp(0, last);
+                s += exp_t[k as usize];
+                *slot = k;
             }
-        });
+            let col = (s >> self.w).clamp(1, cols) as usize;
+            if hoist {
+                // f32-mirrored row of LUT_sigma for this column: resolve the
+                // row-decode + sigma read + dequant once per table ENTRY
+                for (d, &r) in deq.iter_mut().zip(row_t.iter()) {
+                    *d = self.tables.sigma_at(r as usize, col) as f32 * self.inv_qmax;
+                }
+                for (o, &k) in orow.iter_mut().zip(idx.iter()) {
+                    *o = deq[k as usize];
+                }
+            } else {
+                for (o, &k) in orow.iter_mut().zip(idx.iter()) {
+                    let r = row_t[k as usize] as usize;
+                    *o = self.tables.sigma_at(r, col) as f32 * self.inv_qmax;
+                }
+            }
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -147,5 +175,24 @@ mod tests {
         let shifted: Vec<f32> = x.iter().map(|v| v + 12.0).collect();
         let e = SoftmaxLut2d::new(Precision::Int16);
         assert_eq!(e.apply(&x, 24), e.apply(&shifted, 24));
+    }
+
+    #[test]
+    fn fused_gather_matches_integer_stage() {
+        // hoisted (n >= LUT_exp len) and direct paths must both equal
+        // sig_int * 1/qmax exactly
+        testkit::check("lut2d fused dequant", 20, |rng| {
+            let prec = *rng.choice(&crate::lut::ALL_PRECISIONS);
+            let e = SoftmaxLut2d::new(prec);
+            let table_len = e.tables().exp.len();
+            let n = rng.usize(1, table_len + table_len / 2 + 2);
+            let rows = rng.usize(1, 4);
+            let x = rng.normal_vec(rows * n, 2.0);
+            let mut ints = vec![0i32; x.len()];
+            e.run_int(&x, n, &mut ints);
+            let inv = 1.0 / prec.qmax() as f32;
+            let want: Vec<f32> = ints.iter().map(|&v| v as f32 * inv).collect();
+            assert_eq!(e.apply(&x, n), want);
+        });
     }
 }

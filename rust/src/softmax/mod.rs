@@ -1,21 +1,54 @@
-//! Bit-exact software models of the softmax datapaths.
+//! Bit-exact software models of the softmax datapaths — fused, batch-aware,
+//! row-parallel.
 //!
-//! These are the "HW functional model" of the paper's Algorithms 1 and 2:
-//! the integer stages reproduce, entry for entry, the Pallas kernels and
+//! The integer stages reproduce, entry for entry, the Pallas kernels and
 //! jnp oracles on the python side (asserted against
 //! `artifacts/golden_softmax.ltb`). They serve three roles:
 //!
-//! 1. the request-path hot loop of the standalone softmax service,
+//! 1. the request-path hot loop of the standalone softmax service
+//!    (including the CPU fallback behind `coordinator::SoftmaxPipeline`),
 //! 2. the functional layer under the cycle-accurate [`crate::hwsim`],
 //! 3. the rust-side baseline for the criterion-style benches.
+//!
+//! # Kernel architecture (fused two-pass)
+//!
+//! Every LUT engine streams each row in exactly **two** passes:
+//!
+//! * **pass 1** scans the row once: computes the LUT *address* per element
+//!   (a branchless clamp), accumulates the integer sum, and parks the
+//!   addresses in a caller-provided [`Scratch`] (no thread-local state,
+//!   no allocation on the hot path).
+//! * **between passes** the per-row normalizer (REXP's `LUT_alpha` read,
+//!   2D-LUT's column select) is resolved once, and — when the row is at
+//!   least as long as the table — the whole dequantized output table is
+//!   hoisted into an f32 mirror (`Scratch::deq`): one `int-mul + shift +
+//!   int→f32 + fmul` per *table entry* instead of per element.
+//! * **pass 2** is then a single branchless gather per element
+//!   (`out[i] = deq[idx[i]]`), or for short rows the direct fused
+//!   `((e·α) >> w) as f32 * 1/qmax` — one int-mul+shift+fmul. Either way
+//!   the old third full pass over the data (and its thread-local i32
+//!   scratch) is gone, and results are bit-identical by construction:
+//!   the same integer expressions are evaluated on the same inputs.
+//!
+//! # Batching and parallelism
+//!
+//! [`SoftmaxEngine::run_with`] is the scratch-carrying batched entry
+//! point: callers that run many batches (services, benches, the worker
+//! pool) hold one [`Scratch`] per thread and amortize allocation
+//! explicitly. [`SoftmaxEngine::run`] remains the convenience wrapper
+//! that brings its own scratch. Rows are independent, so [`ParSoftmax`]
+//! (see [`par`]) shards row-blocks of a batch across a persistent worker
+//! pool and stays `==`-exact with the wrapped engine.
 
 mod exact;
 mod lut2d;
+mod par;
 mod priorart;
 mod rexp;
 
 pub use exact::SoftmaxExact;
 pub use lut2d::SoftmaxLut2d;
+pub use par::ParSoftmax;
 pub use priorart::{SoftmaxAggressive, SoftmaxEq2, SoftmaxEq2Plus};
 pub use rexp::SoftmaxRexp;
 
@@ -57,10 +90,51 @@ impl Mode {
     }
 }
 
-/// A row-wise softmax engine: `run` fills `out` with probabilities for each
+/// Reusable per-thread kernel workspace: LUT addresses for one row and the
+/// per-row dequantized f32 mirror of the active table. Engines only grow
+/// the buffers; a single `Scratch` serves any engine/shape sequence.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    idx: Vec<i32>,
+    deq: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mutable views of the two buffers, grown to at least the requested
+    /// lengths. Split borrow so pass 1 (addresses) and the dequant mirror
+    /// can be filled in the same row iteration.
+    pub(crate) fn borrow2(&mut self, idx_len: usize, deq_len: usize) -> (&mut [i32], &mut [f32]) {
+        if self.idx.len() < idx_len {
+            self.idx.resize(idx_len, 0);
+        }
+        if self.deq.len() < deq_len {
+            self.deq.resize(deq_len, 0.0);
+        }
+        (&mut self.idx[..idx_len], &mut self.deq[..deq_len])
+    }
+}
+
+/// A row-wise softmax engine: fills `out` with probabilities for each
 /// length-`n` row of `x` (row-major, `x.len() == rows * n`).
+///
+/// `n == 0` is a caller bug: it is rejected by `debug_assert!` at every
+/// engine boundary (an empty *batch*, `x.len() == 0`, is fine and a
+/// no-op). See [`row_max`] for why the guard exists.
 pub trait SoftmaxEngine: Send + Sync {
-    fn run(&self, x: &[f32], n: usize, out: &mut [f32]);
+    /// Scratch-carrying batched entry point — the hot path. Callers that
+    /// run repeatedly should hold one [`Scratch`] per thread; the engines
+    /// never allocate when the scratch has warmed up.
+    fn run_with(&self, x: &[f32], n: usize, out: &mut [f32], scratch: &mut Scratch);
+
+    /// Convenience single-shot wrapper (brings its own scratch).
+    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        let mut scratch = Scratch::new();
+        self.run_with(x, n, out, &mut scratch);
+    }
 
     fn name(&self) -> &'static str;
 
@@ -89,10 +163,43 @@ pub fn engine(
     }
 }
 
-/// max of a row (f32, NaN-free inputs assumed — attention scores)
+/// Build a row-parallel engine: the sequential engine for `(mode, prec,
+/// alpha_len)` wrapped in a [`ParSoftmax`] worker pool. `workers = None`
+/// uses the machine's available parallelism.
+pub fn engine_parallel(
+    mode: Mode,
+    prec: Precision,
+    alpha_len: Option<usize>,
+    workers: Option<usize>,
+) -> ParSoftmax {
+    let inner: std::sync::Arc<dyn SoftmaxEngine> =
+        std::sync::Arc::from(engine(mode, prec, alpha_len));
+    match workers {
+        Some(w) => ParSoftmax::with_workers(inner, w),
+        None => ParSoftmax::new(inner),
+    }
+}
+
+/// max of a row (f32, NaN-free inputs assumed — attention scores).
+///
+/// An empty row yields `0.0`, never `NEG_INFINITY`: the fused kernels cast
+/// `max - x` to an integer LUT address, and `NEG_INFINITY as i32` would be
+/// a garbage clamp index. Engines additionally `debug_assert!(n > 0)` at
+/// the trait boundary so the case cannot arise silently.
 #[inline]
 pub(crate) fn row_max(row: &[f32]) -> f32 {
+    if row.is_empty() {
+        return 0.0;
+    }
     row.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// Trait-boundary shape guard shared by every engine (debug builds).
+#[inline]
+pub(crate) fn debug_check_shape(x: &[f32], n: usize, out: &[f32]) {
+    debug_assert!(n > 0, "softmax row length n must be > 0");
+    debug_assert_eq!(x.len() % n, 0, "x.len() must be a multiple of n");
+    debug_assert_eq!(x.len(), out.len(), "out length must match x");
 }
 
 #[cfg(test)]
@@ -120,5 +227,57 @@ mod tests {
         assert_eq!(e.name(), "rexp");
         let e = engine(Mode::Exact, Precision::Uint8, None);
         assert_eq!(e.name(), "exact");
+    }
+
+    #[test]
+    fn row_max_empty_row_is_finite() {
+        assert_eq!(row_max(&[]), 0.0);
+        assert_eq!(row_max(&[-3.0, 1.5]), 1.5);
+        // the clamp index an empty row would produce must be sane
+        assert_eq!((row_max(&[]) as i32).clamp(0, 7), 0);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop_for_all_engines() {
+        for m in [
+            Mode::Exact,
+            Mode::Rexp,
+            Mode::Lut2d,
+            Mode::PriorartEq2,
+            Mode::PriorartEq2Plus,
+            Mode::Aggressive,
+        ] {
+            let e = engine(m, Precision::Uint8, None);
+            let out = e.apply(&[], 4);
+            assert!(out.is_empty(), "{m:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row length n must be > 0")]
+    #[cfg(debug_assertions)]
+    fn zero_n_is_rejected_at_the_trait_boundary() {
+        let e = engine(Mode::Rexp, Precision::Uint8, None);
+        let mut out = [0.0f32; 2];
+        e.run(&[1.0, 2.0], 0, &mut out);
+    }
+
+    #[test]
+    fn scratch_reuse_across_engines_and_shapes() {
+        let mut s = Scratch::new();
+        let rexp = SoftmaxRexp::new(Precision::Uint8, None);
+        let l2d = SoftmaxLut2d::new(Precision::Int16);
+        let x1 = [0.5, -1.0, 2.0, 0.0, 0.0, 1.0];
+        let x2 = [1.0, 1.0];
+        let mut got = [0.0f32; 6];
+        rexp.run_with(&x1, 3, &mut got, &mut s);
+        assert_eq!(got.to_vec(), rexp.apply(&x1, 3));
+        let mut got2 = [0.0f32; 2];
+        l2d.run_with(&x2, 2, &mut got2, &mut s);
+        assert_eq!(got2.to_vec(), l2d.apply(&x2, 2));
+        // back to the first engine with a different row length
+        let mut got3 = [0.0f32; 6];
+        rexp.run_with(&x1, 2, &mut got3, &mut s);
+        assert_eq!(got3.to_vec(), rexp.apply(&x1, 2));
     }
 }

@@ -1,0 +1,286 @@
+//! Row-parallel softmax: a persistent worker pool (std threads + a
+//! Mutex/Condvar job queue, no external deps) that shards row-blocks of a
+//! batch across cores.
+//!
+//! Rows of a softmax batch are independent, so [`ParSoftmax`] is bit-exact
+//! with the engine it wraps *by construction*: each worker runs the
+//! wrapped engine's own `run_with` over a contiguous block of whole rows,
+//! writing into a disjoint slice of the caller's output buffer. Workers
+//! hold a private [`Scratch`] each, so the per-row LUT-address and dequant
+//! buffers are allocated once per thread for the lifetime of the pool —
+//! the explicit-amortization story of `run_with`, multiplied across cores.
+//!
+//! Small batches fall back to the wrapped engine inline (fan-out costs
+//! more than it saves below a few thousand elements), which keeps single
+//! requests at sequential latency while saturated batches scale.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::{debug_check_shape, Scratch, SoftmaxEngine};
+
+/// Don't bother fanning out below this many elements per shard.
+const MIN_ELEMS_PER_SHARD: usize = 2048;
+
+/// One sharded softmax call: raw views into the caller's buffers plus the
+/// engine to run. The submitting thread blocks until every job of the
+/// batch has signalled `done`, so the pointers outlive the job; `out`
+/// blocks are disjoint between jobs of one batch.
+struct Job {
+    x: *const f32,
+    out: *mut f32,
+    len: usize,
+    n: usize,
+    engine: Arc<dyn SoftmaxEngine>,
+    done: mpsc::Sender<()>,
+}
+
+// SAFETY: `x`/`out` stay valid and unaliased for the job's lifetime (the
+// submitter blocks on `done` before returning, and hands each job a
+// disjoint block); `engine` is `Send + Sync` by the trait bound; `done`
+// is a `Send` sender.
+unsafe impl Send for Job {}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+struct QueueState {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("lutmax-softmax-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn softmax worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    fn submit(&self, job: Job) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push_back(job);
+        drop(q);
+        self.shared.ready.notify_one();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Ok(mut q) = self.shared.queue.lock() {
+            q.shutdown = true;
+        }
+        self.shared.ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut scratch = Scratch::new();
+    loop {
+        let job = {
+            let mut q = match shared.queue.lock() {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = match shared.ready.wait(q) {
+                    Ok(g) => g,
+                    Err(_) => return,
+                };
+            }
+        };
+        // SAFETY: see `unsafe impl Send for Job` — the submitter keeps the
+        // buffers alive and the blocks disjoint until `done` is signalled.
+        let x = unsafe { std::slice::from_raw_parts(job.x, job.len) };
+        let out = unsafe { std::slice::from_raw_parts_mut(job.out, job.len) };
+        job.engine.run_with(x, job.n, out, &mut scratch);
+        let _ = job.done.send(());
+    }
+}
+
+/// [`SoftmaxEngine`] adapter that shards row-blocks across a persistent
+/// worker pool. Output is `==` to the wrapped engine's for every input.
+pub struct ParSoftmax {
+    inner: Arc<dyn SoftmaxEngine>,
+    pool: WorkerPool,
+    /// batches dispatched to the pool (vs. run inline) — test/bench probe
+    parallel_batches: AtomicUsize,
+}
+
+impl ParSoftmax {
+    /// Wrap `inner` with one worker per available core.
+    pub fn new(inner: Arc<dyn SoftmaxEngine>) -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::with_workers(inner, workers)
+    }
+
+    /// Wrap `inner` with an explicit worker count (min 1).
+    pub fn with_workers(inner: Arc<dyn SoftmaxEngine>, workers: usize) -> Self {
+        Self {
+            inner,
+            pool: WorkerPool::new(workers.max(1)),
+            parallel_batches: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// The wrapped sequential engine.
+    pub fn inner(&self) -> &dyn SoftmaxEngine {
+        &*self.inner
+    }
+
+    /// How many `run_with` calls actually fanned out to the pool.
+    pub fn parallel_batches(&self) -> usize {
+        self.parallel_batches.load(Ordering::Relaxed)
+    }
+
+    /// Rows per shard for a (rows, n) batch; 0 means "run inline".
+    fn shard_rows(&self, rows: usize, n: usize) -> usize {
+        let workers = self.pool.workers();
+        if workers <= 1 || rows < 2 {
+            return 0;
+        }
+        let by_work = (rows * n) / MIN_ELEMS_PER_SHARD;
+        let shards = workers.min(by_work).min(rows);
+        if shards < 2 {
+            return 0;
+        }
+        rows.div_ceil(shards)
+    }
+}
+
+impl SoftmaxEngine for ParSoftmax {
+    fn run_with(&self, x: &[f32], n: usize, out: &mut [f32], scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
+        let rows = x.len() / n;
+        let block = self.shard_rows(rows, n);
+        if block == 0 {
+            return self.inner.run_with(x, n, out, scratch);
+        }
+        self.parallel_batches.fetch_add(1, Ordering::Relaxed);
+        let chunk = block * n;
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let mut sent = 0usize;
+        for (xc, oc) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            self.pool.submit(Job {
+                x: xc.as_ptr(),
+                out: oc.as_mut_ptr(),
+                len: xc.len(),
+                n,
+                engine: self.inner.clone(),
+                done: done_tx.clone(),
+            });
+            sent += 1;
+        }
+        drop(done_tx);
+        for _ in 0..sent {
+            // Err means a job was dropped without signalling (worker
+            // panicked); by then every job has terminated, so unwinding
+            // here cannot race the buffers.
+            done_rx
+                .recv()
+                .expect("softmax worker pool: worker died mid-batch");
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "par"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::Precision;
+    use crate::softmax::{engine, Mode};
+    use crate::testkit::Rng;
+
+    fn par(mode: Mode, prec: Precision, workers: usize) -> ParSoftmax {
+        ParSoftmax::with_workers(Arc::from(engine(mode, prec, None)), workers)
+    }
+
+    #[test]
+    fn shards_cover_all_rows_exactly() {
+        let mut rng = Rng::new(7);
+        let n = 64;
+        let rows = 129; // not a multiple of any worker count
+        let x = rng.normal_vec(rows * n, 2.0);
+        let p = par(Mode::Rexp, Precision::Uint8, 4);
+        let seq = engine(Mode::Rexp, Precision::Uint8, None);
+        assert_eq!(p.apply(&x, n), seq.apply(&x, n));
+        assert_eq!(p.parallel_batches(), 1);
+    }
+
+    #[test]
+    fn tiny_batches_run_inline() {
+        let mut rng = Rng::new(8);
+        let x = rng.normal_vec(2 * 8, 1.0);
+        let p = par(Mode::Lut2d, Precision::Uint8, 4);
+        let seq = engine(Mode::Lut2d, Precision::Uint8, None);
+        assert_eq!(p.apply(&x, 8), seq.apply(&x, 8));
+        assert_eq!(p.parallel_batches(), 0, "16 elements must not fan out");
+    }
+
+    #[test]
+    fn pool_survives_many_batches() {
+        let mut rng = Rng::new(9);
+        let p = par(Mode::Rexp, Precision::Int16, 3);
+        let seq = engine(Mode::Rexp, Precision::Int16, None);
+        for _ in 0..20 {
+            let n = rng.usize(1, 96);
+            let rows = rng.usize(1, 200);
+            let x = rng.normal_vec(rows * n, 2.0);
+            assert_eq!(p.apply(&x, n), seq.apply(&x, n));
+        }
+    }
+
+    #[test]
+    fn single_worker_pool_is_sequential() {
+        let mut rng = Rng::new(10);
+        let x = rng.normal_vec(64 * 64, 2.0);
+        let p = par(Mode::Exact, Precision::Uint8, 1);
+        let seq = engine(Mode::Exact, Precision::Uint8, None);
+        assert_eq!(p.apply(&x, 64), seq.apply(&x, 64));
+        assert_eq!(p.parallel_batches(), 0);
+    }
+}

@@ -9,8 +9,12 @@
 //! These are float-transcendental models (the accuracy experiments run
 //! them through the PJRT artifacts; these rust twins exist for hwsim and
 //! the benches, where 1-ULP libm differences are irrelevant).
+//! `SoftmaxAggressive` has no per-row normalizer at all, so its dequant is
+//! hoisted once at construction: an f32-mirrored `LUT_{1/e}`
+//! (`recip[i] as f32 * 1/qmax`, the same expression the old per-element
+//! loop evaluated) makes its whole run one clamp + gather per element.
 
-use super::{row_max, SoftmaxEngine};
+use super::{debug_check_shape, row_max, Scratch, SoftmaxEngine};
 use crate::lut::{lut_recip_e, Precision};
 
 fn round_to_precision(v: f32, qmax: f32) -> f32 {
@@ -28,7 +32,11 @@ impl SoftmaxEq2 {
 }
 
 impl SoftmaxEngine for SoftmaxEq2 {
-    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
+    fn run_with(&self, x: &[f32], n: usize, out: &mut [f32], _scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
         for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
             let sum: f32 = row.iter().map(|v| v.exp()).sum();
             let ln_sum = sum.ln();
@@ -54,7 +62,11 @@ impl SoftmaxEq2Plus {
 }
 
 impl SoftmaxEngine for SoftmaxEq2Plus {
-    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
+    fn run_with(&self, x: &[f32], n: usize, out: &mut [f32], _scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
         for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
             let m = row_max(row);
             let sum: f32 = row.iter().map(|v| (v - m).exp()).sum();
@@ -71,27 +83,34 @@ impl SoftmaxEngine for SoftmaxEq2Plus {
 }
 
 pub struct SoftmaxAggressive {
-    recip: Vec<i32>,
-    inv_qmax: f32,
+    /// f32-mirrored `LUT_{1/e}`, premultiplied by 1/qmax at construction
+    recip_f32: Vec<f32>,
 }
 
 impl SoftmaxAggressive {
     pub fn new(prec: Precision) -> Self {
+        let inv_qmax = 1.0 / prec.qmax() as f32;
         Self {
-            recip: lut_recip_e(prec),
-            inv_qmax: 1.0 / prec.qmax() as f32,
+            recip_f32: lut_recip_e(prec)
+                .into_iter()
+                .map(|e| e as f32 * inv_qmax)
+                .collect(),
         }
     }
 }
 
 impl SoftmaxEngine for SoftmaxAggressive {
-    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
-        let last = (self.recip.len() - 1) as i32;
+    fn run_with(&self, x: &[f32], n: usize, out: &mut [f32], _scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
+        let last = (self.recip_f32.len() - 1) as i32;
         for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
             let m = row_max(row);
             for (o, &v) in orow.iter_mut().zip(row) {
                 let idx = ((m - v) as i32).clamp(0, last);
-                *o = self.recip[idx as usize] as f32 * self.inv_qmax;
+                *o = self.recip_f32[idx as usize];
             }
         }
     }
@@ -151,6 +170,19 @@ mod tests {
         for v in SoftmaxEq2Plus::new(Precision::Uint4).apply(&x, 4) {
             let g = v * 15.0;
             assert!((g - g.round()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn aggressive_mirror_matches_integer_dequant() {
+        // the premultiplied f32 table must equal per-element
+        // `recip[i] as f32 * 1/qmax` bit for bit
+        for prec in crate::lut::ALL_PRECISIONS {
+            let e = SoftmaxAggressive::new(prec);
+            let inv = 1.0 / prec.qmax() as f32;
+            for (i, &r) in lut_recip_e(prec).iter().enumerate() {
+                assert_eq!(e.recip_f32[i], r as f32 * inv);
+            }
         }
     }
 }

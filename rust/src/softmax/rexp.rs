@@ -9,15 +9,20 @@
 //!   6. `sig = (e * a) >> w`;  `out = sig * (1/qmax)`
 //!
 //! No divide anywhere; one integer multiply per element (step 6).
+//!
+//! §Perf: the fused [`SoftmaxEngine::run_with`] does steps 2–4 in pass 1
+//! (parking the LUT *addresses* in the caller's [`Scratch`]), then — since
+//! `LUT_{1/e}` has at most `x_q + 2` (≤ 13) entries — steps 5–6 are hoisted
+//! into a per-row f32-mirrored dequant of the whole table
+//! (`deq[k] = ((LUT_{1/e}[k]·α) >> w) · 1/qmax`), so pass 2 is a single
+//! branchless gather per element. Rows shorter than the table skip the
+//! hoist and fuse dequant directly: one int-mul + shift + fmul. Both paths
+//! evaluate the exact integer expressions of the old three-pass loop on
+//! the same inputs, so outputs are bit-identical; the third full pass and
+//! the `thread_local!` scratch it needed are gone.
 
-use std::cell::RefCell;
-
-use super::{row_max, SoftmaxEngine};
+use super::{debug_check_shape, row_max, Scratch, SoftmaxEngine};
 use crate::lut::{rexp_tables, Precision, RexpTables};
-
-thread_local! {
-    static SCRATCH: RefCell<Vec<i32>> = const { RefCell::new(Vec::new()) };
-}
 
 pub struct SoftmaxRexp {
     tables: RexpTables,
@@ -66,19 +71,40 @@ impl SoftmaxRexp {
 }
 
 impl SoftmaxEngine for SoftmaxRexp {
-    fn run(&self, x: &[f32], n: usize, out: &mut [f32]) {
-        debug_assert_eq!(x.len() % n, 0);
-        // §Perf: the integer two-pass pipeline vectorizes best on i32
-        // slices; a thread-local scratch keeps the hot loop allocation-free
-        // without losing that codegen.
-        SCRATCH.with(|cell| {
-            let mut ints = cell.borrow_mut();
-            ints.resize(x.len(), 0);
-            self.run_int(x, n, &mut ints);
-            for (o, &v) in out.iter_mut().zip(ints.iter()) {
-                *o = v as f32 * self.inv_qmax;
+    fn run_with(&self, x: &[f32], n: usize, out: &mut [f32], scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
+        let recip = &self.tables.recip_e;
+        let alpha = &self.tables.alpha;
+        let last = (recip.len() - 1) as i32;
+        let hoist = n >= recip.len();
+        let (idx, deq) = scratch.borrow2(n, recip.len());
+        for (row, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = row_max(row);
+            let mut s: i32 = 0;
+            for (slot, &v) in idx.iter_mut().zip(row) {
+                let k = ((m - v) as i32).clamp(0, last);
+                s += recip[k as usize];
+                *slot = k;
             }
-        });
+            let j = (s >> self.w) as usize;
+            let a = if j >= alpha.len() { 0 } else { alpha[j] };
+            if hoist {
+                // f32-mirrored table: dequant once per ENTRY, gather per elem
+                for (d, &e) in deq.iter_mut().zip(recip.iter()) {
+                    *d = ((e * a) >> self.w) as f32 * self.inv_qmax;
+                }
+                for (o, &k) in orow.iter_mut().zip(idx.iter()) {
+                    *o = deq[k as usize];
+                }
+            } else {
+                for (o, &k) in orow.iter_mut().zip(idx.iter()) {
+                    *o = ((recip[k as usize] * a) >> self.w) as f32 * self.inv_qmax;
+                }
+            }
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -172,5 +198,25 @@ mod tests {
         let e = SoftmaxRexp::new(Precision::Uint8, Some(256));
         let out = e.apply(&x, 17);
         assert!(out.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn fused_gather_matches_integer_stage() {
+        // the hoisted (n >= table) and direct (n < table) dequant paths must
+        // both equal sig_int * 1/qmax exactly
+        testkit::check("rexp fused dequant", 25, |rng| {
+            let prec = *rng.choice(&crate::lut::ALL_PRECISIONS);
+            let e = SoftmaxRexp::new(prec, None);
+            let table_len = e.tables().recip_e.len();
+            // straddle the hoist threshold
+            let n = rng.usize(1, 2 * table_len);
+            let rows = rng.usize(1, 6);
+            let x = rng.normal_vec(rows * n, 2.5);
+            let mut ints = vec![0i32; x.len()];
+            e.run_int(&x, n, &mut ints);
+            let inv = 1.0 / prec.qmax() as f32;
+            let want: Vec<f32> = ints.iter().map(|&v| v as f32 * inv).collect();
+            assert_eq!(e.apply(&x, n), want);
+        });
     }
 }

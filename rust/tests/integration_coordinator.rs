@@ -1,12 +1,14 @@
 //! Coordinator integration: the serving loop end to end over real
 //! artifacts (softmax + classification routes), backpressure, batching
-//! and metrics.
+//! and metrics. The CPU-fallback softmax route and the backpressure
+//! invariant are tested WITHOUT artifacts (an empty manifest suffices).
 
 use std::time::Duration;
 
 use lutmax::config::ServerConfig;
 use lutmax::coordinator::{Batcher, Coordinator, Payload, Reply, RouteTable};
 use lutmax::runtime::Tensor;
+use lutmax::softmax::{engine, Mode, SoftmaxEngine};
 use lutmax::testkit::Rng;
 use lutmax::workload;
 
@@ -22,6 +24,15 @@ fn server_cfg() -> ServerConfig {
         workers: 1,
         queue_depth: 64,
     }
+}
+
+/// A throwaway artifacts dir with an EMPTY manifest: enough to start the
+/// coordinator for CPU-fallback routes and queue-discipline tests.
+fn empty_artifacts_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("lutmax_test_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir
 }
 
 #[test]
@@ -119,6 +130,181 @@ fn batcher_policy_respects_order() {
         b.push(i);
     }
     assert_eq!(b.pop_ready(std::time::Instant::now()), Some(vec![0, 1, 2]));
+}
+
+#[test]
+fn cpu_softmax_route_serves_without_artifacts_bit_exactly() {
+    // the CPU fallback (row-parallel software engine) needs no PJRT and no
+    // compiled artifacts — and never touches engine.execute
+    let cfg = ServerConfig {
+        artifacts: empty_artifacts_dir("cpu_route"),
+        max_batch: 4,
+        batch_timeout_us: 500,
+        workers: 2,
+        queue_depth: 64,
+    };
+    let routes = RouteTable {
+        softmax: Some("cpu:rexp:uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg, routes).unwrap();
+    let mut rng = Rng::new(12);
+    let seq = engine(Mode::Rexp, lutmax::lut::Precision::Uint8, None);
+
+    let inputs: Vec<Tensor> = (0..6)
+        .map(|i| {
+            let rows = 1 + i % 3;
+            Tensor::f32(vec![rows, 32], rng.normal_vec(rows * 32, 2.0))
+        })
+        .collect();
+    let rxs: Vec<_> = inputs
+        .iter()
+        .map(|t| c.submit(Payload::Softmax(t.clone())).unwrap())
+        .collect();
+    for (t, rx) in inputs.iter().zip(rxs) {
+        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Reply::Softmax(out) => {
+                assert_eq!(out.dims, t.dims);
+                // bit-exact against the sequential software engine
+                assert_eq!(
+                    out.as_f32().unwrap(),
+                    &seq.apply(t.as_f32().unwrap(), 32)[..]
+                );
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    let stats = c.stats().unwrap();
+    let m = &stats.per_task["softmax"];
+    assert_eq!(m.requests, 6);
+    assert!(m.batches >= 1);
+    assert_eq!(stats.executions, 0, "CPU route must not execute PJRT");
+    c.shutdown().unwrap();
+}
+
+#[test]
+fn cpu_softmax_route_rejects_malformed_payload_individually() {
+    let cfg = ServerConfig {
+        artifacts: empty_artifacts_dir("cpu_badshape"),
+        max_batch: 8,
+        batch_timeout_us: 500,
+        workers: 1,
+        queue_depth: 64,
+    };
+    let routes = RouteTable {
+        softmax: Some("cpu:lut2d:uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg, routes).unwrap();
+    let mut rng = Rng::new(13);
+    let good = Tensor::f32(vec![2, 16], rng.normal_vec(32, 1.0));
+    let bad = Tensor::f32(vec![8], rng.normal_vec(8, 1.0)); // 1-D: invalid
+    let rx_good = c.submit(Payload::Softmax(good)).unwrap();
+    let rx_bad = c.submit(Payload::Softmax(bad)).unwrap();
+    match rx_good.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Reply::Softmax(t) => assert_eq!(t.dims, vec![2, 16]),
+        other => panic!("unexpected {other:?}"),
+    }
+    match rx_bad.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Reply::Error(e) => assert!(e.contains("2-D"), "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    c.shutdown().unwrap();
+}
+
+#[test]
+fn submit_backpressure_never_overshoots_queue_depth() {
+    // regression: the old separate load-then-fetch_add admission let
+    // concurrent submitters overshoot queue_depth; the CAS reservation
+    // must cap accepted-in-flight at exactly the configured depth
+    const DEPTH: usize = 8;
+    let cfg = ServerConfig {
+        artifacts: empty_artifacts_dir("backpressure"),
+        max_batch: 1024,
+        batch_timeout_us: 60_000_000, // park everything in the batcher
+        workers: 1,
+        queue_depth: DEPTH,
+    };
+    // no softmax route needed: queued requests hold their slot either way
+    let c = Coordinator::start(cfg, RouteTable::default()).unwrap();
+
+    let accepted = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+    let mut threads = Vec::new();
+    for t in 0..16 {
+        let client = c.client();
+        let accepted = accepted.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            let mut rxs = Vec::new();
+            for _ in 0..8 {
+                let x = Tensor::f32(vec![1, 8], rng.normal_vec(8, 1.0));
+                if let Ok(rx) = client.submit(Payload::Softmax(x)) {
+                    accepted.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    rxs.push(rx);
+                }
+            }
+            rxs // keep receivers alive until joined
+        }));
+    }
+    let mut all_rxs = Vec::new();
+    for th in threads {
+        all_rxs.extend(th.join().unwrap());
+    }
+    let ok = accepted.load(std::sync::atomic::Ordering::SeqCst);
+    assert!(
+        ok <= DEPTH,
+        "backpressure overshot: {ok} accepted with queue_depth {DEPTH}"
+    );
+    assert!(ok > 0, "some submissions must get through");
+    // shutdown drains the parked requests with errors
+    c.shutdown().unwrap();
+    for rx in all_rxs {
+        match rx.recv().unwrap() {
+            Reply::Error(e) => assert!(e.contains("shutting down") || e.contains("route"), "{e}"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn pjrt_softmax_one_execution_per_batched_round() {
+    // the pipeline builds LUT operand tensors once at startup and coalesces
+    // a whole ready batch into ONE padded execute: k requests -> 1 execution
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = server_cfg();
+    cfg.max_batch = 3;
+    cfg.batch_timeout_us = 5_000_000; // release only on a full batch
+    let routes = RouteTable {
+        softmax: Some("softmax__rexp__uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg, routes).unwrap();
+    let mut rng = Rng::new(14);
+    let rxs: Vec<_> = (0..3)
+        .map(|_| {
+            let x = Tensor::f32(vec![2, 64], rng.normal_vec(2 * 64, 2.0));
+            c.submit(Payload::Softmax(x)).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            Reply::Softmax(t) => assert_eq!(t.dims, vec![2, 64]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let stats = c.stats().unwrap();
+    let m = &stats.per_task["softmax"];
+    assert_eq!(m.requests, 3);
+    assert_eq!(m.batches, 1, "3 requests with max_batch 3 -> one round");
+    assert_eq!(
+        stats.executions, 1,
+        "one batched softmax round must cost exactly one PJRT execution"
+    );
+    c.shutdown().unwrap();
 }
 
 #[test]

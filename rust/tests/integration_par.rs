@@ -1,0 +1,114 @@
+//! Parallel == sequential bit-exactness: `ParSoftmax` must produce output
+//! that is `==` (not approximately equal) to the wrapped engine for every
+//! `Mode` x `Precision` x ragged batch shape, and the scratch-carrying
+//! `run_with` entry point must match `run` exactly across reuse.
+
+use std::sync::Arc;
+
+use lutmax::lut::{Precision, ALL_PRECISIONS};
+use lutmax::softmax::{engine, engine_parallel, Mode, ParSoftmax, Scratch, SoftmaxEngine};
+use lutmax::testkit;
+
+const ALL_MODES: [Mode; 6] = [
+    Mode::Exact,
+    Mode::Rexp,
+    Mode::Lut2d,
+    Mode::PriorartEq2,
+    Mode::PriorartEq2Plus,
+    Mode::Aggressive,
+];
+
+#[test]
+fn par_bit_exact_across_modes_precisions_and_shapes() {
+    // one pool per (mode, precision); ragged shapes hammered through each
+    for mode in ALL_MODES {
+        for prec in ALL_PRECISIONS {
+            let seq = engine(mode, prec, None);
+            let par = engine_parallel(mode, prec, None, Some(4));
+            testkit::check(&format!("par == seq {mode:?}/{}", prec.name()), 8, |rng| {
+                let n = rng.usize(1, 96);
+                let rows = rng.usize(1, 64);
+                let x = rng.normal_vec(rows * n, 2.5);
+                assert_eq!(
+                    par.apply(&x, n),
+                    seq.apply(&x, n),
+                    "{mode:?}/{} rows={rows} n={n}",
+                    prec.name()
+                );
+            });
+        }
+    }
+}
+
+#[test]
+fn par_bit_exact_on_edge_shapes() {
+    let cases: &[(usize, usize)] = &[
+        (1, 1),    // single element
+        (1, 128),  // one row
+        (2, 1),    // n = 1, fewer rows than workers
+        (3, 7),    // rows < workers
+        (4, 4096), // big rows, few of them
+        (512, 1),  // n = 1, many rows (fans out)
+        (129, 33), // odd everything
+    ];
+    let mut rng = testkit::Rng::new(77);
+    for mode in [Mode::Rexp, Mode::Lut2d, Mode::Exact] {
+        let seq = engine(mode, Precision::Uint8, None);
+        let par = engine_parallel(mode, Precision::Uint8, None, Some(4));
+        for &(rows, n) in cases {
+            let x = rng.normal_vec(rows * n, 2.0);
+            assert_eq!(par.apply(&x, n), seq.apply(&x, n), "{mode:?} rows={rows} n={n}");
+        }
+    }
+}
+
+#[test]
+fn par_empty_batch_is_noop() {
+    let par = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(2));
+    assert!(par.apply(&[], 16).is_empty());
+}
+
+#[test]
+fn par_preserves_alpha_override_tables() {
+    // the DETR-case 256-entry alpha table must survive wrapping
+    let mut rng = testkit::Rng::new(5);
+    let x = rng.normal_vec(64 * 48, 1.5);
+    let seq = engine(Mode::Rexp, Precision::Uint8, Some(256));
+    let par = engine_parallel(Mode::Rexp, Precision::Uint8, Some(256), Some(3));
+    assert_eq!(par.apply(&x, 48), seq.apply(&x, 48));
+}
+
+#[test]
+fn run_with_matches_run_across_scratch_reuse() {
+    // one Scratch threaded through many engines/shapes must never change
+    // results vs the fresh-scratch `run`
+    let mut rng = testkit::Rng::new(11);
+    let mut scratch = Scratch::new();
+    for mode in ALL_MODES {
+        for prec in [Precision::Uint8, Precision::Int16] {
+            let e = engine(mode, prec, None);
+            for _ in 0..4 {
+                let n = rng.usize(1, 160);
+                let rows = rng.usize(1, 12);
+                let x = rng.normal_vec(rows * n, 2.0);
+                let mut got = vec![0.0f32; x.len()];
+                e.run_with(&x, n, &mut got, &mut scratch);
+                assert_eq!(got, e.apply(&x, n), "{mode:?}/{} n={n}", prec.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn big_batch_actually_fans_out_and_stays_exact() {
+    let mut rng = testkit::Rng::new(21);
+    let n = 128;
+    let rows = 256;
+    let x = rng.normal_vec(rows * n, 2.0);
+    let seq = engine(Mode::Lut2d, Precision::Uint8, None);
+    let par = ParSoftmax::with_workers(Arc::from(engine(Mode::Lut2d, Precision::Uint8, None)), 4);
+    assert_eq!(par.apply(&x, n), seq.apply(&x, n));
+    assert!(par.parallel_batches() >= 1, "32k elements must use the pool");
+    assert_eq!(par.workers(), 4);
+    assert_eq!(par.inner().name(), "lut2d");
+}

@@ -5,7 +5,7 @@
 
 use lutmax::lut::{lut2d_tables, rexp_tables, Precision};
 use lutmax::runtime::{tensorio, Engine, Manifest, Tensor};
-use lutmax::softmax::{self, Mode};
+use lutmax::softmax::{self, Mode, SoftmaxEngine as _};
 use lutmax::testkit;
 
 fn artifacts() -> std::path::PathBuf {

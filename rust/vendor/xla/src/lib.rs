@@ -1,0 +1,193 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The container has no XLA/PJRT shared libraries, so this vendored crate
+//! mirrors the API surface `lutmax::runtime` uses and fails *at runtime*
+//! for any operation that would need the real backend. Client creation
+//! and host-buffer staging succeed (so servers can start and CPU-fallback
+//! paths work end to end); `compile`/`execute`/literal reads return
+//! [`Error`]. Integration tests gate on the artifacts directory, which
+//! `make artifacts` (python + jax) produces — absent artifacts, nothing
+//! reaches the erroring calls.
+//!
+//! Swap this path dependency for the real `xla` crate to execute HLO
+//! artifacts; the signatures below match the subset the workspace calls.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (offline `xla` stub; link the real \
+         xla crate to execute HLO artifacts)"
+    ))
+}
+
+/// Element types the runtime distinguishes (subset of XLA's).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Host-visible element types `Literal::to_vec` can produce.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+    Unsupported,
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn shape(&self) -> Result<Shape> {
+        Err(unavailable("Literal::shape"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable("Literal::array_shape"))
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::decompose_tuple"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtDevice {
+    _private: (),
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: Borrow<PjRtBuffer>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Succeeds: server startup and CPU-fallback serving must not depend
+    /// on the real backend being present.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { _private: () })
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    /// Staging host data succeeds (the buffer is a placeholder); anything
+    /// that would read it back goes through the erroring calls above.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { _private: () })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_starts_but_compile_errors() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto::from_text_file("/no/such/file.hlo.txt");
+        assert!(proto.is_err());
+        let buf = c.buffer_from_host_buffer(&[1.0f32], &[1], None).unwrap();
+        assert!(buf.to_literal_sync().is_err());
+    }
+}

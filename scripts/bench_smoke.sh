@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Bench smoke: run every bench binary with shrunk budgets and dump the
+# results as JSON trajectory files (BENCH_<name>.json at the repo root).
+#
+#   BENCH_FAST=1    -> benchkit uses 50 ms / 5 iter minimum budgets
+#   BENCH_JSON=path -> benchkit::flush_json() writes the suite results
+#
+# Used by `make bench-smoke` after `cargo test`, so tier-1 verification
+# also exercises the bench path. Benches that need PJRT artifacts skip
+# their serving sections (and write an empty result set) when
+# `artifacts/manifest.json` is absent.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT_DIR="${BENCH_OUT_DIR:-.}"
+
+for b in softmax hwsim eval coordinator runtime; do
+    echo "== bench-smoke: ${b}_bench =="
+    BENCH_FAST=1 BENCH_JSON="${OUT_DIR}/BENCH_${b}.json" \
+        cargo bench --bench "${b}_bench"
+done
+
+echo "bench-smoke OK; trajectory files:"
+ls -l "${OUT_DIR}"/BENCH_*.json
