@@ -3,7 +3,10 @@
 //! the simulator's own throughput.
 
 use lutmax::benchkit::{flush_json, Bench};
-use lutmax::hwsim::{all_designs, simulate, simulate_row_parallel, Design, DesignKind, SimConfig};
+use lutmax::hwsim::{
+    all_designs, simulate, simulate_attention, simulate_row_parallel, AttnSimConfig, Design,
+    DesignKind, SimConfig,
+};
 use lutmax::lut::Precision;
 
 fn main() {
@@ -46,6 +49,23 @@ fn main() {
             r.cycles_per_elem(),
             r.area,
             r.lut_bytes
+        );
+    }
+
+    println!("\n=== attention block: fused vs unfused (cycle model) ===");
+    println!("{:<20} {:>12} {:>12} {:>9}", "design", "fused c/e", "unfused c/e", "ratio");
+    for kind in [DesignKind::Rexp, DesignKind::Lut2d] {
+        let d = Design::new(kind, Precision::Uint8);
+        // mirrors the software bench's attn/h8/L128 shape (d_head 64)
+        let cfg = AttnSimConfig { heads: 8, len_q: 128, len_k: 128, d_head: 64, lanes: 4 };
+        let f = simulate_attention(&d, cfg, true);
+        let u = simulate_attention(&d, cfg, false);
+        println!(
+            "{:<20} {:>12.2} {:>12.2} {:>8.2}x",
+            d.name(),
+            f.cycles_per_elem(),
+            u.cycles_per_elem(),
+            u.cycles as f64 / f.cycles as f64
         );
     }
 

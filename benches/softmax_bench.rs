@@ -4,15 +4,23 @@
 //! Labels are STABLE — `BENCH_JSON=BENCH_softmax.json` makes this binary
 //! the repo's perf trajectory file (refreshed by `make bench-smoke`):
 //!   uint8/<mode>          fused single-thread hot path (256 rows x 128)
+//!   i8/<mode>             integer pass-1 ingestion on the same rows
+//!                         (quantized) — must beat uint8/<mode>
 //!   rexp/<prec>           precision sweep
 //!   lut2d/n=<n>           row-length scaling
 //!   par/<mode>/w<k>       row-parallel scaling over worker counts
+//!   attn/h<H>/L<L>        fused integer QK^T→softmax(LUT)→×V (uint8 rexp)
+//!   attn_unfused/h<H>/L<L>  the separate-pass compose (dequant, f32
+//!                         QK^T, softmax, ×V) — attn/* must be >= 1.3x
 
 use std::sync::Arc;
 
+use lutmax::attention::{
+    AttnMask, AttnScratch, AttnShape, ComposedAttention, FusedAttention, QuantTensor,
+};
 use lutmax::benchkit::{flush_json, Bench, Suite};
 use lutmax::lut::Precision;
-use lutmax::softmax::{engine, Mode, ParSoftmax, Scratch, SoftmaxEngine};
+use lutmax::softmax::{engine, IntRow, Mode, ParSoftmax, Scratch, SoftmaxEngine};
 use lutmax::testkit::Rng;
 
 fn main() {
@@ -39,6 +47,30 @@ fn main() {
     }
     suite.ratio("uint8/rexp", "uint8/exact");
     suite.ratio("uint8/lut2d", "uint8/exact");
+
+    // i8 ingestion: the same logical rows, already quantized — pass 1 is
+    // pure integer (i8 max scan + clamp/fixed-point address), no float
+    // subtract/cast per element. The acceptance bar: i8/<mode> beats
+    // uint8/<mode>.
+    let mut suite = Suite::new("i8 integer pass-1 ingestion (256 rows x 128, quantized)");
+    let (xq, affine) = lutmax::quant::quantize(&x);
+    let irow = IntRow::from_affine(&affine);
+    for mode in [Mode::Rexp, Mode::Lut2d] {
+        let e = engine(mode, Precision::Uint8, None);
+        suite.add(
+            Bench::new(format!("i8/{}", mode.name()))
+                .items(xq.len())
+                .run(|| e.run_i8_with(&xq, n, irow, &mut out, &mut scratch)),
+        );
+        // the f32 pass-1 on the same rows, re-timed in this suite so the
+        // speedup line is computed from like-for-like samples
+        suite.add(
+            Bench::new(format!("i8_ref/{}", mode.name()))
+                .items(x.len())
+                .run(|| e.run_with(&x, n, &mut out, &mut scratch)),
+        );
+        suite.ratio(&format!("i8/{}", mode.name()), &format!("i8_ref/{}", mode.name()));
+    }
 
     let mut suite = Suite::new("softmax SW models across precisions (rexp)");
     for p in lutmax::lut::ALL_PRECISIONS {
@@ -87,6 +119,40 @@ fn main() {
                 );
             }
         }
+    }
+
+    // fused integer attention vs the unfused compose (uint8 rexp).
+    // items = score elements (B·H·L·S), the softmax-work measure; the
+    // acceptance bar is attn/* >= 1.3x attn_unfused/* element throughput.
+    let mut suite = Suite::new("fused integer attention vs unfused compose (uint8 rexp)");
+    for (h, l) in [(4usize, 64usize), (8, 128)] {
+        let shape = AttnShape::square(1, h, l, 64);
+        let (qt, kt, vt) = lutmax::workload::attn_qkv(&mut rng, &shape, 1.0);
+        let q = QuantTensor::quantize(qt.as_f32().unwrap());
+        let k = QuantTensor::quantize(kt.as_f32().unwrap());
+        let v = QuantTensor::quantize(vt.as_f32().unwrap());
+        let mask = AttnMask::Dense;
+        let mut aout = vec![0.0f32; shape.q_len()];
+        let fused = FusedAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let mut ascratch = AttnScratch::new();
+        suite.add(
+            Bench::new(format!("attn/h{h}/L{l}"))
+                .items(shape.score_len())
+                .run(|| fused.run(&q, &k, &v, &shape, &mask, &mut aout, &mut ascratch)),
+        );
+        // same alpha table as the fused kernel so the compose does the
+        // same logical work
+        let composed = ComposedAttention::new(engine(
+            Mode::Rexp,
+            Precision::Uint8,
+            Some(lutmax::attention::ATTN_ALPHA_LEN),
+        ));
+        suite.add(
+            Bench::new(format!("attn_unfused/h{h}/L{l}"))
+                .items(shape.score_len())
+                .run(|| composed.run_quant(&q, &k, &v, &shape, &mask, &mut aout)),
+        );
+        suite.ratio(&format!("attn/h{h}/L{l}"), &format!("attn_unfused/h{h}/L{l}"));
     }
 
     if let Some(path) = flush_json().expect("write BENCH_JSON") {

@@ -1,0 +1,623 @@
+//! The fused integer attention kernel and its unfused f32 compose.
+//!
+//! Per head, per query row (single sweep, no f32 probability matrix):
+//!
+//!   1. `scores[j] = Σ_d q[i][d]·k[j][d]` raw i8×i8 widening MACs; the
+//!      affine zero points are hoisted algebraically:
+//!      `(q-z_q)·(k-z_k) = q·k - z_k·Σq - z_q·Σk + d_h·z_q·z_k`, with
+//!      `Σk[j]` computed once per head and `Σq[i]` once per row — the
+//!      inner loop is a pure dot product.
+//!   2. integer row max, then the shared softmax pass 1
+//!      ([`pass1_scores_mapped`]): LUT address per element via one
+//!      fixed-point multiply, integer row sum, addresses parked.
+//!   3. the per-row normalizer (REXP `LUT_alpha` read / 2D-LUT column
+//!      select) and `sig_int` per element — hoisted through a per-row
+//!      integer mirror of the (tiny) table when the row is long enough,
+//!      exactly like the engines' fused pass 2.
+//!   4. `out[i][d] = (Σ_j sig[j]·v_raw[j][d] − z_v·Σsig) · s_v/qmax`:
+//!      an i32-multiply/i64-accumulate MAC over the widened V block, one
+//!      fused dequant per output element.
+//!
+//! Masked (causal/PAD) positions are excluded by loop bound and
+//! contribute exactly-zero probability. [`ComposedAttention`] is the
+//! unfused baseline: explicit dequant passes, a materialized f32 score
+//! matrix, a full softmax pass, then a separate f32 `probs @ V` — the
+//! compose the `attn/*` vs `attn_unfused/*` bench labels compare.
+
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use super::{AttnMask, AttnShape, QuantTensor, ATTN_ALPHA_LEN};
+use crate::lut::Precision;
+use crate::quant;
+use crate::softmax::{
+    pass1_scores_mapped, IntMap, Mode, ParSoftmax, Scratch, SoftmaxEngine, SoftmaxLut2d,
+    SoftmaxRexp,
+};
+
+/// Don't scatter heads across the pool below this many MACs per head
+/// (`len_q·len_k·d_head`): a pool wake + per-task synchronization costs
+/// more than computing a tiny head inline — the same tiny-batch policy
+/// [`ParSoftmax`] applies to softmax row shards. ~4k MACs is a few µs of
+/// integer work, on the order of one task round-trip.
+const MIN_HEAD_MACS: usize = 4096;
+
+/// Reusable per-thread workspace of the fused kernel (score row, LUT
+/// addresses, sig row, widened V/K-sum blocks, output accumulators).
+#[derive(Debug, Default)]
+pub struct AttnScratch {
+    scores: Vec<i32>,
+    idx: Vec<i32>,
+    sig: Vec<i32>,
+    sig_tab: Vec<i32>,
+    v32: Vec<i32>,
+    ksum: Vec<i32>,
+    acc: Vec<i64>,
+}
+
+impl AttnScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn prepare(&mut self, len_k: usize, d_head: usize, table_len: usize) {
+        grow_i32(&mut self.scores, len_k);
+        grow_i32(&mut self.idx, len_k);
+        grow_i32(&mut self.sig, len_k);
+        grow_i32(&mut self.sig_tab, table_len);
+        grow_i32(&mut self.v32, len_k * d_head);
+        grow_i32(&mut self.ksum, len_k);
+        if self.acc.len() < d_head {
+            self.acc.resize(d_head, 0);
+        }
+    }
+}
+
+fn grow_i32(v: &mut Vec<i32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0);
+    }
+}
+
+enum IntSoftmax {
+    Rexp(SoftmaxRexp),
+    Lut2d(SoftmaxLut2d),
+}
+
+/// Fused integer-native attention over one of the paper's LUT softmax
+/// datapaths. Construct once per (mode, precision, alpha) route; `run` /
+/// `run_par` per problem.
+pub struct FusedAttention {
+    mode: Mode,
+    softmax: IntSoftmax,
+    prec: Precision,
+    inv_qmax: f32,
+}
+
+impl FusedAttention {
+    /// `alpha_len = None` uses [`ATTN_ALPHA_LEN`] (attention rows are
+    /// long; the NLP default saturates — see the module docs). Only the
+    /// LUT modes have an integer datapath; anything else is an error.
+    pub fn new(mode: Mode, prec: Precision, alpha_len: Option<usize>) -> Result<Self> {
+        let softmax = match mode {
+            Mode::Rexp => {
+                IntSoftmax::Rexp(SoftmaxRexp::new(prec, Some(alpha_len.unwrap_or(ATTN_ALPHA_LEN))))
+            }
+            Mode::Lut2d => IntSoftmax::Lut2d(SoftmaxLut2d::new(prec)),
+            other => bail!("fused attention needs a LUT softmax mode, got {:?}", other),
+        };
+        Ok(Self { mode, softmax, prec, inv_qmax: 1.0 / prec.qmax() as f32 })
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    fn table(&self) -> &[i32] {
+        match &self.softmax {
+            IntSoftmax::Rexp(e) => &e.tables().recip_e,
+            IntSoftmax::Lut2d(e) => &e.tables().exp,
+        }
+    }
+
+    /// The diff→address map for integer scores whose unit is `step` logit
+    /// units (for QK^T accumulators, `step = s_q·s_k/√d_h`).
+    fn int_map(&self, step: f32) -> IntMap {
+        match &self.softmax {
+            IntSoftmax::Rexp(e) => e.int_map(step),
+            IntSoftmax::Lut2d(e) => e.int_map(step),
+        }
+    }
+
+    /// Integer softmax over `scr.scores[..n]` (pass 1 + normalizer +
+    /// sig), writing `scr.sig[..n]`; returns `Σ sig` for the zero-point
+    /// correction.
+    fn sig_row(&self, n: usize, map: IntMap, scr: &mut AttnScratch) -> i64 {
+        let table = self.table();
+        let m = scr.scores[..n].iter().copied().max().unwrap_or(0);
+        let s = pass1_scores_mapped(&scr.scores[..n], m, map, table, &mut scr.idx[..n]);
+        // per-row integer mirror of the sig chain (hoisted for long rows,
+        // exactly like the engines' fused pass 2)
+        let hoist = n >= table.len();
+        match &self.softmax {
+            IntSoftmax::Rexp(e) => {
+                let w = e.tables().prec.w();
+                let a = e.alpha_for(s);
+                let recip = &e.tables().recip_e;
+                if hoist {
+                    for (t, &ev) in scr.sig_tab.iter_mut().zip(recip.iter()) {
+                        *t = (ev * a) >> w;
+                    }
+                    for (g, &k) in scr.sig[..n].iter_mut().zip(&scr.idx[..n]) {
+                        *g = scr.sig_tab[k as usize];
+                    }
+                } else {
+                    for (g, &k) in scr.sig[..n].iter_mut().zip(&scr.idx[..n]) {
+                        *g = (recip[k as usize] * a) >> w;
+                    }
+                }
+            }
+            IntSoftmax::Lut2d(e) => {
+                let col = e.col_for(s);
+                let t = e.tables();
+                if hoist {
+                    for (slot, &r) in scr.sig_tab.iter_mut().zip(t.row.iter()) {
+                        *slot = t.sigma_at(r as usize, col);
+                    }
+                    for (g, &k) in scr.sig[..n].iter_mut().zip(&scr.idx[..n]) {
+                        *g = scr.sig_tab[k as usize];
+                    }
+                } else {
+                    for (g, &k) in scr.sig[..n].iter_mut().zip(&scr.idx[..n]) {
+                        *g = t.sigma_at(t.row[k as usize] as usize, col);
+                    }
+                }
+            }
+        }
+        scr.sig[..n].iter().map(|&v| v as i64).sum()
+    }
+
+    /// One head: `q_h (L,d)`, `k_h/v_h (S,d)` raw i8 blocks → `o_h (L,d)`.
+    #[allow(clippy::too_many_arguments)]
+    fn head(
+        &self,
+        qh: &[i8],
+        kh: &[i8],
+        vh: &[i8],
+        zq: i32,
+        zk: i32,
+        zv: i32,
+        b: usize,
+        shape: &AttnShape,
+        mask: &AttnMask,
+        map: IntMap,
+        out_scale: f32,
+        oh: &mut [f32],
+        scr: &mut AttnScratch,
+    ) {
+        let (s, dh) = (shape.len_k, shape.d_head);
+        scr.prepare(s, dh, self.table().len());
+        // per-head hoists: widened V block + per-key-row byte sums
+        for (w32, &v) in scr.v32[..s * dh].iter_mut().zip(vh) {
+            *w32 = v as i32;
+        }
+        for (ks, krow) in scr.ksum[..s].iter_mut().zip(kh.chunks_exact(dh)) {
+            *ks = krow.iter().map(|&v| v as i32).sum();
+        }
+        let zqzk = dh as i32 * zq * zk;
+        for (i, orow) in oh.chunks_exact_mut(dh).enumerate() {
+            let valid = mask.valid_len(b, i, s);
+            if valid == 0 {
+                orow.fill(0.0);
+                continue;
+            }
+            let qi = &qh[i * dh..(i + 1) * dh];
+            let qsum: i32 = qi.iter().map(|&v| v as i32).sum();
+            // 1. integer QK^T row (zero points hoisted out of the dot)
+            for (j, sc) in scr.scores[..valid].iter_mut().enumerate() {
+                let kj = &kh[j * dh..(j + 1) * dh];
+                let mut dot = 0i32;
+                for (&a, &bb) in qi.iter().zip(kj) {
+                    dot += a as i32 * bb as i32;
+                }
+                *sc = dot - zk * qsum - zq * scr.ksum[j] + zqzk;
+            }
+            // 2./3. integer softmax → sig_int
+            let sig_sum = self.sig_row(valid, map, scr);
+            // 4. sig × V MAC (i32 products — sig ≤ qmax ≤ 32767, |v| ≤ 128
+            // — accumulated in i64 so any row length is safe)
+            scr.acc[..dh].fill(0);
+            for (j, vrow) in scr.v32[..valid * dh].chunks_exact(dh).enumerate() {
+                let g = scr.sig[j];
+                for (a, &v) in scr.acc[..dh].iter_mut().zip(vrow) {
+                    *a += (g * v) as i64;
+                }
+            }
+            let corr = zv as i64 * sig_sum;
+            for (o, &a) in orow.iter_mut().zip(&scr.acc[..dh]) {
+                *o = (a - corr) as f32 * out_scale;
+            }
+        }
+    }
+
+    /// Score-unit step and derived map/scale for a (q, k, v) triple.
+    fn plan(&self, q: &QuantTensor, k: &QuantTensor, v: &QuantTensor, shape: &AttnShape) -> (IntMap, f32) {
+        let step =
+            (q.affine.scale as f64 * k.affine.scale as f64 / (shape.d_head as f64).sqrt()) as f32;
+        (self.int_map(step), v.affine.scale * self.inv_qmax)
+    }
+
+    /// Fused attention, sequential over heads. `out` is `(B,H,L,d)`
+    /// row-major like `q`.
+    pub fn run(
+        &self,
+        q: &QuantTensor,
+        k: &QuantTensor,
+        v: &QuantTensor,
+        shape: &AttnShape,
+        mask: &AttnMask,
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) {
+        check_shapes(q, k, v, shape, mask, out);
+        let (map, out_scale) = self.plan(q, k, v, shape);
+        let (ql, kl, ol) = (shape.len_q * shape.d_head, shape.len_k * shape.d_head, shape.len_q * shape.d_head);
+        for h in 0..shape.heads_total() {
+            let b = h / shape.heads;
+            self.head(
+                &q.data[h * ql..(h + 1) * ql],
+                &k.data[h * kl..(h + 1) * kl],
+                &v.data[h * kl..(h + 1) * kl],
+                q.affine.zero_point,
+                k.affine.zero_point,
+                v.affine.zero_point,
+                b,
+                shape,
+                mask,
+                map,
+                out_scale,
+                &mut out[h * ol..(h + 1) * ol],
+                scr,
+            );
+        }
+    }
+
+    /// Fused attention with the B×H head-blocks scattered across a
+    /// [`ParSoftmax`] worker pool (bit-identical to [`FusedAttention::run`]
+    /// — heads are independent and write disjoint output blocks).
+    /// Problems with fewer than two heads or under [`MIN_HEAD_MACS`] of
+    /// work per head run inline: tiny requests must not pay a pool wake.
+    pub fn run_par(
+        &self,
+        q: &QuantTensor,
+        k: &QuantTensor,
+        v: &QuantTensor,
+        shape: &AttnShape,
+        mask: &AttnMask,
+        pool: &ParSoftmax,
+        out: &mut [f32],
+    ) {
+        let head_macs = shape.len_q * shape.len_k * shape.d_head;
+        if shape.heads_total() < 2 || head_macs < MIN_HEAD_MACS {
+            let mut scr = AttnScratch::new();
+            return self.run(q, k, v, shape, mask, out, &mut scr);
+        }
+        check_shapes(q, k, v, shape, mask, out);
+        let (map, out_scale) = self.plan(q, k, v, shape);
+        let (ql, kl, ol) = (shape.len_q * shape.d_head, shape.len_k * shape.d_head, shape.len_q * shape.d_head);
+        // per-worker AttnScratch instances, reused across head tasks
+        let spare: Mutex<Vec<AttnScratch>> = Mutex::new(Vec::new());
+        struct OutPtr(*mut f32);
+        // SAFETY: head tasks write disjoint `ol`-sized blocks of `out`,
+        // and `scatter` blocks until every task has finished.
+        unsafe impl Send for OutPtr {}
+        unsafe impl Sync for OutPtr {}
+        let optr = OutPtr(out.as_mut_ptr());
+        let mut pool_scratch = Scratch::new();
+        pool.scatter(shape.heads_total(), &mut pool_scratch, &|h, _s| {
+            let mut scr = spare.lock().unwrap().pop().unwrap_or_default();
+            let b = h / shape.heads;
+            let oh = unsafe { std::slice::from_raw_parts_mut(optr.0.add(h * ol), ol) };
+            self.head(
+                &q.data[h * ql..(h + 1) * ql],
+                &k.data[h * kl..(h + 1) * kl],
+                &v.data[h * kl..(h + 1) * kl],
+                q.affine.zero_point,
+                k.affine.zero_point,
+                v.affine.zero_point,
+                b,
+                shape,
+                mask,
+                map,
+                out_scale,
+                oh,
+                &mut scr,
+            );
+            spare.lock().unwrap().push(scr);
+        });
+    }
+
+    /// Verification view: the integer-softmax attention map of head block
+    /// `bh` (`0..heads_total`) as f32 probabilities, `(L, S)` row-major.
+    /// Masked positions are exactly `0.0`. Not a hot path (allocates).
+    pub fn probs_head(
+        &self,
+        q: &QuantTensor,
+        k: &QuantTensor,
+        shape: &AttnShape,
+        mask: &AttnMask,
+        bh: usize,
+    ) -> Vec<f32> {
+        let (l, s, dh) = (shape.len_q, shape.len_k, shape.d_head);
+        let step =
+            (q.affine.scale as f64 * k.affine.scale as f64 / (dh as f64).sqrt()) as f32;
+        let map = self.int_map(step);
+        let (zq, zk) = (q.affine.zero_point, k.affine.zero_point);
+        let qh = &q.data[bh * l * dh..(bh + 1) * l * dh];
+        let kh = &k.data[bh * s * dh..(bh + 1) * s * dh];
+        let b = bh / shape.heads;
+        let mut scr = AttnScratch::new();
+        scr.prepare(s, dh, self.table().len());
+        let mut probs = vec![0.0f32; l * s];
+        for i in 0..l {
+            let valid = mask.valid_len(b, i, s);
+            if valid == 0 {
+                continue;
+            }
+            let qi = &qh[i * dh..(i + 1) * dh];
+            for (j, sc) in scr.scores[..valid].iter_mut().enumerate() {
+                let kj = &kh[j * dh..(j + 1) * dh];
+                let mut dot = 0i32;
+                for (&a, &bb) in qi.iter().zip(kj) {
+                    dot += (a as i32 - zq) * (bb as i32 - zk);
+                }
+                *sc = dot;
+            }
+            self.sig_row(valid, map, &mut scr);
+            for (p, &g) in probs[i * s..i * s + valid].iter_mut().zip(&scr.sig[..valid]) {
+                *p = g as f32 * self.inv_qmax;
+            }
+        }
+        probs
+    }
+}
+
+fn check_shapes(
+    q: &QuantTensor,
+    k: &QuantTensor,
+    v: &QuantTensor,
+    shape: &AttnShape,
+    mask: &AttnMask,
+    out: &[f32],
+) {
+    assert_eq!(q.data.len(), shape.q_len(), "q shape mismatch");
+    assert_eq!(k.data.len(), shape.kv_len(), "k shape mismatch");
+    assert_eq!(v.data.len(), shape.kv_len(), "v shape mismatch");
+    assert_eq!(out.len(), shape.q_len(), "out shape mismatch");
+    if let AttnMask::Padding(lens) = mask {
+        assert_eq!(lens.len(), shape.batch, "one pad length per batch");
+    }
+}
+
+/// The unfused compose the fused kernel is measured against, and the f32
+/// reference for accuracy tests: explicit dequantize passes, a
+/// materialized f32 score matrix per head, a full softmax pass over it,
+/// then a separate f32 `probs @ V`. Intermediates are allocated per call
+/// on purpose — the materialization traffic is what "unfused" means.
+pub struct ComposedAttention {
+    engine: Box<dyn SoftmaxEngine>,
+}
+
+impl ComposedAttention {
+    pub fn new(engine: Box<dyn SoftmaxEngine>) -> Self {
+        Self { engine }
+    }
+
+    /// f32 compose (also the accuracy reference when `engine` is
+    /// `SoftmaxExact`). Layouts as in [`FusedAttention::run`].
+    pub fn run_f32(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        shape: &AttnShape,
+        mask: &AttnMask,
+        out: &mut [f32],
+    ) {
+        let (l, s, dh) = (shape.len_q, shape.len_k, shape.d_head);
+        assert_eq!(q.len(), shape.q_len());
+        assert_eq!(k.len(), shape.kv_len());
+        assert_eq!(v.len(), shape.kv_len());
+        assert_eq!(out.len(), shape.q_len());
+        let inv_sqrt = 1.0 / (dh as f32).sqrt();
+        let mut scores = vec![0.0f32; l * s];
+        let mut probs = vec![0.0f32; s];
+        let mut scratch = Scratch::new();
+        for h in 0..shape.heads_total() {
+            let b = h / shape.heads;
+            let qh = &q[h * l * dh..(h + 1) * l * dh];
+            let kh = &k[h * s * dh..(h + 1) * s * dh];
+            let vh = &v[h * s * dh..(h + 1) * s * dh];
+            let oh = &mut out[h * l * dh..(h + 1) * l * dh];
+            // pass A: materialize the score matrix
+            for i in 0..l {
+                let qi = &qh[i * dh..(i + 1) * dh];
+                for (j, sc) in scores[i * s..(i + 1) * s].iter_mut().enumerate() {
+                    let kj = &kh[j * dh..(j + 1) * dh];
+                    let mut dot = 0.0f32;
+                    for (&a, &bb) in qi.iter().zip(kj) {
+                        dot += a * bb;
+                    }
+                    *sc = dot * inv_sqrt;
+                }
+            }
+            // pass B: softmax over each valid prefix; pass C: probs @ V
+            for (i, orow) in oh.chunks_exact_mut(dh).enumerate() {
+                let valid = mask.valid_len(b, i, s);
+                if valid == 0 {
+                    orow.fill(0.0);
+                    continue;
+                }
+                self.engine.run_with(
+                    &scores[i * s..i * s + valid],
+                    valid,
+                    &mut probs[..valid],
+                    &mut scratch,
+                );
+                orow.fill(0.0);
+                for (j, vrow) in vh[..valid * dh].chunks_exact(dh).enumerate() {
+                    let p = probs[j];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// The integer-ingress compose: dequantize Q/K/V into fresh f32
+    /// buffers (the round-trip the fused path eliminates), then
+    /// [`ComposedAttention::run_f32`].
+    pub fn run_quant(
+        &self,
+        q: &QuantTensor,
+        k: &QuantTensor,
+        v: &QuantTensor,
+        shape: &AttnShape,
+        mask: &AttnMask,
+        out: &mut [f32],
+    ) {
+        let mut qf = vec![0.0f32; q.data.len()];
+        let mut kf = vec![0.0f32; k.data.len()];
+        let mut vf = vec![0.0f32; v.data.len()];
+        quant::dequantize_into(&q.data, q.affine, &mut qf);
+        quant::dequantize_into(&k.data, k.affine, &mut kf);
+        quant::dequantize_into(&v.data, v.affine, &mut vf);
+        self.run_f32(&qf, &kf, &vf, shape, mask, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::SoftmaxExact;
+    use crate::testkit::Rng;
+
+    fn qkv(rng: &mut Rng, shape: &AttnShape) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            rng.normal_vec(shape.q_len(), 1.0),
+            rng.normal_vec(shape.kv_len(), 1.0),
+            rng.normal_vec(shape.kv_len(), 1.0),
+        )
+    }
+
+    #[test]
+    fn fused_rows_resemble_probability_mixes() {
+        // dense probs rows ~ sum to 1 (within LUT quantization), masked
+        // entries are exactly zero
+        let shape = AttnShape::square(1, 2, 32, 16);
+        let mut rng = Rng::new(1);
+        let (qf, kf, _vf) = qkv(&mut rng, &shape);
+        let q = QuantTensor::quantize(&qf);
+        let k = QuantTensor::quantize(&kf);
+        let fused = FusedAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let probs = fused.probs_head(&q, &k, &shape, &AttnMask::Dense, 1);
+        for row in probs.chunks_exact(shape.len_k) {
+            let s: f32 = row.iter().sum();
+            assert!(s > 0.5 && s < 1.5, "row sum {s}");
+        }
+        let causal = fused.probs_head(&q, &k, &shape, &AttnMask::Causal, 0);
+        for i in 0..shape.len_q {
+            for j in i + 1..shape.len_k {
+                assert_eq!(causal[i * shape.len_k + j], 0.0, "({i},{j}) must be masked");
+            }
+        }
+    }
+
+    #[test]
+    fn par_heads_match_sequential_exactly() {
+        let shape = AttnShape::square(2, 3, 24, 8);
+        let mut rng = Rng::new(2);
+        let (qf, kf, vf) = qkv(&mut rng, &shape);
+        let (q, k, v) = (
+            QuantTensor::quantize(&qf),
+            QuantTensor::quantize(&kf),
+            QuantTensor::quantize(&vf),
+        );
+        for mode in [Mode::Rexp, Mode::Lut2d] {
+            let fused = FusedAttention::new(mode, Precision::Uint8, None).unwrap();
+            let mut seq = vec![0.0f32; shape.q_len()];
+            let mut par = vec![0.0f32; shape.q_len()];
+            let mut scr = AttnScratch::new();
+            let mask = AttnMask::Padding(vec![20, 0]);
+            fused.run(&q, &k, &v, &shape, &mask, &mut seq, &mut scr);
+            let pool = crate::softmax::engine_parallel(mode, Precision::Uint8, None, Some(3));
+            fused.run_par(&q, &k, &v, &shape, &mask, &pool, &mut par);
+            assert_eq!(seq, par, "{mode:?}");
+            // batch 1 is fully padded: all-zero output rows
+            let half = shape.q_len() / 2;
+            assert!(seq[half..].iter().all(|&o| o == 0.0));
+            assert!(seq[..half].iter().any(|&o| o != 0.0));
+        }
+    }
+
+    #[test]
+    fn tiny_heads_run_inline_instead_of_waking_the_pool() {
+        // B=1,H=2,L=8,d=16 -> 1024 MACs/head, far below MIN_HEAD_MACS:
+        // run_par must compute inline (and stay == with run)
+        let shape = AttnShape::square(1, 2, 8, 16);
+        let mut rng = Rng::new(3);
+        let (qf, kf, vf) = qkv(&mut rng, &shape);
+        let (q, k, v) = (
+            QuantTensor::quantize(&qf),
+            QuantTensor::quantize(&kf),
+            QuantTensor::quantize(&vf),
+        );
+        let fused = FusedAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let pool = crate::softmax::engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+        let mut seq = vec![0.0f32; shape.q_len()];
+        let mut par = vec![0.0f32; shape.q_len()];
+        let mut scr = AttnScratch::new();
+        fused.run(&q, &k, &v, &shape, &AttnMask::Dense, &mut seq, &mut scr);
+        fused.run_par(&q, &k, &v, &shape, &AttnMask::Dense, &pool, &mut par);
+        assert_eq!(seq, par);
+        assert_eq!(pool.parallel_batches(), 0, "tiny heads must not fan out");
+    }
+
+    #[test]
+    fn non_lut_modes_are_rejected() {
+        assert!(FusedAttention::new(Mode::Exact, Precision::Uint8, None).is_err());
+        assert!(FusedAttention::new(Mode::Aggressive, Precision::Uint8, None).is_err());
+    }
+
+    #[test]
+    fn composed_exact_is_a_softmax_mixture() {
+        // composed with SoftmaxExact: a one-hot V recovers the probs row
+        let shape = AttnShape::square(1, 1, 4, 4);
+        let mut rng = Rng::new(4);
+        let (qf, kf, _) = qkv(&mut rng, &shape);
+        let mut vf = vec![0.0f32; shape.kv_len()];
+        for j in 0..shape.len_k {
+            vf[j * shape.d_head + j] = 1.0; // V = identity
+        }
+        let mut out = vec![0.0f32; shape.q_len()];
+        ComposedAttention::new(Box::new(SoftmaxExact)).run_f32(
+            &qf,
+            &kf,
+            &vf,
+            &shape,
+            &AttnMask::Dense,
+            &mut out,
+        );
+        for row in out.chunks_exact(shape.d_head) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row sum {s}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Integer-native attention: fused `QK^T (i8) → LUT softmax → ×V`.
+//!
+//! The paper's premise is that attention inputs are normalized and
+//! quantized, so the softmax approximation stays cheap *inside* an
+//! integer attention block (the A³ / SOLE architecture). This module is
+//! that block on the rust side:
+//!
+//! * Q/K/V are per-tensor-affine `i8` ([`QuantTensor`], params from
+//!   [`crate::quant::Affine`]);
+//! * QK^T accumulates in `i32` (the zero points are hoisted out of the
+//!   inner dot product algebraically — the MAC loop is a raw `i8×i8`
+//!   widening dot);
+//! * the softmax stage is the integer pass-1 substrate of
+//!   [`crate::softmax`] (fixed-point diff→LUT-address map, integer row
+//!   sum, integer normalizer) producing `sig_int ∈ [0, qmax]` — an f32
+//!   probability matrix is **never materialized**;
+//! * `probs × V` is another integer MAC (`sig_int × i8`, i64
+//!   accumulators so every precision is safe), with one fused
+//!   `(acc − z_v·Σsig) · s_v/qmax` dequant per output element.
+//!
+//! Masks ([`AttnMask`]) are prefix-shaped (causal and PAD are both "a
+//! valid key prefix per row"), so masking is a **loop bound**, not a
+//! per-element branch: masked positions cost nothing and their
+//! probability is exactly 0.
+//!
+//! [`kernel::FusedAttention`] is the fused kernel (sequential and
+//! pool-scattered via [`crate::softmax::ParSoftmax::scatter`], one task
+//! per B×H head); [`kernel::ComposedAttention`] is the unfused
+//! dequantize → f32 QK^T → softmax → ×V compose it is benchmarked
+//! against (`attn/*` vs `attn_unfused/*` in `softmax_bench`). The
+//! serving route `"attn:<mode>:<prec[:aN]>"` (see
+//! [`crate::coordinator`]) is parsed by [`parse_route`].
+
+mod kernel;
+
+pub use kernel::{AttnScratch, ComposedAttention, FusedAttention};
+
+use crate::lut::Precision;
+use crate::quant::{self, Affine};
+use crate::softmax::Mode;
+
+/// Default LUT_alpha length for attention workloads: rows are long (a
+/// whole key prefix), so the REXP row sum needs the paper's DETR-style
+/// 256-entry table rather than the 16-entry NLP default (Table 5). Rows
+/// with `sum >> w` beyond the table still saturate to zero probability —
+/// the Fig. 4 property; size via the route's `:aN` suffix per workload.
+pub const ATTN_ALPHA_LEN: usize = 256;
+
+/// Shape of one attention problem: `q` is `(batch, heads, len_q, d_head)`
+/// and `k`/`v` are `(batch, heads, len_k, d_head)`, all row-major.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttnShape {
+    pub batch: usize,
+    pub heads: usize,
+    pub len_q: usize,
+    pub len_k: usize,
+    pub d_head: usize,
+}
+
+impl AttnShape {
+    /// Square self-attention shape (len_q == len_k).
+    pub fn square(batch: usize, heads: usize, len: usize, d_head: usize) -> Self {
+        Self { batch, heads, len_q: len, len_k: len, d_head }
+    }
+
+    pub fn heads_total(&self) -> usize {
+        self.batch * self.heads
+    }
+
+    /// elements of q (and of the output)
+    pub fn q_len(&self) -> usize {
+        self.heads_total() * self.len_q * self.d_head
+    }
+
+    /// elements of k / v
+    pub fn kv_len(&self) -> usize {
+        self.heads_total() * self.len_k * self.d_head
+    }
+
+    /// score elements per full (unmasked) problem — the work measure the
+    /// benches report element throughput against
+    pub fn score_len(&self) -> usize {
+        self.heads_total() * self.len_q * self.len_k
+    }
+}
+
+/// Attention masks. Both of the paper's workload masks are prefix-shaped,
+/// which is why the kernel can mask with a loop bound: row `i` of batch
+/// `b` attends to key positions `0..valid_len(b, i)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AttnMask {
+    /// every query attends to every key
+    Dense,
+    /// query `i` attends to keys `0..=i` (requires len_q == len_k to be
+    /// meaningful; longer prefixes clamp to len_k)
+    Causal,
+    /// per-batch valid key prefix lengths (`lens.len() == batch`); a 0
+    /// entry means a fully-padded batch element (output rows are zeroed)
+    Padding(Vec<usize>),
+}
+
+impl AttnMask {
+    /// Valid key prefix for query row `i` of batch `b`.
+    #[inline]
+    pub fn valid_len(&self, b: usize, i: usize, len_k: usize) -> usize {
+        match self {
+            AttnMask::Dense => len_k,
+            AttnMask::Causal => (i + 1).min(len_k),
+            AttnMask::Padding(lens) => lens[b].min(len_k),
+        }
+    }
+}
+
+/// A per-tensor-affine quantized activation tensor: the ingress format of
+/// the fused kernel.
+#[derive(Clone, Debug)]
+pub struct QuantTensor {
+    pub data: Vec<i8>,
+    pub affine: Affine,
+}
+
+impl QuantTensor {
+    /// Fit an affine to `x` and quantize (the serving path's per-request
+    /// ingress).
+    pub fn quantize(x: &[f32]) -> Self {
+        let (data, affine) = quant::quantize(x);
+        Self { data, affine }
+    }
+
+    /// Quantize with fixed params (tests construct dyadic scales to pin
+    /// bit-exactness against the f32 datapath).
+    pub fn quantize_with(x: &[f32], affine: Affine) -> Self {
+        let mut data = vec![0i8; x.len()];
+        quant::quantize_into(x, affine, &mut data);
+        Self { data, affine }
+    }
+}
+
+/// Parse an attention route spec `"attn:<mode>:<prec[:aN]>"` (e.g.
+/// `"attn:rexp:uint8"`, `"attn:rexp:uint8:a512"`) into
+/// `(mode, precision, alpha_len)`. Returns `None` for anything else,
+/// including non-LUT modes — the fused kernel is integer-native only.
+pub fn parse_route(spec: &str) -> Option<(Mode, Precision, Option<usize>)> {
+    let rest = spec.strip_prefix("attn:")?;
+    let (mode_s, prec_s) = rest.split_once(':')?;
+    let mode = Mode::parse(mode_s)?;
+    if !matches!(mode, Mode::Rexp | Mode::Lut2d) {
+        return None;
+    }
+    let (prec, alpha_len) = Precision::parse_spec(prec_s)?;
+    Some((mode, prec, alpha_len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_valid_lens() {
+        assert_eq!(AttnMask::Dense.valid_len(0, 3, 16), 16);
+        assert_eq!(AttnMask::Causal.valid_len(0, 0, 16), 1);
+        assert_eq!(AttnMask::Causal.valid_len(1, 5, 16), 6);
+        assert_eq!(AttnMask::Causal.valid_len(0, 40, 16), 16);
+        let pad = AttnMask::Padding(vec![7, 0]);
+        assert_eq!(pad.valid_len(0, 9, 16), 7);
+        assert_eq!(pad.valid_len(1, 0, 16), 0);
+    }
+
+    #[test]
+    fn shape_accounting() {
+        let s = AttnShape::square(2, 4, 64, 32);
+        assert_eq!(s.heads_total(), 8);
+        assert_eq!(s.q_len(), 2 * 4 * 64 * 32);
+        assert_eq!(s.kv_len(), s.q_len());
+        assert_eq!(s.score_len(), 2 * 4 * 64 * 64);
+    }
+
+    #[test]
+    fn route_parsing() {
+        let (m, p, a) = parse_route("attn:rexp:uint8").unwrap();
+        assert_eq!((m, p, a), (Mode::Rexp, Precision::Uint8, None));
+        let (m, p, a) = parse_route("attn:lut2d:int16:a512").unwrap();
+        assert_eq!((m, p, a), (Mode::Lut2d, Precision::Int16, Some(512)));
+        assert!(parse_route("attn:exact:uint8").is_none(), "non-LUT mode");
+        assert!(parse_route("cpu:rexp:uint8").is_none());
+        assert!(parse_route("attn:rexp").is_none());
+        assert!(parse_route("attn:rexp:float64").is_none());
+    }
+
+    #[test]
+    fn quantize_roundtrip_through_quant_tensor() {
+        let x = [0.5f32, -1.0, 0.0, 2.0];
+        let t = QuantTensor::quantize(&x);
+        for (&q, &v) in t.data.iter().zip(&x) {
+            assert!((t.affine.dequantize(q) - v).abs() <= t.affine.scale);
+        }
+        let fixed = QuantTensor::quantize_with(&x, Affine { scale: 0.0625, zero_point: 0 });
+        assert_eq!(fixed.data[0], 8); // 0.5 / 0.0625
+    }
+}

@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::attention::{self, AttnMask, AttnShape, FusedAttention, QuantTensor};
 use crate::eval::DetectionBox;
 use crate::lut::Precision;
 use crate::runtime::{mode_tables, Engine, ModelRunner, Tensor};
@@ -377,6 +378,102 @@ impl SoftmaxPipeline {
             }
         }
     }
+}
+
+/// One attention request, borrowed out of a [`super::Payload::Attention`].
+pub struct AttnRequest<'a> {
+    pub q: &'a Tensor,
+    pub k: &'a Tensor,
+    pub v: &'a Tensor,
+    pub causal: bool,
+    pub pad_lens: Option<&'a [usize]>,
+}
+
+/// Integer-native attention serving pipeline — route
+/// `"attn:<mode>:<prec[:aN]>"` (e.g. `"attn:rexp:uint8"`). Needs no
+/// artifacts and no PJRT: Q/K/V are quantized per-tensor at ingress
+/// ([`crate::quant::Affine`]) and the fused i8 kernel's B×H head-blocks
+/// are scattered across a [`ParSoftmax`] worker pool built once at load
+/// (`ServerConfig::workers` sizes it, like the CPU softmax route).
+pub struct AttentionPipeline {
+    pub variant: String,
+    kernel: FusedAttention,
+    pool: ParSoftmax,
+}
+
+impl AttentionPipeline {
+    pub fn load(spec: &str, workers: usize) -> Result<Self> {
+        let (mode, prec, alpha_len) = attention::parse_route(spec).ok_or_else(|| {
+            anyhow!("attention route {spec:?}: want attn:<rexp|lut2d>:<prec[:aN]>")
+        })?;
+        // the pool's wrapped engine is not on the attention hot path (heads
+        // go through `scatter`), but build it with the kernel's effective
+        // alpha so any future softmax traffic on this pool agrees with it
+        let alpha = Some(alpha_len.unwrap_or(attention::ATTN_ALPHA_LEN));
+        Ok(Self {
+            variant: spec.to_string(),
+            kernel: FusedAttention::new(mode, prec, alpha_len)?,
+            pool: softmax::engine_parallel(mode, prec, alpha, Some(workers.max(1))),
+        })
+    }
+
+    /// Serve a coalesced batch; per-request results so one malformed
+    /// payload cannot fail its batchmates. Each request's heads fan out
+    /// across the pool (requests are processed in order — head-blocks,
+    /// not requests, are the parallel unit).
+    pub fn run_batch(&self, reqs: &[AttnRequest]) -> Vec<Result<Tensor>> {
+        reqs.iter().map(|r| self.run_one(r)).collect()
+    }
+
+    fn run_one(&self, r: &AttnRequest) -> Result<Tensor> {
+        let (shape, mask) = validate_attention_payload(r)?;
+        let q = QuantTensor::quantize(r.q.as_f32()?);
+        let k = QuantTensor::quantize(r.k.as_f32()?);
+        let v = QuantTensor::quantize(r.v.as_f32()?);
+        let mut out = vec![0.0f32; shape.q_len()];
+        self.kernel.run_par(&q, &k, &v, &shape, &mask, &self.pool, &mut out);
+        Ok(Tensor::f32(r.q.dims.clone(), out))
+    }
+}
+
+/// Attention payloads must be 4-D `(B,H,L,d)` / `(B,H,S,d)` f32 with
+/// matching batch/head/depth, and PAD lengths (if any) one per batch.
+fn validate_attention_payload(r: &AttnRequest) -> Result<(AttnShape, AttnMask)> {
+    let (qd, kd, vd) = (&r.q.dims, &r.k.dims, &r.v.dims);
+    if qd.len() != 4 || kd.len() != 4 || vd.len() != 4 {
+        bail!("attention payload must be 4-D (B,H,L,d), got q{qd:?} k{kd:?} v{vd:?}");
+    }
+    if kd != vd {
+        bail!("k/v shapes must match, got {kd:?} vs {vd:?}");
+    }
+    if qd[0] != kd[0] || qd[1] != kd[1] || qd[3] != kd[3] {
+        bail!("q {qd:?} incompatible with k/v {kd:?} (batch/heads/depth must match)");
+    }
+    if qd.iter().any(|&d| d == 0) || kd.iter().any(|&d| d == 0) {
+        bail!("attention payload has a zero dimension: q{qd:?} k/v{kd:?}");
+    }
+    r.q.as_f32()?;
+    r.k.as_f32()?;
+    r.v.as_f32()?;
+    let shape = AttnShape {
+        batch: qd[0],
+        heads: qd[1],
+        len_q: qd[2],
+        len_k: kd[2],
+        d_head: qd[3],
+    };
+    let mask = match (r.causal, r.pad_lens) {
+        (true, Some(_)) => bail!("causal and pad_lens are mutually exclusive"),
+        (true, None) => AttnMask::Causal,
+        (false, Some(lens)) => {
+            if lens.len() != shape.batch {
+                bail!("pad_lens has {} entries for batch {}", lens.len(), shape.batch);
+            }
+            AttnMask::Padding(lens.to_vec())
+        }
+        (false, None) => AttnMask::Dense,
+    };
+    Ok((shape, mask))
 }
 
 /// CPU fallback: coalesce same-width requests into one row-concatenated

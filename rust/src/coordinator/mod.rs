@@ -17,7 +17,9 @@ mod request;
 mod server;
 
 pub use batcher::Batcher;
-pub use engine_ops::{ClsPipeline, DetPipeline, NmtPipeline, SoftmaxPipeline};
+pub use engine_ops::{
+    AttentionPipeline, AttnRequest, ClsPipeline, DetPipeline, NmtPipeline, SoftmaxPipeline,
+};
 pub use metrics::{Histogram, Metrics};
 pub use request::{Payload, Reply, Request, TaskKind};
 pub use server::{Coordinator, CoordinatorClient, RouteTable, ServerStats};

@@ -13,15 +13,25 @@ pub enum TaskKind {
     Classify,
     Detect,
     Softmax,
+    Attention,
 }
 
 impl TaskKind {
+    pub const ALL: [TaskKind; 5] = [
+        TaskKind::Translate,
+        TaskKind::Classify,
+        TaskKind::Detect,
+        TaskKind::Softmax,
+        TaskKind::Attention,
+    ];
+
     pub fn name(self) -> &'static str {
         match self {
             Self::Translate => "translate",
             Self::Classify => "classify",
             Self::Detect => "detect",
             Self::Softmax => "softmax",
+            Self::Attention => "attention",
         }
     }
 }
@@ -37,6 +47,16 @@ pub enum Payload {
     Detect(Tensor),
     /// rows to softmax through the standalone LUT artifact
     Softmax(Tensor),
+    /// fused integer attention: f32 Q `(B,H,L,d)` and K/V `(B,H,S,d)`,
+    /// quantized per-tensor at the pipeline boundary; `causal` and
+    /// `pad_lens` select the prefix mask (`pad_lens.len() == B`)
+    Attention {
+        q: Tensor,
+        k: Tensor,
+        v: Tensor,
+        causal: bool,
+        pad_lens: Option<Vec<usize>>,
+    },
 }
 
 impl Payload {
@@ -46,6 +66,7 @@ impl Payload {
             Payload::Classify(_) => TaskKind::Classify,
             Payload::Detect(_) => TaskKind::Detect,
             Payload::Softmax(_) => TaskKind::Softmax,
+            Payload::Attention { .. } => TaskKind::Attention,
         }
     }
 }
@@ -60,6 +81,8 @@ pub enum Reply {
     /// (class, score, cx, cy, w, h) per kept query
     Detect(Vec<(usize, f64, f64, f64, f64, f64)>),
     Softmax(Tensor),
+    /// fused attention output, `(B,H,L,d)` like the query
+    Attention(Tensor),
     /// the server rejected or failed the request
     Error(String),
 }
@@ -92,6 +115,16 @@ mod tests {
             Payload::Softmax(Tensor::zeros_f32(vec![1, 4])).kind(),
             TaskKind::Softmax
         );
+        let t = Tensor::zeros_f32(vec![1, 1, 2, 4]);
+        let attn = Payload::Attention {
+            q: t.clone(),
+            k: t.clone(),
+            v: t,
+            causal: true,
+            pad_lens: None,
+        };
+        assert_eq!(attn.kind(), TaskKind::Attention);
+        assert_eq!(TaskKind::ALL.len(), 5);
     }
 
     #[test]

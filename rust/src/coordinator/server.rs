@@ -10,7 +10,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::batcher::Batcher;
-use super::engine_ops::{ClsPipeline, DetPipeline, NmtPipeline, SoftmaxPipeline};
+use super::engine_ops::{
+    AttentionPipeline, AttnRequest, ClsPipeline, DetPipeline, NmtPipeline, SoftmaxPipeline,
+};
 use super::metrics::Metrics;
 use super::request::{Payload, Reply, Request, TaskKind};
 use crate::config::ServerConfig;
@@ -26,6 +28,9 @@ pub struct RouteTable {
     /// for the row-parallel software fallback (see
     /// [`SoftmaxPipeline`](super::SoftmaxPipeline))
     pub softmax: Option<String>,
+    /// fused integer attention route `"attn:<mode>:<prec[:aN]>"` (see
+    /// [`AttentionPipeline`](super::AttentionPipeline)); artifact-free
+    pub attention: Option<String>,
 }
 
 /// Snapshot of serving statistics.
@@ -174,6 +179,7 @@ struct Pipelines {
     cls: Option<ClsPipeline>,
     det: Option<DetPipeline>,
     softmax: Option<SoftmaxPipeline>,
+    attn: Option<AttentionPipeline>,
 }
 
 fn engine_thread(
@@ -209,6 +215,12 @@ fn engine_thread(
                 .as_deref()
                 .map(|v| SoftmaxPipeline::load(&engine, v, cfg.workers))
                 .transpose()?,
+            // artifact-free: fused kernel + head-scatter pool, built once
+            attn: routes
+                .attention
+                .as_deref()
+                .map(|v| AttentionPipeline::load(v, cfg.workers))
+                .transpose()?,
         };
         Ok((engine, pipes))
     })();
@@ -225,7 +237,7 @@ fn engine_thread(
 
     let timeout = Duration::from_micros(cfg.batch_timeout_us);
     let mut queues: BTreeMap<TaskKind, Batcher<Request>> = BTreeMap::new();
-    for k in [TaskKind::Translate, TaskKind::Classify, TaskKind::Detect, TaskKind::Softmax] {
+    for k in TaskKind::ALL {
         queues.insert(k, Batcher::new(cfg.max_batch, timeout));
     }
     let mut metrics: BTreeMap<&'static str, Metrics> =
@@ -364,6 +376,33 @@ fn process_batch(
                     .into_iter()
                     .map(|r| match r {
                         Ok(t) => Reply::Softmax(t),
+                        Err(e) => Reply::Error(e.to_string()),
+                    })
+                    .collect()
+            }
+        },
+        TaskKind::Attention => match &pipes.attn {
+            None => vec![Reply::Error("no attention route".into()); batch.len()],
+            Some(p) => {
+                // artifact-free fused path: each request's B×H head-blocks
+                // fan out across the pipeline's worker pool
+                let reqs: Vec<AttnRequest> = batch
+                    .iter()
+                    .map(|r| match &r.payload {
+                        Payload::Attention { q, k, v, causal, pad_lens } => AttnRequest {
+                            q,
+                            k,
+                            v,
+                            causal: *causal,
+                            pad_lens: pad_lens.as_deref(),
+                        },
+                        _ => unreachable!(),
+                    })
+                    .collect();
+                p.run_batch(&reqs)
+                    .into_iter()
+                    .map(|r| match r {
+                        Ok(t) => Reply::Attention(t),
                         Err(e) => Reply::Error(e.to_string()),
                     })
                     .collect()

@@ -16,5 +16,8 @@ mod pipeline;
 mod units;
 
 pub use design::{all_designs, Design, DesignKind};
-pub use pipeline::{simulate, simulate_row_parallel, SimConfig, SimReport};
+pub use pipeline::{
+    simulate, simulate_attention, simulate_attention_parallel, simulate_row_parallel,
+    AttnSimConfig, SimConfig, SimReport,
+};
 pub use units::{Cost, OpKind};

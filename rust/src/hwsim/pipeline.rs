@@ -102,6 +102,103 @@ pub fn simulate(design: &Design, cfg: SimConfig) -> SimReport {
     }
 }
 
+/// Attention-block shapes for the cycle model (one problem =
+/// `heads` × (`len_q`·`len_k` scores over `d_head`-deep dots)).
+#[derive(Clone, Copy, Debug)]
+pub struct AttnSimConfig {
+    pub heads: usize,
+    pub len_q: usize,
+    pub len_k: usize,
+    pub d_head: usize,
+    /// parallel MAC / softmax element lanes
+    pub lanes: usize,
+}
+
+impl AttnSimConfig {
+    fn score_elems(&self) -> u64 {
+        (self.heads * self.len_q * self.len_k) as u64
+    }
+
+    fn mac_ops(&self) -> u64 {
+        // QK^T and probs×V each run len_q·len_k·d_head MACs per head
+        2 * self.score_elems() * self.d_head as u64
+    }
+}
+
+/// Cycle model of the attention block around a softmax `design` — the
+/// hwsim mirror of [`crate::attention::FusedAttention`].
+///
+/// Per head: a QK^T MAC pass, the two-pass softmax unit over `len_q`
+/// rows of `len_k` scores (the existing [`simulate`] model), and a
+/// probs×V MAC pass. `fused = false` models the unfused compose instead:
+/// the probability matrix is materialized and re-read (one buffer write
+/// and one read per score element), and each boundary pays a
+/// dequant/requant multiply — the data movement §2 of the paper calls
+/// out, and what [`crate::attention::ComposedAttention`] does in
+/// software. `fused = true` streams `sig_int` straight into the V-MAC.
+pub fn simulate_attention(design: &Design, cfg: AttnSimConfig, fused: bool) -> SimReport {
+    use super::units::OpKind::{Add, LutRead, Mul};
+    let w = design.prec.w();
+    let sm = simulate(
+        design,
+        SimConfig { n: cfg.len_k, rows: cfg.len_q, lanes: cfg.lanes },
+    );
+    let per_lane = |count: u64, ops: &[super::units::OpKind]| -> u64 {
+        chain_cycles(design, ops, count.div_ceil(cfg.lanes as u64), w)
+    };
+    let head_macs = (cfg.len_q * cfg.len_k * cfg.d_head) as u64;
+    let mac_cost = Mul.cost(w).energy + Add.cost(w).energy;
+    // per head: QK^T MAC pass + two-pass softmax + probs×V MAC pass
+    let mut cycles = cfg.heads as u64 * (2 * per_lane(head_macs, &[Mul, Add]) + sm.cycles);
+    let mut energy = cfg.mac_ops() as f64 * mac_cost + cfg.heads as f64 * sm.energy;
+    if !fused {
+        // probability-matrix round-trip per head: buffer write + read per
+        // score element (modelled as LUT-port traffic), plus a dequant
+        // multiply on the way out and a requant multiply on the way back
+        let head_elems = (cfg.len_q * cfg.len_k) as u64;
+        cycles += cfg.heads as u64 * 2 * per_lane(head_elems, &[LutRead, Mul]);
+        energy +=
+            2.0 * cfg.score_elems() as f64 * (LutRead.cost(w).energy + Mul.cost(w).energy);
+    }
+    SimReport {
+        design: design.name(),
+        cycles,
+        energy,
+        area: design.area_per_lane() * cfg.lanes as f64,
+        lut_bytes: design.lut_bytes,
+        elems: cfg.score_elems(),
+        has_divider: design.has_divider(),
+        has_multiplier: design.has_multiplier(),
+    }
+}
+
+/// Head-parallel aggregate of the attention block: `units` independent
+/// attention units each take a contiguous block of heads — the hwsim
+/// mirror of `FusedAttention::run_par` scattering head-blocks across the
+/// worker pool. Latency is the slowest unit's block; area/LUT storage per
+/// unit; energy unchanged.
+pub fn simulate_attention_parallel(
+    design: &Design,
+    cfg: AttnSimConfig,
+    fused: bool,
+    units: usize,
+) -> SimReport {
+    let full = simulate_attention(design, cfg, fused);
+    let units = units.max(1).min(cfg.heads.max(1));
+    if units <= 1 {
+        return full;
+    }
+    let block = cfg.heads.div_ceil(units);
+    let units_used = cfg.heads.div_ceil(block);
+    let slowest = simulate_attention(design, AttnSimConfig { heads: block, ..cfg }, fused);
+    SimReport {
+        cycles: slowest.cycles,
+        area: full.area * units_used as f64,
+        lut_bytes: full.lut_bytes * units_used,
+        ..full
+    }
+}
+
 /// Row-parallel aggregate: `units` independent softmax units each process
 /// a contiguous block of rows — the hwsim mirror of
 /// [`crate::softmax::ParSoftmax`]'s sharding. Latency is the slowest
@@ -190,6 +287,55 @@ mod tests {
             huge.cycles,
             simulate(&d, SimConfig { n: 16, rows: 1, lanes: 1 }).cycles
         );
+    }
+
+    #[test]
+    fn fused_attention_beats_unfused_in_cycles_and_energy() {
+        let cfg = AttnSimConfig { heads: 8, len_q: 64, len_k: 64, d_head: 32, lanes: 4 };
+        for kind in [DesignKind::Rexp, DesignKind::Lut2d] {
+            let d = Design::new(kind, Precision::Uint8);
+            let fused = simulate_attention(&d, cfg, true);
+            let unfused = simulate_attention(&d, cfg, false);
+            assert!(
+                fused.cycles < unfused.cycles,
+                "{kind:?}: fused {} unfused {}",
+                fused.cycles,
+                unfused.cycles
+            );
+            assert!(fused.energy < unfused.energy);
+            assert_eq!(fused.elems, 8 * 64 * 64);
+        }
+    }
+
+    #[test]
+    fn attention_lanes_and_heads_scale() {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = AttnSimConfig { heads: 8, len_q: 64, len_k: 64, d_head: 32, lanes: 2 };
+        let wide = simulate_attention(&d, AttnSimConfig { lanes: 8, ..cfg }, true);
+        let narrow = simulate_attention(&d, cfg, true);
+        assert!(wide.cycles < narrow.cycles);
+        // head-parallel units shard latency/area like ParSoftmax shards rows
+        let one = simulate_attention_parallel(&d, cfg, true, 1);
+        assert_eq!(one.cycles, narrow.cycles);
+        let four = simulate_attention_parallel(&d, cfg, true, 4);
+        assert_eq!(four.cycles * 4, one.cycles, "8 heads / 4 units = 2 per unit");
+        assert_eq!(four.area, one.area * 4.0);
+        assert_eq!(four.energy, one.energy);
+        // more units than heads clamps to heads
+        let many = simulate_attention_parallel(&d, cfg, true, 64);
+        assert_eq!(
+            many.cycles,
+            simulate_attention(&d, AttnSimConfig { heads: 1, ..cfg }, true).cycles
+        );
+    }
+
+    #[test]
+    fn attention_model_prefers_paper_designs() {
+        let cfg = AttnSimConfig { heads: 4, len_q: 32, len_k: 32, d_head: 16, lanes: 4 };
+        let div = simulate_attention(&Design::new(DesignKind::ExactDivider, Precision::Uint8), cfg, true);
+        let rexp = simulate_attention(&Design::new(DesignKind::Rexp, Precision::Uint8), cfg, true);
+        assert!(rexp.cycles < div.cycles);
+        assert!(rexp.energy < div.energy);
     }
 
     #[test]

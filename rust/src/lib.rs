@@ -22,7 +22,8 @@
 //! |---------------|------|
 //! | [`lut`]       | LUT builders, bit-identical to `python/compile/kernels/luts.py` |
 //! | [`quant`]     | integer quantization helpers (PTQ-D int8 affine) |
-//! | [`softmax`]   | bit-exact SW models of the LUT datapaths + baselines |
+//! | [`softmax`]   | bit-exact SW models of the LUT datapaths + baselines (f32 and i8 ingestion) |
+//! | [`attention`] | fused integer-native `QK^T → LUT softmax → ×V` kernel |
 //! | [`hwsim`]     | cycle/area/energy simulator of softmax HW designs |
 //! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` |
 //! | [`eval`]      | BLEU / accuracy / F1 / Hungarian-matched AP metrics |
@@ -32,6 +33,7 @@
 //! | [`testkit`]   | seeded PRNG + property-test helpers (proptest substitute) |
 //! | [`benchkit`]  | micro-benchmark harness (criterion substitute) |
 
+pub mod attention;
 pub mod benchkit;
 pub mod config;
 pub mod coordinator;

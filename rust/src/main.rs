@@ -79,7 +79,10 @@ fn serve(args: &Args) -> Result<()> {
     let task = args.opt("task").unwrap_or("translate");
     let variant = args
         .opt("variant")
-        .unwrap_or("nmt14__ptqd__rexp__uint8")
+        .unwrap_or(match task {
+            "attention" => "attn:rexp:uint8",
+            _ => "nmt14__ptqd__rexp__uint8",
+        })
         .to_string();
     let requests = args.opt_usize("requests", 64)?;
     let rate = args.opt_f64("rate", 200.0)?;
@@ -91,6 +94,10 @@ fn serve(args: &Args) -> Result<()> {
         "detect" => routes.detect = Some(variant.clone()),
         // e.g. --variant softmax__rexp__uint8 or --variant cpu:rexp:uint8
         "softmax" => routes.softmax = Some(variant.clone()),
+        // artifact-free fused integer attention, e.g. --variant attn:rexp:uint8
+        // (the variant passes through verbatim; bad specs fail loudly at
+        // AttentionPipeline::load)
+        "attention" => routes.attention = Some(variant.clone()),
         other => return Err(anyhow!("unknown task {other:?}")),
     }
     println!("starting coordinator: task={task} variant={variant}");
@@ -107,6 +114,17 @@ fn serve(args: &Args) -> Result<()> {
             "classify" => Payload::Classify(workload::random_cls_row(&mut rng, 24, 64)),
             "softmax" => {
                 Payload::Softmax(Tensor::f32(vec![4, 64], rng.normal_vec(4 * 64, 2.0)))
+            }
+            "attention" => {
+                let shape = lutmax::attention::AttnShape::square(1, 4, 64, 32);
+                let (q, k, v) = workload::attn_qkv(&mut rng, &shape, 1.0);
+                let mask = workload::attn_mask(&mut rng, &shape);
+                let (causal, pad_lens) = match mask {
+                    lutmax::attention::AttnMask::Dense => (false, None),
+                    lutmax::attention::AttnMask::Causal => (true, None),
+                    lutmax::attention::AttnMask::Padding(lens) => (false, Some(lens)),
+                };
+                Payload::Attention { q, k, v, causal, pad_lens }
             }
             _ => Payload::Detect(workload::random_image(&mut rng, 32, 3)),
         };

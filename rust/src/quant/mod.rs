@@ -41,6 +41,28 @@ pub fn quantize(x: &[f32]) -> (Vec<i8>, Affine) {
     (x.iter().map(|&v| a.quantize(v)).collect(), a)
 }
 
+/// Quantize into a caller-provided buffer with fixed affine params
+/// (used by `attention::QuantTensor::quantize_with`, which pins the
+/// affine instead of fitting it — e.g. the dyadic-scale bit-exactness
+/// tests). The serving ingress currently uses the allocating
+/// [`quantize`]; switch it to this + pooled buffers if per-request
+/// allocation ever shows up in profiles.
+pub fn quantize_into(x: &[f32], a: Affine, out: &mut [i8]) {
+    debug_assert_eq!(x.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = a.quantize(v);
+    }
+}
+
+/// Dequantize into a caller-provided buffer (the unfused baseline's
+/// explicit int8 -> f32 materialization pass).
+pub fn dequantize_into(q: &[i8], a: Affine, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(q) {
+        *o = a.dequantize(v);
+    }
+}
+
 /// Quantize-dequantize round trip ("fake quant") — the graph-side op.
 pub fn fake_quant(x: &[f32]) -> Vec<f32> {
     let a = Affine::fit(x);
@@ -78,6 +100,21 @@ mod tests {
         let (q, a) = quantize(&[0.5; 8]);
         for &v in &q {
             assert!((a.dequantize(v) - 0.5).abs() <= a.scale);
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_paths() {
+        let mut rng = testkit::Rng::new(3);
+        let x = rng.normal_vec(96, 1.5);
+        let (q, a) = quantize(&x);
+        let mut qb = vec![0i8; x.len()];
+        quantize_into(&x, a, &mut qb);
+        assert_eq!(q, qb);
+        let mut fb = vec![0.0f32; x.len()];
+        dequantize_into(&q, a, &mut fb);
+        for (&qi, &fi) in q.iter().zip(&fb) {
+            assert_eq!(a.dequantize(qi), fi);
         }
     }
 

@@ -21,8 +21,11 @@
 //! Both paths are bit-identical to the old three-pass loop; the third
 //! f32 pass and its `thread_local!` scratch are gone.
 
-use super::{debug_check_shape, row_max, Scratch, SoftmaxEngine};
-use crate::lut::{lut2d_tables, Lut2dTables, Precision};
+use super::{
+    debug_check_shape, i8_row_max, pass1_i8_mapped, pass1_i8_unit, row_max, IntMap, IntRow,
+    Scratch, SoftmaxEngine,
+};
+use crate::lut::{lut2d_tables, Lut2dTables, Precision, EXP_STEP};
 
 pub struct SoftmaxLut2d {
     tables: Lut2dTables,
@@ -67,6 +70,44 @@ impl SoftmaxLut2d {
             }
         }
     }
+
+    /// The [`IntMap`] of the i8 path: one quantization step spans
+    /// `step / EXP_STEP` LUT_exp bins (the engine owns its 0.1 bin width,
+    /// so callers hand over plain logit units — a step of exactly 0.1 is
+    /// the aligned `idx = clamp(m_q - v_q, 0, last)` case here).
+    pub(crate) fn int_map(&self, step: f32) -> IntMap {
+        // 1/EXP_STEP is exactly 10.0 in f64; multiplying (not dividing)
+        // keeps dyadic steps bit-exact with the f32 datapath's `d * 10.0`
+        IntMap::new(step * (1.0 / EXP_STEP) as f32, (self.tables.exp.len() - 1) as i32)
+    }
+
+    /// LUT_sigma column select for an integer row sum.
+    #[inline]
+    pub(crate) fn col_for(&self, s: i32) -> usize {
+        (s >> self.w).clamp(1, self.tables.cols as i32) as usize
+    }
+
+    /// Integer-stage output of the i8 fast path — mirrors
+    /// [`SoftmaxLut2d::run_int`] with integer ingestion.
+    pub fn run_i8_int(&self, x: &[i8], n: usize, row: IntRow, out: &mut [i32]) {
+        let exp_t = &self.tables.exp;
+        let row_t = &self.tables.row;
+        let map = self.int_map(row.scale);
+        for (rowq, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = i8_row_max(rowq) as i32;
+            let mut s: i32 = 0;
+            for (o, &v) in orow.iter_mut().zip(rowq) {
+                let k = map.index(m - v as i32);
+                s += exp_t[k as usize];
+                *o = k;
+            }
+            let col = self.col_for(s);
+            for o in orow.iter_mut() {
+                let r = row_t[*o as usize] as usize;
+                *o = self.tables.sigma_at(r, col);
+            }
+        }
+    }
 }
 
 impl SoftmaxEngine for SoftmaxLut2d {
@@ -93,6 +134,45 @@ impl SoftmaxEngine for SoftmaxLut2d {
             if hoist {
                 // f32-mirrored row of LUT_sigma for this column: resolve the
                 // row-decode + sigma read + dequant once per table ENTRY
+                for (d, &r) in deq.iter_mut().zip(row_t.iter()) {
+                    *d = self.tables.sigma_at(r as usize, col) as f32 * self.inv_qmax;
+                }
+                for (o, &k) in orow.iter_mut().zip(idx.iter()) {
+                    *o = deq[k as usize];
+                }
+            } else {
+                for (o, &k) in orow.iter_mut().zip(idx.iter()) {
+                    let r = row_t[k as usize] as usize;
+                    *o = self.tables.sigma_at(r, col) as f32 * self.inv_qmax;
+                }
+            }
+        }
+    }
+
+    /// i8 fast path: integer max scan + the branchless `chunks_exact(8)`
+    /// pass-1 blocks (see the module docs of [`crate::softmax`]); pass 2
+    /// is the same fused `row-decode → sigma → dequant` chain as the f32
+    /// path, so output == `run_i8_int * 1/qmax` bit-exactly.
+    fn run_i8_with(&self, x: &[i8], n: usize, row: IntRow, out: &mut [f32], scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
+        let exp_t = &self.tables.exp;
+        let row_t = &self.tables.row;
+        let map = self.int_map(row.scale);
+        let unit = map.is_unit();
+        let hoist = n >= exp_t.len();
+        let (idx, deq) = scratch.borrow2(n, exp_t.len());
+        for (rowq, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = i8_row_max(rowq) as i32;
+            let s = if unit {
+                pass1_i8_unit(rowq, m, map.last(), exp_t, idx)
+            } else {
+                pass1_i8_mapped(rowq, m, map, exp_t, idx)
+            };
+            let col = self.col_for(s);
+            if hoist {
                 for (d, &r) in deq.iter_mut().zip(row_t.iter()) {
                     *d = self.tables.sigma_at(r as usize, col) as f32 * self.inv_qmax;
                 }
@@ -175,6 +255,35 @@ mod tests {
         let shifted: Vec<f32> = x.iter().map(|v| v + 12.0).collect();
         let e = SoftmaxLut2d::new(Precision::Int16);
         assert_eq!(e.apply(&x, 24), e.apply(&shifted, 24));
+    }
+
+    #[test]
+    fn i8_fast_path_matches_its_integer_stage() {
+        // unit (scale = EXP_STEP) and general maps, hoisted and direct
+        // pass 2: run_i8_with must equal run_i8_int * 1/qmax exactly
+        testkit::check("lut2d i8 fused dequant", 20, |rng| {
+            let prec = *rng.choice(&crate::lut::ALL_PRECISIONS);
+            let e = SoftmaxLut2d::new(prec);
+            let table_len = e.tables().exp.len();
+            let n = rng.usize(1, table_len + table_len / 2 + 2);
+            let rows = rng.usize(1, 4);
+            let row = IntRow::new(*rng.choice(&[0.1f32, 0.05, 0.13, 1.0]), rng.int(-9, 9) as i32);
+            let x: Vec<i8> = (0..rows * n).map(|_| rng.int(-128, 127) as i8).collect();
+            let mut ints = vec![0i32; x.len()];
+            e.run_i8_int(&x, n, row, &mut ints);
+            let inv = 1.0 / prec.qmax() as f32;
+            let want: Vec<f32> = ints.iter().map(|&v| v as f32 * inv).collect();
+            assert_eq!(e.apply_i8(&x, n, row), want);
+        });
+    }
+
+    #[test]
+    fn i8_aligned_step_is_one_bin_per_quant_unit() {
+        // scale exactly EXP_STEP: the fixed-point map degenerates to the
+        // clamp(m_q - v_q) wiring, one LUT_exp bin per quantization step
+        let e = SoftmaxLut2d::new(Precision::Uint8);
+        assert!(e.int_map(0.1).is_unit());
+        assert!(!e.int_map(0.2).is_unit());
     }
 
     #[test]

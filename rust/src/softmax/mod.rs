@@ -39,6 +39,32 @@
 //! that brings its own scratch. Rows are independent, so [`ParSoftmax`]
 //! (see [`par`]) shards row-blocks of a batch across a persistent worker
 //! pool and stays `==`-exact with the wrapped engine.
+//!
+//! # Integer pass 1 (i8 ingestion)
+//!
+//! The paper's whole premise is that attention inputs arrive *already
+//! quantized*; feeding the engines f32 rows therefore pays a float
+//! subtract + cast per element that the hardware never would. The
+//! [`SoftmaxEngine::run_i8_with`] entry point ingests raw `i8` rows
+//! described by an [`IntRow`] adapter (per-tensor affine, from
+//! [`crate::quant::Affine`]): the LUT engines override it with a pass 1
+//! that is **pure integer** — the row max is an `i8` scan, and the LUT
+//! address is `idx = clamp(m_q - v_q, 0, last)` when one quantization
+//! step equals one LUT-index unit (the aligned case), or one fixed-point
+//! `(d * mult) >> shift` multiply otherwise (see [`IntMap`]). The inner
+//! loops are branchless `chunks_exact(8)` blocks (sub/min + table gather,
+//! no float math, no data-dependent branches) that LLVM autovectorizes;
+//! the `i8/<mode>` vs `uint8/<mode>` labels in `softmax_bench` track the
+//! resulting pass-1 delta. Pass 2 is the same fused f32-mirrored dequant
+//! gather as the f32 path, so `run_i8_with` output equals
+//! `run_i8_int * 1/qmax` bit-exactly, and equals the f32 datapath on
+//! dequantized inputs whenever the affine scale is exactly representable
+//! (dyadic scales — asserted in `integration_attention.rs`).
+//!
+//! The same integer substrate (diff → fixed-point map → LUT gather →
+//! integer normalizer) backs the fused attention kernel in
+//! [`crate::attention`], which keeps QK^T scores in `i32` and never
+//! materializes an f32 probability matrix.
 
 mod exact;
 mod lut2d;
@@ -53,6 +79,7 @@ pub use priorart::{SoftmaxAggressive, SoftmaxEq2, SoftmaxEq2Plus};
 pub use rexp::SoftmaxRexp;
 
 use crate::lut::Precision;
+use crate::quant::Affine;
 
 /// Shared vocabulary with the python side (`kernels.ref.SOFTMAX_MODES`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -90,13 +117,188 @@ impl Mode {
     }
 }
 
-/// Reusable per-thread kernel workspace: LUT addresses for one row and the
-/// per-row dequantized f32 mirror of the active table. Engines only grow
-/// the buffers; a single `Scratch` serves any engine/shape sequence.
+/// Quantized-row ingestion descriptor for the i8 fast path: how raw `i8`
+/// scores map into an engine's LUT-index domain.
+///
+/// One quantization step spans `scale` LUT-index units (for REXP the
+/// index unit is one logit unit; the 2D-LUT engine folds its 0.1-per-bin
+/// step internally). `zero_point` is only consulted by engines without an
+/// integer datapath (the default trait path dequantizes element-wise);
+/// the LUT engines consume row *diffs* `d = m_q - v_q`, which cancel it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IntRow {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl IntRow {
+    pub fn new(scale: f32, zero_point: i32) -> Self {
+        Self { scale, zero_point }
+    }
+
+    /// The adapter for a [`crate::quant`] per-tensor affine tensor.
+    pub fn from_affine(a: &Affine) -> Self {
+        Self { scale: a.scale, zero_point: a.zero_point }
+    }
+
+    /// The paper's aligned case: one quantization step == one LUT-index
+    /// unit, so the REXP address is literally `clamp(m_q - v_q, 0, last)`.
+    pub fn unit() -> Self {
+        Self { scale: 1.0, zero_point: 0 }
+    }
+
+    #[inline]
+    pub(crate) fn dequantize(&self, q: i8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+}
+
+/// Fixed-point LUT-address map of the integer pass 1:
+/// `index(d) = min((d * mult) >> shift, last)` for an integer diff
+/// `d >= 0`, where `step` is LUT-index units per integer diff unit.
+///
+/// The shift is chosen per map so `mult = round(step * 2^shift)` lands
+/// in `[2^30, 2^31]`: **constant relative precision (~2^-30) for any
+/// step**, rather than a fixed absolute grid. This matters for the
+/// attention path, whose steps are tiny (`s_q·s_k/√d_h` ~ 1e-4..1e-6) —
+/// a fixed 16-bit shift would round such multipliers to 0 or 1 and
+/// collapse every score diff to the same address. Dyadic steps are
+/// represented exactly (`mult` a power of two times the odd part), so
+/// the map reproduces the f32 datapath's `trunc(d_f32 * step)`
+/// bit-for-bit on dequantized inputs. `mult ≤ 2^31` and `d ≤ 2^31`, so
+/// the widened product never overflows `i64`; steps too large for the
+/// clamped multiplier saturate every nonzero diff to `last`, exactly as
+/// the true map would.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct IntMap {
+    mult: i64,
+    shift: u32,
+    last: i64,
+}
+
+impl IntMap {
+    /// `step`: LUT-index units per integer diff unit; `last`: top address.
+    pub(crate) fn new(step: f32, last: i32) -> Self {
+        let step = step as f64;
+        let (mult, shift) = if !(step > 0.0) || !step.is_finite() {
+            (0i64, 0u32)
+        } else {
+            // step = m·2^e with m ∈ [1, 2): shift = 30 − e puts
+            // round(step·2^shift) in [2^30, 2^31]
+            let e = step.log2().floor() as i32;
+            let shift = (30 - e).clamp(0, 62) as u32;
+            let mult = (step * (2f64).powi(shift as i32)).round();
+            ((mult.min((1u64 << 31) as f64)) as i64, shift)
+        };
+        Self { mult, shift, last: last as i64 }
+    }
+
+    /// One quant step == one LUT address: the multiply disappears and
+    /// pass 1 is the paper's `clamp(m_q - v_q, 0, last)` wiring.
+    #[inline]
+    pub(crate) fn is_unit(&self) -> bool {
+        self.mult == 1i64 << self.shift
+    }
+
+    #[inline(always)]
+    pub(crate) fn index(&self, d: i32) -> i32 {
+        debug_assert!(d >= 0, "diff from the row max must be non-negative");
+        (((d as i64 * self.mult) >> self.shift).min(self.last)) as i32
+    }
+
+    #[inline]
+    pub(crate) fn last(&self) -> i32 {
+        self.last as i32
+    }
+}
+
+/// Integer pass 1 over an i8 row, aligned (unit-map) variant: LUT address
+/// is `min(m - v, last)` (diffs are non-negative, so the lower clamp is
+/// free). Parks addresses in `idx` and returns the integer row sum.
+///
+/// §Perf: branchless `chunks_exact(8)` blocks — the address block is pure
+/// widen/sub/min (autovectorizes; the `i8/<mode>` bench labels track the
+/// delta vs the f32 pass 1), the gather block feeds the scalar sum.
+#[inline]
+pub(crate) fn pass1_i8_unit(row: &[i8], m: i32, last: i32, table: &[i32], idx: &mut [i32]) -> i32 {
+    let mut s = 0i32;
+    for (i8b, r8) in idx.chunks_exact_mut(8).zip(row.chunks_exact(8)) {
+        for k in 0..8 {
+            i8b[k] = (m - r8[k] as i32).min(last);
+        }
+        for k in 0..8 {
+            s += table[i8b[k] as usize];
+        }
+    }
+    let rem = row.len() - row.len() % 8;
+    for (slot, &v) in idx[rem..].iter_mut().zip(&row[rem..]) {
+        let k = (m - v as i32).min(last);
+        *slot = k;
+        s += table[k as usize];
+    }
+    s
+}
+
+/// Integer pass 1 over an i8 row, general fixed-point variant: one
+/// widening multiply + shift + min per element (see [`IntMap`]).
+#[inline]
+pub(crate) fn pass1_i8_mapped(row: &[i8], m: i32, map: IntMap, table: &[i32], idx: &mut [i32]) -> i32 {
+    let mut s = 0i32;
+    for (i8b, r8) in idx.chunks_exact_mut(8).zip(row.chunks_exact(8)) {
+        for k in 0..8 {
+            i8b[k] = map.index(m - r8[k] as i32);
+        }
+        for k in 0..8 {
+            s += table[i8b[k] as usize];
+        }
+    }
+    let rem = row.len() - row.len() % 8;
+    for (slot, &v) in idx[rem..].iter_mut().zip(&row[rem..]) {
+        let k = map.index(m - v as i32);
+        *slot = k;
+        s += table[k as usize];
+    }
+    s
+}
+
+/// Integer pass 1 over a row of i32 scores (the attention path's QK^T
+/// accumulators) — same structure as [`pass1_i8_mapped`], wider input.
+#[inline]
+pub(crate) fn pass1_scores_mapped(row: &[i32], m: i32, map: IntMap, table: &[i32], idx: &mut [i32]) -> i32 {
+    let mut s = 0i32;
+    for (i8b, r8) in idx.chunks_exact_mut(8).zip(row.chunks_exact(8)) {
+        for k in 0..8 {
+            i8b[k] = map.index(m - r8[k]);
+        }
+        for k in 0..8 {
+            s += table[i8b[k] as usize];
+        }
+    }
+    let rem = row.len() - row.len() % 8;
+    for (slot, &v) in idx[rem..].iter_mut().zip(&row[rem..]) {
+        let k = map.index(m - v);
+        *slot = k;
+        s += table[k as usize];
+    }
+    s
+}
+
+/// Row max of an i8 row (empty row -> `i8::MIN`, which callers never see:
+/// the trait boundary rejects `n == 0` and empty batches return early).
+#[inline]
+pub(crate) fn i8_row_max(row: &[i8]) -> i8 {
+    row.iter().copied().fold(i8::MIN, i8::max)
+}
+
+/// Reusable per-thread kernel workspace: LUT addresses for one row, the
+/// per-row dequantized f32 mirror of the active table, and a spill buffer
+/// for the default (dequantizing) i8 path. Engines only grow the buffers;
+/// a single `Scratch` serves any engine/shape sequence.
 #[derive(Debug, Default)]
 pub struct Scratch {
     idx: Vec<i32>,
     deq: Vec<f32>,
+    fbuf: Vec<f32>,
 }
 
 impl Scratch {
@@ -115,6 +317,21 @@ impl Scratch {
             self.deq.resize(deq_len, 0.0);
         }
         (&mut self.idx[..idx_len], &mut self.deq[..deq_len])
+    }
+
+    /// Move the spill buffer out (grown to `len`) so the default i8 path
+    /// can dequantize into it and still hand the scratch to `run_with`;
+    /// return it with [`Scratch::put_fbuf`] to keep the amortization.
+    pub(crate) fn take_fbuf(&mut self, len: usize) -> Vec<f32> {
+        let mut b = std::mem::take(&mut self.fbuf);
+        if b.len() < len {
+            b.resize(len, 0.0);
+        }
+        b
+    }
+
+    pub(crate) fn put_fbuf(&mut self, buf: Vec<f32>) {
+        self.fbuf = buf;
     }
 }
 
@@ -136,12 +353,41 @@ pub trait SoftmaxEngine: Send + Sync {
         self.run_with(x, n, out, &mut scratch);
     }
 
+    /// i8 fast path: softmax over raw quantized rows described by an
+    /// [`IntRow`] adapter. The default implementation dequantizes into the
+    /// scratch spill buffer and runs the f32 datapath (reference
+    /// semantics, and the fallback for engines without an integer pass);
+    /// the LUT engines override it with a pure-integer pass 1 — see the
+    /// module docs ("Integer pass 1").
+    fn run_i8_with(&self, x: &[i8], n: usize, row: IntRow, out: &mut [f32], scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        let mut buf = scratch.take_fbuf(x.len());
+        for (b, &q) in buf.iter_mut().zip(x) {
+            *b = row.dequantize(q);
+        }
+        self.run_with(&buf[..x.len()], n, out, scratch);
+        scratch.put_fbuf(buf);
+    }
+
+    /// Convenience single-shot i8 wrapper (brings its own scratch).
+    fn run_i8(&self, x: &[i8], n: usize, row: IntRow, out: &mut [f32]) {
+        let mut scratch = Scratch::new();
+        self.run_i8_with(x, n, row, out, &mut scratch);
+    }
+
     fn name(&self) -> &'static str;
 
     /// convenience: allocate and return the result
     fn apply(&self, x: &[f32], n: usize) -> Vec<f32> {
         let mut out = vec![0.0; x.len()];
         self.run(x, n, &mut out);
+        out
+    }
+
+    /// convenience: allocate and return the i8-path result
+    fn apply_i8(&self, x: &[i8], n: usize, row: IntRow) -> Vec<f32> {
+        let mut out = vec![0.0; x.len()];
+        self.run_i8(x, n, row, &mut out);
         out
     }
 }
@@ -194,9 +440,10 @@ pub(crate) fn row_max(row: &[f32]) -> f32 {
     row.iter().copied().fold(f32::NEG_INFINITY, f32::max)
 }
 
-/// Trait-boundary shape guard shared by every engine (debug builds).
+/// Trait-boundary shape guard shared by every engine (debug builds);
+/// generic over the input element so the f32 and i8 paths share it.
 #[inline]
-pub(crate) fn debug_check_shape(x: &[f32], n: usize, out: &[f32]) {
+pub(crate) fn debug_check_shape<T>(x: &[T], n: usize, out: &[f32]) {
     debug_assert!(n > 0, "softmax row length n must be > 0");
     debug_assert_eq!(x.len() % n, 0, "x.len() must be a multiple of n");
     debug_assert_eq!(x.len(), out.len(), "out length must match x");
@@ -260,6 +507,99 @@ mod tests {
         let e = engine(Mode::Rexp, Precision::Uint8, None);
         let mut out = [0.0f32; 2];
         e.run(&[1.0, 2.0], 0, &mut out);
+    }
+
+    #[test]
+    fn int_map_unit_is_identity_up_to_last() {
+        let m = IntMap::new(1.0, 7);
+        assert!(m.is_unit());
+        for d in 0..32 {
+            assert_eq!(m.index(d), d.min(7));
+        }
+        assert_eq!(m.last(), 7);
+    }
+
+    #[test]
+    fn int_map_matches_f32_trunc_for_dyadic_steps() {
+        for &step in &[1.0f32, 0.5, 0.25, 0.125, 2.0, 10.0, 0.625] {
+            let m = IntMap::new(step, 100);
+            for d in 0..512 {
+                let want = ((d as f32 * step) as i32).min(100);
+                assert_eq!(m.index(d), want, "step {step} d {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn int_map_huge_step_saturates_without_overflow() {
+        let m = IntMap::new(f32::MAX, 12);
+        assert_eq!(m.index(0), 0);
+        assert_eq!(m.index(1), 12);
+        assert_eq!(m.index(i32::MAX), 12);
+    }
+
+    #[test]
+    fn int_map_keeps_precision_for_tiny_attention_steps() {
+        // regression: the attention path's step is s_q·s_k/√d_h ~ 1e-4..1e-6;
+        // a fixed 16-bit shift would round the multiplier to 0 or 1 and
+        // collapse every diff to one address. The per-map shift must keep
+        // the map faithful to trunc(d · step) across the whole diff range.
+        // Dyadic tiny step: exact.
+        let step = 2.0f32.powi(-20);
+        let m = IntMap::new(step, 100);
+        for d in [0i32, 1, 1 << 19, (1 << 20) - 1, 1 << 20, 3 << 20, 200 << 20] {
+            assert_eq!(m.index(d), (d >> 20).min(100), "d={d}");
+        }
+        // Non-dyadic tiny step: within one index unit of the real map over
+        // score-diff magnitudes the QK^T accumulators actually produce.
+        let step = 3.8e-6f32;
+        let m = IntMap::new(step, 100);
+        for d in [0i32, 100_000, 263_158, 1_000_000, 5_000_000] {
+            let want = ((d as f64 * step as f64) as i32).min(100);
+            assert!((m.index(d) - want).abs() <= 1, "d={d}: {} vs {want}", m.index(d));
+        }
+        assert_eq!(m.index(5_000_000 * 40), 100, "saturation still clamps");
+    }
+
+    #[test]
+    fn pass1_helpers_agree_and_cover_tails() {
+        // unit and mapped i8 variants, and the i32-score variant, must all
+        // produce the same addresses/sum at step 1.0 (tail lengths 0..7)
+        let table: Vec<i32> = (0..9).map(|i| 100 - 10 * i).collect();
+        let last = (table.len() - 1) as i32;
+        let map = IntMap::new(1.0, last);
+        for n in 1..20usize {
+            let row: Vec<i8> = (0..n).map(|i| ((i * 7) % 23) as i8 - 11).collect();
+            let m = i8_row_max(&row) as i32;
+            let wide: Vec<i32> = row.iter().map(|&v| v as i32).collect();
+            let (mut ia, mut ib, mut ic) = (vec![0; n], vec![0; n], vec![0; n]);
+            let sa = pass1_i8_unit(&row, m, last, &table, &mut ia);
+            let sb = pass1_i8_mapped(&row, m, map, &table, &mut ib);
+            let sc = pass1_scores_mapped(&wide, m, map, &table, &mut ic);
+            assert_eq!((sa, &ia), (sb, &ib), "n={n}");
+            assert_eq!((sb, &ib), (sc, &ic), "n={n}");
+            for (&k, &v) in ia.iter().zip(&row) {
+                assert_eq!(k, (m - v as i32).min(last));
+            }
+        }
+    }
+
+    #[test]
+    fn default_i8_path_is_dequant_plus_f32_run() {
+        // engines without an integer pass (Exact) route i8 input through
+        // the scratch spill buffer and the f32 datapath
+        let e = SoftmaxExact;
+        let row = IntRow::new(0.25, -3);
+        let x: Vec<i8> = vec![-8, 0, 5, 120, -128, 4];
+        let deq: Vec<f32> = x.iter().map(|&q| row.dequantize(q)).collect();
+        assert_eq!(e.apply_i8(&x, 3, row), e.apply(&deq, 3));
+        // scratch reuse across the two paths stays clean
+        let mut s = Scratch::new();
+        let mut a = vec![0.0; x.len()];
+        let mut b = vec![0.0; x.len()];
+        e.run_i8_with(&x, 2, row, &mut a, &mut s);
+        e.run_with(&deq, 2, &mut b, &mut s);
+        assert_eq!(a, b);
     }
 
     #[test]

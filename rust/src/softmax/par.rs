@@ -11,36 +11,70 @@
 //! the explicit-amortization story of `run_with`, multiplied across cores.
 //!
 //! Small batches fall back to the wrapped engine inline (fan-out costs
-//! more than it saves below a few thousand elements), which keeps single
-//! requests at sequential latency while saturated batches scale.
+//! more than it saves below a few thousand elements — or below a handful
+//! of rows, however wide), which keeps single requests at sequential
+//! latency while saturated batches scale.
+//!
+//! The pool is deliberately task-generic underneath: besides f32 and i8
+//! softmax row-blocks, [`ParSoftmax::scatter`] fans arbitrary indexed
+//! closures (the fused attention kernel's B×H head-blocks) across the
+//! same workers.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use super::{debug_check_shape, Scratch, SoftmaxEngine};
+use super::{debug_check_shape, IntRow, Scratch, SoftmaxEngine};
 
 /// Don't bother fanning out below this many elements per shard.
 const MIN_ELEMS_PER_SHARD: usize = 2048;
 
-/// One sharded softmax call: raw views into the caller's buffers plus the
-/// engine to run. The submitting thread blocks until every job of the
-/// batch has signalled `done`, so the pointers outlive the job; `out`
-/// blocks are disjoint between jobs of one batch.
+/// ...nor with fewer than this many rows per shard: waking the pool to
+/// hand a worker one or two rows costs more than computing them (the
+/// tiny-batch latency regression guarded by `integration_par.rs`).
+const MIN_ROWS_PER_SHARD: usize = 4;
+
+/// What a worker runs: a sharded softmax row-block (f32 or i8 ingestion)
+/// or one index of a [`ParSoftmax::scatter`] fan-out.
+enum Task {
+    Softmax {
+        x: *const f32,
+        out: *mut f32,
+        len: usize,
+        n: usize,
+        engine: Arc<dyn SoftmaxEngine>,
+    },
+    SoftmaxI8 {
+        x: *const i8,
+        out: *mut f32,
+        len: usize,
+        n: usize,
+        row: IntRow,
+        engine: Arc<dyn SoftmaxEngine>,
+    },
+    Scatter {
+        /// type-erased `&F where F: Fn(usize, &mut Scratch) + Sync`
+        ctx: *const (),
+        /// monomorphized trampoline reconstituting `&F` from `ctx`
+        call: unsafe fn(*const (), usize, &mut Scratch),
+        index: usize,
+    },
+}
+
+/// One unit of pool work. The submitting thread blocks until every job of
+/// the batch has signalled `done`, so the pointers outlive the job; `out`
+/// blocks (and scatter indices) are disjoint between jobs of one batch.
 struct Job {
-    x: *const f32,
-    out: *mut f32,
-    len: usize,
-    n: usize,
-    engine: Arc<dyn SoftmaxEngine>,
+    task: Task,
     done: mpsc::Sender<()>,
 }
 
-// SAFETY: `x`/`out` stay valid and unaliased for the job's lifetime (the
-// submitter blocks on `done` before returning, and hands each job a
-// disjoint block); `engine` is `Send + Sync` by the trait bound; `done`
-// is a `Send` sender.
+// SAFETY: `x`/`out`/`ctx` stay valid and unaliased for the job's lifetime
+// (the submitter blocks on `done` before returning, and hands each job a
+// disjoint block/index); `engine` is `Send + Sync` by the trait bound,
+// scatter closures are `Sync` by `scatter`'s bound; `done` is a `Send`
+// sender.
 unsafe impl Send for Job {}
 
 struct Shared {
@@ -123,9 +157,19 @@ fn worker_loop(shared: &Shared) {
         };
         // SAFETY: see `unsafe impl Send for Job` — the submitter keeps the
         // buffers alive and the blocks disjoint until `done` is signalled.
-        let x = unsafe { std::slice::from_raw_parts(job.x, job.len) };
-        let out = unsafe { std::slice::from_raw_parts_mut(job.out, job.len) };
-        job.engine.run_with(x, job.n, out, &mut scratch);
+        match job.task {
+            Task::Softmax { x, out, len, n, engine } => {
+                let x = unsafe { std::slice::from_raw_parts(x, len) };
+                let out = unsafe { std::slice::from_raw_parts_mut(out, len) };
+                engine.run_with(x, n, out, &mut scratch);
+            }
+            Task::SoftmaxI8 { x, out, len, n, row, engine } => {
+                let x = unsafe { std::slice::from_raw_parts(x, len) };
+                let out = unsafe { std::slice::from_raw_parts_mut(out, len) };
+                engine.run_i8_with(x, n, row, out, &mut scratch);
+            }
+            Task::Scatter { ctx, call, index } => unsafe { call(ctx, index, &mut scratch) },
+        }
         let _ = job.done.send(());
     }
 }
@@ -171,18 +215,70 @@ impl ParSoftmax {
         self.parallel_batches.load(Ordering::Relaxed)
     }
 
-    /// Rows per shard for a (rows, n) batch; 0 means "run inline".
+    /// Rows per shard for a (rows, n) batch; 0 means "run inline". A
+    /// shard must carry both enough elements AND enough whole rows to be
+    /// worth a pool wake — a 3-row batch stays inline no matter how wide.
     fn shard_rows(&self, rows: usize, n: usize) -> usize {
         let workers = self.pool.workers();
         if workers <= 1 || rows < 2 {
             return 0;
         }
         let by_work = (rows * n) / MIN_ELEMS_PER_SHARD;
-        let shards = workers.min(by_work).min(rows);
+        let by_rows = rows / MIN_ROWS_PER_SHARD;
+        let shards = workers.min(by_work).min(by_rows);
         if shards < 2 {
             return 0;
         }
         rows.div_ceil(shards)
+    }
+
+    /// Fan `f(index, worker scratch)` over `0..count` on the pool,
+    /// blocking until every index has run; `count < 2` (or a 1-worker
+    /// pool) runs inline on the caller's scratch. Used by the fused
+    /// attention kernel to batch B×H head-blocks through the same pool
+    /// that shards softmax rows.
+    ///
+    /// Contract: `f` runs concurrently from worker threads, so everything
+    /// it writes must be disjoint per index (the `Sync` bound covers the
+    /// reads).
+    pub fn scatter<F>(&self, count: usize, scratch: &mut Scratch, f: &F)
+    where
+        F: Fn(usize, &mut Scratch) + Sync,
+    {
+        if count == 0 {
+            return;
+        }
+        if self.pool.workers() <= 1 || count < 2 {
+            for i in 0..count {
+                f(i, scratch);
+            }
+            return;
+        }
+        self.parallel_batches.fetch_add(1, Ordering::Relaxed);
+        unsafe fn trampoline<F: Fn(usize, &mut Scratch) + Sync>(
+            ctx: *const (),
+            index: usize,
+            scratch: &mut Scratch,
+        ) {
+            // SAFETY: `ctx` is the `&F` the submitter holds alive until
+            // every `done` signal has been received.
+            let f = unsafe { &*(ctx as *const F) };
+            f(index, scratch);
+        }
+        let ctx = f as *const F as *const ();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        for index in 0..count {
+            self.pool.submit(Job {
+                task: Task::Scatter { ctx, call: trampoline::<F>, index },
+                done: done_tx.clone(),
+            });
+        }
+        drop(done_tx);
+        for _ in 0..count {
+            done_rx
+                .recv()
+                .expect("softmax worker pool: worker died mid-scatter");
+        }
     }
 }
 
@@ -203,11 +299,13 @@ impl SoftmaxEngine for ParSoftmax {
         let mut sent = 0usize;
         for (xc, oc) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
             self.pool.submit(Job {
-                x: xc.as_ptr(),
-                out: oc.as_mut_ptr(),
-                len: xc.len(),
-                n,
-                engine: self.inner.clone(),
+                task: Task::Softmax {
+                    x: xc.as_ptr(),
+                    out: oc.as_mut_ptr(),
+                    len: xc.len(),
+                    n,
+                    engine: self.inner.clone(),
+                },
                 done: done_tx.clone(),
             });
             sent += 1;
@@ -217,6 +315,44 @@ impl SoftmaxEngine for ParSoftmax {
             // Err means a job was dropped without signalling (worker
             // panicked); by then every job has terminated, so unwinding
             // here cannot race the buffers.
+            done_rx
+                .recv()
+                .expect("softmax worker pool: worker died mid-batch");
+        }
+    }
+
+    /// i8 batches shard exactly like f32 batches (same inline policy),
+    /// each worker running the wrapped engine's integer fast path.
+    fn run_i8_with(&self, x: &[i8], n: usize, row: IntRow, out: &mut [f32], scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
+        let rows = x.len() / n;
+        let block = self.shard_rows(rows, n);
+        if block == 0 {
+            return self.inner.run_i8_with(x, n, row, out, scratch);
+        }
+        self.parallel_batches.fetch_add(1, Ordering::Relaxed);
+        let chunk = block * n;
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let mut sent = 0usize;
+        for (xc, oc) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            self.pool.submit(Job {
+                task: Task::SoftmaxI8 {
+                    x: xc.as_ptr(),
+                    out: oc.as_mut_ptr(),
+                    len: xc.len(),
+                    n,
+                    row,
+                    engine: self.inner.clone(),
+                },
+                done: done_tx.clone(),
+            });
+            sent += 1;
+        }
+        drop(done_tx);
+        for _ in 0..sent {
             done_rx
                 .recv()
                 .expect("softmax worker pool: worker died mid-batch");
@@ -282,5 +418,52 @@ mod tests {
         let seq = engine(Mode::Exact, Precision::Uint8, None);
         assert_eq!(p.apply(&x, 64), seq.apply(&x, 64));
         assert_eq!(p.parallel_batches(), 0);
+    }
+
+    #[test]
+    fn few_rows_stay_inline_however_wide() {
+        // 3 rows x 4096 elements clears the element threshold but not the
+        // row threshold: tiny batches must not pay a pool wake
+        let mut rng = Rng::new(11);
+        let n = 4096;
+        let x = rng.normal_vec(3 * n, 2.0);
+        let p = par(Mode::Rexp, Precision::Uint8, 4);
+        let seq = engine(Mode::Rexp, Precision::Uint8, None);
+        assert_eq!(p.apply(&x, n), seq.apply(&x, n));
+        assert_eq!(p.parallel_batches(), 0, "3 rows must run inline");
+    }
+
+    #[test]
+    fn i8_batches_shard_like_f32_batches() {
+        let mut rng = Rng::new(12);
+        let n = 128;
+        let row = crate::softmax::IntRow::new(0.5, 3);
+        let x: Vec<i8> = (0..256 * n).map(|_| rng.int(-128, 127) as i8).collect();
+        let p = par(Mode::Lut2d, Precision::Uint8, 4);
+        let seq = engine(Mode::Lut2d, Precision::Uint8, None);
+        assert_eq!(p.apply_i8(&x, n, row), seq.apply_i8(&x, n, row));
+        assert_eq!(p.parallel_batches(), 1, "32k i8 elements must fan out");
+        // and a tiny i8 batch stays inline
+        assert_eq!(p.apply_i8(&x[..2 * n], n, row), seq.apply_i8(&x[..2 * n], n, row));
+        assert_eq!(p.parallel_batches(), 1);
+    }
+
+    #[test]
+    fn scatter_runs_every_index_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let p = par(Mode::Rexp, Precision::Uint8, 4);
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        let mut scratch = Scratch::new();
+        p.scatter(hits.len(), &mut scratch, &|i, _s| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        // single-index scatter runs inline on the caller's scratch
+        let one = AtomicUsize::new(0);
+        p.scatter(1, &mut scratch, &|i, _s| {
+            assert_eq!(i, 0);
+            one.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(one.load(Ordering::SeqCst), 1);
     }
 }

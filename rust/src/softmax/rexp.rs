@@ -21,7 +21,10 @@
 //! the same inputs, so outputs are bit-identical; the third full pass and
 //! the `thread_local!` scratch it needed are gone.
 
-use super::{debug_check_shape, row_max, Scratch, SoftmaxEngine};
+use super::{
+    debug_check_shape, i8_row_max, pass1_i8_mapped, pass1_i8_unit, row_max, IntMap, IntRow,
+    Scratch, SoftmaxEngine,
+};
 use crate::lut::{rexp_tables, Precision, RexpTables};
 
 pub struct SoftmaxRexp {
@@ -68,6 +71,46 @@ impl SoftmaxRexp {
             }
         }
     }
+
+    /// The [`IntMap`] of the i8 path: `row.scale` LUT-index units (logit
+    /// units) per quantization step.
+    pub(crate) fn int_map(&self, step: f32) -> IntMap {
+        IntMap::new(step, (self.tables.recip_e.len() - 1) as i32)
+    }
+
+    /// LUT-alpha read for an integer row sum (0 beyond the table — the
+    /// paper's `LUT_alpha[x_s] = 0` convention).
+    #[inline]
+    pub(crate) fn alpha_for(&self, s: i32) -> i32 {
+        let j = (s >> self.w) as usize;
+        let alpha = &self.tables.alpha;
+        if j >= alpha.len() {
+            0
+        } else {
+            alpha[j]
+        }
+    }
+
+    /// Integer-stage output of the i8 fast path (`sig_int`) — mirrors
+    /// [`SoftmaxRexp::run_int`] with integer ingestion; used by the
+    /// bit-exactness tests and by fixed-point consumers.
+    pub fn run_i8_int(&self, x: &[i8], n: usize, row: IntRow, out: &mut [i32]) {
+        let recip = &self.tables.recip_e;
+        let map = self.int_map(row.scale);
+        for (rowq, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = i8_row_max(rowq) as i32;
+            let mut s: i32 = 0;
+            for (o, &v) in orow.iter_mut().zip(rowq) {
+                let e = recip[map.index(m - v as i32) as usize];
+                *o = e;
+                s += e;
+            }
+            let a = self.alpha_for(s);
+            for o in orow.iter_mut() {
+                *o = (*o * a) >> self.w;
+            }
+        }
+    }
 }
 
 impl SoftmaxEngine for SoftmaxRexp {
@@ -93,6 +136,45 @@ impl SoftmaxEngine for SoftmaxRexp {
             let a = if j >= alpha.len() { 0 } else { alpha[j] };
             if hoist {
                 // f32-mirrored table: dequant once per ENTRY, gather per elem
+                for (d, &e) in deq.iter_mut().zip(recip.iter()) {
+                    *d = ((e * a) >> self.w) as f32 * self.inv_qmax;
+                }
+                for (o, &k) in orow.iter_mut().zip(idx.iter()) {
+                    *o = deq[k as usize];
+                }
+            } else {
+                for (o, &k) in orow.iter_mut().zip(idx.iter()) {
+                    *o = ((recip[k as usize] * a) >> self.w) as f32 * self.inv_qmax;
+                }
+            }
+        }
+    }
+
+    /// i8 fast path: pass 1 is pure integer — an `i8` max scan, then the
+    /// branchless `chunks_exact(8)` address/gather blocks of
+    /// [`pass1_i8_unit`] (aligned case, `idx = clamp(m_q - v_q, 0, last)`)
+    /// or [`pass1_i8_mapped`] (one fixed-point multiply). Pass 2 is the
+    /// same fused dequant as the f32 path, so output ==
+    /// `run_i8_int * 1/qmax` bit-exactly.
+    fn run_i8_with(&self, x: &[i8], n: usize, row: IntRow, out: &mut [f32], scratch: &mut Scratch) {
+        debug_check_shape(x, n, out);
+        if x.is_empty() {
+            return;
+        }
+        let recip = &self.tables.recip_e;
+        let map = self.int_map(row.scale);
+        let unit = map.is_unit();
+        let hoist = n >= recip.len();
+        let (idx, deq) = scratch.borrow2(n, recip.len());
+        for (rowq, orow) in x.chunks_exact(n).zip(out.chunks_exact_mut(n)) {
+            let m = i8_row_max(rowq) as i32;
+            let s = if unit {
+                pass1_i8_unit(rowq, m, map.last(), recip, idx)
+            } else {
+                pass1_i8_mapped(rowq, m, map, recip, idx)
+            };
+            let a = self.alpha_for(s);
+            if hoist {
                 for (d, &e) in deq.iter_mut().zip(recip.iter()) {
                     *d = ((e * a) >> self.w) as f32 * self.inv_qmax;
                 }
@@ -198,6 +280,39 @@ mod tests {
         let e = SoftmaxRexp::new(Precision::Uint8, Some(256));
         let out = e.apply(&x, 17);
         assert!(out.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn i8_fast_path_matches_its_integer_stage() {
+        // hoisted and direct pass-2 variants, unit and non-unit maps: the
+        // f32 output of run_i8_with must equal run_i8_int * 1/qmax exactly
+        testkit::check("rexp i8 fused dequant", 25, |rng| {
+            let prec = *rng.choice(&crate::lut::ALL_PRECISIONS);
+            let e = SoftmaxRexp::new(prec, None);
+            let table_len = e.tables().recip_e.len();
+            let n = rng.usize(1, 2 * table_len);
+            let rows = rng.usize(1, 6);
+            let row = IntRow::new(*rng.choice(&[1.0f32, 0.5, 0.37, 2.0]), rng.int(-20, 20) as i32);
+            let x: Vec<i8> = (0..rows * n).map(|_| rng.int(-128, 127) as i8).collect();
+            let mut ints = vec![0i32; x.len()];
+            e.run_i8_int(&x, n, row, &mut ints);
+            let inv = 1.0 / prec.qmax() as f32;
+            let want: Vec<f32> = ints.iter().map(|&v| v as f32 * inv).collect();
+            assert_eq!(e.apply_i8(&x, n, row), want);
+        });
+    }
+
+    #[test]
+    fn i8_unit_map_indexes_by_raw_quant_diff() {
+        // the aligned case: two quant steps below the max land on LUT
+        // entry 2 regardless of zero point
+        let e = SoftmaxRexp::new(Precision::Uint8, None);
+        let recip = &e.tables().recip_e;
+        let mut out = [0i32; 3];
+        e.run_i8_int(&[5, 3, 4], 3, IntRow::unit(), &mut out);
+        let s = recip[0] + recip[2] + recip[1];
+        let a = e.alpha_for(s);
+        assert_eq!(out[1], (recip[2] * a) >> 8);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! for serving experiments: random token sequences, scenes and Poisson
 //! arrivals matching the evaluation distributions.
 
+use crate::attention::{AttnMask, AttnShape};
 use crate::runtime::Tensor;
 use crate::testkit::Rng;
 
@@ -68,6 +69,42 @@ pub fn random_image(rng: &mut Rng, size: usize, channels: usize) -> Tensor {
     Tensor::f32(vec![size, size, channels], data)
 }
 
+/// Q/K/V activation tensors for an attention workload: `(B,H,L,d)` /
+/// `(B,H,S,d)` f32, entries ~ N(0, scale) — normalized attention inputs,
+/// the paper's operating point. Shared by the `attn/*` benches, the
+/// `"attn:<mode>:<prec>"` route's load tests and the hwsim experiments.
+pub fn attn_qkv(rng: &mut Rng, shape: &AttnShape, scale: f32) -> (Tensor, Tensor, Tensor) {
+    let qdims = vec![shape.batch, shape.heads, shape.len_q, shape.d_head];
+    let kdims = vec![shape.batch, shape.heads, shape.len_k, shape.d_head];
+    (
+        Tensor::f32(qdims, rng.normal_vec(shape.q_len(), scale)),
+        Tensor::f32(kdims.clone(), rng.normal_vec(shape.kv_len(), scale)),
+        Tensor::f32(kdims, rng.normal_vec(shape.kv_len(), scale)),
+    )
+}
+
+/// A `B×H×L×S` attention score tensor flattened to `(B·H·L, S)` rows —
+/// softmax-shaped load for benches and the standalone softmax routes.
+/// Entries ~ N(0, 1), the distribution of `q·k/√d` under unit q/k.
+pub fn attn_scores(rng: &mut Rng, shape: &AttnShape) -> Tensor {
+    let rows = shape.heads_total() * shape.len_q;
+    Tensor::f32(vec![rows, shape.len_k], rng.normal_vec(rows * shape.len_k, 1.0))
+}
+
+/// Random per-batch valid key prefix lengths in `[1, len_k]` (PAD masks).
+pub fn attn_pad_lens(rng: &mut Rng, batch: usize, len_k: usize) -> Vec<usize> {
+    (0..batch).map(|_| rng.usize(1, len_k)).collect()
+}
+
+/// A random mask of any of the three kinds, PAD lengths included.
+pub fn attn_mask(rng: &mut Rng, shape: &AttnShape) -> AttnMask {
+    match rng.usize(0, 2) {
+        0 => AttnMask::Dense,
+        1 => AttnMask::Causal,
+        _ => AttnMask::Padding(attn_pad_lens(rng, shape.batch, shape.len_k)),
+    }
+}
+
 /// Poisson inter-arrival gaps (in microseconds) for open-loop load tests.
 pub fn poisson_arrivals_us(rng: &mut Rng, count: usize, rate_per_sec: f64) -> Vec<u64> {
     let mean_us = 1e6 / rate_per_sec;
@@ -109,6 +146,27 @@ mod tests {
         assert_eq!(t.dims, vec![32, 32, 3]);
         let v = t.as_f32().unwrap();
         assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn attn_generators_are_well_shaped() {
+        let mut rng = Rng::new(9);
+        let shape = AttnShape { batch: 2, heads: 3, len_q: 8, len_k: 12, d_head: 4 };
+        let (q, k, v) = attn_qkv(&mut rng, &shape, 1.0);
+        assert_eq!(q.dims, vec![2, 3, 8, 4]);
+        assert_eq!(k.dims, vec![2, 3, 12, 4]);
+        assert_eq!(v.dims, vec![2, 3, 12, 4]);
+        assert_eq!(q.len(), shape.q_len());
+        let scores = attn_scores(&mut rng, &shape);
+        assert_eq!(scores.dims, vec![2 * 3 * 8, 12]);
+        let lens = attn_pad_lens(&mut rng, 50, 12);
+        assert!(lens.iter().all(|&l| (1..=12).contains(&l)));
+        for _ in 0..20 {
+            match attn_mask(&mut rng, &shape) {
+                AttnMask::Padding(lens) => assert_eq!(lens.len(), 2),
+                AttnMask::Dense | AttnMask::Causal => {}
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,432 @@
+//! Integer-native attention: bit-exactness of the i8 softmax ingestion
+//! against the f32 datapath, accuracy of the fused kernel against an f32
+//! `SoftmaxExact` reference attention (the paper's <1% bound, measured on
+//! the attention map), exact masking semantics, head-parallel exactness,
+//! and the artifact-free `"attn:<mode>:<prec>"` serving route.
+
+use std::time::Duration;
+
+use lutmax::attention::{
+    AttnMask, AttnScratch, AttnShape, ComposedAttention, FusedAttention, QuantTensor,
+};
+use lutmax::config::ServerConfig;
+use lutmax::coordinator::{Coordinator, Payload, Reply, RouteTable};
+use lutmax::lut::Precision;
+use lutmax::quant::Affine;
+use lutmax::runtime::Tensor;
+use lutmax::softmax::{engine, engine_parallel, IntRow, Mode, SoftmaxEngine, SoftmaxExact};
+use lutmax::softmax::{SoftmaxLut2d, SoftmaxRexp};
+use lutmax::testkit::{self, Rng};
+use lutmax::workload;
+
+/// Dyadic affine scales make dequantization exact in f32, which pins the
+/// integer pass to the f32 datapath bit-for-bit (see the softmax module
+/// docs, "Integer pass 1").
+const DYADIC_SCALES: [f32; 5] = [1.0, 0.5, 0.25, 0.0625, 2.0];
+
+fn dequant(x: &[i8], row: IntRow) -> Vec<f32> {
+    x.iter()
+        .map(|&q| (q as i32 - row.zero_point) as f32 * row.scale)
+        .collect()
+}
+
+#[test]
+fn rexp_i8_bit_exact_vs_f32_on_dequantized_inputs() {
+    for prec in lutmax::lut::ALL_PRECISIONS {
+        let e = SoftmaxRexp::new(prec, None);
+        testkit::check(&format!("rexp i8 == f32 {}", prec.name()), 10, |rng| {
+            let n = rng.usize(1, 80);
+            let rows = rng.usize(1, 8);
+            let irow = IntRow::new(*rng.choice(&DYADIC_SCALES), rng.int(-40, 40) as i32);
+            let x: Vec<i8> = (0..rows * n).map(|_| rng.int(-128, 127) as i8).collect();
+            let mut got = vec![0i32; x.len()];
+            e.run_i8_int(&x, n, irow, &mut got);
+            let mut want = vec![0i32; x.len()];
+            e.run_int(&dequant(&x, irow), n, &mut want);
+            assert_eq!(got, want, "{} n={n}", prec.name());
+        });
+    }
+}
+
+#[test]
+fn lut2d_i8_bit_exact_vs_f32_on_dequantized_inputs() {
+    // lut2d's index grid is 0.1-per-bin: dyadic multiples keep the f32
+    // expression (d * 10.0) exact, so the integer map must match it
+    for prec in lutmax::lut::ALL_PRECISIONS {
+        let e = SoftmaxLut2d::new(prec);
+        testkit::check(&format!("lut2d i8 == f32 {}", prec.name()), 10, |rng| {
+            let n = rng.usize(1, 80);
+            let rows = rng.usize(1, 8);
+            let irow = IntRow::new(*rng.choice(&DYADIC_SCALES), rng.int(-40, 40) as i32);
+            let x: Vec<i8> = (0..rows * n).map(|_| rng.int(-128, 127) as i8).collect();
+            let mut got = vec![0i32; x.len()];
+            e.run_i8_int(&x, n, irow, &mut got);
+            let mut want = vec![0i32; x.len()];
+            e.run_int(&dequant(&x, irow), n, &mut want);
+            assert_eq!(got, want, "{} n={n}", prec.name());
+        });
+    }
+}
+
+#[test]
+fn i8_trait_entry_matches_f32_engine_via_dequant() {
+    // the full f32-output path: run_i8_with (integer pass 1 + fused
+    // dequant pass 2) == run_with on dequantized rows, for dyadic scales
+    let mut rng = Rng::new(5);
+    for mode in [Mode::Rexp, Mode::Lut2d, Mode::Exact] {
+        let e = engine(mode, Precision::Uint8, None);
+        for &scale in &DYADIC_SCALES {
+            let irow = IntRow::new(scale, rng.int(-30, 30) as i32);
+            let n = rng.usize(2, 96);
+            let rows = rng.usize(1, 6);
+            let x: Vec<i8> = (0..rows * n).map(|_| rng.int(-128, 127) as i8).collect();
+            assert_eq!(
+                e.apply_i8(&x, n, irow),
+                e.apply(&dequant(&x, irow), n),
+                "{mode:?} scale={scale}"
+            );
+        }
+    }
+}
+
+fn quantize_dyadic(x: &[f32], scale: f32, zp: i32) -> QuantTensor {
+    QuantTensor::quantize_with(x, Affine { scale, zero_point: zp })
+}
+
+#[test]
+fn fused_probs_bit_match_the_f32_compose_under_dyadic_quant() {
+    // small integers + dyadic scales + power-of-4 d_head keep every f32
+    // expression of the compose exact, so the fused integer probs must
+    // equal the f32-engine probs on dequantized scores bit-for-bit
+    let shape = AttnShape::square(2, 2, 24, 16); // sqrt(16) = 4, dyadic
+    let mut rng = Rng::new(6);
+    let mk = |rng: &mut Rng, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.int(-16, 16) as f32 * 0.25).collect()
+    };
+    let qf = mk(&mut rng, shape.q_len());
+    let kf = mk(&mut rng, shape.kv_len());
+    let q = quantize_dyadic(&qf, 0.25, 3);
+    let k = quantize_dyadic(&kf, 0.25, -7);
+    for mode in [Mode::Rexp, Mode::Lut2d] {
+        let fused = FusedAttention::new(mode, Precision::Uint8, Some(256)).unwrap();
+        let eng = match mode {
+            Mode::Rexp => {
+                Box::new(SoftmaxRexp::new(Precision::Uint8, Some(256))) as Box<dyn SoftmaxEngine>
+            }
+            _ => Box::new(SoftmaxLut2d::new(Precision::Uint8)) as Box<dyn SoftmaxEngine>,
+        };
+        for mask in [
+            AttnMask::Dense,
+            AttnMask::Causal,
+            AttnMask::Padding(vec![17, 5]),
+        ] {
+            for bh in 0..shape.heads_total() {
+                let got = fused.probs_head(&q, &k, &shape, &mask, bh);
+                // f32 compose of the same head: dequantized scores, same
+                // engine, row-by-row over the valid prefix
+                let b = bh / shape.heads;
+                let (l, s, dh) = (shape.len_q, shape.len_k, shape.d_head);
+                let qh = dequant(&q.data[bh * l * dh..(bh + 1) * l * dh], IntRow::from_affine(&q.affine));
+                let kh = dequant(&k.data[bh * s * dh..(bh + 1) * s * dh], IntRow::from_affine(&k.affine));
+                let inv_sqrt = 1.0 / (dh as f32).sqrt();
+                let mut want = vec![0.0f32; l * s];
+                for i in 0..l {
+                    let valid = mask.valid_len(b, i, s);
+                    if valid == 0 {
+                        continue;
+                    }
+                    let mut scores = vec![0.0f32; valid];
+                    for (j, sc) in scores.iter_mut().enumerate() {
+                        let mut dot = 0.0f32;
+                        for d in 0..dh {
+                            dot += qh[i * dh + d] * kh[j * dh + d];
+                        }
+                        *sc = dot * inv_sqrt;
+                    }
+                    eng.run(&scores, valid, &mut want[i * s..i * s + valid]);
+                }
+                assert_eq!(got, want, "{mode:?} mask={mask:?} head={bh}");
+            }
+        }
+    }
+}
+
+/// MAE of the fused attention *map* (probabilities) against exact f32
+/// softmax — the paper's accuracy bound, < 1% per element.
+#[test]
+fn fused_attention_map_within_one_percent_of_exact() {
+    let shape = AttnShape::square(2, 2, 64, 32);
+    let mut rng = Rng::new(7);
+    let exact = SoftmaxExact;
+    for mode in [Mode::Rexp, Mode::Lut2d] {
+        let fused = FusedAttention::new(mode, Precision::Uint8, None).unwrap();
+        for mask in [
+            AttnMask::Dense,
+            AttnMask::Causal,
+            AttnMask::Padding(workload::attn_pad_lens(&mut rng, shape.batch, shape.len_k)),
+        ] {
+            let qf = rng.normal_vec(shape.q_len(), 1.0);
+            let kf = rng.normal_vec(shape.kv_len(), 1.0);
+            let q = QuantTensor::quantize(&qf);
+            let k = QuantTensor::quantize(&kf);
+            let (l, s, dh) = (shape.len_q, shape.len_k, shape.d_head);
+            let inv_sqrt = 1.0 / (dh as f32).sqrt();
+            let mut err = 0.0f64;
+            let mut count = 0usize;
+            for bh in 0..shape.heads_total() {
+                let got = fused.probs_head(&q, &k, &shape, &mask, bh);
+                let b = bh / shape.heads;
+                let qh = &qf[bh * l * dh..(bh + 1) * l * dh];
+                let kh = &kf[bh * s * dh..(bh + 1) * s * dh];
+                for i in 0..l {
+                    let valid = mask.valid_len(b, i, s);
+                    if valid == 0 {
+                        continue;
+                    }
+                    let mut scores = vec![0.0f32; valid];
+                    for (j, sc) in scores.iter_mut().enumerate() {
+                        let mut dot = 0.0f32;
+                        for d in 0..dh {
+                            dot += qh[i * dh + d] * kh[j * dh + d];
+                        }
+                        *sc = dot * inv_sqrt;
+                    }
+                    let want = exact.apply(&scores, valid);
+                    for (g, w) in got[i * s..i * s + valid].iter().zip(&want) {
+                        err += (g - w).abs() as f64;
+                        count += 1;
+                    }
+                }
+            }
+            let mae = err / count as f64;
+            assert!(
+                mae < 0.01,
+                "{mode:?} mask={mask:?}: attention-map MAE {mae} >= 1%"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_outputs_track_the_f32_compose() {
+    // the integer path (i8 quantization + fixed-point map + integer MACs)
+    // must add only quantization-level error on top of the mode's own
+    // softmax approximation: compare fused vs the same-mode f32 compose.
+    // (Output MAE vs *exact* softmax is approximation-dominated — it
+    // scales with |v|·sqrt(L) — which is why the paper's 1% bound lives
+    // on the attention map, asserted above.)
+    let shape = AttnShape::square(1, 4, 64, 32);
+    let mut rng = Rng::new(8);
+    let qf = rng.normal_vec(shape.q_len(), 1.0);
+    let kf = rng.normal_vec(shape.kv_len(), 1.0);
+    let vf = rng.normal_vec(shape.kv_len(), 1.0);
+    let q = QuantTensor::quantize(&qf);
+    let k = QuantTensor::quantize(&kf);
+    let v = QuantTensor::quantize(&vf);
+    for mode in [Mode::Rexp, Mode::Lut2d] {
+        let fused = FusedAttention::new(mode, Precision::Uint8, None).unwrap();
+        let alpha = match mode {
+            Mode::Rexp => Some(lutmax::attention::ATTN_ALPHA_LEN),
+            _ => None,
+        };
+        let composed = ComposedAttention::new(engine(mode, Precision::Uint8, alpha));
+        for mask in [AttnMask::Dense, AttnMask::Causal] {
+            let mut got = vec![0.0f32; shape.q_len()];
+            let mut scr = AttnScratch::new();
+            fused.run(&q, &k, &v, &shape, &mask, &mut got, &mut scr);
+            let mut want = vec![0.0f32; shape.q_len()];
+            composed.run_f32(&qf, &kf, &vf, &shape, &mask, &mut want);
+            let mae: f64 = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / got.len() as f64;
+            assert!(mae < 0.03, "{mode:?} mask={mask:?}: fused-vs-compose MAE {mae}");
+        }
+    }
+}
+
+#[test]
+fn masking_is_exact_and_head_parallelism_is_bit_stable() {
+    let shape = AttnShape::square(2, 4, 48, 16);
+    let mut rng = Rng::new(9);
+    let qf = rng.normal_vec(shape.q_len(), 1.0);
+    let kf = rng.normal_vec(shape.kv_len(), 1.0);
+    let vf = rng.normal_vec(shape.kv_len(), 1.0);
+    let q = QuantTensor::quantize(&qf);
+    let k = QuantTensor::quantize(&kf);
+    let v = QuantTensor::quantize(&vf);
+    let fused = FusedAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+
+    // causal: strictly-upper-triangle probabilities are exactly zero
+    let probs = fused.probs_head(&q, &k, &shape, &AttnMask::Causal, 3);
+    for i in 0..shape.len_q {
+        for j in 0..shape.len_k {
+            let p = probs[i * shape.len_k + j];
+            if j > i {
+                assert_eq!(p, 0.0, "causal leak at ({i},{j})");
+            }
+        }
+    }
+    // padding: everything at or beyond the prefix is exactly zero, and a
+    // zero-length batch produces all-zero output rows
+    let pad = AttnMask::Padding(vec![13, 0]);
+    let probs = fused.probs_head(&q, &k, &shape, &pad, 1);
+    for i in 0..shape.len_q {
+        for j in 13..shape.len_k {
+            assert_eq!(probs[i * shape.len_k + j], 0.0, "pad leak at ({i},{j})");
+        }
+    }
+    let mut seq = vec![0.0f32; shape.q_len()];
+    let mut scr = AttnScratch::new();
+    fused.run(&q, &k, &v, &shape, &pad, &mut seq, &mut scr);
+    let half = shape.q_len() / 2;
+    assert!(seq[half..].iter().all(|&o| o == 0.0), "padded-out batch must be zero");
+    assert!(seq[..half].iter().any(|&o| o != 0.0));
+
+    // head-scatter across the pool is == with the sequential sweep
+    let pool = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+    let mut par = vec![0.0f32; shape.q_len()];
+    fused.run_par(&q, &k, &v, &shape, &pad, &pool, &mut par);
+    assert_eq!(seq, par);
+}
+
+fn empty_artifacts_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("lutmax_attn_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir
+}
+
+#[test]
+fn attention_route_serves_without_artifacts() {
+    // the attn route needs no PJRT and no compiled artifacts; replies must
+    // match a local fused kernel run bit-for-bit (same per-tensor affines)
+    let cfg = ServerConfig {
+        artifacts: empty_artifacts_dir("route"),
+        max_batch: 4,
+        batch_timeout_us: 500,
+        workers: 2,
+        queue_depth: 64,
+    };
+    let routes = RouteTable {
+        attention: Some("attn:rexp:uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg, routes).unwrap();
+    let mut rng = Rng::new(21);
+    let shape = AttnShape::square(1, 2, 32, 16);
+    let (q, k, v) = workload::attn_qkv(&mut rng, &shape, 1.0);
+    let rxs: Vec<_> = (0..3)
+        .map(|_| {
+            c.submit(Payload::Attention {
+                q: q.clone(),
+                k: k.clone(),
+                v: v.clone(),
+                causal: true,
+                pad_lens: None,
+            })
+            .unwrap()
+        })
+        .collect();
+
+    let fused = FusedAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let mut want = vec![0.0f32; shape.q_len()];
+    let mut scr = AttnScratch::new();
+    fused.run(
+        &QuantTensor::quantize(q.as_f32().unwrap()),
+        &QuantTensor::quantize(k.as_f32().unwrap()),
+        &QuantTensor::quantize(v.as_f32().unwrap()),
+        &shape,
+        &AttnMask::Causal,
+        &mut want,
+        &mut scr,
+    );
+    for rx in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            Reply::Attention(t) => {
+                assert_eq!(t.dims, q.dims);
+                assert_eq!(t.as_f32().unwrap(), &want[..]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.per_task["attention"].requests, 3);
+    assert_eq!(stats.executions, 0, "attn route must not touch PJRT");
+    c.shutdown().unwrap();
+}
+
+#[test]
+fn attention_route_rejects_malformed_payloads_individually() {
+    let cfg = ServerConfig {
+        artifacts: empty_artifacts_dir("badshape"),
+        max_batch: 8,
+        batch_timeout_us: 500,
+        workers: 1,
+        queue_depth: 64,
+    };
+    let routes = RouteTable {
+        attention: Some("attn:lut2d:uint8".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg, routes).unwrap();
+    let mut rng = Rng::new(22);
+    let shape = AttnShape::square(1, 2, 8, 4);
+    let (q, k, v) = workload::attn_qkv(&mut rng, &shape, 1.0);
+    let good = c
+        .submit(Payload::Attention {
+            q: q.clone(),
+            k: k.clone(),
+            v: v.clone(),
+            causal: false,
+            pad_lens: Some(vec![5]),
+        })
+        .unwrap();
+    // 2-D q: invalid
+    let bad = c
+        .submit(Payload::Attention {
+            q: Tensor::f32(vec![2, 4], rng.normal_vec(8, 1.0)),
+            k: k.clone(),
+            v,
+            causal: false,
+            pad_lens: None,
+        })
+        .unwrap();
+    // pad_lens length mismatch: invalid
+    let bad_lens = c
+        .submit(Payload::Attention {
+            q,
+            k: k.clone(),
+            v: Tensor::f32(k.dims.clone(), rng.normal_vec(k.len(), 1.0)),
+            causal: false,
+            pad_lens: Some(vec![1, 2, 3]),
+        })
+        .unwrap();
+    match good.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Reply::Attention(t) => assert_eq!(t.dims, vec![1, 2, 8, 4]),
+        other => panic!("unexpected {other:?}"),
+    }
+    match bad.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Reply::Error(e) => assert!(e.contains("4-D"), "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    match bad_lens.recv_timeout(Duration::from_secs(30)).unwrap() {
+        Reply::Error(e) => assert!(e.contains("pad_lens"), "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    let routes = RouteTable {
+        attention: Some("attn:exact:uint8".into()),
+        ..Default::default()
+    };
+    let cfg = ServerConfig {
+        artifacts: empty_artifacts_dir("badroute"),
+        ..Default::default()
+    };
+    assert!(
+        Coordinator::start(cfg, routes).is_err(),
+        "non-LUT attention route must fail at startup"
+    );
+    c.shutdown().unwrap();
+}

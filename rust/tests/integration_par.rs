@@ -47,8 +47,8 @@ fn par_bit_exact_on_edge_shapes() {
         (1, 128),  // one row
         (2, 1),    // n = 1, fewer rows than workers
         (3, 7),    // rows < workers
-        (4, 4096), // big rows, few of them
-        (512, 1),  // n = 1, many rows (fans out)
+        (4, 4096), // big rows, few of them (inline: too few rows per shard)
+        (512, 1),  // n = 1, many rows (inline: too few elements)
         (129, 33), // odd everything
     ];
     let mut rng = testkit::Rng::new(77);
@@ -96,6 +96,71 @@ fn run_with_matches_run_across_scratch_reuse() {
                 assert_eq!(got, e.apply(&x, n), "{mode:?}/{} n={n}", prec.name());
             }
         }
+    }
+}
+
+#[test]
+fn tiny_batches_run_inline_wide_or_narrow() {
+    // regression (tiny-batch latency): batches with fewer than a shard's
+    // worth of rows must NOT wake the pool, no matter how wide the rows —
+    // the old elements-only threshold fanned a 3-row batch out as soon as
+    // rows were ~1k wide
+    let mut rng = testkit::Rng::new(31);
+    for &(rows, n) in &[(2usize, 8192usize), (3, 4096), (7, 1024)] {
+        let x = rng.normal_vec(rows * n, 2.0);
+        let seq = engine(Mode::Rexp, Precision::Uint8, None);
+        let par = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+        assert_eq!(par.apply(&x, n), seq.apply(&x, n));
+        assert_eq!(
+            par.parallel_batches(),
+            0,
+            "{rows} rows x {n} must run inline (rows below the shard minimum)"
+        );
+    }
+    // ...while a row-rich batch of the same element count still fans out
+    let x = rng.normal_vec(256 * 96, 2.0);
+    let par = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+    let seq = engine(Mode::Rexp, Precision::Uint8, None);
+    assert_eq!(par.apply(&x, 96), seq.apply(&x, 96));
+    assert_eq!(par.parallel_batches(), 1, "256 rows x 96 must use the pool");
+}
+
+#[test]
+fn par_i8_ingestion_bit_exact_and_thresholded() {
+    // the i8 fast path shards under the same policy and stays == with the
+    // wrapped engine's integer path
+    let mut rng = testkit::Rng::new(32);
+    let row = lutmax::softmax::IntRow::new(0.25, -5);
+    for mode in [Mode::Rexp, Mode::Lut2d] {
+        let seq = engine(mode, Precision::Uint8, None);
+        let par = engine_parallel(mode, Precision::Uint8, None, Some(4));
+        for &(rows, n) in &[(1usize, 64usize), (3, 4096), (64, 64), (256, 128)] {
+            let x: Vec<i8> = (0..rows * n).map(|_| rng.int(-128, 127) as i8).collect();
+            let mut a = vec![0.0f32; x.len()];
+            let mut b = vec![0.0f32; x.len()];
+            par.run_i8(&x, n, row, &mut a);
+            seq.run_i8(&x, n, row, &mut b);
+            assert_eq!(a, b, "{mode:?} rows={rows} n={n}");
+        }
+        assert_eq!(
+            par.parallel_batches(),
+            2,
+            "exactly the 64x64 and 256x128 i8 batches fan out"
+        );
+    }
+}
+
+#[test]
+fn scatter_tasks_share_the_pool_and_cover_all_indices() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let par = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(3));
+    let slots: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+    let mut scratch = Scratch::new();
+    par.scatter(slots.len(), &mut scratch, &|i, _s| {
+        slots[i].fetch_add(i + 1, Ordering::SeqCst);
+    });
+    for (i, s) in slots.iter().enumerate() {
+        assert_eq!(s.load(Ordering::SeqCst), i + 1, "index {i} ran exactly once");
     }
 }
 
