@@ -4,8 +4,8 @@
 
 use lutmax::benchkit::{flush_json, Bench};
 use lutmax::hwsim::{
-    all_designs, simulate, simulate_attention, simulate_row_parallel, AttnSimConfig, Design,
-    DesignKind, SimConfig,
+    all_designs, simulate, simulate_attention, simulate_decode, simulate_row_parallel,
+    AttnSimConfig, DecodeSimConfig, Design, DesignKind, SimConfig,
 };
 use lutmax::lut::Precision;
 
@@ -69,6 +69,36 @@ fn main() {
         );
     }
 
+    println!("\n=== streaming decode: paged KV + grouped heads (cycle model) ===");
+    println!(
+        "{:<20} {:>4} {:>12} {:>12} {:>9}",
+        "design", "G", "cycles/elem", "energy/elem", "vs MHA"
+    );
+    for kind in [DesignKind::Rexp, DesignKind::Lut2d] {
+        let d = Design::new(kind, Precision::Uint8);
+        // mirrors the software bench's decode/h8/g{8,2}/L128 pair
+        let base = DecodeSimConfig {
+            q_heads: 8,
+            kv_heads: 8,
+            seq_len: 128,
+            d_head: 64,
+            page_size: 16,
+            lanes: 4,
+        };
+        let mha = simulate_decode(&d, base);
+        for g in [8usize, 2] {
+            let r = simulate_decode(&d, DecodeSimConfig { kv_heads: g, ..base });
+            println!(
+                "{:<20} {:>4} {:>12.2} {:>12.2} {:>8.2}x",
+                d.name(),
+                g,
+                r.cycles_per_elem(),
+                r.energy_per_elem(),
+                mha.cycles as f64 / r.cycles as f64
+            );
+        }
+    }
+
     println!("\n=== simulator throughput ===");
     let designs = all_designs(Precision::Uint8);
     for d in &designs {
@@ -79,6 +109,21 @@ fn main() {
                 std::hint::black_box(simulate(d, cfg));
             });
     }
+    // decode row in the trajectory file: the L-step model itself
+    let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+    let dcfg = DecodeSimConfig {
+        q_heads: 8,
+        kv_heads: 2,
+        seq_len: 128,
+        d_head: 64,
+        page_size: 16,
+        lanes: 4,
+    };
+    Bench::new("simulate_decode/rexp")
+        .items(8 * 128 * 129 / 2)
+        .run(|| {
+            std::hint::black_box(simulate_decode(&d, dcfg));
+        });
 
     if let Some(path) = flush_json().expect("write BENCH_JSON") {
         println!("\n[bench] wrote {}", path.display());

@@ -12,13 +12,21 @@
 //!   attn/h<H>/L<L>        fused integer QK^T→softmax(LUT)→×V (uint8 rexp)
 //!   attn_unfused/h<H>/L<L>  the separate-pass compose (dequant, f32
 //!                         QK^T, softmax, ×V) — attn/* must be >= 1.3x
+//!   decode/h<H>/g<G>/L<L> L-step streaming decode over the paged i8 KV
+//!                         cache (uint8 rexp, page 16)
+//!   decode_gqa_vs_mha     the grouped-query config of the decode pair
+//!                         (h8/g2/L128) under a stable semantic label —
+//!                         compare against decode/h8/g8/L128 across
+//!                         commits (GQA reads 1/4 the K/V bytes)
 
 use std::sync::Arc;
 
 use lutmax::attention::{
-    AttnMask, AttnScratch, AttnShape, ComposedAttention, FusedAttention, QuantTensor,
+    AttnMask, AttnScratch, AttnShape, ComposedAttention, DecodeAttention, FusedAttention,
+    QuantTensor, DECODE_AFFINE,
 };
 use lutmax::benchkit::{flush_json, Bench, Suite};
+use lutmax::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
 use lutmax::lut::Precision;
 use lutmax::softmax::{engine, IntRow, Mode, ParSoftmax, Scratch, SoftmaxEngine};
 use lutmax::testkit::Rng;
@@ -154,6 +162,52 @@ fn main() {
         );
         suite.ratio(&format!("attn/h{h}/L{l}"), &format!("attn_unfused/h{h}/L{l}"));
     }
+
+    // streaming decode: L single-token steps through DecodeAttention over
+    // the paged i8 KV cache. items = score elements Σ_t H·t — the same
+    // work measure as attn/*, so element throughput is comparable. The
+    // h8/g8 vs h8/g2 pair is the MHA-vs-GQA story: identical MAC work,
+    // 1/4 the stored K/V traffic.
+    let mut suite = Suite::new("streaming decode over paged KV (uint8 rexp, page 16)");
+    let mut decode_case = |label: String, h: usize, g: usize, l: usize| {
+        let d = 64usize;
+        let a = DECODE_AFFINE;
+        let mut kv = KvPool::new(KvConfig {
+            pages: 2 * l.div_ceil(16),
+            page_size: 16,
+            kv_heads: g,
+            d_head: d,
+        });
+        let groups = HeadGroups::new(h, g).unwrap();
+        let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let mut step_rng = Rng::new(77);
+        let qs: Vec<Vec<i8>> = (0..l)
+            .map(|_| (0..h * d).map(|_| step_rng.int(-64, 64) as i8).collect())
+            .collect();
+        let ks: Vec<Vec<i8>> = (0..l)
+            .map(|_| (0..g * d).map(|_| step_rng.int(-64, 64) as i8).collect())
+            .collect();
+        let vs: Vec<Vec<i8>> = (0..l)
+            .map(|_| (0..g * d).map(|_| step_rng.int(-64, 64) as i8).collect())
+            .collect();
+        let mut out = vec![0.0f32; h * d];
+        let mut scr = AttnScratch::new();
+        suite.add(Bench::new(label).items(h * l * (l + 1) / 2).run(|| {
+            let mut seq = KvSeq::new(groups, a, a);
+            for t in 0..l {
+                dec.step(&mut kv, &mut seq, &qs[t], a, &ks[t], &vs[t], &mut out, &mut scr)
+                    .expect("bench arena sized for one sequence");
+            }
+            kv.close(seq);
+        }));
+    };
+    decode_case("decode/h4/g4/L64".into(), 4, 4, 64);
+    decode_case("decode/h8/g8/L128".into(), 8, 8, 128);
+    decode_case("decode/h8/g2/L128".into(), 8, 2, 128);
+    // the GQA side again under its stable semantic label (see header)
+    decode_case("decode_gqa_vs_mha".into(), 8, 2, 128);
+    suite.ratio("decode/h8/g2/L128", "decode/h8/g8/L128");
+    suite.ratio("decode_gqa_vs_mha", "decode/h8/g8/L128");
 
     if let Some(path) = flush_json().expect("write BENCH_JSON") {
         println!("\n[bench] wrote {}", path.display());

@@ -1,0 +1,356 @@
+//! Streaming decode through the fused LUT-softmax attention kernel.
+//!
+//! Autoregressive decode is the workload where the paper's softmax sits
+//! on the critical path of every generated token: one query row per step,
+//! attending over the whole stored prefix. [`DecodeAttention`] drives the
+//! *same* integer substrate as [`super::FusedAttention`]'s prefill sweep
+//! — the identical score algebra (zero points hoisted out of the `i8`
+//! dot, per-key byte sums read from page metadata), the identical
+//! single-row LUT softmax ([`FusedAttention::sig_row`]), and the identical
+//! `sig_int × V` integer MAC — so a T-step decode is **bit-identical** to
+//! a length-T causal prefill (property-tested in
+//! `rust/tests/integration_decode.rs`). An f32 probability row is never
+//! materialized; K/V are gathered straight out of the paged `i8` arena
+//! ([`crate::kv::KvPool`]).
+//!
+//! Grouped-query heads: the sequence's [`crate::kv::HeadGroups`] maps
+//! each query head onto its stored K/V head, so one page block serves
+//! `H/G` query heads. Per step, all `H` query-head rows either run inline
+//! (short prefixes — a pool wake costs more than the row) or scatter over
+//! a [`ParSoftmax`] pool as one task batch ([`DecodeAttention::step_par`],
+//! `==`-exact with the sequential sweep).
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::kernel::{AttnScratch, FusedAttention, MIN_HEAD_MACS};
+use crate::kv::{KvError, KvPool, KvSeq};
+use crate::lut::Precision;
+use crate::quant::Affine;
+use crate::softmax::{IntMap, Mode, ParSoftmax, Scratch};
+
+/// Ingress quantization of the decode serving route: a fixed dyadic
+/// affine (2^-4 per step, range ±8) sized for normalized activations —
+/// the paper's operating point, and the premise that makes the LUT
+/// softmax hold up. Fixed (rather than fitted per step) so every page of
+/// a session shares one affine — the per-page quantization contract of
+/// [`crate::kv`] — and decode replies are deterministic functions of the
+/// inputs.
+pub const DECODE_AFFINE: Affine = Affine { scale: 0.0625, zero_point: 0 };
+
+/// Everything a step's head sweep needs that is constant across heads:
+/// the score-unit LUT map and the fused output dequant, mirroring
+/// `FusedAttention::plan` expression for expression (bit-exactness with
+/// prefill depends on it).
+#[derive(Clone, Copy)]
+struct StepPlan {
+    map: IntMap,
+    out_scale: f32,
+    zq: i32,
+    zk: i32,
+    zv: i32,
+}
+
+/// Per-step decode attention over a paged KV cache. Construct once per
+/// (mode, precision, alpha) route; [`DecodeAttention::step`] /
+/// [`DecodeAttention::step_par`] per generated token.
+pub struct DecodeAttention {
+    kernel: FusedAttention,
+    /// per-worker scratch instances for the scattered path, persisted
+    /// across steps: decode runs once per generated token, so a fresh
+    /// scratch per call would put heap allocation on exactly the per-step
+    /// hot path the paged KV arena is built to avoid
+    spare: Mutex<Vec<AttnScratch>>,
+}
+
+impl DecodeAttention {
+    /// Same mode/precision/alpha space as [`FusedAttention::new`] (LUT
+    /// modes only).
+    pub fn new(mode: Mode, prec: Precision, alpha_len: Option<usize>) -> Result<Self> {
+        Ok(Self {
+            kernel: FusedAttention::new(mode, prec, alpha_len)?,
+            spare: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The underlying fused kernel (mode/precision accessors).
+    pub fn kernel(&self) -> &FusedAttention {
+        &self.kernel
+    }
+
+    fn plan(&self, seq: &KvSeq, d_head: usize, q_affine: Affine) -> StepPlan {
+        let step = (q_affine.scale as f64 * seq.k_affine().scale as f64
+            / (d_head as f64).sqrt()) as f32;
+        StepPlan {
+            map: self.kernel.int_map(step),
+            out_scale: seq.v_affine().scale * self.kernel.inv_qmax(),
+            zq: q_affine.zero_point,
+            zk: seq.k_affine().zero_point,
+            zv: seq.v_affine().zero_point,
+        }
+    }
+
+    /// One decode step, sequential over query heads: append the token's
+    /// K/V rows (`G * d`, `[g][d]`, quantized with the sequence's
+    /// affines), then attend `q` (`H * d`, `[h][d]`) over the whole
+    /// stored prefix into `out` (`H * d` f32). On exhaustion nothing is
+    /// appended and `out` is untouched — retry the same step after
+    /// capacity frees up.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        kv: &mut KvPool,
+        seq: &mut KvSeq,
+        q: &[i8],
+        q_affine: Affine,
+        k_row: &[i8],
+        v_row: &[i8],
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) -> Result<(), KvError> {
+        kv.append(seq, k_row, v_row)?;
+        let d = kv.config().d_head;
+        let h = seq.groups().q_heads();
+        check_step_shapes(q, out, h, d);
+        let plan = self.plan(seq, d, q_affine);
+        for (hh, oh) in out.chunks_exact_mut(d).enumerate() {
+            self.head_step(kv, seq, hh, &q[hh * d..(hh + 1) * d], plan, oh, scr);
+        }
+        Ok(())
+    }
+
+    /// [`DecodeAttention::step`] with the `H` query-head rows scattered
+    /// across a [`ParSoftmax`] pool as one task batch (bit-identical —
+    /// heads are independent and write disjoint `d`-sized output blocks).
+    /// Steps run inline on `scr` when the per-head work is under
+    /// [`MIN_HEAD_MACS`] (short prefixes) **or** there are fewer head
+    /// rows than the pool's
+    /// [`min_rows_per_shard`](ParSoftmax::min_rows_per_shard) — the same
+    /// row-threshold policy the pool applies to softmax batches, which is
+    /// how a decode route tunes its inline-vs-pool trade-off
+    /// (`ParSoftmax::with_policy`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_par(
+        &self,
+        kv: &mut KvPool,
+        seq: &mut KvSeq,
+        q: &[i8],
+        q_affine: Affine,
+        k_row: &[i8],
+        v_row: &[i8],
+        pool: &ParSoftmax,
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) -> Result<(), KvError> {
+        kv.append(seq, k_row, v_row)?;
+        let d = kv.config().d_head;
+        let h = seq.groups().q_heads();
+        check_step_shapes(q, out, h, d);
+        let plan = self.plan(seq, d, q_affine);
+        let head_macs = seq.len() * d;
+        if h < 2 || h < pool.min_rows_per_shard() || head_macs < MIN_HEAD_MACS {
+            for (hh, oh) in out.chunks_exact_mut(d).enumerate() {
+                self.head_step(kv, seq, hh, &q[hh * d..(hh + 1) * d], plan, oh, scr);
+            }
+            return Ok(());
+        }
+        let spare = &self.spare;
+        struct OutPtr(*mut f32);
+        // SAFETY: head tasks write disjoint `d`-sized blocks of `out`,
+        // and `scatter` blocks until every task has finished.
+        unsafe impl Send for OutPtr {}
+        unsafe impl Sync for OutPtr {}
+        let optr = OutPtr(out.as_mut_ptr());
+        let kv_ref: &KvPool = kv;
+        let seq_ref: &KvSeq = seq;
+        let mut pool_scratch = Scratch::new();
+        pool.scatter(h, &mut pool_scratch, &|hh, _s| {
+            let mut scr = spare.lock().unwrap().pop().unwrap_or_default();
+            let oh = unsafe { std::slice::from_raw_parts_mut(optr.0.add(hh * d), d) };
+            self.head_step(kv_ref, seq_ref, hh, &q[hh * d..(hh + 1) * d], plan, oh, &mut scr);
+            spare.lock().unwrap().push(scr);
+        });
+        Ok(())
+    }
+
+    /// One query head over the paged prefix — the decode mirror of the
+    /// prefill kernel's per-row sweep, same integer expressions on the
+    /// same values:
+    ///
+    ///   1. `q·K^T` as raw i8×i8 widening MACs per page block, zero
+    ///      points hoisted (`Σk` read from the page's precomputed sums);
+    ///   2./3. single-row integer LUT softmax (`sig_row`, shared);
+    ///   4. `sig × V` gather across pages, i64 accumulators, one fused
+    ///      dequant per output element.
+    fn head_step(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        h: usize,
+        qh: &[i8],
+        plan: StepPlan,
+        oh: &mut [f32],
+        scr: &mut AttnScratch,
+    ) {
+        let cfg = kv.config();
+        let (d, psize) = (cfg.d_head, cfg.page_size);
+        let gi = seq.groups().group_of(h);
+        let valid = seq.len();
+        scr.prepare_decode(valid, d, self.kernel.table().len());
+        let qsum: i32 = qh.iter().map(|&v| v as i32).sum();
+        let zqzk = d as i32 * plan.zq * plan.zk;
+        // 1. integer q·K^T over the paged prefix
+        let mut j = 0usize;
+        for (pi, &page) in seq.pages().iter().enumerate() {
+            let in_page = seq.tokens_in_page(psize, pi);
+            let kb = kv.page_k(page, gi);
+            let ks = kv.page_ksum(page, gi);
+            for t in 0..in_page {
+                let kj = &kb[t * d..(t + 1) * d];
+                let mut dot = 0i32;
+                for (&a, &b) in qh.iter().zip(kj) {
+                    dot += a as i32 * b as i32;
+                }
+                scr.scores[j] = dot - plan.zk * qsum - plan.zq * ks[t] + zqzk;
+                j += 1;
+            }
+        }
+        debug_assert_eq!(j, valid);
+        // 2./3. single-row integer softmax -> sig_int
+        let sig_sum = self.kernel.sig_row(valid, plan.map, scr);
+        // 4. sig × V gather across pages (i32 products — sig ≤ qmax,
+        // |v| ≤ 128 — accumulated in i64, as in the prefill kernel)
+        scr.acc[..d].fill(0);
+        let mut j = 0usize;
+        for (pi, &page) in seq.pages().iter().enumerate() {
+            let in_page = seq.tokens_in_page(psize, pi);
+            let vb = kv.page_v(page, gi);
+            for t in 0..in_page {
+                let g = scr.sig[j];
+                for (a, &v) in scr.acc[..d].iter_mut().zip(&vb[t * d..(t + 1) * d]) {
+                    *a += (g * v as i32) as i64;
+                }
+                j += 1;
+            }
+        }
+        let corr = plan.zv as i64 * sig_sum;
+        for (o, &a) in oh.iter_mut().zip(&scr.acc[..d]) {
+            *o = (a - corr) as f32 * plan.out_scale;
+        }
+    }
+}
+
+fn check_step_shapes(q: &[i8], out: &[f32], h: usize, d: usize) {
+    assert_eq!(q.len(), h * d, "q step must be q_heads * d_head");
+    assert_eq!(out.len(), h * d, "out must be q_heads * d_head");
+}
+
+/// Parse a decode route spec `"decode:<mode>:<prec>[:aN][:gG]"` (e.g.
+/// `"decode:rexp:uint8"`, `"decode:lut2d:int16:a512:g2"`) into
+/// `(mode, precision, alpha_len, kv_heads)`. `gG` fixes the stored-head
+/// count the route accepts (absent: MHA, every query head stores K/V).
+/// Returns `None` for anything else, including non-LUT modes.
+pub fn parse_decode_route(
+    spec: &str,
+) -> Option<(Mode, Precision, Option<usize>, Option<usize>)> {
+    let rest = spec.strip_prefix("decode:")?;
+    let mut parts = rest.split(':');
+    let mode = Mode::parse(parts.next()?)?;
+    if !matches!(mode, Mode::Rexp | Mode::Lut2d) {
+        return None;
+    }
+    let prec = Precision::parse(parts.next()?)?;
+    let (mut alpha, mut kv_heads) = (None, None);
+    for seg in parts {
+        if let Some(a) = seg.strip_prefix('a') {
+            if alpha.is_some() {
+                return None;
+            }
+            alpha = Some(a.parse().ok()?);
+        } else if let Some(g) = seg.strip_prefix('g') {
+            if kv_heads.is_some() {
+                return None;
+            }
+            let g: usize = g.parse().ok()?;
+            if g == 0 {
+                return None;
+            }
+            kv_heads = Some(g);
+        } else {
+            return None;
+        }
+    }
+    Some((mode, prec, alpha, kv_heads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kv::{HeadGroups, KvConfig};
+    use crate::testkit::Rng;
+
+    #[test]
+    fn decode_route_parsing() {
+        let (m, p, a, g) = parse_decode_route("decode:rexp:uint8").unwrap();
+        assert_eq!((m, p, a, g), (Mode::Rexp, Precision::Uint8, None, None));
+        let (m, p, a, g) = parse_decode_route("decode:lut2d:int16:a512:g2").unwrap();
+        assert_eq!((m, p, a, g), (Mode::Lut2d, Precision::Int16, Some(512), Some(2)));
+        let (_, _, a, g) = parse_decode_route("decode:rexp:uint8:g4").unwrap();
+        assert_eq!((a, g), (None, Some(4)));
+        assert!(parse_decode_route("decode:exact:uint8").is_none(), "non-LUT mode");
+        assert!(parse_decode_route("attn:rexp:uint8").is_none());
+        assert!(parse_decode_route("decode:rexp").is_none());
+        assert!(parse_decode_route("decode:rexp:uint8:g0").is_none());
+        assert!(parse_decode_route("decode:rexp:uint8:x3").is_none());
+        assert!(parse_decode_route("decode:rexp:uint8:g2:g4").is_none());
+    }
+
+    #[test]
+    fn decode_rows_are_probability_mixes_of_v() {
+        // V = constant 1.0 rows => every output element must be ~1.0
+        // (softmax rows mix to 1 within LUT quantization), pages crossed
+        let (h, g, d, ps) = (4usize, 2usize, 8usize, 4usize);
+        let mut kv = KvPool::new(KvConfig { pages: 16, page_size: ps, kv_heads: g, d_head: d });
+        let a = DECODE_AFFINE;
+        let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+        let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let mut rng = Rng::new(4);
+        let mut scr = AttnScratch::new();
+        let one = a.quantize(1.0);
+        let vrow = vec![one; g * d];
+        for _ in 0..11 {
+            let krow: Vec<i8> = (0..g * d).map(|_| a.quantize(rng.normal() as f32)).collect();
+            let qrow: Vec<i8> = (0..h * d).map(|_| a.quantize(rng.normal() as f32)).collect();
+            let mut out = vec![0.0f32; h * d];
+            dec.step(&mut kv, &mut seq, &qrow, a, &krow, &vrow, &mut out, &mut scr).unwrap();
+            // same bound the prefill kernel's row-sum test uses: LUT
+            // normalizer quantization, not exact unity
+            for (i, &o) in out.iter().enumerate() {
+                assert!(o > 0.5 && o < 1.5, "elem {i} = {o} after {} tokens", seq.len());
+            }
+        }
+        assert_eq!(seq.pages().len(), 3);
+    }
+
+    #[test]
+    fn exhausted_step_leaves_output_untouched() {
+        let (h, g, d) = (2usize, 1usize, 4usize);
+        let mut kv = KvPool::new(KvConfig { pages: 1, page_size: 2, kv_heads: g, d_head: d });
+        let a = DECODE_AFFINE;
+        let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+        let dec = DecodeAttention::new(Mode::Lut2d, Precision::Uint8, None).unwrap();
+        let mut scr = AttnScratch::new();
+        let row = vec![3i8; g * d];
+        let q = vec![1i8; h * d];
+        let mut out = vec![7.0f32; h * d];
+        for _ in 0..2 {
+            dec.step(&mut kv, &mut seq, &q, a, &row, &row, &mut out, &mut scr).unwrap();
+        }
+        out.fill(7.0);
+        let err = dec.step(&mut kv, &mut seq, &q, a, &row, &row, &mut out, &mut scr);
+        assert_eq!(err, Err(KvError::Exhausted { pages: 1 }));
+        assert!(out.iter().all(|&o| o == 7.0), "failed step must not write output");
+        assert_eq!(seq.len(), 2);
+    }
+}

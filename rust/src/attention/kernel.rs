@@ -40,25 +40,39 @@ use crate::softmax::{
 /// (`len_q·len_k·d_head`): a pool wake + per-task synchronization costs
 /// more than computing a tiny head inline — the same tiny-batch policy
 /// [`ParSoftmax`] applies to softmax row shards. ~4k MACs is a few µs of
-/// integer work, on the order of one task round-trip.
-const MIN_HEAD_MACS: usize = 4096;
+/// integer work, on the order of one task round-trip. (Shared with the
+/// decode path, whose per-step unit of work is one query head over the
+/// stored prefix.)
+pub(super) const MIN_HEAD_MACS: usize = 4096;
 
 /// Reusable per-thread workspace of the fused kernel (score row, LUT
 /// addresses, sig row, widened V/K-sum blocks, output accumulators).
 #[derive(Debug, Default)]
 pub struct AttnScratch {
-    scores: Vec<i32>,
+    pub(super) scores: Vec<i32>,
     idx: Vec<i32>,
-    sig: Vec<i32>,
+    pub(super) sig: Vec<i32>,
     sig_tab: Vec<i32>,
     v32: Vec<i32>,
     ksum: Vec<i32>,
-    acc: Vec<i64>,
+    pub(super) acc: Vec<i64>,
 }
 
 impl AttnScratch {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Decode-path prepare: one query row over a `len`-token prefix. No
+    /// widened V / K-sum blocks — those live in the KV pages.
+    pub(super) fn prepare_decode(&mut self, len: usize, d_head: usize, table_len: usize) {
+        grow_i32(&mut self.scores, len);
+        grow_i32(&mut self.idx, len);
+        grow_i32(&mut self.sig, len);
+        grow_i32(&mut self.sig_tab, table_len);
+        if self.acc.len() < d_head {
+            self.acc.resize(d_head, 0);
+        }
     }
 
     fn prepare(&mut self, len_k: usize, d_head: usize, table_len: usize) {
@@ -118,7 +132,11 @@ impl FusedAttention {
         self.prec
     }
 
-    fn table(&self) -> &[i32] {
+    pub(super) fn inv_qmax(&self) -> f32 {
+        self.inv_qmax
+    }
+
+    pub(super) fn table(&self) -> &[i32] {
         match &self.softmax {
             IntSoftmax::Rexp(e) => &e.tables().recip_e,
             IntSoftmax::Lut2d(e) => &e.tables().exp,
@@ -127,7 +145,7 @@ impl FusedAttention {
 
     /// The diff→address map for integer scores whose unit is `step` logit
     /// units (for QK^T accumulators, `step = s_q·s_k/√d_h`).
-    fn int_map(&self, step: f32) -> IntMap {
+    pub(super) fn int_map(&self, step: f32) -> IntMap {
         match &self.softmax {
             IntSoftmax::Rexp(e) => e.int_map(step),
             IntSoftmax::Lut2d(e) => e.int_map(step),
@@ -136,8 +154,9 @@ impl FusedAttention {
 
     /// Integer softmax over `scr.scores[..n]` (pass 1 + normalizer +
     /// sig), writing `scr.sig[..n]`; returns `Σ sig` for the zero-point
-    /// correction.
-    fn sig_row(&self, n: usize, map: IntMap, scr: &mut AttnScratch) -> i64 {
+    /// correction. Shared with the decode path, which fills the score row
+    /// from paged K blocks instead of a contiguous head.
+    pub(super) fn sig_row(&self, n: usize, map: IntMap, scr: &mut AttnScratch) -> i64 {
         let table = self.table();
         let m = scr.scores[..n].iter().copied().max().unwrap_or(0);
         let s = pass1_scores_mapped(&scr.scores[..n], m, map, table, &mut scr.idx[..n]);

@@ -30,9 +30,17 @@
 //! against (`attn/*` vs `attn_unfused/*` in `softmax_bench`). The
 //! serving route `"attn:<mode>:<prec[:aN]>"` (see
 //! [`crate::coordinator`]) is parsed by [`parse_route`].
+//!
+//! [`decode::DecodeAttention`] is the streaming-decode entry point: one
+//! query row per generated token over a paged integer KV cache
+//! ([`crate::kv`]), bit-identical to a causal prefill through this same
+//! kernel; its serving route `"decode:<mode>:<prec>[:aN][:gG]"` is
+//! parsed by [`parse_decode_route`].
 
+mod decode;
 mod kernel;
 
+pub use decode::{parse_decode_route, DecodeAttention, DECODE_AFFINE};
 pub use kernel::{AttnScratch, ComposedAttention, FusedAttention};
 
 use crate::lut::Precision;

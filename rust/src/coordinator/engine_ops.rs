@@ -5,15 +5,22 @@
 //! serves requests). The rust side owns the autoregressive decode loop;
 //! the artifacts are single fixed-shape steps.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::attention::{self, AttnMask, AttnShape, FusedAttention, QuantTensor};
+use super::request::Reply;
+use crate::attention::{
+    self, AttnMask, AttnScratch, AttnShape, DecodeAttention, FusedAttention, QuantTensor,
+    DECODE_AFFINE,
+};
 use crate::eval::DetectionBox;
+use crate::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
 use crate::lut::Precision;
+use crate::quant;
 use crate::runtime::{mode_tables, Engine, ModelRunner, Tensor};
 use crate::softmax::{self, Mode, ParSoftmax, Scratch, SoftmaxEngine, SoftmaxExact};
 use crate::workload::{BOS, EOS, PAD};
@@ -434,6 +441,197 @@ impl AttentionPipeline {
         self.kernel.run_par(&q, &k, &v, &shape, &mask, &self.pool, &mut out);
         Ok(Tensor::f32(r.q.dims.clone(), out))
     }
+}
+
+/// Pages in the decode pipeline's shared KV arena, and tokens per page.
+/// At (g2, d64) defaults that is 4096 × 16 tokens × 2 heads × 64 B ≈ 8 MiB
+/// per K/V arena — thousands of short sessions or hundreds of long ones.
+const DECODE_POOL_PAGES: usize = 4096;
+const DECODE_PAGE_SIZE: usize = 16;
+
+/// Decode batches are few-row (one softmax row per query head per step),
+/// so the route's worker pool runs a lower inline-vs-pool threshold than
+/// the default batch-serving policy.
+const DECODE_MIN_ROWS_PER_SHARD: usize = 2;
+
+/// Streaming decode serving pipeline — route
+/// `"decode:<mode>:<prec>[:aN][:gG]"` (e.g. `"decode:rexp:uint8:g2"`).
+/// Artifact-free like the attention route. Holds the session table
+/// (session id → [`KvSeq`] page table) and one shared [`KvPool`] arena;
+/// the pool is sized lazily from the first step's `(G, d_head)` shape
+/// (later sessions must match — one pool serves one model geometry).
+///
+/// Session lifecycle: [`super::Payload::DecodeOpen`] →
+/// [`Reply::Session`]; N × [`super::Payload::DecodeStep`] →
+/// [`Reply::Token`] each; [`super::Payload::DecodeClose`] →
+/// [`Reply::Closed`] with the pages reclaimed. KV exhaustion surfaces as
+/// a per-step [`Reply::Error`] (typed backpressure from
+/// [`crate::kv::KvError`]) — the session stays open and the step can be
+/// retried after other sessions close.
+pub struct DecodePipeline {
+    pub variant: String,
+    decode: DecodeAttention,
+    pool: ParSoftmax,
+    /// `gG` in the route pins the stored-head count requests must carry
+    route_kv_heads: Option<usize>,
+    kv: RefCell<Option<KvPool>>,
+    /// `None` until the first step binds the session's head geometry
+    sessions: RefCell<HashMap<u64, Option<KvSeq>>>,
+    next_session: Cell<u64>,
+    scratch: RefCell<AttnScratch>,
+    /// i8 staging for the step's quantized q / k / v rows
+    qbuf: RefCell<Vec<i8>>,
+    kvbuf: RefCell<Vec<i8>>,
+}
+
+impl DecodePipeline {
+    pub fn load(spec: &str, workers: usize) -> Result<Self> {
+        let (mode, prec, alpha_len, route_kv_heads) =
+            attention::parse_decode_route(spec).ok_or_else(|| {
+                anyhow!("decode route {spec:?}: want decode:<rexp|lut2d>:<prec>[:aN][:gG]")
+            })?;
+        // as for the attention route: the pool's wrapped engine is off the
+        // decode hot path (heads go through `scatter`), but keep its alpha
+        // consistent with the kernel's
+        let alpha = Some(alpha_len.unwrap_or(attention::ATTN_ALPHA_LEN));
+        let inner: Arc<dyn SoftmaxEngine> = Arc::from(softmax::engine(mode, prec, alpha));
+        Ok(Self {
+            variant: spec.to_string(),
+            decode: DecodeAttention::new(mode, prec, alpha_len)?,
+            pool: ParSoftmax::with_policy(inner, workers.max(1), DECODE_MIN_ROWS_PER_SHARD),
+            route_kv_heads,
+            kv: RefCell::new(None),
+            sessions: RefCell::new(HashMap::new()),
+            next_session: Cell::new(1),
+            scratch: RefCell::new(AttnScratch::new()),
+            qbuf: RefCell::new(Vec::new()),
+            kvbuf: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// open → [`Reply::Session`]
+    pub fn open(&self) -> Result<Reply> {
+        let id = self.next_session.get();
+        self.next_session.set(id + 1);
+        self.sessions.borrow_mut().insert(id, None);
+        Ok(Reply::Session(id))
+    }
+
+    /// one step → [`Reply::Token`]
+    pub fn step(&self, session: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Reply> {
+        let mut sessions = self.sessions.borrow_mut();
+        let slot = sessions
+            .get_mut(&session)
+            .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
+        let (h, g, d) = validate_decode_step(q, k, v)?;
+        if let Some(want) = self.route_kv_heads {
+            if g != want {
+                bail!("decode step carries {g} kv heads but the route fixes g{want}");
+            }
+        }
+        let mut kv_ref = self.kv.borrow_mut();
+        if let Some(p) = kv_ref.as_ref() {
+            let cfg = *p.config();
+            if cfg.kv_heads != g || cfg.d_head != d {
+                bail!(
+                    "decode step shape (g{g}, d{d}) incompatible with the pool's (g{}, d{})",
+                    cfg.kv_heads,
+                    cfg.d_head
+                );
+            }
+        } else {
+            *kv_ref = Some(KvPool::new(KvConfig {
+                pages: DECODE_POOL_PAGES,
+                page_size: DECODE_PAGE_SIZE,
+                kv_heads: g,
+                d_head: d,
+            }));
+        }
+        let kvp = kv_ref.as_mut().expect("pool bound above");
+        if let Some(s) = slot.as_ref() {
+            let sg = *s.groups();
+            if sg.q_heads() != h || sg.kv_heads() != g {
+                bail!(
+                    "decode step heads (H{h}, g{g}) do not match the session's (H{}, g{})",
+                    sg.q_heads(),
+                    sg.kv_heads()
+                );
+            }
+        } else {
+            *slot = Some(KvSeq::new(HeadGroups::new(h, g)?, DECODE_AFFINE, DECODE_AFFINE));
+        }
+        let seq = slot.as_mut().expect("session bound above");
+        // quantize at ingress with the route's fixed dyadic affine (the
+        // per-page quantization contract; see attention::DECODE_AFFINE)
+        let mut qb = self.qbuf.borrow_mut();
+        if qb.len() < h * d {
+            qb.resize(h * d, 0);
+        }
+        quant::quantize_into(q.as_f32()?, DECODE_AFFINE, &mut qb[..h * d]);
+        let mut kvb = self.kvbuf.borrow_mut();
+        if kvb.len() < 2 * g * d {
+            kvb.resize(2 * g * d, 0);
+        }
+        quant::quantize_into(k.as_f32()?, DECODE_AFFINE, &mut kvb[..g * d]);
+        quant::quantize_into(v.as_f32()?, DECODE_AFFINE, &mut kvb[g * d..2 * g * d]);
+        let (krow, rest) = kvb.split_at(g * d);
+        let vrow = &rest[..g * d];
+        let mut out = vec![0.0f32; h * d];
+        let mut scr = self.scratch.borrow_mut();
+        self.decode.step_par(
+            kvp,
+            seq,
+            &qb[..h * d],
+            DECODE_AFFINE,
+            krow,
+            vrow,
+            &self.pool,
+            &mut out,
+            &mut scr,
+        )?;
+        Ok(Reply::Token(Tensor::f32(q.dims.clone(), out)))
+    }
+
+    /// close → [`Reply::Closed`], pages returned to the arena
+    pub fn close(&self, session: u64) -> Result<Reply> {
+        let seq = self
+            .sessions
+            .borrow_mut()
+            .remove(&session)
+            .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
+        let pages = match (seq, self.kv.borrow_mut().as_mut()) {
+            (Some(s), Some(pool)) => pool.close(s),
+            // a session that never stepped holds no pages
+            _ => 0,
+        };
+        Ok(Reply::Closed { pages })
+    }
+}
+
+/// A decode step must be 2-D f32: q `(H, d)`, k/v `(G, d)` with matching
+/// depth, non-zero dims, and `G` dividing `H`. Returns `(H, G, d)`.
+fn validate_decode_step(q: &Tensor, k: &Tensor, v: &Tensor) -> Result<(usize, usize, usize)> {
+    let (qd, kd, vd) = (&q.dims, &k.dims, &v.dims);
+    if qd.len() != 2 || kd.len() != 2 || vd.len() != 2 {
+        bail!("decode step must be 2-D (heads, d_head), got q{qd:?} k{kd:?} v{vd:?}");
+    }
+    if kd != vd {
+        bail!("k/v step shapes must match, got {kd:?} vs {vd:?}");
+    }
+    if qd[1] != kd[1] {
+        bail!("q depth {} incompatible with k/v depth {}", qd[1], kd[1]);
+    }
+    if qd.iter().any(|&x| x == 0) || kd.iter().any(|&x| x == 0) {
+        bail!("decode step has a zero dimension: q{qd:?} k/v{kd:?}");
+    }
+    let (h, g, d) = (qd[0], kd[0], qd[1]);
+    if g > h || h % g != 0 {
+        bail!("kv heads ({g}) must evenly divide query heads ({h})");
+    }
+    q.as_f32()?;
+    k.as_f32()?;
+    v.as_f32()?;
+    Ok((h, g, d))
 }
 
 /// Attention payloads must be 4-D `(B,H,L,d)` / `(B,H,S,d)` f32 with

@@ -18,7 +18,8 @@ mod server;
 
 pub use batcher::Batcher;
 pub use engine_ops::{
-    AttentionPipeline, AttnRequest, ClsPipeline, DetPipeline, NmtPipeline, SoftmaxPipeline,
+    AttentionPipeline, AttnRequest, ClsPipeline, DecodePipeline, DetPipeline, NmtPipeline,
+    SoftmaxPipeline,
 };
 pub use metrics::{Histogram, Metrics};
 pub use request::{Payload, Reply, Request, TaskKind};

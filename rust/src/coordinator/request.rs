@@ -14,15 +14,17 @@ pub enum TaskKind {
     Detect,
     Softmax,
     Attention,
+    Decode,
 }
 
 impl TaskKind {
-    pub const ALL: [TaskKind; 5] = [
+    pub const ALL: [TaskKind; 6] = [
         TaskKind::Translate,
         TaskKind::Classify,
         TaskKind::Detect,
         TaskKind::Softmax,
         TaskKind::Attention,
+        TaskKind::Decode,
     ];
 
     pub fn name(self) -> &'static str {
@@ -32,6 +34,7 @@ impl TaskKind {
             Self::Detect => "detect",
             Self::Softmax => "softmax",
             Self::Attention => "attention",
+            Self::Decode => "decode",
         }
     }
 }
@@ -57,6 +60,22 @@ pub enum Payload {
         causal: bool,
         pad_lens: Option<Vec<usize>>,
     },
+    /// open a streaming decode session; replies [`Reply::Session`] with
+    /// the id the step/close payloads address (KV pages are allocated
+    /// lazily as steps arrive)
+    DecodeOpen,
+    /// one decode step for session `session`: f32 q `(H, d)` and new-token
+    /// k/v rows `(G, d)` (`G` stored heads shared by `H` query heads).
+    /// K/V are quantized and appended to the session's paged cache, then
+    /// attention runs over the whole stored prefix
+    DecodeStep {
+        session: u64,
+        q: Tensor,
+        k: Tensor,
+        v: Tensor,
+    },
+    /// close a decode session, returning its pages to the pool
+    DecodeClose(u64),
 }
 
 impl Payload {
@@ -67,6 +86,9 @@ impl Payload {
             Payload::Detect(_) => TaskKind::Detect,
             Payload::Softmax(_) => TaskKind::Softmax,
             Payload::Attention { .. } => TaskKind::Attention,
+            Payload::DecodeOpen | Payload::DecodeStep { .. } | Payload::DecodeClose(_) => {
+                TaskKind::Decode
+            }
         }
     }
 }
@@ -83,6 +105,12 @@ pub enum Reply {
     Softmax(Tensor),
     /// fused attention output, `(B,H,L,d)` like the query
     Attention(Tensor),
+    /// a decode session was opened; address steps/close to this id
+    Session(u64),
+    /// per-step decode attention output, `(H, d)` like the step's query
+    Token(Tensor),
+    /// a decode session closed; `pages` KV pages returned to the pool
+    Closed { pages: usize },
     /// the server rejected or failed the request
     Error(String),
 }
@@ -124,7 +152,12 @@ mod tests {
             pad_lens: None,
         };
         assert_eq!(attn.kind(), TaskKind::Attention);
-        assert_eq!(TaskKind::ALL.len(), 5);
+        assert_eq!(Payload::DecodeOpen.kind(), TaskKind::Decode);
+        let t = Tensor::zeros_f32(vec![2, 4]);
+        let step = Payload::DecodeStep { session: 0, q: t.clone(), k: t.clone(), v: t };
+        assert_eq!(step.kind(), TaskKind::Decode);
+        assert_eq!(Payload::DecodeClose(0).kind(), TaskKind::Decode);
+        assert_eq!(TaskKind::ALL.len(), 6);
     }
 
     #[test]

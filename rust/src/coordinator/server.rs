@@ -11,7 +11,8 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::Batcher;
 use super::engine_ops::{
-    AttentionPipeline, AttnRequest, ClsPipeline, DetPipeline, NmtPipeline, SoftmaxPipeline,
+    AttentionPipeline, AttnRequest, ClsPipeline, DecodePipeline, DetPipeline, NmtPipeline,
+    SoftmaxPipeline,
 };
 use super::metrics::Metrics;
 use super::request::{Payload, Reply, Request, TaskKind};
@@ -31,6 +32,10 @@ pub struct RouteTable {
     /// fused integer attention route `"attn:<mode>:<prec[:aN]>"` (see
     /// [`AttentionPipeline`](super::AttentionPipeline)); artifact-free
     pub attention: Option<String>,
+    /// streaming decode route `"decode:<mode>:<prec>[:aN][:gG]"` (see
+    /// [`DecodePipeline`](super::DecodePipeline)); artifact-free,
+    /// session-ful (open → step × N → close)
+    pub decode: Option<String>,
 }
 
 /// Snapshot of serving statistics.
@@ -180,6 +185,7 @@ struct Pipelines {
     det: Option<DetPipeline>,
     softmax: Option<SoftmaxPipeline>,
     attn: Option<AttentionPipeline>,
+    decode: Option<DecodePipeline>,
 }
 
 fn engine_thread(
@@ -220,6 +226,13 @@ fn engine_thread(
                 .attention
                 .as_deref()
                 .map(|v| AttentionPipeline::load(v, cfg.workers))
+                .transpose()?,
+            // artifact-free, session-ful: decode kernel + paged KV arena
+            // (sized lazily from the first step) + head-scatter pool
+            decode: routes
+                .decode
+                .as_deref()
+                .map(|v| DecodePipeline::load(v, cfg.workers))
                 .transpose()?,
         };
         Ok((engine, pipes))
@@ -404,6 +417,27 @@ fn process_batch(
                     .map(|r| match r {
                         Ok(t) => Reply::Attention(t),
                         Err(e) => Reply::Error(e.to_string()),
+                    })
+                    .collect()
+            }
+        },
+        TaskKind::Decode => match &pipes.decode {
+            None => vec![Reply::Error("no decode route".into()); batch.len()],
+            Some(p) => {
+                // session-ful: requests are processed strictly in arrival
+                // order (opens bind ids, steps grow their session's paged
+                // prefix, closes free pages); per-request replies so one
+                // bad step cannot fail its batchmates
+                batch
+                    .iter()
+                    .map(|r| {
+                        let res = match &r.payload {
+                            Payload::DecodeOpen => p.open(),
+                            Payload::DecodeStep { session, q, k, v } => p.step(*session, q, k, v),
+                            Payload::DecodeClose(s) => p.close(*s),
+                            _ => unreachable!(),
+                        };
+                        res.unwrap_or_else(|e| Reply::Error(e.to_string()))
                     })
                     .collect()
             }

@@ -17,7 +17,7 @@ mod units;
 
 pub use design::{all_designs, Design, DesignKind};
 pub use pipeline::{
-    simulate, simulate_attention, simulate_attention_parallel, simulate_row_parallel,
-    AttnSimConfig, SimConfig, SimReport,
+    simulate, simulate_attention, simulate_attention_parallel, simulate_decode,
+    simulate_row_parallel, AttnSimConfig, DecodeSimConfig, SimConfig, SimReport,
 };
 pub use units::{Cost, OpKind};

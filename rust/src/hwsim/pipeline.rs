@@ -199,6 +199,84 @@ pub fn simulate_attention_parallel(
     }
 }
 
+/// Streaming-decode shapes for the cycle model: `seq_len` single-token
+/// steps, the key prefix growing `1..=seq_len`, K/V gathered from
+/// fixed-size pages stored **once per group** (`q_heads / kv_heads` query
+/// heads share each stored head).
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeSimConfig {
+    pub q_heads: usize,
+    /// stored K/V heads (G ≤ q_heads; G == q_heads is MHA)
+    pub kv_heads: usize,
+    /// generated tokens (decode steps)
+    pub seq_len: usize,
+    pub d_head: usize,
+    /// tokens per KV page
+    pub page_size: usize,
+    /// parallel MAC / softmax element lanes
+    pub lanes: usize,
+}
+
+impl DecodeSimConfig {
+    /// score elements over the whole decode: `Σ_{t=1..L} q_heads · t`
+    fn score_elems(&self) -> u64 {
+        (self.q_heads * self.seq_len * (self.seq_len + 1) / 2) as u64
+    }
+}
+
+/// Fixed per-page activation cost of the KV gather (page-table lookup +
+/// row open), in cycles — the price of paging vs a monolithic buffer.
+const PAGE_TOUCH_CYCLES: u64 = 2;
+
+/// Cycle model of streaming decode around a softmax `design` — the hwsim
+/// mirror of [`crate::attention::DecodeAttention`] over
+/// [`crate::kv::KvPool`].
+///
+/// Per step `t` (prefix length `t`): a `q·K^T` MAC pass and a `sig×V` MAC
+/// pass for every **query** head, a single-row softmax per query head
+/// (the existing [`simulate`] model), and the page gather — K and V bytes
+/// are read once per **stored** head (`2 · kv_heads · t · d_head`
+/// LUT-port reads) plus a fixed [`PAGE_TOUCH_CYCLES`] per page touched
+/// (`ceil(t / page_size)`). Grouped-query heads therefore cut the
+/// dominant decode memory traffic by `q_heads / kv_heads` while the MAC
+/// work is unchanged — the GQA trade the `decode_gqa_vs_mha` bench label
+/// tracks in software.
+pub fn simulate_decode(design: &Design, cfg: DecodeSimConfig) -> SimReport {
+    use super::units::OpKind::{Add, LutRead, Mul};
+    let w = design.prec.w();
+    let per_lane = |count: u64, ops: &[super::units::OpKind]| -> u64 {
+        chain_cycles(design, ops, count.div_ceil(cfg.lanes as u64), w)
+    };
+    let mac_cost = Mul.cost(w).energy + Add.cost(w).energy;
+    let mut cycles: u64 = 0;
+    let mut energy: f64 = 0.0;
+    for t in 1..=cfg.seq_len {
+        // QK^T + sig×V MAC passes per query head
+        let macs = (cfg.q_heads * t * cfg.d_head) as u64;
+        cycles += 2 * per_lane(macs, &[Mul, Add]);
+        energy += 2.0 * macs as f64 * mac_cost;
+        // one softmax row of length t per query head
+        let sm = simulate(design, SimConfig { n: t, rows: cfg.q_heads, lanes: cfg.lanes });
+        cycles += sm.cycles;
+        energy += sm.energy;
+        // paged K/V gather, stored once per group
+        let gather = (2 * cfg.kv_heads * t * cfg.d_head) as u64;
+        cycles += per_lane(gather, &[LutRead]);
+        cycles += (t as u64).div_ceil(cfg.page_size as u64) * PAGE_TOUCH_CYCLES;
+        energy += gather as f64 * LutRead.cost(w).energy;
+    }
+    SimReport {
+        design: design.name(),
+        cycles,
+        energy,
+        area: design.area_per_lane() * cfg.lanes as f64,
+        lut_bytes: design.lut_bytes,
+        elems: cfg.score_elems(),
+        has_divider: design.has_divider(),
+        has_multiplier: design.has_multiplier(),
+    }
+}
+
 /// Row-parallel aggregate: `units` independent softmax units each process
 /// a contiguous block of rows — the hwsim mirror of
 /// [`crate::softmax::ParSoftmax`]'s sharding. Latency is the slowest
@@ -336,6 +414,63 @@ mod tests {
         let rexp = simulate_attention(&Design::new(DesignKind::Rexp, Precision::Uint8), cfg, true);
         assert!(rexp.cycles < div.cycles);
         assert!(rexp.energy < div.energy);
+    }
+
+    #[test]
+    fn decode_grouped_heads_cut_gather_traffic() {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 8,
+            kv_heads: 8,
+            seq_len: 64,
+            d_head: 32,
+            page_size: 16,
+            lanes: 4,
+        };
+        let mha = simulate_decode(&d, cfg);
+        let gqa = simulate_decode(&d, DecodeSimConfig { kv_heads: 2, ..cfg });
+        let mqa = simulate_decode(&d, DecodeSimConfig { kv_heads: 1, ..cfg });
+        assert!(gqa.cycles < mha.cycles, "gqa {} mha {}", gqa.cycles, mha.cycles);
+        assert!(gqa.energy < mha.energy);
+        assert!(mqa.cycles < gqa.cycles, "fewer stored heads, less gather");
+        // same score work either way
+        assert_eq!(mha.elems, gqa.elems);
+        assert_eq!(mha.elems, (8 * 64 * 65 / 2) as u64);
+    }
+
+    #[test]
+    fn decode_cycles_grow_superlinearly_with_length() {
+        // every step re-reads the whole prefix, so doubling the generated
+        // length must more than double total cycles
+        let d = Design::new(DesignKind::Lut2d, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 4,
+            kv_heads: 4,
+            seq_len: 32,
+            d_head: 32,
+            page_size: 16,
+            lanes: 4,
+        };
+        let short = simulate_decode(&d, cfg);
+        let long = simulate_decode(&d, DecodeSimConfig { seq_len: 64, ..cfg });
+        assert!(long.cycles > 2 * short.cycles);
+    }
+
+    #[test]
+    fn decode_smaller_pages_pay_more_page_touches() {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 4,
+            kv_heads: 2,
+            seq_len: 64,
+            d_head: 32,
+            page_size: 64,
+            lanes: 4,
+        };
+        let big = simulate_decode(&d, cfg);
+        let small = simulate_decode(&d, DecodeSimConfig { page_size: 4, ..cfg });
+        assert!(small.cycles > big.cycles);
+        assert_eq!(small.energy, big.energy, "page size is a latency knob, not work");
     }
 
     #[test]

@@ -1,0 +1,496 @@
+//! Paged integer-native KV cache — the storage substrate of streaming
+//! decode.
+//!
+//! Autoregressive decode re-reads the whole key/value prefix every
+//! generated token, so the cache layout *is* the decode memory system.
+//! This module keeps the A³/SOLE premise end to end: K and V live as
+//! quantized `i8` in fixed-size pages carved out of one shared arena, and
+//! the fused decode kernel ([`crate::attention::DecodeAttention`]) reads
+//! them without ever materializing f32 tensors.
+//!
+//! # Page layout
+//!
+//! A [`KvPool`] is built from a [`KvConfig`] `{pages, page_size, kv_heads,
+//! d_head}`. One page holds `page_size` token slots for **all** `kv_heads`
+//! stored heads of one sequence, group-major:
+//!
+//! ```text
+//! page p (K arena, same shape in the V arena):
+//!   [g = 0][t = 0..page_size][d = 0..d_head]
+//!   [g = 1][t = 0..page_size][d = 0..d_head]
+//!   ...
+//! ```
+//!
+//! so each group's rows are contiguous within a page — the per-step
+//! `q·K^T` sweep for query heads of group `g` streams one dense
+//! `page_size × d_head` block per page. Alongside the `i8` data every
+//! page stores the per-token **K byte sums** (`Σ_d k[g][t][d]`, an `i32`
+//! per `(g, t)` slot), precomputed once at append time: the fused kernel
+//! hoists the affine zero points out of the dot product
+//! (`(q−z_q)·(k−z_k) = q·k − z_k·Σq − z_q·Σk + d·z_q·z_k`), and decode
+//! re-reads `Σk` for the whole prefix every step, so recomputing it would
+//! cost `d_head` adds per key per step.
+//!
+//! Pages are recycled through a free-list: allocation is a `Vec::pop`,
+//! release is an extend — no per-step heap allocation, and thousands of
+//! concurrent sequences (one [`KvSeq`] page table each) share one arena.
+//! Exhaustion is **typed backpressure** ([`KvError::Exhausted`]), never a
+//! panic: serving layers surface it as a retryable error while other
+//! sessions keep streaming.
+//!
+//! # Per-page quantization contract
+//!
+//! Every page records the [`Affine`] pair (K and V) of the rows stored in
+//! it, copied from the owning [`KvSeq`] at page-allocation time. The
+//! current contract is **sequence-uniform**: a sequence's affines are
+//! fixed at [`KvSeq::new`] and every page of that sequence carries the
+//! same pair (debug-asserted on append), which is what keeps a T-step
+//! decode bit-identical to a length-T prefill through one per-tensor
+//! affine. The per-page slot exists so a later PR can requantize cold
+//! pages (or admit per-block scales) without changing the arena layout —
+//! readers must already consult [`KvPool::page_affines`] per page.
+//!
+//! # Grouped-query heads
+//!
+//! [`HeadGroups`] maps `q_heads` query heads onto `kv_heads ≤ q_heads`
+//! stored K/V heads (`G = kv_heads`: `G == q_heads` is vanilla MHA,
+//! `G == 1` is multi-query attention). K/V rows are stored **once per
+//! group**; all `q_heads / kv_heads` query heads of a group read the same
+//! page block, which divides decode's dominant memory traffic by the
+//! group size.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::quant::Affine;
+
+/// Geometry of a paged KV arena, fixed at [`KvPool::new`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvConfig {
+    /// total pages in the arena
+    pub pages: usize,
+    /// token slots per page
+    pub page_size: usize,
+    /// stored K/V heads per token (the `G` of grouped-query attention)
+    pub kv_heads: usize,
+    /// head depth
+    pub d_head: usize,
+}
+
+impl KvConfig {
+    /// `i8` elements of one page's K (or V) block (`[g][t][d]` row-major).
+    pub fn page_elems(&self) -> usize {
+        self.kv_heads * self.page_size * self.d_head
+    }
+
+    /// `i32` K-byte-sum slots per page (`[g][t]`).
+    fn sum_elems(&self) -> usize {
+        self.kv_heads * self.page_size
+    }
+
+    /// tokens storable per sequence-free arena
+    pub fn capacity_tokens(&self) -> usize {
+        self.pages * self.page_size
+    }
+}
+
+/// Typed KV allocation failure. Exhaustion is expected under load — it is
+/// the serving layer's backpressure signal, not a bug — so it must reach
+/// callers as an `Err`, never a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvError {
+    /// the arena has no free page; retry after sessions close
+    Exhausted {
+        /// total pages in the arena (all currently in use)
+        pages: usize,
+    },
+}
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvError::Exhausted { pages } => {
+                write!(f, "kv pool exhausted (all {pages} pages in use)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Query-head → stored-head grouping: `q_heads` query heads share
+/// `kv_heads` K/V heads in contiguous blocks of `q_heads / kv_heads`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeadGroups {
+    q_heads: usize,
+    kv_heads: usize,
+}
+
+impl HeadGroups {
+    /// `kv_heads` must divide `q_heads` (both ≥ 1).
+    pub fn new(q_heads: usize, kv_heads: usize) -> Result<Self> {
+        if q_heads == 0 || kv_heads == 0 {
+            bail!("head counts must be >= 1, got H={q_heads} G={kv_heads}");
+        }
+        if kv_heads > q_heads || q_heads % kv_heads != 0 {
+            bail!("kv heads ({kv_heads}) must evenly divide query heads ({q_heads})");
+        }
+        Ok(Self { q_heads, kv_heads })
+    }
+
+    /// Vanilla multi-head attention: every query head stores its own K/V.
+    pub fn mha(heads: usize) -> Self {
+        Self::new(heads, heads).expect("heads >= 1")
+    }
+
+    pub fn q_heads(&self) -> usize {
+        self.q_heads
+    }
+
+    pub fn kv_heads(&self) -> usize {
+        self.kv_heads
+    }
+
+    /// query heads per stored head
+    pub fn group_size(&self) -> usize {
+        self.q_heads / self.kv_heads
+    }
+
+    /// stored head serving query head `h`
+    #[inline]
+    pub fn group_of(&self, h: usize) -> usize {
+        debug_assert!(h < self.q_heads);
+        h / self.group_size()
+    }
+}
+
+/// Per-sequence cache state: the page table plus the sequence's fixed
+/// quantization params (see the module docs, "Per-page quantization
+/// contract"). Cheap to create per session; pages are allocated lazily on
+/// append and returned via [`KvPool::close`]. Deliberately NOT `Clone`:
+/// a sequence is the unique owner of its page-table entries, and a copy
+/// would let [`KvPool::close`] free the same pages twice (aliasing live
+/// sequences onto recycled pages).
+#[derive(Debug)]
+pub struct KvSeq {
+    groups: HeadGroups,
+    k_affine: Affine,
+    v_affine: Affine,
+    pages: Vec<u32>,
+    len: usize,
+}
+
+impl KvSeq {
+    pub fn new(groups: HeadGroups, k_affine: Affine, v_affine: Affine) -> Self {
+        Self { groups, k_affine, v_affine, pages: Vec::new(), len: 0 }
+    }
+
+    /// tokens stored so far (the decode prefix length)
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn groups(&self) -> &HeadGroups {
+        &self.groups
+    }
+
+    pub fn k_affine(&self) -> Affine {
+        self.k_affine
+    }
+
+    pub fn v_affine(&self) -> Affine {
+        self.v_affine
+    }
+
+    /// page table, in token order
+    pub fn pages(&self) -> &[u32] {
+        &self.pages
+    }
+
+    /// tokens resident in page-table entry `pi` (full pages except the
+    /// tail)
+    #[inline]
+    pub fn tokens_in_page(&self, page_size: usize, pi: usize) -> usize {
+        (self.len - pi * page_size).min(page_size)
+    }
+}
+
+/// The shared paged arena: quantized K/V pages + per-token K byte sums +
+/// a free-list allocator. One pool serves every concurrent sequence of a
+/// decode route; all per-sequence state lives in [`KvSeq`].
+pub struct KvPool {
+    cfg: KvConfig,
+    k: Vec<i8>,
+    v: Vec<i8>,
+    ksum: Vec<i32>,
+    k_aff: Vec<Affine>,
+    v_aff: Vec<Affine>,
+    /// free page ids, popped from the back (so fresh pools allocate in
+    /// ascending id order — handy in tests, irrelevant to correctness)
+    free: Vec<u32>,
+}
+
+impl KvPool {
+    pub fn new(cfg: KvConfig) -> Self {
+        assert!(
+            cfg.pages > 0 && cfg.page_size > 0 && cfg.kv_heads > 0 && cfg.d_head > 0,
+            "kv config dimensions must be >= 1, got {cfg:?}"
+        );
+        assert!(cfg.pages <= u32::MAX as usize, "page ids are u32");
+        let zero = Affine { scale: 1.0, zero_point: 0 };
+        Self {
+            k: vec![0; cfg.pages * cfg.page_elems()],
+            v: vec![0; cfg.pages * cfg.page_elems()],
+            ksum: vec![0; cfg.pages * cfg.sum_elems()],
+            k_aff: vec![zero; cfg.pages],
+            v_aff: vec![zero; cfg.pages],
+            free: (0..cfg.pages as u32).rev().collect(),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &KvConfig {
+        &self.cfg
+    }
+
+    /// pages currently on the free list
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Append one token's K/V rows (`kv_heads * d_head` each, `[g][d]`
+    /// row-major) to `seq`, allocating a page when the tail page is full.
+    /// On [`KvError::Exhausted`] the sequence is left untouched, so the
+    /// caller can retry the same step after capacity frees up.
+    pub fn append(&mut self, seq: &mut KvSeq, k_row: &[i8], v_row: &[i8]) -> Result<(), KvError> {
+        let (g, d, psize) = (self.cfg.kv_heads, self.cfg.d_head, self.cfg.page_size);
+        assert_eq!(
+            seq.groups.kv_heads(),
+            g,
+            "sequence stores {} kv heads but the pool is laid out for {g}",
+            seq.groups.kv_heads()
+        );
+        assert_eq!(k_row.len(), g * d, "k row must be kv_heads * d_head");
+        assert_eq!(v_row.len(), g * d, "v row must be kv_heads * d_head");
+        let slot = seq.len % psize;
+        if slot == 0 {
+            let Some(p) = self.free.pop() else {
+                return Err(KvError::Exhausted { pages: self.cfg.pages });
+            };
+            self.k_aff[p as usize] = seq.k_affine;
+            self.v_aff[p as usize] = seq.v_affine;
+            seq.pages.push(p);
+        }
+        let p = *seq.pages.last().expect("tail page exists") as usize;
+        // per-page quantization contract: sequence-uniform affines
+        debug_assert_eq!(self.k_aff[p], seq.k_affine);
+        debug_assert_eq!(self.v_aff[p], seq.v_affine);
+        let base = p * self.cfg.page_elems();
+        let sbase = p * self.cfg.sum_elems();
+        for gi in 0..g {
+            let row = &k_row[gi * d..(gi + 1) * d];
+            let off = base + (gi * psize + slot) * d;
+            self.k[off..off + d].copy_from_slice(row);
+            self.v[off..off + d].copy_from_slice(&v_row[gi * d..(gi + 1) * d]);
+            self.ksum[sbase + gi * psize + slot] = row.iter().map(|&x| x as i32).sum();
+        }
+        seq.len += 1;
+        Ok(())
+    }
+
+    /// Return a sequence's pages to the free list; the `KvSeq` is
+    /// consumed (it is the unique owner of those page-table entries).
+    /// Returns the number of pages freed.
+    pub fn close(&mut self, seq: KvSeq) -> usize {
+        let n = seq.pages.len();
+        debug_assert!(
+            seq.pages.iter().all(|p| (*p as usize) < self.cfg.pages),
+            "sequence closed against a pool that does not own its pages"
+        );
+        debug_assert!(
+            seq.pages.iter().all(|p| !self.free.contains(p)),
+            "page freed twice — a sequence's pages must be uniquely owned"
+        );
+        self.free.extend(seq.pages);
+        n
+    }
+
+    /// Group `gi`'s K block of page `page`: `page_size * d_head` i8,
+    /// token-major.
+    #[inline]
+    pub fn page_k(&self, page: u32, gi: usize) -> &[i8] {
+        let off = page as usize * self.cfg.page_elems() + gi * self.cfg.page_size * self.cfg.d_head;
+        &self.k[off..off + self.cfg.page_size * self.cfg.d_head]
+    }
+
+    /// Group `gi`'s V block of page `page` (same shape as [`Self::page_k`]).
+    #[inline]
+    pub fn page_v(&self, page: u32, gi: usize) -> &[i8] {
+        let off = page as usize * self.cfg.page_elems() + gi * self.cfg.page_size * self.cfg.d_head;
+        &self.v[off..off + self.cfg.page_size * self.cfg.d_head]
+    }
+
+    /// Group `gi`'s per-token K byte sums of page `page` (`page_size` i32).
+    #[inline]
+    pub fn page_ksum(&self, page: u32, gi: usize) -> &[i32] {
+        let off = page as usize * self.cfg.sum_elems() + gi * self.cfg.page_size;
+        &self.ksum[off..off + self.cfg.page_size]
+    }
+
+    /// The (K, V) affine pair recorded for `page`.
+    #[inline]
+    pub fn page_affines(&self, page: u32) -> (Affine, Affine) {
+        (self.k_aff[page as usize], self.v_aff[page as usize])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    fn pool4() -> KvPool {
+        KvPool::new(KvConfig { pages: 4, page_size: 4, kv_heads: 2, d_head: 8 })
+    }
+
+    fn seq_for(pool: &KvPool) -> KvSeq {
+        KvSeq::new(
+            HeadGroups::new(4, pool.config().kv_heads).unwrap(),
+            Affine { scale: 0.5, zero_point: 3 },
+            Affine { scale: 0.25, zero_point: -2 },
+        )
+    }
+
+    fn rand_row(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| rng.int(-128, 127) as i8).collect()
+    }
+
+    #[test]
+    fn head_groups_validate_and_map() {
+        let g = HeadGroups::new(8, 2).unwrap();
+        assert_eq!(g.group_size(), 4);
+        assert_eq!(g.group_of(0), 0);
+        assert_eq!(g.group_of(3), 0);
+        assert_eq!(g.group_of(4), 1);
+        assert_eq!(g.group_of(7), 1);
+        let mha = HeadGroups::mha(3);
+        assert_eq!((mha.q_heads(), mha.kv_heads(), mha.group_size()), (3, 3, 1));
+        assert_eq!(mha.group_of(2), 2);
+        assert!(HeadGroups::new(8, 3).is_err(), "3 does not divide 8");
+        assert!(HeadGroups::new(2, 4).is_err(), "more kv heads than query heads");
+        assert!(HeadGroups::new(0, 1).is_err());
+        assert!(HeadGroups::new(1, 0).is_err());
+    }
+
+    #[test]
+    fn append_roundtrips_rows_sums_and_affines() {
+        let mut rng = Rng::new(1);
+        let mut pool = pool4();
+        let mut seq = seq_for(&pool);
+        let (g, d, ps) = (2usize, 8usize, 4usize);
+        let mut krows: Vec<Vec<i8>> = Vec::new();
+        let mut vrows: Vec<Vec<i8>> = Vec::new();
+        for _ in 0..10 {
+            // 10 tokens: 3 pages (4 + 4 + 2)
+            let kr = rand_row(&mut rng, g * d);
+            let vr = rand_row(&mut rng, g * d);
+            pool.append(&mut seq, &kr, &vr).unwrap();
+            krows.push(kr);
+            vrows.push(vr);
+        }
+        assert_eq!(seq.len(), 10);
+        assert_eq!(seq.pages().len(), 3);
+        assert_eq!(pool.free_pages(), 1);
+        for (pi, &p) in seq.pages().iter().enumerate() {
+            let in_page = seq.tokens_in_page(ps, pi);
+            assert_eq!(in_page, if pi == 2 { 2 } else { 4 });
+            assert_eq!(pool.page_affines(p), (seq.k_affine(), seq.v_affine()));
+            for gi in 0..g {
+                let kb = pool.page_k(p, gi);
+                let vb = pool.page_v(p, gi);
+                let ks = pool.page_ksum(p, gi);
+                for t in 0..in_page {
+                    let tok = pi * ps + t;
+                    assert_eq!(&kb[t * d..(t + 1) * d], &krows[tok][gi * d..(gi + 1) * d]);
+                    assert_eq!(&vb[t * d..(t + 1) * d], &vrows[tok][gi * d..(gi + 1) * d]);
+                    let want: i32 =
+                        krows[tok][gi * d..(gi + 1) * d].iter().map(|&x| x as i32).sum();
+                    assert_eq!(ks[t], want, "ksum token {tok} group {gi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exhaustion_is_typed_and_leaves_the_sequence_untouched() {
+        let mut rng = Rng::new(2);
+        let mut pool = pool4(); // 4 pages x 4 tokens = 16 tokens capacity
+        let mut a = seq_for(&pool);
+        let row = rand_row(&mut rng, 16);
+        for _ in 0..16 {
+            pool.append(&mut a, &row, &row).unwrap();
+        }
+        assert_eq!(pool.free_pages(), 0);
+        // a 17th token needs a 5th page: typed backpressure
+        let err = pool.append(&mut a, &row, &row).unwrap_err();
+        assert_eq!(err, KvError::Exhausted { pages: 4 });
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        assert_eq!(a.len(), 16, "failed append must not advance the sequence");
+        // a second sequence cannot even start
+        let mut b = seq_for(&pool);
+        assert!(pool.append(&mut b, &row, &row).is_err());
+        assert_eq!(b.len(), 0);
+        assert!(b.pages().is_empty());
+        // closing reclaims, and the blocked appends then succeed
+        assert_eq!(pool.close(a), 4);
+        assert_eq!(pool.free_pages(), 4);
+        pool.append(&mut b, &row, &row).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(pool.close(b), 1);
+        assert_eq!(pool.free_pages(), 4, "free list round-trips to initial");
+    }
+
+    #[test]
+    fn many_sequences_share_the_arena_without_leaks() {
+        let mut rng = Rng::new(3);
+        let mut pool = KvPool::new(KvConfig { pages: 32, page_size: 2, kv_heads: 1, d_head: 4 });
+        for _ in 0..50 {
+            let mut live: Vec<KvSeq> = Vec::new();
+            for _ in 0..rng.usize(1, 6) {
+                let mut s = KvSeq::new(
+                    HeadGroups::new(2, 1).unwrap(),
+                    Affine { scale: 1.0, zero_point: 0 },
+                    Affine { scale: 1.0, zero_point: 0 },
+                );
+                for _ in 0..rng.usize(0, 9) {
+                    let row = rand_row(&mut rng, 4);
+                    if pool.append(&mut s, &row, &row).is_err() {
+                        break; // arena full: fine, keep what landed
+                    }
+                }
+                live.push(s);
+            }
+            let allocated: usize = live.iter().map(|s| s.pages().len()).sum();
+            assert_eq!(pool.free_pages(), 32 - allocated);
+            for s in live {
+                pool.close(s);
+            }
+            assert_eq!(pool.free_pages(), 32, "all pages reclaimed each round");
+        }
+    }
+
+    #[test]
+    fn capacity_accounting() {
+        let cfg = KvConfig { pages: 8, page_size: 16, kv_heads: 2, d_head: 32 };
+        assert_eq!(cfg.page_elems(), 2 * 16 * 32);
+        assert_eq!(cfg.capacity_tokens(), 128);
+        let pool = KvPool::new(cfg);
+        assert_eq!(pool.free_pages(), 8);
+        assert_eq!(pool.config().d_head, 32);
+    }
+}

@@ -81,6 +81,7 @@ fn serve(args: &Args) -> Result<()> {
         .opt("variant")
         .unwrap_or(match task {
             "attention" => "attn:rexp:uint8",
+            "decode" => "decode:rexp:uint8:g2",
             _ => "nmt14__ptqd__rexp__uint8",
         })
         .to_string();
@@ -98,12 +99,18 @@ fn serve(args: &Args) -> Result<()> {
         // (the variant passes through verbatim; bad specs fail loudly at
         // AttentionPipeline::load)
         "attention" => routes.attention = Some(variant.clone()),
+        // artifact-free streaming decode, e.g. --variant decode:rexp:uint8:g2
+        "decode" => routes.decode = Some(variant.clone()),
         other => return Err(anyhow!("unknown task {other:?}")),
     }
     println!("starting coordinator: task={task} variant={variant}");
     let coordinator = Coordinator::start(cfg, routes)?;
 
     let mut rng = Rng::new(7);
+    if task == "decode" {
+        serve_decode(&coordinator, &mut rng, &variant, requests, rate)?;
+        return coordinator.shutdown();
+    }
     let gaps = workload::poisson_arrivals_us(&mut rng, requests, rate);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
@@ -162,6 +169,86 @@ fn serve(args: &Args) -> Result<()> {
     }
     println!("  pjrt executions: {}", stats.executions);
     coordinator.shutdown()
+}
+
+/// Session-ful decode load test: open a handful of sessions, stream
+/// `steps` Poisson-paced single-token steps round-robin across them, then
+/// close every session (pages must come back). Used by the CI smoke
+/// (`lutmax serve --task decode`), so it FAILS if any step errors.
+fn serve_decode(
+    c: &Coordinator,
+    rng: &mut Rng,
+    variant: &str,
+    steps: usize,
+    rate: f64,
+) -> Result<()> {
+    let (h, d) = (4usize, 32usize);
+    // the route's gG fixes the stored-head count the server accepts;
+    // generate matching traffic (absent: MHA)
+    let g = lutmax::attention::parse_decode_route(variant)
+        .and_then(|(_, _, _, g)| g)
+        .unwrap_or(h);
+    let sessions = (steps / 8).clamp(1, 8);
+    let t0 = std::time::Instant::now();
+    let mut ids = Vec::with_capacity(sessions);
+    for _ in 0..sessions {
+        match c.call(Payload::DecodeOpen)? {
+            Reply::Session(id) => ids.push(id),
+            Reply::Error(e) => return Err(anyhow!("open failed: {e}")),
+            other => return Err(anyhow!("unexpected open reply {other:?}")),
+        }
+    }
+    let gaps = workload::poisson_arrivals_us(rng, steps, rate);
+    let mut pending = Vec::with_capacity(steps);
+    for (i, gap) in gaps.into_iter().enumerate() {
+        std::thread::sleep(std::time::Duration::from_micros(gap));
+        let (q, k, v) = workload::decode_qkv_step(rng, h, g, d, 1.0);
+        match c.submit(Payload::DecodeStep { session: ids[i % ids.len()], q, k, v }) {
+            Ok(rx) => pending.push(rx),
+            Err(e) => println!("rejected: {e}"),
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        match rx.recv() {
+            Ok(Reply::Token(_)) => ok += 1,
+            Ok(Reply::Error(e)) => println!("error: {e}"),
+            Ok(other) => println!("unexpected step reply {other:?}"),
+            Err(_) => println!("dropped"),
+        }
+    }
+    let mut pages = 0usize;
+    for id in ids {
+        match c.call(Payload::DecodeClose(id))? {
+            Reply::Closed { pages: p } => pages += p,
+            other => return Err(anyhow!("close failed: {other:?}")),
+        }
+    }
+    let dt = t0.elapsed();
+    println!(
+        "decode: {ok}/{steps} steps over {sessions} sessions in {:.2}s ({:.1} steps/s); \
+         {pages} KV pages freed on close",
+        dt.as_secs_f64(),
+        ok as f64 / dt.as_secs_f64()
+    );
+    let stats = c.stats()?;
+    if let Some(m) = stats.per_task.get("decode") {
+        println!(
+            "  decode     n={:<5} mean batch {:.2}  latency p50 {} us  p99 {} us",
+            m.requests,
+            m.mean_batch_size(),
+            m.latency.percentile_us(0.50),
+            m.latency.percentile_us(0.99),
+        );
+    }
+    println!("  pjrt executions: {}", stats.executions);
+    if ok != steps {
+        return Err(anyhow!("{} of {steps} decode steps failed", steps - ok));
+    }
+    if pages == 0 {
+        return Err(anyhow!("sessions streamed {steps} steps but freed no KV pages"));
+    }
+    Ok(())
 }
 
 fn softmax(args: &Args) -> Result<()> {

@@ -74,7 +74,7 @@ mod rexp;
 
 pub use exact::SoftmaxExact;
 pub use lut2d::SoftmaxLut2d;
-pub use par::ParSoftmax;
+pub use par::{ParSoftmax, DEFAULT_MIN_ROWS_PER_SHARD};
 pub use priorart::{SoftmaxAggressive, SoftmaxEq2, SoftmaxEq2Plus};
 pub use rexp::SoftmaxRexp;
 

@@ -30,10 +30,12 @@ use super::{debug_check_shape, IntRow, Scratch, SoftmaxEngine};
 /// Don't bother fanning out below this many elements per shard.
 const MIN_ELEMS_PER_SHARD: usize = 2048;
 
-/// ...nor with fewer than this many rows per shard: waking the pool to
-/// hand a worker one or two rows costs more than computing them (the
-/// tiny-batch latency regression guarded by `integration_par.rs`).
-const MIN_ROWS_PER_SHARD: usize = 4;
+/// Default minimum rows per shard: waking the pool to hand a worker one
+/// or two rows costs more than computing them (the tiny-batch latency
+/// regression guarded by `integration_par.rs`). Tunable per pool via
+/// [`ParSoftmax::with_policy`] — the decode serving path runs few-row
+/// single-step batches and wants a lower inline threshold.
+pub const DEFAULT_MIN_ROWS_PER_SHARD: usize = 4;
 
 /// What a worker runs: a sharded softmax row-block (f32 or i8 ingestion)
 /// or one index of a [`ParSoftmax::scatter`] fan-out.
@@ -179,6 +181,9 @@ fn worker_loop(shared: &Shared) {
 pub struct ParSoftmax {
     inner: Arc<dyn SoftmaxEngine>,
     pool: WorkerPool,
+    /// inline-vs-pool threshold: a shard must carry at least this many
+    /// whole rows to be worth a pool wake
+    min_rows_per_shard: usize,
     /// batches dispatched to the pool (vs. run inline) — test/bench probe
     parallel_batches: AtomicUsize,
 }
@@ -192,17 +197,36 @@ impl ParSoftmax {
         Self::with_workers(inner, workers)
     }
 
-    /// Wrap `inner` with an explicit worker count (min 1).
+    /// Wrap `inner` with an explicit worker count (min 1) and the default
+    /// inline-vs-pool row threshold.
     pub fn with_workers(inner: Arc<dyn SoftmaxEngine>, workers: usize) -> Self {
+        Self::with_policy(inner, workers, DEFAULT_MIN_ROWS_PER_SHARD)
+    }
+
+    /// Wrap `inner` with an explicit worker count and minimum rows per
+    /// shard (both clamped to >= 1). Lower thresholds let few-row batches
+    /// (e.g. single decode steps) reach the pool; higher ones keep more
+    /// traffic inline.
+    pub fn with_policy(
+        inner: Arc<dyn SoftmaxEngine>,
+        workers: usize,
+        min_rows_per_shard: usize,
+    ) -> Self {
         Self {
             inner,
             pool: WorkerPool::new(workers.max(1)),
+            min_rows_per_shard: min_rows_per_shard.max(1),
             parallel_batches: AtomicUsize::new(0),
         }
     }
 
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// The pool's inline-vs-pool row threshold.
+    pub fn min_rows_per_shard(&self) -> usize {
+        self.min_rows_per_shard
     }
 
     /// The wrapped sequential engine.
@@ -224,7 +248,7 @@ impl ParSoftmax {
             return 0;
         }
         let by_work = (rows * n) / MIN_ELEMS_PER_SHARD;
-        let by_rows = rows / MIN_ROWS_PER_SHARD;
+        let by_rows = rows / self.min_rows_per_shard;
         let shards = workers.min(by_work).min(by_rows);
         if shards < 2 {
             return 0;
@@ -431,6 +455,29 @@ mod tests {
         let seq = engine(Mode::Rexp, Precision::Uint8, None);
         assert_eq!(p.apply(&x, n), seq.apply(&x, n));
         assert_eq!(p.parallel_batches(), 0, "3 rows must run inline");
+    }
+
+    #[test]
+    fn policy_threshold_tunes_inline_vs_pool() {
+        // default policy keeps a 3-row batch inline however wide; a
+        // min_rows_per_shard of 1 lets the same batch fan out, == exact
+        let mut rng = Rng::new(13);
+        let n = 4096;
+        let x = rng.normal_vec(3 * n, 2.0);
+        let seq = engine(Mode::Rexp, Precision::Uint8, None);
+        let dflt = par(Mode::Rexp, Precision::Uint8, 4);
+        assert_eq!(dflt.min_rows_per_shard(), DEFAULT_MIN_ROWS_PER_SHARD);
+        assert_eq!(dflt.apply(&x, n), seq.apply(&x, n));
+        assert_eq!(dflt.parallel_batches(), 0, "default policy stays inline");
+        let eager =
+            ParSoftmax::with_policy(Arc::from(engine(Mode::Rexp, Precision::Uint8, None)), 4, 1);
+        assert_eq!(eager.min_rows_per_shard(), 1);
+        assert_eq!(eager.apply(&x, n), seq.apply(&x, n));
+        assert_eq!(eager.parallel_batches(), 1, "threshold 1 must fan 3 rows out");
+        // 0 clamps to 1
+        let clamped =
+            ParSoftmax::with_policy(Arc::from(engine(Mode::Rexp, Precision::Uint8, None)), 2, 0);
+        assert_eq!(clamped.min_rows_per_shard(), 1);
     }
 
     #[test]

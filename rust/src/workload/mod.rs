@@ -91,6 +91,37 @@ pub fn attn_scores(rng: &mut Rng, shape: &AttnShape) -> Tensor {
     Tensor::f32(vec![rows, shape.len_k], rng.normal_vec(rows * shape.len_k, 1.0))
 }
 
+/// One streaming-decode step's activations: f32 q `(q_heads, d_head)` and
+/// new-token k/v rows `(kv_heads, d_head)`, entries ~ N(0, scale) —
+/// normalized decode inputs, the paper's operating point. Shared by the
+/// `decode/*` benches, the `"decode:<mode>:<prec>[:gG]"` route's load
+/// tests and the hwsim decode experiments.
+pub fn decode_qkv_step(
+    rng: &mut Rng,
+    q_heads: usize,
+    kv_heads: usize,
+    d_head: usize,
+    scale: f32,
+) -> (Tensor, Tensor, Tensor) {
+    (
+        Tensor::f32(vec![q_heads, d_head], rng.normal_vec(q_heads * d_head, scale)),
+        Tensor::f32(vec![kv_heads, d_head], rng.normal_vec(kv_heads * d_head, scale)),
+        Tensor::f32(vec![kv_heads, d_head], rng.normal_vec(kv_heads * d_head, scale)),
+    )
+}
+
+/// A multi-sequence decode trace: per-session generation lengths in
+/// `[min_steps, max_steps]` — the shape of a serving run where sessions
+/// open, stream that many steps, and close.
+pub fn decode_session_lens(
+    rng: &mut Rng,
+    sessions: usize,
+    min_steps: usize,
+    max_steps: usize,
+) -> Vec<usize> {
+    (0..sessions).map(|_| rng.usize(min_steps, max_steps)).collect()
+}
+
 /// Random per-batch valid key prefix lengths in `[1, len_k]` (PAD masks).
 pub fn attn_pad_lens(rng: &mut Rng, batch: usize, len_k: usize) -> Vec<usize> {
     (0..batch).map(|_| rng.usize(1, len_k)).collect()
@@ -167,6 +198,19 @@ mod tests {
                 AttnMask::Dense | AttnMask::Causal => {}
             }
         }
+    }
+
+    #[test]
+    fn decode_generators_are_well_shaped() {
+        let mut rng = Rng::new(10);
+        let (q, k, v) = decode_qkv_step(&mut rng, 8, 2, 64, 1.0);
+        assert_eq!(q.dims, vec![8, 64]);
+        assert_eq!(k.dims, vec![2, 64]);
+        assert_eq!(v.dims, vec![2, 64]);
+        assert!(q.as_f32().unwrap().iter().all(|x| x.is_finite()));
+        let lens = decode_session_lens(&mut rng, 40, 3, 17);
+        assert_eq!(lens.len(), 40);
+        assert!(lens.iter().all(|&l| (3..=17).contains(&l)));
     }
 
     #[test]

@@ -1,0 +1,367 @@
+//! Streaming decode correctness anchors:
+//!
+//! * **decode == prefill exactness**: T decode steps through
+//!   `DecodeAttention` over the paged KV cache are `==`-exact
+//!   (bit-identical f32 outputs) with ONE length-T causal
+//!   `FusedAttention` prefill, across page sizes {8, 16, 64} and head
+//!   groupings G ∈ {1, H/2, H} — decode fills its score rows from page
+//!   blocks with the same integer expressions the prefill sweep uses, so
+//!   nothing may drift.
+//! * **typed exhaustion backpressure**: `KvPool` refusal is an `Err`,
+//!   sessions hammered past capacity reclaim every page on close (the
+//!   free list round-trips to its initial count).
+//! * **the `"decode:..."` serving route**: session lifecycle (open →
+//!   step × N → close) through the coordinator, multi-session streaming,
+//!   bit-reproducible replies, per-request errors, pages freed on close.
+
+use std::time::Duration;
+
+use lutmax::attention::{
+    AttnMask, AttnScratch, AttnShape, DecodeAttention, FusedAttention, QuantTensor, DECODE_AFFINE,
+};
+use lutmax::config::ServerConfig;
+use lutmax::coordinator::{Coordinator, Payload, Reply, RouteTable};
+use lutmax::kv::{HeadGroups, KvConfig, KvError, KvPool, KvSeq};
+use lutmax::lut::Precision;
+use lutmax::quant;
+use lutmax::runtime::Tensor;
+use lutmax::softmax::{engine_parallel, Mode};
+use lutmax::testkit::Rng;
+use lutmax::workload;
+
+/// Gather the step-t rows out of a `(heads, T, d)` row-major block:
+/// `[h][d]` for the given token.
+fn step_rows(data: &[i8], heads: usize, t_total: usize, d: usize, t: usize) -> Vec<i8> {
+    let mut out = vec![0i8; heads * d];
+    for h in 0..heads {
+        out[h * d..(h + 1) * d].copy_from_slice(&data[h * t_total * d + t * d..][..d]);
+    }
+    out
+}
+
+/// Expand a `(G, T, d)` grouped K/V block to the `(H, T, d)` layout the
+/// prefill kernel expects (each stored head copied to its group's query
+/// heads) — an exact copy, so prefill and decode see identical bytes.
+fn expand_groups(data: &[i8], groups: &HeadGroups, t_total: usize, d: usize) -> Vec<i8> {
+    let h = groups.q_heads();
+    let mut out = vec![0i8; h * t_total * d];
+    for hh in 0..h {
+        let g = groups.group_of(hh);
+        out[hh * t_total * d..(hh + 1) * t_total * d]
+            .copy_from_slice(&data[g * t_total * d..(g + 1) * t_total * d]);
+    }
+    out
+}
+
+#[test]
+fn decode_steps_bit_identical_to_causal_prefill() {
+    let (h, t_total, d) = (4usize, 29usize, 16usize); // 29: no page size divides it
+    let mut rng = Rng::new(101);
+    for &page_size in &[8usize, 16, 64] {
+        for &g in &[1usize, 2, 4] {
+            // G ∈ {1, H/2, H}
+            for mode in [Mode::Rexp, Mode::Lut2d] {
+                let groups = HeadGroups::new(h, g).unwrap();
+                // per-tensor quantization, fitted once — both paths see the
+                // same bytes and the same affines
+                let (qd, qa) = quant::quantize(&rng.normal_vec(h * t_total * d, 1.0));
+                let (kd, ka) = quant::quantize(&rng.normal_vec(g * t_total * d, 1.0));
+                let (vd, va) = quant::quantize(&rng.normal_vec(g * t_total * d, 1.0));
+
+                // one causal prefill of the full sequence
+                let shape = AttnShape::square(1, h, t_total, d);
+                let fused = FusedAttention::new(mode, Precision::Uint8, None).unwrap();
+                let mut want = vec![0.0f32; shape.q_len()];
+                let mut scr = AttnScratch::new();
+                fused.run(
+                    &QuantTensor { data: qd.clone(), affine: qa },
+                    &QuantTensor { data: expand_groups(&kd, &groups, t_total, d), affine: ka },
+                    &QuantTensor { data: expand_groups(&vd, &groups, t_total, d), affine: va },
+                    &shape,
+                    &AttnMask::Causal,
+                    &mut want,
+                    &mut scr,
+                );
+
+                // T decode steps over the paged cache
+                let dec = DecodeAttention::new(mode, Precision::Uint8, None).unwrap();
+                let mut kv = KvPool::new(KvConfig {
+                    pages: 8,
+                    page_size,
+                    kv_heads: g,
+                    d_head: d,
+                });
+                let mut seq = KvSeq::new(groups, ka, va);
+                let mut dscr = AttnScratch::new();
+                for t in 0..t_total {
+                    let qrow = step_rows(&qd, h, t_total, d, t);
+                    let krow = step_rows(&kd, g, t_total, d, t);
+                    let vrow = step_rows(&vd, g, t_total, d, t);
+                    let mut got = vec![0.0f32; h * d];
+                    dec.step(&mut kv, &mut seq, &qrow, qa, &krow, &vrow, &mut got, &mut dscr)
+                        .unwrap();
+                    for hh in 0..h {
+                        assert_eq!(
+                            &got[hh * d..(hh + 1) * d],
+                            &want[hh * t_total * d + t * d..][..d],
+                            "{mode:?} page={page_size} G={g} step={t} head={hh}"
+                        );
+                    }
+                }
+                assert_eq!(seq.len(), t_total);
+                assert_eq!(
+                    seq.pages().len(),
+                    t_total.div_ceil(page_size),
+                    "page table sized by ceil(T / page_size)"
+                );
+                kv.close(seq);
+                assert_eq!(kv.free_pages(), 8, "all pages reclaimed");
+            }
+        }
+    }
+}
+
+#[test]
+fn step_par_scatters_heads_and_stays_bit_identical() {
+    // d=64 so per-head work crosses MIN_HEAD_MACS (4096) at prefix 64 —
+    // the tail of the sequence must actually fan out, and stay ==
+    let (h, g, t_total, d) = (4usize, 2usize, 80usize, 64usize);
+    let mut rng = Rng::new(102);
+    let a = DECODE_AFFINE;
+    let groups = HeadGroups::new(h, g).unwrap();
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let pool = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+    let cfg = KvConfig { pages: 8, page_size: 16, kv_heads: g, d_head: d };
+    let (mut kv_a, mut kv_b) = (KvPool::new(cfg), KvPool::new(cfg));
+    let mut seq_a = KvSeq::new(groups, a, a);
+    let mut seq_b = KvSeq::new(groups, a, a);
+    let mut scr = AttnScratch::new();
+    let mut scr_b = AttnScratch::new();
+    for t in 0..t_total {
+        let qrow: Vec<i8> = (0..h * d).map(|_| rng.int(-128, 127) as i8).collect();
+        let krow: Vec<i8> = (0..g * d).map(|_| rng.int(-128, 127) as i8).collect();
+        let vrow: Vec<i8> = (0..g * d).map(|_| rng.int(-128, 127) as i8).collect();
+        let mut seq_out = vec![0.0f32; h * d];
+        let mut par_out = vec![0.0f32; h * d];
+        dec.step(&mut kv_a, &mut seq_a, &qrow, a, &krow, &vrow, &mut seq_out, &mut scr)
+            .unwrap();
+        dec.step_par(&mut kv_b, &mut seq_b, &qrow, a, &krow, &vrow, &pool, &mut par_out, &mut scr_b)
+            .unwrap();
+        assert_eq!(seq_out, par_out, "step {t}");
+    }
+    assert!(
+        pool.parallel_batches() > 0,
+        "long-prefix steps must scatter heads across the pool"
+    );
+    kv_a.close(seq_a);
+    kv_b.close(seq_b);
+}
+
+#[test]
+fn kv_exhaustion_hammer_reclaims_every_page() {
+    // small arena, sessions opened past capacity in waves: exhaustion is
+    // a typed Err (never a panic), blocked sessions proceed after closes,
+    // and the free-list count round-trips to its initial value
+    let cfg = KvConfig { pages: 6, page_size: 2, kv_heads: 1, d_head: 4 };
+    let mut kv = KvPool::new(cfg);
+    let a = DECODE_AFFINE;
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let mut rng = Rng::new(103);
+    let mut scr = AttnScratch::new();
+    let groups = HeadGroups::new(2, 1).unwrap();
+    for _round in 0..30 {
+        let mut live: Vec<KvSeq> = Vec::new();
+        let mut exhausted = 0usize;
+        // open more sessions than the arena can hold (6 pages = 12 tokens)
+        for _ in 0..rng.usize(2, 5) {
+            let mut seq = KvSeq::new(groups, a, a);
+            for _ in 0..rng.usize(1, 6) {
+                let q: Vec<i8> = (0..2 * 4).map(|_| rng.int(-128, 127) as i8).collect();
+                let kr: Vec<i8> = (0..4).map(|_| rng.int(-128, 127) as i8).collect();
+                let vr: Vec<i8> = (0..4).map(|_| rng.int(-128, 127) as i8).collect();
+                let mut out = vec![0.0f32; 2 * 4];
+                match dec.step(&mut kv, &mut seq, &q, a, &kr, &vr, &mut out, &mut scr) {
+                    Ok(()) => {}
+                    Err(KvError::Exhausted { pages }) => {
+                        assert_eq!(pages, 6);
+                        exhausted += 1;
+                        // close the oldest live session and retry once
+                        if let Some(victim) = (!live.is_empty()).then(|| live.remove(0)) {
+                            kv.close(victim);
+                            dec.step(&mut kv, &mut seq, &q, a, &kr, &vr, &mut out, &mut scr)
+                                .expect("retry after reclaim must succeed");
+                        }
+                    }
+                }
+            }
+            live.push(seq);
+        }
+        let held: usize = live.iter().map(|s| s.pages().len()).sum();
+        assert_eq!(kv.free_pages(), 6 - held);
+        for s in live {
+            kv.close(s);
+        }
+        assert_eq!(kv.free_pages(), 6, "free list round-trips (exhausted {exhausted}x)");
+    }
+}
+
+fn empty_artifacts_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("lutmax_decode_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+    dir
+}
+
+#[test]
+fn decode_route_streams_multi_session_traffic() {
+    let cfg = ServerConfig {
+        artifacts: empty_artifacts_dir("route"),
+        max_batch: 8,
+        batch_timeout_us: 500,
+        workers: 2,
+        queue_depth: 256,
+    };
+    let routes = RouteTable {
+        decode: Some("decode:rexp:uint8:g2".into()),
+        ..Default::default()
+    };
+    let c = Coordinator::start(cfg, routes).unwrap();
+    let (h, g, d) = (4usize, 2usize, 16usize);
+    let mut rng = Rng::new(104);
+
+    // three sessions of ragged lengths — a real multi-sequence trace
+    let lens = workload::decode_session_lens(&mut rng, 3, 3, 8);
+    let mut ids = Vec::new();
+    for _ in 0..lens.len() {
+        match c.call(Payload::DecodeOpen).unwrap() {
+            Reply::Session(id) => ids.push(id),
+            other => panic!("unexpected open reply {other:?}"),
+        }
+    }
+    assert_eq!(ids.len(), 3);
+    assert!(ids[0] != ids[1] && ids[1] != ids[2]);
+
+    // pre-generate every step so session 0 can be replayed locally
+    let trace: Vec<Vec<(Tensor, Tensor, Tensor)>> = lens
+        .iter()
+        .map(|&len| {
+            (0..len)
+                .map(|_| workload::decode_qkv_step(&mut rng, h, g, d, 1.0))
+                .collect()
+        })
+        .collect();
+
+    // interleave: each round steps every session that still has tokens
+    // left, async submits
+    let mut replies: Vec<Vec<Tensor>> = vec![Vec::new(); ids.len()];
+    for t in 0..*lens.iter().max().unwrap() {
+        let rxs: Vec<_> = ids
+            .iter()
+            .enumerate()
+            .filter(|&(si, _)| t < lens[si])
+            .map(|(si, &id)| {
+                let (q, k, v) = trace[si][t].clone();
+                (si, c.submit(Payload::DecodeStep { session: id, q, k, v }).unwrap())
+            })
+            .collect();
+        for (si, rx) in rxs {
+            match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+                Reply::Token(out) => {
+                    assert_eq!(out.dims, vec![h, d]);
+                    replies[si].push(out);
+                }
+                other => panic!("session {si} step {t}: unexpected {other:?}"),
+            }
+        }
+    }
+    for (si, r) in replies.iter().enumerate() {
+        assert_eq!(r.len(), lens[si], "one token reply per step of session {si}");
+    }
+
+    // replies are bit-reproducible: replay session 0 locally with the
+    // route's fixed ingress affine
+    let a = DECODE_AFFINE;
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let mut kv = KvPool::new(KvConfig { pages: 4, page_size: 16, kv_heads: g, d_head: d });
+    let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+    let mut scr = AttnScratch::new();
+    for (t, (q, k, v)) in trace[0].iter().enumerate() {
+        let mut qb = vec![0i8; h * d];
+        let mut kb = vec![0i8; g * d];
+        let mut vb = vec![0i8; g * d];
+        quant::quantize_into(q.as_f32().unwrap(), a, &mut qb);
+        quant::quantize_into(k.as_f32().unwrap(), a, &mut kb);
+        quant::quantize_into(v.as_f32().unwrap(), a, &mut vb);
+        let mut want = vec![0.0f32; h * d];
+        dec.step(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr).unwrap();
+        assert_eq!(
+            replies[0][t].as_f32().unwrap(),
+            &want[..],
+            "served step {t} must match the local replay bit-for-bit"
+        );
+    }
+
+    // per-request errors: unknown session, malformed shapes, group
+    // mismatch against the route's g2 — none may take down batchmates
+    let (q, k, v) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+    match c
+        .call(Payload::DecodeStep { session: 999_999, q: q.clone(), k: k.clone(), v: v.clone() })
+        .unwrap()
+    {
+        Reply::Error(e) => assert!(e.contains("session"), "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    match c
+        .call(Payload::DecodeStep {
+            session: ids[0],
+            q: Tensor::f32(vec![h, g, d], rng.normal_vec(h * g * d, 1.0)),
+            k: k.clone(),
+            v: v.clone(),
+        })
+        .unwrap()
+    {
+        Reply::Error(e) => assert!(e.contains("2-D"), "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    match c
+        .call(Payload::DecodeStep {
+            session: ids[0],
+            q: Tensor::f32(vec![h, d], rng.normal_vec(h * d, 1.0)),
+            k: Tensor::f32(vec![h, d], rng.normal_vec(h * d, 1.0)),
+            v: Tensor::f32(vec![h, d], rng.normal_vec(h * d, 1.0)),
+        })
+        .unwrap()
+    {
+        Reply::Error(e) => assert!(e.contains("g2"), "route must pin kv heads: {e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // close every session: pages come back, closed ids stop serving
+    for &id in &ids {
+        match c.call(Payload::DecodeClose(id)).unwrap() {
+            Reply::Closed { pages } => assert_eq!(pages, 1, "<= 8 tokens fit one 16-slot page"),
+            other => panic!("unexpected close reply {other:?}"),
+        }
+    }
+    let (q, k, v) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+    match c.call(Payload::DecodeStep { session: ids[0], q, k, v }).unwrap() {
+        Reply::Error(e) => assert!(e.contains("session"), "{e}"),
+        other => panic!("closed session must not serve, got {other:?}"),
+    }
+    match c.call(Payload::DecodeClose(ids[0])).unwrap() {
+        Reply::Error(e) => assert!(e.contains("session"), "double close: {e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    let stats = c.stats().unwrap();
+    let total_steps: usize = lens.iter().sum();
+    // 3 opens + every streamed step + 3 closes (error-path calls on top)
+    assert!(stats.per_task["decode"].requests >= (3 + total_steps + 3) as u64);
+    assert_eq!(stats.executions, 0, "decode route must not touch PJRT");
+    c.shutdown().unwrap();
+
+    // bad routes fail at startup
+    let bad = RouteTable { decode: Some("decode:exact:uint8".into()), ..Default::default() };
+    let cfg = ServerConfig { artifacts: empty_artifacts_dir("badroute"), ..Default::default() };
+    assert!(Coordinator::start(cfg, bad).is_err(), "non-LUT decode route must fail");
+}
