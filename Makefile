@@ -4,7 +4,7 @@
 # PJRT-backed paths; everything else (software models, hwsim, CPU-fallback
 # serving, benches) runs from the rust tree alone.
 
-.PHONY: all build test bench-smoke bench clean
+.PHONY: all build test test-heavy bench-smoke bench clean
 
 all: build
 
@@ -16,6 +16,13 @@ build:
 test:
 	cargo build --release
 	cargo test -q
+
+# Heavy conformance gate (CI job `test-heavy`): the differential
+# conformance harness at its full sweep budget. Plain `cargo test -q`
+# runs the same invariants on the small sweep; CONFORMANCE_FULL=1 widens
+# the case table (see rust/src/testkit.rs, conformance_sweep).
+test-heavy:
+	CONFORMANCE_FULL=1 cargo test -q --test integration_conformance
 
 bench-smoke: test
 	bash scripts/bench_smoke.sh

@@ -4,8 +4,8 @@
 
 use lutmax::benchkit::{flush_json, Bench};
 use lutmax::hwsim::{
-    all_designs, simulate, simulate_attention, simulate_decode, simulate_row_parallel,
-    AttnSimConfig, DecodeSimConfig, Design, DesignKind, SimConfig,
+    all_designs, simulate, simulate_attention, simulate_decode, simulate_decode_batched,
+    simulate_row_parallel, AttnSimConfig, DecodeSimConfig, Design, DesignKind, SimConfig,
 };
 use lutmax::lut::Precision;
 
@@ -99,6 +99,31 @@ fn main() {
         }
     }
 
+    println!("\n=== batched decode rounds: wave-setup amortization (cycle model) ===");
+    println!("{:<8} {:>14} {:>14} {:>9}", "sessions", "batched c/e", "serial c/e", "saved");
+    {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 8,
+            kv_heads: 2,
+            seq_len: 128,
+            d_head: 64,
+            page_size: 16,
+            lanes: 4,
+        };
+        for s in [1usize, 4, 16] {
+            let b = simulate_decode_batched(&d, cfg, s, true);
+            let ser = simulate_decode_batched(&d, cfg, s, false);
+            println!(
+                "{:<8} {:>14.4} {:>14.4} {:>8}c",
+                s,
+                b.cycles_per_elem(),
+                ser.cycles_per_elem(),
+                ser.cycles - b.cycles
+            );
+        }
+    }
+
     println!("\n=== simulator throughput ===");
     let designs = all_designs(Precision::Uint8);
     for d in &designs {
@@ -123,6 +148,12 @@ fn main() {
         .items(8 * 128 * 129 / 2)
         .run(|| {
             std::hint::black_box(simulate_decode(&d, dcfg));
+        });
+    // batched-rounds row: 16 sessions, one wave per round
+    Bench::new("simulate_decode_batched/rexp")
+        .items(16 * 8 * 128 * 129 / 2)
+        .run(|| {
+            std::hint::black_box(simulate_decode_batched(&d, dcfg, 16, true));
         });
 
     if let Some(path) = flush_json().expect("write BENCH_JSON") {

@@ -18,12 +18,17 @@
 //!                         (h8/g2/L128) under a stable semantic label —
 //!                         compare against decode/h8/g8/L128 across
 //!                         commits (GQA reads 1/4 the K/V bytes)
+//!   decode_batch/s<S>/h<H>/L<L>  S concurrent sessions, every serving
+//!                         round ONE DecodeBatch wave of S×H head rows
+//!   decode_batch_serial/s<S>/h<H>/L<L>  the same fleet as S per-session
+//!                         step_par scatters (PR 3's scheduling) — the
+//!                         decode_batch/* side amortizes the pool wakes
 
 use std::sync::Arc;
 
 use lutmax::attention::{
-    AttnMask, AttnScratch, AttnShape, ComposedAttention, DecodeAttention, FusedAttention,
-    QuantTensor, DECODE_AFFINE,
+    AttnMask, AttnScratch, AttnShape, ComposedAttention, DecodeAttention, DecodeBatch,
+    FusedAttention, QuantTensor, DECODE_AFFINE,
 };
 use lutmax::benchkit::{flush_json, Bench, Suite};
 use lutmax::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
@@ -208,6 +213,91 @@ fn main() {
     decode_case("decode_gqa_vs_mha".into(), 8, 2, 128);
     suite.ratio("decode/h8/g2/L128", "decode/h8/g8/L128");
     suite.ratio("decode_gqa_vs_mha", "decode/h8/g8/L128");
+
+    // batched decode rounds: S concurrent sessions stream L tokens; every
+    // round is ONE DecodeBatch head-scatter wave of S×H rows over the
+    // worker pool (decode_batch/*) vs S per-session step_par scatters
+    // (decode_batch_serial/*) — identical MAC work, identical outputs,
+    // the delta is pool wakes + task accounting. items = total score
+    // elements S·Σ_t H·t, comparable with decode/*.
+    let mut suite = Suite::new("batched decode rounds (uint8 rexp, page 16, d 64)");
+    let mut batch_case = |label: String, s: usize, h: usize, g: usize, l: usize, batched: bool| {
+        let d = 64usize;
+        let a = DECODE_AFFINE;
+        let mut kv = KvPool::new(KvConfig {
+            pages: s * l.div_ceil(16) + 2,
+            page_size: 16,
+            kv_heads: g,
+            d_head: d,
+        });
+        let groups = HeadGroups::new(h, g).unwrap();
+        let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let wave = DecodeBatch::new(&dec);
+        let pool = ParSoftmax::with_policy(
+            Arc::from(engine(Mode::Rexp, Precision::Uint8, None)),
+            4,
+            2,
+        );
+        let mut step_rng = Rng::new(78);
+        let qs: Vec<Vec<i8>> = (0..s * l)
+            .map(|_| (0..h * d).map(|_| step_rng.int(-64, 64) as i8).collect())
+            .collect();
+        let ks: Vec<Vec<i8>> = (0..s * l)
+            .map(|_| (0..g * d).map(|_| step_rng.int(-64, 64) as i8).collect())
+            .collect();
+        let vs: Vec<Vec<i8>> = (0..s * l)
+            .map(|_| (0..g * d).map(|_| step_rng.int(-64, 64) as i8).collect())
+            .collect();
+        let mut outs = vec![vec![0.0f32; h * d]; s];
+        let mut scr = AttnScratch::new();
+        suite.add(Bench::new(label).items(s * h * l * (l + 1) / 2).run(|| {
+            let mut seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+            for t in 0..l {
+                if batched {
+                    let mut tasks: Vec<lutmax::attention::DecodeStepTask<'_>> = seqs
+                        .iter_mut()
+                        .zip(outs.iter_mut())
+                        .enumerate()
+                        .map(|(i, (seq, out))| lutmax::attention::DecodeStepTask {
+                            seq,
+                            q: &qs[i * l + t],
+                            q_affine: a,
+                            k_row: &ks[i * l + t],
+                            v_row: &vs[i * l + t],
+                            out,
+                        })
+                        .collect();
+                    for r in wave.step_wave(&mut kv, &mut tasks, &pool, &mut scr) {
+                        r.expect("bench arena sized for the fleet");
+                    }
+                } else {
+                    for (i, (seq, out)) in seqs.iter_mut().zip(outs.iter_mut()).enumerate() {
+                        dec.step_par(
+                            &mut kv,
+                            seq,
+                            &qs[i * l + t],
+                            a,
+                            &ks[i * l + t],
+                            &vs[i * l + t],
+                            &pool,
+                            out,
+                            &mut scr,
+                        )
+                        .expect("bench arena sized for the fleet");
+                    }
+                }
+            }
+            for seq in seqs {
+                kv.close(seq);
+            }
+        }));
+    };
+    batch_case("decode_batch/s4/h8/L64".into(), 4, 8, 2, 64, true);
+    batch_case("decode_batch_serial/s4/h8/L64".into(), 4, 8, 2, 64, false);
+    batch_case("decode_batch/s16/h8/L64".into(), 16, 8, 2, 64, true);
+    batch_case("decode_batch_serial/s16/h8/L64".into(), 16, 8, 2, 64, false);
+    suite.ratio("decode_batch/s4/h8/L64", "decode_batch_serial/s4/h8/L64");
+    suite.ratio("decode_batch/s16/h8/L64", "decode_batch_serial/s16/h8/L64");
 
     if let Some(path) = flush_json().expect("write BENCH_JSON") {
         println!("\n[bench] wrote {}", path.display());

@@ -1,0 +1,234 @@
+//! Batched decode: many concurrent sessions' steps in ONE head-scatter
+//! wave.
+//!
+//! PR 3's serving loop scattered each decode step's `H` head rows across
+//! the [`ParSoftmax`] pool per request — `S` concurrent sessions paid `S`
+//! pool wakes per serving round, and short-prefix steps never reached the
+//! pool at all because `H` alone sits under the row threshold.
+//! [`DecodeBatch`] collects the per-step work of a whole round into one
+//! wave of `S × H` independent head-row tasks and submits it as a single
+//! [`ParSoftmax::scatter`], so the wake (and the page-gather setup) is
+//! amortized across every session in the round — the batch-shaped
+//! datapath A³/SOLE assume, mirrored in hwsim by
+//! [`crate::hwsim::simulate_decode_batched`].
+//!
+//! # The anchor property (ordering + bit-reproducibility)
+//!
+//! A batched round over `S` sessions is **`==`-bit-identical** to `S`
+//! serial [`DecodeAttention::step`] calls in ANY interleaving order.
+//! That holds by construction, not by luck:
+//!
+//! * **phase 1 (serial)**: every task's K/V row is appended to its own
+//!   sequence ([`KvPool::append`]) in wave order. Appends touch only
+//!   pages owned by their sequence, so sessions cannot observe each
+//!   other's appends — only the *page-id assignment* depends on order,
+//!   and no output ever reads a page id.
+//! * **phase 2 (parallel)**: each head-row task is a pure function of
+//!   its own sequence's pages and the step plan (the same
+//!   `head_step` expressions a serial step runs), and writes a disjoint
+//!   `d_head` block of its task's output. Scatter order is therefore
+//!   unobservable.
+//!
+//! Exhaustion is per-task: a session whose append hits
+//! [`KvError::Exhausted`] fails alone (its output untouched, its
+//! sequence unchanged, the step retryable after a close frees pages)
+//! while the rest of the wave proceeds — property-tested in
+//! `integration_decode_batch.rs`.
+//!
+//! # Wave accounting
+//!
+//! The inline-vs-scatter decision counts the WHOLE wave's rows (`S × H`)
+//! and MACs, via [`ParSoftmax::scatter_stays_inline`] — counting per
+//! session would keep row-rich waves inline (the PR 4 fix,
+//! regression-tested in `integration_par.rs`).
+
+use super::decode::{check_step_shapes, StepPlan};
+use super::kernel::{AttnScratch, OutPtr, MIN_HEAD_MACS};
+use super::DecodeAttention;
+use crate::kv::{KvError, KvPool, KvSeq};
+use crate::quant::Affine;
+use crate::softmax::{ParSoftmax, Scratch};
+
+/// One session's contribution to a batched decode round: the same inputs
+/// a single [`DecodeAttention::step`] takes, borrowed so the wave can
+/// prove (via `&mut`) that sequences and outputs are pairwise disjoint.
+pub struct DecodeStepTask<'a> {
+    pub seq: &'a mut KvSeq,
+    /// `H * d_head` quantized query rows, `[h][d]`
+    pub q: &'a [i8],
+    pub q_affine: Affine,
+    /// `G * d_head` new-token K rows, `[g][d]`
+    pub k_row: &'a [i8],
+    /// `G * d_head` new-token V rows, `[g][d]`
+    pub v_row: &'a [i8],
+    /// `H * d_head` f32 output, `[h][d]` — untouched on a failed append
+    pub out: &'a mut [f32],
+}
+
+/// The batched decode scheduler's kernel layer: one wave of `S × H`
+/// head-row tasks per serving round over a shared [`DecodeAttention`].
+/// See the module docs for the ordering / bit-reproducibility contract.
+pub struct DecodeBatch<'d> {
+    dec: &'d DecodeAttention,
+}
+
+struct HeadTask<'b> {
+    seq: &'b KvSeq,
+    /// this head's `d_head` query slice
+    qh: &'b [i8],
+    plan: StepPlan,
+    /// query-head index within its session
+    h: usize,
+    out: OutPtr,
+}
+
+impl<'d> DecodeBatch<'d> {
+    /// Wrap an existing per-route kernel (shares its scratch pool).
+    pub fn new(dec: &'d DecodeAttention) -> Self {
+        Self { dec }
+    }
+
+    /// The wrapped per-step kernel.
+    pub fn decode(&self) -> &DecodeAttention {
+        self.dec
+    }
+
+    /// One batched decode round: append every task's token (phase 1,
+    /// serial, per-task exhaustion), then attend all surviving tasks'
+    /// `S × H` head rows in ONE [`ParSoftmax::scatter`] wave (phase 2) —
+    /// or inline when the whole wave is under the pool's row threshold /
+    /// [`MIN_HEAD_MACS`] of total work. Returns one result per task, in
+    /// task order; failed tasks' sequences and outputs are untouched.
+    pub fn step_wave(
+        &self,
+        kv: &mut KvPool,
+        tasks: &mut [DecodeStepTask<'_>],
+        pool: &ParSoftmax,
+        scr: &mut AttnScratch,
+    ) -> Vec<Result<(), KvError>> {
+        // phase 1: serial appends, task order (page-id assignment is the
+        // only order-dependent effect, and nothing downstream reads it)
+        let results: Vec<Result<(), KvError>> = tasks
+            .iter_mut()
+            .map(|t| kv.append(t.seq, t.k_row, t.v_row))
+            .collect();
+
+        // phase 2: flatten the surviving tasks into head rows
+        let kv_ref: &KvPool = kv;
+        let d = kv_ref.config().d_head;
+        let mut heads: Vec<HeadTask<'_>> = Vec::new();
+        let mut wave_macs = 0usize;
+        for (t, r) in tasks.iter_mut().zip(&results) {
+            if r.is_err() {
+                continue;
+            }
+            let h = t.seq.groups().q_heads();
+            check_step_shapes(t.q, t.out, h, d);
+            let plan = self.dec.plan(t.seq, d, t.q_affine);
+            wave_macs += h * t.seq.len() * d;
+            let seq: &KvSeq = t.seq;
+            let optr = t.out.as_mut_ptr();
+            for hh in 0..h {
+                heads.push(HeadTask {
+                    seq,
+                    qh: &t.q[hh * d..(hh + 1) * d],
+                    plan,
+                    h: hh,
+                    // SAFETY: within `out`'s `h * d` allocation (shape
+                    // checked above); blocks are disjoint per head
+                    out: OutPtr(unsafe { optr.add(hh * d) }),
+                });
+            }
+        }
+
+        // wave accounting: the WHOLE round's rows and MACs decide the
+        // inline-vs-scatter trade (never per session — the PR 4 fix)
+        if pool.scatter_stays_inline(heads.len()) || wave_macs < MIN_HEAD_MACS {
+            for ht in &heads {
+                let oh = unsafe { std::slice::from_raw_parts_mut(ht.out.0, d) };
+                self.dec.head_step(kv_ref, ht.seq, ht.h, ht.qh, ht.plan, oh, scr);
+            }
+            return results;
+        }
+        let dec = self.dec;
+        let spare = &dec.spare;
+        let mut pool_scratch = Scratch::new();
+        pool.scatter(heads.len(), &mut pool_scratch, &|i, _s| {
+            let ht = &heads[i];
+            let mut hs = spare.lock().unwrap().pop().unwrap_or_default();
+            let oh = unsafe { std::slice::from_raw_parts_mut(ht.out.0, d) };
+            dec.head_step(kv_ref, ht.seq, ht.h, ht.qh, ht.plan, oh, &mut hs);
+            spare.lock().unwrap().push(hs);
+        });
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::DECODE_AFFINE;
+    use crate::kv::{HeadGroups, KvConfig};
+    use crate::lut::Precision;
+    use crate::softmax::{engine_parallel, Mode};
+    use crate::testkit::Rng;
+
+    #[test]
+    fn one_wave_matches_serial_steps_bitwise() {
+        let (s, h, g, d) = (3usize, 2usize, 1usize, 8usize);
+        let a = DECODE_AFFINE;
+        let cfg = KvConfig { pages: 16, page_size: 4, kv_heads: g, d_head: d };
+        let (mut kv_w, mut kv_s) = (KvPool::new(cfg), KvPool::new(cfg));
+        let groups = HeadGroups::new(h, g).unwrap();
+        let mut wave_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+        let mut ser_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+        let dec = DecodeAttention::new(Mode::Lut2d, Precision::Uint8, None).unwrap();
+        let batch = DecodeBatch::new(&dec);
+        let pool = engine_parallel(Mode::Lut2d, Precision::Uint8, None, Some(3));
+        let mut rng = Rng::new(14);
+        let mut scr = AttnScratch::new();
+        for round in 0..7 {
+            let qs: Vec<Vec<i8>> = (0..s)
+                .map(|_| (0..h * d).map(|_| rng.int(-96, 96) as i8).collect())
+                .collect();
+            let ks: Vec<Vec<i8>> = (0..s)
+                .map(|_| (0..g * d).map(|_| rng.int(-96, 96) as i8).collect())
+                .collect();
+            let vs: Vec<Vec<i8>> = (0..s)
+                .map(|_| (0..g * d).map(|_| rng.int(-96, 96) as i8).collect())
+                .collect();
+            let mut wave_out = vec![vec![0.0f32; h * d]; s];
+            let mut tasks: Vec<DecodeStepTask<'_>> = wave_seqs
+                .iter_mut()
+                .zip(wave_out.iter_mut())
+                .enumerate()
+                .map(|(i, (seq, out))| DecodeStepTask {
+                    seq,
+                    q: &qs[i],
+                    q_affine: a,
+                    k_row: &ks[i],
+                    v_row: &vs[i],
+                    out,
+                })
+                .collect();
+            let res = batch.step_wave(&mut kv_w, &mut tasks, &pool, &mut scr);
+            assert!(res.iter().all(|r| r.is_ok()));
+            drop(tasks);
+            // serial replay in REVERSE session order: interleaving must
+            // not matter
+            for i in (0..s).rev() {
+                let mut want = vec![0.0f32; h * d];
+                dec.step(&mut kv_s, &mut ser_seqs[i], &qs[i], a, &ks[i], &vs[i], &mut want, &mut scr)
+                    .unwrap();
+                assert_eq!(wave_out[i], want, "round {round} session {i}");
+            }
+        }
+        for seq in wave_seqs {
+            kv_w.close(seq);
+        }
+        assert_eq!(kv_w.free_pages(), 16);
+        for seq in ser_seqs {
+            kv_s.close(seq);
+        }
+    }
+}

@@ -19,12 +19,17 @@
 //! (short prefixes — a pool wake costs more than the row) or scatter over
 //! a [`ParSoftmax`] pool as one task batch ([`DecodeAttention::step_par`],
 //! `==`-exact with the sequential sweep).
+//!
+//! Prompt ingestion goes through [`DecodeAttention::prefill_chunk`]:
+//! append a block of `T'` tokens, attend once — bit-identical to `T'`
+//! single steps. Concurrent sessions' steps batch into ONE head-scatter
+//! wave through [`super::DecodeBatch`] (`attention/batch.rs`).
 
 use std::sync::Mutex;
 
 use anyhow::Result;
 
-use super::kernel::{AttnScratch, FusedAttention, MIN_HEAD_MACS};
+use super::kernel::{AttnScratch, FusedAttention, OutPtr, MIN_HEAD_MACS};
 use crate::kv::{KvError, KvPool, KvSeq};
 use crate::lut::Precision;
 use crate::quant::Affine;
@@ -42,9 +47,10 @@ pub const DECODE_AFFINE: Affine = Affine { scale: 0.0625, zero_point: 0 };
 /// Everything a step's head sweep needs that is constant across heads:
 /// the score-unit LUT map and the fused output dequant, mirroring
 /// `FusedAttention::plan` expression for expression (bit-exactness with
-/// prefill depends on it).
+/// prefill depends on it). Shared with the batched-wave layer
+/// ([`super::DecodeBatch`]), which computes one plan per session.
 #[derive(Clone, Copy)]
-struct StepPlan {
+pub(super) struct StepPlan {
     map: IntMap,
     out_scale: f32,
     zq: i32,
@@ -60,8 +66,9 @@ pub struct DecodeAttention {
     /// per-worker scratch instances for the scattered path, persisted
     /// across steps: decode runs once per generated token, so a fresh
     /// scratch per call would put heap allocation on exactly the per-step
-    /// hot path the paged KV arena is built to avoid
-    spare: Mutex<Vec<AttnScratch>>,
+    /// hot path the paged KV arena is built to avoid (shared with the
+    /// batched-wave layer in `attention/batch.rs`)
+    pub(super) spare: Mutex<Vec<AttnScratch>>,
 }
 
 impl DecodeAttention {
@@ -79,7 +86,7 @@ impl DecodeAttention {
         &self.kernel
     }
 
-    fn plan(&self, seq: &KvSeq, d_head: usize, q_affine: Affine) -> StepPlan {
+    pub(super) fn plan(&self, seq: &KvSeq, d_head: usize, q_affine: Affine) -> StepPlan {
         let step = (q_affine.scale as f64 * seq.k_affine().scale as f64
             / (d_head as f64).sqrt()) as f32;
         StepPlan {
@@ -123,13 +130,13 @@ impl DecodeAttention {
     /// [`DecodeAttention::step`] with the `H` query-head rows scattered
     /// across a [`ParSoftmax`] pool as one task batch (bit-identical —
     /// heads are independent and write disjoint `d`-sized output blocks).
-    /// Steps run inline on `scr` when the per-head work is under
-    /// [`MIN_HEAD_MACS`] (short prefixes) **or** there are fewer head
-    /// rows than the pool's
-    /// [`min_rows_per_shard`](ParSoftmax::min_rows_per_shard) — the same
-    /// row-threshold policy the pool applies to softmax batches, which is
-    /// how a decode route tunes its inline-vs-pool trade-off
-    /// (`ParSoftmax::with_policy`).
+    /// Steps run inline on `scr` when the whole step's work
+    /// (`H · len · d` MACs) is under [`MIN_HEAD_MACS`] (short prefixes)
+    /// **or** the wave is under the pool's row threshold
+    /// ([`ParSoftmax::scatter_stays_inline`]) — the same whole-submission
+    /// accounting the batched wave ([`super::DecodeBatch`]) and the
+    /// scattered prefill use, so a 1-task wave and a bare `step_par`
+    /// make the identical inline-vs-pool decision.
     #[allow(clippy::too_many_arguments)]
     pub fn step_par(
         &self,
@@ -148,19 +155,16 @@ impl DecodeAttention {
         let h = seq.groups().q_heads();
         check_step_shapes(q, out, h, d);
         let plan = self.plan(seq, d, q_affine);
-        let head_macs = seq.len() * d;
-        if h < 2 || h < pool.min_rows_per_shard() || head_macs < MIN_HEAD_MACS {
+        let step_macs = h * seq.len() * d;
+        if pool.scatter_stays_inline(h) || step_macs < MIN_HEAD_MACS {
             for (hh, oh) in out.chunks_exact_mut(d).enumerate() {
                 self.head_step(kv, seq, hh, &q[hh * d..(hh + 1) * d], plan, oh, scr);
             }
             return Ok(());
         }
         let spare = &self.spare;
-        struct OutPtr(*mut f32);
-        // SAFETY: head tasks write disjoint `d`-sized blocks of `out`,
-        // and `scatter` blocks until every task has finished.
-        unsafe impl Send for OutPtr {}
-        unsafe impl Sync for OutPtr {}
+        // SAFETY (OutPtr contract): head tasks reconstruct disjoint
+        // `d`-sized blocks of `out` only.
         let optr = OutPtr(out.as_mut_ptr());
         let kv_ref: &KvPool = kv;
         let seq_ref: &KvSeq = seq;
@@ -174,6 +178,128 @@ impl DecodeAttention {
         Ok(())
     }
 
+    /// Append a block of `T'` tokens to the paged cache and attend ONCE
+    /// through the fused kernel — chunked prefill. Layouts are step-major:
+    /// `q`/`out` are `T' * H * d` (`[t][h][d]`), `k_rows`/`v_rows` are
+    /// `T' * G * d` (`[t][g][d]`), so row `t` of the output is exactly
+    /// what the `t`-th single [`DecodeAttention::step`] would have
+    /// produced.
+    ///
+    /// **Bit-identical to `T'` single steps by construction**: the block
+    /// append lands token-for-token the same bytes/sums/page-table growth
+    /// as `T'` appends ([`KvPool::append_block`]), and each chunk row
+    /// attends over its own causal prefix (`base + t + 1`) with the same
+    /// integer expressions ([`Self::head_prefix`]) a single step uses —
+    /// the pages it reads were all written before any of them is read, so
+    /// deferring the attention sweep changes nothing. Property-tested in
+    /// `integration_decode_batch.rs` and swept by the conformance harness.
+    ///
+    /// **Atomic on exhaustion**: capacity for the whole chunk is reserved
+    /// up front; on [`KvError::Exhausted`] neither the cache nor `out` is
+    /// touched and the same chunk can be retried after pages free up.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_chunk(
+        &self,
+        kv: &mut KvPool,
+        seq: &mut KvSeq,
+        q: &[i8],
+        q_affine: Affine,
+        k_rows: &[i8],
+        v_rows: &[i8],
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) -> Result<(), KvError> {
+        let Some((t_chunk, base)) = prefill_ingest(kv, seq, q, k_rows, v_rows, out)? else {
+            return Ok(());
+        };
+        let (h, d) = (seq.groups().q_heads(), kv.config().d_head);
+        let plan = self.plan(seq, d, q_affine);
+        // head-major sweep (the fused prefill kernel's loop order): one
+        // head streams the same page blocks for all T' of its query rows
+        for hh in 0..h {
+            self.prefill_head_rows(kv, seq, hh, q, plan, base, t_chunk, out, scr);
+        }
+        Ok(())
+    }
+
+    /// [`DecodeAttention::prefill_chunk`] with the `H` head sweeps
+    /// scattered across a [`ParSoftmax`] pool (bit-identical — each head
+    /// task writes its own disjoint `(t, hh)` output blocks). A prompt
+    /// chunk is the most parallelizable payload the decode route serves
+    /// (`T' × H` independent rows), so the serving pipeline routes
+    /// prefills here; small chunks stay inline under the same wave
+    /// accounting as step waves.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_chunk_par(
+        &self,
+        kv: &mut KvPool,
+        seq: &mut KvSeq,
+        q: &[i8],
+        q_affine: Affine,
+        k_rows: &[i8],
+        v_rows: &[i8],
+        pool: &ParSoftmax,
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) -> Result<(), KvError> {
+        let Some((t_chunk, base)) = prefill_ingest(kv, seq, q, k_rows, v_rows, out)? else {
+            return Ok(());
+        };
+        let (h, d) = (seq.groups().q_heads(), kv.config().d_head);
+        let plan = self.plan(seq, d, q_affine);
+        // whole-chunk accounting: Σ_t h·(base+t+1)·d MACs over h head tasks
+        let chunk_macs: usize = (0..t_chunk).map(|t| h * (base + t + 1) * d).sum();
+        if pool.scatter_stays_inline(h) || chunk_macs < MIN_HEAD_MACS {
+            for hh in 0..h {
+                self.prefill_head_rows(kv, seq, hh, q, plan, base, t_chunk, out, scr);
+            }
+            return Ok(());
+        }
+        let spare = &self.spare;
+        // SAFETY (OutPtr contract): head task `hh` reconstructs only its
+        // own disjoint `(t, hh)` blocks of `out`.
+        let optr = OutPtr(out.as_mut_ptr());
+        let kv_ref: &KvPool = kv;
+        let seq_ref: &KvSeq = seq;
+        let mut pool_scratch = Scratch::new();
+        pool.scatter(h, &mut pool_scratch, &|hh, _s| {
+            let mut hs = spare.lock().unwrap().pop().unwrap_or_default();
+            for t in 0..t_chunk {
+                let qh = &q[(t * h + hh) * d..(t * h + hh + 1) * d];
+                // only this row's disjoint `d`-block is ever materialized
+                // as a slice — concurrent tasks never alias
+                let oh =
+                    unsafe { std::slice::from_raw_parts_mut(optr.0.add((t * h + hh) * d), d) };
+                self.head_prefix(kv_ref, seq_ref, hh, qh, plan, base + t + 1, oh, 0, &mut hs);
+            }
+            spare.lock().unwrap().push(hs);
+        });
+        Ok(())
+    }
+
+    /// One head's causal sweep over a freshly-appended chunk: rows
+    /// `base..base+t_chunk`, each over its own prefix, writing the head's
+    /// `(t, hh)` blocks of `out`.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_head_rows(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        hh: usize,
+        q: &[i8],
+        plan: StepPlan,
+        base: usize,
+        t_chunk: usize,
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) {
+        let (h, d) = (seq.groups().q_heads(), kv.config().d_head);
+        for t in 0..t_chunk {
+            let qh = &q[(t * h + hh) * d..(t * h + hh + 1) * d];
+            self.head_prefix(kv, seq, hh, qh, plan, base + t + 1, out, (t * h + hh) * d, scr);
+        }
+    }
+
     /// One query head over the paged prefix — the decode mirror of the
     /// prefill kernel's per-row sweep, same integer expressions on the
     /// same values:
@@ -183,7 +309,12 @@ impl DecodeAttention {
     ///   2./3. single-row integer LUT softmax (`sig_row`, shared);
     ///   4. `sig × V` gather across pages, i64 accumulators, one fused
     ///      dequant per output element.
-    fn head_step(
+    ///
+    /// Attends over the whole stored prefix (`seq.len()`); the chunked
+    /// prefill path uses [`Self::head_prefix`] directly with a shorter
+    /// causal bound. `pub(super)` so the batched-wave layer
+    /// (`attention/batch.rs`) drives the identical expressions.
+    pub(super) fn head_step(
         &self,
         kv: &KvPool,
         seq: &KvSeq,
@@ -193,17 +324,44 @@ impl DecodeAttention {
         oh: &mut [f32],
         scr: &mut AttnScratch,
     ) {
+        let d = kv.config().d_head;
+        let valid = seq.len();
+        debug_assert_eq!(oh.len(), d);
+        // route through the prefix sweep with a zero-offset output view
+        self.head_prefix(kv, seq, h, qh, plan, valid, oh, 0, scr);
+    }
+
+    /// The shared per-head sweep over a causal prefix of `valid ≤
+    /// seq.len()` tokens, writing `d_head` output elements at `out[off..]`.
+    #[allow(clippy::too_many_arguments)]
+    fn head_prefix(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        h: usize,
+        qh: &[i8],
+        plan: StepPlan,
+        valid: usize,
+        out: &mut [f32],
+        off: usize,
+        scr: &mut AttnScratch,
+    ) {
         let cfg = kv.config();
         let (d, psize) = (cfg.d_head, cfg.page_size);
         let gi = seq.groups().group_of(h);
-        let valid = seq.len();
+        debug_assert!(valid >= 1 && valid <= seq.len());
         scr.prepare_decode(valid, d, self.kernel.table().len());
         let qsum: i32 = qh.iter().map(|&v| v as i32).sum();
         let zqzk = d as i32 * plan.zq * plan.zk;
-        // 1. integer q·K^T over the paged prefix
+        // 1. integer q·K^T over the causal prefix (`valid` tokens; full
+        // pages except the prefix tail — a chunked-prefill row stops
+        // before the sequence's stored length)
         let mut j = 0usize;
         for (pi, &page) in seq.pages().iter().enumerate() {
-            let in_page = seq.tokens_in_page(psize, pi);
+            let in_page = valid.saturating_sub(pi * psize).min(psize);
+            if in_page == 0 {
+                break;
+            }
             let kb = kv.page_k(page, gi);
             let ks = kv.page_ksum(page, gi);
             for t in 0..in_page {
@@ -224,7 +382,10 @@ impl DecodeAttention {
         scr.acc[..d].fill(0);
         let mut j = 0usize;
         for (pi, &page) in seq.pages().iter().enumerate() {
-            let in_page = seq.tokens_in_page(psize, pi);
+            let in_page = valid.saturating_sub(pi * psize).min(psize);
+            if in_page == 0 {
+                break;
+            }
             let vb = kv.page_v(page, gi);
             for t in 0..in_page {
                 let g = scr.sig[j];
@@ -235,25 +396,65 @@ impl DecodeAttention {
             }
         }
         let corr = plan.zv as i64 * sig_sum;
-        for (o, &a) in oh.iter_mut().zip(&scr.acc[..d]) {
+        for (o, &a) in out[off..off + d].iter_mut().zip(&scr.acc[..d]) {
             *o = (a - corr) as f32 * plan.out_scale;
         }
     }
 }
 
-fn check_step_shapes(q: &[i8], out: &[f32], h: usize, d: usize) {
+pub(super) fn check_step_shapes(q: &[i8], out: &[f32], h: usize, d: usize) {
     assert_eq!(q.len(), h * d, "q step must be q_heads * d_head");
     assert_eq!(out.len(), h * d, "out must be q_heads * d_head");
 }
 
-/// Parse a decode route spec `"decode:<mode>:<prec>[:aN][:gG]"` (e.g.
-/// `"decode:rexp:uint8"`, `"decode:lut2d:int16:a512:g2"`) into
-/// `(mode, precision, alpha_len, kv_heads)`. `gG` fixes the stored-head
-/// count the route accepts (absent: MHA, every query head stores K/V).
-/// Returns `None` for anything else, including non-LUT modes.
-pub fn parse_decode_route(
-    spec: &str,
-) -> Option<(Mode, Precision, Option<usize>, Option<usize>)> {
+/// Shared prefill prelude: shape checks + the atomic block append.
+/// Returns `None` for an empty chunk (a no-op), otherwise
+/// `(t_chunk, base)` where `base` is the prefix length before the chunk.
+fn prefill_ingest(
+    kv: &mut KvPool,
+    seq: &mut KvSeq,
+    q: &[i8],
+    k_rows: &[i8],
+    v_rows: &[i8],
+    out: &[f32],
+) -> Result<Option<(usize, usize)>, KvError> {
+    let d = kv.config().d_head;
+    let (h, g) = (seq.groups().q_heads(), seq.groups().kv_heads());
+    let gd = g * d;
+    assert_eq!(k_rows.len() % gd, 0, "k chunk must be T' * kv_heads * d_head");
+    assert_eq!(k_rows.len(), v_rows.len(), "k/v chunks must match");
+    let t_chunk = k_rows.len() / gd;
+    assert_eq!(q.len(), t_chunk * h * d, "q chunk must be T' * q_heads * d_head");
+    assert_eq!(out.len(), t_chunk * h * d, "out must be T' * q_heads * d_head");
+    if t_chunk == 0 {
+        return Ok(None);
+    }
+    let base = seq.len();
+    kv.append_block(seq, k_rows, v_rows)?;
+    Ok(Some((t_chunk, base)))
+}
+
+/// A parsed `"decode:..."` route spec (see [`parse_decode_route`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeRoute {
+    pub mode: Mode,
+    pub prec: Precision,
+    /// `aN`: REXP LUT_alpha length override
+    pub alpha_len: Option<usize>,
+    /// `gG`: stored-head count the route accepts (absent: MHA)
+    pub kv_heads: Option<usize>,
+    /// `pP`: KV arena pages override (absent: the serving default) — lets
+    /// deployments size the arena to their traffic, and lets tests drive
+    /// the route to `KvError::Exhausted` cheaply
+    pub pages: Option<usize>,
+}
+
+/// Parse a decode route spec `"decode:<mode>:<prec>[:aN][:gG][:pP]"`
+/// (e.g. `"decode:rexp:uint8"`, `"decode:lut2d:int16:a512:g2:p256"`).
+/// `gG` fixes the stored-head count the route accepts (absent: MHA, every
+/// query head stores K/V); `pP` sizes the KV arena in pages. Returns
+/// `None` for anything else, including non-LUT modes.
+pub fn parse_decode_route(spec: &str) -> Option<DecodeRoute> {
     let rest = spec.strip_prefix("decode:")?;
     let mut parts = rest.split(':');
     let mode = Mode::parse(parts.next()?)?;
@@ -261,7 +462,7 @@ pub fn parse_decode_route(
         return None;
     }
     let prec = Precision::parse(parts.next()?)?;
-    let (mut alpha, mut kv_heads) = (None, None);
+    let (mut alpha, mut kv_heads, mut pages) = (None, None, None);
     for seg in parts {
         if let Some(a) = seg.strip_prefix('a') {
             if alpha.is_some() {
@@ -277,11 +478,20 @@ pub fn parse_decode_route(
                 return None;
             }
             kv_heads = Some(g);
+        } else if let Some(p) = seg.strip_prefix('p') {
+            if pages.is_some() {
+                return None;
+            }
+            let p: usize = p.parse().ok()?;
+            if p == 0 {
+                return None;
+            }
+            pages = Some(p);
         } else {
             return None;
         }
     }
-    Some((mode, prec, alpha, kv_heads))
+    Some(DecodeRoute { mode, prec, alpha_len: alpha, kv_heads, pages })
 }
 
 #[cfg(test)]
@@ -292,18 +502,38 @@ mod tests {
 
     #[test]
     fn decode_route_parsing() {
-        let (m, p, a, g) = parse_decode_route("decode:rexp:uint8").unwrap();
-        assert_eq!((m, p, a, g), (Mode::Rexp, Precision::Uint8, None, None));
-        let (m, p, a, g) = parse_decode_route("decode:lut2d:int16:a512:g2").unwrap();
-        assert_eq!((m, p, a, g), (Mode::Lut2d, Precision::Int16, Some(512), Some(2)));
-        let (_, _, a, g) = parse_decode_route("decode:rexp:uint8:g4").unwrap();
-        assert_eq!((a, g), (None, Some(4)));
+        let r = parse_decode_route("decode:rexp:uint8").unwrap();
+        assert_eq!(
+            r,
+            DecodeRoute {
+                mode: Mode::Rexp,
+                prec: Precision::Uint8,
+                alpha_len: None,
+                kv_heads: None,
+                pages: None,
+            }
+        );
+        let r = parse_decode_route("decode:lut2d:int16:a512:g2:p256").unwrap();
+        assert_eq!(
+            r,
+            DecodeRoute {
+                mode: Mode::Lut2d,
+                prec: Precision::Int16,
+                alpha_len: Some(512),
+                kv_heads: Some(2),
+                pages: Some(256),
+            }
+        );
+        let r = parse_decode_route("decode:rexp:uint8:g4").unwrap();
+        assert_eq!((r.alpha_len, r.kv_heads, r.pages), (None, Some(4), None));
         assert!(parse_decode_route("decode:exact:uint8").is_none(), "non-LUT mode");
         assert!(parse_decode_route("attn:rexp:uint8").is_none());
         assert!(parse_decode_route("decode:rexp").is_none());
         assert!(parse_decode_route("decode:rexp:uint8:g0").is_none());
+        assert!(parse_decode_route("decode:rexp:uint8:p0").is_none());
         assert!(parse_decode_route("decode:rexp:uint8:x3").is_none());
         assert!(parse_decode_route("decode:rexp:uint8:g2:g4").is_none());
+        assert!(parse_decode_route("decode:rexp:uint8:p8:p9").is_none());
     }
 
     #[test]
@@ -331,6 +561,64 @@ mod tests {
             }
         }
         assert_eq!(seq.pages().len(), 3);
+    }
+
+    #[test]
+    fn prefill_chunk_matches_single_steps_and_is_atomic() {
+        let (h, g, d, ps) = (2usize, 1usize, 4usize, 2usize);
+        let a = DECODE_AFFINE;
+        let groups = HeadGroups::new(h, g).unwrap();
+        let cfg = KvConfig { pages: 4, page_size: ps, kv_heads: g, d_head: d };
+        let (mut kv_a, mut kv_b) = (KvPool::new(cfg), KvPool::new(cfg));
+        let mut sa = KvSeq::new(groups, a, a);
+        let mut sb = KvSeq::new(groups, a, a);
+        let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let mut rng = Rng::new(9);
+        let mut scr = AttnScratch::new();
+        let t = 5usize;
+        let q: Vec<i8> = (0..t * h * d).map(|_| rng.int(-64, 64) as i8).collect();
+        let ks: Vec<i8> = (0..t * g * d).map(|_| rng.int(-64, 64) as i8).collect();
+        let vs: Vec<i8> = (0..t * g * d).map(|_| rng.int(-64, 64) as i8).collect();
+        let mut chunk_out = vec![0.0f32; t * h * d];
+        dec.prefill_chunk(&mut kv_a, &mut sa, &q, a, &ks, &vs, &mut chunk_out, &mut scr)
+            .unwrap();
+        for tt in 0..t {
+            let mut got = vec![0.0f32; h * d];
+            dec.step(
+                &mut kv_b,
+                &mut sb,
+                &q[tt * h * d..(tt + 1) * h * d],
+                a,
+                &ks[tt * g * d..(tt + 1) * g * d],
+                &vs[tt * g * d..(tt + 1) * g * d],
+                &mut got,
+                &mut scr,
+            )
+            .unwrap();
+            assert_eq!(&chunk_out[tt * h * d..(tt + 1) * h * d], &got[..], "step {tt}");
+        }
+        // empty chunk: a no-op
+        dec.prefill_chunk(&mut kv_a, &mut sa, &[], a, &[], &[], &mut [], &mut scr).unwrap();
+        assert_eq!(sa.len(), t);
+        // exhaustion is atomic: 5 of 8 tokens stored (3 pages held, 1
+        // free); a 4-token chunk needs 2 more pages -> nothing changes
+        let mut out = vec![7.0f32; 4 * h * d];
+        let err = dec.prefill_chunk(
+            &mut kv_a,
+            &mut sa,
+            &q[..4 * h * d],
+            a,
+            &ks[..4 * g * d],
+            &vs[..4 * g * d],
+            &mut out,
+            &mut scr,
+        );
+        assert_eq!(err, Err(KvError::Exhausted { pages: 4 }));
+        assert_eq!(sa.len(), t, "failed chunk must not land partially");
+        assert!(out.iter().all(|&o| o == 7.0), "failed chunk must not write output");
+        kv_a.close(sa);
+        kv_b.close(sb);
+        assert_eq!(kv_a.free_pages(), 4);
     }
 
     #[test]

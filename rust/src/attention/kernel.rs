@@ -36,14 +36,29 @@ use crate::softmax::{
     SoftmaxRexp,
 };
 
-/// Don't scatter heads across the pool below this many MACs per head
-/// (`len_q·len_k·d_head`): a pool wake + per-task synchronization costs
-/// more than computing a tiny head inline — the same tiny-batch policy
-/// [`ParSoftmax`] applies to softmax row shards. ~4k MACs is a few µs of
-/// integer work, on the order of one task round-trip. (Shared with the
-/// decode path, whose per-step unit of work is one query head over the
-/// stored prefix.)
+/// Don't scatter below this many MACs of work per pool submission: a
+/// pool wake + per-task synchronization costs more than computing that
+/// much inline — the same tiny-batch policy [`ParSoftmax`] applies to
+/// softmax row shards. ~4k MACs is a few µs of integer work, on the
+/// order of one task round-trip. The prefill kernel's `run_par` counts
+/// it per head (`len_q·len_k·d_head` — a head is its submission unit);
+/// the decode paths (`step_par`, `DecodeBatch::step_wave`,
+/// `prefill_chunk_par`) count the WHOLE submitted wave, so one wake is
+/// charged once per wave however the rows are grouped.
 pub(super) const MIN_HEAD_MACS: usize = 4096;
+
+/// `Send`/`Sync` shim for the disjoint output-block pointers the
+/// head-scatter paths fan across the worker pool.
+///
+/// SAFETY contract, shared by every user ([`FusedAttention::run_par`],
+/// `DecodeAttention::step_par` / `prefill_chunk_par`,
+/// `DecodeBatch::step_wave`): a task reconstructs only pairwise-disjoint
+/// blocks from this pointer, and [`ParSoftmax::scatter`] blocks until
+/// every task has finished, so no access outlives the buffer and no two
+/// tasks alias.
+pub(super) struct OutPtr(pub(super) *mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
 
 /// Reusable per-thread workspace of the fused kernel (score row, LUT
 /// addresses, sig row, widened V/K-sum blocks, output accumulators).
@@ -331,11 +346,8 @@ impl FusedAttention {
         let (ql, kl, ol) = (shape.len_q * shape.d_head, shape.len_k * shape.d_head, shape.len_q * shape.d_head);
         // per-worker AttnScratch instances, reused across head tasks
         let spare: Mutex<Vec<AttnScratch>> = Mutex::new(Vec::new());
-        struct OutPtr(*mut f32);
-        // SAFETY: head tasks write disjoint `ol`-sized blocks of `out`,
-        // and `scatter` blocks until every task has finished.
-        unsafe impl Send for OutPtr {}
-        unsafe impl Sync for OutPtr {}
+        // SAFETY (OutPtr contract): head tasks reconstruct disjoint
+        // `ol`-sized blocks of `out` only.
         let optr = OutPtr(out.as_mut_ptr());
         let mut pool_scratch = Scratch::new();
         pool.scatter(shape.heads_total(), &mut pool_scratch, &|h, _s| {

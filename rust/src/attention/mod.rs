@@ -34,13 +34,19 @@
 //! [`decode::DecodeAttention`] is the streaming-decode entry point: one
 //! query row per generated token over a paged integer KV cache
 //! ([`crate::kv`]), bit-identical to a causal prefill through this same
-//! kernel; its serving route `"decode:<mode>:<prec>[:aN][:gG]"` is
-//! parsed by [`parse_decode_route`].
+//! kernel; its serving route `"decode:<mode>:<prec>[:aN][:gG][:pP]"` is
+//! parsed by [`parse_decode_route`]. [`DecodeAttention::prefill_chunk`]
+//! ingests whole prompt blocks (append `T'` tokens, attend once —
+//! bit-identical to `T'` single steps), and [`batch::DecodeBatch`]
+//! collects many concurrent sessions' steps into ONE head-scatter wave
+//! per serving round (the coordinator's `DecodeStepBatch` round).
 
+mod batch;
 mod decode;
 mod kernel;
 
-pub use decode::{parse_decode_route, DecodeAttention, DECODE_AFFINE};
+pub use batch::{DecodeBatch, DecodeStepTask};
+pub use decode::{parse_decode_route, DecodeAttention, DecodeRoute, DECODE_AFFINE};
 pub use kernel::{AttnScratch, ComposedAttention, FusedAttention};
 
 use crate::lut::Precision;

@@ -12,10 +12,10 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::request::Reply;
+use super::request::{Payload, Reply};
 use crate::attention::{
-    self, AttnMask, AttnScratch, AttnShape, DecodeAttention, FusedAttention, QuantTensor,
-    DECODE_AFFINE,
+    self, AttnMask, AttnScratch, AttnShape, DecodeAttention, DecodeBatch, DecodeStepTask,
+    FusedAttention, QuantTensor, DECODE_AFFINE,
 };
 use crate::eval::DetectionBox;
 use crate::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
@@ -455,71 +455,228 @@ const DECODE_PAGE_SIZE: usize = 16;
 const DECODE_MIN_ROWS_PER_SHARD: usize = 2;
 
 /// Streaming decode serving pipeline — route
-/// `"decode:<mode>:<prec>[:aN][:gG]"` (e.g. `"decode:rexp:uint8:g2"`).
-/// Artifact-free like the attention route. Holds the session table
-/// (session id → [`KvSeq`] page table) and one shared [`KvPool`] arena;
-/// the pool is sized lazily from the first step's `(G, d_head)` shape
-/// (later sessions must match — one pool serves one model geometry).
+/// `"decode:<mode>:<prec>[:aN][:gG][:pP]"` (e.g.
+/// `"decode:rexp:uint8:g2"`). Artifact-free like the attention route.
+/// Holds the session table (session id → [`KvSeq`] page table) and one
+/// shared [`KvPool`] arena; the pool is sized lazily from the first
+/// step's `(G, d_head)` shape (later sessions must match — one pool
+/// serves one model geometry), with `pP` overriding the arena's page
+/// count.
 ///
 /// Session lifecycle: [`super::Payload::DecodeOpen`] →
-/// [`Reply::Session`]; N × [`super::Payload::DecodeStep`] →
-/// [`Reply::Token`] each; [`super::Payload::DecodeClose`] →
-/// [`Reply::Closed`] with the pages reclaimed. KV exhaustion surfaces as
-/// a per-step [`Reply::Error`] (typed backpressure from
-/// [`crate::kv::KvError`]) — the session stays open and the step can be
-/// retried after other sessions close.
+/// [`Reply::Session`]; optional chunked prefill
+/// ([`super::Payload::DecodePrefill`] → [`Reply::Prefill`], the whole
+/// prompt in one atomic block append + fused sweep); N ×
+/// [`super::Payload::DecodeStep`] → [`Reply::Token`] each;
+/// [`super::Payload::DecodeClose`] → [`Reply::Closed`] with the pages
+/// reclaimed.
+///
+/// Serving rounds are **batched**: [`DecodePipeline::run_batch`]
+/// coalesces every maximal run of consecutive step payloads into
+/// `DecodeStepBatch` rounds — consecutive unique-session waves, each ONE
+/// [`DecodeBatch`] head-scatter over all `S × H` head rows (see the wire
+/// contract in [`super::request`]). KV exhaustion surfaces as a per-step
+/// [`Reply::Error`] (typed backpressure from [`crate::kv::KvError`]) —
+/// the session stays open, batchmates in the same wave are unaffected,
+/// and the step can be retried after other sessions close.
 pub struct DecodePipeline {
     pub variant: String,
     decode: DecodeAttention,
     pool: ParSoftmax,
     /// `gG` in the route pins the stored-head count requests must carry
     route_kv_heads: Option<usize>,
+    /// KV arena pages (route `pP`, default [`DECODE_POOL_PAGES`])
+    route_pages: usize,
     kv: RefCell<Option<KvPool>>,
     /// `None` until the first step binds the session's head geometry
     sessions: RefCell<HashMap<u64, Option<KvSeq>>>,
     next_session: Cell<u64>,
     scratch: RefCell<AttnScratch>,
-    /// i8 staging for the step's quantized q / k / v rows
-    qbuf: RefCell<Vec<i8>>,
-    kvbuf: RefCell<Vec<i8>>,
+    /// recycled `(q, k, v)` i8 staging triples for wave slots — per-step
+    /// ingress quantization must not put heap allocation on the per-token
+    /// hot path (the reply's `out` buffer is the one unavoidable
+    /// allocation: the reply owns it)
+    spare_bufs: RefCell<Vec<(Vec<i8>, Vec<i8>, Vec<i8>)>>,
+}
+
+/// One admitted wave entry: the session's sequence (taken out of the
+/// table for the duration of the round) plus its quantized step rows.
+struct WaveSlot {
+    idx: usize,
+    session: u64,
+    seq: KvSeq,
+    q: Vec<i8>,
+    k: Vec<i8>,
+    v: Vec<i8>,
+    out: Vec<f32>,
 }
 
 impl DecodePipeline {
     pub fn load(spec: &str, workers: usize) -> Result<Self> {
-        let (mode, prec, alpha_len, route_kv_heads) =
-            attention::parse_decode_route(spec).ok_or_else(|| {
-                anyhow!("decode route {spec:?}: want decode:<rexp|lut2d>:<prec>[:aN][:gG]")
-            })?;
+        let route = attention::parse_decode_route(spec).ok_or_else(|| {
+            anyhow!("decode route {spec:?}: want decode:<rexp|lut2d>:<prec>[:aN][:gG][:pP]")
+        })?;
         // as for the attention route: the pool's wrapped engine is off the
         // decode hot path (heads go through `scatter`), but keep its alpha
         // consistent with the kernel's
-        let alpha = Some(alpha_len.unwrap_or(attention::ATTN_ALPHA_LEN));
-        let inner: Arc<dyn SoftmaxEngine> = Arc::from(softmax::engine(mode, prec, alpha));
+        let alpha = Some(route.alpha_len.unwrap_or(attention::ATTN_ALPHA_LEN));
+        let inner: Arc<dyn SoftmaxEngine> = Arc::from(softmax::engine(route.mode, route.prec, alpha));
         Ok(Self {
             variant: spec.to_string(),
-            decode: DecodeAttention::new(mode, prec, alpha_len)?,
+            decode: DecodeAttention::new(route.mode, route.prec, route.alpha_len)?,
             pool: ParSoftmax::with_policy(inner, workers.max(1), DECODE_MIN_ROWS_PER_SHARD),
-            route_kv_heads,
+            route_kv_heads: route.kv_heads,
+            route_pages: route.pages.unwrap_or(DECODE_POOL_PAGES),
             kv: RefCell::new(None),
             sessions: RefCell::new(HashMap::new()),
             next_session: Cell::new(1),
             scratch: RefCell::new(AttnScratch::new()),
-            qbuf: RefCell::new(Vec::new()),
-            kvbuf: RefCell::new(Vec::new()),
+            spare_bufs: RefCell::new(Vec::new()),
         })
     }
 
+    /// Serve one ready batch of decode payloads, in arrival order, with
+    /// every maximal run of consecutive [`Payload`] steps coalesced into
+    /// `DecodeStepBatch` rounds (opens / prefills / closes are barriers).
+    pub fn run_batch(&self, batch: &[&Payload]) -> Vec<Reply> {
+        let mut replies: Vec<Option<Reply>> = batch.iter().map(|_| None).collect();
+        let mut run: Vec<usize> = Vec::new();
+        for (i, p) in batch.iter().enumerate() {
+            match p {
+                Payload::DecodeStep { .. } => run.push(i),
+                _ => {
+                    self.flush_steps(batch, &mut run, &mut replies);
+                    replies[i] = Some(match p {
+                        Payload::DecodeOpen => self.open(),
+                        Payload::DecodePrefill { session, q, k, v } => {
+                            self.prefill(*session, q, k, v)
+                        }
+                        Payload::DecodeClose(s) => self.close(*s),
+                        _ => unreachable!("router sends only decode payloads here"),
+                    });
+                }
+            }
+        }
+        self.flush_steps(batch, &mut run, &mut replies);
+        replies.into_iter().map(|r| r.expect("every request resolved")).collect()
+    }
+
+    fn flush_steps(&self, batch: &[&Payload], run: &mut Vec<usize>, replies: &mut [Option<Reply>]) {
+        if run.is_empty() {
+            return;
+        }
+        let items: Vec<(u64, &Tensor, &Tensor, &Tensor)> = run
+            .iter()
+            .map(|&i| match batch[i] {
+                Payload::DecodeStep { session, q, k, v } => (*session, q, k, v),
+                _ => unreachable!("step runs hold only DecodeStep payloads"),
+            })
+            .collect();
+        for (&i, reply) in run.iter().zip(self.step_batch(&items)) {
+            replies[i] = Some(reply);
+        }
+        run.clear();
+    }
+
     /// open → [`Reply::Session`]
-    pub fn open(&self) -> Result<Reply> {
+    pub fn open(&self) -> Reply {
         let id = self.next_session.get();
         self.next_session.set(id + 1);
         self.sessions.borrow_mut().insert(id, None);
-        Ok(Reply::Session(id))
+        Reply::Session(id)
     }
 
-    /// one step → [`Reply::Token`]
-    pub fn step(&self, session: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Reply> {
+    /// One `DecodeStepBatch` round: all steps of a coalesced run, replies
+    /// in item order. Unique sessions go down as ONE [`DecodeBatch`]
+    /// head-scatter wave; repeated sessions split into consecutive waves
+    /// so same-session steps keep arrival order (cross-session order is
+    /// unobservable — see the wire contract in [`super::request`]).
+    pub fn step_batch(&self, items: &[(u64, &Tensor, &Tensor, &Tensor)]) -> Vec<Reply> {
+        let mut replies: Vec<Option<Reply>> = items.iter().map(|_| None).collect();
+        let mut remaining: Vec<usize> = (0..items.len()).collect();
+        while !remaining.is_empty() {
+            let mut seen: std::collections::HashSet<u64> = std::collections::HashSet::new();
+            let mut wave: Vec<usize> = Vec::new();
+            let mut rest: Vec<usize> = Vec::new();
+            for &i in &remaining {
+                if seen.insert(items[i].0) {
+                    wave.push(i);
+                } else {
+                    rest.push(i);
+                }
+            }
+            self.step_wave_round(items, &wave, &mut replies);
+            remaining = rest;
+        }
+        replies.into_iter().map(|r| r.expect("every step resolved")).collect()
+    }
+
+    /// One unique-session wave of a `DecodeStepBatch` round.
+    fn step_wave_round(
+        &self,
+        items: &[(u64, &Tensor, &Tensor, &Tensor)],
+        wave: &[usize],
+        replies: &mut [Option<Reply>],
+    ) {
         let mut sessions = self.sessions.borrow_mut();
+        let mut kv_ref = self.kv.borrow_mut();
+        let mut slots: Vec<WaveSlot> = Vec::with_capacity(wave.len());
+        for &i in wave {
+            let (session, q, k, v) = items[i];
+            match self.admit_step(&mut sessions, &mut kv_ref, session, q, k, v) {
+                Ok((seq, qb, kb, vb, out)) => {
+                    slots.push(WaveSlot { idx: i, session, seq, q: qb, k: kb, v: vb, out })
+                }
+                Err(e) => replies[i] = Some(Reply::Error(e.to_string())),
+            }
+        }
+        if slots.is_empty() {
+            return;
+        }
+        let kvp = kv_ref.as_mut().expect("pool bound by admitted steps");
+        let mut scr = self.scratch.borrow_mut();
+        let mut tasks: Vec<DecodeStepTask<'_>> = slots
+            .iter_mut()
+            .map(|s| DecodeStepTask {
+                seq: &mut s.seq,
+                q: &s.q,
+                q_affine: DECODE_AFFINE,
+                k_row: &s.k,
+                v_row: &s.v,
+                out: &mut s.out,
+            })
+            .collect();
+        let results = DecodeBatch::new(&self.decode).step_wave(kvp, &mut tasks, &self.pool, &mut scr);
+        drop(tasks);
+        let mut spare_bufs = self.spare_bufs.borrow_mut();
+        for (slot, res) in slots.into_iter().zip(results) {
+            let reply = match res {
+                Ok(()) => Reply::Token(Tensor::f32(items[slot.idx].1.dims.clone(), slot.out)),
+                Err(e) => Reply::Error(e.to_string()),
+            };
+            // hand the sequence back to the session table (untouched when
+            // the append failed — the step is retryable), and the staging
+            // buffers back to the recycle pool
+            spare_bufs.push((slot.q, slot.k, slot.v));
+            *sessions.get_mut(&slot.session).expect("admitted above") = Some(slot.seq);
+            replies[slot.idx] = Some(reply);
+        }
+    }
+
+    /// Validate + bind one step and take its sequence out of the table
+    /// for the wave; quantizes the step's rows with the route's fixed
+    /// dyadic affine (the per-page quantization contract; see
+    /// [`attention::DECODE_AFFINE`]).
+    #[allow(clippy::type_complexity)]
+    fn admit_step(
+        &self,
+        sessions: &mut HashMap<u64, Option<KvSeq>>,
+        kv_ref: &mut Option<KvPool>,
+        session: u64,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+    ) -> Result<(KvSeq, Vec<i8>, Vec<i8>, Vec<i8>, Vec<f32>)> {
         let slot = sessions
             .get_mut(&session)
             .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
@@ -529,83 +686,124 @@ impl DecodePipeline {
                 bail!("decode step carries {g} kv heads but the route fixes g{want}");
             }
         }
+        bind_decode_pool(kv_ref, g, d, self.route_pages)?;
+        bind_session_heads(slot, h, g)?;
+        let seq = slot.take().expect("session bound above");
+        // staging buffers are recycled across rounds (step_wave_round
+        // returns them); only the reply-owned `out` is freshly allocated
+        let (mut qb, mut kb, mut vb) =
+            self.spare_bufs.borrow_mut().pop().unwrap_or_default();
+        qb.clear();
+        qb.resize(h * d, 0);
+        quant::quantize_into(q.as_f32().expect("validated f32"), DECODE_AFFINE, &mut qb);
+        kb.clear();
+        kb.resize(g * d, 0);
+        quant::quantize_into(k.as_f32().expect("validated f32"), DECODE_AFFINE, &mut kb);
+        vb.clear();
+        vb.resize(g * d, 0);
+        quant::quantize_into(v.as_f32().expect("validated f32"), DECODE_AFFINE, &mut vb);
+        Ok((seq, qb, kb, vb, vec![0.0f32; h * d]))
+    }
+
+    /// chunked prefill → [`Reply::Prefill`] (`(T', H, d)` like the query;
+    /// row `t` bit-identical to the `t`-th single step's [`Reply::Token`])
+    pub fn prefill(&self, session: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Reply {
+        self.try_prefill(session, q, k, v)
+            .unwrap_or_else(|e| Reply::Error(e.to_string()))
+    }
+
+    fn try_prefill(&self, session: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Reply> {
+        let (t, h, g, d) = validate_decode_prefill(q, k, v)?;
+        if let Some(want) = self.route_kv_heads {
+            if g != want {
+                bail!("decode prefill carries {g} kv heads but the route fixes g{want}");
+            }
+        }
+        let mut sessions = self.sessions.borrow_mut();
+        let slot = sessions
+            .get_mut(&session)
+            .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
         let mut kv_ref = self.kv.borrow_mut();
-        if let Some(p) = kv_ref.as_ref() {
-            let cfg = *p.config();
-            if cfg.kv_heads != g || cfg.d_head != d {
-                bail!(
-                    "decode step shape (g{g}, d{d}) incompatible with the pool's (g{}, d{})",
-                    cfg.kv_heads,
-                    cfg.d_head
-                );
-            }
-        } else {
-            *kv_ref = Some(KvPool::new(KvConfig {
-                pages: DECODE_POOL_PAGES,
-                page_size: DECODE_PAGE_SIZE,
-                kv_heads: g,
-                d_head: d,
-            }));
-        }
-        let kvp = kv_ref.as_mut().expect("pool bound above");
-        if let Some(s) = slot.as_ref() {
-            let sg = *s.groups();
-            if sg.q_heads() != h || sg.kv_heads() != g {
-                bail!(
-                    "decode step heads (H{h}, g{g}) do not match the session's (H{}, g{})",
-                    sg.q_heads(),
-                    sg.kv_heads()
-                );
-            }
-        } else {
-            *slot = Some(KvSeq::new(HeadGroups::new(h, g)?, DECODE_AFFINE, DECODE_AFFINE));
-        }
+        bind_decode_pool(&mut kv_ref, g, d, self.route_pages)?;
+        bind_session_heads(slot, h, g)?;
         let seq = slot.as_mut().expect("session bound above");
-        // quantize at ingress with the route's fixed dyadic affine (the
-        // per-page quantization contract; see attention::DECODE_AFFINE)
-        let mut qb = self.qbuf.borrow_mut();
-        if qb.len() < h * d {
-            qb.resize(h * d, 0);
-        }
-        quant::quantize_into(q.as_f32()?, DECODE_AFFINE, &mut qb[..h * d]);
-        let mut kvb = self.kvbuf.borrow_mut();
-        if kvb.len() < 2 * g * d {
-            kvb.resize(2 * g * d, 0);
-        }
-        quant::quantize_into(k.as_f32()?, DECODE_AFFINE, &mut kvb[..g * d]);
-        quant::quantize_into(v.as_f32()?, DECODE_AFFINE, &mut kvb[g * d..2 * g * d]);
-        let (krow, rest) = kvb.split_at(g * d);
-        let vrow = &rest[..g * d];
-        let mut out = vec![0.0f32; h * d];
+        let kvp = kv_ref.as_mut().expect("pool bound above");
+        let mut qb = vec![0i8; t * h * d];
+        quant::quantize_into(q.as_f32()?, DECODE_AFFINE, &mut qb);
+        let mut kb = vec![0i8; t * g * d];
+        quant::quantize_into(k.as_f32()?, DECODE_AFFINE, &mut kb);
+        let mut vb = vec![0i8; t * g * d];
+        quant::quantize_into(v.as_f32()?, DECODE_AFFINE, &mut vb);
+        let mut out = vec![0.0f32; t * h * d];
         let mut scr = self.scratch.borrow_mut();
-        self.decode.step_par(
-            kvp,
-            seq,
-            &qb[..h * d],
-            DECODE_AFFINE,
-            krow,
-            vrow,
-            &self.pool,
-            &mut out,
-            &mut scr,
-        )?;
-        Ok(Reply::Token(Tensor::f32(q.dims.clone(), out)))
+        // a prompt chunk is the route's most parallelizable payload
+        // (T'×H independent rows): scatter its head sweeps over the pool
+        self.decode
+            .prefill_chunk_par(kvp, seq, &qb, DECODE_AFFINE, &kb, &vb, &self.pool, &mut out, &mut scr)?;
+        Ok(Reply::Prefill(Tensor::f32(q.dims.clone(), out)))
     }
 
     /// close → [`Reply::Closed`], pages returned to the arena
-    pub fn close(&self, session: u64) -> Result<Reply> {
-        let seq = self
-            .sessions
-            .borrow_mut()
-            .remove(&session)
-            .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
-        let pages = match (seq, self.kv.borrow_mut().as_mut()) {
-            (Some(s), Some(pool)) => pool.close(s),
-            // a session that never stepped holds no pages
-            _ => 0,
-        };
-        Ok(Reply::Closed { pages })
+    pub fn close(&self, session: u64) -> Reply {
+        match self.sessions.borrow_mut().remove(&session) {
+            None => Reply::Error(format!("unknown decode session {session}")),
+            Some(seq) => {
+                let pages = match (seq, self.kv.borrow_mut().as_mut()) {
+                    (Some(s), Some(pool)) => pool.close(s),
+                    // a session that never stepped holds no pages
+                    _ => 0,
+                };
+                Reply::Closed { pages }
+            }
+        }
     }
+
+    /// `(free, total)` pages of the route's KV arena — `None` until the
+    /// first step/prefill binds the pool. Test/ops probe for the
+    /// free-list round-trip invariant.
+    pub fn kv_pages(&self) -> Option<(usize, usize)> {
+        self.kv.borrow().as_ref().map(|p| (p.free_pages(), p.config().pages))
+    }
+}
+
+/// Check (or lazily create, `pages` big) the route's shared KV arena for
+/// a step/prefill of geometry `(g, d)`.
+fn bind_decode_pool(kv_ref: &mut Option<KvPool>, g: usize, d: usize, pages: usize) -> Result<()> {
+    if let Some(p) = kv_ref.as_ref() {
+        let cfg = *p.config();
+        if cfg.kv_heads != g || cfg.d_head != d {
+            bail!(
+                "decode step shape (g{g}, d{d}) incompatible with the pool's (g{}, d{})",
+                cfg.kv_heads,
+                cfg.d_head
+            );
+        }
+    } else {
+        *kv_ref = Some(KvPool::new(KvConfig {
+            pages,
+            page_size: DECODE_PAGE_SIZE,
+            kv_heads: g,
+            d_head: d,
+        }));
+    }
+    Ok(())
+}
+
+/// Check (or bind, on the first step/prefill) a session's head geometry.
+fn bind_session_heads(slot: &mut Option<KvSeq>, h: usize, g: usize) -> Result<()> {
+    if let Some(s) = slot.as_ref() {
+        let sg = *s.groups();
+        if sg.q_heads() != h || sg.kv_heads() != g {
+            bail!(
+                "decode step heads (H{h}, g{g}) do not match the session's (H{}, g{})",
+                sg.q_heads(),
+                sg.kv_heads()
+            );
+        }
+    } else {
+        *slot = Some(KvSeq::new(HeadGroups::new(h, g)?, DECODE_AFFINE, DECODE_AFFINE));
+    }
+    Ok(())
 }
 
 /// A decode step must be 2-D f32: q `(H, d)`, k/v `(G, d)` with matching
@@ -632,6 +830,40 @@ fn validate_decode_step(q: &Tensor, k: &Tensor, v: &Tensor) -> Result<(usize, us
     k.as_f32()?;
     v.as_f32()?;
     Ok((h, g, d))
+}
+
+/// A decode prefill chunk must be 3-D f32: q `(T', H, d)`, k/v
+/// `(T', G, d)` with `T' >= 1`, matching depth and chunk length, non-zero
+/// dims, and `G` dividing `H`. Returns `(T', H, G, d)`.
+fn validate_decode_prefill(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+) -> Result<(usize, usize, usize, usize)> {
+    let (qd, kd, vd) = (&q.dims, &k.dims, &v.dims);
+    if qd.len() != 3 || kd.len() != 3 || vd.len() != 3 {
+        bail!("decode prefill must be 3-D (tokens, heads, d_head), got q{qd:?} k{kd:?} v{vd:?}");
+    }
+    if kd != vd {
+        bail!("k/v prefill shapes must match, got {kd:?} vs {vd:?}");
+    }
+    if qd[0] != kd[0] {
+        bail!("q chunk length {} incompatible with k/v chunk length {}", qd[0], kd[0]);
+    }
+    if qd[2] != kd[2] {
+        bail!("q depth {} incompatible with k/v depth {}", qd[2], kd[2]);
+    }
+    if qd.iter().any(|&x| x == 0) || kd.iter().any(|&x| x == 0) {
+        bail!("decode prefill has a zero dimension: q{qd:?} k/v{kd:?}");
+    }
+    let (t, h, g, d) = (qd[0], qd[1], kd[1], qd[2]);
+    if g > h || h % g != 0 {
+        bail!("kv heads ({g}) must evenly divide query heads ({h})");
+    }
+    q.as_f32()?;
+    k.as_f32()?;
+    v.as_f32()?;
+    Ok((t, h, g, d))
 }
 
 /// Attention payloads must be 4-D `(B,H,L,d)` / `(B,H,S,d)` f32 with

@@ -1,4 +1,38 @@
 //! Request/response vocabulary of the serving API.
+//!
+//! # The `DecodeStepBatch` wire contract
+//!
+//! The decode route is session-ful, and its serving rounds are batched:
+//! when a ready batch reaches the engine thread, every maximal run of
+//! consecutive [`Payload::DecodeStep`] requests is coalesced into a
+//! **`DecodeStepBatch` round** — ONE head-scatter wave over all the
+//! sessions stepped in that run (see
+//! [`crate::attention::DecodeBatch`]). The contract callers can rely on:
+//!
+//! * **Ordering.** Opens, prefills and closes are barriers (they flush
+//!   any pending step run) and land in arrival order. Within a step run,
+//!   each round executes as a serial execution in **wave order**: first
+//!   occurrences of each session (in arrival order), then second
+//!   occurrences, and so on — a legal interleaving that preserves every
+//!   session's own arrival order. Steps addressing *different* sessions
+//!   have no observable output order at all — which is what makes the
+//!   wave legal.
+//! * **Bit-reproducibility.** Every reply is bit-identical to what a
+//!   serial per-request execution (PR 3's loop) would have produced in
+//!   ANY per-session-order-preserving interleaving: a session's reply
+//!   depends only on its own ingress history (quantized with the
+//!   route's fixed [`crate::attention::DECODE_AFFINE`]), never on its
+//!   batchmates. [`Payload::DecodePrefill`] of `T'` tokens replies
+//!   exactly what `T'` single steps would have, row for row.
+//! * **Failure isolation.** A malformed step, an unknown session, or KV
+//!   exhaustion ([`crate::kv::KvError::Exhausted`]) fails only its own
+//!   request ([`Reply::Error`]); batchmates in the same wave are
+//!   unaffected, and an exhausted step/prefill left the session exactly
+//!   as it was — retry it after a close frees pages. Note that under
+//!   page scarcity *which* request of a round starves follows wave
+//!   order, exactly as it would in the serial execution of that
+//!   interleaving — it was never an arrival-order property even in
+//!   PR 3's loop, since any interleaving picks a different victim.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -74,6 +108,19 @@ pub enum Payload {
         k: Tensor,
         v: Tensor,
     },
+    /// chunked prefill for an open decode session: f32 q `(T', H, d)` and
+    /// new-token k/v blocks `(T', G, d)` — the whole prompt chunk is
+    /// quantized, appended to the paged cache in one atomic block, and
+    /// attended in one fused sweep; the reply ([`Reply::Prefill`]) is
+    /// bit-identical to what `T'` [`Payload::DecodeStep`] calls would
+    /// have produced, row for row. On KV exhaustion nothing lands and the
+    /// same chunk is retryable
+    DecodePrefill {
+        session: u64,
+        q: Tensor,
+        k: Tensor,
+        v: Tensor,
+    },
     /// close a decode session, returning its pages to the pool
     DecodeClose(u64),
 }
@@ -86,9 +133,10 @@ impl Payload {
             Payload::Detect(_) => TaskKind::Detect,
             Payload::Softmax(_) => TaskKind::Softmax,
             Payload::Attention { .. } => TaskKind::Attention,
-            Payload::DecodeOpen | Payload::DecodeStep { .. } | Payload::DecodeClose(_) => {
-                TaskKind::Decode
-            }
+            Payload::DecodeOpen
+            | Payload::DecodeStep { .. }
+            | Payload::DecodePrefill { .. }
+            | Payload::DecodeClose(_) => TaskKind::Decode,
         }
     }
 }
@@ -109,6 +157,9 @@ pub enum Reply {
     Session(u64),
     /// per-step decode attention output, `(H, d)` like the step's query
     Token(Tensor),
+    /// chunked-prefill output, `(T', H, d)` like the chunk's query — row
+    /// `t` is bit-identical to the `Token` reply step `t` would have got
+    Prefill(Tensor),
     /// a decode session closed; `pages` KV pages returned to the pool
     Closed { pages: usize },
     /// the server rejected or failed the request
@@ -156,6 +207,9 @@ mod tests {
         let t = Tensor::zeros_f32(vec![2, 4]);
         let step = Payload::DecodeStep { session: 0, q: t.clone(), k: t.clone(), v: t };
         assert_eq!(step.kind(), TaskKind::Decode);
+        let t = Tensor::zeros_f32(vec![3, 2, 4]);
+        let pre = Payload::DecodePrefill { session: 0, q: t.clone(), k: t.clone(), v: t };
+        assert_eq!(pre.kind(), TaskKind::Decode);
         assert_eq!(Payload::DecodeClose(0).kind(), TaskKind::Decode);
         assert_eq!(TaskKind::ALL.len(), 6);
     }

@@ -32,9 +32,10 @@ pub struct RouteTable {
     /// fused integer attention route `"attn:<mode>:<prec[:aN]>"` (see
     /// [`AttentionPipeline`](super::AttentionPipeline)); artifact-free
     pub attention: Option<String>,
-    /// streaming decode route `"decode:<mode>:<prec>[:aN][:gG]"` (see
-    /// [`DecodePipeline`](super::DecodePipeline)); artifact-free,
-    /// session-ful (open → step × N → close)
+    /// streaming decode route `"decode:<mode>:<prec>[:aN][:gG][:pP]"`
+    /// (see [`DecodePipeline`](super::DecodePipeline)); artifact-free,
+    /// session-ful (open → [prefill] → step × N → close), steps batched
+    /// into `DecodeStepBatch` waves per serving round
     pub decode: Option<String>,
 }
 
@@ -424,22 +425,15 @@ fn process_batch(
         TaskKind::Decode => match &pipes.decode {
             None => vec![Reply::Error("no decode route".into()); batch.len()],
             Some(p) => {
-                // session-ful: requests are processed strictly in arrival
-                // order (opens bind ids, steps grow their session's paged
-                // prefix, closes free pages); per-request replies so one
-                // bad step cannot fail its batchmates
-                batch
-                    .iter()
-                    .map(|r| {
-                        let res = match &r.payload {
-                            Payload::DecodeOpen => p.open(),
-                            Payload::DecodeStep { session, q, k, v } => p.step(*session, q, k, v),
-                            Payload::DecodeClose(s) => p.close(*s),
-                            _ => unreachable!(),
-                        };
-                        res.unwrap_or_else(|e| Reply::Error(e.to_string()))
-                    })
-                    .collect()
+                // session-ful, batch-scheduled: replies stay in arrival
+                // order, but every maximal run of consecutive steps
+                // coalesces into a `DecodeStepBatch` round — ONE
+                // head-scatter wave over all the sessions stepped in it
+                // (bit-identical to per-request serial processing; see the
+                // wire contract in `coordinator::request`). Per-request
+                // replies, so one bad step cannot fail its batchmates.
+                let payloads: Vec<&Payload> = batch.iter().map(|r| &r.payload).collect();
+                p.run_batch(&payloads)
             }
         },
     };

@@ -277,6 +277,43 @@ pub fn simulate_decode(design: &Design, cfg: DecodeSimConfig) -> SimReport {
     }
 }
 
+/// Fixed per-wave scheduling cost of a decode serving round, in cycles:
+/// waking the head-task pool, fetching page tables and setting up the
+/// page gather. Paid once per *round* when rounds are batched
+/// ([`simulate_decode_batched`]), once per *session* per round when they
+/// are not — the amortization the software `DecodeBatch` wave buys.
+const WAVE_SETUP_CYCLES: u64 = 64;
+
+/// Cycle model of `sessions` concurrent streaming-decode sessions served
+/// round-robin — the hwsim mirror of the coordinator's `DecodeStepBatch`
+/// rounds over [`crate::attention::DecodeBatch`].
+///
+/// Every session runs the full [`simulate_decode`] work (the MAC /
+/// softmax / gather cycles and energy scale by `sessions` — batching
+/// never changes the computed work, just as the software wave is
+/// bit-identical to serial steps). The difference is scheduling:
+/// `batched = true` pays [`WAVE_SETUP_CYCLES`] once per serving round
+/// (one wave covers all sessions' head rows); `batched = false` models
+/// PR 3's per-request scatters, paying it once per session per round.
+/// The cycle delta is exactly `(S − 1) · seq_len · WAVE_SETUP_CYCLES`.
+pub fn simulate_decode_batched(
+    design: &Design,
+    cfg: DecodeSimConfig,
+    sessions: usize,
+    batched: bool,
+) -> SimReport {
+    let one = simulate_decode(design, cfg);
+    let s = sessions.max(1) as u64;
+    let rounds = cfg.seq_len as u64;
+    let wakes = if batched { rounds } else { rounds * s };
+    SimReport {
+        cycles: s * one.cycles + wakes * WAVE_SETUP_CYCLES,
+        energy: s as f64 * one.energy,
+        elems: s * one.elems,
+        ..one
+    }
+}
+
 /// Row-parallel aggregate: `units` independent softmax units each process
 /// a contiguous block of rows — the hwsim mirror of
 /// [`crate::softmax::ParSoftmax`]'s sharding. Latency is the slowest
@@ -454,6 +491,44 @@ mod tests {
         let short = simulate_decode(&d, cfg);
         let long = simulate_decode(&d, DecodeSimConfig { seq_len: 64, ..cfg });
         assert!(long.cycles > 2 * short.cycles);
+    }
+
+    #[test]
+    fn batched_decode_rounds_amortize_the_wave_setup() {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 8,
+            kv_heads: 2,
+            seq_len: 32,
+            d_head: 32,
+            page_size: 16,
+            lanes: 4,
+        };
+        for s in [1usize, 4, 16] {
+            let batched = simulate_decode_batched(&d, cfg, s, true);
+            let serial = simulate_decode_batched(&d, cfg, s, false);
+            // same computed work either way — batching is scheduling only
+            assert_eq!(batched.energy, serial.energy, "s={s}");
+            assert_eq!(batched.elems, serial.elems);
+            assert_eq!(batched.elems, s as u64 * (8 * 32 * 33 / 2) as u64);
+            // one wake per round instead of one per session per round
+            assert_eq!(
+                serial.cycles - batched.cycles,
+                (s as u64 - 1) * 32 * WAVE_SETUP_CYCLES,
+                "s={s}"
+            );
+            if s == 1 {
+                assert_eq!(batched.cycles, serial.cycles, "one session: nothing to amortize");
+            } else {
+                assert!(batched.cycles < serial.cycles, "s={s}");
+            }
+        }
+        // energy/elem is flat in S; cycles/elem strictly improves with
+        // batching at S > 1
+        let b16 = simulate_decode_batched(&d, cfg, 16, true);
+        let s16 = simulate_decode_batched(&d, cfg, 16, false);
+        assert!(b16.cycles_per_elem() < s16.cycles_per_elem());
+        assert_eq!(b16.energy_per_elem(), s16.energy_per_elem());
     }
 
     #[test]

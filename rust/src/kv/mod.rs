@@ -303,6 +303,39 @@ impl KvPool {
         Ok(())
     }
 
+    /// Pages a further `extra_tokens` appends to `seq` would have to
+    /// allocate — the admission check of the block/batched append paths.
+    pub fn pages_needed(&self, seq: &KvSeq, extra_tokens: usize) -> usize {
+        (seq.len + extra_tokens).div_ceil(self.cfg.page_size) - seq.pages.len()
+    }
+
+    /// Append a whole block of tokens (`tokens * kv_heads * d_head` each
+    /// for K and V, `[t][g][d]` row-major) to `seq` — the chunked-prefill
+    /// ingest path. **Atomic**: capacity for the entire block is checked
+    /// up front, and on [`KvError::Exhausted`] the sequence (and the
+    /// arena) is left exactly as it was, so the caller can retry the same
+    /// chunk after capacity frees up. Token-for-token identical to
+    /// `tokens` single [`KvPool::append`] calls (same slots, same sums,
+    /// same page-table growth).
+    pub fn append_block(
+        &mut self,
+        seq: &mut KvSeq,
+        k_rows: &[i8],
+        v_rows: &[i8],
+    ) -> Result<(), KvError> {
+        let gd = self.cfg.kv_heads * self.cfg.d_head;
+        assert_eq!(k_rows.len() % gd, 0, "k block must be tokens * kv_heads * d_head");
+        assert_eq!(k_rows.len(), v_rows.len(), "k/v blocks must match");
+        let tokens = k_rows.len() / gd;
+        if self.pages_needed(seq, tokens) > self.free.len() {
+            return Err(KvError::Exhausted { pages: self.cfg.pages });
+        }
+        for (kr, vr) in k_rows.chunks_exact(gd).zip(v_rows.chunks_exact(gd)) {
+            self.append(seq, kr, vr).expect("block capacity reserved above");
+        }
+        Ok(())
+    }
+
     /// Return a sequence's pages to the free list; the `KvSeq` is
     /// consumed (it is the unique owner of those page-table entries).
     /// Returns the number of pages freed.
@@ -453,6 +486,54 @@ mod tests {
         assert_eq!(b.len(), 1);
         assert_eq!(pool.close(b), 1);
         assert_eq!(pool.free_pages(), 4, "free list round-trips to initial");
+    }
+
+    #[test]
+    fn append_block_is_atomic_and_token_identical_to_single_appends() {
+        let mut rng = Rng::new(7);
+        let (g, d) = (2usize, 8usize);
+        let mut pool_a = pool4();
+        let mut pool_b = pool4();
+        let mut a = seq_for(&pool_a);
+        let mut b = seq_for(&pool_b);
+        // 10 tokens in chunks of [3, 1, 6] vs 10 single appends
+        let kblock = rand_row(&mut rng, 10 * g * d);
+        let vblock = rand_row(&mut rng, 10 * g * d);
+        let mut off = 0usize;
+        for chunk in [3usize, 1, 6] {
+            let n = chunk * g * d;
+            pool_a
+                .append_block(&mut a, &kblock[off..off + n], &vblock[off..off + n])
+                .unwrap();
+            off += n;
+        }
+        for t in 0..10 {
+            let n = g * d;
+            pool_b
+                .append(&mut b, &kblock[t * n..(t + 1) * n], &vblock[t * n..(t + 1) * n])
+                .unwrap();
+        }
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.pages().len(), b.pages().len());
+        for (pi, (&pa, &pb)) in a.pages().iter().zip(b.pages()).enumerate() {
+            for gi in 0..g {
+                assert_eq!(pool_a.page_k(pa, gi), pool_b.page_k(pb, gi), "page {pi}");
+                assert_eq!(pool_a.page_v(pa, gi), pool_b.page_v(pb, gi), "page {pi}");
+                assert_eq!(pool_a.page_ksum(pa, gi), pool_b.page_ksum(pb, gi), "page {pi}");
+            }
+        }
+        // atomicity: 10 tokens hold 3 pages of 4; a 8-token block needs 2
+        // more pages but only 1 is free -> nothing changes
+        assert_eq!(pool_a.pages_needed(&a, 8), 2);
+        let err = pool_a.append_block(&mut a, &kblock[..8 * g * d], &vblock[..8 * g * d]);
+        assert_eq!(err, Err(KvError::Exhausted { pages: 4 }));
+        assert_eq!(a.len(), 10, "failed block must not land partially");
+        assert_eq!(pool_a.free_pages(), 1);
+        // a block that fits the tail slots + last page still lands
+        pool_a.append_block(&mut a, &kblock[..6 * g * d], &vblock[..6 * g * d]).unwrap();
+        assert_eq!(a.len(), 16);
+        assert_eq!(pool_a.free_pages(), 0);
+        assert_eq!(pool_a.close(a), 4);
     }
 
     #[test]

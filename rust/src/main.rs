@@ -186,7 +186,7 @@ fn serve_decode(
     // the route's gG fixes the stored-head count the server accepts;
     // generate matching traffic (absent: MHA)
     let g = lutmax::attention::parse_decode_route(variant)
-        .and_then(|(_, _, _, g)| g)
+        .and_then(|r| r.kv_heads)
         .unwrap_or(h);
     let sessions = (steps / 8).clamp(1, 8);
     let t0 = std::time::Instant::now();
@@ -196,6 +196,21 @@ fn serve_decode(
             Reply::Session(id) => ids.push(id),
             Reply::Error(e) => return Err(anyhow!("open failed: {e}")),
             other => return Err(anyhow!("unexpected open reply {other:?}")),
+        }
+    }
+    // chunked prefill: seed every session with a short prompt block (the
+    // open → prefill → step lifecycle the route serves in production)
+    let prefill_tokens = 3usize;
+    for &id in &ids {
+        let (q, k, v) = workload::decode_prefill_chunk(rng, prefill_tokens, h, g, d, 1.0);
+        match c.call(Payload::DecodePrefill { session: id, q, k, v })? {
+            Reply::Prefill(t) => {
+                if t.dims != vec![prefill_tokens, h, d] {
+                    return Err(anyhow!("prefill reply has shape {:?}", t.dims));
+                }
+            }
+            Reply::Error(e) => return Err(anyhow!("prefill failed: {e}")),
+            other => return Err(anyhow!("unexpected prefill reply {other:?}")),
         }
     }
     let gaps = workload::poisson_arrivals_us(rng, steps, rate);

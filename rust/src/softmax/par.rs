@@ -229,6 +229,22 @@ impl ParSoftmax {
         self.min_rows_per_shard
     }
 
+    /// Inline-vs-scatter decision for a [`ParSoftmax::scatter`] wave of
+    /// `rows` independent row tasks: `true` means the wave is too small to
+    /// be worth a pool wake and the submitter should compute inline.
+    ///
+    /// Callers MUST ask with the **whole wave's** row count. A batched
+    /// decode round over S sessions of H query heads each is ONE wave of
+    /// S×H rows — asking per session (with H) double-counts the pool wake
+    /// S times and keeps row-rich waves inline; that accounting bug is
+    /// regression-tested in `integration_par.rs`
+    /// (`wave_accounting_counts_the_whole_waves_rows`). The threshold is
+    /// the same `min_rows_per_shard` policy the pool applies to softmax
+    /// batches, so one [`ParSoftmax::with_policy`] knob tunes both.
+    pub fn scatter_stays_inline(&self, rows: usize) -> bool {
+        self.pool.workers() <= 1 || rows < 2 || rows < self.min_rows_per_shard
+    }
+
     /// The wrapped sequential engine.
     pub fn inner(&self) -> &dyn SoftmaxEngine {
         &*self.inner

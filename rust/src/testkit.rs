@@ -3,6 +3,18 @@
 //! A small deterministic PRNG (splitmix64 core + xoshiro256**) plus
 //! generator helpers and a [`check`] runner that reports the failing seed
 //! so any counterexample is reproducible with `PROP_SEED=<n> cargo test`.
+//!
+//! Also home of the **differential conformance sweep**
+//! ([`conformance_sweep`]): one deterministic case table over
+//! {mode, prec, affine (dyadic / non-dyadic), L, H, G, page_size, mask}
+//! that `rust/tests/integration_conformance.rs` drives through every
+//! standing cross-layer invariant. Future PRs extend THIS table (a new
+//! axis, a wider range) instead of re-deriving ad-hoc per-test
+//! generators; `CONFORMANCE_FULL=1` (the CI `test-heavy` gate) widens
+//! the budget.
+
+use crate::lut::Precision;
+use crate::softmax::Mode;
 
 /// xoshiro256** seeded via splitmix64 — deterministic, fast, no deps.
 #[derive(Clone, Debug)]
@@ -106,9 +118,151 @@ pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: usize, mut f: F) {
     }
 }
 
+/// Mask axis of the conformance sweep (mirrors
+/// `crate::attention::AttnMask` without depending on it — tests map it,
+/// generating PAD lengths from the case seed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskKind {
+    Dense,
+    Causal,
+    Padding,
+}
+
+/// One point of the differential conformance sweep. Every field is
+/// derived deterministically from the case index, so a failing case
+/// reproduces from its `Debug` printout alone; `seed` feeds the
+/// per-case data [`Rng`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConformanceCase {
+    pub mode: Mode,
+    pub prec: Precision,
+    /// dyadic affine scales make i8 dequantization exact in f32 — the
+    /// precondition of the bit-exactness invariants; non-dyadic cases
+    /// exercise the fixed-point `IntMap` path
+    pub dyadic: bool,
+    pub scale: f32,
+    pub zero_point: i32,
+    /// softmax batch rows
+    pub rows: usize,
+    /// softmax row length
+    pub n: usize,
+    /// query heads (H)
+    pub heads: usize,
+    /// stored K/V heads (G ∈ {1, H/2, H}, divides H)
+    pub kv_heads: usize,
+    pub d_head: usize,
+    /// decode sequence length (T)
+    pub seq_len: usize,
+    pub page_size: usize,
+    pub mask: MaskKind,
+    pub seed: u64,
+}
+
+/// `true` when the heavy CI sweep budget is requested
+/// (`CONFORMANCE_FULL=1`, the `make test-heavy` gate).
+pub fn conformance_full() -> bool {
+    std::env::var("CONFORMANCE_FULL").map_or(false, |v| v == "1")
+}
+
+/// The deterministic conformance case table. The discrete axes ({mode} ×
+/// {prec} × {dyadic} × {page_size} × {mask}) rotate round-robin so even
+/// the small budget touches every value of every axis; sizes and affines
+/// come from the per-case PRNG. Small budget under plain `cargo test -q`;
+/// `CONFORMANCE_FULL=1` widens both the case count and the size ranges.
+pub fn conformance_sweep() -> Vec<ConformanceCase> {
+    let full = conformance_full();
+    let budget = if full { 96 } else { 16 };
+    let modes = [Mode::Rexp, Mode::Lut2d];
+    let precs = [Precision::Uint8, Precision::Int16, Precision::Uint4, Precision::Uint2];
+    let dyadic_scales = [1.0f32, 0.5, 0.25, 0.0625, 2.0];
+    let nondyadic_scales = [0.37f32, 0.1, 0.75, 1.3];
+    let page_sizes = [8usize, 64];
+    let masks = [MaskKind::Dense, MaskKind::Causal, MaskKind::Padding];
+    let max_seq = if full { 40 } else { 24 };
+    let mut out = Vec::with_capacity(budget);
+    for i in 0..budget {
+        let mut rng = Rng::new(0x5EED_0000 + i as u64);
+        // decomposed strides so the discrete axes CROSS instead of
+        // collapsing: {mode × dyadic × prec} is a full 2×2×4 product every
+        // 16 cases, and page/mask strides are chosen so both modes see
+        // every page size and mask within the small budget
+        let dyadic = (i / 2) % 2 == 0;
+        let heads = *rng.choice(&[1usize, 2, 4, 8]);
+        let mut groupings = vec![heads];
+        if heads > 1 {
+            groupings.push(1);
+            groupings.push(heads / 2);
+        }
+        out.push(ConformanceCase {
+            mode: modes[i % modes.len()],
+            prec: precs[(i / 4) % precs.len()],
+            dyadic,
+            scale: if dyadic {
+                *rng.choice(&dyadic_scales)
+            } else {
+                *rng.choice(&nondyadic_scales)
+            },
+            zero_point: rng.int(-24, 24) as i32,
+            rows: rng.usize(1, if full { 16 } else { 8 }),
+            n: rng.usize(1, if full { 128 } else { 96 }),
+            heads,
+            kv_heads: *rng.choice(&groupings),
+            d_head: *rng.choice(&[4usize, 8, 16]),
+            seq_len: rng.usize(3, max_seq),
+            page_size: page_sizes[(i / 3) % page_sizes.len()],
+            mask: masks[i % masks.len()],
+            seed: 0xC0DE_0000 + i as u64,
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn conformance_sweep_is_deterministic_and_well_formed() {
+        let a = conformance_sweep();
+        let b = conformance_sweep();
+        assert_eq!(a, b, "two sweeps must be identical");
+        assert!(a.len() >= 16);
+        let mut dyadic_seen = (false, false);
+        for c in &a {
+            assert!(c.heads >= 1 && c.kv_heads >= 1);
+            assert_eq!(c.heads % c.kv_heads, 0, "{c:?}");
+            assert!(c.n >= 1 && c.rows >= 1 && c.seq_len >= 3);
+            assert!(c.scale > 0.0);
+            assert!(matches!(c.page_size, 8 | 64));
+            if c.dyadic {
+                dyadic_seen.0 = true;
+                assert!(
+                    [1.0f32, 0.5, 0.25, 0.0625, 2.0].contains(&c.scale),
+                    "{c:?} scale not dyadic"
+                );
+            } else {
+                dyadic_seen.1 = true;
+            }
+        }
+        assert!(dyadic_seen.0 && dyadic_seen.1, "both affine classes swept");
+        // every discrete axis value appears even at the small budget —
+        // and mode × dyadic genuinely crosses (both engines get both
+        // affine classes)
+        for m in [Mode::Rexp, Mode::Lut2d] {
+            for dy in [true, false] {
+                assert!(
+                    a.iter().any(|c| c.mode == m && c.dyadic == dy),
+                    "{m:?} dyadic={dy} missing from the sweep"
+                );
+            }
+        }
+        for p in [Precision::Uint8, Precision::Int16, Precision::Uint4, Precision::Uint2] {
+            assert!(a.iter().any(|c| c.prec == p), "{p:?} missing");
+        }
+        for mk in [MaskKind::Dense, MaskKind::Causal, MaskKind::Padding] {
+            assert!(a.iter().any(|c| c.mask == mk));
+        }
+    }
 
     #[test]
     fn deterministic() {

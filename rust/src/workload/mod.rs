@@ -110,6 +110,35 @@ pub fn decode_qkv_step(
     )
 }
 
+/// A chunked-prefill block of `tokens` steps: f32 q `(T', q_heads,
+/// d_head)` and k/v `(T', kv_heads, d_head)`, entries ~ N(0, scale) —
+/// the prompt-ingest payload of the decode route
+/// (`Payload::DecodePrefill`), shaped so row `t` is exactly one
+/// [`decode_qkv_step`]'s worth of activations.
+pub fn decode_prefill_chunk(
+    rng: &mut Rng,
+    tokens: usize,
+    q_heads: usize,
+    kv_heads: usize,
+    d_head: usize,
+    scale: f32,
+) -> (Tensor, Tensor, Tensor) {
+    (
+        Tensor::f32(
+            vec![tokens, q_heads, d_head],
+            rng.normal_vec(tokens * q_heads * d_head, scale),
+        ),
+        Tensor::f32(
+            vec![tokens, kv_heads, d_head],
+            rng.normal_vec(tokens * kv_heads * d_head, scale),
+        ),
+        Tensor::f32(
+            vec![tokens, kv_heads, d_head],
+            rng.normal_vec(tokens * kv_heads * d_head, scale),
+        ),
+    )
+}
+
 /// A multi-sequence decode trace: per-session generation lengths in
 /// `[min_steps, max_steps]` — the shape of a serving run where sessions
 /// open, stream that many steps, and close.
@@ -211,6 +240,11 @@ mod tests {
         let lens = decode_session_lens(&mut rng, 40, 3, 17);
         assert_eq!(lens.len(), 40);
         assert!(lens.iter().all(|&l| (3..=17).contains(&l)));
+        let (q, k, v) = decode_prefill_chunk(&mut rng, 5, 8, 2, 64, 1.0);
+        assert_eq!(q.dims, vec![5, 8, 64]);
+        assert_eq!(k.dims, vec![5, 2, 64]);
+        assert_eq!(v.dims, vec![5, 2, 64]);
+        assert!(q.as_f32().unwrap().iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -1,0 +1,282 @@
+//! Differential conformance harness — every standing cross-layer
+//! invariant of the softmax/attention/decode stack, driven by ONE
+//! deterministic case table (`testkit::conformance_sweep`, the
+//! {mode, prec, affine, L, H, G, page_size, mask} sweep).
+//!
+//! The invariants, one test each (future PRs extend the sweep table or
+//! add a test here instead of re-deriving ad-hoc generators):
+//!
+//! 1. `run_i8_with == run_i8_int · 1/qmax` — always, both LUT engines,
+//!    every precision, dyadic or not.
+//! 2. `run_i8_int == run_int ∘ dequantize` — bit-exact for dyadic
+//!    affine scales (the integer pass 1 reproduces the f32 datapath).
+//! 3. fused attention == the same-mode unfused compose within an MAE
+//!    bound (the quantized integer path adds only quantization error).
+//! 4. T decode steps (any mix of single steps and `prefill_chunk`
+//!    blocks) == ONE length-T causal `FusedAttention` prefill,
+//!    bit-identical; the KV free list round-trips on close.
+//! 5. `ParSoftmax` == the wrapped sequential engine, bit-identical, f32
+//!    and i8 ingestion.
+//!
+//! `cargo test -q` runs the small sweep; `CONFORMANCE_FULL=1` (the CI
+//! `test-heavy` gate, `make test-heavy`) widens it.
+
+use lutmax::attention::{
+    AttnMask, AttnScratch, AttnShape, ComposedAttention, DecodeAttention, FusedAttention,
+    QuantTensor,
+};
+use lutmax::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
+use lutmax::lut::Precision;
+use lutmax::quant;
+use lutmax::softmax::{
+    engine, engine_parallel, IntRow, Mode, SoftmaxEngine, SoftmaxLut2d, SoftmaxRexp,
+};
+use lutmax::testkit::{conformance_sweep, ConformanceCase, MaskKind, Rng};
+use lutmax::workload;
+
+/// Integer-stage and f32 outputs of the case's LUT engine on an i8 batch.
+fn lut_i8_outputs(case: &ConformanceCase, x: &[i8], n: usize, row: IntRow) -> (Vec<i32>, Vec<f32>) {
+    let mut ints = vec![0i32; x.len()];
+    match case.mode {
+        Mode::Rexp => {
+            let e = SoftmaxRexp::new(case.prec, None);
+            e.run_i8_int(x, n, row, &mut ints);
+            (ints, e.apply_i8(x, n, row))
+        }
+        Mode::Lut2d => {
+            let e = SoftmaxLut2d::new(case.prec);
+            e.run_i8_int(x, n, row, &mut ints);
+            (ints, e.apply_i8(x, n, row))
+        }
+        other => unreachable!("sweep holds LUT modes only, got {other:?}"),
+    }
+}
+
+/// Integer-stage output of the case's LUT engine on an f32 batch.
+fn lut_f32_ints(case: &ConformanceCase, x: &[f32], n: usize) -> Vec<i32> {
+    let mut ints = vec![0i32; x.len()];
+    match case.mode {
+        Mode::Rexp => SoftmaxRexp::new(case.prec, None).run_int(x, n, &mut ints),
+        Mode::Lut2d => SoftmaxLut2d::new(case.prec).run_int(x, n, &mut ints),
+        other => unreachable!("sweep holds LUT modes only, got {other:?}"),
+    }
+    ints
+}
+
+fn i8_batch(rng: &mut Rng, len: usize) -> Vec<i8> {
+    (0..len).map(|_| rng.int(-128, 127) as i8).collect()
+}
+
+fn mask_for(case: &ConformanceCase, rng: &mut Rng, batch: usize, len_k: usize) -> AttnMask {
+    match case.mask {
+        MaskKind::Dense => AttnMask::Dense,
+        MaskKind::Causal => AttnMask::Causal,
+        MaskKind::Padding => AttnMask::Padding(workload::attn_pad_lens(rng, batch, len_k)),
+    }
+}
+
+/// Invariant 1: the f32 output of the i8 fast path IS the integer stage
+/// times `1/qmax` — for every swept precision and affine class.
+#[test]
+fn i8_output_is_integer_stage_times_inv_qmax() {
+    for case in conformance_sweep() {
+        let mut rng = Rng::new(case.seed);
+        let row = IntRow::new(case.scale, case.zero_point);
+        let x = i8_batch(&mut rng, case.rows * case.n);
+        let (ints, got) = lut_i8_outputs(&case, &x, case.n, row);
+        let inv = 1.0 / case.prec.qmax() as f32;
+        let want: Vec<f32> = ints.iter().map(|&v| v as f32 * inv).collect();
+        assert_eq!(got, want, "{case:?}");
+    }
+}
+
+/// Invariant 2: for dyadic affine scales the pure-integer pass 1 is
+/// bit-exact with the f32 datapath on dequantized inputs.
+#[test]
+fn dyadic_i8_ingestion_bit_exact_with_f32_datapath() {
+    for case in conformance_sweep().iter().filter(|c| c.dyadic) {
+        let mut rng = Rng::new(case.seed);
+        let row = IntRow::new(case.scale, case.zero_point);
+        let x = i8_batch(&mut rng, case.rows * case.n);
+        let deq: Vec<f32> = x
+            .iter()
+            .map(|&q| (q as i32 - row.zero_point) as f32 * row.scale)
+            .collect();
+        let (ints, _) = lut_i8_outputs(case, &x, case.n, row);
+        let want = lut_f32_ints(case, &deq, case.n);
+        assert_eq!(ints, want, "{case:?}");
+    }
+}
+
+/// Invariant 3: the fused integer kernel tracks the same-mode unfused
+/// f32 compose within an MAE bound — the integer path (i8 quantization,
+/// fixed-point score map, integer MACs) adds only quantization-level
+/// error on top of the mode's own approximation. Deployment precisions
+/// (uint8 / int16) only: at uint4/uint2 the *approximation* error
+/// dominates any bound tight enough to be useful.
+#[test]
+fn fused_attention_tracks_composed_within_mae() {
+    for case in conformance_sweep()
+        .iter()
+        .filter(|c| matches!(c.prec, Precision::Uint8 | Precision::Int16))
+    {
+        let mut rng = Rng::new(case.seed);
+        let shape = AttnShape::square(1, case.heads, 64, 32);
+        let mask = mask_for(case, &mut rng, shape.batch, shape.len_k);
+        let qf = rng.normal_vec(shape.q_len(), 1.0);
+        let kf = rng.normal_vec(shape.kv_len(), 1.0);
+        let vf = rng.normal_vec(shape.kv_len(), 1.0);
+        let fused = FusedAttention::new(case.mode, case.prec, None).unwrap();
+        let alpha = match case.mode {
+            Mode::Rexp => Some(lutmax::attention::ATTN_ALPHA_LEN),
+            _ => None,
+        };
+        let composed = ComposedAttention::new(engine(case.mode, case.prec, alpha));
+        let mut got = vec![0.0f32; shape.q_len()];
+        let mut scr = AttnScratch::new();
+        fused.run(
+            &QuantTensor::quantize(&qf),
+            &QuantTensor::quantize(&kf),
+            &QuantTensor::quantize(&vf),
+            &shape,
+            &mask,
+            &mut got,
+            &mut scr,
+        );
+        let mut want = vec![0.0f32; shape.q_len()];
+        composed.run_f32(&qf, &kf, &vf, &shape, &mask, &mut want);
+        let mae: f64 = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / got.len() as f64;
+        assert!(mae < 0.05, "{case:?}: fused-vs-composed MAE {mae}");
+    }
+}
+
+/// Gather the step-t rows out of a `(heads, T, d)` row-major block.
+fn step_rows(data: &[i8], heads: usize, t_total: usize, d: usize, t: usize) -> Vec<i8> {
+    let mut out = vec![0i8; heads * d];
+    for h in 0..heads {
+        out[h * d..(h + 1) * d].copy_from_slice(&data[h * t_total * d + t * d..][..d]);
+    }
+    out
+}
+
+/// `(G, T, d)` grouped block → the `(H, T, d)` layout prefill expects.
+fn expand_groups(data: &[i8], groups: &HeadGroups, t_total: usize, d: usize) -> Vec<i8> {
+    let h = groups.q_heads();
+    let mut out = vec![0i8; h * t_total * d];
+    for hh in 0..h {
+        let g = groups.group_of(hh);
+        out[hh * t_total * d..(hh + 1) * t_total * d]
+            .copy_from_slice(&data[g * t_total * d..(g + 1) * t_total * d]);
+    }
+    out
+}
+
+/// Invariant 4: decoding T tokens — as any mix of single steps and
+/// `prefill_chunk` blocks — is bit-identical to ONE length-T causal
+/// prefill through the fused kernel, across the whole
+/// {mode, prec, H, G, page_size} sweep; the free list round-trips.
+#[test]
+fn decode_any_step_chunk_mix_equals_causal_prefill() {
+    for case in conformance_sweep() {
+        let mut rng = Rng::new(case.seed);
+        let (h, g, d, t_total) = (case.heads, case.kv_heads, case.d_head, case.seq_len);
+        let groups = HeadGroups::new(h, g).unwrap();
+        let (qd, qa) = quant::quantize(&rng.normal_vec(h * t_total * d, 1.0));
+        let (kd, ka) = quant::quantize(&rng.normal_vec(g * t_total * d, 1.0));
+        let (vd, va) = quant::quantize(&rng.normal_vec(g * t_total * d, 1.0));
+
+        // the reference: one causal prefill of the full sequence
+        let shape = AttnShape::square(1, h, t_total, d);
+        let fused = FusedAttention::new(case.mode, case.prec, None).unwrap();
+        let mut want = vec![0.0f32; shape.q_len()];
+        let mut scr = AttnScratch::new();
+        fused.run(
+            &QuantTensor { data: qd.clone(), affine: qa },
+            &QuantTensor { data: expand_groups(&kd, &groups, t_total, d), affine: ka },
+            &QuantTensor { data: expand_groups(&vd, &groups, t_total, d), affine: va },
+            &shape,
+            &AttnMask::Causal,
+            &mut want,
+            &mut scr,
+        );
+
+        // the candidate: steps and chunks in a random mix
+        let dec = DecodeAttention::new(case.mode, case.prec, None).unwrap();
+        let pages = t_total.div_ceil(case.page_size) + 2;
+        let mut kv = KvPool::new(KvConfig {
+            pages,
+            page_size: case.page_size,
+            kv_heads: g,
+            d_head: d,
+        });
+        let mut seq = KvSeq::new(groups, ka, va);
+        let mut dscr = AttnScratch::new();
+        let mut t = 0usize;
+        while t < t_total {
+            let chunk = rng.usize(1, (t_total - t).min(5));
+            let check = |got: &[f32], tt: usize| {
+                for hh in 0..h {
+                    assert_eq!(
+                        &got[hh * d..(hh + 1) * d],
+                        &want[hh * t_total * d + tt * d..][..d],
+                        "{case:?} step {tt} head {hh}"
+                    );
+                }
+            };
+            if chunk == 1 {
+                let qrow = step_rows(&qd, h, t_total, d, t);
+                let krow = step_rows(&kd, g, t_total, d, t);
+                let vrow = step_rows(&vd, g, t_total, d, t);
+                let mut got = vec![0.0f32; h * d];
+                dec.step(&mut kv, &mut seq, &qrow, qa, &krow, &vrow, &mut got, &mut dscr)
+                    .unwrap();
+                check(&got, t);
+            } else {
+                // assemble the [t][h][d] / [t][g][d] chunk blocks
+                let mut qc = Vec::with_capacity(chunk * h * d);
+                let mut kc = Vec::with_capacity(chunk * g * d);
+                let mut vc = Vec::with_capacity(chunk * g * d);
+                for tt in t..t + chunk {
+                    qc.extend(step_rows(&qd, h, t_total, d, tt));
+                    kc.extend(step_rows(&kd, g, t_total, d, tt));
+                    vc.extend(step_rows(&vd, g, t_total, d, tt));
+                }
+                let mut got = vec![0.0f32; chunk * h * d];
+                dec.prefill_chunk(&mut kv, &mut seq, &qc, qa, &kc, &vc, &mut got, &mut dscr)
+                    .unwrap();
+                for (i, tt) in (t..t + chunk).enumerate() {
+                    check(&got[i * h * d..(i + 1) * h * d], tt);
+                }
+            }
+            t += chunk;
+        }
+        assert_eq!(seq.len(), t_total, "{case:?}");
+        kv.close(seq);
+        assert_eq!(kv.free_pages(), pages, "{case:?}: free list must round-trip");
+    }
+}
+
+/// Invariant 5: the row-parallel pool is `==` with the wrapped
+/// sequential engine — f32 and i8 ingestion, every swept shape.
+#[test]
+fn par_pool_bit_exact_with_sequential_engine() {
+    for case in conformance_sweep() {
+        let mut rng = Rng::new(case.seed);
+        let seq = engine(case.mode, case.prec, None);
+        let par = engine_parallel(case.mode, case.prec, None, Some(4));
+        let x = rng.normal_vec(case.rows * case.n, 2.0);
+        assert_eq!(par.apply(&x, case.n), seq.apply(&x, case.n), "{case:?} (f32)");
+        let row = IntRow::new(case.scale, case.zero_point);
+        let xi = i8_batch(&mut rng, case.rows * case.n);
+        assert_eq!(
+            par.apply_i8(&xi, case.n, row),
+            seq.apply_i8(&xi, case.n, row),
+            "{case:?} (i8)"
+        );
+    }
+}

@@ -1,0 +1,548 @@
+//! Batched decode correctness anchors:
+//!
+//! * **the anchor property**: one `DecodeBatch` wave over S ∈ {1, 4, 16}
+//!   sessions is `==`-bit-identical to S serial `DecodeAttention::step`
+//!   calls in ANY interleaving order, across G ∈ {1, H/2, H}, page sizes
+//!   {8, 64} and both LUT modes; `prefill_chunk(T')` is bit-identical to
+//!   T' single steps (unit-tested in `attention::decode`, swept by the
+//!   conformance harness, exercised here through the serving pipeline).
+//! * **interleaving property**: randomized open / prefill / step / close
+//!   schedules over many sessions through `DecodePipeline::run_batch`
+//!   (the `DecodeStepBatch` rounds) reply bit-identically to a
+//!   per-session serial replay, and the KV free list exactly round-trips
+//!   after all closes.
+//! * **exhaustion under batching**: `KvError::Exhausted` mid-wave fails
+//!   only its own session — batchmates' tokens in the same round are
+//!   unaffected (bit-identical to their serial replay) and the failed
+//!   step is retryable after a close frees pages.
+
+use lutmax::attention::{
+    AttnScratch, DecodeAttention, DecodeBatch, DecodeStepTask, DECODE_AFFINE,
+};
+use lutmax::coordinator::{DecodePipeline, Payload, Reply};
+use lutmax::kv::{HeadGroups, KvConfig, KvError, KvPool, KvSeq};
+use lutmax::lut::Precision;
+use lutmax::quant;
+use lutmax::runtime::Tensor;
+use lutmax::softmax::{engine_parallel, Mode};
+use lutmax::testkit::Rng;
+use lutmax::workload;
+
+use lutmax::softmax::ParSoftmax;
+
+fn i8_row(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.int(-96, 96) as i8).collect()
+}
+
+fn wave_rows(rng: &mut Rng, s: usize, n: usize) -> Vec<Vec<i8>> {
+    (0..s).map(|_| i8_row(rng, n)).collect()
+}
+
+/// Drive one `DecodeBatch` round: one task per session over `seqs`,
+/// outputs pre-filled with `fill` (a sentinel, so failed tasks are
+/// checkable), returning the per-task results and the outputs.
+#[allow(clippy::too_many_arguments)]
+fn run_wave(
+    batch: &DecodeBatch<'_>,
+    kv: &mut KvPool,
+    seqs: &mut [KvSeq],
+    qs: &[Vec<i8>],
+    ks: &[Vec<i8>],
+    vs: &[Vec<i8>],
+    pool: &ParSoftmax,
+    scr: &mut AttnScratch,
+    fill: f32,
+    out_len: usize,
+) -> (Vec<Result<(), KvError>>, Vec<Vec<f32>>) {
+    let mut outs = vec![vec![fill; out_len]; seqs.len()];
+    let mut tasks: Vec<DecodeStepTask<'_>> = seqs
+        .iter_mut()
+        .zip(outs.iter_mut())
+        .enumerate()
+        .map(|(i, (seq, out))| DecodeStepTask {
+            seq,
+            q: &qs[i],
+            q_affine: DECODE_AFFINE,
+            k_row: &ks[i],
+            v_row: &vs[i],
+            out,
+        })
+        .collect();
+    let res = batch.step_wave(kv, &mut tasks, pool, scr);
+    drop(tasks);
+    (res, outs)
+}
+
+/// The acceptance-criteria sweep: one batched wave over S sessions ==
+/// S serial steps in a shuffled order, every round, across S, G, page
+/// size and mode.
+#[test]
+fn batched_wave_bit_identical_to_serial_steps_in_any_order() {
+    let (h, d, t_total) = (4usize, 16usize, 10usize);
+    let a = DECODE_AFFINE;
+    let mut rng = Rng::new(501);
+    for &s in &[1usize, 4, 16] {
+        for &g in &[1usize, 2, 4] {
+            // G ∈ {1, H/2, H}
+            for &page_size in &[8usize, 64] {
+                for mode in [Mode::Rexp, Mode::Lut2d] {
+                    let pages = s * t_total.div_ceil(page_size) + 2;
+                    let cfg = KvConfig { pages, page_size, kv_heads: g, d_head: d };
+                    let (mut kv_w, mut kv_s) = (KvPool::new(cfg), KvPool::new(cfg));
+                    let groups = HeadGroups::new(h, g).unwrap();
+                    let mut wave_seqs: Vec<KvSeq> =
+                        (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+                    let mut ser_seqs: Vec<KvSeq> =
+                        (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+                    let dec = DecodeAttention::new(mode, Precision::Uint8, None).unwrap();
+                    let batch = DecodeBatch::new(&dec);
+                    let pool = engine_parallel(mode, Precision::Uint8, None, Some(4));
+                    let mut scr = AttnScratch::new();
+                    for round in 0..t_total {
+                        let qs = wave_rows(&mut rng, s, h * d);
+                        let ks = wave_rows(&mut rng, s, g * d);
+                        let vs = wave_rows(&mut rng, s, g * d);
+                        let (res, wave_out) = run_wave(
+                            &batch, &mut kv_w, &mut wave_seqs, &qs, &ks, &vs, &pool, &mut scr,
+                            0.0, h * d,
+                        );
+                        assert!(res.iter().all(|r| r.is_ok()), "{mode:?} s={s} round {round}");
+                        // serial replay in a random interleaving order
+                        let mut order: Vec<usize> = (0..s).collect();
+                        for i in (1..order.len()).rev() {
+                            order.swap(i, rng.usize(0, i));
+                        }
+                        for &i in &order {
+                            let mut want = vec![0.0f32; h * d];
+                            dec.step(
+                                &mut kv_s,
+                                &mut ser_seqs[i],
+                                &qs[i],
+                                a,
+                                &ks[i],
+                                &vs[i],
+                                &mut want,
+                                &mut scr,
+                            )
+                            .unwrap();
+                            assert_eq!(
+                                wave_out[i], want,
+                                "{mode:?} s={s} g={g} page={page_size} round {round} session {i}"
+                            );
+                        }
+                    }
+                    for seq in wave_seqs {
+                        kv_w.close(seq);
+                    }
+                    assert_eq!(kv_w.free_pages(), pages, "wave arena round-trips");
+                    for seq in ser_seqs {
+                        kv_s.close(seq);
+                    }
+                    assert_eq!(kv_s.free_pages(), pages, "serial arena round-trips");
+                }
+            }
+        }
+    }
+}
+
+/// Long-prefix waves must actually reach the pool and stay `==` — the
+/// scattered and inline paths of `step_wave` agree with serial steps.
+#[test]
+fn scattered_waves_stay_bit_identical() {
+    let (s, h, g, d, t_total) = (4usize, 4usize, 2usize, 64usize, 40usize);
+    let a = DECODE_AFFINE;
+    let mut rng = Rng::new(502);
+    let cfg = KvConfig { pages: 16, page_size: 16, kv_heads: g, d_head: d };
+    let (mut kv_w, mut kv_s) = (KvPool::new(cfg), KvPool::new(cfg));
+    let groups = HeadGroups::new(h, g).unwrap();
+    let mut wave_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+    let mut ser_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let batch = DecodeBatch::new(&dec);
+    let pool = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+    let mut scr = AttnScratch::new();
+    for round in 0..t_total {
+        let qs = wave_rows(&mut rng, s, h * d);
+        let ks = wave_rows(&mut rng, s, g * d);
+        let vs = wave_rows(&mut rng, s, g * d);
+        let (res, wave_out) =
+            run_wave(&batch, &mut kv_w, &mut wave_seqs, &qs, &ks, &vs, &pool, &mut scr, 0.0, h * d);
+        assert!(res.iter().all(|r| r.is_ok()));
+        for i in 0..s {
+            let mut want = vec![0.0f32; h * d];
+            dec.step(&mut kv_s, &mut ser_seqs[i], &qs[i], a, &ks[i], &vs[i], &mut want, &mut scr)
+                .unwrap();
+            assert_eq!(wave_out[i], want, "round {round} session {i}");
+        }
+    }
+    assert!(
+        pool.parallel_batches() > 0,
+        "long-prefix waves (16 rows, deep prefixes) must scatter"
+    );
+    for seq in wave_seqs {
+        kv_w.close(seq);
+    }
+    for seq in ser_seqs {
+        kv_s.close(seq);
+    }
+}
+
+/// The scattered prefill sweep (`prefill_chunk_par`, what the serving
+/// route runs) is bit-identical to the sequential one, for chunks big
+/// enough to fan out over the pool AND for tiny inline chunks.
+#[test]
+fn prefill_chunk_par_bit_identical_and_scatters() {
+    let (h, g, d, t) = (4usize, 2usize, 64usize, 24usize);
+    let a = DECODE_AFFINE;
+    let cfg = KvConfig { pages: 4, page_size: 16, kv_heads: g, d_head: d };
+    let (mut kv_a, mut kv_b) = (KvPool::new(cfg), KvPool::new(cfg));
+    let groups = HeadGroups::new(h, g).unwrap();
+    let mut sa = KvSeq::new(groups, a, a);
+    let mut sb = KvSeq::new(groups, a, a);
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let pool = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+    let mut rng = Rng::new(506);
+    let mut scr = AttnScratch::new();
+    // 24 tokens x 4 heads x d 64: chunk MACs far above MIN_HEAD_MACS
+    let q = i8_row(&mut rng, t * h * d);
+    let ks = i8_row(&mut rng, t * g * d);
+    let vs = i8_row(&mut rng, t * g * d);
+    let mut seq_out = vec![0.0f32; t * h * d];
+    let mut par_out = vec![0.0f32; t * h * d];
+    dec.prefill_chunk(&mut kv_a, &mut sa, &q, a, &ks, &vs, &mut seq_out, &mut scr).unwrap();
+    dec.prefill_chunk_par(&mut kv_b, &mut sb, &q, a, &ks, &vs, &pool, &mut par_out, &mut scr)
+        .unwrap();
+    assert_eq!(seq_out, par_out, "scattered prefill must be bit-identical");
+    assert!(pool.parallel_batches() > 0, "a 24-token, 4-head chunk must scatter");
+    kv_a.close(sa);
+    kv_b.close(sb);
+    // a tiny chunk on fresh sequences stays inline (under MIN_HEAD_MACS)
+    let waken = pool.parallel_batches();
+    let (mut sa, mut sb) = (KvSeq::new(groups, a, a), KvSeq::new(groups, a, a));
+    let t2 = 2usize;
+    let q2 = i8_row(&mut rng, t2 * h * d);
+    let k2 = i8_row(&mut rng, t2 * g * d);
+    let v2 = i8_row(&mut rng, t2 * g * d);
+    let mut o1 = vec![0.0f32; t2 * h * d];
+    let mut o2 = vec![0.0f32; t2 * h * d];
+    dec.prefill_chunk(&mut kv_a, &mut sa, &q2, a, &k2, &v2, &mut o1, &mut scr).unwrap();
+    dec.prefill_chunk_par(&mut kv_b, &mut sb, &q2, a, &k2, &v2, &pool, &mut o2, &mut scr)
+        .unwrap();
+    assert_eq!(o1, o2);
+    assert_eq!(pool.parallel_batches(), waken, "a 2-token chunk must stay inline");
+    kv_a.close(sa);
+    kv_b.close(sb);
+}
+
+/// Exhaustion mid-wave: the starved session fails alone, batchmates'
+/// outputs are bit-identical to serial, and the failed step succeeds
+/// after a close frees pages.
+#[test]
+fn exhaustion_mid_wave_leaves_batchmates_bit_identical() {
+    let (s, h, g, d) = (3usize, 2usize, 1usize, 4usize);
+    let a = DECODE_AFFINE;
+    let mut rng = Rng::new(503);
+    // 5 pages x 2 slots: rounds 1-2 hold 3 pages, round 3 needs 3 more
+    // but only 2 are free -> the third session in wave order starves
+    let cfg = KvConfig { pages: 5, page_size: 2, kv_heads: g, d_head: d };
+    let big = KvConfig { pages: 16, ..cfg };
+    let (mut kv_w, mut kv_s) = (KvPool::new(cfg), KvPool::new(big));
+    let groups = HeadGroups::new(h, g).unwrap();
+    let mut wave_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+    let mut ser_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+    let dec = DecodeAttention::new(Mode::Lut2d, Precision::Uint8, None).unwrap();
+    let batch = DecodeBatch::new(&dec);
+    let pool = engine_parallel(Mode::Lut2d, Precision::Uint8, None, Some(3));
+    let mut scr = AttnScratch::new();
+    let mut starved: Option<(Vec<i8>, Vec<i8>, Vec<i8>)> = None;
+    for round in 0..3 {
+        let qs = wave_rows(&mut rng, s, h * d);
+        let ks = wave_rows(&mut rng, s, g * d);
+        let vs = wave_rows(&mut rng, s, g * d);
+        let (res, wave_out) =
+            run_wave(&batch, &mut kv_w, &mut wave_seqs, &qs, &ks, &vs, &pool, &mut scr, 7.0, h * d);
+        if round < 2 {
+            assert!(res.iter().all(|r| r.is_ok()), "round {round}");
+        } else {
+            assert_eq!(res[0], Ok(()));
+            assert_eq!(res[1], Ok(()));
+            assert_eq!(res[2], Err(KvError::Exhausted { pages: 5 }));
+            assert!(
+                wave_out[2].iter().all(|&o| o == 7.0),
+                "starved session's output must be untouched"
+            );
+            assert_eq!(wave_seqs[2].len(), 2, "starved sequence must not advance");
+            starved = Some((qs[2].clone(), ks[2].clone(), vs[2].clone()));
+        }
+        // batchmates (and, before exhaustion, everyone) match serial
+        for i in 0..s {
+            if round == 2 && i == 2 {
+                continue;
+            }
+            let mut want = vec![0.0f32; h * d];
+            dec.step(&mut kv_s, &mut ser_seqs[i], &qs[i], a, &ks[i], &vs[i], &mut want, &mut scr)
+                .unwrap();
+            assert_eq!(wave_out[i], want, "round {round} session {i}");
+        }
+    }
+    // a close frees pages; the starved step retries and matches the
+    // serial replay of the same (third) step
+    let victim = wave_seqs.remove(0);
+    assert_eq!(kv_w.close(victim), 2);
+    let (q2, k2, v2) = starved.unwrap();
+    let mut retry_out = vec![0.0f32; h * d];
+    {
+        let mut tasks = vec![DecodeStepTask {
+            seq: &mut wave_seqs[1],
+            q: &q2,
+            q_affine: a,
+            k_row: &k2,
+            v_row: &v2,
+            out: &mut retry_out,
+        }];
+        let res = batch.step_wave(&mut kv_w, &mut tasks, &pool, &mut scr);
+        assert_eq!(res, vec![Ok(())], "retry after reclaim must succeed");
+    }
+    let mut want = vec![0.0f32; h * d];
+    dec.step(&mut kv_s, &mut ser_seqs[2], &q2, a, &k2, &v2, &mut want, &mut scr).unwrap();
+    assert_eq!(retry_out, want, "retried step must match the serial replay");
+    for seq in wave_seqs {
+        kv_w.close(seq);
+    }
+    assert_eq!(kv_w.free_pages(), 5, "free list round-trips after the hammering");
+    for seq in ser_seqs {
+        kv_s.close(seq);
+    }
+}
+
+/// A session event in the randomized pipeline schedule.
+enum Ev {
+    Prefill(Tensor, Tensor, Tensor),
+    Step(Tensor, Tensor, Tensor),
+    Close,
+}
+
+/// Randomized open / prefill / step / close schedules through the
+/// serving pipeline's `DecodeStepBatch` rounds: every reply bit-matches
+/// a per-session serial replay, and the arena round-trips after all
+/// closes.
+#[test]
+fn interleaved_pipeline_schedules_replay_bit_identical() {
+    let (h, g, d) = (4usize, 2usize, 32usize);
+    let p = DecodePipeline::load("decode:rexp:uint8:g2", 3).unwrap();
+    let mut rng = Rng::new(504);
+    let n_sessions = 5usize;
+
+    // per-session traces: an optional prompt chunk, then 3..8 steps
+    let mut queues: Vec<std::collections::VecDeque<Ev>> = (0..n_sessions)
+        .map(|_| {
+            let mut q = std::collections::VecDeque::new();
+            let chunk = rng.usize(0, 3);
+            if chunk > 0 {
+                let (cq, ck, cv) = workload::decode_prefill_chunk(&mut rng, chunk, h, g, d, 1.0);
+                q.push_back(Ev::Prefill(cq, ck, cv));
+            }
+            for _ in 0..rng.usize(3, 8) {
+                let (sq, sk, sv) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+                q.push_back(Ev::Step(sq, sk, sv));
+            }
+            q.push_back(Ev::Close);
+            q
+        })
+        .collect();
+
+    // open every session in one batch
+    let opens: Vec<Payload> = (0..n_sessions).map(|_| Payload::DecodeOpen).collect();
+    let refs: Vec<&Payload> = opens.iter().collect();
+    let ids: Vec<u64> = p
+        .run_batch(&refs)
+        .into_iter()
+        .map(|r| match r {
+            Reply::Session(id) => id,
+            other => panic!("unexpected open reply {other:?}"),
+        })
+        .collect();
+
+    // drive randomized batches until every queue drains; duplicate steps
+    // for one session in one batch exercise the sub-wave ordering
+    let mut replies: Vec<Vec<Reply>> = vec![Vec::new(); n_sessions];
+    while queues.iter().any(|q| !q.is_empty()) {
+        let mut payloads: Vec<Payload> = Vec::new();
+        let mut reply_owner: Vec<usize> = Vec::new();
+        for si in 0..n_sessions {
+            let mut takes = 0usize;
+            while !queues[si].is_empty() && takes < 2 && rng.bool(if takes == 0 { 0.7 } else { 0.3 })
+            {
+                // only steps may repeat within a batch; stop at barriers
+                let is_step = matches!(queues[si].front(), Some(Ev::Step(..)));
+                if takes == 1 && !is_step {
+                    break;
+                }
+                let ev = queues[si].pop_front().unwrap();
+                payloads.push(match ev {
+                    Ev::Prefill(q, k, v) => Payload::DecodePrefill { session: ids[si], q, k, v },
+                    Ev::Step(q, k, v) => Payload::DecodeStep { session: ids[si], q, k, v },
+                    Ev::Close => Payload::DecodeClose(ids[si]),
+                });
+                reply_owner.push(si);
+                takes += 1;
+            }
+        }
+        if payloads.is_empty() {
+            continue;
+        }
+        let refs: Vec<&Payload> = payloads.iter().collect();
+        for (reply, &si) in p.run_batch(&refs).into_iter().zip(&reply_owner) {
+            replies[si].push(reply);
+        }
+    }
+
+    // the arena round-trips after all closes
+    let (free, total) = p.kv_pages().expect("pool bound by the schedule");
+    assert_eq!(free, total, "KV free list must exactly round-trip");
+
+    // serial replay, per session, against the collected replies
+    let a = DECODE_AFFINE;
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let mut rng = Rng::new(504); // regenerate the identical traces
+    let mut scr = AttnScratch::new();
+    for si in 0..n_sessions {
+        let mut kv = KvPool::new(KvConfig { pages: 8, page_size: 16, kv_heads: g, d_head: d });
+        let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+        let mut got = replies[si].iter();
+        let chunk = rng.usize(0, 3);
+        if chunk > 0 {
+            let (cq, ck, cv) = workload::decode_prefill_chunk(&mut rng, chunk, h, g, d, 1.0);
+            let mut qb = vec![0i8; chunk * h * d];
+            let mut kb = vec![0i8; chunk * g * d];
+            let mut vb = vec![0i8; chunk * g * d];
+            quant::quantize_into(cq.as_f32().unwrap(), a, &mut qb);
+            quant::quantize_into(ck.as_f32().unwrap(), a, &mut kb);
+            quant::quantize_into(cv.as_f32().unwrap(), a, &mut vb);
+            let mut want = vec![0.0f32; chunk * h * d];
+            dec.prefill_chunk(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr).unwrap();
+            match got.next() {
+                Some(Reply::Prefill(t)) => {
+                    assert_eq!(t.dims, vec![chunk, h, d]);
+                    assert_eq!(t.as_f32().unwrap(), &want[..], "session {si} prefill");
+                }
+                other => panic!("session {si}: expected Prefill, got {other:?}"),
+            }
+        }
+        let steps = rng.usize(3, 8);
+        for t in 0..steps {
+            let (sq, sk, sv) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+            let mut qb = vec![0i8; h * d];
+            let mut kb = vec![0i8; g * d];
+            let mut vb = vec![0i8; g * d];
+            quant::quantize_into(sq.as_f32().unwrap(), a, &mut qb);
+            quant::quantize_into(sk.as_f32().unwrap(), a, &mut kb);
+            quant::quantize_into(sv.as_f32().unwrap(), a, &mut vb);
+            let mut want = vec![0.0f32; h * d];
+            dec.step(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr).unwrap();
+            match got.next() {
+                Some(Reply::Token(out)) => {
+                    assert_eq!(out.as_f32().unwrap(), &want[..], "session {si} step {t}");
+                }
+                other => panic!("session {si} step {t}: expected Token, got {other:?}"),
+            }
+        }
+        match got.next() {
+            Some(Reply::Closed { pages }) => {
+                assert_eq!(*pages, seq.pages().len(), "session {si} close");
+            }
+            other => panic!("session {si}: expected Closed, got {other:?}"),
+        }
+        assert!(got.next().is_none(), "session {si}: no extra replies");
+        kv.close(seq);
+    }
+}
+
+/// Exhaustion through the serving route (`pP` sizes the arena): the
+/// starved step in a batched round replies a retryable error, batchmates
+/// stream on, and a close unblocks the retry.
+#[test]
+fn route_exhaustion_in_a_batched_round_is_isolated_and_retryable() {
+    let (h, g, d) = (2usize, 1usize, 4usize);
+    // 2 pages x 16 slots: the third session's first step cannot allocate
+    let p = DecodePipeline::load("decode:rexp:uint8:p2", 2).unwrap();
+    let mut rng = Rng::new(505);
+    let opens = vec![Payload::DecodeOpen, Payload::DecodeOpen, Payload::DecodeOpen];
+    let refs: Vec<&Payload> = opens.iter().collect();
+    let ids: Vec<u64> = p
+        .run_batch(&refs)
+        .into_iter()
+        .map(|r| match r {
+            Reply::Session(id) => id,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+
+    let steps: Vec<(Tensor, Tensor, Tensor)> =
+        (0..3).map(|_| workload::decode_qkv_step(&mut rng, h, g, d, 1.0)).collect();
+    let batch: Vec<Payload> = ids
+        .iter()
+        .zip(&steps)
+        .map(|(&id, (q, k, v))| Payload::DecodeStep {
+            session: id,
+            q: q.clone(),
+            k: k.clone(),
+            v: v.clone(),
+        })
+        .collect();
+    let refs: Vec<&Payload> = batch.iter().collect();
+    let replies = p.run_batch(&refs);
+    assert!(matches!(replies[0], Reply::Token(_)), "{:?}", replies[0]);
+    assert!(matches!(replies[1], Reply::Token(_)), "{:?}", replies[1]);
+    match &replies[2] {
+        Reply::Error(e) => assert!(e.contains("exhausted"), "{e}"),
+        other => panic!("starved step must error, got {other:?}"),
+    }
+    // batchmate replies are bit-identical to a serial local replay
+    let a = DECODE_AFFINE;
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let mut kv = KvPool::new(KvConfig { pages: 2, page_size: 16, kv_heads: g, d_head: d });
+    let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+    let mut scr = AttnScratch::new();
+    let (q0, k0, v0) = &steps[0];
+    let mut qb = vec![0i8; h * d];
+    let mut kb = vec![0i8; g * d];
+    let mut vb = vec![0i8; g * d];
+    quant::quantize_into(q0.as_f32().unwrap(), a, &mut qb);
+    quant::quantize_into(k0.as_f32().unwrap(), a, &mut kb);
+    quant::quantize_into(v0.as_f32().unwrap(), a, &mut vb);
+    let mut want = vec![0.0f32; h * d];
+    dec.step(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr).unwrap();
+    match &replies[0] {
+        Reply::Token(t) => assert_eq!(t.as_f32().unwrap(), &want[..]),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // retry while still full: same typed backpressure
+    let (q2, k2, v2) = steps[2].clone();
+    let retry = Payload::DecodeStep { session: ids[2], q: q2.clone(), k: k2.clone(), v: v2.clone() };
+    match &p.run_batch(&[&retry])[0] {
+        Reply::Error(e) => assert!(e.contains("exhausted"), "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    // close a batchmate -> the retry lands
+    let close = Payload::DecodeClose(ids[0]);
+    match &p.run_batch(&[&close])[0] {
+        Reply::Closed { pages } => assert_eq!(*pages, 1),
+        other => panic!("unexpected {other:?}"),
+    }
+    let retry = Payload::DecodeStep { session: ids[2], q: q2, k: k2, v: v2 };
+    assert!(
+        matches!(&p.run_batch(&[&retry])[0], Reply::Token(_)),
+        "retry after reclaim must serve"
+    );
+    let (free, total) = p.kv_pages().unwrap();
+    assert_eq!(total, 2, "pP must size the arena");
+    assert_eq!(free, 0);
+    for id in &ids[1..] {
+        let close = Payload::DecodeClose(*id);
+        assert!(matches!(&p.run_batch(&[&close])[0], Reply::Closed { .. }));
+    }
+    let (free, total) = p.kv_pages().unwrap();
+    assert_eq!((free, total), (2, 2), "arena round-trips after all closes");
+}

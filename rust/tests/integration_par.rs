@@ -151,6 +151,105 @@ fn par_i8_ingestion_bit_exact_and_thresholded() {
 }
 
 #[test]
+fn wave_accounting_counts_the_whole_waves_rows() {
+    use lutmax::attention::{
+        AttnScratch, DecodeAttention, DecodeBatch, DecodeStepTask, DECODE_AFFINE,
+    };
+    use lutmax::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
+
+    // the accounting itself: scatter_stays_inline is asked with the WHOLE
+    // wave's row count, and applies the pool's min_rows_per_shard policy
+    let p = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+    assert!(p.scatter_stays_inline(0));
+    assert!(p.scatter_stays_inline(1));
+    assert!(p.scatter_stays_inline(3), "3 rows sit under the 4-row default");
+    assert!(!p.scatter_stays_inline(4), "a 4-row wave is worth a wake");
+    let eager = ParSoftmax::with_policy(Arc::from(engine(Mode::Rexp, Precision::Uint8, None)), 4, 1);
+    assert!(!eager.scatter_stays_inline(2), "threshold 1: any 2-row wave fans out");
+    let solo = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(1));
+    assert!(solo.scatter_stays_inline(64), "1-worker pools never scatter");
+
+    // regression (batched-wave task accounting): a single session's step
+    // is H = 2 rows — under the default threshold, inline forever. A
+    // 4-session wave of the SAME steps is S x H = 8 rows and MUST fan
+    // out once the wave carries enough MACs; counting per session (H)
+    // would keep it inline. Both paths stay == with serial.
+    let (s, h, g, d, rounds) = (4usize, 2usize, 1usize, 32usize, 20usize);
+    let a = DECODE_AFFINE;
+    let cfg = KvConfig { pages: 4 * s, page_size: 16, kv_heads: g, d_head: d };
+    let (mut kv_w, mut kv_s) = (KvPool::new(cfg), KvPool::new(cfg));
+    let groups = HeadGroups::new(h, g).unwrap();
+    let mut wave_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+    let mut ser_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let batch = DecodeBatch::new(&dec);
+    let wave_pool = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+    let single_pool = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+    let mut rng = testkit::Rng::new(41);
+    let mut scr = AttnScratch::new();
+    for _ in 0..rounds {
+        let qs: Vec<Vec<i8>> = (0..s)
+            .map(|_| (0..h * d).map(|_| rng.int(-96, 96) as i8).collect())
+            .collect();
+        let ks: Vec<Vec<i8>> = (0..s)
+            .map(|_| (0..g * d).map(|_| rng.int(-96, 96) as i8).collect())
+            .collect();
+        let vs: Vec<Vec<i8>> = (0..s)
+            .map(|_| (0..g * d).map(|_| rng.int(-96, 96) as i8).collect())
+            .collect();
+        let mut wave_out = vec![vec![0.0f32; h * d]; s];
+        let mut tasks: Vec<DecodeStepTask<'_>> = wave_seqs
+            .iter_mut()
+            .zip(wave_out.iter_mut())
+            .enumerate()
+            .map(|(i, (seq, out))| DecodeStepTask {
+                seq,
+                q: &qs[i],
+                q_affine: a,
+                k_row: &ks[i],
+                v_row: &vs[i],
+                out,
+            })
+            .collect();
+        let res = batch.step_wave(&mut kv_w, &mut tasks, &wave_pool, &mut scr);
+        assert!(res.iter().all(|r| r.is_ok()));
+        drop(tasks);
+        for i in 0..s {
+            let mut want = vec![0.0f32; h * d];
+            dec.step_par(
+                &mut kv_s,
+                &mut ser_seqs[i],
+                &qs[i],
+                a,
+                &ks[i],
+                &vs[i],
+                &single_pool,
+                &mut want,
+                &mut scr,
+            )
+            .unwrap();
+            assert_eq!(wave_out[i], want, "session {i}");
+        }
+    }
+    assert!(
+        wave_pool.parallel_batches() > 0,
+        "an 8-row wave with enough total MACs must fan out"
+    );
+    assert_eq!(
+        single_pool.parallel_batches(),
+        0,
+        "the same steps per-session are 2-row batches: inline forever \
+         (this asymmetry is exactly what the wave accounting fixes)"
+    );
+    for seq in wave_seqs {
+        kv_w.close(seq);
+    }
+    for seq in ser_seqs {
+        kv_s.close(seq);
+    }
+}
+
+#[test]
 fn scatter_tasks_share_the_pool_and_cover_all_indices() {
     use std::sync::atomic::{AtomicUsize, Ordering};
     let par = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(3));
