@@ -13,7 +13,15 @@
 //!   attn_unfused/h<H>/L<L>  the separate-pass compose (dequant, f32
 //!                         QK^T, softmax, ×V) — attn/* must be >= 1.3x
 //!   decode/h<H>/g<G>/L<L> L-step streaming decode over the paged i8 KV
-//!                         cache (uint8 rexp, page 16)
+//!                         cache (uint8 rexp, page 16) — pinned to the
+//!                         HEAD-major sweep (pages re-read once per
+//!                         query head), the pre-PR-5 reference
+//!   decode_groupmajor/h<H>/g<G>/L<L>  the same fleet swept GROUP-major
+//!                         (pages read once per KV group per step, the
+//!                         product path) — identical MAC work and
+//!                         bit-identical outputs, so the delta vs
+//!                         decode/* is pure K/V read amplification
+//!                         (expect ≥ decode/* wherever G < H)
 //!   decode_gqa_vs_mha     the grouped-query config of the decode pair
 //!                         (h8/g2/L128) under a stable semantic label —
 //!                         compare against decode/h8/g8/L128 across
@@ -28,7 +36,7 @@ use std::sync::Arc;
 
 use lutmax::attention::{
     AttnMask, AttnScratch, AttnShape, ComposedAttention, DecodeAttention, DecodeBatch,
-    FusedAttention, QuantTensor, DECODE_AFFINE,
+    FusedAttention, QuantTensor, SweepOrder, DECODE_AFFINE,
 };
 use lutmax::benchkit::{flush_json, Bench, Suite};
 use lutmax::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
@@ -172,9 +180,12 @@ fn main() {
     // the paged i8 KV cache. items = score elements Σ_t H·t — the same
     // work measure as attn/*, so element throughput is comparable. The
     // h8/g8 vs h8/g2 pair is the MHA-vs-GQA story: identical MAC work,
-    // 1/4 the stored K/V traffic.
+    // 1/4 the stored K/V traffic. decode/* keeps the head-major sweep as
+    // the stable baseline; decode_groupmajor/* runs the identical fleet
+    // through the group-major product path, so that ratio is the pure
+    // read-amplification saving (expect ≥ 1x, growing as H/G grows).
     let mut suite = Suite::new("streaming decode over paged KV (uint8 rexp, page 16)");
-    let mut decode_case = |label: String, h: usize, g: usize, l: usize| {
+    let mut decode_case = |label: String, h: usize, g: usize, l: usize, order: SweepOrder| {
         let d = 64usize;
         let a = DECODE_AFFINE;
         let mut kv = KvPool::new(KvConfig {
@@ -184,7 +195,7 @@ fn main() {
             d_head: d,
         });
         let groups = HeadGroups::new(h, g).unwrap();
-        let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let dec = DecodeAttention::with_order(Mode::Rexp, Precision::Uint8, None, order).unwrap();
         let mut step_rng = Rng::new(77);
         let qs: Vec<Vec<i8>> = (0..l)
             .map(|_| (0..h * d).map(|_| step_rng.int(-64, 64) as i8).collect())
@@ -206,16 +217,22 @@ fn main() {
             kv.close(seq);
         }));
     };
-    decode_case("decode/h4/g4/L64".into(), 4, 4, 64);
-    decode_case("decode/h8/g8/L128".into(), 8, 8, 128);
-    decode_case("decode/h8/g2/L128".into(), 8, 2, 128);
+    decode_case("decode/h4/g4/L64".into(), 4, 4, 64, SweepOrder::HeadMajor);
+    decode_case("decode/h8/g8/L128".into(), 8, 8, 128, SweepOrder::HeadMajor);
+    decode_case("decode/h8/g2/L128".into(), 8, 2, 128, SweepOrder::HeadMajor);
     // the GQA side again under its stable semantic label (see header)
-    decode_case("decode_gqa_vs_mha".into(), 8, 2, 128);
+    decode_case("decode_gqa_vs_mha".into(), 8, 2, 128, SweepOrder::HeadMajor);
+    // the same fleet, group-major: the delta is pure read amplification
+    decode_case("decode_groupmajor/h4/g4/L64".into(), 4, 4, 64, SweepOrder::GroupMajor);
+    decode_case("decode_groupmajor/h8/g8/L128".into(), 8, 8, 128, SweepOrder::GroupMajor);
+    decode_case("decode_groupmajor/h8/g2/L128".into(), 8, 2, 128, SweepOrder::GroupMajor);
     suite.ratio("decode/h8/g2/L128", "decode/h8/g8/L128");
     suite.ratio("decode_gqa_vs_mha", "decode/h8/g8/L128");
+    suite.ratio("decode_groupmajor/h8/g2/L128", "decode/h8/g2/L128");
+    suite.ratio("decode_groupmajor/h8/g8/L128", "decode/h8/g8/L128");
 
     // batched decode rounds: S concurrent sessions stream L tokens; every
-    // round is ONE DecodeBatch head-scatter wave of S×H rows over the
+    // round is ONE DecodeBatch scatter wave of S×G group tasks over the
     // worker pool (decode_batch/*) vs S per-session step_par scatters
     // (decode_batch_serial/*) — identical MAC work, identical outputs,
     // the delta is pool wakes + task accounting. items = total score

@@ -6,10 +6,13 @@
 //! pool wakes per serving round, and short-prefix steps never reached the
 //! pool at all because `H` alone sits under the row threshold.
 //! [`DecodeBatch`] collects the per-step work of a whole round into one
-//! wave of `S × H` independent head-row tasks and submits it as a single
-//! [`ParSoftmax::scatter`], so the wake (and the page-gather setup) is
-//! amortized across every session in the round — the batch-shaped
-//! datapath A³/SOLE assume, mirrored in hwsim by
+//! wave of independent sweep tasks — `S × G` *group* tasks under the
+//! group-major order (each sweeping its KV pages once for all `H/G`
+//! query heads of the group, the PR 5 read-amplification fix), or
+//! `S × H` head-row tasks under the head-major reference — and submits
+//! it as a single [`ParSoftmax::scatter`], so the wake (and the
+//! page-gather setup) is amortized across every session in the round —
+//! the batch-shaped datapath A³/SOLE assume, mirrored in hwsim by
 //! [`crate::hwsim::simulate_decode_batched`].
 //!
 //! # The anchor property (ordering + bit-reproducibility)
@@ -23,11 +26,11 @@
 //!   pages owned by their sequence, so sessions cannot observe each
 //!   other's appends — only the *page-id assignment* depends on order,
 //!   and no output ever reads a page id.
-//! * **phase 2 (parallel)**: each head-row task is a pure function of
-//!   its own sequence's pages and the step plan (the same
+//! * **phase 2 (parallel)**: each sweep task is a pure function of
+//!   its own sequence's pages and the step plan (the same `group_step` /
 //!   `head_step` expressions a serial step runs), and writes a disjoint
-//!   `d_head` block of its task's output. Scatter order is therefore
-//!   unobservable.
+//!   output block (one group's contiguous `H/G · d_head`, or one head's
+//!   `d_head`). Scatter order is therefore unobservable.
 //!
 //! Exhaustion is per-task: a session whose append hits
 //! [`KvError::Exhausted`] fails alone (its output untouched, its
@@ -37,13 +40,16 @@
 //!
 //! # Wave accounting
 //!
-//! The inline-vs-scatter decision counts the WHOLE wave's rows (`S × H`)
-//! and MACs, via [`ParSoftmax::scatter_stays_inline`] — counting per
-//! session would keep row-rich waves inline (the PR 4 fix,
-//! regression-tested in `integration_par.rs`).
+//! The inline-vs-scatter decision counts the WHOLE wave's head rows
+//! (`S × H`) and MACs — counting per session would keep row-rich waves
+//! inline (the PR 4 fix, regression-tested in `integration_par.rs`) —
+//! and since group tasks are `H/G×` heavier than head rows, the pool's
+//! row threshold is asked with MAC-weighted row equivalents
+//! (`wave_stays_inline`, shared with `step_par` / `prefill_chunk_par`),
+//! never the raw task count.
 
-use super::decode::{check_step_shapes, StepPlan};
-use super::kernel::{AttnScratch, OutPtr, MIN_HEAD_MACS};
+use super::decode::{check_step_shapes, StepPlan, SweepOrder};
+use super::kernel::{wave_stays_inline, AttnScratch, OutPtr};
 use super::DecodeAttention;
 use crate::kv::{KvError, KvPool, KvSeq};
 use crate::quant::Affine;
@@ -65,20 +71,27 @@ pub struct DecodeStepTask<'a> {
     pub out: &'a mut [f32],
 }
 
-/// The batched decode scheduler's kernel layer: one wave of `S × H`
-/// head-row tasks per serving round over a shared [`DecodeAttention`].
-/// See the module docs for the ordering / bit-reproducibility contract.
+/// The batched decode scheduler's kernel layer: one wave of `S × G`
+/// group tasks (or `S × H` head rows under the head-major reference
+/// order) per serving round over a shared [`DecodeAttention`]. See the
+/// module docs for the ordering / bit-reproducibility contract.
 pub struct DecodeBatch<'d> {
     dec: &'d DecodeAttention,
 }
 
-struct HeadTask<'b> {
+/// One sweep unit of a batched round: a KV group (group-major) or a
+/// single query head (head-major) of one session's step.
+struct SweepTask<'b> {
     seq: &'b KvSeq,
-    /// this head's `d_head` query slice
-    qh: &'b [i8],
+    /// the unit's query rows: a group's contiguous `H/G · d_head` block,
+    /// or one head's `d_head` slice
+    q: &'b [i8],
     plan: StepPlan,
-    /// query-head index within its session
-    h: usize,
+    /// group index (group-major) or query-head index (head-major)
+    /// within the session
+    unit: usize,
+    /// elements of the unit's output block at `out`
+    out_len: usize,
     out: OutPtr,
 }
 
@@ -95,10 +108,12 @@ impl<'d> DecodeBatch<'d> {
 
     /// One batched decode round: append every task's token (phase 1,
     /// serial, per-task exhaustion), then attend all surviving tasks'
-    /// `S × H` head rows in ONE [`ParSoftmax::scatter`] wave (phase 2) —
-    /// or inline when the whole wave is under the pool's row threshold /
-    /// [`MIN_HEAD_MACS`] of total work. Returns one result per task, in
-    /// task order; failed tasks' sequences and outputs are untouched.
+    /// sweep units (`S × G` group tasks, or `S × H` head rows
+    /// head-major) in ONE [`ParSoftmax::scatter`] wave (phase 2) — or
+    /// inline when the whole wave sits under the shared accounting
+    /// (`wave_stays_inline`: total MACs + MAC-weighted row equivalents).
+    /// Returns one result per task, in task order; failed tasks'
+    /// sequences and outputs are untouched.
     pub fn step_wave(
         &self,
         kv: &mut KvPool,
@@ -113,51 +128,83 @@ impl<'d> DecodeBatch<'d> {
             .map(|t| kv.append(t.seq, t.k_row, t.v_row))
             .collect();
 
-        // phase 2: flatten the surviving tasks into head rows
+        // phase 2: flatten the surviving tasks into sweep units
         let kv_ref: &KvPool = kv;
         let d = kv_ref.config().d_head;
-        let mut heads: Vec<HeadTask<'_>> = Vec::new();
+        let order = self.dec.order();
+        let mut units: Vec<SweepTask<'_>> = Vec::new();
+        let mut wave_rows = 0usize;
         let mut wave_macs = 0usize;
-        for (t, r) in tasks.iter_mut().zip(&results) {
-            if r.is_err() {
+        for (t, res) in tasks.iter_mut().zip(&results) {
+            if res.is_err() {
                 continue;
             }
             let h = t.seq.groups().q_heads();
             check_step_shapes(t.q, t.out, h, d);
             let plan = self.dec.plan(t.seq, d, t.q_affine);
+            wave_rows += h;
             wave_macs += h * t.seq.len() * d;
             let seq: &KvSeq = t.seq;
             let optr = t.out.as_mut_ptr();
-            for hh in 0..h {
-                heads.push(HeadTask {
-                    seq,
-                    qh: &t.q[hh * d..(hh + 1) * d],
-                    plan,
-                    h: hh,
-                    // SAFETY: within `out`'s `h * d` allocation (shape
-                    // checked above); blocks are disjoint per head
-                    out: OutPtr(unsafe { optr.add(hh * d) }),
-                });
+            match order {
+                SweepOrder::HeadMajor => {
+                    for hh in 0..h {
+                        units.push(SweepTask {
+                            seq,
+                            q: &t.q[hh * d..(hh + 1) * d],
+                            plan,
+                            unit: hh,
+                            out_len: d,
+                            // SAFETY: within `out`'s `h * d` allocation
+                            // (shape checked above); disjoint per head
+                            out: OutPtr(unsafe { optr.add(hh * d) }),
+                        });
+                    }
+                }
+                SweepOrder::GroupMajor => {
+                    let r = seq.groups().group_size();
+                    for gi in 0..seq.groups().kv_heads() {
+                        units.push(SweepTask {
+                            seq,
+                            q: &t.q[gi * r * d..(gi * r + r) * d],
+                            plan,
+                            unit: gi,
+                            out_len: r * d,
+                            // SAFETY: within `out`'s `h * d` allocation
+                            // (shape checked above); disjoint per group
+                            out: OutPtr(unsafe { optr.add(gi * r * d) }),
+                        });
+                    }
+                }
             }
         }
 
-        // wave accounting: the WHOLE round's rows and MACs decide the
-        // inline-vs-scatter trade (never per session — the PR 4 fix)
-        if pool.scatter_stays_inline(heads.len()) || wave_macs < MIN_HEAD_MACS {
-            for ht in &heads {
-                let oh = unsafe { std::slice::from_raw_parts_mut(ht.out.0, d) };
-                self.dec.head_step(kv_ref, ht.seq, ht.h, ht.qh, ht.plan, oh, scr);
+        // wave accounting: the WHOLE round's head rows and MACs decide
+        // the inline-vs-scatter trade (never per session — the PR 4 fix
+        // — and never the raw group-task count, which undercounts by
+        // H/G per task)
+        let run_unit = |ut: &SweepTask<'_>, us: &mut AttnScratch| {
+            let ob = unsafe { std::slice::from_raw_parts_mut(ut.out.0, ut.out_len) };
+            match order {
+                SweepOrder::HeadMajor => {
+                    self.dec.head_step(kv_ref, ut.seq, ut.unit, ut.q, ut.plan, ob, us)
+                }
+                SweepOrder::GroupMajor => {
+                    self.dec.group_step(kv_ref, ut.seq, ut.unit, ut.q, ut.plan, ob, us)
+                }
+            }
+        };
+        if wave_stays_inline(pool, units.len(), wave_rows, wave_macs) {
+            for ut in &units {
+                run_unit(ut, scr);
             }
             return results;
         }
-        let dec = self.dec;
-        let spare = &dec.spare;
+        let spare = &self.dec.spare;
         let mut pool_scratch = Scratch::new();
-        pool.scatter(heads.len(), &mut pool_scratch, &|i, _s| {
-            let ht = &heads[i];
+        pool.scatter(units.len(), &mut pool_scratch, &|i, _s| {
             let mut hs = spare.lock().unwrap().pop().unwrap_or_default();
-            let oh = unsafe { std::slice::from_raw_parts_mut(ht.out.0, d) };
-            dec.head_step(kv_ref, ht.seq, ht.h, ht.qh, ht.plan, oh, &mut hs);
+            run_unit(&units[i], &mut hs);
             spare.lock().unwrap().push(hs);
         });
         results

@@ -15,21 +15,43 @@
 //!
 //! Grouped-query heads: the sequence's [`crate::kv::HeadGroups`] maps
 //! each query head onto its stored K/V head, so one page block serves
-//! `H/G` query heads. Per step, all `H` query-head rows either run inline
-//! (short prefixes — a pool wake costs more than the row) or scatter over
-//! a [`ParSoftmax`] pool as one task batch ([`DecodeAttention::step_par`],
-//! `==`-exact with the sequential sweep).
+//! `H/G` query heads.
+//!
+//! # Read-traffic contract (group-major sweep)
+//!
+//! Decode is memory-bound — the LUT softmax made the arithmetic cheap,
+//! so the per-token cost is the sweep over the stored i8 prefix. The hot
+//! path's unit of work is therefore one KV **group**, not one query
+//! head ([`SweepOrder::GroupMajor`], the default): a group task walks
+//! its pages exactly once per step ([`KvPool::page_blocks`]), computing
+//! the score rows of all `H/G` query heads sharing the group against
+//! each resident K block, runs the per-head LUT softmax
+//! (`sig_row`, unchanged algebra, one row per head), then one V sweep
+//! producing all `H/G` output rows per V read. **K/V are read once per
+//! group per step** — read amplification is `G`-proportional, matching
+//! the storage saving. The head-major order
+//! ([`SweepOrder::HeadMajor`], which re-gathers the group's pages once
+//! per *query* head, `H/G×` the traffic) is kept as the conformance
+//! reference and bench baseline: the two sweeps are a pure reorder of
+//! reads over identical integer expressions, **bit-identical** across
+//! the whole conformance sweep (`integration_conformance.rs`).
+//!
+//! Per step, the sweep units (G group tasks, or H head rows head-major)
+//! either run inline (short prefixes — a pool wake costs more than the
+//! work) or scatter over a [`ParSoftmax`] pool as one task batch
+//! ([`DecodeAttention::step_par`], `==`-exact with the sequential
+//! sweep).
 //!
 //! Prompt ingestion goes through [`DecodeAttention::prefill_chunk`]:
 //! append a block of `T'` tokens, attend once — bit-identical to `T'`
-//! single steps. Concurrent sessions' steps batch into ONE head-scatter
-//! wave through [`super::DecodeBatch`] (`attention/batch.rs`).
+//! single steps. Concurrent sessions' steps batch into ONE scatter wave
+//! through [`super::DecodeBatch`] (`attention/batch.rs`).
 
 use std::sync::Mutex;
 
 use anyhow::Result;
 
-use super::kernel::{AttnScratch, FusedAttention, OutPtr, MIN_HEAD_MACS};
+use super::kernel::{wave_stays_inline, AttnScratch, FusedAttention, OutPtr};
 use crate::kv::{KvError, KvPool, KvSeq};
 use crate::lut::Precision;
 use crate::quant::Affine;
@@ -58,11 +80,29 @@ pub(super) struct StepPlan {
     zv: i32,
 }
 
+/// Order in which a decode sweep walks the paged prefix. Outputs are
+/// **bit-identical** across orders (a pure reorder of reads over the
+/// same integer expressions — pinned by the conformance harness); the
+/// difference is K/V read traffic per step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SweepOrder {
+    /// One sweep unit per KV group: pages read **once per group per
+    /// step**, each read serving all `H/G` query heads of the group.
+    /// The product path.
+    #[default]
+    GroupMajor,
+    /// One sweep unit per query head: every head re-gathers its group's
+    /// pages, reading each K/V byte `H/G` times per step. Kept as the
+    /// conformance reference and the `decode/*` bench baseline.
+    HeadMajor,
+}
+
 /// Per-step decode attention over a paged KV cache. Construct once per
 /// (mode, precision, alpha) route; [`DecodeAttention::step`] /
 /// [`DecodeAttention::step_par`] per generated token.
 pub struct DecodeAttention {
     kernel: FusedAttention,
+    order: SweepOrder,
     /// per-worker scratch instances for the scattered path, persisted
     /// across steps: decode runs once per generated token, so a fresh
     /// scratch per call would put heap allocation on exactly the per-step
@@ -73,10 +113,23 @@ pub struct DecodeAttention {
 
 impl DecodeAttention {
     /// Same mode/precision/alpha space as [`FusedAttention::new`] (LUT
-    /// modes only).
+    /// modes only). Sweeps group-major ([`SweepOrder::GroupMajor`]).
     pub fn new(mode: Mode, prec: Precision, alpha_len: Option<usize>) -> Result<Self> {
+        Self::with_order(mode, prec, alpha_len, SweepOrder::default())
+    }
+
+    /// [`DecodeAttention::new`] with an explicit sweep order — the
+    /// head-major order exists for the conformance differential and the
+    /// `decode/*` (vs `decode_groupmajor/*`) bench baseline.
+    pub fn with_order(
+        mode: Mode,
+        prec: Precision,
+        alpha_len: Option<usize>,
+        order: SweepOrder,
+    ) -> Result<Self> {
         Ok(Self {
             kernel: FusedAttention::new(mode, prec, alpha_len)?,
+            order,
             spare: Mutex::new(Vec::new()),
         })
     }
@@ -84,6 +137,11 @@ impl DecodeAttention {
     /// The underlying fused kernel (mode/precision accessors).
     pub fn kernel(&self) -> &FusedAttention {
         &self.kernel
+    }
+
+    /// The sweep order this kernel walks the paged prefix in.
+    pub fn order(&self) -> SweepOrder {
+        self.order
     }
 
     pub(super) fn plan(&self, seq: &KvSeq, d_head: usize, q_affine: Affine) -> StepPlan {
@@ -121,22 +179,60 @@ impl DecodeAttention {
         let h = seq.groups().q_heads();
         check_step_shapes(q, out, h, d);
         let plan = self.plan(seq, d, q_affine);
-        for (hh, oh) in out.chunks_exact_mut(d).enumerate() {
-            self.head_step(kv, seq, hh, &q[hh * d..(hh + 1) * d], plan, oh, scr);
-        }
+        self.sweep_step(kv, seq, q, plan, out, scr);
         Ok(())
     }
 
-    /// [`DecodeAttention::step`] with the `H` query-head rows scattered
-    /// across a [`ParSoftmax`] pool as one task batch (bit-identical —
-    /// heads are independent and write disjoint `d`-sized output blocks).
-    /// Steps run inline on `scr` when the whole step's work
-    /// (`H · len · d` MACs) is under [`MIN_HEAD_MACS`] (short prefixes)
-    /// **or** the wave is under the pool's row threshold
-    /// ([`ParSoftmax::scatter_stays_inline`]) — the same whole-submission
-    /// accounting the batched wave ([`super::DecodeBatch`]) and the
-    /// scattered prefill use, so a 1-task wave and a bare `step_par`
-    /// make the identical inline-vs-pool decision.
+    /// The sequential sweep of one already-appended step, in the
+    /// kernel's [`SweepOrder`]. Shared by [`DecodeAttention::step`] and
+    /// the inline arm of [`DecodeAttention::step_par`].
+    fn sweep_step(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        q: &[i8],
+        plan: StepPlan,
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) {
+        let d = kv.config().d_head;
+        match self.order {
+            SweepOrder::HeadMajor => {
+                for (hh, oh) in out.chunks_exact_mut(d).enumerate() {
+                    self.head_step(kv, seq, hh, &q[hh * d..(hh + 1) * d], plan, oh, scr);
+                }
+            }
+            SweepOrder::GroupMajor => {
+                let r = seq.groups().group_size();
+                for (gi, og) in out.chunks_exact_mut(r * d).enumerate() {
+                    self.group_step(kv, seq, gi, &q[gi * r * d..(gi * r + r) * d], plan, og, scr);
+                }
+            }
+        }
+    }
+
+    /// [`DecodeAttention::step`] with the sweep units (G group tasks, or
+    /// H head rows head-major) scattered across a [`ParSoftmax`] pool as
+    /// one task batch (bit-identical — units are independent and write
+    /// disjoint output blocks). Steps run inline on `scr` under the
+    /// shared wave accounting (`wave_stays_inline`: whole-step MACs +
+    /// MAC-weighted row equivalents, so a 2-group step with heavy heads
+    /// still fans out) — the same whole-submission accounting the
+    /// batched wave ([`super::DecodeBatch`]) and the scattered prefill
+    /// use, so a 1-task wave and a bare `step_par` make the identical
+    /// inline-vs-pool decision.
+    ///
+    /// **Parallelism trade**: a bare group-major step has exactly G
+    /// sweep units (a single query row per head, so there is nothing
+    /// finer to split without splitting the *prefix* — a partial-softmax
+    /// reduction this kernel doesn't do; ROADMAP open item). G = 1 (MQA)
+    /// therefore always runs a bare step inline. That is the deliberate
+    /// bandwidth-for-parallelism trade of the group-major sweep: serving
+    /// restores concurrency across sessions (`DecodeBatch` waves are
+    /// S×G tasks) and across prompt rows (`prefill_chunk_par` scatters
+    /// G·T' tasks); a latency-critical small-G deployment that wants
+    /// per-head fan-out on bare steps can pin
+    /// [`SweepOrder::HeadMajor`].
     #[allow(clippy::too_many_arguments)]
     pub fn step_par(
         &self,
@@ -156,23 +252,45 @@ impl DecodeAttention {
         check_step_shapes(q, out, h, d);
         let plan = self.plan(seq, d, q_affine);
         let step_macs = h * seq.len() * d;
-        if pool.scatter_stays_inline(h) || step_macs < MIN_HEAD_MACS {
-            for (hh, oh) in out.chunks_exact_mut(d).enumerate() {
-                self.head_step(kv, seq, hh, &q[hh * d..(hh + 1) * d], plan, oh, scr);
-            }
+        let r = seq.groups().group_size();
+        let units = match self.order {
+            SweepOrder::HeadMajor => h,
+            SweepOrder::GroupMajor => seq.groups().kv_heads(),
+        };
+        if wave_stays_inline(pool, units, h, step_macs) {
+            self.sweep_step(kv, seq, q, plan, out, scr);
             return Ok(());
         }
         let spare = &self.spare;
-        // SAFETY (OutPtr contract): head tasks reconstruct disjoint
-        // `d`-sized blocks of `out` only.
+        // SAFETY (OutPtr contract): sweep tasks reconstruct disjoint
+        // blocks of `out` only (one `d` block per head, or one
+        // contiguous `H/G · d` block per group).
         let optr = OutPtr(out.as_mut_ptr());
         let kv_ref: &KvPool = kv;
         let seq_ref: &KvSeq = seq;
+        let order = self.order;
         let mut pool_scratch = Scratch::new();
-        pool.scatter(h, &mut pool_scratch, &|hh, _s| {
+        pool.scatter(units, &mut pool_scratch, &|u, _s| {
             let mut scr = spare.lock().unwrap().pop().unwrap_or_default();
-            let oh = unsafe { std::slice::from_raw_parts_mut(optr.0.add(hh * d), d) };
-            self.head_step(kv_ref, seq_ref, hh, &q[hh * d..(hh + 1) * d], plan, oh, &mut scr);
+            match order {
+                SweepOrder::HeadMajor => {
+                    let oh = unsafe { std::slice::from_raw_parts_mut(optr.0.add(u * d), d) };
+                    self.head_step(kv_ref, seq_ref, u, &q[u * d..(u + 1) * d], plan, oh, &mut scr);
+                }
+                SweepOrder::GroupMajor => {
+                    let og =
+                        unsafe { std::slice::from_raw_parts_mut(optr.0.add(u * r * d), r * d) };
+                    self.group_step(
+                        kv_ref,
+                        seq_ref,
+                        u,
+                        &q[u * r * d..(u * r + r) * d],
+                        plan,
+                        og,
+                        &mut scr,
+                    );
+                }
+            }
             spare.lock().unwrap().push(scr);
         });
         Ok(())
@@ -212,23 +330,55 @@ impl DecodeAttention {
         let Some((t_chunk, base)) = prefill_ingest(kv, seq, q, k_rows, v_rows, out)? else {
             return Ok(());
         };
-        let (h, d) = (seq.groups().q_heads(), kv.config().d_head);
-        let plan = self.plan(seq, d, q_affine);
-        // head-major sweep (the fused prefill kernel's loop order): one
-        // head streams the same page blocks for all T' of its query rows
-        for hh in 0..h {
-            self.prefill_head_rows(kv, seq, hh, q, plan, base, t_chunk, out, scr);
-        }
+        let plan = self.plan(seq, kv.config().d_head, q_affine);
+        self.sweep_prefill(kv, seq, q, plan, base, t_chunk, out, scr);
         Ok(())
     }
 
-    /// [`DecodeAttention::prefill_chunk`] with the `H` head sweeps
-    /// scattered across a [`ParSoftmax`] pool (bit-identical — each head
-    /// task writes its own disjoint `(t, hh)` output blocks). A prompt
-    /// chunk is the most parallelizable payload the decode route serves
-    /// (`T' × H` independent rows), so the serving pipeline routes
-    /// prefills here; small chunks stay inline under the same wave
-    /// accounting as step waves.
+    /// The sequential sweep of an already-appended chunk, in the
+    /// kernel's [`SweepOrder`]. Shared by
+    /// [`DecodeAttention::prefill_chunk`] and the inline arm of
+    /// [`DecodeAttention::prefill_chunk_par`] (the prefill mirror of
+    /// [`Self::sweep_step`]).
+    #[allow(clippy::too_many_arguments)]
+    fn sweep_prefill(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        q: &[i8],
+        plan: StepPlan,
+        base: usize,
+        t_chunk: usize,
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) {
+        match self.order {
+            // head-major reference order: one head streams the page
+            // blocks for all T' of its query rows (each page read H/G
+            // times per row set)
+            SweepOrder::HeadMajor => {
+                for hh in 0..seq.groups().q_heads() {
+                    self.prefill_head_rows(kv, seq, hh, q, plan, base, t_chunk, out, scr);
+                }
+            }
+            // group-major: one group sweeps its pages once per chunk row
+            // for ALL its H/G heads
+            SweepOrder::GroupMajor => {
+                for gi in 0..seq.groups().kv_heads() {
+                    self.prefill_group_rows(kv, seq, gi, q, plan, base, t_chunk, out, scr);
+                }
+            }
+        }
+    }
+
+    /// [`DecodeAttention::prefill_chunk`] with the sweep units (G group
+    /// sweeps, or H head sweeps head-major) scattered across a
+    /// [`ParSoftmax`] pool (bit-identical — each task writes its own
+    /// disjoint `(t, head)` output blocks). A prompt chunk is the most
+    /// parallelizable payload the decode route serves (`T' × H`
+    /// independent rows), so the serving pipeline routes prefills here;
+    /// small chunks stay inline under the same wave accounting as step
+    /// waves.
     #[allow(clippy::too_many_arguments)]
     pub fn prefill_chunk_par(
         &self,
@@ -246,31 +396,56 @@ impl DecodeAttention {
             return Ok(());
         };
         let (h, d) = (seq.groups().q_heads(), kv.config().d_head);
+        let g = seq.groups().kv_heads();
         let plan = self.plan(seq, d, q_affine);
-        // whole-chunk accounting: Σ_t h·(base+t+1)·d MACs over h head tasks
+        // whole-chunk accounting: Σ_t h·(base+t+1)·d MACs over the wave,
+        // t_chunk·h head rows
         let chunk_macs: usize = (0..t_chunk).map(|t| h * (base + t + 1) * d).sum();
-        if pool.scatter_stays_inline(h) || chunk_macs < MIN_HEAD_MACS {
-            for hh in 0..h {
-                self.prefill_head_rows(kv, seq, hh, q, plan, base, t_chunk, out, scr);
-            }
+        // group-major prefill scatters one task per (group, chunk row):
+        // a chunk has T' independent row sweeps per group, so prefill
+        // parallelism is G·T', NOT capped at G — each task still reads
+        // its group's pages exactly once per row, the same traffic as
+        // the sequential group-major sweep (single *steps* have one row
+        // and are genuinely G-bounded; see `step_par`)
+        let units = match self.order {
+            SweepOrder::HeadMajor => h,
+            SweepOrder::GroupMajor => g * t_chunk,
+        };
+        if wave_stays_inline(pool, units, t_chunk * h, chunk_macs) {
+            self.sweep_prefill(kv, seq, q, plan, base, t_chunk, out, scr);
             return Ok(());
         }
         let spare = &self.spare;
-        // SAFETY (OutPtr contract): head task `hh` reconstructs only its
-        // own disjoint `(t, hh)` blocks of `out`.
+        // SAFETY (OutPtr contract): sweep task `u` reconstructs only its
+        // own disjoint `(t, head)` blocks of `out` — one `d` slice per
+        // row head-major, one contiguous `H/G · d` slice for its single
+        // (group, row) pair group-major; concurrent tasks never alias.
         let optr = OutPtr(out.as_mut_ptr());
         let kv_ref: &KvPool = kv;
         let seq_ref: &KvSeq = seq;
+        let r = seq.groups().group_size();
+        let order = self.order;
         let mut pool_scratch = Scratch::new();
-        pool.scatter(h, &mut pool_scratch, &|hh, _s| {
+        pool.scatter(units, &mut pool_scratch, &|u, _s| {
             let mut hs = spare.lock().unwrap().pop().unwrap_or_default();
-            for t in 0..t_chunk {
-                let qh = &q[(t * h + hh) * d..(t * h + hh + 1) * d];
-                // only this row's disjoint `d`-block is ever materialized
-                // as a slice — concurrent tasks never alias
-                let oh =
-                    unsafe { std::slice::from_raw_parts_mut(optr.0.add((t * h + hh) * d), d) };
-                self.head_prefix(kv_ref, seq_ref, hh, qh, plan, base + t + 1, oh, 0, &mut hs);
+            match order {
+                SweepOrder::HeadMajor => {
+                    for t in 0..t_chunk {
+                        let qh = &q[(t * h + u) * d..(t * h + u + 1) * d];
+                        let oh = unsafe {
+                            std::slice::from_raw_parts_mut(optr.0.add((t * h + u) * d), d)
+                        };
+                        self.head_prefix(kv_ref, seq_ref, u, qh, plan, base + t + 1, oh, 0, &mut hs);
+                    }
+                }
+                SweepOrder::GroupMajor => {
+                    let (gi, t) = (u % g, u / g);
+                    let qg = &q[(t * h + gi * r) * d..(t * h + gi * r + r) * d];
+                    let og = unsafe {
+                        std::slice::from_raw_parts_mut(optr.0.add((t * h + gi * r) * d), r * d)
+                    };
+                    self.group_prefix(kv_ref, seq_ref, gi, qg, plan, base + t + 1, og, 0, &mut hs);
+                }
             }
             spare.lock().unwrap().push(hs);
         });
@@ -297,6 +472,31 @@ impl DecodeAttention {
         for t in 0..t_chunk {
             let qh = &q[(t * h + hh) * d..(t * h + hh + 1) * d];
             self.head_prefix(kv, seq, hh, qh, plan, base + t + 1, out, (t * h + hh) * d, scr);
+        }
+    }
+
+    /// One group's causal sweep over a freshly-appended chunk: for each
+    /// row `base..base+t_chunk`, one group-major page sweep serves all
+    /// `H/G` of the group's query heads, writing their `(t, head)`
+    /// blocks of `out`.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_group_rows(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        gi: usize,
+        q: &[i8],
+        plan: StepPlan,
+        base: usize,
+        t_chunk: usize,
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) {
+        let (h, d) = (seq.groups().q_heads(), kv.config().d_head);
+        let r = seq.groups().group_size();
+        for t in 0..t_chunk {
+            let qg = &q[(t * h + gi * r) * d..(t * h + gi * r + r) * d];
+            self.group_prefix(kv, seq, gi, qg, plan, base + t + 1, out, (t * h + gi * r) * d, scr);
         }
     }
 
@@ -398,6 +598,115 @@ impl DecodeAttention {
         let corr = plan.zv as i64 * sig_sum;
         for (o, &a) in out[off..off + d].iter_mut().zip(&scr.acc[..d]) {
             *o = (a - corr) as f32 * plan.out_scale;
+        }
+    }
+
+    /// One KV group over the whole stored prefix: the group-major mirror
+    /// of [`Self::head_step`], taking the group's `H/G` query rows
+    /// (`qg`, `[r][d]` — the contiguous head block of group `gi`) and
+    /// writing their `H/G · d` output block. `pub(super)` so the
+    /// batched-wave layer (`attention/batch.rs`) drives the identical
+    /// expressions.
+    pub(super) fn group_step(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        gi: usize,
+        qg: &[i8],
+        plan: StepPlan,
+        og: &mut [f32],
+        scr: &mut AttnScratch,
+    ) {
+        let d = kv.config().d_head;
+        let valid = seq.len();
+        debug_assert_eq!(og.len(), seq.groups().group_size() * d);
+        self.group_prefix(kv, seq, gi, qg, plan, valid, og, 0, scr);
+    }
+
+    /// The group-major sweep over a causal prefix of `valid ≤ seq.len()`
+    /// tokens: each of the group's resident K blocks is read ONCE and
+    /// dotted against all `H/G` query heads (score rows parked side by
+    /// side in scratch, row `r` at offset `r · valid`), each head then
+    /// runs the unchanged per-row LUT softmax ([`FusedAttention::
+    /// sig_row_at`]), and one V sweep accumulates all `H/G` output rows
+    /// per V read. Every integer expression is the one
+    /// [`Self::head_prefix`] evaluates on the same values, in the same
+    /// per-head order — the two sweeps differ only in *when* each page
+    /// is read, so outputs are **bit-identical** (pinned by the
+    /// conformance harness's group-vs-head axis). Pages are walked via
+    /// [`KvPool::page_blocks`], which yields K, V, byte sums and affines
+    /// in one page-table lookup.
+    #[allow(clippy::too_many_arguments)]
+    fn group_prefix(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        gi: usize,
+        qg: &[i8],
+        plan: StepPlan,
+        valid: usize,
+        out: &mut [f32],
+        off: usize,
+        scr: &mut AttnScratch,
+    ) {
+        let d = kv.config().d_head;
+        let r = seq.groups().group_size();
+        debug_assert_eq!(qg.len(), r * d);
+        debug_assert!(valid >= 1 && valid <= seq.len());
+        scr.prepare_decode_group(r, valid, d, self.kernel.table().len());
+        for (rr, qh) in qg.chunks_exact(d).enumerate() {
+            scr.qsum[rr] = qh.iter().map(|&v| v as i32).sum();
+        }
+        let zqzk = d as i32 * plan.zq * plan.zk;
+        // 1. integer q·K^T, group-major: each resident K row is read
+        // once and dotted against every query head of the group (same
+        // score expression as `head_prefix`, reordered reads)
+        let mut j = 0usize;
+        for blk in kv.page_blocks(seq, gi, valid) {
+            for t in 0..blk.len {
+                let kj = &blk.k[t * d..(t + 1) * d];
+                for (rr, qh) in qg.chunks_exact(d).enumerate() {
+                    let mut dot = 0i32;
+                    for (&a, &b) in qh.iter().zip(kj) {
+                        dot += a as i32 * b as i32;
+                    }
+                    scr.scores[rr * valid + j] =
+                        dot - plan.zk * scr.qsum[rr] - plan.zq * blk.ksum[t] + zqzk;
+                }
+                j += 1;
+            }
+        }
+        debug_assert_eq!(j, valid);
+        // 2./3. per-head single-row integer softmax -> sig_int rows
+        for rr in 0..r {
+            let s = self.kernel.sig_row_at(valid, plan.map, scr, rr * valid);
+            scr.sig_sum[rr] = s;
+        }
+        // 4. one sig × V sweep: each resident V row is read once and
+        // accumulated into every head's output accumulator (i32
+        // products, i64 accumulation — as in `head_prefix`)
+        scr.acc[..r * d].fill(0);
+        let mut j = 0usize;
+        for blk in kv.page_blocks(seq, gi, valid) {
+            for t in 0..blk.len {
+                let vrow = &blk.v[t * d..(t + 1) * d];
+                for rr in 0..r {
+                    let g = scr.sig[rr * valid + j];
+                    for (a, &v) in scr.acc[rr * d..(rr + 1) * d].iter_mut().zip(vrow) {
+                        *a += (g * v as i32) as i64;
+                    }
+                }
+                j += 1;
+            }
+        }
+        for rr in 0..r {
+            let corr = plan.zv as i64 * scr.sig_sum[rr];
+            for (o, &a) in out[off + rr * d..off + (rr + 1) * d]
+                .iter_mut()
+                .zip(&scr.acc[rr * d..(rr + 1) * d])
+            {
+                *o = (a - corr) as f32 * plan.out_scale;
+            }
         }
     }
 }
@@ -561,6 +870,51 @@ mod tests {
             }
         }
         assert_eq!(seq.pages().len(), 3);
+    }
+
+    #[test]
+    fn group_major_and_head_major_sweeps_are_bit_identical() {
+        // the tentpole invariant, at unit scale (the conformance harness
+        // sweeps it): a pure reorder of page reads — steps and chunks
+        // produce == outputs in both orders, pages crossed mid-prefix
+        let (h, g, d, ps) = (4usize, 2usize, 8usize, 4usize);
+        let a = DECODE_AFFINE;
+        let groups = HeadGroups::new(h, g).unwrap();
+        let cfg = KvConfig { pages: 16, page_size: ps, kv_heads: g, d_head: d };
+        for mode in [Mode::Rexp, Mode::Lut2d] {
+            let grp = DecodeAttention::new(mode, Precision::Uint8, None).unwrap();
+            assert_eq!(grp.order(), SweepOrder::GroupMajor);
+            let hed =
+                DecodeAttention::with_order(mode, Precision::Uint8, None, SweepOrder::HeadMajor)
+                    .unwrap();
+            let (mut kv_g, mut kv_h) = (KvPool::new(cfg), KvPool::new(cfg));
+            let mut sg = KvSeq::new(groups, a, a);
+            let mut sh = KvSeq::new(groups, a, a);
+            let mut rng = Rng::new(21);
+            let mut scr = AttnScratch::new();
+            for t in 0..9 {
+                let qrow: Vec<i8> = (0..h * d).map(|_| rng.int(-128, 127) as i8).collect();
+                let krow: Vec<i8> = (0..g * d).map(|_| rng.int(-128, 127) as i8).collect();
+                let vrow: Vec<i8> = (0..g * d).map(|_| rng.int(-128, 127) as i8).collect();
+                let mut og = vec![0.0f32; h * d];
+                let mut oh = vec![0.0f32; h * d];
+                grp.step(&mut kv_g, &mut sg, &qrow, a, &krow, &vrow, &mut og, &mut scr).unwrap();
+                hed.step(&mut kv_h, &mut sh, &qrow, a, &krow, &vrow, &mut oh, &mut scr).unwrap();
+                assert_eq!(og, oh, "{mode:?} step {t}");
+            }
+            // a chunk on top of the step prefix, both orders
+            let tc = 6usize;
+            let qc: Vec<i8> = (0..tc * h * d).map(|_| rng.int(-128, 127) as i8).collect();
+            let kc: Vec<i8> = (0..tc * g * d).map(|_| rng.int(-128, 127) as i8).collect();
+            let vc: Vec<i8> = (0..tc * g * d).map(|_| rng.int(-128, 127) as i8).collect();
+            let mut og = vec![0.0f32; tc * h * d];
+            let mut oh = vec![0.0f32; tc * h * d];
+            grp.prefill_chunk(&mut kv_g, &mut sg, &qc, a, &kc, &vc, &mut og, &mut scr).unwrap();
+            hed.prefill_chunk(&mut kv_h, &mut sh, &qc, a, &kc, &vc, &mut oh, &mut scr).unwrap();
+            assert_eq!(og, oh, "{mode:?} chunk");
+            kv_g.close(sg);
+            kv_h.close(sh);
+        }
     }
 
     #[test]

@@ -43,9 +43,30 @@ use crate::softmax::{
 /// order of one task round-trip. The prefill kernel's `run_par` counts
 /// it per head (`len_q·len_k·d_head` — a head is its submission unit);
 /// the decode paths (`step_par`, `DecodeBatch::step_wave`,
-/// `prefill_chunk_par`) count the WHOLE submitted wave, so one wake is
-/// charged once per wave however the rows are grouped.
+/// `prefill_chunk_par`) count the WHOLE submitted wave via
+/// [`wave_stays_inline`], so one wake is charged once per wave however
+/// the rows are grouped.
 pub(super) const MIN_HEAD_MACS: usize = 4096;
+
+/// Inline-vs-scatter decision for a decode sweep wave of `tasks` scatter
+/// units carrying `rows` query-head rows and `macs` total integer MACs —
+/// shared by `step_par`, `prefill_chunk_par` and `DecodeBatch::step_wave`.
+///
+/// Since the group-major restructure a scatter unit is one KV *group*,
+/// which is `H/G×` heavier than a head row, so the raw task count
+/// undercounts the wave: a 2-group step with heavy heads (long prefix ×
+/// deep `d_head`) would sit under the pool's row threshold forever if we
+/// asked with `tasks`. Instead the pool's threshold is asked with the
+/// wave's head-row count or its MAC load in [`MIN_HEAD_MACS`]-sized row
+/// equivalents, whichever is larger (regression-tested in
+/// `integration_par.rs::group_task_accounting_weighs_heavy_groups`);
+/// waves under [`MIN_HEAD_MACS`] of total work never wake the pool.
+pub(super) fn wave_stays_inline(pool: &ParSoftmax, tasks: usize, rows: usize, macs: usize) -> bool {
+    if tasks < 2 || macs < MIN_HEAD_MACS {
+        return true;
+    }
+    pool.scatter_stays_inline(rows.max(macs / MIN_HEAD_MACS))
+}
 
 /// `Send`/`Sync` shim for the disjoint output-block pointers the
 /// head-scatter paths fan across the worker pool.
@@ -71,6 +92,10 @@ pub struct AttnScratch {
     v32: Vec<i32>,
     ksum: Vec<i32>,
     pub(super) acc: Vec<i64>,
+    /// per-query-head Σq of a group-major decode task (`H/G` entries)
+    pub(super) qsum: Vec<i32>,
+    /// per-query-head Σ sig of a group-major decode task (`H/G` entries)
+    pub(super) sig_sum: Vec<i64>,
 }
 
 impl AttnScratch {
@@ -87,6 +112,30 @@ impl AttnScratch {
         grow_i32(&mut self.sig_tab, table_len);
         if self.acc.len() < d_head {
             self.acc.resize(d_head, 0);
+        }
+    }
+
+    /// Group-major decode prepare: `rows = H/G` score/sig rows of `len`
+    /// scores each (row `r` lives at offset `r * len`), `rows` output
+    /// accumulators, and the per-head Σq / Σsig slots — one group task
+    /// carries every query head sharing its stored K/V head.
+    pub(super) fn prepare_decode_group(
+        &mut self,
+        rows: usize,
+        len: usize,
+        d_head: usize,
+        table_len: usize,
+    ) {
+        grow_i32(&mut self.scores, rows * len);
+        grow_i32(&mut self.idx, rows * len);
+        grow_i32(&mut self.sig, rows * len);
+        grow_i32(&mut self.sig_tab, table_len);
+        grow_i32(&mut self.qsum, rows);
+        if self.sig_sum.len() < rows {
+            self.sig_sum.resize(rows, 0);
+        }
+        if self.acc.len() < rows * d_head {
+            self.acc.resize(rows * d_head, 0);
         }
     }
 
@@ -172,9 +221,20 @@ impl FusedAttention {
     /// correction. Shared with the decode path, which fills the score row
     /// from paged K blocks instead of a contiguous head.
     pub(super) fn sig_row(&self, n: usize, map: IntMap, scr: &mut AttnScratch) -> i64 {
+        self.sig_row_at(n, map, scr, 0)
+    }
+
+    /// [`Self::sig_row`] over the score row stored at
+    /// `scr.scores[off..off + n]` (`sig` written at the same offset) —
+    /// identical expressions, offset rows. The group-major decode sweep
+    /// parks one score row per query head of a group in the same scratch
+    /// (row `r` at `off = r * n`) so the K and V page sweeps run once per
+    /// group; each head's softmax is still this exact per-row chain.
+    pub(super) fn sig_row_at(&self, n: usize, map: IntMap, scr: &mut AttnScratch, off: usize) -> i64 {
         let table = self.table();
-        let m = scr.scores[..n].iter().copied().max().unwrap_or(0);
-        let s = pass1_scores_mapped(&scr.scores[..n], m, map, table, &mut scr.idx[..n]);
+        let m = scr.scores[off..off + n].iter().copied().max().unwrap_or(0);
+        let s =
+            pass1_scores_mapped(&scr.scores[off..off + n], m, map, table, &mut scr.idx[off..off + n]);
         // per-row integer mirror of the sig chain (hoisted for long rows,
         // exactly like the engines' fused pass 2)
         let hoist = n >= table.len();
@@ -187,11 +247,11 @@ impl FusedAttention {
                     for (t, &ev) in scr.sig_tab.iter_mut().zip(recip.iter()) {
                         *t = (ev * a) >> w;
                     }
-                    for (g, &k) in scr.sig[..n].iter_mut().zip(&scr.idx[..n]) {
+                    for (g, &k) in scr.sig[off..off + n].iter_mut().zip(&scr.idx[off..off + n]) {
                         *g = scr.sig_tab[k as usize];
                     }
                 } else {
-                    for (g, &k) in scr.sig[..n].iter_mut().zip(&scr.idx[..n]) {
+                    for (g, &k) in scr.sig[off..off + n].iter_mut().zip(&scr.idx[off..off + n]) {
                         *g = (recip[k as usize] * a) >> w;
                     }
                 }
@@ -203,17 +263,17 @@ impl FusedAttention {
                     for (slot, &r) in scr.sig_tab.iter_mut().zip(t.row.iter()) {
                         *slot = t.sigma_at(r as usize, col);
                     }
-                    for (g, &k) in scr.sig[..n].iter_mut().zip(&scr.idx[..n]) {
+                    for (g, &k) in scr.sig[off..off + n].iter_mut().zip(&scr.idx[off..off + n]) {
                         *g = scr.sig_tab[k as usize];
                     }
                 } else {
-                    for (g, &k) in scr.sig[..n].iter_mut().zip(&scr.idx[..n]) {
+                    for (g, &k) in scr.sig[off..off + n].iter_mut().zip(&scr.idx[off..off + n]) {
                         *g = t.sigma_at(t.row[k as usize] as usize, col);
                     }
                 }
             }
         }
-        scr.sig[..n].iter().map(|&v| v as i64).sum()
+        scr.sig[off..off + n].iter().map(|&v| v as i64).sum()
     }
 
     /// One head: `q_h (L,d)`, `k_h/v_h (S,d)` raw i8 blocks → `o_h (L,d)`.

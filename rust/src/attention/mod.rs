@@ -35,18 +35,23 @@
 //! query row per generated token over a paged integer KV cache
 //! ([`crate::kv`]), bit-identical to a causal prefill through this same
 //! kernel; its serving route `"decode:<mode>:<prec>[:aN][:gG][:pP]"` is
-//! parsed by [`parse_decode_route`]. [`DecodeAttention::prefill_chunk`]
-//! ingests whole prompt blocks (append `T'` tokens, attend once —
-//! bit-identical to `T'` single steps), and [`batch::DecodeBatch`]
-//! collects many concurrent sessions' steps into ONE head-scatter wave
-//! per serving round (the coordinator's `DecodeStepBatch` round).
+//! parsed by [`parse_decode_route`]. The decode hot path sweeps the
+//! cache **group-major** ([`decode::SweepOrder`]): one sweep unit per
+//! stored K/V group, reading each page once per group per step for all
+//! `H/G` query heads sharing it — bit-identical to the head-major
+//! reference order, which re-reads pages once per query head.
+//! [`DecodeAttention::prefill_chunk`] ingests whole prompt blocks
+//! (append `T'` tokens, attend once — bit-identical to `T'` single
+//! steps), and [`batch::DecodeBatch`] collects many concurrent
+//! sessions' steps into ONE group-scatter wave per serving round (the
+//! coordinator's `DecodeStepBatch` round).
 
 mod batch;
 mod decode;
 mod kernel;
 
 pub use batch::{DecodeBatch, DecodeStepTask};
-pub use decode::{parse_decode_route, DecodeAttention, DecodeRoute, DECODE_AFFINE};
+pub use decode::{parse_decode_route, DecodeAttention, DecodeRoute, SweepOrder, DECODE_AFFINE};
 pub use kernel::{AttnScratch, ComposedAttention, FusedAttention};
 
 use crate::lut::Precision;

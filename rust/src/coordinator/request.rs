@@ -24,6 +24,14 @@
 //!   route's fixed [`crate::attention::DECODE_AFFINE`]), never on its
 //!   batchmates. [`Payload::DecodePrefill`] of `T'` tokens replies
 //!   exactly what `T'` single steps would have, row for row.
+//! * **Sweep-order independence.** The kernel under the route walks the
+//!   paged KV cache **group-major** (each page read once per stored-head
+//!   group per step — PR 5's read-amplification fix) rather than once
+//!   per query head. That is a pure reorder of *reads* over identical
+//!   integer expressions, so every reply is unchanged **bit-for-bit**
+//!   versus the head-major sweep — existing clients replaying recorded
+//!   sessions observe byte-identical tokens (pinned by the
+//!   group-vs-head axis of `integration_conformance.rs`).
 //! * **Failure isolation.** A malformed step, an unknown session, or KV
 //!   exhaustion ([`crate::kv::KvError::Exhausted`]) fails only its own
 //!   request ([`Reply::Error`]); batchmates in the same wave are

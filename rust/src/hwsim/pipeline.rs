@@ -27,6 +27,11 @@ pub struct SimReport {
     pub area: f64,
     pub lut_bytes: usize,
     pub elems: u64,
+    /// K/V bytes swept out of the paged cache (decode models only, 0
+    /// elsewhere). Proportional to the stored-head count `G`, never the
+    /// query-head count `H`: the group-major kernel reads each page once
+    /// per group per step.
+    pub kv_bytes_read: u64,
     pub has_divider: bool,
     pub has_multiplier: bool,
 }
@@ -97,6 +102,7 @@ pub fn simulate(design: &Design, cfg: SimConfig) -> SimReport {
         area: design.area_per_lane() * cfg.lanes as f64,
         lut_bytes: design.lut_bytes,
         elems,
+        kv_bytes_read: 0,
         has_divider: design.has_divider(),
         has_multiplier: design.has_multiplier(),
     }
@@ -167,6 +173,7 @@ pub fn simulate_attention(design: &Design, cfg: AttnSimConfig, fused: bool) -> S
         area: design.area_per_lane() * cfg.lanes as f64,
         lut_bytes: design.lut_bytes,
         elems: cfg.score_elems(),
+        kv_bytes_read: 0,
         has_divider: design.has_divider(),
         has_multiplier: design.has_multiplier(),
     }
@@ -230,17 +237,22 @@ const PAGE_TOUCH_CYCLES: u64 = 2;
 
 /// Cycle model of streaming decode around a softmax `design` — the hwsim
 /// mirror of [`crate::attention::DecodeAttention`] over
-/// [`crate::kv::KvPool`].
+/// [`crate::kv::KvPool`], **group-major** like the software sweep.
 ///
 /// Per step `t` (prefix length `t`): a `q·K^T` MAC pass and a `sig×V` MAC
 /// pass for every **query** head, a single-row softmax per query head
-/// (the existing [`simulate`] model), and the page gather — K and V bytes
-/// are read once per **stored** head (`2 · kv_heads · t · d_head`
-/// LUT-port reads) plus a fixed [`PAGE_TOUCH_CYCLES`] per page touched
-/// (`ceil(t / page_size)`). Grouped-query heads therefore cut the
-/// dominant decode memory traffic by `q_heads / kv_heads` while the MAC
-/// work is unchanged — the GQA trade the `decode_gqa_vs_mha` bench label
-/// tracks in software.
+/// (the existing [`simulate`] model), and the page gather — the sweep
+/// unit is one stored-head *group*, which reads its K and V bytes
+/// exactly once per step (`2 · kv_heads · t · d_head` LUT-port reads,
+/// recorded in [`SimReport::kv_bytes_read`]) and opens each of its
+/// resident pages once (`kv_heads · ceil(t / page_size)` fixed
+/// [`PAGE_TOUCH_CYCLES`]). Before the PR 5 group-major kernel the
+/// software re-gathered pages once per *query* head (an `H/G` read
+/// amplification the model did not charge); with the sweep restructured,
+/// model and kernel agree: K/V traffic scales with `G`, never `H`, so
+/// grouped-query heads cut decode's dominant memory traffic by
+/// `q_heads / kv_heads` in bandwidth, not just storage — the trade the
+/// `decode_groupmajor/*` bench labels track in software.
 pub fn simulate_decode(design: &Design, cfg: DecodeSimConfig) -> SimReport {
     use super::units::OpKind::{Add, LutRead, Mul};
     let w = design.prec.w();
@@ -250,6 +262,7 @@ pub fn simulate_decode(design: &Design, cfg: DecodeSimConfig) -> SimReport {
     let mac_cost = Mul.cost(w).energy + Add.cost(w).energy;
     let mut cycles: u64 = 0;
     let mut energy: f64 = 0.0;
+    let mut kv_bytes: u64 = 0;
     for t in 1..=cfg.seq_len {
         // QK^T + sig×V MAC passes per query head
         let macs = (cfg.q_heads * t * cfg.d_head) as u64;
@@ -259,10 +272,12 @@ pub fn simulate_decode(design: &Design, cfg: DecodeSimConfig) -> SimReport {
         let sm = simulate(design, SimConfig { n: t, rows: cfg.q_heads, lanes: cfg.lanes });
         cycles += sm.cycles;
         energy += sm.energy;
-        // paged K/V gather, stored once per group
+        // paged K/V gather: each group sweeps its bytes and pages ONCE
         let gather = (2 * cfg.kv_heads * t * cfg.d_head) as u64;
+        kv_bytes += gather;
         cycles += per_lane(gather, &[LutRead]);
-        cycles += (t as u64).div_ceil(cfg.page_size as u64) * PAGE_TOUCH_CYCLES;
+        cycles +=
+            cfg.kv_heads as u64 * (t as u64).div_ceil(cfg.page_size as u64) * PAGE_TOUCH_CYCLES;
         energy += gather as f64 * LutRead.cost(w).energy;
     }
     SimReport {
@@ -272,6 +287,7 @@ pub fn simulate_decode(design: &Design, cfg: DecodeSimConfig) -> SimReport {
         area: design.area_per_lane() * cfg.lanes as f64,
         lut_bytes: design.lut_bytes,
         elems: cfg.score_elems(),
+        kv_bytes_read: kv_bytes,
         has_divider: design.has_divider(),
         has_multiplier: design.has_multiplier(),
     }
@@ -310,6 +326,7 @@ pub fn simulate_decode_batched(
         cycles: s * one.cycles + wakes * WAVE_SETUP_CYCLES,
         energy: s as f64 * one.energy,
         elems: s * one.elems,
+        kv_bytes_read: s * one.kv_bytes_read,
         ..one
     }
 }
@@ -473,6 +490,44 @@ mod tests {
         // same score work either way
         assert_eq!(mha.elems, gqa.elems);
         assert_eq!(mha.elems, (8 * 64 * 65 / 2) as u64);
+    }
+
+    #[test]
+    fn decode_kv_bytes_read_scale_with_groups_not_heads() {
+        // the PR 5 model fix: K/V read traffic is per stored-head group,
+        // so query-head count must not move it — only G (and the prefix)
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 8,
+            kv_heads: 2,
+            seq_len: 32,
+            d_head: 16,
+            page_size: 8,
+            lanes: 4,
+        };
+        let base = simulate_decode(&d, cfg);
+        // closed form: Σ_{t=1..L} 2·G·t·d
+        let want: u64 = (1..=32u64).map(|t| 2 * 2 * t * 16).sum();
+        assert_eq!(base.kv_bytes_read, want);
+        // doubling query heads doubles MAC/softmax work but not reads
+        let twice_h = simulate_decode(&d, DecodeSimConfig { q_heads: 16, ..cfg });
+        assert_eq!(twice_h.kv_bytes_read, base.kv_bytes_read, "H must not move K/V traffic");
+        assert!(twice_h.cycles > base.cycles, "H still pays MAC/softmax cycles");
+        // doubling stored heads doubles the reads
+        let twice_g = simulate_decode(&d, DecodeSimConfig { kv_heads: 4, ..cfg });
+        assert_eq!(twice_g.kv_bytes_read, 2 * base.kv_bytes_read);
+        // non-decode models report no paged-cache traffic
+        assert_eq!(simulate(&d, SimConfig { n: 16, rows: 4, lanes: 2 }).kv_bytes_read, 0);
+        // and the batched-wave delta formula is untouched by the model
+        // fix: still exactly (S−1)·L·WAVE_SETUP_CYCLES, with per-session
+        // traffic scaling by S on both sides
+        for s in [2usize, 8] {
+            let b = simulate_decode_batched(&d, cfg, s, true);
+            let ser = simulate_decode_batched(&d, cfg, s, false);
+            assert_eq!(ser.cycles - b.cycles, (s as u64 - 1) * 32 * WAVE_SETUP_CYCLES);
+            assert_eq!(b.kv_bytes_read, s as u64 * base.kv_bytes_read);
+            assert_eq!(b.kv_bytes_read, ser.kv_bytes_read);
+        }
     }
 
     #[test]

@@ -58,6 +58,27 @@
 //! group**; all `q_heads / kv_heads` query heads of a group read the same
 //! page block, which divides decode's dominant memory traffic by the
 //! group size.
+//!
+//! # Read-traffic contract
+//!
+//! Storage once per group is only half of GQA's saving — the other half
+//! is *reads*. The decode kernel sweeps a sequence's pages
+//! **group-major**: per decode step (and per chunked-prefill row), each
+//! group's resident K/V bytes are read exactly **once per group per
+//! step**, serving all `q_heads / kv_heads` query heads of the group out
+//! of the one sweep. [`KvPool::page_blocks`] is the gather API behind
+//! it: each page-table walk yields a page's K block, V block,
+//! precomputed byte sums and affine pair in ONE lookup, so a sweep
+//! phase never makes separate `page_k` / `page_ksum` / `page_affines`
+//! calls per page (the kernel walks twice per sweep — a K/score phase
+//! and a V phase, with the softmax between — but each phase touches
+//! each page once, and the *bytes* it pulls are per group, not per
+//! head). The affine pair rides along because the per-page quantization
+//! contract above requires readers to consult it per page — today's
+//! sequence-uniform affines make that a formality, but a cold-page
+//! requantization PR will not change the gather API. Decode's K/V read
+//! traffic is therefore proportional to `G`, not `H` (mirrored by
+//! `hwsim::simulate_decode`'s `kv_bytes_read` accounting).
 
 use std::fmt;
 
@@ -380,6 +401,61 @@ impl KvPool {
     pub fn page_affines(&self, page: u32) -> (Affine, Affine) {
         (self.k_aff[page as usize], self.v_aff[page as usize])
     }
+
+    /// Walk `seq`'s page table once for group `gi` over the first `valid`
+    /// tokens, yielding each resident page's K block, V block, K byte
+    /// sums and affine pair in ONE lookup ([`PageBlock`]) — the gather
+    /// API of the group-major decode sweep (see the module docs,
+    /// "Read-traffic contract"). Slices are truncated to the tokens of
+    /// the prefix resident in the page (full pages except the tail), and
+    /// iteration stops at the first empty page, so `Σ len == valid`.
+    pub fn page_blocks<'a>(
+        &'a self,
+        seq: &'a KvSeq,
+        gi: usize,
+        valid: usize,
+    ) -> impl Iterator<Item = PageBlock<'a>> + 'a {
+        debug_assert!(gi < self.cfg.kv_heads);
+        debug_assert!(valid <= seq.len());
+        let (d, psize) = (self.cfg.d_head, self.cfg.page_size);
+        seq.pages()
+            .iter()
+            .enumerate()
+            .map(move |(pi, &page)| {
+                let len = valid.saturating_sub(pi * psize).min(psize);
+                let off = page as usize * self.cfg.page_elems() + gi * psize * d;
+                let soff = page as usize * self.cfg.sum_elems() + gi * psize;
+                let (k_affine, v_affine) = self.page_affines(page);
+                PageBlock {
+                    k: &self.k[off..off + len * d],
+                    v: &self.v[off..off + len * d],
+                    ksum: &self.ksum[soff..soff + len],
+                    k_affine,
+                    v_affine,
+                    len,
+                }
+            })
+            .take_while(|b| b.len > 0)
+    }
+}
+
+/// One resident page's view for one group, as yielded by
+/// [`KvPool::page_blocks`]: everything a sweep needs from the page in a
+/// single page-table lookup.
+pub struct PageBlock<'a> {
+    /// the group's K rows resident in this page (`len * d_head` i8,
+    /// token-major)
+    pub k: &'a [i8],
+    /// the group's V rows (same shape as `k`)
+    pub v: &'a [i8],
+    /// per-token K byte sums (`len` i32) — the zero-point hoist's `Σk`
+    pub ksum: &'a [i32],
+    /// the page's recorded K affine
+    pub k_affine: Affine,
+    /// the page's recorded V affine
+    pub v_affine: Affine,
+    /// tokens of the swept prefix resident in this page
+    pub len: usize,
 }
 
 #[cfg(test)]
@@ -457,6 +533,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn page_blocks_walk_resident_pages_once_and_match_the_raw_accessors() {
+        let mut rng = Rng::new(9);
+        let mut pool = pool4();
+        let mut seq = seq_for(&pool);
+        let (g, d, ps) = (2usize, 8usize, 4usize);
+        for _ in 0..10 {
+            let kr = rand_row(&mut rng, g * d);
+            let vr = rand_row(&mut rng, g * d);
+            pool.append(&mut seq, &kr, &vr).unwrap();
+        }
+        for gi in 0..g {
+            // every causal prefix, including mid-page and tail-page bounds
+            for valid in 1..=seq.len() {
+                let blocks: Vec<_> = pool.page_blocks(&seq, gi, valid).collect();
+                assert_eq!(blocks.len(), valid.div_ceil(ps), "valid={valid}");
+                let total: usize = blocks.iter().map(|b| b.len).sum();
+                assert_eq!(total, valid, "blocks must cover the prefix exactly");
+                for (pi, b) in blocks.iter().enumerate() {
+                    let page = seq.pages()[pi];
+                    assert_eq!(b.k, &pool.page_k(page, gi)[..b.len * d]);
+                    assert_eq!(b.v, &pool.page_v(page, gi)[..b.len * d]);
+                    assert_eq!(b.ksum, &pool.page_ksum(page, gi)[..b.len]);
+                    assert_eq!((b.k_affine, b.v_affine), pool.page_affines(page));
+                }
+            }
+        }
+        pool.close(seq);
     }
 
     #[test]

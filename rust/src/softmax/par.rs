@@ -238,9 +238,17 @@ impl ParSoftmax {
     /// S×H rows — asking per session (with H) double-counts the pool wake
     /// S times and keeps row-rich waves inline; that accounting bug is
     /// regression-tested in `integration_par.rs`
-    /// (`wave_accounting_counts_the_whole_waves_rows`). The threshold is
-    /// the same `min_rows_per_shard` policy the pool applies to softmax
-    /// batches, so one [`ParSoftmax::with_policy`] knob tunes both.
+    /// (`wave_accounting_counts_the_whole_waves_rows`). When scatter
+    /// tasks are UNEQUAL — the group-major decode sweep submits one task
+    /// per KV group, each carrying H/G head-rows of work — `rows` must
+    /// be the wave's row *equivalents* (head rows, or the MAC load in
+    /// row-sized units), never the raw task count: 2 heavy group tasks
+    /// are worth far more than 2 rows (see `attention`'s
+    /// `wave_stays_inline`, regression-tested in
+    /// `integration_par.rs::group_task_accounting_weighs_heavy_groups`).
+    /// The threshold is the same `min_rows_per_shard` policy the pool
+    /// applies to softmax batches, so one [`ParSoftmax::with_policy`]
+    /// knob tunes both.
     pub fn scatter_stays_inline(&self, rows: usize) -> bool {
         self.pool.workers() <= 1 || rows < 2 || rows < self.min_rows_per_shard
     }

@@ -6,9 +6,12 @@
 //!
 //! Also home of the **differential conformance sweep**
 //! ([`conformance_sweep`]): one deterministic case table over
-//! {mode, prec, affine (dyadic / non-dyadic), L, H, G, page_size, mask}
-//! that `rust/tests/integration_conformance.rs` drives through every
-//! standing cross-layer invariant. Future PRs extend THIS table (a new
+//! {mode, prec, affine (dyadic / non-dyadic), L, H, G, page_size, mask,
+//! wave sessions S} that `rust/tests/integration_conformance.rs` drives
+//! through every standing cross-layer invariant — including the
+//! group-major-vs-head-major decode differential (both sweep orders
+//! bit-identical across single-step, chunked-prefill and S-session
+//! batched-wave variants of every case). Future PRs extend THIS table (a new
 //! axis, a wider range) instead of re-deriving ad-hoc per-test
 //! generators; `CONFORMANCE_FULL=1` (the CI `test-heavy` gate) widens
 //! the budget.
@@ -155,6 +158,11 @@ pub struct ConformanceCase {
     pub seq_len: usize,
     pub page_size: usize,
     pub mask: MaskKind,
+    /// concurrent decode sessions of the batched-wave variant — the
+    /// group-major-vs-head-major differential drives every case through
+    /// single steps, chunked prefills AND one `DecodeBatch` wave of this
+    /// many sessions, asserting the two sweep orders bit-identical
+    pub sessions: usize,
     pub seed: u64,
 }
 
@@ -211,6 +219,8 @@ pub fn conformance_sweep() -> Vec<ConformanceCase> {
             seq_len: rng.usize(3, max_seq),
             page_size: page_sizes[(i / 3) % page_sizes.len()],
             mask: masks[i % masks.len()],
+            // drawn LAST so earlier fields reproduce pre-PR-5 sweeps
+            sessions: rng.usize(1, if full { 6 } else { 4 }),
             seed: 0xC0DE_0000 + i as u64,
         });
     }
@@ -231,6 +241,7 @@ mod tests {
         for c in &a {
             assert!(c.heads >= 1 && c.kv_heads >= 1);
             assert_eq!(c.heads % c.kv_heads, 0, "{c:?}");
+            assert!((1..=6).contains(&c.sessions), "{c:?}");
             assert!(c.n >= 1 && c.rows >= 1 && c.seq_len >= 3);
             assert!(c.scale > 0.0);
             assert!(matches!(c.page_size, 8 | 64));

@@ -17,13 +17,17 @@
 //!    bit-identical; the KV free list round-trips on close.
 //! 5. `ParSoftmax` == the wrapped sequential engine, bit-identical, f32
 //!    and i8 ingestion.
+//! 6. the group-major decode sweep (pages read once per KV group) ==
+//!    the head-major reference sweep (pages re-read once per query
+//!    head), bit-identical — single steps, chunked prefills, and one
+//!    S-session `DecodeBatch` wave per round (`case.sessions` sizes S).
 //!
 //! `cargo test -q` runs the small sweep; `CONFORMANCE_FULL=1` (the CI
 //! `test-heavy` gate, `make test-heavy`) widens it.
 
 use lutmax::attention::{
-    AttnMask, AttnScratch, AttnShape, ComposedAttention, DecodeAttention, FusedAttention,
-    QuantTensor,
+    AttnMask, AttnScratch, AttnShape, ComposedAttention, DecodeAttention, DecodeBatch,
+    DecodeStepTask, FusedAttention, QuantTensor, SweepOrder,
 };
 use lutmax::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
 use lutmax::lut::Precision;
@@ -258,6 +262,94 @@ fn decode_any_step_chunk_mix_equals_causal_prefill() {
         assert_eq!(seq.len(), t_total, "{case:?}");
         kv.close(seq);
         assert_eq!(kv.free_pages(), pages, "{case:?}: free list must round-trip");
+    }
+}
+
+/// Invariant 6: the group-major decode sweep is bit-identical to the
+/// head-major reference — a pure reorder of page reads over the same
+/// integer expressions — across the whole {mode, prec, H, G, page_size}
+/// sweep and all three drive shapes: per-case, S sessions each decode T
+/// tokens as a random mix of single steps and prefill chunks through
+/// BOTH orders (outputs compared row for row), and every all-sessions
+/// round also goes down as one `DecodeBatch` wave per order.
+#[test]
+fn group_major_sweep_bit_identical_to_head_major() {
+    for case in conformance_sweep() {
+        let mut rng = Rng::new(case.seed);
+        let (h, g, d, s) = (case.heads, case.kv_heads, case.d_head, case.sessions);
+        let t_total = case.seq_len;
+        let groups = HeadGroups::new(h, g).unwrap();
+        let affine = lutmax::quant::Affine { scale: case.scale, zero_point: case.zero_point };
+        let grp = DecodeAttention::new(case.mode, case.prec, None).unwrap();
+        let hed =
+            DecodeAttention::with_order(case.mode, case.prec, None, SweepOrder::HeadMajor).unwrap();
+        let batch_grp = DecodeBatch::new(&grp);
+        let batch_hed = DecodeBatch::new(&hed);
+        let pool = engine_parallel(case.mode, case.prec, None, Some(4));
+        let pages = s * t_total.div_ceil(case.page_size) + 2;
+        let cfg = KvConfig { pages, page_size: case.page_size, kv_heads: g, d_head: d };
+        let (mut kv_g, mut kv_h) = (KvPool::new(cfg), KvPool::new(cfg));
+        let mut seqs_g: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, affine, affine)).collect();
+        let mut seqs_h: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, affine, affine)).collect();
+        let mut scr = AttnScratch::new();
+        let mut t = 0usize;
+        while t < t_total {
+            let chunk = rng.usize(1, (t_total - t).min(4));
+            if chunk == 1 {
+                // one all-sessions round: a batched wave per order
+                let qs: Vec<Vec<i8>> = (0..s).map(|_| i8_batch(&mut rng, h * d)).collect();
+                let ks: Vec<Vec<i8>> = (0..s).map(|_| i8_batch(&mut rng, g * d)).collect();
+                let vs: Vec<Vec<i8>> = (0..s).map(|_| i8_batch(&mut rng, g * d)).collect();
+                let mut wave = |kv: &mut KvPool,
+                                seqs: &mut Vec<KvSeq>,
+                                batch: &DecodeBatch<'_>,
+                                scr: &mut AttnScratch| {
+                    let mut outs = vec![vec![0.0f32; h * d]; s];
+                    let mut tasks: Vec<DecodeStepTask<'_>> = seqs
+                        .iter_mut()
+                        .zip(outs.iter_mut())
+                        .enumerate()
+                        .map(|(i, (seq, out))| DecodeStepTask {
+                            seq,
+                            q: &qs[i],
+                            q_affine: affine,
+                            k_row: &ks[i],
+                            v_row: &vs[i],
+                            out,
+                        })
+                        .collect();
+                    let res = batch.step_wave(kv, &mut tasks, &pool, scr);
+                    assert!(res.iter().all(|r| r.is_ok()), "{case:?}");
+                    outs
+                };
+                let got = wave(&mut kv_g, &mut seqs_g, &batch_grp, &mut scr);
+                let want = wave(&mut kv_h, &mut seqs_h, &batch_hed, &mut scr);
+                assert_eq!(got, want, "{case:?} wave at t={t}");
+            } else {
+                // chunked prefill, every session, both orders
+                for i in 0..s {
+                    let qc = i8_batch(&mut rng, chunk * h * d);
+                    let kc = i8_batch(&mut rng, chunk * g * d);
+                    let vc = i8_batch(&mut rng, chunk * g * d);
+                    let mut got = vec![0.0f32; chunk * h * d];
+                    let mut want = vec![0.0f32; chunk * h * d];
+                    grp.prefill_chunk(&mut kv_g, &mut seqs_g[i], &qc, affine, &kc, &vc, &mut got, &mut scr)
+                        .unwrap();
+                    hed.prefill_chunk(&mut kv_h, &mut seqs_h[i], &qc, affine, &kc, &vc, &mut want, &mut scr)
+                        .unwrap();
+                    assert_eq!(got, want, "{case:?} chunk at t={t} session {i}");
+                }
+            }
+            t += chunk;
+        }
+        for seq in seqs_g {
+            kv_g.close(seq);
+        }
+        assert_eq!(kv_g.free_pages(), pages, "{case:?}: group-major arena round-trips");
+        for seq in seqs_h {
+            kv_h.close(seq);
+        }
+        assert_eq!(kv_h.free_pages(), pages, "{case:?}: head-major arena round-trips");
     }
 }
 

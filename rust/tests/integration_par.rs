@@ -250,6 +250,50 @@ fn wave_accounting_counts_the_whole_waves_rows() {
 }
 
 #[test]
+fn group_task_accounting_weighs_heavy_groups() {
+    use lutmax::attention::{AttnScratch, DecodeAttention, DECODE_AFFINE};
+    use lutmax::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
+
+    // regression (group-major task accounting): a 2-group step submits
+    // only TWO scatter tasks, which sits under the pool's 4-row default
+    // threshold forever if the wave is weighed by task count — but each
+    // group task is H/G·len·d MACs of work, so once the step carries
+    // enough MACs the weighted accounting (rows-or-MAC-equivalents) must
+    // fan it out. H=2 steps never fanned out before PR 5 at all (2 rows
+    // < threshold), so the old per-head weights undercount the same wave
+    // twice over. Outputs stay == with the sequential sweep throughout.
+    let (h, g, d, t_total) = (2usize, 2usize, 64usize, 140usize);
+    let a = DECODE_AFFINE;
+    let cfg = KvConfig { pages: 10, page_size: 16, kv_heads: g, d_head: d };
+    let (mut kv_a, mut kv_b) = (KvPool::new(cfg), KvPool::new(cfg));
+    let groups = HeadGroups::new(h, g).unwrap();
+    let mut seq_a = KvSeq::new(groups, a, a);
+    let mut seq_b = KvSeq::new(groups, a, a);
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let pool = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+    let mut rng = testkit::Rng::new(51);
+    let mut scr = AttnScratch::new();
+    for t in 0..t_total {
+        let q: Vec<i8> = (0..h * d).map(|_| rng.int(-96, 96) as i8).collect();
+        let k: Vec<i8> = (0..g * d).map(|_| rng.int(-96, 96) as i8).collect();
+        let v: Vec<i8> = (0..g * d).map(|_| rng.int(-96, 96) as i8).collect();
+        let mut want = vec![0.0f32; h * d];
+        let mut got = vec![0.0f32; h * d];
+        dec.step(&mut kv_a, &mut seq_a, &q, a, &k, &v, &mut want, &mut scr).unwrap();
+        dec.step_par(&mut kv_b, &mut seq_b, &q, a, &k, &v, &pool, &mut got, &mut scr).unwrap();
+        assert_eq!(want, got, "step {t}");
+    }
+    // h·len·d = 2·128·64 = 16384 MACs = 4 row equivalents at the default
+    // threshold: the deep-prefix tail of the sequence must reach the pool
+    assert!(
+        pool.parallel_batches() > 0,
+        "two heavy group tasks must fan out under MAC-weighted accounting"
+    );
+    kv_a.close(seq_a);
+    kv_b.close(seq_b);
+}
+
+#[test]
 fn scatter_tasks_share_the_pool_and_cover_all_indices() {
     use std::sync::atomic::{AtomicUsize, Ordering};
     let par = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(3));

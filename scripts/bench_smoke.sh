@@ -20,5 +20,50 @@ for b in softmax hwsim eval coordinator runtime; do
         cargo bench --bench "${b}_bench"
 done
 
+# Label-presence gate: the canonical BENCH_softmax.json trajectory labels
+# must never silently disappear — a refactor that drops (or renames) a
+# bench label would otherwise shrink the perf trajectory without anyone
+# noticing. The first toolchain-bearing CI run commits the baseline this
+# list describes; later runs fail loudly if a label goes missing.
+# (Machine-dependent labels like par/<mode>/w<cores> are deliberately
+# not listed.)
+SOFTMAX_JSON="${OUT_DIR}/BENCH_softmax.json"
+required_labels=(
+    "uint8/exact"
+    "uint8/rexp"
+    "uint8/lut2d"
+    "i8/rexp"
+    "i8_ref/rexp"
+    "i8/lut2d"
+    "i8_ref/lut2d"
+    "rexp/uint8"
+    "lut2d/n=256"
+    "attn/h8/L128"
+    "attn_unfused/h8/L128"
+    "decode/h4/g4/L64"
+    "decode/h8/g8/L128"
+    "decode/h8/g2/L128"
+    "decode_gqa_vs_mha"
+    "decode_groupmajor/h4/g4/L64"
+    "decode_groupmajor/h8/g8/L128"
+    "decode_groupmajor/h8/g2/L128"
+    "decode_batch/s4/h8/L64"
+    "decode_batch_serial/s4/h8/L64"
+    "decode_batch/s16/h8/L64"
+    "decode_batch_serial/s16/h8/L64"
+)
+missing=0
+for label in "${required_labels[@]}"; do
+    if ! grep -qF "\"${label}\"" "${SOFTMAX_JSON}"; then
+        echo "bench-smoke: MISSING canonical label '${label}' in ${SOFTMAX_JSON}" >&2
+        missing=1
+    fi
+done
+if [ "${missing}" -ne 0 ]; then
+    echo "bench-smoke: canonical label check FAILED" >&2
+    exit 1
+fi
+echo "bench-smoke: all ${#required_labels[@]} canonical softmax labels present"
+
 echo "bench-smoke OK; trajectory files:"
 ls -l "${OUT_DIR}"/BENCH_*.json
