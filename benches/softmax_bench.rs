@@ -31,6 +31,18 @@
 //!   decode_batch_serial/s<S>/h<H>/L<L>  the same fleet as S per-session
 //!                         step_par scatters (PR 3's scheduling) — the
 //!                         decode_batch/* side amortizes the pool wakes
+//!   decode_sched/s<S>/p<P>/<case>  full open→prefill→step→close session
+//!                         lifecycles through DecodePipeline::run_batch
+//!                         (the continuous-batching scheduler): `mixed`
+//!                         submits one all-sessions batch per round on an
+//!                         uncontended arena, `evict` overcommits a
+//!                         P-page arena so rounds carry eviction/restore
+//!                         churn as well
+//!   decode_sched_barrier/s<S>/p<P>/mixed  the same mixed fleet, one
+//!                         run_batch call per payload — the scheduler
+//!                         never sees a coalescible queue, so the
+//!                         decode_sched/* side measures what round
+//!                         assembly + one-wave-per-round buys
 
 use std::sync::Arc;
 
@@ -39,8 +51,10 @@ use lutmax::attention::{
     FusedAttention, QuantTensor, SweepOrder, DECODE_AFFINE,
 };
 use lutmax::benchkit::{flush_json, Bench, Suite};
+use lutmax::coordinator::{DecodePipeline, Payload, Reply};
 use lutmax::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
 use lutmax::lut::Precision;
+use lutmax::runtime::Tensor;
 use lutmax::softmax::{engine, IntRow, Mode, ParSoftmax, Scratch, SoftmaxEngine};
 use lutmax::testkit::Rng;
 
@@ -315,6 +329,93 @@ fn main() {
     batch_case("decode_batch_serial/s16/h8/L64".into(), 16, 8, 2, 64, false);
     suite.ratio("decode_batch/s4/h8/L64", "decode_batch_serial/s4/h8/L64");
     suite.ratio("decode_batch/s16/h8/L64", "decode_batch_serial/s16/h8/L64");
+
+    // continuous-batching serving rounds: full session lifecycles (open,
+    // 2-token prefill, L step rounds, close) through the scheduler. The
+    // mixed-vs-barrier pair isolates round assembly (one wave per round
+    // vs one run_batch per payload); the evict case overcommits the
+    // arena so the measured rounds also carry eviction/restore churn.
+    // items = total score elements S·Σ_t H·t with T = L + 2, comparable
+    // with decode_batch/*.
+    let mut suite = Suite::new("continuous-batching decode scheduler (uint8 rexp, g2, d 64)");
+    let mut sched_case = |label: String, s: usize, pages: usize, l: usize, barrier: bool| {
+        let (h, g, d) = (8usize, 2usize, 64usize);
+        let p = DecodePipeline::load(&format!("decode:rexp:uint8:g{g}:p{pages}"), 4).unwrap();
+        let mut step_rng = Rng::new(79);
+        let pre: Vec<(Tensor, Tensor, Tensor)> = (0..s)
+            .map(|_| lutmax::workload::decode_prefill_chunk(&mut step_rng, 2, h, g, d, 1.0))
+            .collect();
+        let qkv: Vec<(Tensor, Tensor, Tensor)> = (0..s * l)
+            .map(|_| lutmax::workload::decode_qkv_step(&mut step_rng, h, g, d, 1.0))
+            .collect();
+        let total_t = l + 2;
+        suite.add(Bench::new(label).items(s * h * total_t * (total_t + 1) / 2).run(|| {
+            let opens: Vec<Payload> = (0..s).map(|_| Payload::DecodeOpen).collect();
+            let refs: Vec<&Payload> = opens.iter().collect();
+            let ids: Vec<u64> = p
+                .run_batch(&refs)
+                .into_iter()
+                .map(|r| match r {
+                    Reply::Session(id) => id,
+                    other => panic!("open failed: {other:?}"),
+                })
+                .collect();
+            let pres: Vec<Payload> = ids
+                .iter()
+                .zip(&pre)
+                .map(|(&id, (q, k, v))| Payload::DecodePrefill {
+                    session: id,
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                })
+                .collect();
+            let refs: Vec<&Payload> = pres.iter().collect();
+            for r in p.run_batch(&refs) {
+                assert!(matches!(r, Reply::Prefill(_)), "prefill failed: {r:?}");
+            }
+            for t in 0..l {
+                let round: Vec<Payload> = ids
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &id)| {
+                        let (q, k, v) = &qkv[i * l + t];
+                        Payload::DecodeStep {
+                            session: id,
+                            q: q.clone(),
+                            k: k.clone(),
+                            v: v.clone(),
+                        }
+                    })
+                    .collect();
+                if barrier {
+                    for pl in &round {
+                        let r = p.run_batch(&[pl]).remove(0);
+                        assert!(matches!(r, Reply::Token(_)), "step failed: {r:?}");
+                    }
+                } else {
+                    let refs: Vec<&Payload> = round.iter().collect();
+                    for r in p.run_batch(&refs) {
+                        assert!(matches!(r, Reply::Token(_)), "step failed: {r:?}");
+                    }
+                }
+            }
+            let closes: Vec<Payload> = ids.iter().map(|&id| Payload::DecodeClose(id)).collect();
+            let refs: Vec<&Payload> = closes.iter().collect();
+            for r in p.run_batch(&refs) {
+                assert!(matches!(r, Reply::Closed { .. }), "close failed: {r:?}");
+            }
+        }));
+    };
+    // 8 sessions x 18 tokens = 144 resident tokens on 512 slots: rounds
+    // coalesce, nothing evicts
+    sched_case("decode_sched/s8/p32/mixed".into(), 8, 32, 16, false);
+    sched_case("decode_sched_barrier/s8/p32/mixed".into(), 8, 32, 16, true);
+    // 16 sessions x 18 tokens = 288 resident tokens on 128 slots: every
+    // round churns evictions and restores, no step may fail
+    sched_case("decode_sched/s16/p8/evict".into(), 16, 8, 16, false);
+    suite.ratio("decode_sched/s8/p32/mixed", "decode_sched_barrier/s8/p32/mixed");
+    suite.ratio("decode_sched/s16/p8/evict", "decode_sched/s8/p32/mixed");
 
     if let Some(path) = flush_json().expect("write BENCH_JSON") {
         println!("\n[bench] wrote {}", path.display());

@@ -36,7 +36,14 @@
 //! [`KvError::Exhausted`] fails alone (its output untouched, its
 //! sequence unchanged, the step retryable after a close frees pages)
 //! while the rest of the wave proceeds — property-tested in
-//! `integration_decode_batch.rs`.
+//! `integration_decode_batch.rs`. Waves also support **mid-round
+//! admission of freed capacity**: [`DecodeBatch::step_wave_with`] takes
+//! an exhaustion hook that may reclaim pages (the continuous-batching
+//! scheduler evicts the youngest idle session there) and have the failed
+//! append retried in place, so one starved task no longer forfeits its
+//! round when capacity could be made available. The hook runs between
+//! phase-1 appends — never during the parallel sweep — so the
+//! bit-reproducibility argument below is unchanged.
 //!
 //! # Wave accounting
 //!
@@ -121,11 +128,41 @@ impl<'d> DecodeBatch<'d> {
         pool: &ParSoftmax,
         scr: &mut AttnScratch,
     ) -> Vec<Result<(), KvError>> {
+        self.step_wave_with(kv, tasks, pool, scr, |_, _| false)
+    }
+
+    /// [`Self::step_wave`] with an exhaustion hook: when task `i`'s
+    /// phase-1 append fails with [`KvError::Exhausted`], the hook is
+    /// called with the pool and the task index and may free capacity
+    /// (e.g. evict an idle session's pages back to the free list). If it
+    /// returns `true` the append is retried; it may be called repeatedly
+    /// for the same task until the append lands or it returns `false`
+    /// (the task then fails exactly as under [`Self::step_wave`]). The
+    /// hook must not touch any sequence borrowed by the wave's tasks —
+    /// the `&mut` borrows here already guarantee it cannot.
+    pub fn step_wave_with(
+        &self,
+        kv: &mut KvPool,
+        tasks: &mut [DecodeStepTask<'_>],
+        pool: &ParSoftmax,
+        scr: &mut AttnScratch,
+        mut on_exhausted: impl FnMut(&mut KvPool, usize) -> bool,
+    ) -> Vec<Result<(), KvError>> {
         // phase 1: serial appends, task order (page-id assignment is the
         // only order-dependent effect, and nothing downstream reads it)
         let results: Vec<Result<(), KvError>> = tasks
             .iter_mut()
-            .map(|t| kv.append(t.seq, t.k_row, t.v_row))
+            .enumerate()
+            .map(|(i, t)| loop {
+                match kv.append(t.seq, t.k_row, t.v_row) {
+                    Ok(()) => break Ok(()),
+                    Err(e) => {
+                        if !on_exhausted(kv, i) {
+                            break Err(e);
+                        }
+                    }
+                }
+            })
             .collect();
 
         // phase 2: flatten the surviving tasks into sweep units
@@ -277,5 +314,67 @@ mod tests {
         for seq in ser_seqs {
             kv_s.close(seq);
         }
+    }
+
+    #[test]
+    fn exhaustion_hook_reclaims_pages_and_retries_in_place() {
+        let (h, g, d) = (2usize, 1usize, 8usize);
+        let a = DECODE_AFFINE;
+        let cfg = KvConfig { pages: 2, page_size: 4, kv_heads: g, d_head: d };
+        let mut kv = KvPool::new(cfg);
+        let groups = HeadGroups::new(h, g).unwrap();
+        let mut rng = Rng::new(21);
+        let mut row = |n: usize| -> Vec<i8> { (0..n).map(|_| rng.int(-96, 96) as i8).collect() };
+        // a victim session fills the whole arena
+        let mut victim = KvSeq::new(groups, a, a);
+        for _ in 0..8 {
+            let r = row(g * d);
+            kv.append(&mut victim, &r, &r).unwrap();
+        }
+        assert_eq!(kv.free_pages(), 0);
+        let dec = DecodeAttention::new(Mode::Lut2d, Precision::Uint8, None).unwrap();
+        let batch = DecodeBatch::new(&dec);
+        let pool = engine_parallel(Mode::Lut2d, Precision::Uint8, None, Some(2));
+        let mut scr = AttnScratch::new();
+        let mut seq = KvSeq::new(groups, a, a);
+        let (q, k, v) = (row(h * d), row(g * d), row(g * d));
+        let mut out = vec![0.0f32; h * d];
+        let mut tasks = vec![DecodeStepTask {
+            seq: &mut seq,
+            q: &q,
+            q_affine: a,
+            k_row: &k,
+            v_row: &v,
+            out: &mut out,
+        }];
+        // without a hook the task starves as before...
+        let res = batch.step_wave(&mut kv, &mut tasks, &pool, &mut scr);
+        assert_eq!(res, vec![Err(KvError::Exhausted { pages: 2, free_pages: 0 })]);
+        // ...with a hook that evicts the victim, the same wave lands
+        let mut victim = Some(victim);
+        let mut evictions = 0usize;
+        let res = batch.step_wave_with(&mut kv, &mut tasks, &pool, &mut scr, |kvp, i| {
+            assert_eq!(i, 0);
+            match victim.take() {
+                Some(s) => {
+                    kvp.close(s);
+                    evictions += 1;
+                    true
+                }
+                None => false,
+            }
+        });
+        assert_eq!(res, vec![Ok(())]);
+        assert_eq!(evictions, 1);
+        drop(tasks);
+        // the retried step is bit-identical to a serial step on a fresh
+        // arena — eviction only moved page ids, which nothing reads
+        let mut kv_s = KvPool::new(cfg);
+        let mut seq_s = KvSeq::new(groups, a, a);
+        let mut want = vec![0.0f32; h * d];
+        dec.step(&mut kv_s, &mut seq_s, &q, a, &k, &v, &mut want, &mut scr).unwrap();
+        assert_eq!(out, want);
+        kv.close(seq);
+        kv_s.close(seq_s);
     }
 }

@@ -967,7 +967,7 @@ mod tests {
             &mut out,
             &mut scr,
         );
-        assert_eq!(err, Err(KvError::Exhausted { pages: 4 }));
+        assert_eq!(err, Err(KvError::Exhausted { pages: 4, free_pages: 1 }));
         assert_eq!(sa.len(), t, "failed chunk must not land partially");
         assert!(out.iter().all(|&o| o == 7.0), "failed chunk must not write output");
         kv_a.close(sa);
@@ -991,7 +991,7 @@ mod tests {
         }
         out.fill(7.0);
         let err = dec.step(&mut kv, &mut seq, &q, a, &row, &row, &mut out, &mut scr);
-        assert_eq!(err, Err(KvError::Exhausted { pages: 1 }));
+        assert_eq!(err, Err(KvError::Exhausted { pages: 1, free_pages: 0 }));
         assert!(out.iter().all(|&o| o == 7.0), "failed step must not write output");
         assert_eq!(seq.len(), 2);
     }

@@ -6,19 +6,21 @@
 //! the artifacts are single fixed-shape steps.
 
 use std::cell::{Cell, RefCell};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
+use super::metrics::Counters;
 use super::request::{Payload, Reply};
+use super::scheduler::{self, SchedConfig};
 use crate::attention::{
     self, AttnMask, AttnScratch, AttnShape, DecodeAttention, DecodeBatch, DecodeStepTask,
     FusedAttention, QuantTensor, DECODE_AFFINE,
 };
 use crate::eval::DetectionBox;
-use crate::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
+use crate::kv::{HeadGroups, KvConfig, KvError, KvPool, KvSeq};
 use crate::lut::Precision;
 use crate::quant;
 use crate::runtime::{mode_tables, Engine, ModelRunner, Tensor};
@@ -471,14 +473,24 @@ const DECODE_MIN_ROWS_PER_SHARD: usize = 2;
 /// [`super::Payload::DecodeClose`] → [`Reply::Closed`] with the pages
 /// reclaimed.
 ///
-/// Serving rounds are **batched**: [`DecodePipeline::run_batch`]
-/// coalesces every maximal run of consecutive step payloads into
-/// `DecodeStepBatch` rounds — consecutive unique-session waves, each ONE
-/// [`DecodeBatch`] head-scatter over all `S × H` head rows (see the wire
-/// contract in [`super::request`]). KV exhaustion surfaces as a per-step
-/// [`Reply::Error`] (typed backpressure from [`crate::kv::KvError`]) —
-/// the session stays open, batchmates in the same wave are unaffected,
-/// and the step can be retried after other sessions close.
+/// Serving is **continuously batched**: [`DecodePipeline::run_batch`]
+/// hands every ready batch to the scheduler ([`super::scheduler`]),
+/// which assembles serving rounds under explicit budgets
+/// ([`SchedConfig`]: KV free pages, total tokens, prefill MACs) —
+/// opens, chunked prefills, decode steps and closes mix in one round
+/// instead of opens/prefills acting as barriers between step runs. Each
+/// round's steps go down as ONE [`DecodeBatch`] head-scatter wave over
+/// all `S × H` head rows.
+///
+/// Under KV pressure the scheduler **evicts the youngest resident
+/// session** ([`SessionKv::Evicted`]): its quantized rows are saved as
+/// a replay log, its pages return to the free list, and the session is
+/// transparently restored — byte-identical pages, since the log holds
+/// the exact bytes and the route's [`DECODE_AFFINE`] is fixed — when
+/// its next request is admitted. Only a request that alone exceeds the
+/// arena fails, and then with the typed, retryable [`Reply::Exhausted`]
+/// (see the wire contract in [`super::request`]); batchmates are never
+/// affected.
 pub struct DecodePipeline {
     pub variant: String,
     decode: DecodeAttention,
@@ -488,8 +500,7 @@ pub struct DecodePipeline {
     /// KV arena pages (route `pP`, default [`DECODE_POOL_PAGES`])
     route_pages: usize,
     kv: RefCell<Option<KvPool>>,
-    /// `None` until the first step binds the session's head geometry
-    sessions: RefCell<HashMap<u64, Option<KvSeq>>>,
+    sessions: RefCell<HashMap<u64, SessionKv>>,
     next_session: Cell<u64>,
     scratch: RefCell<AttnScratch>,
     /// recycled `(q, k, v)` i8 staging triples for wave slots — per-step
@@ -497,6 +508,31 @@ pub struct DecodePipeline {
     /// hot path (the reply's `out` buffer is the one unavoidable
     /// allocation: the reply owns it)
     spare_bufs: RefCell<Vec<(Vec<i8>, Vec<i8>, Vec<i8>)>>,
+    /// continuous-batching knobs (see [`SchedConfig`])
+    sched_cfg: Cell<SchedConfig>,
+    /// scheduler counters, snapshot via [`Self::sched_counters`]
+    counters: RefCell<Counters>,
+}
+
+/// A decode session's KV residency state.
+enum SessionKv {
+    /// opened; no step/prefill has bound the head geometry yet
+    Unbound,
+    /// resident: the session owns pages in the shared arena
+    Live(KvSeq),
+    /// taken out of the table for the duration of a wave — the eviction
+    /// paths must never pick an in-flight session
+    InFlight,
+    /// evicted under KV pressure: pages reclaimed, the exact quantized
+    /// K/V rows saved (`[t][g][d]` row-major) as the replay log a later
+    /// admission restores from — byte-identical, since the route's
+    /// affines are fixed and page ids are never read
+    Evicted {
+        groups: HeadGroups,
+        k: Vec<i8>,
+        v: Vec<i8>,
+        tokens: usize,
+    },
 }
 
 /// One admitted wave entry: the session's sequence (taken out of the
@@ -532,65 +568,139 @@ impl DecodePipeline {
             next_session: Cell::new(1),
             scratch: RefCell::new(AttnScratch::new()),
             spare_bufs: RefCell::new(Vec::new()),
+            sched_cfg: Cell::new(SchedConfig::default()),
+            counters: RefCell::new(Counters::default()),
         })
     }
 
-    /// Serve one ready batch of decode payloads, in arrival order, with
-    /// every maximal run of consecutive [`Payload`] steps coalesced into
-    /// `DecodeStepBatch` rounds (opens / prefills / closes are barriers).
+    /// Serve one ready batch of decode payloads through the
+    /// continuous-batching scheduler: rounds are assembled under the
+    /// route's [`SchedConfig`] budgets, preserving every session's own
+    /// arrival order (see [`super::scheduler`]).
     pub fn run_batch(&self, batch: &[&Payload]) -> Vec<Reply> {
-        let mut replies: Vec<Option<Reply>> = batch.iter().map(|_| None).collect();
-        let mut run: Vec<usize> = Vec::new();
-        for (i, p) in batch.iter().enumerate() {
-            match p {
-                Payload::DecodeStep { .. } => run.push(i),
-                _ => {
-                    self.flush_steps(batch, &mut run, &mut replies);
-                    replies[i] = Some(match p {
-                        Payload::DecodeOpen => self.open(),
-                        Payload::DecodePrefill { session, q, k, v } => {
-                            self.prefill(*session, q, k, v)
-                        }
-                        Payload::DecodeClose(s) => self.close(*s),
-                        _ => unreachable!("router sends only decode payloads here"),
-                    });
-                }
-            }
-        }
-        self.flush_steps(batch, &mut run, &mut replies);
-        replies.into_iter().map(|r| r.expect("every request resolved")).collect()
+        scheduler::run(self, batch)
     }
 
-    fn flush_steps(&self, batch: &[&Payload], run: &mut Vec<usize>, replies: &mut [Option<Reply>]) {
-        if run.is_empty() {
-            return;
+    /// The route's scheduler knobs.
+    pub fn sched_config(&self) -> SchedConfig {
+        self.sched_cfg.get()
+    }
+
+    pub fn set_sched_config(&self, cfg: SchedConfig) {
+        self.sched_cfg.set(cfg);
+    }
+
+    /// Snapshot of the route's scheduler counters.
+    pub fn sched_counters(&self) -> Counters {
+        *self.counters.borrow()
+    }
+
+    pub(super) fn counters_mut(&self) -> std::cell::RefMut<'_, Counters> {
+        self.counters.borrow_mut()
+    }
+
+    /// Pages the arena's free list holds right now (the configured page
+    /// count while the pool is still unbound).
+    pub(super) fn free_pages_now(&self) -> usize {
+        self.kv.borrow().as_ref().map_or(self.route_pages, |p| p.free_pages())
+    }
+
+    /// Total pages of the route's arena.
+    pub(super) fn total_pages(&self) -> usize {
+        self.route_pages
+    }
+
+    /// Pages `session` currently owns (0 when unknown, unbound or
+    /// evicted) — the scheduler's close-credit probe.
+    pub(super) fn session_pages(&self, session: u64) -> usize {
+        match self.sessions.borrow().get(&session) {
+            Some(SessionKv::Live(s)) => s.pages().len(),
+            _ => 0,
         }
-        let items: Vec<(u64, &Tensor, &Tensor, &Tensor)> = run
-            .iter()
-            .map(|&i| match batch[i] {
-                Payload::DecodeStep { session, q, k, v } => (*session, q, k, v),
-                _ => unreachable!("step runs hold only DecodeStep payloads"),
+    }
+
+    /// Tokens resident in the arena across all live sessions — the
+    /// scheduler's per-round occupancy accounting.
+    pub(super) fn resident_tokens(&self) -> usize {
+        self.sessions
+            .borrow()
+            .values()
+            .map(|st| match st {
+                SessionKv::Live(s) => s.len(),
+                _ => 0,
             })
-            .collect();
-        for (&i, reply) in run.iter().zip(self.step_batch(&items)) {
-            replies[i] = Some(reply);
+            .sum()
+    }
+
+    /// What admitting `new_tokens` more tokens for `session` would cost:
+    /// pages to allocate (including the restore of an evicted session's
+    /// whole prefix) and resident tokens after the round. Unknown /
+    /// in-flight sessions cost nothing (they resolve to errors at
+    /// execution).
+    pub(super) fn admit_cost(&self, session: u64, new_tokens: usize) -> AdmitCost {
+        let sessions = self.sessions.borrow();
+        let kv = self.kv.borrow();
+        let ps = kv.as_ref().map_or(DECODE_PAGE_SIZE, |p| p.config().page_size);
+        match sessions.get(&session) {
+            Some(SessionKv::Live(s)) => AdmitCost {
+                pages: kv
+                    .as_ref()
+                    .map_or(new_tokens.div_ceil(ps), |p| p.pages_needed(s, new_tokens)),
+                tokens_after: s.len() + new_tokens,
+            },
+            Some(SessionKv::Evicted { tokens, .. }) => AdmitCost {
+                pages: (tokens + new_tokens).div_ceil(ps),
+                tokens_after: tokens + new_tokens,
+            },
+            Some(SessionKv::Unbound) => AdmitCost {
+                pages: new_tokens.div_ceil(ps),
+                tokens_after: new_tokens,
+            },
+            Some(SessionKv::InFlight) | None => AdmitCost { pages: 0, tokens_after: 0 },
         }
-        run.clear();
+    }
+
+    /// Evict the youngest resident session not in `exclude` (see
+    /// [`evict_youngest_session`]). Returns the victim and pages freed.
+    pub(super) fn evict_youngest(&self, exclude: &HashSet<u64>) -> Option<(u64, usize)> {
+        let mut sessions = self.sessions.borrow_mut();
+        let mut kv = self.kv.borrow_mut();
+        let kvp = kv.as_mut()?;
+        let r = evict_youngest_session(&mut sessions, kvp, exclude);
+        if r.is_some() {
+            self.counters.borrow_mut().evicted += 1;
+        }
+        r
     }
 
     /// open → [`Reply::Session`]
     pub fn open(&self) -> Reply {
         let id = self.next_session.get();
         self.next_session.set(id + 1);
-        self.sessions.borrow_mut().insert(id, None);
+        self.sessions.borrow_mut().insert(id, SessionKv::Unbound);
         Reply::Session(id)
     }
 
-    /// One `DecodeStepBatch` round: all steps of a coalesced run, replies
-    /// in item order. Unique sessions go down as ONE [`DecodeBatch`]
+    /// Map a pipeline error to its wire reply: KV exhaustion becomes the
+    /// typed, retryable [`Reply::Exhausted`]; everything else stays a
+    /// stringly [`Reply::Error`].
+    fn error_reply(&self, e: &anyhow::Error) -> Reply {
+        match e.downcast_ref::<KvError>() {
+            Some(&KvError::Exhausted { pages, free_pages }) => {
+                self.counters.borrow_mut().exhausted += 1;
+                Reply::Exhausted { pages, free_pages }
+            }
+            None => Reply::Error(e.to_string()),
+        }
+    }
+
+    /// One batched step round: all steps of a round, replies in item
+    /// order. Unique sessions go down as ONE [`DecodeBatch`]
     /// head-scatter wave; repeated sessions split into consecutive waves
     /// so same-session steps keep arrival order (cross-session order is
-    /// unobservable — see the wire contract in [`super::request`]).
+    /// unobservable — see the wire contract in [`super::request`]). The
+    /// scheduler admits one step per session per round, so its rounds
+    /// are always single waves.
     pub fn step_batch(&self, items: &[(u64, &Tensor, &Tensor, &Tensor)]) -> Vec<Reply> {
         let mut replies: Vec<Option<Reply>> = items.iter().map(|_| None).collect();
         let mut remaining: Vec<usize> = (0..items.len()).collect();
@@ -611,7 +721,10 @@ impl DecodePipeline {
         replies.into_iter().map(|r| r.expect("every step resolved")).collect()
     }
 
-    /// One unique-session wave of a `DecodeStepBatch` round.
+    /// One unique-session wave of a batched step round. Wave sequences
+    /// are taken out of the session table ([`SessionKv::InFlight`]), so
+    /// the mid-wave eviction hook — which mutates *other* table entries
+    /// — can never alias a sequence the wave borrows.
     fn step_wave_round(
         &self,
         items: &[(u64, &Tensor, &Tensor, &Tensor)],
@@ -627,7 +740,7 @@ impl DecodePipeline {
                 Ok((seq, qb, kb, vb, out)) => {
                     slots.push(WaveSlot { idx: i, session, seq, q: qb, k: kb, v: vb, out })
                 }
-                Err(e) => replies[i] = Some(Reply::Error(e.to_string())),
+                Err(e) => replies[i] = Some(self.error_reply(&e)),
             }
         }
         if slots.is_empty() {
@@ -646,49 +759,82 @@ impl DecodePipeline {
                 out: &mut s.out,
             })
             .collect();
-        let results = DecodeBatch::new(&self.decode).step_wave(kvp, &mut tasks, &self.pool, &mut scr);
+        // mid-wave safety net: a page-boundary append the admission
+        // accounting did not foresee evicts the youngest idle session
+        // instead of starving the step (wave sessions are in-flight and
+        // thus never picked)
+        let no_exclude = HashSet::new();
+        let results = DecodeBatch::new(&self.decode).step_wave_with(
+            kvp,
+            &mut tasks,
+            &self.pool,
+            &mut scr,
+            |kv, _| {
+                let r = evict_youngest_session(&mut sessions, kv, &no_exclude);
+                if r.is_some() {
+                    self.counters.borrow_mut().evicted += 1;
+                }
+                r.is_some()
+            },
+        );
         drop(tasks);
         let mut spare_bufs = self.spare_bufs.borrow_mut();
         for (slot, res) in slots.into_iter().zip(results) {
             let reply = match res {
                 Ok(()) => Reply::Token(Tensor::f32(items[slot.idx].1.dims.clone(), slot.out)),
-                Err(e) => Reply::Error(e.to_string()),
+                Err(KvError::Exhausted { pages, free_pages }) => {
+                    self.counters.borrow_mut().exhausted += 1;
+                    Reply::Exhausted { pages, free_pages }
+                }
             };
             // hand the sequence back to the session table (untouched when
             // the append failed — the step is retryable), and the staging
             // buffers back to the recycle pool
             spare_bufs.push((slot.q, slot.k, slot.v));
-            *sessions.get_mut(&slot.session).expect("admitted above") = Some(slot.seq);
+            *sessions.get_mut(&slot.session).expect("admitted above") = SessionKv::Live(slot.seq);
             replies[slot.idx] = Some(reply);
         }
     }
 
     /// Validate + bind one step and take its sequence out of the table
-    /// for the wave; quantizes the step's rows with the route's fixed
-    /// dyadic affine (the per-page quantization contract; see
-    /// [`attention::DECODE_AFFINE`]).
+    /// ([`SessionKv::InFlight`]) for the wave, restoring it from the
+    /// replay log first if the session was evicted; quantizes the step's
+    /// rows with the route's fixed dyadic affine (the per-page
+    /// quantization contract; see [`attention::DECODE_AFFINE`]).
     #[allow(clippy::type_complexity)]
     fn admit_step(
         &self,
-        sessions: &mut HashMap<u64, Option<KvSeq>>,
+        sessions: &mut HashMap<u64, SessionKv>,
         kv_ref: &mut Option<KvPool>,
         session: u64,
         q: &Tensor,
         k: &Tensor,
         v: &Tensor,
     ) -> Result<(KvSeq, Vec<i8>, Vec<i8>, Vec<i8>, Vec<f32>)> {
-        let slot = sessions
-            .get_mut(&session)
-            .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
         let (h, g, d) = validate_decode_step(q, k, v)?;
         if let Some(want) = self.route_kv_heads {
             if g != want {
                 bail!("decode step carries {g} kv heads but the route fixes g{want}");
             }
         }
+        let slot = sessions
+            .get_mut(&session)
+            .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
         bind_decode_pool(kv_ref, g, d, self.route_pages)?;
         bind_session_heads(slot, h, g)?;
-        let seq = slot.take().expect("session bound above");
+        let kvp = kv_ref.as_mut().expect("pool bound above");
+        let seq = match std::mem::replace(slot, SessionKv::InFlight) {
+            SessionKv::Live(s) => s,
+            SessionKv::Evicted { groups, k: kl, v: vl, tokens } => {
+                match self.restore_session(sessions, kvp, session, groups, kl, vl, tokens) {
+                    Ok(s) => s,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            SessionKv::Unbound | SessionKv::InFlight => {
+                unreachable!("bound above; one step per session per wave")
+            }
+        };
         // staging buffers are recycled across rounds (step_wave_round
         // returns them); only the reply-owned `out` is freshly allocated
         let (mut qb, mut kb, mut vb) =
@@ -709,7 +855,7 @@ impl DecodePipeline {
     /// row `t` bit-identical to the `t`-th single step's [`Reply::Token`])
     pub fn prefill(&self, session: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Reply {
         self.try_prefill(session, q, k, v)
-            .unwrap_or_else(|e| Reply::Error(e.to_string()))
+            .unwrap_or_else(|e| self.error_reply(&e))
     }
 
     fn try_prefill(&self, session: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Reply> {
@@ -720,14 +866,25 @@ impl DecodePipeline {
             }
         }
         let mut sessions = self.sessions.borrow_mut();
+        let mut kv_ref = self.kv.borrow_mut();
         let slot = sessions
             .get_mut(&session)
             .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
-        let mut kv_ref = self.kv.borrow_mut();
         bind_decode_pool(&mut kv_ref, g, d, self.route_pages)?;
         bind_session_heads(slot, h, g)?;
-        let seq = slot.as_mut().expect("session bound above");
         let kvp = kv_ref.as_mut().expect("pool bound above");
+        let mut seq = match std::mem::replace(slot, SessionKv::InFlight) {
+            SessionKv::Live(s) => s,
+            SessionKv::Evicted { groups, k: kl, v: vl, tokens } => {
+                match self.restore_session(&mut sessions, kvp, session, groups, kl, vl, tokens) {
+                    Ok(s) => s,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            SessionKv::Unbound | SessionKv::InFlight => {
+                unreachable!("bound above; sessions are not in-flight here")
+            }
+        };
         let mut qb = vec![0i8; t * h * d];
         quant::quantize_into(q.as_f32()?, DECODE_AFFINE, &mut qb);
         let mut kb = vec![0i8; t * g * d];
@@ -737,24 +894,98 @@ impl DecodePipeline {
         let mut out = vec![0.0f32; t * h * d];
         let mut scr = self.scratch.borrow_mut();
         // a prompt chunk is the route's most parallelizable payload
-        // (T'×H independent rows): scatter its head sweeps over the pool
-        self.decode
-            .prefill_chunk_par(kvp, seq, &qb, DECODE_AFFINE, &kb, &vb, &self.pool, &mut out, &mut scr)?;
+        // (T'×H independent rows): scatter its head sweeps over the pool.
+        // A chunk the free list cannot cover evicts younger sessions
+        // (the chunk append is atomic, so each retry starts clean); only
+        // a chunk no eviction can make room for fails, typed
+        let result = loop {
+            match self.decode.prefill_chunk_par(
+                kvp,
+                &mut seq,
+                &qb,
+                DECODE_AFFINE,
+                &kb,
+                &vb,
+                &self.pool,
+                &mut out,
+                &mut scr,
+            ) {
+                Ok(()) => break Ok(()),
+                Err(e) => {
+                    let evicted = evict_youngest_session(&mut sessions, kvp, &HashSet::new());
+                    if evicted.is_some() {
+                        self.counters.borrow_mut().evicted += 1;
+                    } else {
+                        break Err(e);
+                    }
+                }
+            }
+        };
+        *sessions.get_mut(&session).expect("in-flight slot") = SessionKv::Live(seq);
+        result?;
         Ok(Reply::Prefill(Tensor::f32(q.dims.clone(), out)))
     }
 
-    /// close → [`Reply::Closed`], pages returned to the arena
+    /// Rebuild an evicted session's pages from its replay log (the
+    /// session's slot is in-flight while this runs), evicting still
+    /// younger sessions if the free list cannot cover the restore. On
+    /// failure the slot reverts to `Evicted`, untouched, and the typed
+    /// error surfaces. The restored pages are byte-identical to the
+    /// evicted ones: same rows, same recomputed sums, same affines —
+    /// only page ids differ, and nothing reads those.
+    #[allow(clippy::too_many_arguments)]
+    fn restore_session(
+        &self,
+        sessions: &mut HashMap<u64, SessionKv>,
+        kvp: &mut KvPool,
+        session: u64,
+        groups: HeadGroups,
+        kl: Vec<i8>,
+        vl: Vec<i8>,
+        tokens: usize,
+    ) -> Result<KvSeq, KvError> {
+        let mut seq = KvSeq::new(groups, DECODE_AFFINE, DECODE_AFFINE);
+        loop {
+            match kvp.append_block(&mut seq, &kl, &vl) {
+                Ok(()) => {
+                    debug_assert_eq!(seq.len(), tokens);
+                    self.counters.borrow_mut().requeued += 1;
+                    return Ok(seq);
+                }
+                Err(e) => {
+                    // the in-flight slot keeps the session itself (and
+                    // any wave mates) off the victim list
+                    let evicted = evict_youngest_session(sessions, kvp, &HashSet::new());
+                    if evicted.is_some() {
+                        self.counters.borrow_mut().evicted += 1;
+                    } else {
+                        *sessions.get_mut(&session).expect("in-flight slot") =
+                            SessionKv::Evicted { groups, k: kl, v: vl, tokens };
+                        return Err(e);
+                    }
+                }
+            }
+        }
+    }
+
+    /// close → [`Reply::Closed`], pages returned to the arena. A session
+    /// closed while evicted holds no pages and reports `pages: 0` — an
+    /// ops number, not part of the bit-identity contract.
     pub fn close(&self, session: u64) -> Reply {
         match self.sessions.borrow_mut().remove(&session) {
             None => Reply::Error(format!("unknown decode session {session}")),
-            Some(seq) => {
-                let pages = match (seq, self.kv.borrow_mut().as_mut()) {
-                    (Some(s), Some(pool)) => pool.close(s),
-                    // a session that never stepped holds no pages
-                    _ => 0,
-                };
+            Some(SessionKv::Live(s)) => {
+                let pages = self
+                    .kv
+                    .borrow_mut()
+                    .as_mut()
+                    .map(|pool| pool.close(s))
+                    .expect("live sessions imply a bound pool");
                 Reply::Closed { pages }
             }
+            // unbound and evicted sessions hold no pages (an eviction
+            // replay log dies with the close)
+            Some(_) => Reply::Closed { pages: 0 },
         }
     }
 
@@ -789,19 +1020,86 @@ fn bind_decode_pool(kv_ref: &mut Option<KvPool>, g: usize, d: usize, pages: usiz
     Ok(())
 }
 
-/// Check (or bind, on the first step/prefill) a session's head geometry.
-fn bind_session_heads(slot: &mut Option<KvSeq>, h: usize, g: usize) -> Result<()> {
-    if let Some(s) = slot.as_ref() {
-        let sg = *s.groups();
-        if sg.q_heads() != h || sg.kv_heads() != g {
-            bail!(
-                "decode step heads (H{h}, g{g}) do not match the session's (H{}, g{})",
-                sg.q_heads(),
-                sg.kv_heads()
-            );
+/// What admitting more tokens for a session would cost — the
+/// scheduler's admission probe, built on [`KvPool::pages_needed`] /
+/// [`KvPool::pages_needed_for_step`] so exhaustion is predicted at
+/// admit time.
+pub(super) struct AdmitCost {
+    /// pages the admission must allocate (an evicted session's whole
+    /// prefix counts: restore precedes the new tokens)
+    pub pages: usize,
+    /// the session's resident tokens after the round
+    pub tokens_after: usize,
+}
+
+/// Evict the **youngest** (largest-id) resident session not in
+/// `exclude`: gather its pages' exact quantized rows into a `[t][g][d]`
+/// replay log, return the pages to the free list, and park the session
+/// as [`SessionKv::Evicted`]. In-flight and already-evicted sessions
+/// are never picked. Returns the victim id and pages freed, `None` when
+/// no session is evictable.
+fn evict_youngest_session(
+    sessions: &mut HashMap<u64, SessionKv>,
+    kvp: &mut KvPool,
+    exclude: &HashSet<u64>,
+) -> Option<(u64, usize)> {
+    let victim = sessions
+        .iter()
+        .filter(|(id, st)| {
+            !exclude.contains(id) && matches!(st, SessionKv::Live(s) if !s.pages().is_empty())
+        })
+        .map(|(id, _)| *id)
+        .max()?;
+    let state = sessions.get_mut(&victim).expect("victim picked above");
+    let SessionKv::Live(seq) = std::mem::replace(state, SessionKv::Unbound) else {
+        unreachable!("victims are live");
+    };
+    let (groups, tokens) = (*seq.groups(), seq.len());
+    let cfg = *kvp.config();
+    let (g, d, ps) = (cfg.kv_heads, cfg.d_head, cfg.page_size);
+    // transpose the page-major [g][t][d] blocks into the block-append
+    // order [t][g][d], so a restore is one append_block of these bytes
+    let mut kl = vec![0i8; tokens * g * d];
+    let mut vl = vec![0i8; tokens * g * d];
+    for (pi, &page) in seq.pages().iter().enumerate() {
+        let in_page = seq.tokens_in_page(ps, pi);
+        for gi in 0..g {
+            let kb = kvp.page_k(page, gi);
+            let vb = kvp.page_v(page, gi);
+            for t in 0..in_page {
+                let dst = ((pi * ps + t) * g + gi) * d;
+                kl[dst..dst + d].copy_from_slice(&kb[t * d..(t + 1) * d]);
+                vl[dst..dst + d].copy_from_slice(&vb[t * d..(t + 1) * d]);
+            }
         }
-    } else {
-        *slot = Some(KvSeq::new(HeadGroups::new(h, g)?, DECODE_AFFINE, DECODE_AFFINE));
+    }
+    let pages = kvp.close(seq);
+    *sessions.get_mut(&victim).expect("victim picked above") =
+        SessionKv::Evicted { groups, k: kl, v: vl, tokens };
+    Some((victim, pages))
+}
+
+/// Check (or bind, on the first step/prefill) a session's head geometry.
+fn bind_session_heads(slot: &mut SessionKv, h: usize, g: usize) -> Result<()> {
+    let bound = match slot {
+        SessionKv::Unbound => None,
+        SessionKv::Live(s) => Some(*s.groups()),
+        SessionKv::Evicted { groups, .. } => Some(*groups),
+        SessionKv::InFlight => unreachable!("sessions are not in-flight at admission"),
+    };
+    match bound {
+        Some(sg) => {
+            if sg.q_heads() != h || sg.kv_heads() != g {
+                bail!(
+                    "decode step heads (H{h}, g{g}) do not match the session's (H{}, g{})",
+                    sg.q_heads(),
+                    sg.kv_heads()
+                );
+            }
+        }
+        None => {
+            *slot = SessionKv::Live(KvSeq::new(HeadGroups::new(h, g)?, DECODE_AFFINE, DECODE_AFFINE));
+        }
     }
     Ok(())
 }

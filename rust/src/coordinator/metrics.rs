@@ -65,6 +65,68 @@ impl Histogram {
     }
 }
 
+/// Continuous-batching scheduler counters — a snapshot struct so `serve`
+/// (and tests) can read one coherent stats line per run. Maintained by
+/// `coordinator::scheduler` per decode route; copied into
+/// [`Metrics::sched`] after every decode batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// serving rounds executed (each = one wave + its prefills/closes)
+    pub rounds: u64,
+    /// decode steps admitted into rounds
+    pub admitted_steps: u64,
+    /// prefill chunks admitted into rounds
+    pub admitted_prefills: u64,
+    /// sessions evicted to reclaim KV pages
+    pub evicted: u64,
+    /// evicted sessions re-admitted (restored) into a later round
+    pub requeued: u64,
+    /// requests answered with typed exhaustion (session alone exceeds
+    /// the arena — eviction could not help)
+    pub exhausted: u64,
+    /// Σ over rounds of KV tokens resident after the round (occupancy)
+    pub occupancy_tokens: u64,
+    /// Σ over rounds of sessions served in the round
+    pub occupancy_sessions: u64,
+    /// deepest waiting queue observed at round assembly
+    pub peak_queue_depth: u64,
+}
+
+impl Counters {
+    /// mean sessions served per round
+    pub fn mean_round_sessions(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.occupancy_sessions as f64 / self.rounds as f64
+    }
+
+    /// mean KV tokens resident per round
+    pub fn mean_round_tokens(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.occupancy_tokens as f64 / self.rounds as f64
+    }
+
+    /// One-line human summary for `serve` stats output.
+    pub fn summary(&self) -> String {
+        format!(
+            "rounds={} steps={} prefills={} evicted={} requeued={} exhausted={} \
+             occ_sessions={:.2} occ_tokens={:.1} peak_queue={}",
+            self.rounds,
+            self.admitted_steps,
+            self.admitted_prefills,
+            self.evicted,
+            self.requeued,
+            self.exhausted,
+            self.mean_round_sessions(),
+            self.mean_round_tokens(),
+            self.peak_queue_depth,
+        )
+    }
+}
+
 /// Per-task serving metrics.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -74,6 +136,8 @@ pub struct Metrics {
     pub batched_requests: u64,
     pub latency: Histogram,
     pub queue_wait: Histogram,
+    /// decode-route scheduler counters (zero for other tasks)
+    pub sched: Counters,
 }
 
 impl Metrics {
@@ -118,5 +182,51 @@ mod tests {
         m.batches = 2;
         m.batched_requests = 12;
         assert_eq!(m.mean_batch_size(), 6.0);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        // 1 us lands in bucket 0 -> percentile reports its upper bound 2
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(1));
+        assert_eq!(h.percentile_us(1.0), 2);
+        assert_eq!(h.max_us(), 1);
+        // an exact power of two (1024 us) lands in bucket 10 -> bound 2048
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(1024));
+        assert_eq!(h.percentile_us(0.5), 2048);
+        // sub-microsecond samples clamp to 1 us (bucket 0), never panic
+        let mut h = Histogram::new();
+        h.record(Duration::ZERO);
+        assert_eq!(h.percentile_us(1.0), 2);
+        assert_eq!(h.mean_us(), 1.0);
+        // huge samples saturate the last bucket (31) -> bound 1 << 32
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(1 << 40));
+        assert_eq!(h.percentile_us(1.0), 1u64 << 32);
+    }
+
+    #[test]
+    fn counters_snapshot_means_and_summary() {
+        let c = Counters::default();
+        assert_eq!(c.mean_round_sessions(), 0.0);
+        assert_eq!(c.mean_round_tokens(), 0.0);
+        let c = Counters {
+            rounds: 4,
+            admitted_steps: 10,
+            admitted_prefills: 2,
+            evicted: 1,
+            requeued: 1,
+            exhausted: 0,
+            occupancy_tokens: 100,
+            occupancy_sessions: 10,
+            peak_queue_depth: 7,
+        };
+        assert_eq!(c.mean_round_sessions(), 2.5);
+        assert_eq!(c.mean_round_tokens(), 25.0);
+        let s = c.summary();
+        assert!(s.contains("rounds=4"), "{s}");
+        assert!(s.contains("evicted=1"), "{s}");
+        assert!(s.contains("peak_queue=7"), "{s}");
     }
 }

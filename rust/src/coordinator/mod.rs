@@ -14,6 +14,7 @@ mod batcher;
 mod engine_ops;
 mod metrics;
 mod request;
+mod scheduler;
 mod server;
 
 pub use batcher::Batcher;
@@ -21,6 +22,7 @@ pub use engine_ops::{
     AttentionPipeline, AttnRequest, ClsPipeline, DecodePipeline, DetPipeline, NmtPipeline,
     SoftmaxPipeline,
 };
-pub use metrics::{Histogram, Metrics};
+pub use metrics::{Counters, Histogram, Metrics};
 pub use request::{Payload, Reply, Request, TaskKind};
+pub use scheduler::SchedConfig;
 pub use server::{Coordinator, CoordinatorClient, RouteTable, ServerStats};

@@ -1,46 +1,56 @@
 //! Request/response vocabulary of the serving API.
 //!
-//! # The `DecodeStepBatch` wire contract
+//! # The continuous-batching decode wire contract
 //!
-//! The decode route is session-ful, and its serving rounds are batched:
-//! when a ready batch reaches the engine thread, every maximal run of
-//! consecutive [`Payload::DecodeStep`] requests is coalesced into a
-//! **`DecodeStepBatch` round** — ONE head-scatter wave over all the
-//! sessions stepped in that run (see
-//! [`crate::attention::DecodeBatch`]). The contract callers can rely on:
+//! The decode route is session-ful, and its serving is **continuously
+//! batched**: every batch that reaches the engine thread is handed whole
+//! to the scheduler (`coordinator::scheduler`), which runs it as a
+//! sequence of **serving rounds**. Each round admits waiting work —
+//! opens, chunked prefills, decode steps, closes, in any mix — into the
+//! *current* wave under explicit budgets (KV free pages, total tokens,
+//! prefill MACs; see `SchedConfig`), instead of treating opens/prefills
+//! as barriers between step runs. The contract callers can rely on:
 //!
-//! * **Ordering.** Opens, prefills and closes are barriers (they flush
-//!   any pending step run) and land in arrival order. Within a step run,
-//!   each round executes as a serial execution in **wave order**: first
-//!   occurrences of each session (in arrival order), then second
-//!   occurrences, and so on — a legal interleaving that preserves every
-//!   session's own arrival order. Steps addressing *different* sessions
-//!   have no observable output order at all — which is what makes the
-//!   wave legal.
-//! * **Bit-reproducibility.** Every reply is bit-identical to what a
-//!   serial per-request execution (PR 3's loop) would have produced in
-//!   ANY per-session-order-preserving interleaving: a session's reply
-//!   depends only on its own ingress history (quantized with the
-//!   route's fixed [`crate::attention::DECODE_AFFINE`]), never on its
-//!   batchmates. [`Payload::DecodePrefill`] of `T'` tokens replies
-//!   exactly what `T'` single steps would have, row for row.
+//! * **Per-session ordering.** Each session's requests execute in its
+//!   own arrival order — the scheduler admits at most one item per
+//!   session per round and never reorders within a session. Requests
+//!   addressing *different* sessions have no observable output order at
+//!   all, which is what makes round assembly legal: any round schedule
+//!   is some per-session-order-preserving interleaving.
+//! * **Bit-reproducibility.** Every `Token`/`Prefill` reply is
+//!   bit-identical to what a serial per-request execution would have
+//!   produced: a session's reply depends only on its own ingress
+//!   history (quantized with the route's fixed
+//!   [`crate::attention::DECODE_AFFINE`]), never on its batchmates, the
+//!   round shape, or eviction (below). [`Payload::DecodePrefill`] of
+//!   `T'` tokens replies exactly what `T'` single steps would have, row
+//!   for row.
+//! * **Eviction / requeue under KV pressure.** When a round (or an
+//!   append inside a wave) would exhaust the arena, the scheduler
+//!   **evicts the youngest idle session**: its quantized K/V rows are
+//!   saved as replay state, its pages return to the free list, and the
+//!   evicted session is transparently **restored** (re-prefilled from
+//!   the saved rows, front of the queue) the next time one of its
+//!   requests is admitted. Because the saved rows are the exact bytes
+//!   the pages held and the route's affines are fixed, the restored
+//!   pages are byte-identical — an evict→restore→resume session's
+//!   replies stay bit-identical to an uninterrupted serial run. Clients
+//!   never see eviction except through [`Reply::Closed`]'s page count
+//!   (a session closed while evicted reports `pages: 0` — it holds no
+//!   pages at that moment). `Closed { pages }` is an ops number, NOT
+//!   part of the bit-identity contract.
+//! * **Typed backpressure.** Only when eviction cannot help — a single
+//!   session's request alone exceeds the arena — does the request fail,
+//!   and then with the structured, retryable [`Reply::Exhausted`]
+//!   (total and free page counts at failure time) rather than a stringly
+//!   [`Reply::Error`]. The session itself is left exactly as it was;
+//!   batchmates in the same round are untouched.
 //! * **Sweep-order independence.** The kernel under the route walks the
 //!   paged KV cache **group-major** (each page read once per stored-head
-//!   group per step — PR 5's read-amplification fix) rather than once
-//!   per query head. That is a pure reorder of *reads* over identical
-//!   integer expressions, so every reply is unchanged **bit-for-bit**
-//!   versus the head-major sweep — existing clients replaying recorded
-//!   sessions observe byte-identical tokens (pinned by the
-//!   group-vs-head axis of `integration_conformance.rs`).
-//! * **Failure isolation.** A malformed step, an unknown session, or KV
-//!   exhaustion ([`crate::kv::KvError::Exhausted`]) fails only its own
-//!   request ([`Reply::Error`]); batchmates in the same wave are
-//!   unaffected, and an exhausted step/prefill left the session exactly
-//!   as it was — retry it after a close frees pages. Note that under
-//!   page scarcity *which* request of a round starves follows wave
-//!   order, exactly as it would in the serial execution of that
-//!   interleaving — it was never an arrival-order property even in
-//!   PR 3's loop, since any interleaving picks a different victim.
+//!   group per step — PR 5's read-amplification fix); every reply is
+//!   unchanged bit-for-bit versus the head-major sweep (pinned by the
+//!   group-vs-head axis of `integration_conformance.rs`, as the
+//!   scheduler's guarantees are pinned by its arrival-schedule axis).
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -169,7 +179,14 @@ pub enum Reply {
     /// `t` is bit-identical to the `Token` reply step `t` would have got
     Prefill(Tensor),
     /// a decode session closed; `pages` KV pages returned to the pool
+    /// at close time (0 if the session was evicted — an ops number, not
+    /// part of the bit-identity contract; see the module docs)
     Closed { pages: usize },
+    /// typed, retryable KV backpressure: the request alone exceeds what
+    /// the arena can ever hold (eviction cannot help), with `free_pages`
+    /// of `pages` free at failure time. The session is unchanged; retry
+    /// a smaller chunk or against a larger arena
+    Exhausted { pages: usize, free_pages: usize },
     /// the server rejected or failed the request
     Error(String),
 }

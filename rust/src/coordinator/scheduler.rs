@@ -1,0 +1,347 @@
+//! Continuous-batching decode scheduler: token-budget admission,
+//! eviction/requeue on KV exhaustion, and starvation-free serving
+//! rounds.
+//!
+//! [`run`] is the decode route's router loop. It holds the ready batch
+//! as a waiting queue and serves it as a sequence of **rounds**; each
+//! round admits waiting opens / chunked prefills / decode steps /
+//! closes into the *current* wave under the [`SchedConfig`] budgets,
+//! instead of the old barrier loop (steps coalesced only between
+//! opens/prefills, which flushed everything). The admitted steps go
+//! down as ONE [`crate::attention::DecodeBatch`] head-scatter wave;
+//! prefills ride along in the same round through `prefill_chunk_par`.
+//!
+//! # Round assembly
+//!
+//! Items are scanned in arrival order. The first time a session is
+//! seen in a pass it is either admitted or skipped — either way the
+//! session is *blocked* for the rest of the pass, so at most one item
+//! per session enters a round and every session's requests execute in
+//! its own arrival order (the bit-identity precondition; see the wire
+//! contract in [`super::request`]). Admission is budgeted:
+//!
+//! * **pages** — the item's [`KvPool`](crate::kv::KvPool) cost
+//!   (admission probes `pages_needed*`) must fit the free list, plus
+//!   the pages admitted closes will free (closes execute first), minus
+//!   pages already reserved this round;
+//! * **`max_batch_total_tokens`** — Σ resident-tokens-after-round over
+//!   the admitted sessions;
+//! * **`max_batch_prefill_tokens`** — Σ admitted prefill chunk tokens
+//!   (the round's MAC budget);
+//! * **prefill priority** — when the waiting prefill queue outweighs
+//!   the waiting steps (`waiting_served_ratio`) or its token mass
+//!   reaches `max_waiting_tokens`, a round admits only prefills (and
+//!   opens/closes), draining the prompt queue before decode resumes.
+//!
+//! Budgets shape rounds, they never starve: an item exceeding a budget
+//! alone is still admitted alone, and a prefill-only pass that admits
+//! nothing falls back to a normal pass. The **front** item of a pass
+//! has eviction privilege — if its pages don't fit, the youngest
+//! resident sessions are evicted (replay-logged, pages reclaimed; see
+//! `SessionKv::Evicted` in `engine_ops`) until it fits. Only when no
+//! victim remains — the request alone exceeds the arena — does it
+//! resolve as typed, retryable [`Reply::Exhausted`]. Every pass
+//! therefore admits or resolves at least its front item, which is the
+//! no-starvation argument: the queue strictly shrinks or executes.
+
+use std::collections::HashSet;
+
+use super::engine_ops::DecodePipeline;
+use super::request::{Payload, Reply};
+use crate::runtime::Tensor;
+
+/// Continuous-batching knobs of a decode route. Defaults suit the
+/// default 4096-page arena; property/chaos tests shrink them alongside
+/// `pP` route overrides via `DecodePipeline::set_sched_config`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchedConfig {
+    /// cap on Σ resident tokens (after the round) across the sessions
+    /// served in one round — bounds a round's KV sweep traffic
+    pub max_batch_total_tokens: usize,
+    /// cap on Σ prefill chunk tokens admitted into one round — the MAC
+    /// budget that keeps prompt ingest from stalling decode latency
+    pub max_batch_prefill_tokens: usize,
+    /// drain the prefill queue when waiting prefills ≥ ratio × waiting
+    /// steps
+    pub waiting_served_ratio: f64,
+    /// ... or when the waiting prefills' token mass reaches this
+    pub max_waiting_tokens: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self {
+            max_batch_total_tokens: 4096,
+            max_batch_prefill_tokens: 512,
+            waiting_served_ratio: 1.2,
+            max_waiting_tokens: 256,
+        }
+    }
+}
+
+/// A waiting-queue item, borrowed out of the ready batch.
+enum Item<'a> {
+    Open,
+    Close(u64),
+    Prefill {
+        session: u64,
+        q: &'a Tensor,
+        k: &'a Tensor,
+        v: &'a Tensor,
+        /// chunk length when well-formed; malformed chunks cost 0 and
+        /// fail with their shape error at execution
+        tokens: usize,
+    },
+    Step {
+        session: u64,
+        q: &'a Tensor,
+        k: &'a Tensor,
+        v: &'a Tensor,
+    },
+}
+
+impl Item<'_> {
+    fn session(&self) -> Option<u64> {
+        match self {
+            Item::Open => None,
+            Item::Close(s) => Some(*s),
+            Item::Prefill { session, .. } | Item::Step { session, .. } => Some(*session),
+        }
+    }
+}
+
+/// One assembled round: admitted item indices (arrival order) plus how
+/// many items the pass resolved in place (typed exhaustion).
+struct Round {
+    admitted: Vec<usize>,
+    resolved: usize,
+}
+
+/// Serve one ready batch of decode payloads, continuously batched.
+/// Replies are index-aligned with `batch`.
+pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
+    let items: Vec<Item<'_>> = batch
+        .iter()
+        .map(|p| match p {
+            Payload::DecodeOpen => Item::Open,
+            Payload::DecodeClose(s) => Item::Close(*s),
+            Payload::DecodePrefill { session, q, k, v } => Item::Prefill {
+                session: *session,
+                q,
+                k,
+                v,
+                tokens: if q.dims.len() == 3 { q.dims[0] } else { 0 },
+            },
+            Payload::DecodeStep { session, q, k, v } => {
+                Item::Step { session: *session, q, k, v }
+            }
+            _ => unreachable!("router sends only decode payloads here"),
+        })
+        .collect();
+
+    let cfg = pipe.sched_config();
+    let mut replies: Vec<Option<Reply>> = batch.iter().map(|_| None).collect();
+    let mut pending: Vec<usize> = (0..items.len()).collect();
+
+    while !pending.is_empty() {
+        {
+            let mut c = pipe.counters_mut();
+            c.peak_queue_depth = c.peak_queue_depth.max(pending.len() as u64);
+        }
+        // prefill priority: pause decode rounds to drain the prompt
+        // queue when it outweighs the waiting steps
+        let (mut wp_tokens, mut wp, mut ws) = (0usize, 0usize, 0usize);
+        for &i in &pending {
+            match &items[i] {
+                Item::Prefill { tokens, .. } => {
+                    wp += 1;
+                    wp_tokens += *tokens;
+                }
+                Item::Step { .. } => ws += 1;
+                _ => {}
+            }
+        }
+        let prefill_priority = wp > 0
+            && (wp_tokens >= cfg.max_waiting_tokens
+                || wp as f64 >= cfg.waiting_served_ratio * ws as f64);
+
+        let mut round = assemble(pipe, &cfg, &items, &pending, &mut replies, prefill_priority);
+        if round.admitted.is_empty() && round.resolved == 0 {
+            // the prefill-only pass admitted nothing (every prefill sat
+            // behind a blocked session): fall back to a normal pass,
+            // whose front item always admits or resolves
+            round = assemble(pipe, &cfg, &items, &pending, &mut replies, false);
+        }
+        debug_assert!(
+            !round.admitted.is_empty() || round.resolved > 0,
+            "every round must make progress"
+        );
+        if !round.admitted.is_empty() {
+            execute(pipe, &items, &round.admitted, &mut replies);
+        }
+        pending.retain(|&i| replies[i].is_none());
+    }
+    replies.into_iter().map(|r| r.expect("every request resolved")).collect()
+}
+
+/// One admission pass over the pending queue (see the module docs).
+fn assemble(
+    pipe: &DecodePipeline,
+    cfg: &SchedConfig,
+    items: &[Item<'_>],
+    pending: &[usize],
+    replies: &mut [Option<Reply>],
+    prefill_only: bool,
+) -> Round {
+    let mut round = Round { admitted: Vec::new(), resolved: 0 };
+    // sessions with an item already considered this pass: later items
+    // of the same session must wait (per-session FIFO)
+    let mut blocked: HashSet<u64> = HashSet::new();
+    // sessions with an item ADMITTED this round — eviction must spare
+    // them (a close's pages are already credited; a step/prefill's
+    // sequence is about to be used)
+    let mut in_round: HashSet<u64> = HashSet::new();
+    let mut reserved_pages = 0usize;
+    let mut close_credit = 0usize;
+    let mut round_tokens = 0usize;
+    let mut prefill_tokens = 0usize;
+    let mut cost_items = 0usize;
+
+    for &i in pending {
+        let item = &items[i];
+        if let Some(s) = item.session() {
+            if blocked.contains(&s) {
+                continue;
+            }
+            blocked.insert(s);
+        }
+        match item {
+            Item::Open => round.admitted.push(i),
+            Item::Close(s) => {
+                // a close funds the round: its pages are credited now
+                // and actually freed first at execution
+                close_credit += pipe.session_pages(*s);
+                in_round.insert(*s);
+                round.admitted.push(i);
+            }
+            Item::Step { session, .. } | Item::Prefill { session, .. } => {
+                let is_prefill = matches!(item, Item::Prefill { .. });
+                if prefill_only && !is_prefill {
+                    continue; // stays blocked: FIFO preserved
+                }
+                let new_tokens = match item {
+                    Item::Prefill { tokens, .. } => *tokens,
+                    _ => 1,
+                };
+                let cost = pipe.admit_cost(*session, new_tokens);
+                // token budgets shape the round; an item exceeding a
+                // budget alone is still admitted alone
+                if cost_items > 0
+                    && round_tokens + cost.tokens_after > cfg.max_batch_total_tokens
+                {
+                    continue;
+                }
+                if is_prefill
+                    && prefill_tokens > 0
+                    && prefill_tokens + new_tokens > cfg.max_batch_prefill_tokens
+                {
+                    continue;
+                }
+                // page budget against the free list + admitted closes
+                let available =
+                    |p: &DecodePipeline| (p.free_pages_now() + close_credit).saturating_sub(reserved_pages);
+                if cost.pages > available(pipe) {
+                    if cost_items > 0 {
+                        continue; // only the front item may evict
+                    }
+                    // front item: evict youngest sessions until it fits
+                    let mut exclude = in_round.clone();
+                    exclude.insert(*session);
+                    let mut fits = true;
+                    while cost.pages > available(pipe) {
+                        if pipe.evict_youngest(&exclude).is_none() {
+                            fits = false;
+                            break;
+                        }
+                    }
+                    if !fits {
+                        // nothing left to evict: the request alone
+                        // exceeds the arena — typed backpressure, the
+                        // session untouched and the queue unblocked
+                        let mut c = pipe.counters_mut();
+                        c.exhausted += 1;
+                        drop(c);
+                        replies[i] = Some(Reply::Exhausted {
+                            pages: pipe.total_pages(),
+                            free_pages: pipe.free_pages_now(),
+                        });
+                        round.resolved += 1;
+                        continue;
+                    }
+                }
+                reserved_pages += cost.pages;
+                round_tokens += cost.tokens_after;
+                if is_prefill {
+                    prefill_tokens += new_tokens;
+                }
+                cost_items += 1;
+                in_round.insert(*session);
+                round.admitted.push(i);
+            }
+        }
+    }
+    round
+}
+
+/// Execute one assembled round: closes first (they fund the credited
+/// pages), then opens (ids in arrival order), then prefills, then ALL
+/// admitted steps as one wave. Cross-session reorder within a round is
+/// unobservable — a round holds at most one item per session.
+fn execute(
+    pipe: &DecodePipeline,
+    items: &[Item<'_>],
+    admitted: &[usize],
+    replies: &mut [Option<Reply>],
+) {
+    for &i in admitted {
+        if let Item::Close(s) = &items[i] {
+            replies[i] = Some(pipe.close(*s));
+        }
+    }
+    for &i in admitted {
+        if matches!(items[i], Item::Open) {
+            replies[i] = Some(pipe.open());
+        }
+    }
+    let mut prefills = 0u64;
+    for &i in admitted {
+        if let Item::Prefill { session, q, k, v, .. } = &items[i] {
+            replies[i] = Some(pipe.prefill(*session, q, k, v));
+            prefills += 1;
+        }
+    }
+    let wave: Vec<usize> = admitted
+        .iter()
+        .copied()
+        .filter(|&i| matches!(items[i], Item::Step { .. }))
+        .collect();
+    if !wave.is_empty() {
+        let wave_items: Vec<(u64, &Tensor, &Tensor, &Tensor)> = wave
+            .iter()
+            .map(|&i| match &items[i] {
+                Item::Step { session, q, k, v } => (*session, *q, *k, *v),
+                _ => unreachable!("filtered to steps above"),
+            })
+            .collect();
+        for (&i, r) in wave.iter().zip(pipe.step_batch(&wave_items)) {
+            replies[i] = Some(r);
+        }
+    }
+    let resident = pipe.resident_tokens() as u64;
+    let mut c = pipe.counters_mut();
+    c.rounds += 1;
+    c.admitted_steps += wave.len() as u64;
+    c.admitted_prefills += prefills;
+    c.occupancy_sessions += wave.len() as u64 + prefills;
+    c.occupancy_tokens += resident;
+}

@@ -433,7 +433,11 @@ fn process_batch(
                 // wire contract in `coordinator::request`). Per-request
                 // replies, so one bad step cannot fail its batchmates.
                 let payloads: Vec<&Payload> = batch.iter().map(|r| &r.payload).collect();
-                p.run_batch(&payloads)
+                let replies = p.run_batch(&payloads);
+                // snapshot the scheduler counters so `stats()` readers see
+                // round occupancy / eviction / requeue totals per route
+                metrics.sched = p.sched_counters();
+                replies
             }
         },
     };

@@ -318,10 +318,34 @@ pub fn simulate_decode_batched(
     sessions: usize,
     batched: bool,
 ) -> SimReport {
+    let slots = if batched { sessions.max(1) } else { 1 };
+    simulate_decode_sched(design, cfg, sessions, slots)
+}
+
+/// Cycle model of a **budgeted** continuous-batching scheduler: `sessions`
+/// concurrent decode sessions served in rounds of at most `round_slots`
+/// sessions each — the hwsim mirror of `coordinator::scheduler` capping
+/// round occupancy with `max_batch_total_tokens` (and evict/requeue
+/// churn shrinking the effective wave).
+///
+/// Computed work (MACs, softmax, K/V gather) is invariant in the
+/// schedule, exactly as the software contract demands — only the wave
+/// wake count moves: each serving round pays one [`WAVE_SETUP_CYCLES`]
+/// per *slot group*, so a full decode costs
+/// `seq_len · ceil(S / round_slots)` wakes. `round_slots >= S` is the
+/// fully batched wave; `round_slots == 1` degenerates to per-request
+/// scatters ([`simulate_decode_batched`] delegates both ends here).
+pub fn simulate_decode_sched(
+    design: &Design,
+    cfg: DecodeSimConfig,
+    sessions: usize,
+    round_slots: usize,
+) -> SimReport {
     let one = simulate_decode(design, cfg);
     let s = sessions.max(1) as u64;
+    let slots = (round_slots.max(1) as u64).min(s);
     let rounds = cfg.seq_len as u64;
-    let wakes = if batched { rounds } else { rounds * s };
+    let wakes = rounds * s.div_ceil(slots);
     SimReport {
         cycles: s * one.cycles + wakes * WAVE_SETUP_CYCLES,
         energy: s as f64 * one.energy,
@@ -584,6 +608,42 @@ mod tests {
         let s16 = simulate_decode_batched(&d, cfg, 16, false);
         assert!(b16.cycles_per_elem() < s16.cycles_per_elem());
         assert_eq!(b16.energy_per_elem(), s16.energy_per_elem());
+    }
+
+    #[test]
+    fn sched_round_slots_interpolate_between_serial_and_batched() {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 8,
+            kv_heads: 2,
+            seq_len: 32,
+            d_head: 32,
+            page_size: 16,
+            lanes: 4,
+        };
+        let s = 16usize;
+        let batched = simulate_decode_batched(&d, cfg, s, true);
+        let serial = simulate_decode_batched(&d, cfg, s, false);
+        // the endpoints ARE the old model
+        assert_eq!(simulate_decode_sched(&d, cfg, s, s).cycles, batched.cycles);
+        assert_eq!(simulate_decode_sched(&d, cfg, s, 64).cycles, batched.cycles, "slots clamp to S");
+        assert_eq!(simulate_decode_sched(&d, cfg, s, 1).cycles, serial.cycles);
+        assert_eq!(simulate_decode_sched(&d, cfg, s, 0).cycles, serial.cycles, "slots clamp to 1");
+        // budgeted rounds sit strictly between, monotone in slot count
+        let mut prev = serial.cycles;
+        for slots in [2usize, 4, 8] {
+            let r = simulate_decode_sched(&d, cfg, s, slots);
+            assert!(r.cycles < prev, "slots={slots}: {} !< {prev}", r.cycles);
+            assert!(r.cycles > batched.cycles, "slots={slots}");
+            // exactly seq_len · ceil(S/slots) wave wakes
+            let wakes = 32 * (s as u64).div_ceil(slots as u64);
+            assert_eq!(r.cycles, batched.cycles - 32 * WAVE_SETUP_CYCLES + wakes * WAVE_SETUP_CYCLES);
+            // schedule is never allowed to move the computed work
+            assert_eq!(r.energy, batched.energy);
+            assert_eq!(r.elems, batched.elems);
+            assert_eq!(r.kv_bytes_read, batched.kv_bytes_read);
+            prev = r.cycles;
+        }
     }
 
     #[test]

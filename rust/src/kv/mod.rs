@@ -121,18 +121,22 @@ impl KvConfig {
 /// callers as an `Err`, never a panic.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KvError {
-    /// the arena has no free page; retry after sessions close
+    /// the arena cannot cover the requested allocation; retry after
+    /// sessions close (or after the scheduler evicts one)
     Exhausted {
-        /// total pages in the arena (all currently in use)
+        /// total pages in the arena
         pages: usize,
+        /// pages on the free list at failure time — 0 for a single-token
+        /// append, possibly > 0 for a block append that needed more
+        free_pages: usize,
     },
 }
 
 impl fmt::Display for KvError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            KvError::Exhausted { pages } => {
-                write!(f, "kv pool exhausted (all {pages} pages in use)")
+            KvError::Exhausted { pages, free_pages } => {
+                write!(f, "kv pool exhausted ({free_pages} of {pages} pages free)")
             }
         }
     }
@@ -301,7 +305,7 @@ impl KvPool {
         let slot = seq.len % psize;
         if slot == 0 {
             let Some(p) = self.free.pop() else {
-                return Err(KvError::Exhausted { pages: self.cfg.pages });
+                return Err(KvError::Exhausted { pages: self.cfg.pages, free_pages: 0 });
             };
             self.k_aff[p as usize] = seq.k_affine;
             self.v_aff[p as usize] = seq.v_affine;
@@ -330,6 +334,14 @@ impl KvPool {
         (seq.len + extra_tokens).div_ceil(self.cfg.page_size) - seq.pages.len()
     }
 
+    /// Pages ONE more decode step on `seq` would allocate (0 while the
+    /// tail page has a free slot, 1 at a page boundary) — the scheduler's
+    /// admission probe, so exhaustion is predicted at admit time instead
+    /// of discovered mid-wave. Compare against [`Self::free_pages`].
+    pub fn pages_needed_for_step(&self, seq: &KvSeq) -> usize {
+        self.pages_needed(seq, 1)
+    }
+
     /// Append a whole block of tokens (`tokens * kv_heads * d_head` each
     /// for K and V, `[t][g][d]` row-major) to `seq` — the chunked-prefill
     /// ingest path. **Atomic**: capacity for the entire block is checked
@@ -349,7 +361,10 @@ impl KvPool {
         assert_eq!(k_rows.len(), v_rows.len(), "k/v blocks must match");
         let tokens = k_rows.len() / gd;
         if self.pages_needed(seq, tokens) > self.free.len() {
-            return Err(KvError::Exhausted { pages: self.cfg.pages });
+            return Err(KvError::Exhausted {
+                pages: self.cfg.pages,
+                free_pages: self.free.len(),
+            });
         }
         for (kr, vr) in k_rows.chunks_exact(gd).zip(v_rows.chunks_exact(gd)) {
             self.append(seq, kr, vr).expect("block capacity reserved above");
@@ -577,7 +592,7 @@ mod tests {
         assert_eq!(pool.free_pages(), 0);
         // a 17th token needs a 5th page: typed backpressure
         let err = pool.append(&mut a, &row, &row).unwrap_err();
-        assert_eq!(err, KvError::Exhausted { pages: 4 });
+        assert_eq!(err, KvError::Exhausted { pages: 4, free_pages: 0 });
         assert!(err.to_string().contains("exhausted"), "{err}");
         assert_eq!(a.len(), 16, "failed append must not advance the sequence");
         // a second sequence cannot even start
@@ -632,7 +647,7 @@ mod tests {
         // more pages but only 1 is free -> nothing changes
         assert_eq!(pool_a.pages_needed(&a, 8), 2);
         let err = pool_a.append_block(&mut a, &kblock[..8 * g * d], &vblock[..8 * g * d]);
-        assert_eq!(err, Err(KvError::Exhausted { pages: 4 }));
+        assert_eq!(err, Err(KvError::Exhausted { pages: 4, free_pages: 1 }));
         assert_eq!(a.len(), 10, "failed block must not land partially");
         assert_eq!(pool_a.free_pages(), 1);
         // a block that fits the tail slots + last page still lands
@@ -669,6 +684,35 @@ mod tests {
             }
             assert_eq!(pool.free_pages(), 32, "all pages reclaimed each round");
         }
+    }
+
+    #[test]
+    fn admission_probes_track_the_free_list_exactly() {
+        let mut rng = Rng::new(11);
+        let mut pool = pool4(); // 4 pages x 4 tokens
+        let mut seq = seq_for(&pool);
+        let row = rand_row(&mut rng, 16);
+        // empty sequence: the first step must allocate a page
+        assert_eq!(pool.pages_needed_for_step(&seq), 1);
+        assert_eq!(pool.free_pages(), 4);
+        for t in 0..16 {
+            // the probe predicts exactly when append will take a page:
+            // 1 at every page boundary (t % 4 == 0), else 0
+            let want = usize::from(t % 4 == 0);
+            assert_eq!(pool.pages_needed_for_step(&seq), want, "token {t}");
+            let free_before = pool.free_pages();
+            pool.append(&mut seq, &row, &row).unwrap();
+            assert_eq!(pool.free_pages(), free_before - want, "token {t}");
+        }
+        // arena full, tail page full: the probe predicts the exhaustion
+        assert_eq!(pool.pages_needed_for_step(&seq), 1);
+        assert_eq!(pool.free_pages(), 0);
+        assert!(pool.pages_needed_for_step(&seq) > pool.free_pages());
+        let err = pool.append(&mut seq, &row, &row).unwrap_err();
+        assert_eq!(err, KvError::Exhausted { pages: 4, free_pages: 0 });
+        // multi-token probe agrees with the single-step one at +1
+        assert_eq!(pool.pages_needed(&seq, 1), pool.pages_needed_for_step(&seq));
+        assert_eq!(pool.close(seq), 4);
     }
 
     #[test]

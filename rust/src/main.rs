@@ -109,7 +109,10 @@ fn serve(args: &Args) -> Result<()> {
     let mut rng = Rng::new(7);
     if task == "decode" {
         serve_decode(&coordinator, &mut rng, &variant, requests, rate)?;
-        return coordinator.shutdown();
+        coordinator.shutdown()?;
+        // second scenario: an arena several times smaller than the
+        // session demand — the scheduler must evict/restore, not fail
+        return serve_decode_overcommit(config(args)?, &mut rng);
     }
     let gaps = workload::poisson_arrivals_us(&mut rng, requests, rate);
     let t0 = std::time::Instant::now();
@@ -227,6 +230,9 @@ fn serve_decode(
     for rx in pending {
         match rx.recv() {
             Ok(Reply::Token(_)) => ok += 1,
+            Ok(Reply::Exhausted { pages, free_pages }) => {
+                println!("backpressure: kv pool exhausted ({free_pages} of {pages} pages free)")
+            }
             Ok(Reply::Error(e)) => println!("error: {e}"),
             Ok(other) => println!("unexpected step reply {other:?}"),
             Err(_) => println!("dropped"),
@@ -255,6 +261,7 @@ fn serve_decode(
             m.latency.percentile_us(0.50),
             m.latency.percentile_us(0.99),
         );
+        println!("  sched      {}", m.sched.summary());
     }
     println!("  pjrt executions: {}", stats.executions);
     if ok != steps {
@@ -264,6 +271,87 @@ fn serve_decode(
         return Err(anyhow!("sessions streamed {steps} steps but freed no KV pages"));
     }
     Ok(())
+}
+
+/// Overcommit smoke: a 4-page arena (64 KV slots) serving 6 sessions x
+/// (3-token prefill + 12 steps) = 90 resident tokens of demand. The
+/// continuous-batching scheduler must evict and transparently restore
+/// sessions — every step still answers `Token` — and the arena must
+/// come back whole: a fresh session prefills all 64 slots afterwards.
+fn serve_decode_overcommit(cfg: ServerConfig, rng: &mut Rng) -> Result<()> {
+    let (h, g, d) = (4usize, 2usize, 32usize);
+    let variant = "decode:rexp:uint8:g2:p4";
+    let (sessions, steps) = (6usize, 12usize);
+    let mut routes = RouteTable::default();
+    routes.decode = Some(variant.to_string());
+    println!("overcommit smoke: variant={variant} sessions={sessions} steps/session={steps}");
+    let c = Coordinator::start(cfg, routes)?;
+    let mut ids = Vec::with_capacity(sessions);
+    for _ in 0..sessions {
+        match c.call(Payload::DecodeOpen)? {
+            Reply::Session(id) => ids.push(id),
+            other => return Err(anyhow!("open failed: {other:?}")),
+        }
+    }
+    // six 1-page prompts already outgrow the 4-page arena: eviction
+    // starts here, and no prefill may fail
+    for &id in &ids {
+        let (q, k, v) = workload::decode_prefill_chunk(rng, 3, h, g, d, 1.0);
+        match c.call(Payload::DecodePrefill { session: id, q, k, v })? {
+            Reply::Prefill(_) => {}
+            other => return Err(anyhow!("prefill failed under overcommit: {other:?}")),
+        }
+    }
+    // steps in all-sessions waves; every one must answer Token
+    let mut ok = 0usize;
+    for _ in 0..steps {
+        let mut pending = Vec::with_capacity(sessions);
+        for &id in &ids {
+            let (q, k, v) = workload::decode_qkv_step(rng, h, g, d, 1.0);
+            pending.push(c.submit(Payload::DecodeStep { session: id, q, k, v })?);
+        }
+        for rx in pending {
+            match rx.recv() {
+                Ok(Reply::Token(_)) => ok += 1,
+                Ok(other) => return Err(anyhow!("step failed under overcommit: {other:?}")),
+                Err(_) => return Err(anyhow!("step reply dropped")),
+            }
+        }
+    }
+    for id in ids {
+        match c.call(Payload::DecodeClose(id))? {
+            Reply::Closed { .. } => {}
+            other => return Err(anyhow!("close failed: {other:?}")),
+        }
+    }
+    // the arena must round-trip: a fresh session can prefill EVERY slot
+    let id = match c.call(Payload::DecodeOpen)? {
+        Reply::Session(id) => id,
+        other => return Err(anyhow!("open failed: {other:?}")),
+    };
+    let (q, k, v) = workload::decode_prefill_chunk(rng, 64, h, g, d, 1.0);
+    match c.call(Payload::DecodePrefill { session: id, q, k, v })? {
+        Reply::Prefill(_) => {}
+        other => return Err(anyhow!("64-token prefill after reclaim failed: {other:?}")),
+    }
+    match c.call(Payload::DecodeClose(id))? {
+        Reply::Closed { pages: 4 } => {}
+        other => return Err(anyhow!("full-arena close must free 4 pages, got {other:?}")),
+    }
+    let stats = c.stats()?;
+    let m = stats.per_task.get("decode").ok_or_else(|| anyhow!("no decode metrics"))?;
+    println!("  sched      {}", m.sched.summary());
+    if m.sched.evicted == 0 {
+        return Err(anyhow!("90 tokens through a 64-slot arena must evict at least once"));
+    }
+    if m.sched.exhausted != 0 {
+        return Err(anyhow!("no session outgrows the arena alone; exhaustion must stay 0"));
+    }
+    println!(
+        "overcommit smoke: {ok} steps served, {} evictions, {} restores",
+        m.sched.evicted, m.sched.requeued
+    );
+    c.shutdown()
 }
 
 fn softmax(args: &Args) -> Result<()> {

@@ -163,6 +163,12 @@ pub struct ConformanceCase {
     /// single steps, chunked prefills AND one `DecodeBatch` wave of this
     /// many sessions, asserting the two sweep orders bit-identical
     pub sessions: usize,
+    /// arrival-schedule seed for the continuous-batching invariant: the
+    /// scheduler differential derives an adversarial admit/evict/resume
+    /// interleaving of the case's sessions from this seed (on an
+    /// overcommitted arena) and asserts every reply bit-identical to
+    /// serial per-session replay
+    pub arrival: u64,
     pub seed: u64,
 }
 
@@ -219,8 +225,13 @@ pub fn conformance_sweep() -> Vec<ConformanceCase> {
             seq_len: rng.usize(3, max_seq),
             page_size: page_sizes[(i / 3) % page_sizes.len()],
             mask: masks[i % masks.len()],
-            // drawn LAST so earlier fields reproduce pre-PR-5 sweeps
+            // drawn after d_head/seq_len so earlier fields reproduce
+            // pre-PR-5 sweeps …
             sessions: rng.usize(1, if full { 6 } else { 4 }),
+            // … and the arrival seed drawn after `sessions` so PR-5
+            // sweeps reproduce too (each new axis appends to the draw
+            // order, never reshuffles it)
+            arrival: rng.next_u64(),
             seed: 0xC0DE_0000 + i as u64,
         });
     }
@@ -242,6 +253,8 @@ mod tests {
             assert!(c.heads >= 1 && c.kv_heads >= 1);
             assert_eq!(c.heads % c.kv_heads, 0, "{c:?}");
             assert!((1..=6).contains(&c.sessions), "{c:?}");
+            // at least two distinct arrival seeds across the table (the
+            // axis genuinely varies) — checked below over the whole sweep
             assert!(c.n >= 1 && c.rows >= 1 && c.seq_len >= 3);
             assert!(c.scale > 0.0);
             assert!(matches!(c.page_size, 8 | 64));
@@ -273,6 +286,9 @@ mod tests {
         for mk in [MaskKind::Dense, MaskKind::Causal, MaskKind::Padding] {
             assert!(a.iter().any(|c| c.mask == mk));
         }
+        let distinct_arrivals: std::collections::HashSet<u64> =
+            a.iter().map(|c| c.arrival).collect();
+        assert!(distinct_arrivals.len() > 1, "arrival axis must vary");
     }
 
     #[test]

@@ -21,6 +21,13 @@
 //!    the head-major reference sweep (pages re-read once per query
 //!    head), bit-identical — single steps, chunked prefills, and one
 //!    S-session `DecodeBatch` wave per round (`case.sessions` sizes S).
+//! 7. the continuous-batching scheduler: an adversarial arrival
+//!    schedule (from `case.arrival`) of S sessions on an OVERCOMMITTED
+//!    arena — every session fits alone, the total demand does not —
+//!    replies bit-identically to serial per-session replay through any
+//!    admit/evict/resume interleaving, under randomized round budgets;
+//!    nothing starves, nothing hits typed exhaustion, S >= 2 provably
+//!    evicts, and the KV free list round-trips exactly.
 //!
 //! `cargo test -q` runs the small sweep; `CONFORMANCE_FULL=1` (the CI
 //! `test-heavy` gate, `make test-heavy`) widens it.
@@ -350,6 +357,210 @@ fn group_major_sweep_bit_identical_to_head_major() {
             kv_h.close(seq);
         }
         assert_eq!(kv_h.free_pages(), pages, "{case:?}: head-major arena round-trips");
+    }
+}
+
+/// Invariant 7: the continuous-batching scheduler. Per case, S sessions
+/// each stream `seq_len` tokens (an optional prompt chunk, then single
+/// steps) into ONE `DecodePipeline::run_batch` call, interleaved by an
+/// adversarial arrival schedule drawn from `case.arrival`, onto an arena
+/// sized so every session fits alone but the union does not. All closes
+/// go last, so the overcommit must bite: the scheduler has to evict and
+/// later restore sessions mid-stream. Every Prefill/Token reply must be
+/// bit-identical to a serial replay of that session alone on a private
+/// arena, under RANDOMIZED round budgets — admission shaping may change
+/// round composition, never bytes. Nothing starves (every item gets a
+/// terminal reply), typed exhaustion never fires, and the free list
+/// round-trips exactly after the closes.
+#[test]
+fn scheduler_arrival_schedules_replay_bit_identical_on_overcommitted_arena() {
+    use lutmax::attention::DECODE_AFFINE;
+    use lutmax::coordinator::{DecodePipeline, Payload, Reply, SchedConfig};
+    use lutmax::runtime::Tensor;
+
+    /// One queued ingress event; the f32 tensors are kept so the serial
+    /// replay re-quantizes the exact same bytes the pipeline saw.
+    enum Ev {
+        Prefill(Tensor, Tensor, Tensor),
+        Step(Tensor, Tensor, Tensor),
+    }
+
+    // the decode route's fixed page size (`:pP` overrides page COUNT)
+    const ROUTE_PAGE: usize = 16;
+
+    for case in conformance_sweep() {
+        let (h, g, d, s) = (case.heads, case.kv_heads, case.d_head, case.sessions);
+        let t_total = case.seq_len;
+        let per = t_total.div_ceil(ROUTE_PAGE);
+        // every session fits alone; for s >= 2 the union does not
+        let pages = per * (s - 1).max(1);
+        let route = format!(
+            "decode:{}:{}:g{}:p{}",
+            case.mode.name(),
+            case.prec.name(),
+            g,
+            pages
+        );
+        let p = DecodePipeline::load(&route, 3).unwrap();
+
+        // replies must be invariant under ANY budget choice — draw the
+        // round-shaping knobs from the arrival seed too
+        let mut arr = Rng::new(case.arrival);
+        p.set_sched_config(SchedConfig {
+            max_batch_total_tokens: arr.usize(4, 64),
+            max_batch_prefill_tokens: arr.usize(2, 16),
+            waiting_served_ratio: 1.2,
+            max_waiting_tokens: arr.usize(4, 64),
+        });
+
+        let opens: Vec<Payload> = (0..s).map(|_| Payload::DecodeOpen).collect();
+        let refs: Vec<&Payload> = opens.iter().collect();
+        let ids: Vec<u64> = p
+            .run_batch(&refs)
+            .into_iter()
+            .map(|r| match r {
+                Reply::Session(id) => id,
+                other => panic!("{case:?}: open replied {other:?}"),
+            })
+            .collect();
+
+        // per-session traces: an optional prompt chunk, then single
+        // steps — `seq_len` tokens each
+        let traces: Vec<Vec<Ev>> = (0..s)
+            .map(|si| {
+                let mut rng = Rng::new(case.seed ^ (0xA11CE << 8) ^ si as u64);
+                let chunk = rng.usize(0, (t_total - 1).min(4));
+                let mut tr = Vec::new();
+                if chunk > 0 {
+                    tr.push(Ev::Prefill(
+                        Tensor::f32(vec![chunk, h, d], rng.normal_vec(chunk * h * d, 1.0)),
+                        Tensor::f32(vec![chunk, g, d], rng.normal_vec(chunk * g * d, 1.0)),
+                        Tensor::f32(vec![chunk, g, d], rng.normal_vec(chunk * g * d, 1.0)),
+                    ));
+                }
+                for _ in chunk..t_total {
+                    tr.push(Ev::Step(
+                        Tensor::f32(vec![h, d], rng.normal_vec(h * d, 1.0)),
+                        Tensor::f32(vec![g, d], rng.normal_vec(g * d, 1.0)),
+                        Tensor::f32(vec![g, d], rng.normal_vec(g * d, 1.0)),
+                    ));
+                }
+                tr
+            })
+            .collect();
+
+        // adversarial merge: per-session order preserved, interleaving
+        // drawn from the arrival axis. Closes go in a shuffled FINAL
+        // segment so no session can release pages before every trace
+        // has demanded its own — the overcommit has to bite.
+        let mut cursors = vec![0usize; s];
+        let mut payloads: Vec<Payload> = Vec::new();
+        let mut owner: Vec<usize> = Vec::new();
+        loop {
+            let open: Vec<usize> =
+                (0..s).filter(|&si| cursors[si] < traces[si].len()).collect();
+            if open.is_empty() {
+                break;
+            }
+            let si = *arr.choice(&open);
+            let ev = &traces[si][cursors[si]];
+            cursors[si] += 1;
+            payloads.push(match ev {
+                Ev::Prefill(q, k, v) => Payload::DecodePrefill {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+                Ev::Step(q, k, v) => Payload::DecodeStep {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+            });
+            owner.push(si);
+        }
+        let mut close_order: Vec<usize> = (0..s).collect();
+        for i in (1..s).rev() {
+            close_order.swap(i, arr.usize(0, i));
+        }
+        for &si in &close_order {
+            payloads.push(Payload::DecodeClose(ids[si]));
+            owner.push(si);
+        }
+
+        let refs: Vec<&Payload> = payloads.iter().collect();
+        let mut replies: Vec<Vec<Reply>> = vec![Vec::new(); s];
+        for (r, &si) in p.run_batch(&refs).into_iter().zip(&owner) {
+            replies[si].push(r);
+        }
+
+        // the arena round-trips exactly once every session has closed
+        assert_eq!(p.kv_pages(), Some((pages, pages)), "{case:?}: free-list round-trip");
+        let c = p.sched_counters();
+        assert_eq!(c.exhausted, 0, "{case:?}: every session fits alone");
+        assert!(c.rounds >= 1, "{case:?}");
+        if s >= 2 {
+            assert!(c.evicted >= 1, "{case:?}: the overcommit must evict");
+        }
+
+        // serial replay: each session alone on a private arena must
+        // reproduce every Prefill/Token reply bit for bit
+        let dec = DecodeAttention::new(case.mode, case.prec, None).unwrap();
+        let groups = HeadGroups::new(h, g).unwrap();
+        let mut scr = AttnScratch::new();
+        for si in 0..s {
+            let mut kv = KvPool::new(KvConfig {
+                pages: per + 1,
+                page_size: ROUTE_PAGE,
+                kv_heads: g,
+                d_head: d,
+            });
+            let mut seq = KvSeq::new(groups, DECODE_AFFINE, DECODE_AFFINE);
+            let mut got = replies[si].iter();
+            for (ei, ev) in traces[si].iter().enumerate() {
+                let (q, k, v, t) = match ev {
+                    Ev::Prefill(q, k, v) => (q, k, v, q.dims[0]),
+                    Ev::Step(q, k, v) => (q, k, v, 1),
+                };
+                let mut qb = vec![0i8; t * h * d];
+                let mut kb = vec![0i8; t * g * d];
+                let mut vb = vec![0i8; t * g * d];
+                quant::quantize_into(q.as_f32().unwrap(), DECODE_AFFINE, &mut qb);
+                quant::quantize_into(k.as_f32().unwrap(), DECODE_AFFINE, &mut kb);
+                quant::quantize_into(v.as_f32().unwrap(), DECODE_AFFINE, &mut vb);
+                let mut want = vec![0.0f32; t * h * d];
+                match ev {
+                    Ev::Prefill(..) => dec
+                        .prefill_chunk(
+                            &mut kv, &mut seq, &qb, DECODE_AFFINE, &kb, &vb, &mut want, &mut scr,
+                        )
+                        .unwrap(),
+                    Ev::Step(..) => dec
+                        .step(&mut kv, &mut seq, &qb, DECODE_AFFINE, &kb, &vb, &mut want, &mut scr)
+                        .unwrap(),
+                }
+                match (ev, got.next()) {
+                    (Ev::Prefill(..), Some(Reply::Prefill(out)))
+                    | (Ev::Step(..), Some(Reply::Token(out))) => assert_eq!(
+                        out.as_f32().unwrap(),
+                        &want[..],
+                        "{case:?} session {si} event {ei}: scheduled reply != serial replay"
+                    ),
+                    (_, other) => panic!("{case:?} session {si} event {ei}: got {other:?}"),
+                }
+            }
+            // Closed.pages is an ops number (0 if the session closed
+            // while evicted) — only the variant is part of the contract
+            assert!(
+                matches!(got.next(), Some(Reply::Closed { .. })),
+                "{case:?} session {si}: close reply"
+            );
+            assert!(got.next().is_none(), "{case:?} session {si}: reply count");
+            assert_eq!(seq.len(), t_total, "{case:?} session {si}");
+            kv.close(seq);
+        }
     }
 }
 

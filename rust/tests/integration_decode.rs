@@ -182,8 +182,9 @@ fn kv_exhaustion_hammer_reclaims_every_page() {
                 let mut out = vec![0.0f32; 2 * 4];
                 match dec.step(&mut kv, &mut seq, &q, a, &kr, &vr, &mut out, &mut scr) {
                     Ok(()) => {}
-                    Err(KvError::Exhausted { pages }) => {
+                    Err(KvError::Exhausted { pages, free_pages }) => {
                         assert_eq!(pages, 6);
+                        assert_eq!(free_pages, 0, "append starves only on an empty free list");
                         exhausted += 1;
                         // close the oldest live session and retry once
                         if let Some(victim) = (!live.is_empty()).then(|| live.remove(0)) {

@@ -11,15 +11,23 @@
 //!   (the `DecodeStepBatch` rounds) reply bit-identically to a
 //!   per-session serial replay, and the KV free list exactly round-trips
 //!   after all closes.
-//! * **exhaustion under batching**: `KvError::Exhausted` mid-wave fails
-//!   only its own session — batchmates' tokens in the same round are
+//! * **exhaustion under batching**: a raw `DecodeBatch` wave fails only
+//!   the starved session — batchmates' tokens in the same round are
 //!   unaffected (bit-identical to their serial replay) and the failed
-//!   step is retryable after a close frees pages.
+//!   step is retryable after a close frees pages. Through the serving
+//!   route the scheduler goes further: it EVICTS the youngest idle
+//!   session instead, so the pressed step streams on and the victim is
+//!   transparently restored (bit-identical) later; only a request that
+//!   can never fit alone replies typed `Reply::Exhausted`.
+//! * **chaos soak**: sessions whose total demand is several times the
+//!   arena, randomized interleavings split across many `run_batch`
+//!   calls — zero lost sessions, zero typed exhaustion, every reply
+//!   bit-identical to serial replay, exact free-list round-trip.
 
 use lutmax::attention::{
     AttnScratch, DecodeAttention, DecodeBatch, DecodeStepTask, DECODE_AFFINE,
 };
-use lutmax::coordinator::{DecodePipeline, Payload, Reply};
+use lutmax::coordinator::{DecodePipeline, Payload, Reply, SchedConfig};
 use lutmax::kv::{HeadGroups, KvConfig, KvError, KvPool, KvSeq};
 use lutmax::lut::Precision;
 use lutmax::quant;
@@ -266,7 +274,7 @@ fn exhaustion_mid_wave_leaves_batchmates_bit_identical() {
         } else {
             assert_eq!(res[0], Ok(()));
             assert_eq!(res[1], Ok(()));
-            assert_eq!(res[2], Err(KvError::Exhausted { pages: 5 }));
+            assert_eq!(res[2], Err(KvError::Exhausted { pages: 5, free_pages: 0 }));
             assert!(
                 wave_out[2].iter().all(|&o| o == 7.0),
                 "starved session's output must be untouched"
@@ -458,13 +466,15 @@ fn interleaved_pipeline_schedules_replay_bit_identical() {
     }
 }
 
-/// Exhaustion through the serving route (`pP` sizes the arena): the
-/// starved step in a batched round replies a retryable error, batchmates
-/// stream on, and a close unblocks the retry.
+/// KV pressure through the serving route (`pP` sizes the arena): when a
+/// round's steps outgrow the arena the scheduler EVICTS the youngest
+/// idle session instead of failing — every step in the batch still
+/// replies a bit-identical `Token`, and the evicted session is
+/// transparently restored (bit-identical) when its next step arrives.
 #[test]
-fn route_exhaustion_in_a_batched_round_is_isolated_and_retryable() {
+fn route_exhaustion_evicts_youngest_and_restores_bit_identical() {
     let (h, g, d) = (2usize, 1usize, 4usize);
-    // 2 pages x 16 slots: the third session's first step cannot allocate
+    // 2 pages x 16 slots: three 1-token sessions cannot all be resident
     let p = DecodePipeline::load("decode:rexp:uint8:p2", 2).unwrap();
     let mut rng = Rng::new(505);
     let opens = vec![Payload::DecodeOpen, Payload::DecodeOpen, Payload::DecodeOpen];
@@ -491,58 +501,265 @@ fn route_exhaustion_in_a_batched_round_is_isolated_and_retryable() {
         })
         .collect();
     let refs: Vec<&Payload> = batch.iter().collect();
+    // round 1 admits the first two steps (both pages reserved); round 2's
+    // front item is the third step, which evicts the youngest resident
+    // session (ids[1]) — nobody errors
     let replies = p.run_batch(&refs);
-    assert!(matches!(replies[0], Reply::Token(_)), "{:?}", replies[0]);
-    assert!(matches!(replies[1], Reply::Token(_)), "{:?}", replies[1]);
-    match &replies[2] {
-        Reply::Error(e) => assert!(e.contains("exhausted"), "{e}"),
-        other => panic!("starved step must error, got {other:?}"),
-    }
-    // batchmate replies are bit-identical to a serial local replay
+    let c = p.sched_counters();
+    assert_eq!(c.evicted, 1, "the third step must evict, not fail");
+    assert_eq!(c.exhausted, 0);
+
+    // every step's Token — including the victim's, served BEFORE its
+    // eviction in the same call — is bit-identical to a serial replay of
+    // its session alone
     let a = DECODE_AFFINE;
     let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
-    let mut kv = KvPool::new(KvConfig { pages: 2, page_size: 16, kv_heads: g, d_head: d });
-    let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
     let mut scr = AttnScratch::new();
-    let (q0, k0, v0) = &steps[0];
-    let mut qb = vec![0i8; h * d];
-    let mut kb = vec![0i8; g * d];
-    let mut vb = vec![0i8; g * d];
-    quant::quantize_into(q0.as_f32().unwrap(), a, &mut qb);
-    quant::quantize_into(k0.as_f32().unwrap(), a, &mut kb);
-    quant::quantize_into(v0.as_f32().unwrap(), a, &mut vb);
-    let mut want = vec![0.0f32; h * d];
-    dec.step(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr).unwrap();
-    match &replies[0] {
-        Reply::Token(t) => assert_eq!(t.as_f32().unwrap(), &want[..]),
-        other => panic!("unexpected {other:?}"),
+    let serial_step = |seq: &mut KvSeq,
+                           kv: &mut KvPool,
+                           (q, k, v): &(Tensor, Tensor, Tensor),
+                           scr: &mut AttnScratch| {
+        let mut qb = vec![0i8; h * d];
+        let mut kb = vec![0i8; g * d];
+        let mut vb = vec![0i8; g * d];
+        quant::quantize_into(q.as_f32().unwrap(), a, &mut qb);
+        quant::quantize_into(k.as_f32().unwrap(), a, &mut kb);
+        quant::quantize_into(v.as_f32().unwrap(), a, &mut vb);
+        let mut want = vec![0.0f32; h * d];
+        dec.step(kv, seq, &qb, a, &kb, &vb, &mut want, scr).unwrap();
+        want
+    };
+    for i in 0..3 {
+        let mut kv = KvPool::new(KvConfig { pages: 2, page_size: 16, kv_heads: g, d_head: d });
+        let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+        let want = serial_step(&mut seq, &mut kv, &steps[i], &mut scr);
+        match &replies[i] {
+            Reply::Token(t) => assert_eq!(t.as_f32().unwrap(), &want[..], "session {i}"),
+            other => panic!("session {i}: want Token, got {other:?}"),
+        }
+        kv.close(seq);
     }
 
-    // retry while still full: same typed backpressure
-    let (q2, k2, v2) = steps[2].clone();
-    let retry = Payload::DecodeStep { session: ids[2], q: q2.clone(), k: k2.clone(), v: v2.clone() };
-    match &p.run_batch(&[&retry])[0] {
-        Reply::Error(e) => assert!(e.contains("exhausted"), "{e}"),
-        other => panic!("unexpected {other:?}"),
+    // a second step for the evicted session restores it (evicting the
+    // next-youngest in turn) and stays on its own bit-exact stream
+    let (q2, k2, v2) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+    let retry =
+        Payload::DecodeStep { session: ids[1], q: q2.clone(), k: k2.clone(), v: v2.clone() };
+    let reply = p.run_batch(&[&retry]).remove(0);
+    let c = p.sched_counters();
+    assert!(c.evicted >= 2, "restoring must evict the next victim");
+    assert!(c.requeued >= 1, "the restore must be counted");
+    let mut kv = KvPool::new(KvConfig { pages: 2, page_size: 16, kv_heads: g, d_head: d });
+    let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+    serial_step(&mut seq, &mut kv, &steps[1], &mut scr);
+    let want = serial_step(&mut seq, &mut kv, &(q2, k2, v2), &mut scr);
+    match &reply {
+        Reply::Token(t) => assert_eq!(t.as_f32().unwrap(), &want[..], "restored step"),
+        other => panic!("restored step: want Token, got {other:?}"),
     }
-    // close a batchmate -> the retry lands
-    let close = Payload::DecodeClose(ids[0]);
-    match &p.run_batch(&[&close])[0] {
+    kv.close(seq);
+
+    // closes: a session closed while EVICTED reports 0 pages (an ops
+    // number, not part of the bit-identity contract) — the arena still
+    // round-trips exactly
+    let (free, total) = p.kv_pages().unwrap();
+    assert_eq!(total, 2, "pP must size the arena");
+    assert_eq!(free, 0, "two single-token sessions resident");
+    for (i, id) in ids.iter().enumerate() {
+        let close = Payload::DecodeClose(*id);
+        match &p.run_batch(&[&close])[0] {
+            // ids[2] was evicted to restore ids[1]: it closes from
+            // parked replay state with no resident pages
+            Reply::Closed { pages } => {
+                assert_eq!(*pages, if i == 2 { 0 } else { 1 }, "session {i}")
+            }
+            other => panic!("close {i}: unexpected {other:?}"),
+        }
+    }
+    assert_eq!(p.kv_pages(), Some((2, 2)), "arena round-trips after all closes");
+}
+
+/// A request that can NEVER fit — the session alone outgrows the whole
+/// arena, so eviction cannot help — replies typed, retryable
+/// `Reply::Exhausted` with the pool numbers; the session is untouched
+/// and its close still reclaims every page.
+#[test]
+fn single_session_overflow_replies_typed_exhaustion_and_close_reclaims() {
+    let (h, g, d) = (2usize, 1usize, 4usize);
+    // 1 page x 16 slots: a 16-token prompt fills the arena exactly
+    let p = DecodePipeline::load("decode:rexp:uint8:p1", 2).unwrap();
+    let mut rng = Rng::new(507);
+    let id = match p.run_batch(&[&Payload::DecodeOpen])[0] {
+        Reply::Session(id) => id,
+        ref other => panic!("unexpected {other:?}"),
+    };
+    let (cq, ck, cv) = workload::decode_prefill_chunk(&mut rng, 16, h, g, d, 1.0);
+    let pre = Payload::DecodePrefill { session: id, q: cq, k: ck, v: cv };
+    assert!(matches!(&p.run_batch(&[&pre])[0], Reply::Prefill(_)));
+    // token 17 needs a second page that can never exist (the session
+    // itself holds the only one) -> typed backpressure, not eviction
+    let (sq, sk, sv) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+    let step = Payload::DecodeStep { session: id, q: sq, k: sk, v: sv };
+    match &p.run_batch(&[&step])[0] {
+        Reply::Exhausted { pages, free_pages } => {
+            assert_eq!((*pages, *free_pages), (1, 0));
+        }
+        other => panic!("want typed exhaustion, got {other:?}"),
+    }
+    // the session is unchanged: the same step sees the same answer
+    assert!(matches!(&p.run_batch(&[&step])[0], Reply::Exhausted { .. }));
+    let c = p.sched_counters();
+    assert_eq!(c.exhausted, 2);
+    assert_eq!(c.evicted, 0, "eviction cannot help a request that never fits");
+    assert_eq!(p.kv_pages(), Some((0, 1)));
+    match &p.run_batch(&[&Payload::DecodeClose(id)])[0] {
         Reply::Closed { pages } => assert_eq!(*pages, 1),
         other => panic!("unexpected {other:?}"),
     }
-    let retry = Payload::DecodeStep { session: ids[2], q: q2, k: k2, v: v2 };
-    assert!(
-        matches!(&p.run_batch(&[&retry])[0], Reply::Token(_)),
-        "retry after reclaim must serve"
-    );
-    let (free, total) = p.kv_pages().unwrap();
-    assert_eq!(total, 2, "pP must size the arena");
-    assert_eq!(free, 0);
-    for id in &ids[1..] {
-        let close = Payload::DecodeClose(*id);
-        assert!(matches!(&p.run_batch(&[&close])[0], Reply::Closed { .. }));
+    assert_eq!(p.kv_pages(), Some((1, 1)), "close reclaims the page");
+}
+
+/// Chaos soak through the serving route: 12 sessions whose total demand
+/// is ~3x the arena, randomized interleavings split across many
+/// `run_batch` calls (evicted replay state must survive call
+/// boundaries), shrunk round budgets, closes last so the overcommit has
+/// to bite. Zero lost sessions, zero typed exhaustion, every reply
+/// bit-identical to a serial per-session replay, and the free list
+/// round-trips exactly.
+#[test]
+fn chaos_soak_overcommitted_arena_never_loses_a_session() {
+    let (h, g, d) = (4usize, 2usize, 8usize);
+    // 4 pages x 16 slots = 64 resident tokens; total demand 120..240
+    let p = DecodePipeline::load("decode:rexp:uint8:g2:p4", 3).unwrap();
+    p.set_sched_config(SchedConfig {
+        max_batch_total_tokens: 48,
+        max_batch_prefill_tokens: 6,
+        waiting_served_ratio: 1.2,
+        max_waiting_tokens: 12,
+    });
+    let n = 12usize;
+    let mut rng = Rng::new(508);
+
+    // traces with stored tensors, so the replay reuses the exact bytes
+    let traces: Vec<Vec<Ev>> = (0..n)
+        .map(|_| {
+            let mut tr = Vec::new();
+            let tokens = rng.usize(10, 20);
+            let chunk = rng.usize(0, 3);
+            if chunk > 0 {
+                let (cq, ck, cv) = workload::decode_prefill_chunk(&mut rng, chunk, h, g, d, 1.0);
+                tr.push(Ev::Prefill(cq, ck, cv));
+            }
+            for _ in chunk..tokens {
+                let (sq, sk, sv) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+                tr.push(Ev::Step(sq, sk, sv));
+            }
+            tr
+        })
+        .collect();
+
+    let opens: Vec<Payload> = (0..n).map(|_| Payload::DecodeOpen).collect();
+    let refs: Vec<&Payload> = opens.iter().collect();
+    let ids: Vec<u64> = p
+        .run_batch(&refs)
+        .into_iter()
+        .map(|r| match r {
+            Reply::Session(id) => id,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+
+    // drive random slices of the merged work through separate calls
+    let mut cursors = vec![0usize; n];
+    let mut replies: Vec<Vec<Reply>> = vec![Vec::new(); n];
+    while (0..n).any(|si| cursors[si] < traces[si].len()) {
+        let mut payloads: Vec<Payload> = Vec::new();
+        let mut owner: Vec<usize> = Vec::new();
+        for _ in 0..rng.usize(1, 8) {
+            let open: Vec<usize> =
+                (0..n).filter(|&si| cursors[si] < traces[si].len()).collect();
+            if open.is_empty() {
+                break;
+            }
+            let si = *rng.choice(&open);
+            let ev = &traces[si][cursors[si]];
+            cursors[si] += 1;
+            payloads.push(match ev {
+                Ev::Prefill(q, k, v) => Payload::DecodePrefill {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+                Ev::Step(q, k, v) => Payload::DecodeStep {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+                Ev::Close => unreachable!("closes go in the final batch"),
+            });
+            owner.push(si);
+        }
+        for (r, &si) in p.run_batch(&payloads.iter().collect::<Vec<_>>()).into_iter().zip(&owner)
+        {
+            replies[si].push(r);
+        }
     }
-    let (free, total) = p.kv_pages().unwrap();
-    assert_eq!((free, total), (2, 2), "arena round-trips after all closes");
+    // all closes last, in a shuffled batch of their own
+    let mut order: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        order.swap(i, rng.usize(0, i));
+    }
+    let closes: Vec<Payload> = order.iter().map(|&si| Payload::DecodeClose(ids[si])).collect();
+    let refs: Vec<&Payload> = closes.iter().collect();
+    for (r, &si) in p.run_batch(&refs).into_iter().zip(&order) {
+        replies[si].push(r);
+    }
+
+    assert_eq!(p.kv_pages(), Some((4, 4)), "free list must exactly round-trip");
+    let c = p.sched_counters();
+    assert_eq!(c.exhausted, 0, "every session fits alone (<= 2 of 4 pages)");
+    assert!(c.evicted >= 1, "3x overcommit with closes last must evict");
+    assert!(c.requeued >= 1, "evicted mid-stream sessions must restore");
+
+    // serial replay: zero lost sessions, bit-identical streams
+    let a = DECODE_AFFINE;
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let mut scr = AttnScratch::new();
+    for si in 0..n {
+        let mut kv = KvPool::new(KvConfig { pages: 3, page_size: 16, kv_heads: g, d_head: d });
+        let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+        let mut got = replies[si].iter();
+        for (ei, ev) in traces[si].iter().enumerate() {
+            let (q, k, v, t) = match ev {
+                Ev::Prefill(q, k, v) => (q, k, v, q.dims[0]),
+                Ev::Step(q, k, v) => (q, k, v, 1),
+                Ev::Close => unreachable!(),
+            };
+            let mut qb = vec![0i8; t * h * d];
+            let mut kb = vec![0i8; t * g * d];
+            let mut vb = vec![0i8; t * g * d];
+            quant::quantize_into(q.as_f32().unwrap(), a, &mut qb);
+            quant::quantize_into(k.as_f32().unwrap(), a, &mut kb);
+            quant::quantize_into(v.as_f32().unwrap(), a, &mut vb);
+            let mut want = vec![0.0f32; t * h * d];
+            match ev {
+                Ev::Prefill(..) => dec
+                    .prefill_chunk(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr)
+                    .unwrap(),
+                _ => dec.step(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr).unwrap(),
+            }
+            match (ev, got.next()) {
+                (Ev::Prefill(..), Some(Reply::Prefill(out)))
+                | (Ev::Step(..), Some(Reply::Token(out))) => {
+                    assert_eq!(out.as_f32().unwrap(), &want[..], "session {si} event {ei}")
+                }
+                (_, other) => panic!("session {si} event {ei}: got {other:?}"),
+            }
+        }
+        assert!(matches!(got.next(), Some(Reply::Closed { .. })), "session {si} close");
+        assert!(got.next().is_none(), "session {si}: zero lost or extra replies");
+        kv.close(seq);
+    }
 }

@@ -51,6 +51,9 @@ required_labels=(
     "decode_batch_serial/s4/h8/L64"
     "decode_batch/s16/h8/L64"
     "decode_batch_serial/s16/h8/L64"
+    "decode_sched/s8/p32/mixed"
+    "decode_sched_barrier/s8/p32/mixed"
+    "decode_sched/s16/p8/evict"
 )
 missing=0
 for label in "${required_labels[@]}"; do
