@@ -43,6 +43,14 @@
 //!                         never sees a coalescible queue, so the
 //!                         decode_sched/* side measures what round
 //!                         assembly + one-wave-per-round buys
+//!   decode_sched_fault/s<S>/p<P>/f<F>  the same fleets with the route's
+//!                         `:fF` chaos schedule live — spurious KV alloc
+//!                         failures, contained worker panics/slowdowns,
+//!                         injected deadline sheds. Typed degradation
+//!                         replies are legal; lost replies are not. The
+//!                         ratio against the matching decode_sched/*
+//!                         label prices the armed fault plan + the
+//!                         containment plumbing under fire
 
 use std::sync::Arc;
 
@@ -416,6 +424,90 @@ fn main() {
     sched_case("decode_sched/s16/p8/evict".into(), 16, 8, 16, false);
     suite.ratio("decode_sched/s8/p32/mixed", "decode_sched_barrier/s8/p32/mixed");
     suite.ratio("decode_sched/s16/p8/evict", "decode_sched/s8/p32/mixed");
+
+    // the same fleets under a live fault schedule: the route's `:fS`
+    // suffix arms spurious KV alloc failures, contained worker panics
+    // and slowdowns, and injected deadline sheds. Steps and prefills
+    // may legally come back typed-degraded (Error/Shed/Exhausted) —
+    // what may NOT happen is a lost or hung reply, a poisoned pool, or
+    // a leaked page; opens and closes never fault
+    lutmax::faults::silence_injected_panics();
+    let mut fault_case = |label: String, s: usize, pages: usize, l: usize, seed: u64| {
+        let (h, g, d) = (8usize, 2usize, 64usize);
+        let p =
+            DecodePipeline::load(&format!("decode:rexp:uint8:g{g}:p{pages}:f{seed}"), 4).unwrap();
+        let mut step_rng = Rng::new(83);
+        let pre: Vec<(Tensor, Tensor, Tensor)> = (0..s)
+            .map(|_| lutmax::workload::decode_prefill_chunk(&mut step_rng, 2, h, g, d, 1.0))
+            .collect();
+        let qkv: Vec<(Tensor, Tensor, Tensor)> = (0..s * l)
+            .map(|_| lutmax::workload::decode_qkv_step(&mut step_rng, h, g, d, 1.0))
+            .collect();
+        let total_t = l + 2;
+        let degraded_ok = |r: &Reply| {
+            matches!(r, Reply::Error(_) | Reply::Shed { .. } | Reply::Exhausted { .. })
+        };
+        suite.add(Bench::new(label).items(s * h * total_t * (total_t + 1) / 2).run(|| {
+            let opens: Vec<Payload> = (0..s).map(|_| Payload::DecodeOpen).collect();
+            let refs: Vec<&Payload> = opens.iter().collect();
+            let ids: Vec<u64> = p
+                .run_batch(&refs)
+                .into_iter()
+                .map(|r| match r {
+                    Reply::Session(id) => id,
+                    other => panic!("open failed: {other:?}"),
+                })
+                .collect();
+            let pres: Vec<Payload> = ids
+                .iter()
+                .zip(&pre)
+                .map(|(&id, (q, k, v))| Payload::DecodePrefill {
+                    session: id,
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                })
+                .collect();
+            let refs: Vec<&Payload> = pres.iter().collect();
+            for r in p.run_batch(&refs) {
+                assert!(
+                    matches!(r, Reply::Prefill(_)) || degraded_ok(&r),
+                    "prefill lost: {r:?}"
+                );
+            }
+            for t in 0..l {
+                let round: Vec<Payload> = ids
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &id)| {
+                        let (q, k, v) = &qkv[i * l + t];
+                        Payload::DecodeStep {
+                            session: id,
+                            q: q.clone(),
+                            k: k.clone(),
+                            v: v.clone(),
+                        }
+                    })
+                    .collect();
+                let refs: Vec<&Payload> = round.iter().collect();
+                for r in p.run_batch(&refs) {
+                    assert!(
+                        matches!(r, Reply::Token(_)) || degraded_ok(&r),
+                        "step lost: {r:?}"
+                    );
+                }
+            }
+            let closes: Vec<Payload> = ids.iter().map(|&id| Payload::DecodeClose(id)).collect();
+            let refs: Vec<&Payload> = closes.iter().collect();
+            for r in p.run_batch(&refs) {
+                assert!(matches!(r, Reply::Closed { .. }), "close failed: {r:?}");
+            }
+        }));
+    };
+    fault_case("decode_sched_fault/s8/p32/f7".into(), 8, 32, 16, 7);
+    fault_case("decode_sched_fault/s16/p8/f7".into(), 16, 8, 16, 7);
+    suite.ratio("decode_sched_fault/s8/p32/f7", "decode_sched/s8/p32/mixed");
+    suite.ratio("decode_sched_fault/s16/p8/f7", "decode_sched/s16/p8/evict");
 
     if let Some(path) = flush_json().expect("write BENCH_JSON") {
         println!("\n[bench] wrote {}", path.display());

@@ -55,12 +55,52 @@
 //! (`wave_stays_inline`, shared with `step_par` / `prefill_chunk_par`),
 //! never the raw task count.
 
+use std::fmt;
+
 use super::decode::{check_step_shapes, StepPlan, SweepOrder};
 use super::kernel::{wave_stays_inline, AttnScratch, OutPtr};
 use super::DecodeAttention;
 use crate::kv::{KvError, KvPool, KvSeq};
 use crate::quant::Affine;
-use crate::softmax::{ParSoftmax, Scratch};
+use crate::softmax::{lock_unpoisoned, ParSoftmax, Scratch};
+
+/// Per-task failure of a batched decode wave. The two variants have
+/// opposite retry semantics, and serving layers must honor the split:
+///
+/// * [`WaveError::Kv`] — the phase-1 append failed (typed backpressure or
+///   an injected allocation fault). The task's sequence and output are
+///   **untouched**; the same step is retryable after capacity frees up.
+/// * [`WaveError::Panicked`] — a phase-2 sweep unit of this task panicked
+///   (contained by the pool; siblings unaffected). The session's K/V row
+///   was **already appended** in phase 1, so state has advanced and only
+///   the output is lost: the step must NOT be replayed (that would
+///   double-append). Fail the step with a typed reply; the session stays
+///   live and its next step is well-defined.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WaveError {
+    /// KV allocation failure in the serial append phase (retryable)
+    Kv(KvError),
+    /// a sweep task panicked in the parallel phase (not retryable:
+    /// the append already landed)
+    Panicked,
+}
+
+impl From<KvError> for WaveError {
+    fn from(e: KvError) -> Self {
+        WaveError::Kv(e)
+    }
+}
+
+impl fmt::Display for WaveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WaveError::Kv(e) => write!(f, "{e}"),
+            WaveError::Panicked => write!(f, "decode sweep task panicked (step output lost)"),
+        }
+    }
+}
+
+impl std::error::Error for WaveError {}
 
 /// One session's contribution to a batched decode round: the same inputs
 /// a single [`DecodeAttention::step`] takes, borrowed so the wave can
@@ -127,7 +167,7 @@ impl<'d> DecodeBatch<'d> {
         tasks: &mut [DecodeStepTask<'_>],
         pool: &ParSoftmax,
         scr: &mut AttnScratch,
-    ) -> Vec<Result<(), KvError>> {
+    ) -> Vec<Result<(), WaveError>> {
         self.step_wave_with(kv, tasks, pool, scr, |_, _| false)
     }
 
@@ -147,10 +187,10 @@ impl<'d> DecodeBatch<'d> {
         pool: &ParSoftmax,
         scr: &mut AttnScratch,
         mut on_exhausted: impl FnMut(&mut KvPool, usize) -> bool,
-    ) -> Vec<Result<(), KvError>> {
+    ) -> Vec<Result<(), WaveError>> {
         // phase 1: serial appends, task order (page-id assignment is the
         // only order-dependent effect, and nothing downstream reads it)
-        let results: Vec<Result<(), KvError>> = tasks
+        let mut results: Vec<Result<(), WaveError>> = tasks
             .iter_mut()
             .enumerate()
             .map(|(i, t)| loop {
@@ -158,21 +198,24 @@ impl<'d> DecodeBatch<'d> {
                     Ok(()) => break Ok(()),
                     Err(e) => {
                         if !on_exhausted(kv, i) {
-                            break Err(e);
+                            break Err(WaveError::Kv(e));
                         }
                     }
                 }
             })
             .collect();
 
-        // phase 2: flatten the surviving tasks into sweep units
+        // phase 2: flatten the surviving tasks into sweep units,
+        // remembering each unit's owning task so a contained panic can be
+        // mapped back to exactly one session
         let kv_ref: &KvPool = kv;
         let d = kv_ref.config().d_head;
         let order = self.dec.order();
         let mut units: Vec<SweepTask<'_>> = Vec::new();
+        let mut owners: Vec<usize> = Vec::new();
         let mut wave_rows = 0usize;
         let mut wave_macs = 0usize;
-        for (t, res) in tasks.iter_mut().zip(&results) {
+        for (ti, (t, res)) in tasks.iter_mut().zip(&results).enumerate() {
             if res.is_err() {
                 continue;
             }
@@ -196,6 +239,7 @@ impl<'d> DecodeBatch<'d> {
                             // (shape checked above); disjoint per head
                             out: OutPtr(unsafe { optr.add(hh * d) }),
                         });
+                        owners.push(ti);
                     }
                 }
                 SweepOrder::GroupMajor => {
@@ -211,6 +255,7 @@ impl<'d> DecodeBatch<'d> {
                             // (shape checked above); disjoint per group
                             out: OutPtr(unsafe { optr.add(gi * r * d) }),
                         });
+                        owners.push(ti);
                     }
                 }
             }
@@ -231,19 +276,33 @@ impl<'d> DecodeBatch<'d> {
                 }
             }
         };
-        if wave_stays_inline(pool, units.len(), wave_rows, wave_macs) {
-            for ut in &units {
-                run_unit(ut, scr);
-            }
-            return results;
-        }
+        // both arms run units under the pool's containment (and fault
+        // schedule): a panicking unit is contained, mapped below to its
+        // owning task, and must never poison the pool or the spare stack.
+        // The caller's scratch is lent to the spare stack for the wave,
+        // so the inline arm keeps its amortized buffers.
         let spare = &self.dec.spare;
-        let mut pool_scratch = Scratch::new();
-        pool.scatter(units.len(), &mut pool_scratch, &|i, _s| {
-            let mut hs = spare.lock().unwrap().pop().unwrap_or_default();
+        lock_unpoisoned(spare).push(std::mem::take(scr));
+        let run = |i: usize, _s: &mut Scratch| {
+            let mut hs = lock_unpoisoned(spare).pop().unwrap_or_default();
             run_unit(&units[i], &mut hs);
-            spare.lock().unwrap().push(hs);
-        });
+            lock_unpoisoned(spare).push(hs);
+        };
+        let mut pool_scratch = Scratch::new();
+        let outcome = if wave_stays_inline(pool, units.len(), wave_rows, wave_macs) {
+            pool.scatter_inline(units.len(), &mut pool_scratch, &run)
+        } else {
+            pool.scatter(units.len(), &mut pool_scratch, &run)
+        };
+        if let Some(hs) = lock_unpoisoned(spare).pop() {
+            *scr = hs;
+        }
+        for &u in outcome.panicked() {
+            // the owner's phase-1 append already landed: state advanced,
+            // output lost — exactly one typed failure per panicked task
+            // (a task's first panicked unit wins; repeats are idempotent)
+            results[owners[u]] = Err(WaveError::Panicked);
+        }
         results
     }
 }
@@ -349,7 +408,7 @@ mod tests {
         }];
         // without a hook the task starves as before...
         let res = batch.step_wave(&mut kv, &mut tasks, &pool, &mut scr);
-        assert_eq!(res, vec![Err(KvError::Exhausted { pages: 2, free_pages: 0 })]);
+        assert_eq!(res, vec![Err(WaveError::Kv(KvError::Exhausted { pages: 2, free_pages: 0 }))]);
         // ...with a hook that evicts the victim, the same wave lands
         let mut victim = Some(victim);
         let mut evictions = 0usize;

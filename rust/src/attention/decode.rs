@@ -51,11 +51,12 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use super::batch::WaveError;
 use super::kernel::{wave_stays_inline, AttnScratch, FusedAttention, OutPtr};
 use crate::kv::{KvError, KvPool, KvSeq};
 use crate::lut::Precision;
 use crate::quant::Affine;
-use crate::softmax::{IntMap, Mode, ParSoftmax, Scratch};
+use crate::softmax::{lock_unpoisoned, IntMap, Mode, ParSoftmax, Scratch};
 
 /// Ingress quantization of the decode serving route: a fixed dyadic
 /// affine (2^-4 per step, range ±8) sized for normalized activations —
@@ -233,6 +234,12 @@ impl DecodeAttention {
     /// G·T' tasks); a latency-critical small-G deployment that wants
     /// per-head fan-out on bare steps can pin
     /// [`SweepOrder::HeadMajor`].
+    ///
+    /// **Failure domains**: the append can fail with
+    /// [`WaveError::Kv`] (nothing written, retryable); a sweep unit
+    /// panicking — injected or genuine — is contained by the pool and
+    /// surfaces as [`WaveError::Panicked`] (the append already landed:
+    /// state advanced, output lost, do NOT replay the step).
     #[allow(clippy::too_many_arguments)]
     pub fn step_par(
         &self,
@@ -245,8 +252,8 @@ impl DecodeAttention {
         pool: &ParSoftmax,
         out: &mut [f32],
         scr: &mut AttnScratch,
-    ) -> Result<(), KvError> {
-        kv.append(seq, k_row, v_row)?;
+    ) -> Result<(), WaveError> {
+        kv.append(seq, k_row, v_row).map_err(WaveError::Kv)?;
         let d = kv.config().d_head;
         let h = seq.groups().q_heads();
         check_step_shapes(q, out, h, d);
@@ -257,10 +264,6 @@ impl DecodeAttention {
             SweepOrder::HeadMajor => h,
             SweepOrder::GroupMajor => seq.groups().kv_heads(),
         };
-        if wave_stays_inline(pool, units, h, step_macs) {
-            self.sweep_step(kv, seq, q, plan, out, scr);
-            return Ok(());
-        }
         let spare = &self.spare;
         // SAFETY (OutPtr contract): sweep tasks reconstruct disjoint
         // blocks of `out` only (one `d` block per head, or one
@@ -269,13 +272,15 @@ impl DecodeAttention {
         let kv_ref: &KvPool = kv;
         let seq_ref: &KvSeq = seq;
         let order = self.order;
-        let mut pool_scratch = Scratch::new();
-        pool.scatter(units, &mut pool_scratch, &|u, _s| {
-            let mut scr = spare.lock().unwrap().pop().unwrap_or_default();
+        // the caller's scratch is lent to the spare stack for the wave,
+        // so the inline arm keeps its amortized buffers
+        lock_unpoisoned(spare).push(std::mem::take(scr));
+        let run = |u: usize, _s: &mut Scratch| {
+            let mut hs = lock_unpoisoned(spare).pop().unwrap_or_default();
             match order {
                 SweepOrder::HeadMajor => {
                     let oh = unsafe { std::slice::from_raw_parts_mut(optr.0.add(u * d), d) };
-                    self.head_step(kv_ref, seq_ref, u, &q[u * d..(u + 1) * d], plan, oh, &mut scr);
+                    self.head_step(kv_ref, seq_ref, u, &q[u * d..(u + 1) * d], plan, oh, &mut hs);
                 }
                 SweepOrder::GroupMajor => {
                     let og =
@@ -287,13 +292,26 @@ impl DecodeAttention {
                         &q[u * r * d..(u * r + r) * d],
                         plan,
                         og,
-                        &mut scr,
+                        &mut hs,
                     );
                 }
             }
-            spare.lock().unwrap().push(scr);
-        });
-        Ok(())
+            lock_unpoisoned(spare).push(hs);
+        };
+        let mut pool_scratch = Scratch::new();
+        let outcome = if wave_stays_inline(pool, units, h, step_macs) {
+            pool.scatter_inline(units, &mut pool_scratch, &run)
+        } else {
+            pool.scatter(units, &mut pool_scratch, &run)
+        };
+        if let Some(hs) = lock_unpoisoned(spare).pop() {
+            *scr = hs;
+        }
+        if outcome.is_ok() {
+            Ok(())
+        } else {
+            Err(WaveError::Panicked)
+        }
     }
 
     /// Append a block of `T'` tokens to the paged cache and attend ONCE
@@ -379,6 +397,12 @@ impl DecodeAttention {
     /// independent rows), so the serving pipeline routes prefills here;
     /// small chunks stay inline under the same wave accounting as step
     /// waves.
+    ///
+    /// **Failure domains**: as for [`Self::step_par`] — a failed ingest
+    /// is [`WaveError::Kv`] (atomic, retryable); a panicking sweep unit
+    /// is contained and surfaces as [`WaveError::Panicked`] (the chunk's
+    /// tokens are already appended: state advanced, output lost, do NOT
+    /// replay the chunk).
     #[allow(clippy::too_many_arguments)]
     pub fn prefill_chunk_par(
         &self,
@@ -391,8 +415,9 @@ impl DecodeAttention {
         pool: &ParSoftmax,
         out: &mut [f32],
         scr: &mut AttnScratch,
-    ) -> Result<(), KvError> {
-        let Some((t_chunk, base)) = prefill_ingest(kv, seq, q, k_rows, v_rows, out)? else {
+    ) -> Result<(), WaveError> {
+        let ingest = prefill_ingest(kv, seq, q, k_rows, v_rows, out).map_err(WaveError::Kv)?;
+        let Some((t_chunk, base)) = ingest else {
             return Ok(());
         };
         let (h, d) = (seq.groups().q_heads(), kv.config().d_head);
@@ -411,10 +436,6 @@ impl DecodeAttention {
             SweepOrder::HeadMajor => h,
             SweepOrder::GroupMajor => g * t_chunk,
         };
-        if wave_stays_inline(pool, units, t_chunk * h, chunk_macs) {
-            self.sweep_prefill(kv, seq, q, plan, base, t_chunk, out, scr);
-            return Ok(());
-        }
         let spare = &self.spare;
         // SAFETY (OutPtr contract): sweep task `u` reconstructs only its
         // own disjoint `(t, head)` blocks of `out` — one `d` slice per
@@ -425,9 +446,10 @@ impl DecodeAttention {
         let seq_ref: &KvSeq = seq;
         let r = seq.groups().group_size();
         let order = self.order;
-        let mut pool_scratch = Scratch::new();
-        pool.scatter(units, &mut pool_scratch, &|u, _s| {
-            let mut hs = spare.lock().unwrap().pop().unwrap_or_default();
+        // lend the caller's scratch to the spare stack for the wave
+        lock_unpoisoned(spare).push(std::mem::take(scr));
+        let run = |u: usize, _s: &mut Scratch| {
+            let mut hs = lock_unpoisoned(spare).pop().unwrap_or_default();
             match order {
                 SweepOrder::HeadMajor => {
                     for t in 0..t_chunk {
@@ -447,9 +469,22 @@ impl DecodeAttention {
                     self.group_prefix(kv_ref, seq_ref, gi, qg, plan, base + t + 1, og, 0, &mut hs);
                 }
             }
-            spare.lock().unwrap().push(hs);
-        });
-        Ok(())
+            lock_unpoisoned(spare).push(hs);
+        };
+        let mut pool_scratch = Scratch::new();
+        let outcome = if wave_stays_inline(pool, units, t_chunk * h, chunk_macs) {
+            pool.scatter_inline(units, &mut pool_scratch, &run)
+        } else {
+            pool.scatter(units, &mut pool_scratch, &run)
+        };
+        if let Some(hs) = lock_unpoisoned(spare).pop() {
+            *scr = hs;
+        }
+        if outcome.is_ok() {
+            Ok(())
+        } else {
+            Err(WaveError::Panicked)
+        }
     }
 
     /// One head's causal sweep over a freshly-appended chunk: rows
@@ -756,13 +791,18 @@ pub struct DecodeRoute {
     /// deployments size the arena to their traffic, and lets tests drive
     /// the route to `KvError::Exhausted` cheaply
     pub pages: Option<usize>,
+    /// `fS`: install [`crate::faults::FaultPlan::seeded`]`(S)` on the
+    /// route's pipeline — makes chaos scenarios wire-reachable (the
+    /// `lutmax serve` fault smoke, the `decode_sched_fault/*` benches)
+    pub fault_seed: Option<u64>,
 }
 
-/// Parse a decode route spec `"decode:<mode>:<prec>[:aN][:gG][:pP]"`
+/// Parse a decode route spec `"decode:<mode>:<prec>[:aN][:gG][:pP][:fS]"`
 /// (e.g. `"decode:rexp:uint8"`, `"decode:lut2d:int16:a512:g2:p256"`).
 /// `gG` fixes the stored-head count the route accepts (absent: MHA, every
-/// query head stores K/V); `pP` sizes the KV arena in pages. Returns
-/// `None` for anything else, including non-LUT modes.
+/// query head stores K/V); `pP` sizes the KV arena in pages; `fS` installs
+/// the seeded fault plan (chaos scenarios). Returns `None` for anything
+/// else, including non-LUT modes.
 pub fn parse_decode_route(spec: &str) -> Option<DecodeRoute> {
     let rest = spec.strip_prefix("decode:")?;
     let mut parts = rest.split(':');
@@ -771,7 +811,7 @@ pub fn parse_decode_route(spec: &str) -> Option<DecodeRoute> {
         return None;
     }
     let prec = Precision::parse(parts.next()?)?;
-    let (mut alpha, mut kv_heads, mut pages) = (None, None, None);
+    let (mut alpha, mut kv_heads, mut pages, mut fault_seed) = (None, None, None, None);
     for seg in parts {
         if let Some(a) = seg.strip_prefix('a') {
             if alpha.is_some() {
@@ -796,11 +836,16 @@ pub fn parse_decode_route(spec: &str) -> Option<DecodeRoute> {
                 return None;
             }
             pages = Some(p);
+        } else if let Some(f) = seg.strip_prefix('f') {
+            if fault_seed.is_some() {
+                return None;
+            }
+            fault_seed = Some(f.parse().ok()?);
         } else {
             return None;
         }
     }
-    Some(DecodeRoute { mode, prec, alpha_len: alpha, kv_heads, pages })
+    Some(DecodeRoute { mode, prec, alpha_len: alpha, kv_heads, pages, fault_seed })
 }
 
 #[cfg(test)]
@@ -820,6 +865,7 @@ mod tests {
                 alpha_len: None,
                 kv_heads: None,
                 pages: None,
+                fault_seed: None,
             }
         );
         let r = parse_decode_route("decode:lut2d:int16:a512:g2:p256").unwrap();
@@ -831,10 +877,15 @@ mod tests {
                 alpha_len: Some(512),
                 kv_heads: Some(2),
                 pages: Some(256),
+                fault_seed: None,
             }
         );
         let r = parse_decode_route("decode:rexp:uint8:g4").unwrap();
         assert_eq!((r.alpha_len, r.kv_heads, r.pages), (None, Some(4), None));
+        let r = parse_decode_route("decode:rexp:uint8:g2:p64:f7").unwrap();
+        assert_eq!((r.kv_heads, r.pages, r.fault_seed), (Some(2), Some(64), Some(7)));
+        // seed 0 is a valid (distinct) schedule, not "disabled"
+        assert_eq!(parse_decode_route("decode:rexp:uint8:f0").unwrap().fault_seed, Some(0));
         assert!(parse_decode_route("decode:exact:uint8").is_none(), "non-LUT mode");
         assert!(parse_decode_route("attn:rexp:uint8").is_none());
         assert!(parse_decode_route("decode:rexp").is_none());
@@ -843,6 +894,8 @@ mod tests {
         assert!(parse_decode_route("decode:rexp:uint8:x3").is_none());
         assert!(parse_decode_route("decode:rexp:uint8:g2:g4").is_none());
         assert!(parse_decode_route("decode:rexp:uint8:p8:p9").is_none());
+        assert!(parse_decode_route("decode:rexp:uint8:f1:f2").is_none());
+        assert!(parse_decode_route("decode:rexp:uint8:fx").is_none());
     }
 
     #[test]

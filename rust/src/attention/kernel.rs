@@ -32,8 +32,8 @@ use super::{AttnMask, AttnShape, QuantTensor, ATTN_ALPHA_LEN};
 use crate::lut::Precision;
 use crate::quant;
 use crate::softmax::{
-    pass1_scores_mapped, IntMap, Mode, ParSoftmax, Scratch, SoftmaxEngine, SoftmaxLut2d,
-    SoftmaxRexp,
+    lock_unpoisoned, pass1_scores_mapped, IntMap, Mode, ParSoftmax, Scratch, SoftmaxEngine,
+    SoftmaxLut2d, SoftmaxRexp,
 };
 
 /// Don't scatter below this many MACs of work per pool submission: a
@@ -410,8 +410,8 @@ impl FusedAttention {
         // `ol`-sized blocks of `out` only.
         let optr = OutPtr(out.as_mut_ptr());
         let mut pool_scratch = Scratch::new();
-        pool.scatter(shape.heads_total(), &mut pool_scratch, &|h, _s| {
-            let mut scr = spare.lock().unwrap().pop().unwrap_or_default();
+        let outcome = pool.scatter(shape.heads_total(), &mut pool_scratch, &|h, _s| {
+            let mut scr = lock_unpoisoned(&spare).pop().unwrap_or_default();
             let b = h / shape.heads;
             let oh = unsafe { std::slice::from_raw_parts_mut(optr.0.add(h * ol), ol) };
             self.head(
@@ -429,8 +429,17 @@ impl FusedAttention {
                 oh,
                 &mut scr,
             );
-            spare.lock().unwrap().push(scr);
+            lock_unpoisoned(&spare).push(scr);
         });
+        // the fused prefill path has no per-session failure domain (one
+        // caller, one output tensor) and no fault plan targets it — a
+        // contained head panic is re-raised in the submitter, after the
+        // whole wave has completed (no hang, pool unpoisoned)
+        assert!(
+            outcome.is_ok(),
+            "fused attention head task panicked (heads {:?})",
+            outcome.panicked()
+        );
     }
 
     /// Verification view: the integer-softmax attention map of head block

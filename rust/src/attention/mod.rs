@@ -34,8 +34,8 @@
 //! [`decode::DecodeAttention`] is the streaming-decode entry point: one
 //! query row per generated token over a paged integer KV cache
 //! ([`crate::kv`]), bit-identical to a causal prefill through this same
-//! kernel; its serving route `"decode:<mode>:<prec>[:aN][:gG][:pP]"` is
-//! parsed by [`parse_decode_route`]. The decode hot path sweeps the
+//! kernel; its serving route `"decode:<mode>:<prec>[:aN][:gG][:pP][:fS]"`
+//! is parsed by [`parse_decode_route`]. The decode hot path sweeps the
 //! cache **group-major** ([`decode::SweepOrder`]): one sweep unit per
 //! stored K/V group, reading each page once per group per step for all
 //! `H/G` query heads sharing it — bit-identical to the head-major
@@ -50,7 +50,7 @@ mod batch;
 mod decode;
 mod kernel;
 
-pub use batch::{DecodeBatch, DecodeStepTask};
+pub use batch::{DecodeBatch, DecodeStepTask, WaveError};
 pub use decode::{parse_decode_route, DecodeAttention, DecodeRoute, SweepOrder, DECODE_AFFINE};
 pub use kernel::{AttnScratch, ComposedAttention, FusedAttention};
 

@@ -38,10 +38,9 @@ impl<T> Batcher<T> {
 
     /// Release a batch if the policy allows at time `now`.
     pub fn pop_ready(&mut self, now: Instant) -> Option<Vec<T>> {
-        if self.queue.is_empty() {
-            return None;
-        }
-        let oldest = self.queue.front().unwrap().1;
+        // `front()` doubles as the emptiness check: no unwrap for the
+        // engine loop to trip on when every queue is drained
+        let oldest = self.queue.front()?.1;
         if self.queue.len() >= self.max_batch || now.duration_since(oldest) >= self.timeout {
             let take = self.queue.len().min(self.max_batch);
             return Some(self.queue.drain(..take).map(|(t, _)| t).collect());
@@ -109,6 +108,19 @@ mod tests {
         let d2 = b.next_deadline(t0 + Duration::from_millis(4)).unwrap();
         assert!(d2 < d1);
         assert!(b.next_deadline(t0 + Duration::from_millis(20)).unwrap().is_zero());
+    }
+
+    #[test]
+    fn pop_ready_on_empty_queue_never_panics() {
+        // regression: the release check peeks the front entry — on an
+        // empty (or freshly drained) queue that must be a clean None
+        let mut b: Batcher<u32> = Batcher::new(1, Duration::from_millis(0));
+        let now = Instant::now();
+        assert_eq!(b.pop_ready(now), None);
+        b.push_at(7, now);
+        assert_eq!(b.pop_ready(now), Some(vec![7]));
+        assert_eq!(b.pop_ready(now), None, "drained queue releases nothing");
+        assert_eq!(b.next_deadline(now), None);
     }
 
     #[test]

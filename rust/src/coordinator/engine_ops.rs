@@ -17,9 +17,10 @@ use super::request::{Payload, Reply};
 use super::scheduler::{self, SchedConfig};
 use crate::attention::{
     self, AttnMask, AttnScratch, AttnShape, DecodeAttention, DecodeBatch, DecodeStepTask,
-    FusedAttention, QuantTensor, DECODE_AFFINE,
+    FusedAttention, QuantTensor, WaveError, DECODE_AFFINE,
 };
 use crate::eval::DetectionBox;
+use crate::faults::FaultPlan;
 use crate::kv::{HeadGroups, KvConfig, KvError, KvPool, KvSeq};
 use crate::lut::Precision;
 use crate::quant;
@@ -451,14 +452,20 @@ impl AttentionPipeline {
 const DECODE_POOL_PAGES: usize = 4096;
 const DECODE_PAGE_SIZE: usize = 16;
 
+/// An injected allocation fault is transient (the next draw usually
+/// passes): retry this many times before sacrificing a real session to
+/// eviction over a spurious failure.
+const MAX_SPURIOUS_RETRIES: usize = 4;
+
 /// Decode batches are few-row (one softmax row per query head per step),
 /// so the route's worker pool runs a lower inline-vs-pool threshold than
 /// the default batch-serving policy.
 const DECODE_MIN_ROWS_PER_SHARD: usize = 2;
 
 /// Streaming decode serving pipeline — route
-/// `"decode:<mode>:<prec>[:aN][:gG][:pP]"` (e.g.
-/// `"decode:rexp:uint8:g2"`). Artifact-free like the attention route.
+/// `"decode:<mode>:<prec>[:aN][:gG][:pP][:fS]"` (e.g.
+/// `"decode:rexp:uint8:g2"`; `fS` arms the deterministic fault plan
+/// [`FaultPlan::seeded`]). Artifact-free like the attention route.
 /// Holds the session table (session id → [`KvSeq`] page table) and one
 /// shared [`KvPool`] arena; the pool is sized lazily from the first
 /// step's `(G, d_head)` shape (later sessions must match — one pool
@@ -512,6 +519,18 @@ pub struct DecodePipeline {
     sched_cfg: Cell<SchedConfig>,
     /// scheduler counters, snapshot via [`Self::sched_counters`]
     counters: RefCell<Counters>,
+    /// the route's deterministic fault plan (`:fS` in the route spec, or
+    /// [`Self::set_fault_plan`]); installed into the worker pool
+    /// immediately and the KV arena when it binds
+    faults: Cell<FaultPlan>,
+    /// engine-batch tick, advanced once per [`Self::run_batch`] — the
+    /// idle-session TTL reaper's clock
+    tick: Cell<u64>,
+    /// session id → tick it was last addressed (reaper bookkeeping)
+    last_used: RefCell<HashMap<u64, u64>>,
+    /// sessions whose client hung up (a reply send failed): reap-eligible
+    /// on the next batch regardless of TTL
+    dead: RefCell<HashSet<u64>>,
 }
 
 /// A decode session's KV residency state.
@@ -550,14 +569,14 @@ struct WaveSlot {
 impl DecodePipeline {
     pub fn load(spec: &str, workers: usize) -> Result<Self> {
         let route = attention::parse_decode_route(spec).ok_or_else(|| {
-            anyhow!("decode route {spec:?}: want decode:<rexp|lut2d>:<prec>[:aN][:gG][:pP]")
+            anyhow!("decode route {spec:?}: want decode:<rexp|lut2d>:<prec>[:aN][:gG][:pP][:fS]")
         })?;
         // as for the attention route: the pool's wrapped engine is off the
         // decode hot path (heads go through `scatter`), but keep its alpha
         // consistent with the kernel's
         let alpha = Some(route.alpha_len.unwrap_or(attention::ATTN_ALPHA_LEN));
         let inner: Arc<dyn SoftmaxEngine> = Arc::from(softmax::engine(route.mode, route.prec, alpha));
-        Ok(Self {
+        let pipe = Self {
             variant: spec.to_string(),
             decode: DecodeAttention::new(route.mode, route.prec, route.alpha_len)?,
             pool: ParSoftmax::with_policy(inner, workers.max(1), DECODE_MIN_ROWS_PER_SHARD),
@@ -570,15 +589,105 @@ impl DecodePipeline {
             spare_bufs: RefCell::new(Vec::new()),
             sched_cfg: Cell::new(SchedConfig::default()),
             counters: RefCell::new(Counters::default()),
-        })
+            faults: Cell::new(FaultPlan::none()),
+            tick: Cell::new(0),
+            last_used: RefCell::new(HashMap::new()),
+            dead: RefCell::new(HashSet::new()),
+        };
+        if let Some(seed) = route.fault_seed {
+            pipe.set_fault_plan(FaultPlan::seeded(seed));
+        }
+        Ok(pipe)
+    }
+
+    /// Install the route's deterministic fault plan: the worker pool's
+    /// injection schedule resets immediately; the KV arena's resets now
+    /// if bound, else when the first step/prefill binds it.
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        self.faults.set(plan);
+        self.pool.set_fault_plan(plan);
+        if let Some(kvp) = self.kv.borrow_mut().as_mut() {
+            kvp.set_fault_plan(plan);
+        }
+    }
+
+    /// The route's active fault plan ([`FaultPlan::none`] by default).
+    pub fn fault_plan(&self) -> FaultPlan {
+        self.faults.get()
     }
 
     /// Serve one ready batch of decode payloads through the
     /// continuous-batching scheduler: rounds are assembled under the
     /// route's [`SchedConfig`] budgets, preserving every session's own
-    /// arrival order (see [`super::scheduler`]).
+    /// arrival order (see [`super::scheduler`]). Each batch advances the
+    /// reaper tick; sessions idle for `idle_ttl_batches` batches (or
+    /// marked dead by [`Self::note_dead_reply`]) are closed afterwards,
+    /// their pages reclaimed.
     pub fn run_batch(&self, batch: &[&Payload]) -> Vec<Reply> {
-        scheduler::run(self, batch)
+        let tick = self.tick.get() + 1;
+        self.tick.set(tick);
+        let replies = scheduler::run(self, batch);
+        {
+            // touch only sessions still in the table (a close already
+            // scrubbed its bookkeeping)
+            let sessions = self.sessions.borrow();
+            let mut lu = self.last_used.borrow_mut();
+            let mut touch = |s: u64| {
+                if sessions.contains_key(&s) {
+                    lu.insert(s, tick);
+                }
+            };
+            for p in batch {
+                match p {
+                    Payload::DecodeStep { session, .. }
+                    | Payload::DecodePrefill { session, .. } => touch(*session),
+                    Payload::DecodeClose(s) => touch(*s),
+                    _ => {}
+                }
+            }
+            for r in &replies {
+                if let Reply::Session(id) = r {
+                    touch(*id);
+                }
+            }
+        }
+        self.reap_idle(tick);
+        replies
+    }
+
+    /// Record that a reply to `session` could not be delivered (the
+    /// client hung up): the session is reap-eligible on the next batch.
+    pub fn note_dead_reply(&self, session: u64) {
+        self.counters.borrow_mut().dead_replies += 1;
+        self.dead.borrow_mut().insert(session);
+    }
+
+    /// Close sessions that are dead (client hung up) or idle past the
+    /// route's TTL, returning their pages to the arena.
+    fn reap_idle(&self, tick: u64) {
+        let ttl = self.sched_cfg.get().idle_ttl_batches as u64;
+        let victims: Vec<u64> = {
+            let dead = self.dead.borrow();
+            let lu = self.last_used.borrow();
+            self.sessions
+                .borrow()
+                .keys()
+                .copied()
+                .filter(|id| {
+                    dead.contains(id)
+                        || (ttl > 0
+                            && tick.saturating_sub(lu.get(id).copied().unwrap_or(tick)) >= ttl)
+                })
+                .collect()
+        };
+        for id in victims {
+            self.close(id);
+            self.counters.borrow_mut().reaped += 1;
+        }
+        // prune hang-up marks whose session is already gone (e.g. the
+        // close itself got the dead reply) so the set cannot grow forever
+        let sessions = self.sessions.borrow();
+        self.dead.borrow_mut().retain(|id| sessions.contains_key(id));
     }
 
     /// The route's scheduler knobs.
@@ -762,14 +871,21 @@ impl DecodePipeline {
         // mid-wave safety net: a page-boundary append the admission
         // accounting did not foresee evicts the youngest idle session
         // instead of starving the step (wave sessions are in-flight and
-        // thus never picked)
+        // thus never picked). With a fault plan armed, a failed append
+        // gets a few bare retries first — an injected fault is spurious
+        // and eviction would sacrifice a real session to it
         let no_exclude = HashSet::new();
+        let mut spurious_retries = 0usize;
         let results = DecodeBatch::new(&self.decode).step_wave_with(
             kvp,
             &mut tasks,
             &self.pool,
             &mut scr,
             |kv, _| {
+                if !self.faults.get().is_none() && spurious_retries < MAX_SPURIOUS_RETRIES {
+                    spurious_retries += 1;
+                    return true;
+                }
                 let r = evict_youngest_session(&mut sessions, kv, &no_exclude);
                 if r.is_some() {
                     self.counters.borrow_mut().evicted += 1;
@@ -782,9 +898,17 @@ impl DecodePipeline {
         for (slot, res) in slots.into_iter().zip(results) {
             let reply = match res {
                 Ok(()) => Reply::Token(Tensor::f32(items[slot.idx].1.dims.clone(), slot.out)),
-                Err(KvError::Exhausted { pages, free_pages }) => {
+                Err(WaveError::Kv(KvError::Exhausted { pages, free_pages })) => {
                     self.counters.borrow_mut().exhausted += 1;
                     Reply::Exhausted { pages, free_pages }
+                }
+                // the panic was contained to this slot: the append
+                // landed (state advanced, output lost), batchmates are
+                // untouched — one typed reply, no retry (see the wire
+                // contract's failure-semantics table)
+                Err(WaveError::Panicked) => {
+                    self.counters.borrow_mut().panicked += 1;
+                    Reply::Error(WaveError::Panicked.to_string())
                 }
             };
             // hand the sequence back to the session table (untouched when
@@ -820,9 +944,24 @@ impl DecodePipeline {
         let slot = sessions
             .get_mut(&session)
             .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
-        bind_decode_pool(kv_ref, g, d, self.route_pages)?;
+        bind_decode_pool(kv_ref, g, d, self.route_pages, self.faults.get())?;
         bind_session_heads(slot, h, g)?;
         let kvp = kv_ref.as_mut().expect("pool bound above");
+        // staging buffers are recycled across rounds (step_wave_round
+        // returns them); only the reply-owned `out` is freshly allocated.
+        // Quantize BEFORE taking the sequence out of the table: a bad
+        // tensor is then a typed error, never a leaked in-flight slot
+        let (mut qb, mut kb, mut vb) =
+            self.spare_bufs.borrow_mut().pop().unwrap_or_default();
+        qb.clear();
+        qb.resize(h * d, 0);
+        quant::quantize_into(q.as_f32()?, DECODE_AFFINE, &mut qb);
+        kb.clear();
+        kb.resize(g * d, 0);
+        quant::quantize_into(k.as_f32()?, DECODE_AFFINE, &mut kb);
+        vb.clear();
+        vb.resize(g * d, 0);
+        quant::quantize_into(v.as_f32()?, DECODE_AFFINE, &mut vb);
         let seq = match std::mem::replace(slot, SessionKv::InFlight) {
             SessionKv::Live(s) => s,
             SessionKv::Evicted { groups, k: kl, v: vl, tokens } => {
@@ -835,19 +974,6 @@ impl DecodePipeline {
                 unreachable!("bound above; one step per session per wave")
             }
         };
-        // staging buffers are recycled across rounds (step_wave_round
-        // returns them); only the reply-owned `out` is freshly allocated
-        let (mut qb, mut kb, mut vb) =
-            self.spare_bufs.borrow_mut().pop().unwrap_or_default();
-        qb.clear();
-        qb.resize(h * d, 0);
-        quant::quantize_into(q.as_f32().expect("validated f32"), DECODE_AFFINE, &mut qb);
-        kb.clear();
-        kb.resize(g * d, 0);
-        quant::quantize_into(k.as_f32().expect("validated f32"), DECODE_AFFINE, &mut kb);
-        vb.clear();
-        vb.resize(g * d, 0);
-        quant::quantize_into(v.as_f32().expect("validated f32"), DECODE_AFFINE, &mut vb);
         Ok((seq, qb, kb, vb, vec![0.0f32; h * d]))
     }
 
@@ -870,7 +996,7 @@ impl DecodePipeline {
         let slot = sessions
             .get_mut(&session)
             .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
-        bind_decode_pool(&mut kv_ref, g, d, self.route_pages)?;
+        bind_decode_pool(&mut kv_ref, g, d, self.route_pages, self.faults.get())?;
         bind_session_heads(slot, h, g)?;
         let kvp = kv_ref.as_mut().expect("pool bound above");
         let mut seq = match std::mem::replace(slot, SessionKv::InFlight) {
@@ -897,7 +1023,10 @@ impl DecodePipeline {
         // (T'×H independent rows): scatter its head sweeps over the pool.
         // A chunk the free list cannot cover evicts younger sessions
         // (the chunk append is atomic, so each retry starts clean); only
-        // a chunk no eviction can make room for fails, typed
+        // a chunk no eviction can make room for fails, typed. With a
+        // fault plan armed, a failed append gets a few bare retries
+        // before eviction — injected faults are spurious
+        let mut spurious_retries = 0usize;
         let result = loop {
             match self.decode.prefill_chunk_par(
                 kvp,
@@ -911,19 +1040,32 @@ impl DecodePipeline {
                 &mut scr,
             ) {
                 Ok(()) => break Ok(()),
-                Err(e) => {
+                // a panicked sweep already appended the chunk: state
+                // advanced, output lost — retrying would double-append
+                Err(WaveError::Panicked) => break Err(WaveError::Panicked),
+                Err(WaveError::Kv(e)) => {
+                    if !self.faults.get().is_none() && spurious_retries < MAX_SPURIOUS_RETRIES {
+                        spurious_retries += 1;
+                        continue;
+                    }
                     let evicted = evict_youngest_session(&mut sessions, kvp, &HashSet::new());
                     if evicted.is_some() {
                         self.counters.borrow_mut().evicted += 1;
                     } else {
-                        break Err(e);
+                        break Err(WaveError::Kv(e));
                     }
                 }
             }
         };
         *sessions.get_mut(&session).expect("in-flight slot") = SessionKv::Live(seq);
-        result?;
-        Ok(Reply::Prefill(Tensor::f32(q.dims.clone(), out)))
+        match result {
+            Ok(()) => Ok(Reply::Prefill(Tensor::f32(q.dims.clone(), out))),
+            Err(WaveError::Panicked) => {
+                self.counters.borrow_mut().panicked += 1;
+                Ok(Reply::Error(WaveError::Panicked.to_string()))
+            }
+            Err(WaveError::Kv(e)) => Err(e.into()),
+        }
     }
 
     /// Rebuild an evicted session's pages from its replay log (the
@@ -945,6 +1087,7 @@ impl DecodePipeline {
         tokens: usize,
     ) -> Result<KvSeq, KvError> {
         let mut seq = KvSeq::new(groups, DECODE_AFFINE, DECODE_AFFINE);
+        let mut spurious_retries = 0usize;
         loop {
             match kvp.append_block(&mut seq, &kl, &vl) {
                 Ok(()) => {
@@ -953,6 +1096,12 @@ impl DecodePipeline {
                     return Ok(seq);
                 }
                 Err(e) => {
+                    // an injected alloc fault is transient: bare-retry
+                    // before evicting anyone over it
+                    if !self.faults.get().is_none() && spurious_retries < MAX_SPURIOUS_RETRIES {
+                        spurious_retries += 1;
+                        continue;
+                    }
                     // the in-flight slot keeps the session itself (and
                     // any wave mates) off the victim list
                     let evicted = evict_youngest_session(sessions, kvp, &HashSet::new());
@@ -972,6 +1121,8 @@ impl DecodePipeline {
     /// closed while evicted holds no pages and reports `pages: 0` — an
     /// ops number, not part of the bit-identity contract.
     pub fn close(&self, session: u64) -> Reply {
+        self.last_used.borrow_mut().remove(&session);
+        self.dead.borrow_mut().remove(&session);
         match self.sessions.borrow_mut().remove(&session) {
             None => Reply::Error(format!("unknown decode session {session}")),
             Some(SessionKv::Live(s)) => {
@@ -998,8 +1149,15 @@ impl DecodePipeline {
 }
 
 /// Check (or lazily create, `pages` big) the route's shared KV arena for
-/// a step/prefill of geometry `(g, d)`.
-fn bind_decode_pool(kv_ref: &mut Option<KvPool>, g: usize, d: usize, pages: usize) -> Result<()> {
+/// a step/prefill of geometry `(g, d)`. A freshly bound pool inherits
+/// the route's fault plan.
+fn bind_decode_pool(
+    kv_ref: &mut Option<KvPool>,
+    g: usize,
+    d: usize,
+    pages: usize,
+    faults: FaultPlan,
+) -> Result<()> {
     if let Some(p) = kv_ref.as_ref() {
         let cfg = *p.config();
         if cfg.kv_heads != g || cfg.d_head != d {
@@ -1010,12 +1168,14 @@ fn bind_decode_pool(kv_ref: &mut Option<KvPool>, g: usize, d: usize, pages: usiz
             );
         }
     } else {
-        *kv_ref = Some(KvPool::new(KvConfig {
+        let mut pool = KvPool::new(KvConfig {
             pages,
             page_size: DECODE_PAGE_SIZE,
             kv_heads: g,
             d_head: d,
-        }));
+        });
+        pool.set_fault_plan(faults);
+        *kv_ref = Some(pool);
     }
     Ok(())
 }
@@ -1219,16 +1379,27 @@ fn cpu_batch(par: &ParSoftmax, scratch: &mut Scratch, xs: &[&Tensor]) -> Vec<Res
         }
     }
     for (n, idxs) in groups {
-        let total: usize = idxs.iter().map(|&i| xs[i].len()).sum();
-        let mut data = Vec::with_capacity(total);
+        // a payload that fails dtype extraction here (validated above,
+        // so this is defensive) errors individually instead of panicking
+        // the engine thread for the whole batch
+        let mut ok_idxs = Vec::with_capacity(idxs.len());
+        let mut data = Vec::new();
         for &i in &idxs {
-            // validated f32 above
-            data.extend_from_slice(xs[i].as_f32().expect("validated f32"));
+            match xs[i].as_f32() {
+                Ok(d) => {
+                    data.extend_from_slice(d);
+                    ok_idxs.push(i);
+                }
+                Err(e) => results[i] = Some(Err(e)),
+            }
         }
-        let mut out = vec![0.0f32; total];
+        if ok_idxs.is_empty() {
+            continue;
+        }
+        let mut out = vec![0.0f32; data.len()];
         par.run_with(&data, n, &mut out, scratch);
         let mut off = 0;
-        for &i in &idxs {
+        for &i in &ok_idxs {
             let len = xs[i].len();
             results[i] = Some(Ok(Tensor::f32(
                 xs[i].dims.clone(),

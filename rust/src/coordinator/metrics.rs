@@ -90,6 +90,17 @@ pub struct Counters {
     pub occupancy_sessions: u64,
     /// deepest waiting queue observed at round assembly
     pub peak_queue_depth: u64,
+    /// requests shed unexecuted (deadline overrun — organic or injected —
+    /// or bounded waiting queue); answered with `Reply::Shed`
+    pub shed: u64,
+    /// steps/prefills whose sweep task panicked (contained: only the
+    /// owning session's request failed, answered with `Reply::Error`)
+    pub panicked: u64,
+    /// idle sessions closed by the TTL reaper (pages reclaimed)
+    pub reaped: u64,
+    /// replies dropped because the client hung up (receiver gone); the
+    /// session becomes reap-eligible
+    pub dead_replies: u64,
 }
 
 impl Counters {
@@ -113,7 +124,8 @@ impl Counters {
     pub fn summary(&self) -> String {
         format!(
             "rounds={} steps={} prefills={} evicted={} requeued={} exhausted={} \
-             occ_sessions={:.2} occ_tokens={:.1} peak_queue={}",
+             occ_sessions={:.2} occ_tokens={:.1} peak_queue={} \
+             shed={} panicked={} reaped={} dead={}",
             self.rounds,
             self.admitted_steps,
             self.admitted_prefills,
@@ -123,6 +135,10 @@ impl Counters {
             self.mean_round_sessions(),
             self.mean_round_tokens(),
             self.peak_queue_depth,
+            self.shed,
+            self.panicked,
+            self.reaped,
+            self.dead_replies,
         )
     }
 }
@@ -221,6 +237,10 @@ mod tests {
             occupancy_tokens: 100,
             occupancy_sessions: 10,
             peak_queue_depth: 7,
+            shed: 3,
+            panicked: 2,
+            reaped: 1,
+            dead_replies: 5,
         };
         assert_eq!(c.mean_round_sessions(), 2.5);
         assert_eq!(c.mean_round_tokens(), 25.0);
@@ -228,5 +248,9 @@ mod tests {
         assert!(s.contains("rounds=4"), "{s}");
         assert!(s.contains("evicted=1"), "{s}");
         assert!(s.contains("peak_queue=7"), "{s}");
+        assert!(s.contains("shed=3"), "{s}");
+        assert!(s.contains("panicked=2"), "{s}");
+        assert!(s.contains("reaped=1"), "{s}");
+        assert!(s.contains("dead=5"), "{s}");
     }
 }

@@ -51,6 +51,27 @@
 //!   unchanged bit-for-bit versus the head-major sweep (pinned by the
 //!   group-vs-head axis of `integration_conformance.rs`, as the
 //!   scheduler's guarantees are pinned by its arrival-schedule axis).
+//!
+//! # Failure semantics
+//!
+//! Every failure a decode client can see is **exactly one typed reply**
+//! (never a crashed or wedged engine — conformance invariant 8), and the
+//! four failure surfaces have distinct session-state and retry meanings:
+//!
+//! | reply | session K/V state | retry? | meaning |
+//! |---|---|---|---|
+//! | [`Reply::Exhausted`] | unchanged — nothing appended | yes, same request | the request alone exceeds arena capacity (or a spurious injected allocation fault); eviction could not help. Back off and retry, or retry smaller. |
+//! | [`Reply::Shed`] | unchanged — the request never executed | yes, same request | overload shedding: the request aged past the route's deadline (`deadline_rounds`) or arrived past the waiting-queue bound (`max_waiting_items`). Purely an admission decision. |
+//! | [`Reply::Error`] | **advanced** for a panicked step/prefill — the K/V append landed before the sweep failed; unchanged for malformed requests | NO for a panicked step (a replay would double-append); fix and resend for malformed ones | a contained failure: a sweep task panicked (only the owning session's step fails; batchmates are bit-identical to fault-free replay), or the payload was malformed (bad dtype/shape/session id). |
+//! | reaped-session close | pages reclaimed, session id dead | open a new session | the idle-session TTL reaper (`idle_ttl_batches`) closed a leaked / hung-up session; subsequent requests to the id get `Reply::Error`. Counted in `Counters::reaped`. |
+//!
+//! Bit-identity under faults: a faulted request's failure never perturbs
+//! any *other* session's replies — non-faulted sessions replay
+//! bit-identically with the fault plan on or off (conformance
+//! invariant 8); a `Shed`/`Exhausted` request never executed, and a
+//! panicked step advanced state exactly as a successful append would
+//! have (replay the event, discard the output, and the session's later
+//! replies line up again).
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -187,6 +208,12 @@ pub enum Reply {
     /// of `pages` free at failure time. The session is unchanged; retry
     /// a smaller chunk or against a larger arena
     Exhausted { pages: usize, free_pages: usize },
+    /// typed overload shedding: the request was dropped unexecuted after
+    /// waiting `waited_rounds` serving rounds (deadline overrun — organic
+    /// or injected — or a bounded waiting queue). The session is
+    /// unchanged; retry when the route drains (see the module docs,
+    /// "Failure semantics")
+    Shed { waited_rounds: usize },
     /// the server rejected or failed the request
     Error(String),
 }

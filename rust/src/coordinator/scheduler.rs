@@ -43,11 +43,33 @@
 //! resolve as typed, retryable [`Reply::Exhausted`]. Every pass
 //! therefore admits or resolves at least its front item, which is the
 //! no-starvation argument: the queue strictly shrinks or executes.
+//!
+//! # Graceful degradation
+//!
+//! Two overload valves turn "the engine is drowning" into typed,
+//! per-request [`Reply::Shed`] instead of unbounded queueing:
+//!
+//! * **bounded waiting queue** — with `max_waiting_items > 0`, steps
+//!   and prefills beyond the bound shed immediately on batch ingress
+//!   (`waited_rounds: 0`); opens and closes always stay (the control
+//!   plane never sheds).
+//! * **per-request deadline** — with `deadline_rounds > 0`, a step or
+//!   prefill that has waited more than that many serving rounds sheds
+//!   with the rounds it waited.
+//!
+//! A shed request **never executed** — the session is untouched and a
+//! retry is safe (see "Failure semantics" in [`super::request`]). The
+//! route's [`crate::faults::FaultPlan`] can also fire an injected
+//!   deadline overrun ([`FaultSite::SchedDeadline`]); each firing sheds
+//! exactly ONE oldest waiting sheddable item, so chaos tests can count
+//! one typed reply per injected fault. Shedding only shrinks the
+//! queue, so the no-starvation argument above is unchanged.
 
 use std::collections::HashSet;
 
 use super::engine_ops::DecodePipeline;
 use super::request::{Payload, Reply};
+use crate::faults::FaultSite;
 use crate::runtime::Tensor;
 
 /// Continuous-batching knobs of a decode route. Defaults suit the
@@ -66,6 +88,15 @@ pub struct SchedConfig {
     pub waiting_served_ratio: f64,
     /// ... or when the waiting prefills' token mass reaches this
     pub max_waiting_tokens: usize,
+    /// shed a step/prefill that has waited more than this many serving
+    /// rounds ([`Reply::Shed`]); 0 disables the deadline
+    pub deadline_rounds: usize,
+    /// shed steps/prefills beyond this many waiting items at batch
+    /// ingress (opens/closes always stay); 0 leaves the queue unbounded
+    pub max_waiting_items: usize,
+    /// reap sessions idle for this many engine batches (see
+    /// `DecodePipeline::run_batch`); 0 disables the reaper
+    pub idle_ttl_batches: usize,
 }
 
 impl Default for SchedConfig {
@@ -75,6 +106,9 @@ impl Default for SchedConfig {
             max_batch_prefill_tokens: 512,
             waiting_served_ratio: 1.2,
             max_waiting_tokens: 256,
+            deadline_rounds: 0,
+            max_waiting_items: 0,
+            idle_ttl_batches: 0,
         }
     }
 }
@@ -143,7 +177,58 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
     let mut replies: Vec<Option<Reply>> = batch.iter().map(|_| None).collect();
     let mut pending: Vec<usize> = (0..items.len()).collect();
 
+    let sheddable =
+        |i: usize| matches!(items[i], Item::Step { .. } | Item::Prefill { .. });
+    let shed = |pipe: &DecodePipeline, replies: &mut [Option<Reply>], i: usize, waited: u64| {
+        pipe.counters_mut().shed += 1;
+        replies[i] = Some(Reply::Shed { waited_rounds: waited as usize });
+    };
+
+    // bounded waiting queue: steps/prefills beyond the bound shed at
+    // ingress, unexecuted; opens/closes (the control plane) always stay
+    if cfg.max_waiting_items > 0 && pending.len() > cfg.max_waiting_items {
+        let mut kept = 0usize;
+        for &i in &pending {
+            if kept < cfg.max_waiting_items || !sheddable(i) {
+                kept += 1;
+            } else {
+                shed(pipe, &mut replies, i, 0);
+            }
+        }
+        pending.retain(|&i| replies[i].is_none());
+    }
+
+    // rounds each still-pending item has waited (deadline accounting)
+    let mut ages: Vec<u64> = vec![0; items.len()];
+    // one fault draw per scheduling pass, independent of round outcomes
+    let mut deadline_draws: u64 = 0;
+
     while !pending.is_empty() {
+        // organic deadline overrun: shed what waited past the deadline
+        if cfg.deadline_rounds > 0 {
+            for &i in &pending {
+                if sheddable(i) && ages[i] > cfg.deadline_rounds as u64 {
+                    shed(pipe, &mut replies, i, ages[i]);
+                }
+            }
+            pending.retain(|&i| replies[i].is_none());
+            if pending.is_empty() {
+                break;
+            }
+        }
+        // injected deadline overrun: each firing sheds exactly ONE item
+        // — the oldest waiting sheddable one — so chaos accounting can
+        // pin one typed reply per fault
+        if pipe.fault_plan().should_fault(FaultSite::SchedDeadline, deadline_draws) {
+            if let Some(&i) = pending.iter().find(|&&i| sheddable(i)) {
+                shed(pipe, &mut replies, i, ages[i]);
+                pending.retain(|&i| replies[i].is_none());
+            }
+        }
+        deadline_draws += 1;
+        if pending.is_empty() {
+            break;
+        }
         {
             let mut c = pipe.counters_mut();
             c.peak_queue_depth = c.peak_queue_depth.max(pending.len() as u64);
@@ -180,6 +265,9 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
             execute(pipe, &items, &round.admitted, &mut replies);
         }
         pending.retain(|&i| replies[i].is_none());
+        for &i in &pending {
+            ages[i] += 1;
+        }
     }
     replies.into_iter().map(|r| r.expect("every request resolved")).collect()
 }

@@ -434,10 +434,30 @@ fn process_batch(
                 // replies, so one bad step cannot fail its batchmates.
                 let payloads: Vec<&Payload> = batch.iter().map(|r| &r.payload).collect();
                 let replies = p.run_batch(&payloads);
-                // snapshot the scheduler counters so `stats()` readers see
-                // round occupancy / eviction / requeue totals per route
+                // deliver decode replies here, not in the common tail: a
+                // failed send means the client hung up, and the session
+                // must become reap-eligible or its KV pages leak for the
+                // life of the server
+                let now = Instant::now();
+                for ((req, reply), t0) in batch.iter().zip(replies).zip(&started) {
+                    metrics.latency.record(now.duration_since(*t0));
+                    let session = match (&req.payload, &reply) {
+                        (Payload::DecodeStep { session, .. }, _)
+                        | (Payload::DecodePrefill { session, .. }, _) => Some(*session),
+                        (Payload::DecodeClose(s), _) => Some(*s),
+                        (Payload::DecodeOpen, Reply::Session(id)) => Some(*id),
+                        _ => None,
+                    };
+                    if req.reply.send(reply).is_err() {
+                        if let Some(s) = session {
+                            p.note_dead_reply(s);
+                        }
+                    }
+                }
+                // snapshot the scheduler counters AFTER delivery so
+                // `stats()` readers see this batch's dead replies too
                 metrics.sched = p.sched_counters();
-                replies
+                return;
             }
         },
     };
@@ -445,5 +465,75 @@ fn process_batch(
     for ((req, reply), t0) in batch.iter().zip(replies).zip(started) {
         metrics.latency.record(now.duration_since(t0));
         let _ = req.reply.send(reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServerConfig;
+
+    fn artifacts_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("lutmax_server_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+        dir
+    }
+
+    /// A client that hangs up (drops its reply receiver) before the
+    /// engine answers must not wedge anything: the failed send is
+    /// counted (`Counters::dead_replies`) and the session is reaped on
+    /// a later batch, its pages reclaimed.
+    #[test]
+    fn dead_decode_client_is_counted_and_reaped() {
+        let cfg = ServerConfig {
+            artifacts: artifacts_dir("dead_client"),
+            max_batch: 8,
+            // long enough that the receiver below is certainly dropped
+            // before the engine flushes the batch and sends the reply
+            batch_timeout_us: 50_000,
+            workers: 2,
+            queue_depth: 64,
+        };
+        let routes = RouteTable {
+            decode: Some("decode:rexp:uint8:g2:p8".into()),
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, routes).unwrap();
+        let id = match c.call(Payload::DecodeOpen).unwrap() {
+            Reply::Session(id) => id,
+            other => panic!("unexpected open reply {other:?}"),
+        };
+        let (h, g, d) = (4usize, 2usize, 8usize);
+        let step = Payload::DecodeStep {
+            session: id,
+            q: Tensor::f32(vec![h, d], vec![0.25; h * d]),
+            k: Tensor::f32(vec![g, d], vec![0.5; g * d]),
+            v: Tensor::f32(vec![g, d], vec![1.0; g * d]),
+        };
+        // hang up immediately: the reply has nowhere to go
+        drop(c.submit(step).unwrap());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let sched = c.stats().unwrap().per_task.get("decode").unwrap().sched;
+            if sched.dead_replies >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "dead reply never counted: {sched:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // any later decode batch reaps the marked session
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let _ = c.call(Payload::DecodeOpen).unwrap();
+            let sched = c.stats().unwrap().per_task.get("decode").unwrap().sched;
+            if sched.reaped >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "dead session never reaped: {sched:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        c.shutdown().unwrap();
     }
 }

@@ -1,0 +1,264 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Production failure modes — a panicking worker task, a spurious
+//! allocation failure, a scheduler round blowing its deadline — are rare
+//! and timing-dependent in the wild, which makes the *containment*
+//! machinery (panic isolation in `softmax/par.rs`, eviction/retry in the
+//! scheduler, typed `Reply::Error`/`Reply::Shed` surfaces) the least
+//! tested code in the stack. A [`FaultPlan`] turns those events into a
+//! deterministic, replayable schedule so the chaos suites
+//! (`integration_decode_batch.rs`, conformance invariant 8) can assert
+//! the failure-domain contract exactly: every injected fault surfaces as
+//! one typed reply, non-faulted sessions replay bit-identically, nothing
+//! hangs, and the KV free list round-trips.
+//!
+//! # Determinism under parallelism
+//!
+//! The plan is **stateless per query**: [`FaultPlan::should_fault`] is a
+//! pure hash of `(seed, site, index)` — no internal RNG stream, no
+//! `std::time`. Each injection site supplies its own monotone index (the
+//! KV pool counts allocation attempts, the scatter layer counts tasks,
+//! the scheduler counts rounds), so the fault schedule depends only on
+//! the sequence of *logical* events, never on thread interleaving or
+//! wall-clock — the same run replays the same faults.
+//!
+//! # Zero cost when disabled
+//!
+//! [`FaultPlan::none`] has every site rate at 0; `should_fault` then
+//! returns `false` after a single integer compare, and the hot paths
+//! guard on [`FaultPlan::is_none`] before doing any per-event counting.
+//!
+//! # Wiring
+//!
+//! - [`crate::kv::KvPool::set_fault_plan`] — spurious
+//!   `KvError::Exhausted` on page allocation ([`FaultSite::KvAlloc`]).
+//! - [`crate::softmax::ParSoftmax::set_fault_plan`] — injected task
+//!   panic / injected slow task in the worker loop
+//!   ([`FaultSite::WorkerPanic`] / [`FaultSite::WorkerSlow`]); panics
+//!   are contained by the pool and surface as a scatter-level outcome.
+//! - the decode scheduler reads the pipeline's plan per round
+//!   ([`FaultSite::SchedDeadline`]) and sheds the oldest waiting
+//!   request as if its deadline overran.
+//! - the `"decode:..."` route accepts an `fSEED` segment, so a fault
+//!   plan is installable over the wire (`lutmax serve` smoke, benches).
+
+/// Marker substring of every injected panic's payload. The
+/// [`silence_injected_panics`] hook (and log scrapers) match on it;
+/// genuine panics never contain it.
+pub const INJECTED_PANIC: &str = "injected fault";
+
+/// An injection site. Each site draws from its own hash domain, so
+/// enabling one site never perturbs another's schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// spurious [`crate::kv::KvError::Exhausted`] on a page allocation
+    /// (single-token append or block reserve), despite free pages
+    KvAlloc,
+    /// a `ParSoftmax` scatter task panics before running
+    WorkerPanic,
+    /// a `ParSoftmax` scatter task is delayed (yields) before running —
+    /// perturbs completion order, must never perturb bytes
+    WorkerSlow,
+    /// a scheduler round overruns its deadline: the oldest waiting
+    /// request is shed with a typed `Reply::Shed`
+    SchedDeadline,
+}
+
+/// A seeded, replayable fault schedule. `Copy` and 24 bytes, so layers
+/// store it by value; [`FaultPlan::none`] (the default) is free.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    /// per-site denominators: site fires on ~1/denom of its events;
+    /// 0 disables the site
+    kv_alloc: u32,
+    worker_panic: u32,
+    worker_slow: u32,
+    sched_deadline: u32,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl FaultPlan {
+    /// The disabled plan: every site off, every query a single compare.
+    pub const fn none() -> Self {
+        Self { seed: 0, kv_alloc: 0, worker_panic: 0, worker_slow: 0, sched_deadline: 0 }
+    }
+
+    /// A chaos-soak default: every site enabled at a moderate rate.
+    /// Same seed ⇒ same schedule, across processes.
+    pub const fn seeded(seed: u64) -> Self {
+        Self { seed, kv_alloc: 13, worker_panic: 11, worker_slow: 5, sched_deadline: 9 }
+    }
+
+    /// Builder: set one site's denominator (fires on ~1/`denom` of the
+    /// site's events; 0 disables it).
+    pub const fn with(mut self, site: FaultSite, denom: u32) -> Self {
+        match site {
+            FaultSite::KvAlloc => self.kv_alloc = denom,
+            FaultSite::WorkerPanic => self.worker_panic = denom,
+            FaultSite::WorkerSlow => self.worker_slow = denom,
+            FaultSite::SchedDeadline => self.sched_deadline = denom,
+        }
+        self
+    }
+
+    /// Builder: replace the seed, keeping the site rates.
+    pub const fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// `true` when no site can ever fire.
+    pub fn is_none(&self) -> bool {
+        self.kv_alloc == 0
+            && self.worker_panic == 0
+            && self.worker_slow == 0
+            && self.sched_deadline == 0
+    }
+
+    /// Does `site`'s `index`-th event fault? Pure in `(seed, site,
+    /// index)` — thread-interleaving-independent, replayable.
+    #[inline]
+    pub fn should_fault(&self, site: FaultSite, index: u64) -> bool {
+        let denom = match site {
+            FaultSite::KvAlloc => self.kv_alloc,
+            FaultSite::WorkerPanic => self.worker_panic,
+            FaultSite::WorkerSlow => self.worker_slow,
+            FaultSite::SchedDeadline => self.sched_deadline,
+        };
+        if denom == 0 {
+            return false;
+        }
+        let tag = match site {
+            FaultSite::KvAlloc => 0x4B56_414C_4C4F_4331,
+            FaultSite::WorkerPanic => 0x5041_4E49_4331_0001,
+            FaultSite::WorkerSlow => 0x534C_4F57_0000_0002,
+            FaultSite::SchedDeadline => 0x4445_4144_4C4E_0003,
+        };
+        mix64(self.seed ^ tag ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15)) % denom as u64 == 0
+    }
+}
+
+/// splitmix64 finalizer — the avalanche behind [`FaultPlan::should_fault`].
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Install (once, process-wide) a panic hook that suppresses the default
+/// "thread panicked" printout for **injected** panics only — payloads
+/// containing [`INJECTED_PANIC`] — and delegates everything else to the
+/// previously-installed hook. Chaos suites and the serve/bench fault
+/// scenarios call this so a seeded plan doesn't spray thousands of
+/// expected backtraces; genuine panics still report normally.
+pub fn silence_injected_panics() {
+    use std::sync::Once;
+    static INSTALL: Once = Once::new();
+    INSTALL.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains(INJECTED_PANIC))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<String>()
+                        .map(|s| s.contains(INJECTED_PANIC))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_free_and_never_fires() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        assert_eq!(p, FaultPlan::default());
+        for site in [
+            FaultSite::KvAlloc,
+            FaultSite::WorkerPanic,
+            FaultSite::WorkerSlow,
+            FaultSite::SchedDeadline,
+        ] {
+            for i in 0..1000 {
+                assert!(!p.should_fault(site, i));
+            }
+        }
+    }
+
+    #[test]
+    fn schedules_are_replayable_and_seed_sensitive() {
+        let a = FaultPlan::seeded(42);
+        let b = FaultPlan::seeded(42);
+        let c = FaultPlan::seeded(43);
+        assert!(!a.is_none());
+        let trace = |p: &FaultPlan| -> Vec<bool> {
+            (0..512).map(|i| p.should_fault(FaultSite::WorkerPanic, i)).collect()
+        };
+        assert_eq!(trace(&a), trace(&b), "same seed, same schedule");
+        assert_ne!(trace(&a), trace(&c), "seeds must diverge");
+        // the schedule is a pure function of the index: querying out of
+        // order or repeatedly changes nothing
+        for i in [7u64, 3, 7, 511, 0, 7] {
+            assert_eq!(
+                a.should_fault(FaultSite::WorkerPanic, i),
+                b.should_fault(FaultSite::WorkerPanic, i)
+            );
+        }
+    }
+
+    #[test]
+    fn sites_draw_from_independent_domains() {
+        let p = FaultPlan::seeded(7).with(FaultSite::WorkerSlow, 11);
+        let panics: Vec<u64> =
+            (0..2000).filter(|&i| p.should_fault(FaultSite::WorkerPanic, i)).collect();
+        let slows: Vec<u64> =
+            (0..2000).filter(|&i| p.should_fault(FaultSite::WorkerSlow, i)).collect();
+        assert!(!panics.is_empty() && !slows.is_empty());
+        assert_ne!(panics, slows, "sites must not share a schedule");
+        // disabling one site leaves the other's schedule untouched
+        let q = p.with(FaultSite::WorkerPanic, 0);
+        let slows_q: Vec<u64> =
+            (0..2000).filter(|&i| q.should_fault(FaultSite::WorkerSlow, i)).collect();
+        assert_eq!(slows, slows_q);
+        assert!(!(0..2000).any(|i| q.should_fault(FaultSite::WorkerPanic, i)));
+    }
+
+    #[test]
+    fn rates_land_near_their_denominators() {
+        let p = FaultPlan::seeded(1);
+        let n = 20_000u64;
+        let hits = (0..n).filter(|&i| p.should_fault(FaultSite::KvAlloc, i)).count();
+        let expect = n as f64 / 13.0;
+        assert!(
+            (hits as f64) > expect * 0.7 && (hits as f64) < expect * 1.3,
+            "kv_alloc fired {hits} of {n} (expected ≈ {expect:.0})"
+        );
+    }
+
+    #[test]
+    fn builder_toggles_sites() {
+        let p = FaultPlan::none().with_seed(5).with(FaultSite::WorkerPanic, 1);
+        assert!(!p.is_none());
+        // denominator 1: every event faults
+        assert!((0..64).all(|i| p.should_fault(FaultSite::WorkerPanic, i)));
+        assert!((0..64).all(|i| !p.should_fault(FaultSite::KvAlloc, i)));
+    }
+}

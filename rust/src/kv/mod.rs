@@ -84,6 +84,7 @@ use std::fmt;
 
 use anyhow::{bail, Result};
 
+use crate::faults::{FaultPlan, FaultSite};
 use crate::quant::Affine;
 
 /// Geometry of a paged KV arena, fixed at [`KvPool::new`].
@@ -258,6 +259,13 @@ pub struct KvPool {
     /// free page ids, popped from the back (so fresh pools allocate in
     /// ascending id order — handy in tests, irrelevant to correctness)
     free: Vec<u32>,
+    /// injected-fault schedule ([`FaultPlan::none`] outside chaos tests:
+    /// one branch per allocation attempt)
+    faults: FaultPlan,
+    /// monotone allocation-attempt counter — the fault plan's per-attempt
+    /// index, so a spurious failure is transient: the retry is a new
+    /// attempt with a fresh draw
+    alloc_seq: u64,
 }
 
 impl KvPool {
@@ -275,12 +283,39 @@ impl KvPool {
             k_aff: vec![zero; cfg.pages],
             v_aff: vec![zero; cfg.pages],
             free: (0..cfg.pages as u32).rev().collect(),
+            faults: FaultPlan::none(),
+            alloc_seq: 0,
             cfg,
         }
     }
 
     pub fn config(&self) -> &KvConfig {
         &self.cfg
+    }
+
+    /// Install a fault schedule for page allocation (and reset the
+    /// attempt counter, so the schedule replays from its start). Pass
+    /// [`FaultPlan::none`] to disable injection.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.faults = plan;
+        self.alloc_seq = 0;
+    }
+
+    /// The currently-installed fault schedule.
+    pub fn fault_plan(&self) -> FaultPlan {
+        self.faults
+    }
+
+    /// Should this allocation attempt spuriously fail? Counts the attempt
+    /// (so retries draw fresh) and consults the plan. One branch when the
+    /// plan is disabled.
+    fn alloc_faulted(&mut self) -> bool {
+        if self.faults.is_none() {
+            return false;
+        }
+        let i = self.alloc_seq;
+        self.alloc_seq += 1;
+        self.faults.should_fault(FaultSite::KvAlloc, i)
     }
 
     /// pages currently on the free list
@@ -304,6 +339,15 @@ impl KvPool {
         assert_eq!(v_row.len(), g * d, "v row must be kv_heads * d_head");
         let slot = seq.len % psize;
         if slot == 0 {
+            // injected spurious failure: same typed error as the real
+            // thing, but `free_pages` may be > 0 — callers must treat
+            // Exhausted as retryable, not as proof the arena is full
+            if self.alloc_faulted() {
+                return Err(KvError::Exhausted {
+                    pages: self.cfg.pages,
+                    free_pages: self.free.len(),
+                });
+            }
             let Some(p) = self.free.pop() else {
                 return Err(KvError::Exhausted { pages: self.cfg.pages, free_pages: 0 });
             };
@@ -360,15 +404,24 @@ impl KvPool {
         assert_eq!(k_rows.len() % gd, 0, "k block must be tokens * kv_heads * d_head");
         assert_eq!(k_rows.len(), v_rows.len(), "k/v blocks must match");
         let tokens = k_rows.len() / gd;
-        if self.pages_needed(seq, tokens) > self.free.len() {
+        let needed = self.pages_needed(seq, tokens);
+        // one injected draw covers the whole block reserve (atomic: the
+        // block either lands entirely or not at all), counted whether or
+        // not the real check would pass
+        if (needed > 0 && self.alloc_faulted()) || needed > self.free.len() {
             return Err(KvError::Exhausted {
                 pages: self.cfg.pages,
                 free_pages: self.free.len(),
             });
         }
+        // the per-page draws inside `append` must not double-fault the
+        // reserved block: disable the plan across the inner appends
+        let plan = self.faults;
+        self.faults = FaultPlan::none();
         for (kr, vr) in k_rows.chunks_exact(gd).zip(v_rows.chunks_exact(gd)) {
             self.append(seq, kr, vr).expect("block capacity reserved above");
         }
+        self.faults = plan;
         Ok(())
     }
 
@@ -713,6 +766,57 @@ mod tests {
         // multi-token probe agrees with the single-step one at +1
         assert_eq!(pool.pages_needed(&seq, 1), pool.pages_needed_for_step(&seq));
         assert_eq!(pool.close(seq), 4);
+    }
+
+    #[test]
+    fn injected_alloc_faults_are_transient_and_leave_state_clean() {
+        use crate::faults::{FaultPlan, FaultSite};
+        let mut rng = Rng::new(17);
+        let mut pool = pool4();
+        let mut seq = seq_for(&pool);
+        let row = rand_row(&mut rng, 16);
+        // denominator 1: every allocation attempt faults...
+        pool.set_fault_plan(FaultPlan::none().with_seed(3).with(FaultSite::KvAlloc, 1));
+        let err = pool.append(&mut seq, &row, &row).unwrap_err();
+        // ...spuriously: free pages remain, and the sequence is untouched
+        assert_eq!(err, KvError::Exhausted { pages: 4, free_pages: 4 });
+        assert_eq!(seq.len(), 0);
+        assert_eq!(pool.free_pages(), 4);
+        let err = pool.append_block(&mut seq, &row, &row).unwrap_err();
+        assert_eq!(err, KvError::Exhausted { pages: 4, free_pages: 4 });
+        assert_eq!(seq.len(), 0);
+        // disabling restores clean behavior; free list round-trips
+        pool.set_fault_plan(FaultPlan::none());
+        pool.append(&mut seq, &row, &row).unwrap();
+        assert_eq!(pool.close(seq), 1);
+        assert_eq!(pool.free_pages(), 4);
+
+        // a moderate rate means retries eventually land (fresh draw per
+        // attempt): page_size 1 makes every append an allocation attempt
+        let mut pool =
+            KvPool::new(KvConfig { pages: 64, page_size: 1, kv_heads: 1, d_head: 4 });
+        pool.set_fault_plan(FaultPlan::none().with_seed(3).with(FaultSite::KvAlloc, 3));
+        let mut seq = KvSeq::new(
+            HeadGroups::new(1, 1).unwrap(),
+            Affine { scale: 1.0, zero_point: 0 },
+            Affine { scale: 1.0, zero_point: 0 },
+        );
+        let row = rand_row(&mut rng, 4);
+        let mut faulted = 0usize;
+        while seq.len() < 32 {
+            match pool.append(&mut seq, &row, &row) {
+                Ok(()) => {}
+                Err(KvError::Exhausted { free_pages, .. }) => {
+                    assert!(free_pages > 0, "only spurious failures expected here");
+                    faulted += 1;
+                    assert!(faulted < 1000, "retries must eventually land");
+                }
+            }
+        }
+        assert!(faulted > 0, "denominator 3 over ~48 attempts must fire");
+        assert_eq!(pool.free_pages(), 32);
+        assert_eq!(pool.close(seq), 32);
+        assert_eq!(pool.free_pages(), 64, "free list round-trips under faults");
     }
 
     #[test]

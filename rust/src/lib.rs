@@ -25,6 +25,7 @@
 //! | [`softmax`]   | bit-exact SW models of the LUT datapaths + baselines (f32 and i8 ingestion) |
 //! | [`attention`] | fused integer-native `QK^T → LUT softmax → ×V` kernel + streaming decode |
 //! | [`kv`]        | paged integer KV cache (arena + free-list + grouped heads) |
+//! | [`faults`]    | deterministic fault injection (seeded plans, replayable chaos) |
 //! | [`hwsim`]     | cycle/area/energy simulator of softmax HW designs |
 //! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` |
 //! | [`eval`]      | BLEU / accuracy / F1 / Hungarian-matched AP metrics |
@@ -39,6 +40,7 @@ pub mod benchkit;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
+pub mod faults;
 pub mod hwsim;
 pub mod kv;
 pub mod lut;

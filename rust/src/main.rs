@@ -112,7 +112,10 @@ fn serve(args: &Args) -> Result<()> {
         coordinator.shutdown()?;
         // second scenario: an arena several times smaller than the
         // session demand — the scheduler must evict/restore, not fail
-        return serve_decode_overcommit(config(args)?, &mut rng);
+        serve_decode_overcommit(config(args)?, &mut rng)?;
+        // third scenario: the same route with a live fault schedule —
+        // injected failures must degrade typed, never lose a reply
+        return serve_decode_faults(config(args)?, &mut rng);
     }
     let gaps = workload::poisson_arrivals_us(&mut rng, requests, rate);
     let t0 = std::time::Instant::now();
@@ -351,6 +354,80 @@ fn serve_decode_overcommit(cfg: ServerConfig, rng: &mut Rng) -> Result<()> {
         "overcommit smoke: {ok} steps served, {} evictions, {} restores",
         m.sched.evicted, m.sched.requeued
     );
+    c.shutdown()
+}
+
+/// Fault smoke: the decode route with a live chaos schedule (`:f7`
+/// arms spurious KV alloc failures, contained worker panics and
+/// slowdowns, injected deadline sheds). 4 sessions x (prefill + 16
+/// steps) of traffic; injected failures must come back as TYPED
+/// degradation replies (`Error`/`Shed`/`Exhausted`) on the faulted
+/// request alone — zero dropped replies, zero non-faulted steps lost,
+/// closes always answered, and the serving loop must survive every
+/// contained panic.
+fn serve_decode_faults(cfg: ServerConfig, rng: &mut Rng) -> Result<()> {
+    lutmax::faults::silence_injected_panics();
+    let (h, g, d) = (4usize, 2usize, 32usize);
+    let variant = "decode:rexp:uint8:g2:p8:f7";
+    let (sessions, steps) = (4usize, 16usize);
+    let mut routes = RouteTable::default();
+    routes.decode = Some(variant.to_string());
+    println!("fault smoke: variant={variant} sessions={sessions} steps/session={steps}");
+    let c = Coordinator::start(cfg, routes)?;
+    let mut ids = Vec::with_capacity(sessions);
+    for _ in 0..sessions {
+        match c.call(Payload::DecodeOpen)? {
+            Reply::Session(id) => ids.push(id),
+            other => return Err(anyhow!("open failed: {other:?}")),
+        }
+    }
+    let (mut submitted, mut ok, mut faulted) = (0usize, 0usize, 0usize);
+    for &id in &ids {
+        let (q, k, v) = workload::decode_prefill_chunk(rng, 3, h, g, d, 1.0);
+        submitted += 1;
+        match c.call(Payload::DecodePrefill { session: id, q, k, v })? {
+            Reply::Prefill(_) => ok += 1,
+            Reply::Error(_) | Reply::Shed { .. } | Reply::Exhausted { .. } => faulted += 1,
+            other => return Err(anyhow!("unexpected prefill reply {other:?}")),
+        }
+    }
+    for _ in 0..steps {
+        let mut pending = Vec::with_capacity(sessions);
+        for &id in &ids {
+            let (q, k, v) = workload::decode_qkv_step(rng, h, g, d, 1.0);
+            submitted += 1;
+            pending.push(c.submit(Payload::DecodeStep { session: id, q, k, v })?);
+        }
+        for rx in pending {
+            match rx.recv() {
+                Ok(Reply::Token(_)) => ok += 1,
+                Ok(Reply::Error(_) | Reply::Shed { .. } | Reply::Exhausted { .. }) => {
+                    faulted += 1
+                }
+                Ok(other) => return Err(anyhow!("unexpected step reply {other:?}")),
+                Err(_) => return Err(anyhow!("a faulted step LOST its reply")),
+            }
+        }
+    }
+    for id in ids {
+        match c.call(Payload::DecodeClose(id))? {
+            Reply::Closed { .. } => {}
+            other => return Err(anyhow!("close failed under faults: {other:?}")),
+        }
+    }
+    let stats = c.stats()?;
+    let m = stats.per_task.get("decode").ok_or_else(|| anyhow!("no decode metrics"))?;
+    println!("  sched      {}", m.sched.summary());
+    if ok + faulted != submitted {
+        return Err(anyhow!(
+            "{} of {submitted} requests vanished without a typed reply",
+            submitted - ok - faulted
+        ));
+    }
+    if ok == 0 {
+        return Err(anyhow!("a 1-in-11 fault schedule must leave most steps serving"));
+    }
+    println!("fault smoke: {ok} served, {faulted} typed-degraded, 0 lost of {submitted}");
     c.shutdown()
 }
 

@@ -74,7 +74,8 @@ mod rexp;
 
 pub use exact::SoftmaxExact;
 pub use lut2d::SoftmaxLut2d;
-pub use par::{ParSoftmax, DEFAULT_MIN_ROWS_PER_SHARD};
+pub use par::{ParSoftmax, ScatterOutcome, DEFAULT_MIN_ROWS_PER_SHARD};
+pub(crate) use par::lock_unpoisoned;
 pub use priorart::{SoftmaxAggressive, SoftmaxEq2, SoftmaxEq2Plus};
 pub use rexp::SoftmaxRexp;
 

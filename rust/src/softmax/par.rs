@@ -19,13 +19,41 @@
 //! softmax row-blocks, [`ParSoftmax::scatter`] fans arbitrary indexed
 //! closures (the fused attention kernel's B×H head-blocks) across the
 //! same workers.
+//!
+//! # Failure domains
+//!
+//! A panicking task must never take the pool (or its submitter) with it.
+//! Every task body runs under `catch_unwind` — tasks are unwind-safe by
+//! construction, touching only disjoint raw slices / scatter indices —
+//! and the worker **always** signals `done` with an `Ok`/`Panicked`
+//! status, so a submitter can never hang on a dropped sender. The queue
+//! mutex is taken with explicit poison recovery everywhere (the queue
+//! state is a plain job list, valid under any interleaving), so one
+//! contained panic never wedges subsequent waves. Scatter submitters get
+//! the per-index verdict back as a [`ScatterOutcome`], which the decode
+//! wave layer (`attention/batch.rs`) maps to the owning session — one
+//! bad head task fails one session's step, siblings stay bit-identical.
+//! Deterministic panic/delay injection for the chaos suites comes from a
+//! [`FaultPlan`] ([`ParSoftmax::set_fault_plan`]); the disabled plan is
+//! a single branch per scatter.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 use super::{debug_check_shape, IntRow, Scratch, SoftmaxEngine};
+use crate::faults::{FaultPlan, FaultSite, INJECTED_PANIC};
+
+/// Lock a mutex, recovering the guard from a poisoned lock. The pool's
+/// shared state (a job queue / a spare-scratch stack / a fault plan) is
+/// structurally valid under any interleaving — poisoning carries no
+/// information here, and propagating it would wedge every later wave on
+/// one contained panic.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
 
 /// Don't bother fanning out below this many elements per shard.
 const MIN_ELEMS_PER_SHARD: usize = 2048;
@@ -64,12 +92,36 @@ enum Task {
     },
 }
 
+/// Injected behavior for one job, decided at submit time from the pool's
+/// [`FaultPlan`] (scatter tasks only — softmax row shards are internal
+/// work with no per-session failure domain to isolate).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum InjectedFault {
+    None,
+    /// panic before running the task (contained by the worker)
+    Panic,
+    /// yield repeatedly before running — perturbs completion order,
+    /// must never perturb bytes
+    Slow,
+}
+
+/// Per-job completion status, always sent on `done` — the submitter
+/// never blocks on a dropped sender.
+#[derive(Clone, Copy, PartialEq, Eq)]
+struct JobDone {
+    /// the submitter-assigned tag (scatter index / shard number)
+    tag: usize,
+    ok: bool,
+}
+
 /// One unit of pool work. The submitting thread blocks until every job of
 /// the batch has signalled `done`, so the pointers outlive the job; `out`
 /// blocks (and scatter indices) are disjoint between jobs of one batch.
 struct Job {
     task: Task,
-    done: mpsc::Sender<()>,
+    tag: usize,
+    fault: InjectedFault,
+    done: mpsc::Sender<JobDone>,
 }
 
 // SAFETY: `x`/`out`/`ctx` stay valid and unaliased for the job's lifetime
@@ -117,7 +169,9 @@ impl WorkerPool {
     }
 
     fn submit(&self, job: Job) {
-        let mut q = self.shared.queue.lock().unwrap();
+        // poison recovery: a contained task panic must never wedge the
+        // next submitter (the queue state is valid under any unwind)
+        let mut q = lock_unpoisoned(&self.shared.queue);
         q.jobs.push_back(job);
         drop(q);
         self.shared.ready.notify_one();
@@ -126,9 +180,7 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        if let Ok(mut q) = self.shared.queue.lock() {
-            q.shutdown = true;
-        }
+        lock_unpoisoned(&self.shared.queue).shutdown = true;
         self.shared.ready.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -136,14 +188,45 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Run one task body, containing any panic. Tasks are unwind-safe by
+/// construction: each touches only its own disjoint output block /
+/// scatter index plus shared `Sync` state, so no observer can see a
+/// half-updated invariant after an unwind.
+fn run_task(task: &Task, fault: InjectedFault, scratch: &mut Scratch) -> bool {
+    catch_unwind(AssertUnwindSafe(|| {
+        match fault {
+            InjectedFault::None => {}
+            InjectedFault::Panic => panic!("{INJECTED_PANIC}: worker task panic"),
+            InjectedFault::Slow => {
+                for _ in 0..64 {
+                    std::thread::yield_now();
+                }
+            }
+        }
+        // SAFETY: see `unsafe impl Send for Job` — the submitter keeps the
+        // buffers alive and the blocks disjoint until `done` is signalled.
+        match *task {
+            Task::Softmax { x, out, len, n, ref engine } => {
+                let x = unsafe { std::slice::from_raw_parts(x, len) };
+                let out = unsafe { std::slice::from_raw_parts_mut(out, len) };
+                engine.run_with(x, n, out, scratch);
+            }
+            Task::SoftmaxI8 { x, out, len, n, row, ref engine } => {
+                let x = unsafe { std::slice::from_raw_parts(x, len) };
+                let out = unsafe { std::slice::from_raw_parts_mut(out, len) };
+                engine.run_i8_with(x, n, row, out, scratch);
+            }
+            Task::Scatter { ctx, call, index } => unsafe { call(ctx, index, scratch) },
+        }
+    }))
+    .is_ok()
+}
+
 fn worker_loop(shared: &Shared) {
     let mut scratch = Scratch::new();
     loop {
         let job = {
-            let mut q = match shared.queue.lock() {
-                Ok(g) => g,
-                Err(_) => return,
-            };
+            let mut q = lock_unpoisoned(&shared.queue);
             loop {
                 if let Some(j) = q.jobs.pop_front() {
                     break j;
@@ -153,26 +236,38 @@ fn worker_loop(shared: &Shared) {
                 }
                 q = match shared.ready.wait(q) {
                     Ok(g) => g,
-                    Err(_) => return,
+                    Err(poisoned) => poisoned.into_inner(),
                 };
             }
         };
-        // SAFETY: see `unsafe impl Send for Job` — the submitter keeps the
-        // buffers alive and the blocks disjoint until `done` is signalled.
-        match job.task {
-            Task::Softmax { x, out, len, n, engine } => {
-                let x = unsafe { std::slice::from_raw_parts(x, len) };
-                let out = unsafe { std::slice::from_raw_parts_mut(out, len) };
-                engine.run_with(x, n, out, &mut scratch);
-            }
-            Task::SoftmaxI8 { x, out, len, n, row, engine } => {
-                let x = unsafe { std::slice::from_raw_parts(x, len) };
-                let out = unsafe { std::slice::from_raw_parts_mut(out, len) };
-                engine.run_i8_with(x, n, row, out, &mut scratch);
-            }
-            Task::Scatter { ctx, call, index } => unsafe { call(ctx, index, &mut scratch) },
-        }
-        let _ = job.done.send(());
+        let ok = run_task(&job.task, job.fault, &mut scratch);
+        // ALWAYS signal, panic or not — a submitter blocked on `done`
+        // must never hang because a task died (send failure just means
+        // the submitter is gone; nothing to do)
+        let _ = job.done.send(JobDone { tag: job.tag, ok });
+    }
+}
+
+/// Per-index verdict of one [`ParSoftmax::scatter`] wave. The wave as a
+/// whole always completes — panicked indices simply never wrote their
+/// output block — and the submitter decides what each failure means (the
+/// decode wave layer fails the owning session's step; the fused-attention
+/// path re-raises).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ScatterOutcome {
+    panicked: Vec<usize>,
+}
+
+impl ScatterOutcome {
+    /// `true` when every index ran to completion.
+    pub fn is_ok(&self) -> bool {
+        self.panicked.is_empty()
+    }
+
+    /// Indices whose task panicked (ascending). Their output blocks are
+    /// untouched or partially written — the submitter must not read them.
+    pub fn panicked(&self) -> &[usize] {
+        &self.panicked
     }
 }
 
@@ -186,6 +281,13 @@ pub struct ParSoftmax {
     min_rows_per_shard: usize,
     /// batches dispatched to the pool (vs. run inline) — test/bench probe
     parallel_batches: AtomicUsize,
+    /// injected-fault schedule for scatter tasks ([`FaultPlan::none`]
+    /// outside the chaos suites — one `is_none` branch per scatter)
+    faults: Mutex<FaultPlan>,
+    /// monotone scatter-task counter — the fault plan's per-task index,
+    /// so a schedule replays as long as waves are submitted in the same
+    /// order (reset by [`ParSoftmax::set_fault_plan`])
+    fault_seq: AtomicU64,
 }
 
 impl ParSoftmax {
@@ -217,11 +319,26 @@ impl ParSoftmax {
             pool: WorkerPool::new(workers.max(1)),
             min_rows_per_shard: min_rows_per_shard.max(1),
             parallel_batches: AtomicUsize::new(0),
+            faults: Mutex::new(FaultPlan::none()),
+            fault_seq: AtomicU64::new(0),
         }
     }
 
     pub fn workers(&self) -> usize {
         self.pool.workers()
+    }
+
+    /// Install a fault schedule for scatter tasks (and reset the task
+    /// counter, so the schedule replays from its start). Pass
+    /// [`FaultPlan::none`] to disable injection.
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        *lock_unpoisoned(&self.faults) = plan;
+        self.fault_seq.store(0, Ordering::SeqCst);
+    }
+
+    /// The currently-installed fault schedule.
+    pub fn fault_plan(&self) -> FaultPlan {
+        *lock_unpoisoned(&self.faults)
     }
 
     /// The pool's inline-vs-pool row threshold.
@@ -280,6 +397,31 @@ impl ParSoftmax {
         rows.div_ceil(shards)
     }
 
+    /// Injected fault (if any) for each task of a `count`-task scatter,
+    /// drawn from the installed plan against the monotone task counter.
+    /// `None` (the overwhelmingly common case) costs one lock + one
+    /// branch per wave.
+    fn wave_faults(&self, count: usize) -> Option<Vec<InjectedFault>> {
+        let plan = *lock_unpoisoned(&self.faults);
+        if plan.is_none() {
+            return None;
+        }
+        let base = self.fault_seq.fetch_add(count as u64, Ordering::SeqCst);
+        Some(
+            (0..count as u64)
+                .map(|i| {
+                    if plan.should_fault(FaultSite::WorkerPanic, base + i) {
+                        InjectedFault::Panic
+                    } else if plan.should_fault(FaultSite::WorkerSlow, base + i) {
+                        InjectedFault::Slow
+                    } else {
+                        InjectedFault::None
+                    }
+                })
+                .collect(),
+        )
+    }
+
     /// Fan `f(index, worker scratch)` over `0..count` on the pool,
     /// blocking until every index has run; `count < 2` (or a 1-worker
     /// pool) runs inline on the caller's scratch. Used by the fused
@@ -289,19 +431,25 @@ impl ParSoftmax {
     /// Contract: `f` runs concurrently from worker threads, so everything
     /// it writes must be disjoint per index (the `Sync` bound covers the
     /// reads).
-    pub fn scatter<F>(&self, count: usize, scratch: &mut Scratch, f: &F)
+    ///
+    /// The wave always completes: a panicking task (injected or genuine)
+    /// is contained — inline or on a worker — and reported in the
+    /// returned [`ScatterOutcome`] instead of unwinding into the
+    /// submitter or poisoning the pool. Non-panicked indices are
+    /// unaffected (disjoint outputs), so their results are bit-identical
+    /// to a fault-free run.
+    #[must_use = "panicked indices' output blocks are unwritten — check the outcome"]
+    pub fn scatter<F>(&self, count: usize, scratch: &mut Scratch, f: &F) -> ScatterOutcome
     where
         F: Fn(usize, &mut Scratch) + Sync,
     {
-        if count == 0 {
-            return;
-        }
         if self.pool.workers() <= 1 || count < 2 {
-            for i in 0..count {
-                f(i, scratch);
-            }
-            return;
+            return self.scatter_inline(count, scratch, f);
         }
+        let mut outcome = ScatterOutcome::default();
+        let faults = self.wave_faults(count);
+        let fault_of =
+            |i: usize| faults.as_ref().map_or(InjectedFault::None, |fs| fs[i]);
         self.parallel_batches.fetch_add(1, Ordering::Relaxed);
         unsafe fn trampoline<F: Fn(usize, &mut Scratch) + Sync>(
             ctx: *const (),
@@ -314,19 +462,62 @@ impl ParSoftmax {
             f(index, scratch);
         }
         let ctx = f as *const F as *const ();
-        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let (done_tx, done_rx) = mpsc::channel::<JobDone>();
         for index in 0..count {
             self.pool.submit(Job {
                 task: Task::Scatter { ctx, call: trampoline::<F>, index },
+                tag: index,
+                fault: fault_of(index),
                 done: done_tx.clone(),
             });
         }
         drop(done_tx);
         for _ in 0..count {
-            done_rx
+            // cannot hang: workers signal done for every job, panic or
+            // not (recv errors only if the pool lost every worker, which
+            // containment rules out)
+            let d = done_rx
                 .recv()
                 .expect("softmax worker pool: worker died mid-scatter");
+            if !d.ok {
+                outcome.panicked.push(d.tag);
+            }
         }
+        outcome.panicked.sort_unstable();
+        outcome
+    }
+
+    /// Run a `count`-index wave inline on the caller's thread — for
+    /// submitters whose own accounting decided fan-out isn't worth a pool
+    /// wake (the decode wave layer's `wave_stays_inline`) — with the SAME
+    /// fault injection and panic containment as a pooled
+    /// [`Self::scatter`] wave, so the failure-domain contract (and an
+    /// installed fault schedule's task indexing) does not depend on the
+    /// inline-vs-pool decision.
+    #[must_use = "panicked indices' output blocks are unwritten — check the outcome"]
+    pub fn scatter_inline<F>(&self, count: usize, scratch: &mut Scratch, f: &F) -> ScatterOutcome
+    where
+        F: Fn(usize, &mut Scratch) + Sync,
+    {
+        let mut outcome = ScatterOutcome::default();
+        if count == 0 {
+            return outcome;
+        }
+        let faults = self.wave_faults(count);
+        let fault_of =
+            |i: usize| faults.as_ref().map_or(InjectedFault::None, |fs| fs[i]);
+        for i in 0..count {
+            let ok = match fault_of(i) {
+                // injected inline panic: same containment verdict as a
+                // worker would report, without the unwind
+                InjectedFault::Panic => false,
+                _ => catch_unwind(AssertUnwindSafe(|| f(i, scratch))).is_ok(),
+            };
+            if !ok {
+                outcome.panicked.push(i);
+            }
+        }
+        outcome
     }
 }
 
@@ -343,7 +534,7 @@ impl SoftmaxEngine for ParSoftmax {
         }
         self.parallel_batches.fetch_add(1, Ordering::Relaxed);
         let chunk = block * n;
-        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let (done_tx, done_rx) = mpsc::channel::<JobDone>();
         let mut sent = 0usize;
         for (xc, oc) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
             self.pool.submit(Job {
@@ -354,19 +545,26 @@ impl SoftmaxEngine for ParSoftmax {
                     n,
                     engine: self.inner.clone(),
                 },
+                tag: sent,
+                fault: InjectedFault::None,
                 done: done_tx.clone(),
             });
             sent += 1;
         }
         drop(done_tx);
+        let mut panicked = false;
         for _ in 0..sent {
-            // Err means a job was dropped without signalling (worker
-            // panicked); by then every job has terminated, so unwinding
-            // here cannot race the buffers.
-            done_rx
+            // cannot hang: workers always signal, panic or not; by the
+            // time all `sent` signals arrive every job has terminated, so
+            // unwinding below cannot race the buffers
+            let d = done_rx
                 .recv()
                 .expect("softmax worker pool: worker died mid-batch");
+            panicked |= !d.ok;
         }
+        // a softmax shard has no per-session failure domain (the batch is
+        // one caller's buffer) — re-raise in the submitter after draining
+        assert!(!panicked, "softmax worker shard panicked");
     }
 
     /// i8 batches shard exactly like f32 batches (same inline policy),
@@ -383,7 +581,7 @@ impl SoftmaxEngine for ParSoftmax {
         }
         self.parallel_batches.fetch_add(1, Ordering::Relaxed);
         let chunk = block * n;
-        let (done_tx, done_rx) = mpsc::channel::<()>();
+        let (done_tx, done_rx) = mpsc::channel::<JobDone>();
         let mut sent = 0usize;
         for (xc, oc) in x.chunks(chunk).zip(out.chunks_mut(chunk)) {
             self.pool.submit(Job {
@@ -395,16 +593,21 @@ impl SoftmaxEngine for ParSoftmax {
                     row,
                     engine: self.inner.clone(),
                 },
+                tag: sent,
+                fault: InjectedFault::None,
                 done: done_tx.clone(),
             });
             sent += 1;
         }
         drop(done_tx);
+        let mut panicked = false;
         for _ in 0..sent {
-            done_rx
+            let d = done_rx
                 .recv()
                 .expect("softmax worker pool: worker died mid-batch");
+            panicked |= !d.ok;
         }
+        assert!(!panicked, "softmax worker shard panicked");
     }
 
     fn name(&self) -> &'static str {
@@ -525,16 +728,126 @@ mod tests {
         let p = par(Mode::Rexp, Precision::Uint8, 4);
         let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
         let mut scratch = Scratch::new();
-        p.scatter(hits.len(), &mut scratch, &|i, _s| {
+        let out = p.scatter(hits.len(), &mut scratch, &|i, _s| {
             hits[i].fetch_add(1, Ordering::SeqCst);
         });
+        assert!(out.is_ok());
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
         // single-index scatter runs inline on the caller's scratch
         let one = AtomicUsize::new(0);
-        p.scatter(1, &mut scratch, &|i, _s| {
+        let out = p.scatter(1, &mut scratch, &|i, _s| {
             assert_eq!(i, 0);
             one.fetch_add(1, Ordering::SeqCst);
         });
+        assert!(out.is_ok());
         assert_eq!(one.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scatter_contains_genuine_task_panics() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        crate::faults::silence_injected_panics();
+        let p = par(Mode::Rexp, Precision::Uint8, 4);
+        let hits: Vec<AtomicUsize> = (0..24).map(|_| AtomicUsize::new(0)).collect();
+        let mut scratch = Scratch::new();
+        let out = p.scatter(hits.len(), &mut scratch, &|i, _s| {
+            if i == 5 || i == 17 {
+                panic!("{}: test task bomb", crate::faults::INJECTED_PANIC);
+            }
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(out.panicked(), &[5, 17]);
+        assert!(!out.is_ok());
+        for (i, h) in hits.iter().enumerate() {
+            let want = usize::from(i != 5 && i != 17);
+            assert_eq!(h.load(Ordering::SeqCst), want, "index {i}");
+        }
+        // the pool must stay fully usable: no poisoned mutex, no dead
+        // workers — the next wave and the next softmax batch both succeed
+        let out = p.scatter(hits.len(), &mut scratch, &|i, _s| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(out.is_ok());
+        let mut rng = Rng::new(21);
+        let x = rng.normal_vec(64 * 64, 2.0);
+        let seq = engine(Mode::Rexp, Precision::Uint8, None);
+        assert_eq!(p.apply(&x, 64), seq.apply(&x, 64));
+    }
+
+    #[test]
+    fn scatter_inline_arm_contains_panics_too() {
+        crate::faults::silence_injected_panics();
+        // single-worker pool: everything runs inline in the submitter
+        let p = par(Mode::Rexp, Precision::Uint8, 1);
+        let mut scratch = Scratch::new();
+        let out = p.scatter(3, &mut scratch, &|i, _s| {
+            if i == 1 {
+                panic!("{}: inline bomb", crate::faults::INJECTED_PANIC);
+            }
+        });
+        assert_eq!(out.panicked(), &[1]);
+        let out = p.scatter(3, &mut scratch, &|_i, _s| {});
+        assert!(out.is_ok());
+    }
+
+    #[test]
+    fn injected_panic_plan_is_replayable_and_resettable() {
+        use crate::faults::{FaultPlan, FaultSite};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        crate::faults::silence_injected_panics();
+        let p = par(Mode::Rexp, Precision::Uint8, 4);
+        let plan = FaultPlan::none().with_seed(77).with(FaultSite::WorkerPanic, 4);
+        p.set_fault_plan(plan);
+        assert_eq!(p.fault_plan(), plan);
+        let run_wave = |p: &ParSoftmax| -> Vec<usize> {
+            let hits: Vec<AtomicUsize> = (0..32).map(|_| AtomicUsize::new(0)).collect();
+            let mut scratch = Scratch::new();
+            let out = p.scatter(hits.len(), &mut scratch, &|i, _s| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            // injected panics skip the task body: panicked ⟺ not run
+            for (i, h) in hits.iter().enumerate() {
+                let ran = h.load(Ordering::SeqCst) == 1;
+                assert_eq!(ran, !out.panicked().contains(&i), "index {i}");
+            }
+            out.panicked().to_vec()
+        };
+        let first = run_wave(&p);
+        assert!(!first.is_empty(), "denominator 4 over 32 tasks must fire");
+        let second = run_wave(&p);
+        // the task counter advanced, so the second wave draws a different
+        // slice of the schedule; resetting the plan replays from index 0
+        p.set_fault_plan(plan);
+        let replay = run_wave(&p);
+        assert_eq!(first, replay, "set_fault_plan must reset the schedule");
+        drop(second);
+        // disabling the plan stops injection entirely
+        p.set_fault_plan(FaultPlan::none());
+        let mut scratch = Scratch::new();
+        assert!(p.scatter(32, &mut scratch, &|_i, _s| {}).is_ok());
+    }
+
+    #[test]
+    fn injected_slow_tasks_never_perturb_bytes() {
+        use crate::faults::{FaultPlan, FaultSite};
+        let mut rng = Rng::new(31);
+        let p = par(Mode::Lut2d, Precision::Uint8, 4);
+        let seq = engine(Mode::Lut2d, Precision::Uint8, None);
+        p.set_fault_plan(FaultPlan::none().with_seed(9).with(FaultSite::WorkerSlow, 2));
+        let n = 64;
+        let x = rng.normal_vec(64 * n, 2.0);
+        // scatter a per-row wave under heavy slow-injection: completion
+        // order shuffles, bytes must not
+        let mut out = vec![0.0f32; x.len()];
+        let mut scratch = Scratch::new();
+        let cell = std::sync::Mutex::new(&mut out);
+        let outcome = p.scatter(64, &mut scratch, &|i, s| {
+            let mut rowbuf = vec![0.0f32; n];
+            seq.run_with(&x[i * n..(i + 1) * n], n, &mut rowbuf, s);
+            cell.lock().unwrap()[i * n..(i + 1) * n].copy_from_slice(&rowbuf);
+        });
+        assert!(outcome.is_ok(), "slow faults must not fail tasks");
+        drop(cell);
+        assert_eq!(out, seq.apply(&x, n));
     }
 }

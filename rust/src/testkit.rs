@@ -7,7 +7,8 @@
 //! Also home of the **differential conformance sweep**
 //! ([`conformance_sweep`]): one deterministic case table over
 //! {mode, prec, affine (dyadic / non-dyadic), L, H, G, page_size, mask,
-//! wave sessions S} that `rust/tests/integration_conformance.rs` drives
+//! wave sessions S, arrival schedule, fault schedule} that
+//! `rust/tests/integration_conformance.rs` drives
 //! through every standing cross-layer invariant — including the
 //! group-major-vs-head-major decode differential (both sweep orders
 //! bit-identical across single-step, chunked-prefill and S-session
@@ -169,6 +170,13 @@ pub struct ConformanceCase {
     /// overcommitted arena) and asserts every reply bit-identical to
     /// serial per-session replay
     pub arrival: u64,
+    /// fault-schedule seed for the chaos invariant (invariant 8): its
+    /// bits select which fault sites a deterministic
+    /// `crate::faults::FaultPlan` arms over the case's traffic; the
+    /// invariant asserts non-faulted sessions replay bit-identically,
+    /// every injected fault surfaces as exactly one typed reply, and
+    /// the arena's free list round-trips
+    pub faults: u64,
     pub seed: u64,
 }
 
@@ -232,6 +240,8 @@ pub fn conformance_sweep() -> Vec<ConformanceCase> {
             // sweeps reproduce too (each new axis appends to the draw
             // order, never reshuffles it)
             arrival: rng.next_u64(),
+            // fault axis appended after `arrival`, same append-only rule
+            faults: rng.next_u64(),
             seed: 0xC0DE_0000 + i as u64,
         });
     }
@@ -289,6 +299,9 @@ mod tests {
         let distinct_arrivals: std::collections::HashSet<u64> =
             a.iter().map(|c| c.arrival).collect();
         assert!(distinct_arrivals.len() > 1, "arrival axis must vary");
+        let distinct_faults: std::collections::HashSet<u64> =
+            a.iter().map(|c| c.faults).collect();
+        assert!(distinct_faults.len() > 1, "fault axis must vary");
     }
 
     #[test]

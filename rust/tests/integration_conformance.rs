@@ -28,6 +28,15 @@
 //!    admit/evict/resume interleaving, under randomized round budgets;
 //!    nothing starves, nothing hits typed exhaustion, S >= 2 provably
 //!    evicts, and the KV free list round-trips exactly.
+//! 8. the fault-schedule chaos invariant: a seeded `FaultPlan` (derived
+//!    from `case.faults`) injects KV alloc failures, worker panics,
+//!    worker slowdowns, and scheduler deadline overruns into the same
+//!    overcommitted arrival schedule as invariant 7 — every injected
+//!    fault surfaces as exactly ONE typed reply (`Error` / `Shed` /
+//!    `Exhausted`, counted 1:1 by `Counters`), every non-faulted reply
+//!    stays bit-identical to serial per-session replay, nothing hangs
+//!    or poisons a lock, and the KV free list still round-trips after
+//!    the closes.
 //!
 //! `cargo test -q` runs the small sweep; `CONFORMANCE_FULL=1` (the CI
 //! `test-heavy` gate, `make test-heavy`) widens it.
@@ -411,6 +420,7 @@ fn scheduler_arrival_schedules_replay_bit_identical_on_overcommitted_arena() {
             max_batch_prefill_tokens: arr.usize(2, 16),
             waiting_served_ratio: 1.2,
             max_waiting_tokens: arr.usize(4, 64),
+            ..SchedConfig::default()
         });
 
         let opens: Vec<Payload> = (0..s).map(|_| Payload::DecodeOpen).collect();
@@ -561,6 +571,267 @@ fn scheduler_arrival_schedules_replay_bit_identical_on_overcommitted_arena() {
             assert_eq!(seq.len(), t_total, "{case:?} session {si}");
             kv.close(seq);
         }
+    }
+}
+
+/// Invariant 8: the fault-schedule chaos invariant. The invariant-7
+/// harness (S sessions, adversarial arrival, overcommitted arena) runs
+/// again with a seeded `FaultPlan` derived from `case.faults` bits:
+/// bit 0 arms worker panics, bit 1 spurious KV alloc failures, bit 2
+/// injected scheduler deadline overruns, bit 3 worker slowdowns (plus
+/// an organic per-request deadline). The contract under fire:
+///
+/// - every queued payload still gets exactly one terminal reply —
+///   nothing hangs, nothing starves, no mutex poisons;
+/// - a faulted event maps to ONE typed reply, and the typed replies
+///   reconcile 1:1 with `Counters` (`panicked` == `Error` replies,
+///   `shed` == `Shed` replies; `exhausted` stays 0 unless KV faults
+///   are armed);
+/// - non-faulted replies are bit-identical to serial replay of the
+///   SAME event stream on a private arena, where the replay honors the
+///   failure-semantics table in `coordinator::request`: `Shed` /
+///   `Exhausted` events never executed (skip them), a panicked event
+///   (`Error`) DID land its KV append before losing its output
+///   (execute it, skip the byte compare);
+/// - closes still answer `Closed` and the free list round-trips.
+#[test]
+fn faulted_schedules_contain_damage_and_replay_bit_identical() {
+    use lutmax::attention::DECODE_AFFINE;
+    use lutmax::coordinator::{DecodePipeline, Payload, Reply, SchedConfig};
+    use lutmax::faults::{silence_injected_panics, FaultPlan, FaultSite};
+    use lutmax::runtime::Tensor;
+
+    silence_injected_panics();
+
+    enum Ev {
+        Prefill(Tensor, Tensor, Tensor),
+        Step(Tensor, Tensor, Tensor),
+    }
+
+    const ROUTE_PAGE: usize = 16;
+
+    for case in conformance_sweep() {
+        let (h, g, d, s) = (case.heads, case.kv_heads, case.d_head, case.sessions);
+        let t_total = case.seq_len;
+        let per = t_total.div_ceil(ROUTE_PAGE);
+        let pages = per * (s - 1).max(1);
+        let route = format!(
+            "decode:{}:{}:g{}:p{}",
+            case.mode.name(),
+            case.prec.name(),
+            g,
+            pages
+        );
+        let p = DecodePipeline::load(&route, 3).unwrap();
+
+        // the fault schedule: low bits of `case.faults` arm the sites,
+        // the whole word seeds the draw — replayable, clock-free
+        let mut plan = FaultPlan::none().with_seed(case.faults);
+        if case.faults & 1 != 0 {
+            plan = plan.with(FaultSite::WorkerPanic, 5);
+        }
+        if case.faults & 2 != 0 {
+            plan = plan.with(FaultSite::KvAlloc, 7);
+        }
+        if case.faults & 4 != 0 {
+            plan = plan.with(FaultSite::SchedDeadline, 9);
+        }
+        if case.faults & 8 != 0 {
+            plan = plan.with(FaultSite::WorkerSlow, 3);
+        }
+        p.set_fault_plan(plan);
+
+        let mut arr = Rng::new(case.arrival);
+        p.set_sched_config(SchedConfig {
+            max_batch_total_tokens: arr.usize(4, 64),
+            max_batch_prefill_tokens: arr.usize(2, 16),
+            waiting_served_ratio: 1.2,
+            max_waiting_tokens: arr.usize(4, 64),
+            // the organic deadline must be able to fire alongside the
+            // injected one; TTL reaping stays OFF so no session can
+            // vanish from under its own queued events
+            deadline_rounds: arr.usize(6, 12),
+            ..SchedConfig::default()
+        });
+
+        let opens: Vec<Payload> = (0..s).map(|_| Payload::DecodeOpen).collect();
+        let refs: Vec<&Payload> = opens.iter().collect();
+        let ids: Vec<u64> = p
+            .run_batch(&refs)
+            .into_iter()
+            .map(|r| match r {
+                Reply::Session(id) => id,
+                other => panic!("{case:?}: open replied {other:?}"),
+            })
+            .collect();
+
+        // same trace/merge construction as invariant 7, decoupled seed
+        let traces: Vec<Vec<Ev>> = (0..s)
+            .map(|si| {
+                let mut rng = Rng::new(case.seed ^ (0xFA017 << 8) ^ si as u64);
+                let chunk = rng.usize(0, (t_total - 1).min(4));
+                let mut tr = Vec::new();
+                if chunk > 0 {
+                    tr.push(Ev::Prefill(
+                        Tensor::f32(vec![chunk, h, d], rng.normal_vec(chunk * h * d, 1.0)),
+                        Tensor::f32(vec![chunk, g, d], rng.normal_vec(chunk * g * d, 1.0)),
+                        Tensor::f32(vec![chunk, g, d], rng.normal_vec(chunk * g * d, 1.0)),
+                    ));
+                }
+                for _ in chunk..t_total {
+                    tr.push(Ev::Step(
+                        Tensor::f32(vec![h, d], rng.normal_vec(h * d, 1.0)),
+                        Tensor::f32(vec![g, d], rng.normal_vec(g * d, 1.0)),
+                        Tensor::f32(vec![g, d], rng.normal_vec(g * d, 1.0)),
+                    ));
+                }
+                tr
+            })
+            .collect();
+
+        let mut cursors = vec![0usize; s];
+        let mut payloads: Vec<Payload> = Vec::new();
+        let mut owner: Vec<usize> = Vec::new();
+        loop {
+            let open: Vec<usize> =
+                (0..s).filter(|&si| cursors[si] < traces[si].len()).collect();
+            if open.is_empty() {
+                break;
+            }
+            let si = *arr.choice(&open);
+            let ev = &traces[si][cursors[si]];
+            cursors[si] += 1;
+            payloads.push(match ev {
+                Ev::Prefill(q, k, v) => Payload::DecodePrefill {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+                Ev::Step(q, k, v) => Payload::DecodeStep {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+            });
+            owner.push(si);
+        }
+        let mut close_order: Vec<usize> = (0..s).collect();
+        for i in (1..s).rev() {
+            close_order.swap(i, arr.usize(0, i));
+        }
+        for &si in &close_order {
+            payloads.push(Payload::DecodeClose(ids[si]));
+            owner.push(si);
+        }
+
+        let refs: Vec<&Payload> = payloads.iter().collect();
+        let mut replies: Vec<Vec<Reply>> = vec![Vec::new(); s];
+        for (r, &si) in p.run_batch(&refs).into_iter().zip(&owner) {
+            replies[si].push(r);
+        }
+
+        // containment: the arena still round-trips through injected
+        // alloc failures, panics mid-wave, and shed/retried admissions
+        assert_eq!(p.kv_pages(), Some((pages, pages)), "{case:?}: free-list round-trip");
+
+        // serial replay per the failure-semantics table
+        let dec = DecodeAttention::new(case.mode, case.prec, None).unwrap();
+        let groups = HeadGroups::new(h, g).unwrap();
+        let mut scr = AttnScratch::new();
+        let (mut n_err, mut n_shed, mut n_exh) = (0u64, 0u64, 0u64);
+        for si in 0..s {
+            let mut kv = KvPool::new(KvConfig {
+                pages: per + 1,
+                page_size: ROUTE_PAGE,
+                kv_heads: g,
+                d_head: d,
+            });
+            let mut seq = KvSeq::new(groups, DECODE_AFFINE, DECODE_AFFINE);
+            let mut got = replies[si].iter();
+            let mut landed = 0usize;
+            for (ei, ev) in traces[si].iter().enumerate() {
+                let reply = got.next();
+                match reply {
+                    // dropped unexecuted: the session saw nothing —
+                    // the replay must skip the event entirely
+                    Some(Reply::Shed { .. }) => {
+                        n_shed += 1;
+                        continue;
+                    }
+                    Some(Reply::Exhausted { .. }) => {
+                        assert!(
+                            case.faults & 2 != 0,
+                            "{case:?} session {si} event {ei}: organic exhaustion \
+                             on an arena every session fits alone in"
+                        );
+                        n_exh += 1;
+                        continue;
+                    }
+                    _ => {}
+                }
+                let (q, k, v, t) = match ev {
+                    Ev::Prefill(q, k, v) => (q, k, v, q.dims[0]),
+                    Ev::Step(q, k, v) => (q, k, v, 1),
+                };
+                let mut qb = vec![0i8; t * h * d];
+                let mut kb = vec![0i8; t * g * d];
+                let mut vb = vec![0i8; t * g * d];
+                quant::quantize_into(q.as_f32().unwrap(), DECODE_AFFINE, &mut qb);
+                quant::quantize_into(k.as_f32().unwrap(), DECODE_AFFINE, &mut kb);
+                quant::quantize_into(v.as_f32().unwrap(), DECODE_AFFINE, &mut vb);
+                let mut want = vec![0.0f32; t * h * d];
+                match ev {
+                    Ev::Prefill(..) => dec
+                        .prefill_chunk(
+                            &mut kv, &mut seq, &qb, DECODE_AFFINE, &kb, &vb, &mut want, &mut scr,
+                        )
+                        .unwrap(),
+                    Ev::Step(..) => dec
+                        .step(&mut kv, &mut seq, &qb, DECODE_AFFINE, &kb, &vb, &mut want, &mut scr)
+                        .unwrap(),
+                }
+                landed += t;
+                match (ev, reply) {
+                    (Ev::Prefill(..), Some(Reply::Prefill(out)))
+                    | (Ev::Step(..), Some(Reply::Token(out))) => assert_eq!(
+                        out.as_f32().unwrap(),
+                        &want[..],
+                        "{case:?} session {si} event {ei}: non-faulted reply != serial replay"
+                    ),
+                    // a contained panic: phase-1 KV append landed before
+                    // the sweep died, so the bytes above WERE ingested —
+                    // only the step's output was lost
+                    (_, Some(Reply::Error(msg))) => {
+                        assert!(
+                            case.faults & 1 != 0,
+                            "{case:?} session {si} event {ei}: Error({msg}) with panics unarmed"
+                        );
+                        n_err += 1;
+                    }
+                    (_, other) => panic!("{case:?} session {si} event {ei}: got {other:?}"),
+                }
+            }
+            assert!(
+                matches!(got.next(), Some(Reply::Closed { .. })),
+                "{case:?} session {si}: close reply"
+            );
+            assert!(got.next().is_none(), "{case:?} session {si}: reply count");
+            assert_eq!(seq.len(), landed, "{case:?} session {si}: landed tokens");
+            kv.close(seq);
+        }
+
+        // every injected fault == exactly one typed reply: the counters
+        // reconcile 1:1 with what the reply walk tallied
+        let c = p.sched_counters();
+        assert_eq!(c.panicked, n_err, "{case:?}: panicked counter vs Error replies");
+        assert_eq!(c.shed, n_shed, "{case:?}: shed counter vs Shed replies");
+        assert_eq!(c.exhausted, n_exh, "{case:?}: exhausted counter vs Exhausted replies");
+        if case.faults & 2 == 0 {
+            assert_eq!(c.exhausted, 0, "{case:?}: every session fits alone");
+        }
+        assert!(c.rounds >= 1, "{case:?}");
     }
 }
 

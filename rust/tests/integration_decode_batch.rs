@@ -23,9 +23,15 @@
 //!   arena, randomized interleavings split across many `run_batch`
 //!   calls — zero lost sessions, zero typed exhaustion, every reply
 //!   bit-identical to serial replay, exact free-list round-trip.
+//! * **fault containment**: an injected worker panic mid-wave fails
+//!   only the owning session's step (its append landed, its output is
+//!   lost) while batchmates stay bit-identical; the faulted chaos soak
+//!   re-runs the overcommit with a route-armed `FaultPlan` (`:fS`) —
+//!   every injected fault is exactly one typed reply, counters
+//!   reconcile 1:1, and the free list still round-trips.
 
 use lutmax::attention::{
-    AttnScratch, DecodeAttention, DecodeBatch, DecodeStepTask, DECODE_AFFINE,
+    AttnScratch, DecodeAttention, DecodeBatch, DecodeStepTask, WaveError, DECODE_AFFINE,
 };
 use lutmax::coordinator::{DecodePipeline, Payload, Reply, SchedConfig};
 use lutmax::kv::{HeadGroups, KvConfig, KvError, KvPool, KvSeq};
@@ -61,7 +67,7 @@ fn run_wave(
     scr: &mut AttnScratch,
     fill: f32,
     out_len: usize,
-) -> (Vec<Result<(), KvError>>, Vec<Vec<f32>>) {
+) -> (Vec<Result<(), WaveError>>, Vec<Vec<f32>>) {
     let mut outs = vec![vec![fill; out_len]; seqs.len()];
     let mut tasks: Vec<DecodeStepTask<'_>> = seqs
         .iter_mut()
@@ -274,7 +280,10 @@ fn exhaustion_mid_wave_leaves_batchmates_bit_identical() {
         } else {
             assert_eq!(res[0], Ok(()));
             assert_eq!(res[1], Ok(()));
-            assert_eq!(res[2], Err(KvError::Exhausted { pages: 5, free_pages: 0 }));
+            assert_eq!(
+                res[2],
+                Err(WaveError::Kv(KvError::Exhausted { pages: 5, free_pages: 0 }))
+            );
             assert!(
                 wave_out[2].iter().all(|&o| o == 7.0),
                 "starved session's output must be untouched"
@@ -636,6 +645,7 @@ fn chaos_soak_overcommitted_arena_never_loses_a_session() {
         max_batch_prefill_tokens: 6,
         waiting_served_ratio: 1.2,
         max_waiting_tokens: 12,
+        ..SchedConfig::default()
     });
     let n = 12usize;
     let mut rng = Rng::new(508);
@@ -762,4 +772,268 @@ fn chaos_soak_overcommitted_arena_never_loses_a_session() {
         assert!(got.next().is_none(), "session {si}: zero lost or extra replies");
         kv.close(seq);
     }
+}
+
+/// An injected worker panic mid-wave is a per-session failure: the
+/// owner's step replies `Err(WaveError::Panicked)` with its phase-1 KV
+/// append already landed (the sequence advanced; only the output rows
+/// are lost), batchmates in the same wave stay bit-identical to their
+/// serial replay, and the arena neither leaks nor poisons — clearing
+/// the plan restores bit-exact service from the same pool and arena.
+#[test]
+fn injected_wave_panics_fail_only_the_owner_and_batchmates_stay_bit_identical() {
+    use lutmax::faults::{silence_injected_panics, FaultPlan, FaultSite};
+
+    silence_injected_panics();
+    let (s, h, g, d, rounds) = (4usize, 2usize, 2usize, 8usize, 12usize);
+    let a = DECODE_AFFINE;
+    let cfg = KvConfig { pages: s + 2, page_size: 16, kv_heads: g, d_head: d };
+    let (mut kv_w, mut kv_s) = (KvPool::new(cfg), KvPool::new(cfg));
+    let groups = HeadGroups::new(h, g).unwrap();
+    let mut wave_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+    let mut ser_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let batch = DecodeBatch::new(&dec);
+    let pool = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(3));
+    pool.set_fault_plan(FaultPlan::none().with_seed(0xBAD5EED).with(FaultSite::WorkerPanic, 3));
+    let mut rng = Rng::new(511);
+    let mut scr = AttnScratch::new();
+    let (mut n_ok, mut n_panicked) = (0usize, 0usize);
+    for round in 0..rounds {
+        let qs = wave_rows(&mut rng, s, h * d);
+        let ks = wave_rows(&mut rng, s, g * d);
+        let vs = wave_rows(&mut rng, s, g * d);
+        let (res, wave_out) =
+            run_wave(&batch, &mut kv_w, &mut wave_seqs, &qs, &ks, &vs, &pool, &mut scr, 7.0, h * d);
+        for i in 0..s {
+            // the serial twin executes EVERY step: a panicked wave
+            // task's phase-1 append landed before the sweep died, so
+            // the faulted session's KV bytes match the clean twin's
+            let mut want = vec![0.0f32; h * d];
+            dec.step(&mut kv_s, &mut ser_seqs[i], &qs[i], a, &ks[i], &vs[i], &mut want, &mut scr)
+                .unwrap();
+            match &res[i] {
+                Ok(()) => {
+                    n_ok += 1;
+                    assert_eq!(wave_out[i], want, "round {round} session {i}");
+                }
+                Err(WaveError::Panicked) => n_panicked += 1,
+                Err(e) => panic!("round {round} session {i}: unexpected {e:?}"),
+            }
+            assert_eq!(
+                wave_seqs[i].len(),
+                round + 1,
+                "round {round} session {i}: panicked or not, the append landed"
+            );
+        }
+    }
+    assert!(
+        n_ok > 0 && n_panicked > 0,
+        "a 1-in-3 schedule over {rounds} waves must mix outcomes (ok={n_ok} panicked={n_panicked})"
+    );
+
+    // containment: clear the plan — the SAME pool and arena serve the
+    // next wave fault-free and bit-identical
+    pool.set_fault_plan(FaultPlan::none());
+    let qs = wave_rows(&mut rng, s, h * d);
+    let ks = wave_rows(&mut rng, s, g * d);
+    let vs = wave_rows(&mut rng, s, g * d);
+    let (res, wave_out) =
+        run_wave(&batch, &mut kv_w, &mut wave_seqs, &qs, &ks, &vs, &pool, &mut scr, 7.0, h * d);
+    for i in 0..s {
+        assert_eq!(res[i], Ok(()), "recovery wave session {i}");
+        let mut want = vec![0.0f32; h * d];
+        dec.step(&mut kv_s, &mut ser_seqs[i], &qs[i], a, &ks[i], &vs[i], &mut want, &mut scr)
+            .unwrap();
+        assert_eq!(wave_out[i], want, "recovery wave session {i}");
+    }
+    for seq in wave_seqs {
+        kv_w.close(seq);
+    }
+    assert_eq!(kv_w.free_pages(), s + 2, "free list round-trips through the panics");
+    for seq in ser_seqs {
+        kv_s.close(seq);
+    }
+}
+
+/// The faulted chaos soak: the same overcommitted multi-session drive
+/// as `chaos_soak_overcommitted_arena_never_loses_a_session`, but the
+/// route arms a seeded `FaultPlan` (`:f11`) injecting spurious KV
+/// alloc failures, worker panics, worker slowdowns, and scheduler
+/// deadline overruns, with an organic per-request deadline on top.
+/// Under fire: every queued payload still gets exactly one terminal
+/// reply, each typed degradation reply reconciles 1:1 with `Counters`,
+/// non-faulted replies stay bit-identical to a serial replay honoring
+/// the failure-semantics table (`Shed`/`Exhausted` never executed —
+/// skip; `Error` landed its append — execute, don't compare), and the
+/// free list round-trips exactly.
+#[test]
+fn faulted_chaos_soak_contains_damage_and_stays_bit_identical() {
+    use lutmax::faults::silence_injected_panics;
+
+    silence_injected_panics();
+    let (h, g, d) = (4usize, 2usize, 8usize);
+    let p = DecodePipeline::load("decode:rexp:uint8:g2:p4:f11", 3).unwrap();
+    assert!(!p.fault_plan().is_none(), "the :f route suffix must arm the plan");
+    p.set_sched_config(SchedConfig {
+        max_batch_total_tokens: 48,
+        max_batch_prefill_tokens: 6,
+        waiting_served_ratio: 1.2,
+        max_waiting_tokens: 12,
+        deadline_rounds: 8,
+        ..SchedConfig::default()
+    });
+    let n = 12usize;
+    let mut rng = Rng::new(509);
+
+    let traces: Vec<Vec<Ev>> = (0..n)
+        .map(|_| {
+            let mut tr = Vec::new();
+            let tokens = rng.usize(10, 20);
+            let chunk = rng.usize(0, 3);
+            if chunk > 0 {
+                let (cq, ck, cv) = workload::decode_prefill_chunk(&mut rng, chunk, h, g, d, 1.0);
+                tr.push(Ev::Prefill(cq, ck, cv));
+            }
+            for _ in chunk..tokens {
+                let (sq, sk, sv) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+                tr.push(Ev::Step(sq, sk, sv));
+            }
+            tr
+        })
+        .collect();
+
+    let opens: Vec<Payload> = (0..n).map(|_| Payload::DecodeOpen).collect();
+    let refs: Vec<&Payload> = opens.iter().collect();
+    let ids: Vec<u64> = p
+        .run_batch(&refs)
+        .into_iter()
+        .map(|r| match r {
+            Reply::Session(id) => id,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+
+    let mut cursors = vec![0usize; n];
+    let mut replies: Vec<Vec<Reply>> = vec![Vec::new(); n];
+    while (0..n).any(|si| cursors[si] < traces[si].len()) {
+        let mut payloads: Vec<Payload> = Vec::new();
+        let mut owner: Vec<usize> = Vec::new();
+        for _ in 0..rng.usize(1, 8) {
+            let open: Vec<usize> =
+                (0..n).filter(|&si| cursors[si] < traces[si].len()).collect();
+            if open.is_empty() {
+                break;
+            }
+            let si = *rng.choice(&open);
+            let ev = &traces[si][cursors[si]];
+            cursors[si] += 1;
+            payloads.push(match ev {
+                Ev::Prefill(q, k, v) => Payload::DecodePrefill {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+                Ev::Step(q, k, v) => Payload::DecodeStep {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+                Ev::Close => unreachable!("closes go in the final batch"),
+            });
+            owner.push(si);
+        }
+        for (r, &si) in p.run_batch(&payloads.iter().collect::<Vec<_>>()).into_iter().zip(&owner)
+        {
+            replies[si].push(r);
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        order.swap(i, rng.usize(0, i));
+    }
+    let closes: Vec<Payload> = order.iter().map(|&si| Payload::DecodeClose(ids[si])).collect();
+    let refs: Vec<&Payload> = closes.iter().collect();
+    for (r, &si) in p.run_batch(&refs).into_iter().zip(&order) {
+        replies[si].push(r);
+    }
+
+    // containment: through panics, spurious alloc failures and sheds,
+    // the arena still round-trips exactly once every session closes
+    assert_eq!(p.kv_pages(), Some((4, 4)), "free list must exactly round-trip");
+
+    // serial replay honoring the failure-semantics table
+    let a = DECODE_AFFINE;
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let mut scr = AttnScratch::new();
+    let (mut n_err, mut n_shed, mut n_exh) = (0u64, 0u64, 0u64);
+    for si in 0..n {
+        let mut kv = KvPool::new(KvConfig { pages: 3, page_size: 16, kv_heads: g, d_head: d });
+        let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+        let mut got = replies[si].iter();
+        let mut landed = 0usize;
+        for (ei, ev) in traces[si].iter().enumerate() {
+            let reply = got.next();
+            match reply {
+                // never executed: skip the event, the session is as if
+                // it was never sent
+                Some(Reply::Shed { .. }) => {
+                    n_shed += 1;
+                    continue;
+                }
+                Some(Reply::Exhausted { .. }) => {
+                    n_exh += 1;
+                    continue;
+                }
+                _ => {}
+            }
+            let (q, k, v, t) = match ev {
+                Ev::Prefill(q, k, v) => (q, k, v, q.dims[0]),
+                Ev::Step(q, k, v) => (q, k, v, 1),
+                Ev::Close => unreachable!(),
+            };
+            let mut qb = vec![0i8; t * h * d];
+            let mut kb = vec![0i8; t * g * d];
+            let mut vb = vec![0i8; t * g * d];
+            quant::quantize_into(q.as_f32().unwrap(), a, &mut qb);
+            quant::quantize_into(k.as_f32().unwrap(), a, &mut kb);
+            quant::quantize_into(v.as_f32().unwrap(), a, &mut vb);
+            let mut want = vec![0.0f32; t * h * d];
+            match ev {
+                Ev::Prefill(..) => dec
+                    .prefill_chunk(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr)
+                    .unwrap(),
+                _ => dec.step(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr).unwrap(),
+            }
+            landed += t;
+            match (ev, reply) {
+                (Ev::Prefill(..), Some(Reply::Prefill(out)))
+                | (Ev::Step(..), Some(Reply::Token(out))) => {
+                    assert_eq!(out.as_f32().unwrap(), &want[..], "session {si} event {ei}")
+                }
+                // a contained panic: the append landed, the output was
+                // lost — the replay executed the event above so the
+                // session's KV bytes stay aligned for later events
+                (_, Some(Reply::Error(_))) => n_err += 1,
+                (_, other) => panic!("session {si} event {ei}: got {other:?}"),
+            }
+        }
+        assert!(matches!(got.next(), Some(Reply::Closed { .. })), "session {si} close");
+        assert!(got.next().is_none(), "session {si}: zero lost or extra replies");
+        assert_eq!(seq.len(), landed, "session {si}: landed tokens");
+        kv.close(seq);
+    }
+
+    // every injected fault == exactly one typed reply
+    let c = p.sched_counters();
+    assert_eq!(c.panicked, n_err, "panicked counter vs Error replies");
+    assert_eq!(c.shed, n_shed, "shed counter vs Shed replies");
+    assert_eq!(c.exhausted, n_exh, "exhausted counter vs Exhausted replies");
+    assert!(
+        n_err + n_shed > 0,
+        "a 1-in-11 panic / 1-in-9 deadline schedule over ~180 events must fire"
+    );
+    assert!(c.rounds >= 1);
 }

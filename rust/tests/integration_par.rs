@@ -299,12 +299,85 @@ fn scatter_tasks_share_the_pool_and_cover_all_indices() {
     let par = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(3));
     let slots: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
     let mut scratch = Scratch::new();
-    par.scatter(slots.len(), &mut scratch, &|i, _s| {
+    let outcome = par.scatter(slots.len(), &mut scratch, &|i, _s| {
         slots[i].fetch_add(i + 1, Ordering::SeqCst);
     });
+    assert!(outcome.is_ok(), "no fault plan installed: nothing may panic");
     for (i, s) in slots.iter().enumerate() {
         assert_eq!(s.load(Ordering::SeqCst), i + 1, "index {i} ran exactly once");
     }
+}
+
+#[test]
+fn scatter_contains_injected_panics_and_reports_their_indices() {
+    use lutmax::faults::{silence_injected_panics, FaultPlan, FaultSite};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    silence_injected_panics();
+    let par = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(3));
+    let plan = FaultPlan::none().with_seed(0xC0FFEE).with(FaultSite::WorkerPanic, 4);
+    par.set_fault_plan(plan);
+
+    // the schedule is replayable: the test can predict exactly which
+    // task indices the plan kills (fault_seq resets to 0 on install)
+    let count = 64usize;
+    let expect: Vec<usize> = (0..count)
+        .filter(|&i| plan.should_fault(FaultSite::WorkerPanic, i as u64))
+        .collect();
+    assert!(!expect.is_empty(), "1-in-4 over 64 draws must fire");
+    assert!(expect.len() < count, "and must not kill everything");
+
+    let slots: Vec<AtomicUsize> = (0..count).map(|_| AtomicUsize::new(0)).collect();
+    let mut scratch = Scratch::new();
+    let outcome = par.scatter(count, &mut scratch, &|i, _s| {
+        slots[i].fetch_add(1, Ordering::SeqCst);
+    });
+    let mut panicked = outcome.panicked().to_vec();
+    panicked.sort_unstable();
+    assert_eq!(panicked, expect, "reported indices ARE the fault schedule");
+    for (i, s) in slots.iter().enumerate() {
+        let want = usize::from(!expect.contains(&i));
+        assert_eq!(s.load(Ordering::SeqCst), want, "slot {i}: faulted tasks never ran");
+    }
+
+    // containment: the panics crossed the job queue without poisoning
+    // its mutex — the SAME pool keeps serving once the plan is cleared
+    par.set_fault_plan(FaultPlan::none());
+    let outcome = par.scatter(count, &mut scratch, &|i, _s| {
+        slots[i].fetch_add(1, Ordering::SeqCst);
+    });
+    assert!(outcome.is_ok(), "cleared plan: the pool must be fault-free again");
+    for (i, s) in slots.iter().enumerate() {
+        let want = if expect.contains(&i) { 1 } else { 2 };
+        assert_eq!(s.load(Ordering::SeqCst), want, "slot {i} after recovery");
+    }
+}
+
+#[test]
+fn softmax_shard_panics_re_raise_but_never_poison_the_pool() {
+    use lutmax::faults::{silence_injected_panics, FaultPlan, FaultSite};
+
+    silence_injected_panics();
+    let mut rng = testkit::Rng::new(61);
+    let (rows, n) = (256usize, 128usize);
+    let x = rng.normal_vec(rows * n, 2.0);
+    let seq = engine(Mode::Rexp, Precision::Uint8, None);
+    let par = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(4));
+
+    // a softmax batch is ONE caller's buffer — there is no per-session
+    // failure domain to absorb a lost shard, so the submitter re-raises
+    par.set_fault_plan(FaultPlan::none().with_seed(7).with(FaultSite::WorkerPanic, 1));
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| par.apply(&x, n)));
+    assert!(res.is_err(), "a faulted shard must re-raise in the submitter");
+
+    // ...but the panic crossed the queue without poisoning it: clearing
+    // the plan restores bit-exact service from the SAME pool
+    par.set_fault_plan(FaultPlan::none());
+    assert_eq!(par.apply(&x, n), seq.apply(&x, n));
+
+    // slow-only faults perturb timing, never bytes
+    par.set_fault_plan(FaultPlan::none().with_seed(9).with(FaultSite::WorkerSlow, 2));
+    assert_eq!(par.apply(&x, n), seq.apply(&x, n));
 }
 
 #[test]
