@@ -32,6 +32,7 @@ fn main() {
         batch_timeout_us: 200,
         workers: 1,
         queue_depth: 512,
+        trace: false,
     };
     let routes = RouteTable {
         classify: Some("sst2__ptqd__rexp__uint8".into()),

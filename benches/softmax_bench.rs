@@ -62,6 +62,7 @@ use lutmax::benchkit::{flush_json, Bench, Suite};
 use lutmax::coordinator::{DecodePipeline, Payload, Reply};
 use lutmax::kv::{HeadGroups, KvConfig, KvPool, KvSeq};
 use lutmax::lut::Precision;
+use lutmax::obs::TraceClock;
 use lutmax::runtime::Tensor;
 use lutmax::softmax::{engine, IntRow, Mode, ParSoftmax, Scratch, SoftmaxEngine};
 use lutmax::testkit::Rng;
@@ -508,6 +509,79 @@ fn main() {
     fault_case("decode_sched_fault/s16/p8/f7".into(), 16, 8, 16, 7);
     suite.ratio("decode_sched_fault/s8/p32/f7", "decode_sched/s8/p32/mixed");
     suite.ratio("decode_sched_fault/s16/p8/f7", "decode_sched/s16/p8/evict");
+
+    // the observability bound: the s8/p32 mixed fleet re-run with a
+    // Wall-clock trace sink and per-stage timing armed. The ratio
+    // against the untraced case IS the tracing overhead — the smoke
+    // gate keeps it small (≤ ~1.05x). `reset_trace` at the top of each
+    // iteration bounds the sink's memory without disarming it.
+    let mut traced_case = |label: String, s: usize, pages: usize, l: usize| {
+        let (h, g, d) = (8usize, 2usize, 64usize);
+        let p = DecodePipeline::load(&format!("decode:rexp:uint8:g{g}:p{pages}"), 4).unwrap();
+        p.set_trace(TraceClock::Wall);
+        p.set_stage_timing(true);
+        let mut step_rng = Rng::new(79);
+        let pre: Vec<(Tensor, Tensor, Tensor)> = (0..s)
+            .map(|_| lutmax::workload::decode_prefill_chunk(&mut step_rng, 2, h, g, d, 1.0))
+            .collect();
+        let qkv: Vec<(Tensor, Tensor, Tensor)> = (0..s * l)
+            .map(|_| lutmax::workload::decode_qkv_step(&mut step_rng, h, g, d, 1.0))
+            .collect();
+        let total_t = l + 2;
+        suite.add(Bench::new(label).items(s * h * total_t * (total_t + 1) / 2).run(|| {
+            p.reset_trace();
+            let opens: Vec<Payload> = (0..s).map(|_| Payload::DecodeOpen).collect();
+            let refs: Vec<&Payload> = opens.iter().collect();
+            let ids: Vec<u64> = p
+                .run_batch(&refs)
+                .into_iter()
+                .map(|r| match r {
+                    Reply::Session(id) => id,
+                    other => panic!("open failed: {other:?}"),
+                })
+                .collect();
+            let pres: Vec<Payload> = ids
+                .iter()
+                .zip(&pre)
+                .map(|(&id, (q, k, v))| Payload::DecodePrefill {
+                    session: id,
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                })
+                .collect();
+            let refs: Vec<&Payload> = pres.iter().collect();
+            for r in p.run_batch(&refs) {
+                assert!(matches!(r, Reply::Prefill(_)), "prefill failed: {r:?}");
+            }
+            for t in 0..l {
+                let round: Vec<Payload> = ids
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &id)| {
+                        let (q, k, v) = &qkv[i * l + t];
+                        Payload::DecodeStep {
+                            session: id,
+                            q: q.clone(),
+                            k: k.clone(),
+                            v: v.clone(),
+                        }
+                    })
+                    .collect();
+                let refs: Vec<&Payload> = round.iter().collect();
+                for r in p.run_batch(&refs) {
+                    assert!(matches!(r, Reply::Token(_)), "step failed: {r:?}");
+                }
+            }
+            let closes: Vec<Payload> = ids.iter().map(|&id| Payload::DecodeClose(id)).collect();
+            let refs: Vec<&Payload> = closes.iter().collect();
+            for r in p.run_batch(&refs) {
+                assert!(matches!(r, Reply::Closed { .. }), "close failed: {r:?}");
+            }
+        }));
+    };
+    traced_case("decode_sched_traced/s8/p32".into(), 8, 32, 16);
+    suite.ratio("decode_sched_traced/s8/p32", "decode_sched/s8/p32/mixed");
 
     if let Some(path) = flush_json().expect("write BENCH_JSON") {
         println!("\n[bench] wrote {}", path.display());

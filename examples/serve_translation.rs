@@ -32,6 +32,7 @@ fn serve_variant(variant: &str, srcs: &[Vec<i32>], refs: &[Vec<i32>]) -> Result<
         batch_timeout_us: 1_000,
         workers: 1,
         queue_depth: 512,
+        trace: false,
     };
     let routes = RouteTable {
         translate: Some(variant.into()),

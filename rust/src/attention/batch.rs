@@ -102,6 +102,29 @@ impl fmt::Display for WaveError {
 
 impl std::error::Error for WaveError {}
 
+/// Measured traffic of one executed wave, for the serving layer's
+/// metrics registry — the MEASURED counterpart of the hwsim charge names
+/// (`kv_bytes_read`, wave setup): both publish under the same
+/// [`crate::obs::names`] series so simulated and observed traffic are
+/// directly comparable. Counting rides the existing phase-2 accounting
+/// loop; it adds no KV reads of its own.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WaveStats {
+    /// Σ query-head rows over the surviving tasks (`S × H`)
+    pub rows: usize,
+    /// Σ sweep MACs over the surviving tasks (`Σ h · seq_len · d`)
+    pub macs: usize,
+    /// sweep units submitted (group tasks, or head rows head-major)
+    pub units: usize,
+    /// whether the wave ran inline (under `wave_stays_inline`) instead
+    /// of as a pool scatter
+    pub inline: bool,
+    /// K+V bytes the sweep reads: Σ over surviving tasks of
+    /// `seq_len · kv_heads · d_head · 2` (each page once per group —
+    /// the group-major contract)
+    pub kv_bytes: u64,
+}
+
 /// One session's contribution to a batched decode round: the same inputs
 /// a single [`DecodeAttention::step`] takes, borrowed so the wave can
 /// prove (via `&mut`) that sequences and outputs are pairwise disjoint.
@@ -186,8 +209,22 @@ impl<'d> DecodeBatch<'d> {
         tasks: &mut [DecodeStepTask<'_>],
         pool: &ParSoftmax,
         scr: &mut AttnScratch,
-        mut on_exhausted: impl FnMut(&mut KvPool, usize) -> bool,
+        on_exhausted: impl FnMut(&mut KvPool, usize) -> bool,
     ) -> Vec<Result<(), WaveError>> {
+        self.step_wave_with_stats(kv, tasks, pool, scr, on_exhausted).0
+    }
+
+    /// [`Self::step_wave_with`] plus the wave's measured traffic
+    /// ([`WaveStats`]) — what the serving layer feeds the metrics
+    /// registry. Results are identical to `step_wave_with`'s.
+    pub fn step_wave_with_stats(
+        &self,
+        kv: &mut KvPool,
+        tasks: &mut [DecodeStepTask<'_>],
+        pool: &ParSoftmax,
+        scr: &mut AttnScratch,
+        mut on_exhausted: impl FnMut(&mut KvPool, usize) -> bool,
+    ) -> (Vec<Result<(), WaveError>>, WaveStats) {
         // phase 1: serial appends, task order (page-id assignment is the
         // only order-dependent effect, and nothing downstream reads it)
         let mut results: Vec<Result<(), WaveError>> = tasks
@@ -215,6 +252,7 @@ impl<'d> DecodeBatch<'d> {
         let mut owners: Vec<usize> = Vec::new();
         let mut wave_rows = 0usize;
         let mut wave_macs = 0usize;
+        let mut kv_bytes = 0u64;
         for (ti, (t, res)) in tasks.iter_mut().zip(&results).enumerate() {
             if res.is_err() {
                 continue;
@@ -224,6 +262,7 @@ impl<'d> DecodeBatch<'d> {
             let plan = self.dec.plan(t.seq, d, t.q_affine);
             wave_rows += h;
             wave_macs += h * t.seq.len() * d;
+            kv_bytes += (t.seq.len() * t.seq.groups().kv_heads() * d * 2) as u64;
             let seq: &KvSeq = t.seq;
             let optr = t.out.as_mut_ptr();
             match order {
@@ -289,7 +328,8 @@ impl<'d> DecodeBatch<'d> {
             lock_unpoisoned(spare).push(hs);
         };
         let mut pool_scratch = Scratch::new();
-        let outcome = if wave_stays_inline(pool, units.len(), wave_rows, wave_macs) {
+        let inline = wave_stays_inline(pool, units.len(), wave_rows, wave_macs);
+        let outcome = if inline {
             pool.scatter_inline(units.len(), &mut pool_scratch, &run)
         } else {
             pool.scatter(units.len(), &mut pool_scratch, &run)
@@ -297,13 +337,20 @@ impl<'d> DecodeBatch<'d> {
         if let Some(hs) = lock_unpoisoned(spare).pop() {
             *scr = hs;
         }
+        let stats = WaveStats {
+            rows: wave_rows,
+            macs: wave_macs,
+            units: units.len(),
+            inline,
+            kv_bytes,
+        };
         for &u in outcome.panicked() {
             // the owner's phase-1 append already landed: state advanced,
             // output lost — exactly one typed failure per panicked task
             // (a task's first panicked unit wins; repeats are idempotent)
             results[owners[u]] = Err(WaveError::Panicked);
         }
-        results
+        (results, stats)
     }
 }
 
@@ -372,6 +419,59 @@ mod tests {
         assert_eq!(kv_w.free_pages(), 16);
         for seq in ser_seqs {
             kv_s.close(seq);
+        }
+    }
+
+    #[test]
+    fn wave_stats_measure_rows_macs_and_kv_traffic() {
+        let (s, h, g, d) = (2usize, 2usize, 1usize, 8usize);
+        let a = DECODE_AFFINE;
+        let cfg = KvConfig { pages: 16, page_size: 4, kv_heads: g, d_head: d };
+        let mut kv = KvPool::new(cfg);
+        let groups = HeadGroups::new(h, g).unwrap();
+        let mut seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+        let dec = DecodeAttention::new(Mode::Lut2d, Precision::Uint8, None).unwrap();
+        let batch = DecodeBatch::new(&dec);
+        let pool = engine_parallel(Mode::Lut2d, Precision::Uint8, None, Some(2));
+        let mut rng = Rng::new(33);
+        let mut scr = AttnScratch::new();
+        for round in 0..3usize {
+            let qs: Vec<Vec<i8>> = (0..s)
+                .map(|_| (0..h * d).map(|_| rng.int(-96, 96) as i8).collect())
+                .collect();
+            let ks: Vec<Vec<i8>> = (0..s)
+                .map(|_| (0..g * d).map(|_| rng.int(-96, 96) as i8).collect())
+                .collect();
+            let vs: Vec<Vec<i8>> = (0..s)
+                .map(|_| (0..g * d).map(|_| rng.int(-96, 96) as i8).collect())
+                .collect();
+            let mut outs = vec![vec![0.0f32; h * d]; s];
+            let mut tasks: Vec<DecodeStepTask<'_>> = seqs
+                .iter_mut()
+                .zip(outs.iter_mut())
+                .enumerate()
+                .map(|(i, (seq, out))| DecodeStepTask {
+                    seq,
+                    q: &qs[i],
+                    q_affine: a,
+                    k_row: &ks[i],
+                    v_row: &vs[i],
+                    out,
+                })
+                .collect();
+            let (res, stats) =
+                batch.step_wave_with_stats(&mut kv, &mut tasks, &pool, &mut scr, |_, _| false);
+            assert!(res.iter().all(|r| r.is_ok()));
+            drop(tasks);
+            // tokens resident after this round's appends
+            let len = round + 1;
+            assert_eq!(stats.rows, s * h, "round {round}");
+            assert_eq!(stats.macs, s * h * len * d, "round {round}");
+            assert_eq!(stats.kv_bytes, (s * len * g * d * 2) as u64, "round {round}");
+            assert!(stats.units > 0);
+        }
+        for seq in seqs {
+            kv.close(seq);
         }
     }
 

@@ -50,7 +50,7 @@ mod batch;
 mod decode;
 mod kernel;
 
-pub use batch::{DecodeBatch, DecodeStepTask, WaveError};
+pub use batch::{DecodeBatch, DecodeStepTask, WaveError, WaveStats};
 pub use decode::{parse_decode_route, DecodeAttention, DecodeRoute, SweepOrder, DECODE_AFFINE};
 pub use kernel::{AttnScratch, ComposedAttention, FusedAttention};
 

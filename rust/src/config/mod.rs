@@ -22,6 +22,10 @@ pub struct ServerConfig {
     pub workers: usize,
     /// bounded queue depth before backpressure rejects new requests
     pub queue_depth: usize,
+    /// arm the engine's wall-clock trace sink + per-stage timing (see
+    /// [`crate::obs`]); `serve --trace-out` sets this, and it never
+    /// alters reply bits (wire contract in `coordinator::request`)
+    pub trace: bool,
 }
 
 impl Default for ServerConfig {
@@ -32,6 +36,7 @@ impl Default for ServerConfig {
             batch_timeout_us: 2_000,
             workers: 2,
             queue_depth: 256,
+            trace: false,
         }
     }
 }
@@ -54,6 +59,9 @@ impl ServerConfig {
         if let Some(v) = j.get("queue_depth").and_then(Json::as_usize) {
             c.queue_depth = v;
         }
+        if let Some(v) = j.get("trace").and_then(Json::as_bool) {
+            c.trace = v;
+        }
         Ok(c)
     }
 
@@ -67,6 +75,9 @@ impl ServerConfig {
             args.opt_usize("batch-timeout-us", self.batch_timeout_us as usize)? as u64;
         self.workers = args.opt_usize("workers", self.workers)?;
         self.queue_depth = args.opt_usize("queue-depth", self.queue_depth)?;
+        if args.flag("trace") {
+            self.trace = true;
+        }
         Ok(())
     }
 }

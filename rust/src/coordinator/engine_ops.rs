@@ -23,6 +23,7 @@ use crate::eval::DetectionBox;
 use crate::faults::FaultPlan;
 use crate::kv::{HeadGroups, KvConfig, KvError, KvPool, KvSeq};
 use crate::lut::Precision;
+use crate::obs::{names, ObsHub, TraceClock};
 use crate::quant;
 use crate::runtime::{mode_tables, Engine, ModelRunner, Tensor};
 use crate::softmax::{self, Mode, ParSoftmax, Scratch, SoftmaxEngine, SoftmaxExact};
@@ -517,8 +518,11 @@ pub struct DecodePipeline {
     spare_bufs: RefCell<Vec<(Vec<i8>, Vec<i8>, Vec<i8>)>>,
     /// continuous-batching knobs (see [`SchedConfig`])
     sched_cfg: Cell<SchedConfig>,
-    /// scheduler counters, snapshot via [`Self::sched_counters`]
-    counters: RefCell<Counters>,
+    /// observability hub: the metrics registry (always on — the source
+    /// of truth behind [`Self::sched_counters`]), plus the optional
+    /// trace sink and wall-clock stage timing ([`Self::set_trace`] /
+    /// [`Self::set_stage_timing`])
+    obs: RefCell<ObsHub>,
     /// the route's deterministic fault plan (`:fS` in the route spec, or
     /// [`Self::set_fault_plan`]); installed into the worker pool
     /// immediately and the KV arena when it binds
@@ -588,7 +592,7 @@ impl DecodePipeline {
             scratch: RefCell::new(AttnScratch::new()),
             spare_bufs: RefCell::new(Vec::new()),
             sched_cfg: Cell::new(SchedConfig::default()),
-            counters: RefCell::new(Counters::default()),
+            obs: RefCell::new(ObsHub::new()),
             faults: Cell::new(FaultPlan::none()),
             tick: Cell::new(0),
             last_used: RefCell::new(HashMap::new()),
@@ -651,20 +655,53 @@ impl DecodePipeline {
                 }
             }
         }
-        self.reap_idle(tick);
+        let reap_t = self.obs.borrow_mut().stage_begin("reap");
+        let reaped = self.reap_idle(tick);
+        self.obs.borrow_mut().stage_end(
+            names::ROUND_REAP_US,
+            reap_t,
+            &[("reaped", reaped as i64)],
+        );
+        self.publish_kv_gauges();
         replies
+    }
+
+    /// Publish the arena's occupancy gauges (free pages, resident
+    /// tokens, tail-page fragmentation) — once per engine batch, so the
+    /// registry snapshot always reflects the post-batch arena.
+    fn publish_kv_gauges(&self) {
+        let (free, total) = match self.kv_pages() {
+            Some(ft) => ft,
+            None => return,
+        };
+        let page_size = self
+            .kv
+            .borrow()
+            .as_ref()
+            .map_or(DECODE_PAGE_SIZE, |p| p.config().page_size);
+        let resident = self.resident_tokens();
+        let allocated_slots = (total - free) * page_size;
+        let mut obs = self.obs.borrow_mut();
+        obs.gauge_set(names::KV_PAGES_TOTAL, total as i64);
+        obs.gauge_set(names::KV_PAGES_FREE, free as i64);
+        obs.gauge_set(names::KV_RESIDENT_TOKENS, resident as i64);
+        obs.gauge_set(
+            names::KV_FRAGMENTATION_TOKENS,
+            allocated_slots.saturating_sub(resident) as i64,
+        );
     }
 
     /// Record that a reply to `session` could not be delivered (the
     /// client hung up): the session is reap-eligible on the next batch.
     pub fn note_dead_reply(&self, session: u64) {
-        self.counters.borrow_mut().dead_replies += 1;
+        self.obs.borrow_mut().inc(names::SCHED_DEAD_REPLIES);
         self.dead.borrow_mut().insert(session);
     }
 
     /// Close sessions that are dead (client hung up) or idle past the
-    /// route's TTL, returning their pages to the arena.
-    fn reap_idle(&self, tick: u64) {
+    /// route's TTL, returning their pages to the arena. Returns the
+    /// victim count.
+    fn reap_idle(&self, tick: u64) -> usize {
         let ttl = self.sched_cfg.get().idle_ttl_batches as u64;
         let victims: Vec<u64> = {
             let dead = self.dead.borrow();
@@ -680,14 +717,18 @@ impl DecodePipeline {
                 })
                 .collect()
         };
+        let reaped = victims.len();
         for id in victims {
             self.close(id);
-            self.counters.borrow_mut().reaped += 1;
+            let mut obs = self.obs.borrow_mut();
+            obs.inc(names::SCHED_REAPED);
+            obs.event("reap_session", &[("session", id as i64)]);
         }
         // prune hang-up marks whose session is already gone (e.g. the
         // close itself got the dead reply) so the set cannot grow forever
         let sessions = self.sessions.borrow();
         self.dead.borrow_mut().retain(|id| sessions.contains_key(id));
+        reaped
     }
 
     /// The route's scheduler knobs.
@@ -699,13 +740,77 @@ impl DecodePipeline {
         self.sched_cfg.set(cfg);
     }
 
-    /// Snapshot of the route's scheduler counters.
+    /// Snapshot of the route's scheduler counters — a projection of the
+    /// metrics registry ([`Counters::from_registry`]), so the summary
+    /// line and the registry can never drift.
     pub fn sched_counters(&self) -> Counters {
-        *self.counters.borrow()
+        Counters::from_registry(&self.obs.borrow().metrics)
     }
 
-    pub(super) fn counters_mut(&self) -> std::cell::RefMut<'_, Counters> {
-        self.counters.borrow_mut()
+    pub(super) fn obs_mut(&self) -> std::cell::RefMut<'_, ObsHub> {
+        self.obs.borrow_mut()
+    }
+
+    /// Arm a trace sink on the route ([`TraceClock::Wall`] for serving
+    /// timelines, [`TraceClock::Logical`] for deterministic replay
+    /// assertions). Replaces any prior sink.
+    pub fn set_trace(&self, clock: TraceClock) {
+        self.obs.borrow_mut().set_trace(clock);
+    }
+
+    /// Enable wall-clock per-stage latency histograms (`round_*_us`).
+    /// Off by default so pure-pipeline runs stay clock-free.
+    pub fn set_stage_timing(&self, on: bool) {
+        self.obs.borrow_mut().set_timing(on);
+    }
+
+    /// Drop all recorded trace events, keeping the sink armed (benches
+    /// bound per-iteration memory with this). No-op without a sink.
+    pub fn reset_trace(&self) {
+        if let Some(t) = self.obs.borrow_mut().trace_mut() {
+            t.clear();
+        }
+    }
+
+    /// chrome://tracing JSON of the recorded events, `None` when no
+    /// sink is armed. Does not drain the sink.
+    pub fn trace_json(&self) -> Option<crate::config::Json> {
+        self.obs.borrow().trace().map(|t| t.to_json())
+    }
+
+    /// How many trace events carry `name` (0 without a sink) — the
+    /// fault-reconciliation tests count `"fault"` markers.
+    pub fn trace_event_count(&self, name: &str) -> usize {
+        self.obs.borrow().trace().map_or(0, |t| t.count(name))
+    }
+
+    /// JSON snapshot of the route's metrics registry (`--stats-json`).
+    /// The process-wide LUT range window ([`crate::obs::range`]) is
+    /// published into a clone at export time, so repeated snapshots
+    /// never double-count it into the live registry.
+    pub fn metrics_json(&self) -> crate::config::Json {
+        let mut reg = self.obs.borrow().metrics.clone();
+        crate::obs::range::publish(&mut reg);
+        reg.to_json()
+    }
+
+    /// Prometheus text exposition of the route's metrics registry (same
+    /// export-time LUT range publication as [`Self::metrics_json`]).
+    pub fn metrics_prometheus(&self) -> String {
+        let mut reg = self.obs.borrow().metrics.clone();
+        crate::obs::range::publish(&mut reg);
+        reg.to_prometheus()
+    }
+
+    /// Record a queue-wait sample keyed by session class (the server
+    /// loop calls this per dequeued decode payload).
+    pub fn record_queue_wait(&self, prefill_class: bool, us: u64) {
+        let name = if prefill_class {
+            names::QUEUE_WAIT_PREFILL_US
+        } else {
+            names::QUEUE_WAIT_STEP_US
+        };
+        self.obs.borrow_mut().metrics.observe_us(name, us);
     }
 
     /// Pages the arena's free list holds right now (the configured page
@@ -776,8 +881,10 @@ impl DecodePipeline {
         let mut kv = self.kv.borrow_mut();
         let kvp = kv.as_mut()?;
         let r = evict_youngest_session(&mut sessions, kvp, exclude);
-        if r.is_some() {
-            self.counters.borrow_mut().evicted += 1;
+        if let Some((victim, pages)) = r {
+            let mut obs = self.obs.borrow_mut();
+            obs.evicted(names::EVICT_ADMISSION);
+            obs.event("evict", &[("session", victim as i64), ("pages", pages as i64)]);
         }
         r
     }
@@ -796,7 +903,7 @@ impl DecodePipeline {
     fn error_reply(&self, e: &anyhow::Error) -> Reply {
         match e.downcast_ref::<KvError>() {
             Some(&KvError::Exhausted { pages, free_pages }) => {
-                self.counters.borrow_mut().exhausted += 1;
+                self.obs.borrow_mut().inc(names::SCHED_EXHAUSTED);
                 Reply::Exhausted { pages, free_pages }
             }
             None => Reply::Error(e.to_string()),
@@ -876,7 +983,7 @@ impl DecodePipeline {
         // and eviction would sacrifice a real session to it
         let no_exclude = HashSet::new();
         let mut spurious_retries = 0usize;
-        let results = DecodeBatch::new(&self.decode).step_wave_with(
+        let (results, stats) = DecodeBatch::new(&self.decode).step_wave_with_stats(
             kvp,
             &mut tasks,
             &self.pool,
@@ -887,19 +994,30 @@ impl DecodePipeline {
                     return true;
                 }
                 let r = evict_youngest_session(&mut sessions, kv, &no_exclude);
-                if r.is_some() {
-                    self.counters.borrow_mut().evicted += 1;
+                if let Some((victim, pages)) = r {
+                    let mut obs = self.obs.borrow_mut();
+                    obs.evicted(names::EVICT_STEP);
+                    obs.event("evict", &[("session", victim as i64), ("pages", pages as i64)]);
                 }
                 r.is_some()
             },
         );
         drop(tasks);
+        {
+            // wave traffic under the hwsim charge-model names, so
+            // simulated and measured runs compare label-for-label
+            let mut obs = self.obs.borrow_mut();
+            obs.add(names::KV_BYTES_READ, stats.kv_bytes);
+            obs.add(names::WAVE_ROWS, stats.rows as u64);
+            obs.add(names::WAVE_MACS, stats.macs as u64);
+            obs.inc(if stats.inline { names::WAVE_INLINE } else { names::WAVE_SCATTER });
+        }
         let mut spare_bufs = self.spare_bufs.borrow_mut();
         for (slot, res) in slots.into_iter().zip(results) {
             let reply = match res {
                 Ok(()) => Reply::Token(Tensor::f32(items[slot.idx].1.dims.clone(), slot.out)),
                 Err(WaveError::Kv(KvError::Exhausted { pages, free_pages })) => {
-                    self.counters.borrow_mut().exhausted += 1;
+                    self.obs.borrow_mut().inc(names::SCHED_EXHAUSTED);
                     Reply::Exhausted { pages, free_pages }
                 }
                 // the panic was contained to this slot: the append
@@ -907,7 +1025,9 @@ impl DecodePipeline {
                 // untouched — one typed reply, no retry (see the wire
                 // contract's failure-semantics table)
                 Err(WaveError::Panicked) => {
-                    self.counters.borrow_mut().panicked += 1;
+                    let mut obs = self.obs.borrow_mut();
+                    obs.inc(names::SCHED_PANICKED);
+                    obs.event("fault", &[("session", slot.session as i64)]);
                     Reply::Error(WaveError::Panicked.to_string())
                 }
             };
@@ -1049,8 +1169,13 @@ impl DecodePipeline {
                         continue;
                     }
                     let evicted = evict_youngest_session(&mut sessions, kvp, &HashSet::new());
-                    if evicted.is_some() {
-                        self.counters.borrow_mut().evicted += 1;
+                    if let Some((victim, pages)) = evicted {
+                        let mut obs = self.obs.borrow_mut();
+                        obs.evicted(names::EVICT_PREFILL);
+                        obs.event(
+                            "evict",
+                            &[("session", victim as i64), ("pages", pages as i64)],
+                        );
                     } else {
                         break Err(WaveError::Kv(e));
                     }
@@ -1061,7 +1186,9 @@ impl DecodePipeline {
         match result {
             Ok(()) => Ok(Reply::Prefill(Tensor::f32(q.dims.clone(), out))),
             Err(WaveError::Panicked) => {
-                self.counters.borrow_mut().panicked += 1;
+                let mut obs = self.obs.borrow_mut();
+                obs.inc(names::SCHED_PANICKED);
+                obs.event("fault", &[("session", session as i64)]);
                 Ok(Reply::Error(WaveError::Panicked.to_string()))
             }
             Err(WaveError::Kv(e)) => Err(e.into()),
@@ -1092,7 +1219,12 @@ impl DecodePipeline {
             match kvp.append_block(&mut seq, &kl, &vl) {
                 Ok(()) => {
                     debug_assert_eq!(seq.len(), tokens);
-                    self.counters.borrow_mut().requeued += 1;
+                    let mut obs = self.obs.borrow_mut();
+                    obs.inc(names::SCHED_REQUEUED);
+                    obs.event(
+                        "restore",
+                        &[("session", session as i64), ("tokens", tokens as i64)],
+                    );
                     return Ok(seq);
                 }
                 Err(e) => {
@@ -1105,8 +1237,13 @@ impl DecodePipeline {
                     // the in-flight slot keeps the session itself (and
                     // any wave mates) off the victim list
                     let evicted = evict_youngest_session(sessions, kvp, &HashSet::new());
-                    if evicted.is_some() {
-                        self.counters.borrow_mut().evicted += 1;
+                    if let Some((victim, pages)) = evicted {
+                        let mut obs = self.obs.borrow_mut();
+                        obs.evicted(names::EVICT_RESTORE);
+                        obs.event(
+                            "evict",
+                            &[("session", victim as i64), ("pages", pages as i64)],
+                        );
                     } else {
                         *sessions.get_mut(&session).expect("in-flight slot") =
                             SessionKv::Evicted { groups, k: kl, v: vl, tokens };

@@ -1,74 +1,21 @@
 //! Serving metrics: counters and log-bucketed latency histograms.
+//!
+//! The histogram type and the source of truth for the scheduler counters
+//! both live in [`crate::obs`] since the registry unification;
+//! [`Counters`] remains the stable snapshot struct (`serve` prints its
+//! [`Counters::summary`] line and tests depend on the exact bytes), but
+//! it is **derived** from a [`MetricsRegistry`] via
+//! [`Counters::from_registry`] so the two can never drift.
 
-use std::time::Duration;
+use crate::config::Json;
+use crate::obs::{names, MetricsRegistry};
 
-/// Log2-bucketed latency histogram (1 us .. ~1 h), lock-free enough for a
-/// single-writer engine thread; readers take a snapshot clone.
-#[derive(Clone, Debug)]
-pub struct Histogram {
-    /// bucket i counts samples in [2^i, 2^(i+1)) microseconds
-    buckets: Vec<u64>,
-    count: u64,
-    sum_us: u64,
-    max_us: u64,
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Histogram {
-    pub fn new() -> Self {
-        Self { buckets: vec![0; 32], count: 0, sum_us: 0, max_us: 0 }
-    }
-
-    pub fn record(&mut self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let b = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
-        self.buckets[b] += 1;
-        self.count += 1;
-        self.sum_us += us;
-        self.max_us = self.max_us.max(us);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count
-    }
-
-    pub fn mean_us(&self) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        self.sum_us as f64 / self.count as f64
-    }
-
-    pub fn max_us(&self) -> u64 {
-        self.max_us
-    }
-
-    /// Percentile estimate from bucket boundaries (upper bound of bucket).
-    pub fn percentile_us(&self, p: f64) -> u64 {
-        if self.count == 0 {
-            return 0;
-        }
-        let target = (self.count as f64 * p).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return 1u64 << (i + 1);
-            }
-        }
-        self.max_us
-    }
-}
+pub use crate::obs::Histogram;
 
 /// Continuous-batching scheduler counters — a snapshot struct so `serve`
-/// (and tests) can read one coherent stats line per run. Maintained by
-/// `coordinator::scheduler` per decode route; copied into
-/// [`Metrics::sched`] after every decode batch.
+/// (and tests) can read one coherent stats line per run. The engine
+/// maintains the registry; this is its fixed-field projection, copied
+/// into [`Metrics::sched`] after every decode batch.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Counters {
     /// serving rounds executed (each = one wave + its prefills/closes)
@@ -103,7 +50,70 @@ pub struct Counters {
     pub dead_replies: u64,
 }
 
+/// (field, registry series) pairs backing the registry projection — one
+/// table so `from_registry` and `from_stats_json` read the same names.
+const COUNTER_NAMES: [&str; 12] = [
+    names::SCHED_ROUNDS,
+    names::SCHED_STEPS,
+    names::SCHED_PREFILLS,
+    names::SCHED_EVICTED,
+    names::SCHED_REQUEUED,
+    names::SCHED_EXHAUSTED,
+    names::SCHED_OCC_TOKENS,
+    names::SCHED_OCC_SESSIONS,
+    names::SCHED_SHED,
+    names::SCHED_PANICKED,
+    names::SCHED_REAPED,
+    names::SCHED_DEAD_REPLIES,
+];
+
 impl Counters {
+    fn from_values(v: [u64; 12], peak: u64) -> Self {
+        Self {
+            rounds: v[0],
+            admitted_steps: v[1],
+            admitted_prefills: v[2],
+            evicted: v[3],
+            requeued: v[4],
+            exhausted: v[5],
+            occupancy_tokens: v[6],
+            occupancy_sessions: v[7],
+            shed: v[8],
+            panicked: v[9],
+            reaped: v[10],
+            dead_replies: v[11],
+            peak_queue_depth: peak,
+        }
+    }
+
+    /// Project the registry's `sched_*` series into the snapshot struct.
+    pub fn from_registry(reg: &MetricsRegistry) -> Self {
+        let mut v = [0u64; 12];
+        for (slot, name) in v.iter_mut().zip(COUNTER_NAMES) {
+            *slot = reg.counter(name);
+        }
+        Self::from_values(v, reg.gauge(names::SCHED_QUEUE_PEAK).max(0) as u64)
+    }
+
+    /// Rebuild the snapshot from a `--stats-json` document (the
+    /// serialized [`MetricsRegistry::to_json`] form) — `serve` uses this
+    /// to prove the written snapshot reconciles with the summary line.
+    pub fn from_stats_json(stats: &Json) -> Option<Self> {
+        let counters = stats.get("counters")?;
+        let read = |name: &str| counters.get(name).and_then(Json::as_i64).unwrap_or(0) as u64;
+        let mut v = [0u64; 12];
+        for (slot, name) in v.iter_mut().zip(COUNTER_NAMES) {
+            *slot = read(name);
+        }
+        let peak = stats
+            .get("gauges")
+            .and_then(|g| g.get(names::SCHED_QUEUE_PEAK))
+            .and_then(Json::as_i64)
+            .unwrap_or(0)
+            .max(0) as u64;
+        Some(Self::from_values(v, peak))
+    }
+
     /// mean sessions served per round
     pub fn mean_round_sessions(&self) -> f64 {
         if self.rounds == 0 {
@@ -174,25 +184,6 @@ mod tests {
     use super::*;
 
     #[test]
-    fn histogram_percentiles_ordered() {
-        let mut h = Histogram::new();
-        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
-            h.record(Duration::from_micros(us));
-        }
-        assert_eq!(h.count(), 10);
-        assert!(h.percentile_us(0.5) <= h.percentile_us(0.99));
-        assert!(h.mean_us() > 0.0);
-        assert_eq!(h.max_us(), 100_000);
-    }
-
-    #[test]
-    fn empty_histogram() {
-        let h = Histogram::new();
-        assert_eq!(h.percentile_us(0.99), 0);
-        assert_eq!(h.mean_us(), 0.0);
-    }
-
-    #[test]
     fn batch_size_mean() {
         let mut m = Metrics::new();
         m.batches = 2;
@@ -200,34 +191,8 @@ mod tests {
         assert_eq!(m.mean_batch_size(), 6.0);
     }
 
-    #[test]
-    fn histogram_bucket_edges() {
-        // 1 us lands in bucket 0 -> percentile reports its upper bound 2
-        let mut h = Histogram::new();
-        h.record(Duration::from_micros(1));
-        assert_eq!(h.percentile_us(1.0), 2);
-        assert_eq!(h.max_us(), 1);
-        // an exact power of two (1024 us) lands in bucket 10 -> bound 2048
-        let mut h = Histogram::new();
-        h.record(Duration::from_micros(1024));
-        assert_eq!(h.percentile_us(0.5), 2048);
-        // sub-microsecond samples clamp to 1 us (bucket 0), never panic
-        let mut h = Histogram::new();
-        h.record(Duration::ZERO);
-        assert_eq!(h.percentile_us(1.0), 2);
-        assert_eq!(h.mean_us(), 1.0);
-        // huge samples saturate the last bucket (31) -> bound 1 << 32
-        let mut h = Histogram::new();
-        h.record(Duration::from_micros(1 << 40));
-        assert_eq!(h.percentile_us(1.0), 1u64 << 32);
-    }
-
-    #[test]
-    fn counters_snapshot_means_and_summary() {
-        let c = Counters::default();
-        assert_eq!(c.mean_round_sessions(), 0.0);
-        assert_eq!(c.mean_round_tokens(), 0.0);
-        let c = Counters {
+    fn fixture() -> Counters {
+        Counters {
             rounds: 4,
             admitted_steps: 10,
             admitted_prefills: 2,
@@ -241,7 +206,33 @@ mod tests {
             panicked: 2,
             reaped: 1,
             dead_replies: 5,
-        };
+        }
+    }
+
+    fn registry_for(c: &Counters) -> MetricsRegistry {
+        let mut r = MetricsRegistry::new();
+        r.add(names::SCHED_ROUNDS, c.rounds);
+        r.add(names::SCHED_STEPS, c.admitted_steps);
+        r.add(names::SCHED_PREFILLS, c.admitted_prefills);
+        r.add(names::SCHED_EVICTED, c.evicted);
+        r.add(names::SCHED_REQUEUED, c.requeued);
+        r.add(names::SCHED_EXHAUSTED, c.exhausted);
+        r.add(names::SCHED_OCC_TOKENS, c.occupancy_tokens);
+        r.add(names::SCHED_OCC_SESSIONS, c.occupancy_sessions);
+        r.add(names::SCHED_SHED, c.shed);
+        r.add(names::SCHED_PANICKED, c.panicked);
+        r.add(names::SCHED_REAPED, c.reaped);
+        r.add(names::SCHED_DEAD_REPLIES, c.dead_replies);
+        r.gauge_max(names::SCHED_QUEUE_PEAK, c.peak_queue_depth as i64);
+        r
+    }
+
+    #[test]
+    fn counters_snapshot_means_and_summary() {
+        let c = Counters::default();
+        assert_eq!(c.mean_round_sessions(), 0.0);
+        assert_eq!(c.mean_round_tokens(), 0.0);
+        let c = fixture();
         assert_eq!(c.mean_round_sessions(), 2.5);
         assert_eq!(c.mean_round_tokens(), 25.0);
         let s = c.summary();
@@ -252,5 +243,26 @@ mod tests {
         assert!(s.contains("panicked=2"), "{s}");
         assert!(s.contains("reaped=1"), "{s}");
         assert!(s.contains("dead=5"), "{s}");
+    }
+
+    #[test]
+    fn registry_projection_roundtrips_every_field() {
+        let want = fixture();
+        let reg = registry_for(&want);
+        assert_eq!(Counters::from_registry(&reg), want);
+        // the empty registry projects to the zero snapshot
+        assert_eq!(Counters::from_registry(&MetricsRegistry::new()), Counters::default());
+    }
+
+    #[test]
+    fn stats_json_roundtrips_through_serialization() {
+        let want = fixture();
+        let reg = registry_for(&want);
+        let text = reg.to_json().to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let got = Counters::from_stats_json(&parsed).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(got.summary(), want.summary());
+        assert!(Counters::from_stats_json(&Json::Null).is_none());
     }
 }

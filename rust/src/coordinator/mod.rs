@@ -25,4 +25,4 @@ pub use engine_ops::{
 pub use metrics::{Counters, Histogram, Metrics};
 pub use request::{Payload, Reply, Request, TaskKind};
 pub use scheduler::SchedConfig;
-pub use server::{Coordinator, CoordinatorClient, RouteTable, ServerStats};
+pub use server::{Coordinator, CoordinatorClient, ObsSnapshot, RouteTable, ServerStats};

@@ -72,6 +72,16 @@
 //! panicked step advanced state exactly as a successful append would
 //! have (replay the event, discard the output, and the session's later
 //! replies line up again).
+//!
+//! # Observability is outside the wire contract
+//!
+//! Arming any observability surface — a trace sink (`serve
+//! --trace-out`, `DecodePipeline::set_trace`), wall-clock stage timing,
+//! metrics exposition, or sampled LUT range telemetry — never alters a
+//! single reply bit, reply ordering, or any scheduling decision. The
+//! trace records the schedule; it never steers it. This is pinned by
+//! `integration_obs.rs` (trace-on vs trace-off reply bit-identity) and
+//! documented in `docs/OBSERVABILITY.md`.
 
 use std::sync::mpsc;
 use std::time::Instant;

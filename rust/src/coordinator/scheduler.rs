@@ -64,12 +64,22 @@
 //! exactly ONE oldest waiting sheddable item, so chaos tests can count
 //! one typed reply per injected fault. Shedding only shrinks the
 //! queue, so the no-starvation argument above is unchanged.
+//!
+//! # Observability
+//!
+//! Each round is recorded through the pipeline's [`crate::obs::ObsHub`]
+//! as a `round` span with `admit` / `prefill` / `wave` child spans, plus
+//! `step` / `evict` / `restore` / `shed` / `fault` instant markers (see
+//! `docs/OBSERVABILITY.md` for the taxonomy). The trace records the
+//! schedule; it never steers it — with no sink armed every hook is one
+//! `Option` test, and admission decisions read none of it.
 
 use std::collections::HashSet;
 
 use super::engine_ops::DecodePipeline;
 use super::request::{Payload, Reply};
 use crate::faults::FaultSite;
+use crate::obs::names;
 use crate::runtime::Tensor;
 
 /// Continuous-batching knobs of a decode route. Defaults suit the
@@ -180,7 +190,10 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
     let sheddable =
         |i: usize| matches!(items[i], Item::Step { .. } | Item::Prefill { .. });
     let shed = |pipe: &DecodePipeline, replies: &mut [Option<Reply>], i: usize, waited: u64| {
-        pipe.counters_mut().shed += 1;
+        let mut obs = pipe.obs_mut();
+        obs.inc(names::SCHED_SHED);
+        obs.event("shed", &[("item", i as i64), ("waited", waited as i64)]);
+        drop(obs);
         replies[i] = Some(Reply::Shed { waited_rounds: waited as usize });
     };
 
@@ -221,6 +234,9 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
         // pin one typed reply per fault
         if pipe.fault_plan().should_fault(FaultSite::SchedDeadline, deadline_draws) {
             if let Some(&i) = pending.iter().find(|&&i| sheddable(i)) {
+                // exactly one `fault` marker per injected firing, next to
+                // the one typed `Reply::Shed` it produces
+                pipe.obs_mut().event("fault", &[("item", i as i64)]);
                 shed(pipe, &mut replies, i, ages[i]);
                 pending.retain(|&i| replies[i].is_none());
             }
@@ -229,10 +245,8 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
         if pending.is_empty() {
             break;
         }
-        {
-            let mut c = pipe.counters_mut();
-            c.peak_queue_depth = c.peak_queue_depth.max(pending.len() as u64);
-        }
+        pipe.obs_mut().gauge_max(names::SCHED_QUEUE_PEAK, pending.len() as i64);
+        let round_t = pipe.obs_mut().stage_begin("round");
         // prefill priority: pause decode rounds to drain the prompt
         // queue when it outweighs the waiting steps
         let (mut wp_tokens, mut wp, mut ws) = (0usize, 0usize, 0usize);
@@ -250,6 +264,7 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
             && (wp_tokens >= cfg.max_waiting_tokens
                 || wp as f64 >= cfg.waiting_served_ratio * ws as f64);
 
+        let admit_t = pipe.obs_mut().stage_begin("admit");
         let mut round = assemble(pipe, &cfg, &items, &pending, &mut replies, prefill_priority);
         if round.admitted.is_empty() && round.resolved == 0 {
             // the prefill-only pass admitted nothing (every prefill sat
@@ -257,17 +272,23 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
             // whose front item always admits or resolves
             round = assemble(pipe, &cfg, &items, &pending, &mut replies, false);
         }
+        pipe.obs_mut().stage_end(
+            names::ROUND_ADMIT_US,
+            admit_t,
+            &[("admitted", round.admitted.len() as i64), ("resolved", round.resolved as i64)],
+        );
         debug_assert!(
             !round.admitted.is_empty() || round.resolved > 0,
             "every round must make progress"
         );
         if !round.admitted.is_empty() {
-            execute(pipe, &items, &round.admitted, &mut replies);
+            execute(pipe, &items, &round.admitted, &mut replies, &ages);
         }
         pending.retain(|&i| replies[i].is_none());
         for &i in &pending {
             ages[i] += 1;
         }
+        pipe.obs_mut().stage_end(names::ROUND_US, round_t, &[("queue", pending.len() as i64)]);
     }
     replies.into_iter().map(|r| r.expect("every request resolved")).collect()
 }
@@ -356,9 +377,7 @@ fn assemble(
                         // nothing left to evict: the request alone
                         // exceeds the arena — typed backpressure, the
                         // session untouched and the queue unblocked
-                        let mut c = pipe.counters_mut();
-                        c.exhausted += 1;
-                        drop(c);
+                        pipe.obs_mut().inc(names::SCHED_EXHAUSTED);
                         replies[i] = Some(Reply::Exhausted {
                             pages: pipe.total_pages(),
                             free_pages: pipe.free_pages_now(),
@@ -390,6 +409,7 @@ fn execute(
     items: &[Item<'_>],
     admitted: &[usize],
     replies: &mut [Option<Reply>],
+    ages: &[u64],
 ) {
     for &i in admitted {
         if let Item::Close(s) = &items[i] {
@@ -401,6 +421,7 @@ fn execute(
             replies[i] = Some(pipe.open());
         }
     }
+    let prefill_t = pipe.obs_mut().stage_begin("prefill");
     let mut prefills = 0u64;
     for &i in admitted {
         if let Item::Prefill { session, q, k, v, .. } = &items[i] {
@@ -408,6 +429,7 @@ fn execute(
             prefills += 1;
         }
     }
+    pipe.obs_mut().stage_end(names::ROUND_PREFILL_US, prefill_t, &[("prefills", prefills as i64)]);
     let wave: Vec<usize> = admitted
         .iter()
         .copied()
@@ -421,15 +443,32 @@ fn execute(
                 _ => unreachable!("filtered to steps above"),
             })
             .collect();
-        for (&i, r) in wave.iter().zip(pipe.step_batch(&wave_items)) {
+        // per-session step markers: who served this wave, the pages they
+        // hold, and how many rounds they waited in the queue
+        if pipe.obs_mut().trace().is_some() {
+            for &i in &wave {
+                if let Item::Step { session, .. } = &items[i] {
+                    let pages = pipe.session_pages(*session) as i64;
+                    let waited = ages[i] as i64;
+                    pipe.obs_mut().event(
+                        "step",
+                        &[("session", *session as i64), ("pages", pages), ("waited", waited)],
+                    );
+                }
+            }
+        }
+        let wave_t = pipe.obs_mut().stage_begin("wave");
+        let results = pipe.step_batch(&wave_items);
+        pipe.obs_mut().stage_end(names::ROUND_WAVE_US, wave_t, &[("steps", wave.len() as i64)]);
+        for (&i, r) in wave.iter().zip(results) {
             replies[i] = Some(r);
         }
     }
     let resident = pipe.resident_tokens() as u64;
-    let mut c = pipe.counters_mut();
-    c.rounds += 1;
-    c.admitted_steps += wave.len() as u64;
-    c.admitted_prefills += prefills;
-    c.occupancy_sessions += wave.len() as u64 + prefills;
-    c.occupancy_tokens += resident;
+    let mut obs = pipe.obs_mut();
+    obs.inc(names::SCHED_ROUNDS);
+    obs.add(names::SCHED_STEPS, wave.len() as u64);
+    obs.add(names::SCHED_PREFILLS, prefills);
+    obs.add(names::SCHED_OCC_SESSIONS, wave.len() as u64 + prefills);
+    obs.add(names::SCHED_OCC_TOKENS, resident);
 }

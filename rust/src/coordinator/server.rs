@@ -16,7 +16,8 @@ use super::engine_ops::{
 };
 use super::metrics::Metrics;
 use super::request::{Payload, Reply, Request, TaskKind};
-use crate::config::ServerConfig;
+use crate::config::{Json, ServerConfig};
+use crate::obs::TraceClock;
 use crate::runtime::{Engine, Tensor};
 
 /// Which model variant serves each task family.
@@ -46,9 +47,24 @@ pub struct ServerStats {
     pub executions: u64,
 }
 
+/// One coherent observability pull from the engine thread (decode route):
+/// the metrics snapshot in both exposition formats and, when the trace
+/// sink is armed ([`ServerConfig::trace`]), the chrome://tracing
+/// document accumulated so far. All `None` when no decode route exists.
+#[derive(Clone, Debug, Default)]
+pub struct ObsSnapshot {
+    /// [`crate::obs::MetricsRegistry::to_json`] document (`--stats-json`)
+    pub stats_json: Option<Json>,
+    /// Prometheus text exposition of the same registry
+    pub prometheus: Option<String>,
+    /// chrome `trace_event` document (`--trace-out`); `None` unless armed
+    pub trace_json: Option<Json>,
+}
+
 enum Ctl {
     Req(Request),
     Stats(mpsc::Sender<ServerStats>),
+    Obs(mpsc::Sender<ObsSnapshot>),
     Shutdown,
 }
 
@@ -162,6 +178,17 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("engine thread gone"))
     }
 
+    /// Pull the decode route's observability snapshot (metrics JSON,
+    /// Prometheus text, and — when tracing is armed — the trace
+    /// document) from the engine thread.
+    pub fn observability(&self) -> Result<ObsSnapshot> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Ctl::Obs(tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread gone"))
+    }
+
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.tx.send(Ctl::Shutdown);
         if let Some(h) = self.handle.take() {
@@ -249,6 +276,17 @@ fn engine_thread(
         }
     };
 
+    if let Some(p) = &pipes.decode {
+        // wall-clock per-stage latency attribution is always on in the
+        // server (it already lives on wall time); the trace sink is
+        // opt-in. Neither alters reply bits — see the wire contract in
+        // `coordinator::request`.
+        p.set_stage_timing(true);
+        if cfg.trace {
+            p.set_trace(TraceClock::Wall);
+        }
+    }
+
     let timeout = Duration::from_micros(cfg.batch_timeout_us);
     let mut queues: BTreeMap<TaskKind, Batcher<Request>> = BTreeMap::new();
     for k in TaskKind::ALL {
@@ -276,6 +314,17 @@ fn engine_thread(
                     per_task: metrics.clone(),
                     executions: *engine.exec_count.borrow(),
                 });
+            }
+            Ok(Ctl::Obs(tx)) => {
+                let snap = match &pipes.decode {
+                    Some(p) => ObsSnapshot {
+                        stats_json: Some(p.metrics_json()),
+                        prometheus: Some(p.metrics_prometheus()),
+                        trace_json: p.trace_json(),
+                    },
+                    None => ObsSnapshot::default(),
+                };
+                let _ = tx.send(snap);
             }
             Ok(Ctl::Shutdown) => {
                 for q in queues.values_mut() {
@@ -432,6 +481,18 @@ fn process_batch(
                 // (bit-identical to per-request serial processing; see the
                 // wire contract in `coordinator::request`). Per-request
                 // replies, so one bad step cannot fail its batchmates.
+                // queue-wait attribution by request class: prompt ingest
+                // (prefills) and decode steps queue differently under
+                // prefill-priority rounds, so they get separate histograms
+                let t_ingest = Instant::now();
+                for r in &batch {
+                    let wait_us = t_ingest.duration_since(r.arrived).as_micros().max(1) as u64;
+                    match &r.payload {
+                        Payload::DecodePrefill { .. } => p.record_queue_wait(true, wait_us),
+                        Payload::DecodeStep { .. } => p.record_queue_wait(false, wait_us),
+                        _ => {}
+                    }
+                }
                 let payloads: Vec<&Payload> = batch.iter().map(|r| &r.payload).collect();
                 let replies = p.run_batch(&payloads);
                 // deliver decode replies here, not in the common tail: a
@@ -495,6 +556,7 @@ mod tests {
             batch_timeout_us: 50_000,
             workers: 2,
             queue_depth: 64,
+            trace: false,
         };
         let routes = RouteTable {
             decode: Some("decode:rexp:uint8:g2:p8".into()),

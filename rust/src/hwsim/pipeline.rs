@@ -44,6 +44,19 @@ impl SimReport {
     pub fn energy_per_elem(&self) -> f64 {
         self.energy / self.elems as f64
     }
+
+    /// Publish the report's charges into a [`MetricsRegistry`] under the
+    /// SAME series the serving layer measures (`kv_bytes_read_total`,
+    /// `hwsim_*`; see [`crate::obs::names`]) — simulated and observed
+    /// traffic compare label-for-label.
+    pub fn export(&self, reg: &mut crate::obs::MetricsRegistry) {
+        use crate::obs::names;
+        reg.add(names::KV_BYTES_READ, self.kv_bytes_read);
+        reg.add(names::HWSIM_CYCLES, self.cycles);
+        // energy is a float charge; registry counters are integral, so
+        // the exported series carries whole energy units (pJ-equivalent)
+        reg.add(names::HWSIM_ENERGY, self.energy as u64);
+    }
 }
 
 /// Cycles for `count` elements through an op chain on one lane.
@@ -661,6 +674,29 @@ mod tests {
         let small = simulate_decode(&d, DecodeSimConfig { page_size: 4, ..cfg });
         assert!(small.cycles > big.cycles);
         assert_eq!(small.energy, big.energy, "page size is a latency knob, not work");
+    }
+
+    #[test]
+    fn export_publishes_charges_under_the_measured_series_names() {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 8,
+            kv_heads: 2,
+            seq_len: 32,
+            d_head: 32,
+            page_size: 16,
+            lanes: 4,
+        };
+        let r = simulate_decode(&d, cfg);
+        let mut reg = crate::obs::MetricsRegistry::new();
+        r.export(&mut reg);
+        use crate::obs::names;
+        assert_eq!(reg.counter(names::KV_BYTES_READ), r.kv_bytes_read);
+        assert_eq!(reg.counter(names::HWSIM_CYCLES), r.cycles);
+        assert!(r.kv_bytes_read > 0, "decode models charge KV sweeps");
+        // exports accumulate like any other counter
+        r.export(&mut reg);
+        assert_eq!(reg.counter(names::KV_BYTES_READ), 2 * r.kv_bytes_read);
     }
 
     #[test]

@@ -323,6 +323,14 @@ impl KvPool {
         self.free.len()
     }
 
+    /// pages currently owned by live sequences (`pages - free_pages`) —
+    /// the KV-pool occupancy gauge; with Σ resident tokens it also gives
+    /// the internal-fragmentation gauge (allocated-but-unfilled token
+    /// slots in tail pages): `used_pages * page_size - resident_tokens`.
+    pub fn used_pages(&self) -> usize {
+        self.cfg.pages - self.free.len()
+    }
+
     /// Append one token's K/V rows (`kv_heads * d_head` each, `[g][d]`
     /// row-major) to `seq`, allocating a page when the tail page is full.
     /// On [`KvError::Exhausted`] the sequence is left untouched, so the
@@ -545,6 +553,26 @@ mod tests {
 
     fn rand_row(rng: &mut Rng, n: usize) -> Vec<i8> {
         (0..n).map(|_| rng.int(-128, 127) as i8).collect()
+    }
+
+    #[test]
+    fn used_pages_tracks_allocation_and_close() {
+        let mut pool = pool4();
+        assert_eq!(pool.used_pages(), 0);
+        let mut rng = Rng::new(5);
+        let mut seq = seq_for(&pool);
+        let n = pool.config().kv_heads * pool.config().d_head;
+        // page_size 4: five appends span two pages
+        for _ in 0..5 {
+            let (k, v) = (rand_row(&mut rng, n), rand_row(&mut rng, n));
+            pool.append(&mut seq, &k, &v).unwrap();
+        }
+        assert_eq!(pool.used_pages(), 2);
+        assert_eq!(pool.used_pages() + pool.free_pages(), pool.config().pages);
+        // fragmentation gauge: 2 pages hold 8 token slots, 5 resident
+        assert_eq!(pool.used_pages() * pool.config().page_size - seq.len(), 3);
+        pool.close(seq);
+        assert_eq!(pool.used_pages(), 0);
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! | [`attention`] | fused integer-native `QK^T → LUT softmax → ×V` kernel + streaming decode |
 //! | [`kv`]        | paged integer KV cache (arena + free-list + grouped heads) |
 //! | [`faults`]    | deterministic fault injection (seeded plans, replayable chaos) |
+//! | [`obs`]       | trace spans, metrics registry, LUT range telemetry (zero-cost off) |
 //! | [`hwsim`]     | cycle/area/energy simulator of softmax HW designs |
 //! | [`runtime`]   | PJRT client: load + execute `artifacts/*.hlo.txt` |
 //! | [`eval`]      | BLEU / accuracy / F1 / Hungarian-matched AP metrics |
@@ -44,6 +45,7 @@ pub mod faults;
 pub mod hwsim;
 pub mod kv;
 pub mod lut;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod softmax;

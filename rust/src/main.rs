@@ -27,6 +27,8 @@ fn main() -> Result<()> {
         "rate",
         "mode",
         "prec",
+        "trace-out",
+        "stats-json",
     ])?;
     let cmd = args.positional.first().map(String::as_str).unwrap_or("info");
     match cmd {
@@ -75,7 +77,14 @@ fn info(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let cfg = config(args)?;
+    let mut cfg = config(args)?;
+    let trace_out = args.opt("trace-out");
+    let stats_out = args.opt("stats-json");
+    // --trace-out arms the engine's wall-clock trace sink; metrics are
+    // always on (the registry is the scheduler's source of truth)
+    if trace_out.is_some() {
+        cfg.trace = true;
+    }
     let task = args.opt("task").unwrap_or("translate");
     let variant = args
         .opt("variant")
@@ -108,7 +117,14 @@ fn serve(args: &Args) -> Result<()> {
 
     let mut rng = Rng::new(7);
     if task == "decode" {
+        // arm kernel-level LUT range telemetry for the smoke window:
+        // sample every softmax call so the zero-clamp check is exhaustive
+        lutmax::obs::range::set_sampling(1);
+        lutmax::obs::range::reset();
         serve_decode(&coordinator, &mut rng, &variant, requests, rate)?;
+        report_lut_ranges()?;
+        write_obs_artifacts(&coordinator, trace_out, stats_out)?;
+        lutmax::obs::range::set_sampling(0);
         coordinator.shutdown()?;
         // second scenario: an arena several times smaller than the
         // session demand — the scheduler must evict/restore, not fail
@@ -272,6 +288,94 @@ fn serve_decode(
     }
     if pages == 0 {
         return Err(anyhow!("sessions streamed {steps} steps but freed no KV pages"));
+    }
+    Ok(())
+}
+
+/// Print the LUT range telemetry window and assert the paper's premise
+/// held over the smoke traffic: normalized (~N(0,1) logit) inputs must
+/// produce ZERO saturated LUT addresses in either pass — a clamp here
+/// means the quantization/threshold geometry regressed.
+fn report_lut_ranges() -> Result<()> {
+    let r = lutmax::obs::range::snapshot();
+    println!(
+        "  lut ranges sampled_calls={} pass1_clamped={} pass2_clamped={}",
+        r.sampled_calls, r.pass1_clamped, r.pass2_clamped
+    );
+    if let Some((lo, hi)) = r.diff {
+        println!("    numerator  m_q - v_q  in [{lo}, {hi}] (LUT-index units)");
+    }
+    if let Some((lo, hi)) = r.denom {
+        println!("    denominator row sums  in [{lo}, {hi}]");
+    }
+    if r.sampled_calls == 0 {
+        return Err(anyhow!("range telemetry was armed but sampled no softmax calls"));
+    }
+    if r.pass1_clamped != 0 || r.pass2_clamped != 0 {
+        return Err(anyhow!(
+            "normalized inputs clamped LUT indices (pass1 {} pass2 {}): range premise violated",
+            r.pass1_clamped,
+            r.pass2_clamped
+        ));
+    }
+    Ok(())
+}
+
+/// Write and validate the `--trace-out` / `--stats-json` artifacts. The
+/// stats snapshot must reconcile byte-for-byte with the scheduler's
+/// `Counters::summary()` line; the trace must parse back as a chrome
+/// `trace_event` document.
+fn write_obs_artifacts(
+    c: &Coordinator,
+    trace_out: Option<&str>,
+    stats_out: Option<&str>,
+) -> Result<()> {
+    if trace_out.is_none() && stats_out.is_none() {
+        return Ok(());
+    }
+    use lutmax::config::Json;
+    use lutmax::coordinator::Counters;
+    let sched = c
+        .stats()?
+        .per_task
+        .get("decode")
+        .map(|m| m.sched)
+        .ok_or_else(|| anyhow!("no decode metrics for the obs artifacts"))?;
+    let snap = c.observability()?;
+    if let Some(path) = stats_out {
+        let stats = snap.stats_json.ok_or_else(|| anyhow!("no decode route: no stats json"))?;
+        let text = stats.to_string_pretty();
+        let parsed = Json::parse(&text).map_err(|e| anyhow!("stats json round-trip: {e}"))?;
+        let got = Counters::from_stats_json(&parsed)
+            .ok_or_else(|| anyhow!("stats json is missing its counters object"))?;
+        if got.summary() != sched.summary() {
+            return Err(anyhow!(
+                "stats json does not reconcile with the sched summary:\n  file: {}\n  live: {}",
+                got.summary(),
+                sched.summary()
+            ));
+        }
+        std::fs::write(path, &text)?;
+        println!("  stats json -> {path} (reconciles with the sched summary)");
+    }
+    if let Some(path) = trace_out {
+        let trace = snap
+            .trace_json
+            .ok_or_else(|| anyhow!("trace sink was not armed (pass --trace-out at startup)"))?;
+        let text = trace.to_string_pretty();
+        let parsed = Json::parse(&text).map_err(|e| anyhow!("trace round-trip: {e}"))?;
+        let events = parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace is missing traceEvents"))?;
+        if events.is_empty() {
+            return Err(anyhow!("trace has no events after a served decode run"));
+        }
+        std::fs::write(path, &text)?;
+        println!(
+            "  trace -> {path} ({} events; open in chrome://tracing or Perfetto)",
+            events.len()
+        );
     }
     Ok(())
 }

@@ -1,0 +1,154 @@
+//! Log2-bucketed latency histogram (moved here from
+//! `coordinator/metrics.rs` when the registry unified the metric types;
+//! the old path re-exports it unchanged).
+
+use std::time::Duration;
+
+use crate::config::Json;
+use crate::jobj;
+
+/// Log2-bucketed latency histogram (1 us .. ~1 h), lock-free enough for a
+/// single-writer engine thread; readers take a snapshot clone.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) microseconds
+    buckets: [u64; 32],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros().max(1) as u64);
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        let us = us.max(1);
+        let b = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Percentile estimate from bucket boundaries (upper bound of the
+    /// bucket holding the target rank), clamped to the largest sample
+    /// actually observed — a lone 100 ms sample reports p99 = 100 ms,
+    /// not its 131 ms bucket boundary.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (self.count as f64 * p).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << (i + 1)).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Snapshot for the `--stats-json` export.
+    pub fn to_json(&self) -> Json {
+        jobj![
+            ("count", self.count as usize),
+            ("sum_us", self.sum_us as usize),
+            ("max_us", self.max_us as usize),
+            ("p50_us", self.percentile_us(0.5) as usize),
+            ("p90_us", self.percentile_us(0.9) as usize),
+            ("p99_us", self.percentile_us(0.99) as usize),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = Histogram::new();
+        for us in [10u64, 20, 40, 80, 160, 320, 640, 1280, 2560, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.percentile_us(0.5) <= h.percentile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 100_000);
+        // the clamp: one 100 ms tail sample must not report its 2^17 us
+        // (131 ms) bucket boundary as the p99
+        assert_eq!(h.percentile_us(0.99), 100_000);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        // 1 us lands in bucket 0; its bound 2 us clamps to the 1 us max
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(1));
+        assert_eq!(h.percentile_us(1.0), 1);
+        assert_eq!(h.max_us(), 1);
+        // an exact power of two (1024 us) lands in bucket 10 whose bound
+        // 2048 clamps back to the sample itself
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(1024));
+        assert_eq!(h.percentile_us(0.5), 1024);
+        // sub-microsecond samples clamp to 1 us (bucket 0), never panic
+        let mut h = Histogram::new();
+        h.record(Duration::ZERO);
+        assert_eq!(h.percentile_us(1.0), 1);
+        assert_eq!(h.mean_us(), 1.0);
+        // huge samples saturate the last bucket (31) -> bound 1 << 32
+        // (below max_us, so the saturated bound is what's reported)
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(1 << 40));
+        assert_eq!(h.percentile_us(1.0), 1u64 << 32);
+        // a mid-bucket sample: bound stays below max_us, no clamp
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(3));
+        h.record(Duration::from_micros(1000));
+        assert_eq!(h.percentile_us(0.25), 3);
+    }
+
+    #[test]
+    fn json_snapshot_fields() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(10));
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("sum_us").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("p99_us").unwrap().as_usize(), Some(10));
+    }
+}

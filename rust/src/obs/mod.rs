@@ -1,0 +1,182 @@
+//! Structured observability for the serving stack — in the same
+//! discipline as [`crate::faults`]: **zero-cost when disabled,
+//! clock-free/deterministic in test mode, replayable**.
+//!
+//! | piece | role |
+//! |---|---|
+//! | [`names`] | canonical metric vocabulary (shared with hwsim) |
+//! | [`Histogram`] | log2 latency histogram (moved from `coordinator`) |
+//! | [`MetricsRegistry`] | counters/gauges/histograms + Prometheus/JSON |
+//! | [`TraceSink`] | round-timeline spans → chrome://tracing JSON |
+//! | [`range`] | sampled LUT range telemetry (paper premise check) |
+//! | [`ObsHub`] | per-pipeline bundle the engine thread writes through |
+//!
+//! The decode pipeline owns one [`ObsHub`] behind a `RefCell` (single
+//! engine thread, short-lived borrows). The registry is **always** the
+//! source of truth — `Counters::summary()` is derived from it — while
+//! the trace sink and wall-clock stage timing are opt-in: with neither
+//! armed, a span helper is one `Option`/`bool` test and counter updates
+//! are plain map increments, and no code path reads `std::time`, so the
+//! conformance invariants replay bit-identically with observability on
+//! or off (the trace records the schedule; it never steers it).
+
+pub mod names;
+pub mod range;
+
+mod hist;
+mod registry;
+mod trace;
+
+pub use hist::Histogram;
+pub use registry::MetricsRegistry;
+pub use trace::{TraceClock, TraceSink};
+
+/// Wall-clock handle returned by [`ObsHub::stage_begin`]; `None` when
+/// stage timing is off (the deterministic/test configuration).
+pub type StageTimer = Option<std::time::Instant>;
+
+/// The per-pipeline observability bundle: one registry (always on), an
+/// optional trace sink, and an opt-in wall-clock stage-timing switch.
+#[derive(Debug, Default)]
+pub struct ObsHub {
+    pub metrics: MetricsRegistry,
+    trace: Option<TraceSink>,
+    timing: bool,
+}
+
+impl ObsHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // -- arming ----------------------------------------------------------
+
+    /// Install a fresh trace sink (replacing any prior one).
+    pub fn set_trace(&mut self, clock: TraceClock) {
+        self.trace = Some(TraceSink::new(clock));
+    }
+
+    /// Enable wall-clock per-stage latency histograms. Leave off (the
+    /// default) wherever determinism matters — it is the only obs path
+    /// that reads `std::time` during a round.
+    pub fn set_timing(&mut self, on: bool) {
+        self.timing = on;
+    }
+
+    pub fn trace(&self) -> Option<&TraceSink> {
+        self.trace.as_ref()
+    }
+
+    pub fn trace_mut(&mut self) -> Option<&mut TraceSink> {
+        self.trace.as_mut()
+    }
+
+    // -- counters / gauges (registry passthrough) ------------------------
+
+    pub fn inc(&mut self, name: &'static str) {
+        self.metrics.inc(name);
+    }
+
+    pub fn add(&mut self, name: &'static str, n: u64) {
+        self.metrics.add(name, n);
+    }
+
+    pub fn gauge_set(&mut self, name: &'static str, v: i64) {
+        self.metrics.gauge_set(name, v);
+    }
+
+    pub fn gauge_max(&mut self, name: &'static str, v: i64) {
+        self.metrics.gauge_max(name, v);
+    }
+
+    /// Increment the eviction total AND its per-cause series (`cause`
+    /// one of [`names::EVICT_CAUSES`]) in one call, so the breakdown can
+    /// never drift from the total.
+    pub fn evicted(&mut self, cause: &'static str) {
+        self.metrics.inc(names::SCHED_EVICTED);
+        self.metrics.inc(cause);
+    }
+
+    // -- spans / events --------------------------------------------------
+
+    /// Open a span: begins a trace span when a sink is armed and starts
+    /// a wall timer when stage timing is on.
+    pub fn stage_begin(&mut self, name: &'static str) -> StageTimer {
+        if let Some(t) = self.trace.as_mut() {
+            t.begin(name);
+        }
+        if self.timing {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close the innermost span, recording its wall duration into the
+    /// `hist` histogram when timing is on.
+    pub fn stage_end(
+        &mut self,
+        hist: &'static str,
+        timer: StageTimer,
+        args: &[(&'static str, i64)],
+    ) {
+        if let Some(t) = self.trace.as_mut() {
+            t.end(args);
+        }
+        if let Some(t0) = timer {
+            self.metrics.observe_us(hist, t0.elapsed().as_micros().max(1) as u64);
+        }
+    }
+
+    /// Record a point event on the trace (no-op with no sink armed).
+    pub fn event(&mut self, name: &'static str, args: &[(&'static str, i64)]) {
+        if let Some(t) = self.trace.as_mut() {
+            t.instant(name, args);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_hub_records_metrics_but_no_trace_or_timing() {
+        let mut h = ObsHub::new();
+        let t = h.stage_begin("round");
+        assert!(t.is_none(), "timing off by default");
+        h.inc(names::SCHED_ROUNDS);
+        h.stage_end(names::ROUND_US, t, &[]);
+        assert!(h.trace().is_none());
+        assert_eq!(h.metrics.counter(names::SCHED_ROUNDS), 1);
+        assert!(h.metrics.hist(names::ROUND_US).is_none(), "no wall histogram when off");
+    }
+
+    #[test]
+    fn armed_hub_traces_spans_and_times_stages() {
+        let mut h = ObsHub::new();
+        h.set_trace(TraceClock::Logical);
+        h.set_timing(true);
+        let t = h.stage_begin("round");
+        assert!(t.is_some());
+        h.event("step", &[("session", 1)]);
+        h.stage_end(names::ROUND_US, t, &[("tick", 0)]);
+        let trace = h.trace().unwrap();
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace.count("round"), 1);
+        assert_eq!(trace.count("step"), 1);
+        assert_eq!(h.metrics.hist(names::ROUND_US).unwrap().count(), 1);
+    }
+
+    #[test]
+    fn evicted_keeps_cause_breakdown_in_lockstep() {
+        let mut h = ObsHub::new();
+        h.evicted(names::EVICT_ADMISSION);
+        h.evicted(names::EVICT_STEP);
+        h.evicted(names::EVICT_STEP);
+        assert_eq!(h.metrics.counter(names::SCHED_EVICTED), 3);
+        let causes: u64 =
+            names::EVICT_CAUSES.iter().map(|c| h.metrics.counter(c)).sum();
+        assert_eq!(causes, 3);
+    }
+}

@@ -1,0 +1,89 @@
+//! Canonical metric names — the single vocabulary shared by the serving
+//! registry, the Prometheus exposition, the `--stats-json` snapshot, the
+//! hwsim charge export and `docs/OBSERVABILITY.md`.
+//!
+//! Every name is a `&'static str` const so a typo is a compile error, a
+//! rename is a single edit, and simulated (`hwsim`) vs measured (engine)
+//! runs are comparable label-for-label. Naming follows Prometheus
+//! conventions: `_total` for monotone counters, `_us` for microsecond
+//! histograms, bare nouns for gauges.
+
+// -- scheduler counters (the 13 `Counters` fields) -----------------------
+
+pub const SCHED_ROUNDS: &str = "sched_rounds_total";
+pub const SCHED_STEPS: &str = "sched_steps_total";
+pub const SCHED_PREFILLS: &str = "sched_prefills_total";
+pub const SCHED_EVICTED: &str = "sched_evicted_total";
+pub const SCHED_REQUEUED: &str = "sched_requeued_total";
+pub const SCHED_EXHAUSTED: &str = "sched_exhausted_total";
+pub const SCHED_OCC_TOKENS: &str = "sched_occupancy_tokens_total";
+pub const SCHED_OCC_SESSIONS: &str = "sched_occupancy_sessions_total";
+pub const SCHED_SHED: &str = "sched_shed_total";
+pub const SCHED_PANICKED: &str = "sched_panicked_total";
+pub const SCHED_REAPED: &str = "sched_reaped_total";
+pub const SCHED_DEAD_REPLIES: &str = "sched_dead_replies_total";
+/// gauge (running max): deepest waiting queue observed at round assembly
+pub const SCHED_QUEUE_PEAK: &str = "sched_queue_depth_peak";
+
+// -- eviction cause breakdown (sums to [`SCHED_EVICTED`]) ----------------
+
+/// front-item admission could not fit → youngest idle session evicted
+pub const EVICT_ADMISSION: &str = "sched_evicted_admission_total";
+/// mid-wave KV append ran dry → eviction inside the wave exhaustion hook
+pub const EVICT_STEP: &str = "sched_evicted_step_total";
+/// prefill block reserve ran dry → eviction in the prefill retry loop
+pub const EVICT_PREFILL: &str = "sched_evicted_prefill_total";
+/// restoring an evicted session ran dry → eviction in the restore loop
+pub const EVICT_RESTORE: &str = "sched_evicted_restore_total";
+
+pub const EVICT_CAUSES: [&str; 4] =
+    [EVICT_ADMISSION, EVICT_STEP, EVICT_PREFILL, EVICT_RESTORE];
+
+// -- KV pool gauges (published once per serving round) -------------------
+
+pub const KV_PAGES_TOTAL: &str = "kv_pages_total";
+pub const KV_PAGES_FREE: &str = "kv_pages_free";
+/// tokens resident across live sessions
+pub const KV_RESIDENT_TOKENS: &str = "kv_resident_tokens";
+/// allocated slots minus resident tokens: tail-page internal fragmentation
+pub const KV_FRAGMENTATION_TOKENS: &str = "kv_fragmentation_tokens";
+
+// -- wave traffic counters (shared with the hwsim charge model) ----------
+
+/// K/V bytes swept — hwsim's `SimReport::kv_bytes_read` exports under the
+/// SAME name so simulated and measured traffic compare label-for-label
+pub const KV_BYTES_READ: &str = "kv_bytes_read_total";
+pub const WAVE_ROWS: &str = "wave_rows_total";
+pub const WAVE_MACS: &str = "wave_macs_total";
+pub const WAVE_INLINE: &str = "wave_inline_total";
+pub const WAVE_SCATTER: &str = "wave_scatter_total";
+
+// -- hwsim-only charge exports -------------------------------------------
+
+pub const HWSIM_CYCLES: &str = "hwsim_cycles_total";
+pub const HWSIM_ENERGY: &str = "hwsim_energy_total";
+
+// -- per-stage round latency histograms (wall clock, serving only) -------
+
+pub const ROUND_US: &str = "round_us";
+pub const ROUND_ADMIT_US: &str = "round_admit_us";
+pub const ROUND_WAVE_US: &str = "round_wave_us";
+pub const ROUND_PREFILL_US: &str = "round_prefill_us";
+pub const ROUND_REAP_US: &str = "round_reap_us";
+
+// -- queue-wait histograms keyed by session class ------------------------
+
+/// queue wait of prefill-heavy payloads (open/prefill ingestion)
+pub const QUEUE_WAIT_PREFILL_US: &str = "queue_wait_prefill_us";
+/// queue wait of step-only payloads (decode steps, closes)
+pub const QUEUE_WAIT_STEP_US: &str = "queue_wait_step_us";
+
+// -- LUT range telemetry (from `obs::range`, sampled) --------------------
+
+pub const LUT_SAMPLED_CALLS: &str = "lut_range_sampled_calls_total";
+pub const LUT_PASS1_CLAMPED: &str = "lut_pass1_clamped_total";
+pub const LUT_PASS2_CLAMPED: &str = "lut_pass2_clamped_total";
+pub const LUT_DIFF_MIN: &str = "lut_diff_min";
+pub const LUT_DIFF_MAX: &str = "lut_diff_max";
+pub const LUT_DENOM_MIN: &str = "lut_denom_min";
+pub const LUT_DENOM_MAX: &str = "lut_denom_max";

@@ -1,0 +1,173 @@
+//! Kernel-level LUT range telemetry — empirical evidence for the paper's
+//! premise that "ranges of numerators and denominators are stable if
+//! normalization is applied" (arXiv 2111.10770 §III).
+//!
+//! The integer softmax hot loops are bit-exact and shared by every
+//! caller, so the telemetry lives in process-wide relaxed atomics rather
+//! than threading a handle through the kernels. **Disabled cost is one
+//! relaxed load** per softmax call ([`sample_gate`]) — the hot-path
+//! expressions themselves are untouched; when the sampling knob admits a
+//! call, the row is re-scanned *after* the fused pass to derive:
+//!
+//! - pass-1 clamp counts: diffs `m_q − x_q` whose LUT address saturates
+//!   (`d > last` on the unit map, [`crate::softmax::IntMap`] overflow on
+//!   the fixed-point map);
+//! - the observed `m_q − x_q` min/max (numerator exponent range);
+//! - the integer denominator sum per call (denominator range).
+//!
+//! Pass-2 clamps (the `LUT_alpha[x_s] = 0` saturation convention in the
+//! paper) are counted at the single saturated branch of
+//! `SoftmaxRexp::alpha_for` — a rare branch, so the guard load never
+//! sits on the common path. Scope: the **integer** ingestion paths
+//! (`run_i8_with`/`run_i8_int` and the decode sweep); the f32 reference
+//! paths compute their pass-2 reads inline and are not instrumented.
+
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering::Relaxed};
+
+/// 0 = disabled; N = record every Nth pass-1 call.
+static SAMPLE_EVERY: AtomicU32 = AtomicU32::new(0);
+static CALLS: AtomicU64 = AtomicU64::new(0);
+static SAMPLED: AtomicU64 = AtomicU64::new(0);
+static P1_CLAMPED: AtomicU64 = AtomicU64::new(0);
+static P2_CLAMPED: AtomicU64 = AtomicU64::new(0);
+static DIFF_MIN: AtomicI64 = AtomicI64::new(i64::MAX);
+static DIFF_MAX: AtomicI64 = AtomicI64::new(i64::MIN);
+static DENOM_MIN: AtomicI64 = AtomicI64::new(i64::MAX);
+static DENOM_MAX: AtomicI64 = AtomicI64::new(i64::MIN);
+
+/// Arm (or with 0, disarm) the sampling knob: record every `n`-th
+/// pass-1 call. Resets nothing — pair with [`reset`] for a fresh window.
+pub fn set_sampling(n: u32) {
+    SAMPLE_EVERY.store(n, Relaxed);
+}
+
+/// `true` when any telemetry is armed (guards the rare-branch pass-2
+/// counter).
+#[inline]
+pub fn enabled() -> bool {
+    SAMPLE_EVERY.load(Relaxed) != 0
+}
+
+/// The per-call gate: one relaxed load when disabled; when armed, counts
+/// the call and admits every `n`-th one to the (re-scanning) recorder.
+#[inline]
+pub fn sample_gate() -> bool {
+    let n = SAMPLE_EVERY.load(Relaxed);
+    if n == 0 {
+        return false;
+    }
+    CALLS.fetch_add(1, Relaxed) % n as u64 == 0
+}
+
+/// Record one sampled pass-1 call (see module docs for the fields).
+pub fn record_pass1(clamped: u64, diff_min: i64, diff_max: i64, denom: i64) {
+    SAMPLED.fetch_add(1, Relaxed);
+    P1_CLAMPED.fetch_add(clamped, Relaxed);
+    DIFF_MIN.fetch_min(diff_min, Relaxed);
+    DIFF_MAX.fetch_max(diff_max, Relaxed);
+    DENOM_MIN.fetch_min(denom, Relaxed);
+    DENOM_MAX.fetch_max(denom, Relaxed);
+}
+
+/// Count one pass-2 (alpha-table) saturated lookup. Call only under
+/// [`enabled`].
+pub fn note_pass2_clamp() {
+    P2_CLAMPED.fetch_add(1, Relaxed);
+}
+
+/// Zero the window (counters, ranges, call counter). The sampling knob
+/// itself is left as-is.
+pub fn reset() {
+    CALLS.store(0, Relaxed);
+    SAMPLED.store(0, Relaxed);
+    P1_CLAMPED.store(0, Relaxed);
+    P2_CLAMPED.store(0, Relaxed);
+    DIFF_MIN.store(i64::MAX, Relaxed);
+    DIFF_MAX.store(i64::MIN, Relaxed);
+    DENOM_MIN.store(i64::MAX, Relaxed);
+    DENOM_MAX.store(i64::MIN, Relaxed);
+}
+
+/// A coherent read of the window. `diff`/`denom` are `None` until a call
+/// has been sampled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RangeSnapshot {
+    pub sampled_calls: u64,
+    pub pass1_clamped: u64,
+    pub pass2_clamped: u64,
+    pub diff: Option<(i64, i64)>,
+    pub denom: Option<(i64, i64)>,
+}
+
+pub fn snapshot() -> RangeSnapshot {
+    let sampled = SAMPLED.load(Relaxed);
+    let span = |lo: &AtomicI64, hi: &AtomicI64| {
+        let (lo, hi) = (lo.load(Relaxed), hi.load(Relaxed));
+        (lo <= hi).then_some((lo, hi))
+    };
+    RangeSnapshot {
+        sampled_calls: sampled,
+        pass1_clamped: P1_CLAMPED.load(Relaxed),
+        pass2_clamped: P2_CLAMPED.load(Relaxed),
+        diff: span(&DIFF_MIN, &DIFF_MAX),
+        denom: span(&DENOM_MIN, &DENOM_MAX),
+    }
+}
+
+/// Publish the window into a registry under the `names::LUT_*` series.
+pub fn publish(reg: &mut crate::obs::MetricsRegistry) {
+    use crate::obs::names;
+    let s = snapshot();
+    reg.add(names::LUT_SAMPLED_CALLS, s.sampled_calls);
+    reg.add(names::LUT_PASS1_CLAMPED, s.pass1_clamped);
+    reg.add(names::LUT_PASS2_CLAMPED, s.pass2_clamped);
+    if let Some((lo, hi)) = s.diff {
+        reg.gauge_set(names::LUT_DIFF_MIN, lo);
+        reg.gauge_set(names::LUT_DIFF_MAX, hi);
+    }
+    if let Some((lo, hi)) = s.denom {
+        reg.gauge_set(names::LUT_DENOM_MIN, lo);
+        reg.gauge_set(names::LUT_DENOM_MAX, hi);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the statics are process-wide and other lib tests drive instrumented
+    // kernels concurrently, so while armed this test asserts only lower
+    // bounds / range containment — exact-count semantics are pinned by
+    // the single-process integration suite (`integration_obs.rs`)
+    #[test]
+    fn gate_sampling_and_snapshot_roundtrip() {
+        assert!(!enabled(), "lib tests must start with telemetry disarmed");
+        assert!(!sample_gate(), "disabled gate admits nothing");
+
+        set_sampling(1);
+        reset();
+        assert!(enabled());
+        let admitted = (0..6).filter(|_| sample_gate()).count();
+        assert_eq!(admitted, 6, "n=1 admits every call");
+
+        record_pass1(2, 0, 7, 100);
+        record_pass1(0, 1, 3, 40);
+        note_pass2_clamp();
+        let s = snapshot();
+        assert!(s.sampled_calls >= 2, "{s:?}");
+        assert!(s.pass1_clamped >= 2, "{s:?}");
+        assert!(s.pass2_clamped >= 1, "{s:?}");
+        let (dlo, dhi) = s.diff.expect("diff range recorded");
+        assert!(dlo <= 0 && dhi >= 7, "{s:?}");
+        let (nlo, nhi) = s.denom.expect("denom range recorded");
+        assert!(nlo <= 40 && nhi >= 100, "{s:?}");
+
+        let mut reg = crate::obs::MetricsRegistry::new();
+        publish(&mut reg);
+        assert!(reg.counter(crate::obs::names::LUT_PASS1_CLAMPED) >= 2);
+        assert!(reg.gauge(crate::obs::names::LUT_DENOM_MAX) >= 100);
+
+        set_sampling(0);
+        reset();
+    }
+}

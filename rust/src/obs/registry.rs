@@ -1,0 +1,194 @@
+//! Unified metrics registry: counters, gauges and histograms under the
+//! stable names of [`crate::obs::names`], with a Prometheus text
+//! exposition and a JSON snapshot (`serve --stats-json`).
+//!
+//! Single-writer by design (the engine thread owns it behind the
+//! pipeline's `RefCell`); readers get value snapshots. Maps are keyed by
+//! `&'static str` from `names` so registration is implicit — the first
+//! increment creates the series — and iteration order (and therefore
+//! every exported byte) is deterministic via `BTreeMap`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::config::Json;
+use crate::obs::Histogram;
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, i64>,
+    hists: BTreeMap<&'static str, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    // -- writers ---------------------------------------------------------
+
+    pub fn inc(&mut self, name: &'static str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &'static str, n: u64) {
+        *self.counters.entry(name).or_insert(0) += n;
+    }
+
+    pub fn gauge_set(&mut self, name: &'static str, v: i64) {
+        self.gauges.insert(name, v);
+    }
+
+    /// Running-max gauge (e.g. peak queue depth).
+    pub fn gauge_max(&mut self, name: &'static str, v: i64) {
+        let g = self.gauges.entry(name).or_insert(v);
+        *g = (*g).max(v);
+    }
+
+    pub fn observe_us(&mut self, name: &'static str, us: u64) {
+        self.hists.entry(name).or_default().record_us(us);
+    }
+
+    // -- readers ---------------------------------------------------------
+
+    /// Counter value; an untouched counter reads 0.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value; an untouched gauge reads 0.
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    // -- exports ---------------------------------------------------------
+
+    /// JSON snapshot: `{"counters": {...}, "gauges": {...},
+    /// "histograms": {name: {count, sum_us, max_us, p50/p90/p99}}}`.
+    /// Deterministic byte-for-byte given equal contents (BTreeMap order).
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(&k, &v)| (k.to_string(), Json::Num(v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .iter()
+            .map(|(&k, &v)| (k.to_string(), Json::Num(v as f64)))
+            .collect();
+        let hists: BTreeMap<String, Json> =
+            self.hists.iter().map(|(&k, h)| (k.to_string(), h.to_json())).collect();
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("gauges".to_string(), Json::Obj(gauges));
+        top.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(top)
+    }
+
+    /// Prometheus text exposition (version 0.0.4): counters and gauges as
+    /// single samples, histograms as `_count`/`_sum` plus quantile
+    /// samples (summary-style — log2 buckets don't map onto `le` bounds
+    /// losslessly, and the quantiles are what the dashboards read).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "# TYPE lutmax_{name} counter");
+            let _ = writeln!(out, "lutmax_{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "# TYPE lutmax_{name} gauge");
+            let _ = writeln!(out, "lutmax_{name} {v}");
+        }
+        for (name, h) in &self.hists {
+            let _ = writeln!(out, "# TYPE lutmax_{name} summary");
+            for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                let _ = writeln!(
+                    out,
+                    "lutmax_{name}{{quantile=\"{label}\"}} {}",
+                    h.percentile_us(q)
+                );
+            }
+            let _ = writeln!(out, "lutmax_{name}_sum {}", h.sum_us());
+            let _ = writeln!(out, "lutmax_{name}_count {}", h.count());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::names;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let mut r = MetricsRegistry::new();
+        r.inc(names::SCHED_ROUNDS);
+        r.add(names::SCHED_ROUNDS, 2);
+        assert_eq!(r.counter(names::SCHED_ROUNDS), 3);
+        assert_eq!(r.counter(names::SCHED_SHED), 0, "untouched counter reads 0");
+        r.gauge_set(names::KV_PAGES_FREE, 5);
+        r.gauge_set(names::KV_PAGES_FREE, 3);
+        assert_eq!(r.gauge(names::KV_PAGES_FREE), 3, "gauge_set overwrites");
+        r.gauge_max(names::SCHED_QUEUE_PEAK, 4);
+        r.gauge_max(names::SCHED_QUEUE_PEAK, 2);
+        assert_eq!(r.gauge(names::SCHED_QUEUE_PEAK), 4, "gauge_max keeps the max");
+    }
+
+    #[test]
+    fn json_snapshot_is_deterministic() {
+        let build = || {
+            let mut r = MetricsRegistry::new();
+            // insertion order differs between the two builds; bytes must not
+            r.inc(names::SCHED_STEPS);
+            r.inc(names::SCHED_ROUNDS);
+            r.observe_us(names::ROUND_US, 120);
+            r.gauge_set(names::KV_PAGES_FREE, 7);
+            r
+        };
+        let build_rev = || {
+            let mut r = MetricsRegistry::new();
+            r.gauge_set(names::KV_PAGES_FREE, 7);
+            r.observe_us(names::ROUND_US, 120);
+            r.inc(names::SCHED_ROUNDS);
+            r.inc(names::SCHED_STEPS);
+            r
+        };
+        let a = build().to_json().to_string_pretty();
+        let b = build_rev().to_json().to_string_pretty();
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(
+            parsed.get("counters").and_then(|c| c.get(names::SCHED_ROUNDS)).and_then(Json::as_i64),
+            Some(1)
+        );
+        assert_eq!(
+            parsed
+                .get("histograms")
+                .and_then(|h| h.get(names::ROUND_US))
+                .and_then(|h| h.get("count"))
+                .and_then(Json::as_i64),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let mut r = MetricsRegistry::new();
+        r.add(names::KV_BYTES_READ, 1024);
+        r.gauge_set(names::KV_PAGES_FREE, 9);
+        r.observe_us(names::ROUND_US, 50);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE lutmax_kv_bytes_read_total counter"), "{text}");
+        assert!(text.contains("lutmax_kv_bytes_read_total 1024"), "{text}");
+        assert!(text.contains("lutmax_kv_pages_free 9"), "{text}");
+        assert!(text.contains("lutmax_round_us{quantile=\"0.99\"} 50"), "{text}");
+        assert!(text.contains("lutmax_round_us_count 1"), "{text}");
+    }
+}

@@ -1,0 +1,235 @@
+//! Round-timeline trace sink with a chrome://tracing `trace_event`
+//! JSON exporter.
+//!
+//! Spans nest (`round` → `admit`/`wave`/`prefill`/`reap`) via an explicit
+//! begin/end stack and export as complete events (`"ph": "X"`, ts + dur);
+//! point happenings (`step`, `evict`, `restore`, `fault`, `shed`) export
+//! as instant events (`"ph": "i"`). Load the file at `chrome://tracing`
+//! or <https://ui.perfetto.dev> — see `docs/OBSERVABILITY.md`.
+//!
+//! # Clocks
+//!
+//! [`TraceClock::Wall`] stamps microseconds since the sink was armed —
+//! the serving mode. [`TraceClock::Logical`] stamps a monotone tick that
+//! advances once per stamp and never touches `std::time`, so a replayed
+//! deterministic workload produces **byte-identical** trace JSON — the
+//! conformance suites assert exact event sequences on it.
+
+use crate::config::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceClock {
+    /// microseconds since the sink was created (serving timelines)
+    Wall,
+    /// clock-free monotone tick per stamp (deterministic replay)
+    Logical,
+}
+
+#[derive(Clone, Debug)]
+struct TraceEvent {
+    name: &'static str,
+    /// 'X' complete (ts + dur) or 'i' instant
+    ph: char,
+    ts: u64,
+    dur: u64,
+    args: Vec<(&'static str, i64)>,
+}
+
+/// Accumulates events in memory; the engine drains it into JSON at
+/// snapshot time. Single-writer (engine thread), like the registry.
+#[derive(Debug)]
+pub struct TraceSink {
+    clock: TraceClock,
+    t0: std::time::Instant,
+    tick: u64,
+    events: Vec<TraceEvent>,
+    stack: Vec<(&'static str, u64)>,
+}
+
+impl TraceSink {
+    pub fn new(clock: TraceClock) -> Self {
+        Self {
+            clock,
+            t0: std::time::Instant::now(),
+            tick: 0,
+            events: Vec::new(),
+            stack: Vec::new(),
+        }
+    }
+
+    pub fn clock(&self) -> TraceClock {
+        self.clock
+    }
+
+    fn now(&mut self) -> u64 {
+        match self.clock {
+            TraceClock::Wall => self.t0.elapsed().as_micros() as u64,
+            TraceClock::Logical => {
+                self.tick += 1;
+                self.tick
+            }
+        }
+    }
+
+    /// Open a nested span. Must be balanced by [`TraceSink::end`].
+    pub fn begin(&mut self, name: &'static str) {
+        let ts = self.now();
+        self.stack.push((name, ts));
+    }
+
+    /// Close the innermost open span, attaching `args` (counts are
+    /// usually only known at span end).
+    pub fn end(&mut self, args: &[(&'static str, i64)]) {
+        let ts = self.now();
+        let (name, start) = self.stack.pop().expect("TraceSink::end without begin");
+        self.events.push(TraceEvent {
+            name,
+            ph: 'X',
+            ts: start,
+            dur: ts.saturating_sub(start),
+            args: args.to_vec(),
+        });
+    }
+
+    /// Record a point event (step/evict/restore/fault/shed markers).
+    pub fn instant(&mut self, name: &'static str, args: &[(&'static str, i64)]) {
+        let ts = self.now();
+        self.events.push(TraceEvent { name, ph: 'i', ts, dur: 0, args: args.to_vec() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// How many events carry `name` — the fault-reconciliation tests
+    /// count `"fault"` markers against typed replies.
+    pub fn count(&self, name: &str) -> usize {
+        self.events.iter().filter(|e| e.name == name).count()
+    }
+
+    /// Drop all recorded events, keeping the clock mode (and, in Wall
+    /// mode, the epoch). Benches use this to bound memory per iteration.
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.stack.clear();
+    }
+
+    /// chrome://tracing `trace_event` JSON. Every event carries fixed
+    /// `pid`/`tid` 1 (single engine thread); array order is record order,
+    /// `BTreeMap`-backed objects make the bytes deterministic.
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(e.name.to_string()));
+                m.insert("ph".to_string(), Json::Str(e.ph.to_string()));
+                m.insert("ts".to_string(), Json::Num(e.ts as f64));
+                if e.ph == 'X' {
+                    m.insert("dur".to_string(), Json::Num(e.dur as f64));
+                } else {
+                    // instant scope: thread
+                    m.insert("s".to_string(), Json::Str("t".to_string()));
+                }
+                m.insert("pid".to_string(), Json::Num(1.0));
+                m.insert("tid".to_string(), Json::Num(1.0));
+                if !e.args.is_empty() {
+                    let args: std::collections::BTreeMap<String, Json> = e
+                        .args
+                        .iter()
+                        .map(|&(k, v)| (k.to_string(), Json::Num(v as f64)))
+                        .collect();
+                    m.insert("args".to_string(), Json::Obj(args));
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = std::collections::BTreeMap::new();
+        top.insert("traceEvents".to_string(), Json::Arr(events));
+        top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        Json::Obj(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record_fixture(t: &mut TraceSink) {
+        t.begin("round");
+        t.begin("admit");
+        t.instant("evict", &[("session", 3), ("pages", 2)]);
+        t.end(&[("admitted", 4)]);
+        t.begin("wave");
+        t.instant("step", &[("session", 1), ("pages", 2), ("waited_rounds", 0)]);
+        t.end(&[("rows", 8)]);
+        t.end(&[("tick", 1)]);
+    }
+
+    #[test]
+    fn logical_clock_is_deterministic_and_byte_identical() {
+        let mut a = TraceSink::new(TraceClock::Logical);
+        let mut b = TraceSink::new(TraceClock::Logical);
+        record_fixture(&mut a);
+        record_fixture(&mut b);
+        let ja = a.to_json().to_string_pretty();
+        let jb = b.to_json().to_string_pretty();
+        assert_eq!(ja, jb);
+        assert_eq!(a.len(), 5);
+        assert_eq!(a.count("step"), 1);
+        assert_eq!(a.count("evict"), 1);
+    }
+
+    #[test]
+    fn export_is_valid_chrome_trace_shape() {
+        let mut t = TraceSink::new(TraceClock::Logical);
+        record_fixture(&mut t);
+        let s = t.to_json().to_string_pretty();
+        let parsed = Json::parse(&s).unwrap();
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 5);
+        for e in events {
+            assert!(e.get("name").and_then(Json::as_str).is_some());
+            let ph = e.get("ph").and_then(Json::as_str).unwrap();
+            assert!(ph == "X" || ph == "i", "unexpected phase {ph}");
+            assert!(e.get("ts").and_then(Json::as_i64).is_some());
+            assert_eq!(e.get("pid").and_then(Json::as_i64), Some(1));
+            assert_eq!(e.get("tid").and_then(Json::as_i64), Some(1));
+            if ph == "X" {
+                assert!(e.get("dur").and_then(Json::as_i64).is_some());
+            }
+        }
+        // nesting: the admit span sits inside the round span
+        let span = |name: &str| {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .unwrap()
+        };
+        let (r_ts, r_dur) = (
+            span("round").get("ts").and_then(Json::as_i64).unwrap(),
+            span("round").get("dur").and_then(Json::as_i64).unwrap(),
+        );
+        let (a_ts, a_dur) = (
+            span("admit").get("ts").and_then(Json::as_i64).unwrap(),
+            span("admit").get("dur").and_then(Json::as_i64).unwrap(),
+        );
+        assert!(r_ts <= a_ts && a_ts + a_dur <= r_ts + r_dur, "admit must nest in round");
+    }
+
+    #[test]
+    fn wall_clock_monotone_and_clear_keeps_mode() {
+        let mut t = TraceSink::new(TraceClock::Wall);
+        t.begin("round");
+        t.end(&[]);
+        assert_eq!(t.len(), 1);
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.clock(), TraceClock::Wall);
+    }
+}

@@ -211,6 +211,36 @@ impl IntMap {
     pub(crate) fn last(&self) -> i32 {
         self.last as i32
     }
+
+    /// Would diff `d` saturate the top LUT address? Telemetry only —
+    /// the hot path's [`Self::index`] `min` never branches on this.
+    #[inline]
+    pub(crate) fn clamps(&self, d: i32) -> bool {
+        (d as i64 * self.mult) >> self.shift > self.last
+    }
+}
+
+/// Sampled LUT range telemetry (see [`crate::obs::range`]): when the
+/// sampling gate admits a call, the row's diffs are re-scanned AFTER the
+/// fused pass — the branchless hot loops above stay bit-for-bit
+/// untouched, telemetry on or off.
+#[cold]
+fn record_pass1_range(
+    diffs: impl Iterator<Item = i32>,
+    saturates: impl Fn(i32) -> bool,
+    denom: i32,
+) {
+    let (mut clamped, mut lo, mut hi) = (0u64, i64::MAX, i64::MIN);
+    for d in diffs {
+        if saturates(d) {
+            clamped += 1;
+        }
+        lo = lo.min(d as i64);
+        hi = hi.max(d as i64);
+    }
+    if lo <= hi {
+        crate::obs::range::record_pass1(clamped, lo, hi, denom as i64);
+    }
 }
 
 /// Integer pass 1 over an i8 row, aligned (unit-map) variant: LUT address
@@ -237,6 +267,9 @@ pub(crate) fn pass1_i8_unit(row: &[i8], m: i32, last: i32, table: &[i32], idx: &
         *slot = k;
         s += table[k as usize];
     }
+    if crate::obs::range::sample_gate() {
+        record_pass1_range(row.iter().map(|&v| m - v as i32), |d| d > last, s);
+    }
     s
 }
 
@@ -259,6 +292,9 @@ pub(crate) fn pass1_i8_mapped(row: &[i8], m: i32, map: IntMap, table: &[i32], id
         *slot = k;
         s += table[k as usize];
     }
+    if crate::obs::range::sample_gate() {
+        record_pass1_range(row.iter().map(|&v| m - v as i32), |d| map.clamps(d), s);
+    }
     s
 }
 
@@ -280,6 +316,9 @@ pub(crate) fn pass1_scores_mapped(row: &[i32], m: i32, map: IntMap, table: &[i32
         let k = map.index(m - v);
         *slot = k;
         s += table[k as usize];
+    }
+    if crate::obs::range::sample_gate() {
+        record_pass1_range(row.iter().copied().map(|v| m - v), |d| map.clamps(d), s);
     }
     s
 }
@@ -518,6 +557,18 @@ mod tests {
             assert_eq!(m.index(d), d.min(7));
         }
         assert_eq!(m.last(), 7);
+    }
+
+    #[test]
+    fn int_map_clamps_flags_exactly_the_saturating_diffs() {
+        let m = IntMap::new(1.0, 7);
+        for d in 0..32 {
+            assert_eq!(m.clamps(d), d > 7, "unit map d={d}");
+        }
+        let m = IntMap::new(0.5, 4);
+        assert!(!m.clamps(8), "raw index 4 == last is not a clamp");
+        assert!(!m.clamps(9), "trunc(4.5) == last is not a clamp");
+        assert!(m.clamps(10), "raw index 5 saturates");
     }
 
     #[test]

@@ -85,6 +85,11 @@ impl SoftmaxRexp {
         let j = (s >> self.w) as usize;
         let alpha = &self.tables.alpha;
         if j >= alpha.len() {
+            // rare branch: the telemetry guard load never sits on the
+            // in-table path
+            if crate::obs::range::enabled() {
+                crate::obs::range::note_pass2_clamp();
+            }
             0
         } else {
             alpha[j]

@@ -309,6 +309,7 @@ fn attention_route_serves_without_artifacts() {
         batch_timeout_us: 500,
         workers: 2,
         queue_depth: 64,
+        trace: false,
     };
     let routes = RouteTable {
         attention: Some("attn:rexp:uint8".into()),
@@ -366,6 +367,7 @@ fn attention_route_rejects_malformed_payloads_individually() {
         batch_timeout_us: 500,
         workers: 1,
         queue_depth: 64,
+        trace: false,
     };
     let routes = RouteTable {
         attention: Some("attn:lut2d:uint8".into()),

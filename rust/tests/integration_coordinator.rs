@@ -23,6 +23,7 @@ fn server_cfg() -> ServerConfig {
         batch_timeout_us: 500,
         workers: 1,
         queue_depth: 64,
+        trace: false,
     }
 }
 
@@ -142,6 +143,7 @@ fn cpu_softmax_route_serves_without_artifacts_bit_exactly() {
         batch_timeout_us: 500,
         workers: 2,
         queue_depth: 64,
+        trace: false,
     };
     let routes = RouteTable {
         softmax: Some("cpu:rexp:uint8".into()),
@@ -191,6 +193,7 @@ fn cpu_softmax_route_rejects_malformed_payload_individually() {
         batch_timeout_us: 500,
         workers: 1,
         queue_depth: 64,
+        trace: false,
     };
     let routes = RouteTable {
         softmax: Some("cpu:lut2d:uint8".into()),
@@ -225,6 +228,7 @@ fn submit_backpressure_never_overshoots_queue_depth() {
         batch_timeout_us: 60_000_000, // park everything in the batcher
         workers: 1,
         queue_depth: DEPTH,
+        trace: false,
     };
     // no softmax route needed: queued requests hold their slot either way
     let c = Coordinator::start(cfg, RouteTable::default()).unwrap();

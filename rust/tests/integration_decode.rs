@@ -221,6 +221,7 @@ fn decode_route_streams_multi_session_traffic() {
         batch_timeout_us: 500,
         workers: 2,
         queue_depth: 256,
+        trace: false,
     };
     let routes = RouteTable {
         decode: Some("decode:rexp:uint8:g2".into()),

@@ -1,0 +1,230 @@
+//! Observability invariants through the serving pipeline:
+//!
+//! * **deterministic replay**: with a `TraceClock::Logical` sink armed,
+//!   replaying the identical randomized schedule on a fresh pipeline
+//!   produces byte-identical chrome://tracing JSON — the trace records
+//!   the schedule, it never steers it.
+//! * **fault accounting**: every `fault` trace marker reconciles 1:1
+//!   with a typed degradation reply (`Reply::Shed` for injected
+//!   scheduler-deadline overruns, `Reply::Error` for contained worker
+//!   panics) and with the `shed`/`panicked` counters.
+//! * **registry reconciliation**: after a faulted overcommit soak, the
+//!   `--stats-json` projection (`Counters::from_stats_json`) equals the
+//!   live `sched_counters()` snapshot field-for-field, the summary
+//!   lines agree byte-for-byte, and the per-cause eviction breakdown
+//!   sums exactly to the eviction total.
+//! * **observer effect**: arming a Wall-clock trace plus stage timing
+//!   leaves every reply bit-identical to the untraced run.
+
+use lutmax::config::Json;
+use lutmax::coordinator::{Counters, DecodePipeline, Payload, Reply, SchedConfig};
+use lutmax::faults::{silence_injected_panics, FaultPlan, FaultSite};
+use lutmax::obs::{names, TraceClock};
+use lutmax::runtime::Tensor;
+use lutmax::testkit::Rng;
+use lutmax::workload;
+
+/// A session event in the randomized schedule.
+enum Ev {
+    Prefill(Tensor, Tensor, Tensor),
+    Step(Tensor, Tensor, Tensor),
+}
+
+/// Deterministic randomized traffic: `n` sessions, each an optional
+/// prompt chunk then a handful of steps, interleaved across many
+/// `run_batch` calls, closed in shuffled order. Same seed ⇒ same
+/// payload bytes AND the same batch boundaries, on any pipeline.
+fn soak(p: &DecodePipeline, seed: u64, n: usize) -> Vec<Vec<Reply>> {
+    let (h, g, d) = (4usize, 2usize, 8usize);
+    let mut rng = Rng::new(seed);
+    let traces: Vec<Vec<Ev>> = (0..n)
+        .map(|_| {
+            let mut tr = Vec::new();
+            let tokens = rng.usize(8, 16);
+            let chunk = rng.usize(0, 3);
+            if chunk > 0 {
+                let (cq, ck, cv) = workload::decode_prefill_chunk(&mut rng, chunk, h, g, d, 1.0);
+                tr.push(Ev::Prefill(cq, ck, cv));
+            }
+            for _ in chunk..tokens {
+                let (sq, sk, sv) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+                tr.push(Ev::Step(sq, sk, sv));
+            }
+            tr
+        })
+        .collect();
+
+    let opens: Vec<Payload> = (0..n).map(|_| Payload::DecodeOpen).collect();
+    let refs: Vec<&Payload> = opens.iter().collect();
+    let ids: Vec<u64> = p
+        .run_batch(&refs)
+        .into_iter()
+        .map(|r| match r {
+            Reply::Session(id) => id,
+            other => panic!("unexpected open reply {other:?}"),
+        })
+        .collect();
+
+    let mut cursors = vec![0usize; n];
+    let mut replies: Vec<Vec<Reply>> = vec![Vec::new(); n];
+    while (0..n).any(|si| cursors[si] < traces[si].len()) {
+        let mut payloads: Vec<Payload> = Vec::new();
+        let mut owner: Vec<usize> = Vec::new();
+        for _ in 0..rng.usize(1, 8) {
+            let open: Vec<usize> = (0..n).filter(|&si| cursors[si] < traces[si].len()).collect();
+            if open.is_empty() {
+                break;
+            }
+            let si = *rng.choice(&open);
+            let ev = &traces[si][cursors[si]];
+            cursors[si] += 1;
+            payloads.push(match ev {
+                Ev::Prefill(q, k, v) => Payload::DecodePrefill {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+                Ev::Step(q, k, v) => Payload::DecodeStep {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+            });
+            owner.push(si);
+        }
+        let refs: Vec<&Payload> = payloads.iter().collect();
+        for (r, &si) in p.run_batch(&refs).into_iter().zip(&owner) {
+            replies[si].push(r);
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        order.swap(i, rng.usize(0, i));
+    }
+    let closes: Vec<Payload> = order.iter().map(|&si| Payload::DecodeClose(ids[si])).collect();
+    let refs: Vec<&Payload> = closes.iter().collect();
+    for (r, &si) in p.run_batch(&refs).into_iter().zip(&order) {
+        replies[si].push(r);
+    }
+    replies
+}
+
+/// Two fresh pipelines on the same route, each with a Logical-clock
+/// sink, driven with the identical schedule: replies match and the
+/// exported chrome://tracing JSON is **byte-identical** — the Logical
+/// clock is a pure tick counter, no wall time leaks into the trace.
+#[test]
+fn logical_trace_replays_byte_identical() {
+    let run = || {
+        let p = DecodePipeline::load("decode:rexp:uint8:g2:p8", 3).unwrap();
+        p.set_trace(TraceClock::Logical);
+        let replies = soak(&p, 601, 5);
+        let json = p.trace_json().expect("sink armed").to_string_pretty();
+        let (steps, rounds) = (p.trace_event_count("step"), p.trace_event_count("round"));
+        (format!("{replies:?}"), json, steps, rounds)
+    };
+    let (r1, j1, steps, rounds) = run();
+    let (r2, j2, _, _) = run();
+    assert!(steps > 0, "per-session step markers must be recorded");
+    assert!(rounds > 0, "round spans must be recorded");
+    assert_eq!(r1, r2, "replies must replay identically");
+    assert_eq!(j1, j2, "Logical-clock trace JSON must be byte-identical across replays");
+    // the export is loadable trace_event JSON: a non-empty traceEvents array
+    let parsed = Json::parse(&j1).unwrap();
+    let events = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty());
+}
+
+/// A plan arming ONLY the two sites whose faults surface as typed
+/// replies (worker panics → `Reply::Error`, injected deadline overruns
+/// → `Reply::Shed`): every `fault` trace marker is exactly one typed
+/// reply, and both reconcile with the `panicked`/`shed` counters.
+/// Organic sheds are off (default `SchedConfig`: no deadline, unbounded
+/// queue), so the typed replies here are all injection-caused.
+#[test]
+fn fault_markers_reconcile_one_to_one_with_typed_replies() {
+    silence_injected_panics();
+    let p = DecodePipeline::load("decode:rexp:uint8:g2:p8", 3).unwrap();
+    p.set_fault_plan(
+        FaultPlan::none()
+            .with_seed(0xFA17_0B5)
+            .with(FaultSite::WorkerPanic, 6)
+            .with(FaultSite::SchedDeadline, 5),
+    );
+    p.set_trace(TraceClock::Logical);
+    let replies = soak(&p, 607, 8);
+
+    let (mut n_shed, mut n_err) = (0u64, 0u64);
+    for r in replies.iter().flatten() {
+        match r {
+            Reply::Shed { .. } => n_shed += 1,
+            Reply::Error(_) => n_err += 1,
+            _ => {}
+        }
+    }
+    assert!(n_shed + n_err > 0, "a 1-in-5 / 1-in-6 plan over ~90 events must fire");
+    let c = p.sched_counters();
+    assert_eq!(c.shed, n_shed, "shed counter vs Shed replies");
+    assert_eq!(c.panicked, n_err, "panicked counter vs Error replies");
+    assert_eq!(
+        p.trace_event_count("fault") as u64,
+        n_shed + n_err,
+        "every fault trace marker is exactly one typed reply"
+    );
+}
+
+/// After a faulted overcommit soak (`:f7` route, 12 sessions against a
+/// 4-page arena), the `--stats-json` projection rebuilt from the
+/// registry snapshot equals the live counters, the summary lines agree
+/// byte-for-byte, and the per-cause eviction breakdown sums exactly to
+/// the eviction total (the `ObsHub::evicted` lockstep invariant).
+#[test]
+fn stats_json_projection_reconciles_after_faulted_overcommit() {
+    silence_injected_panics();
+    let p = DecodePipeline::load("decode:rexp:uint8:g2:p4:f7", 3).unwrap();
+    p.set_sched_config(SchedConfig {
+        max_batch_total_tokens: 48,
+        max_batch_prefill_tokens: 6,
+        waiting_served_ratio: 1.2,
+        max_waiting_tokens: 12,
+        deadline_rounds: 8,
+        ..SchedConfig::default()
+    });
+    soak(&p, 613, 12);
+
+    let live = p.sched_counters();
+    let stats = p.metrics_json();
+    let snap = Counters::from_stats_json(&stats).expect("well-formed stats snapshot");
+    assert_eq!(snap, live, "--stats-json projection vs live counters");
+    assert_eq!(snap.summary(), live.summary(), "summary lines agree byte-for-byte");
+
+    let counters = stats.get("counters").expect("counters object");
+    let read = |name: &str| counters.get(name).and_then(Json::as_i64).unwrap_or(0) as u64;
+    let causes: u64 = names::EVICT_CAUSES.iter().map(|c| read(c)).sum();
+    assert!(live.evicted > 0, "a 12-session soak over a 4-page arena must evict");
+    assert_eq!(causes, live.evicted, "eviction-cause breakdown must sum to the total");
+
+    // the Prometheus exposition carries the same series names
+    let prom = p.metrics_prometheus();
+    assert!(prom.contains(names::SCHED_ROUNDS));
+    assert!(prom.contains(names::KV_PAGES_FREE));
+}
+
+/// The observer effect bound: a pipeline with a Wall-clock sink and
+/// stage timing armed replies bit-identically to an unobserved one on
+/// the same schedule — observation reads the rounds, it never steers
+/// admission, eviction, or the kernels.
+#[test]
+fn tracing_never_alters_reply_bits() {
+    let base = DecodePipeline::load("decode:rexp:uint8:g2:p8", 3).unwrap();
+    let traced = DecodePipeline::load("decode:rexp:uint8:g2:p8", 3).unwrap();
+    traced.set_trace(TraceClock::Wall);
+    traced.set_stage_timing(true);
+    let a = soak(&base, 619, 6);
+    let b = soak(&traced, 619, 6);
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "observation must not steer the schedule");
+    assert!(traced.trace_event_count("round") > 0, "the traced run recorded its rounds");
+    assert!(base.trace_json().is_none(), "no sink armed on the baseline");
+}

@@ -56,6 +56,7 @@ required_labels=(
     "decode_sched/s16/p8/evict"
     "decode_sched_fault/s8/p32/f7"
     "decode_sched_fault/s16/p8/f7"
+    "decode_sched_traced/s8/p32"
 )
 missing=0
 for label in "${required_labels[@]}"; do
