@@ -26,6 +26,13 @@
 //!                         (h8/g2/L128) under a stable semantic label —
 //!                         compare against decode/h8/g8/L128 across
 //!                         commits (GQA reads 1/4 the K/V bytes)
+//!   decode_split/h<H>/g<G>/L<L>  long-context streaming decode through
+//!                         the prefix-split partial-softmax path
+//!                         (step_split, spans from the serving policy at
+//!                         split_min_tokens 128) — h8/g1 is the MQA case
+//!                         where the split is the only fan-out axis,
+//!                         h8/g8 prices the span merge where group
+//!                         fan-out already exists
 //!   decode_batch/s<S>/h<H>/L<L>  S concurrent sessions, every serving
 //!                         round ONE DecodeBatch wave of S×H head rows
 //!   decode_batch_serial/s<S>/h<H>/L<L>  the same fleet as S per-session
@@ -55,7 +62,7 @@
 use std::sync::Arc;
 
 use lutmax::attention::{
-    AttnMask, AttnScratch, AttnShape, ComposedAttention, DecodeAttention, DecodeBatch,
+    spans_for, AttnMask, AttnScratch, AttnShape, ComposedAttention, DecodeAttention, DecodeBatch,
     FusedAttention, QuantTensor, SweepOrder, DECODE_AFFINE,
 };
 use lutmax::benchkit::{flush_json, Bench, Suite};
@@ -253,6 +260,49 @@ fn main() {
     suite.ratio("decode_gqa_vs_mha", "decode/h8/g8/L128");
     suite.ratio("decode_groupmajor/h8/g2/L128", "decode/h8/g2/L128");
     suite.ratio("decode_groupmajor/h8/g8/L128", "decode/h8/g8/L128");
+
+    // long-context prefix-split decode: the same streaming shape at
+    // L512 through step_split, spans chosen per step by the serving
+    // policy (spans_for, split_min_tokens 128 — up to 4 spans at full
+    // length). g1 is the motivating MQA case: a bare group-major step
+    // has ONE sweep unit, so the prefix split is its only fan-out axis;
+    // g8 prices the merge overhead where group fan-out already exists.
+    let mut split_case = |label: String, h: usize, g: usize, l: usize| {
+        let d = 64usize;
+        let a = DECODE_AFFINE;
+        let mut kv = KvPool::new(KvConfig {
+            pages: 2 * l.div_ceil(16),
+            page_size: 16,
+            kv_heads: g,
+            d_head: d,
+        });
+        let groups = HeadGroups::new(h, g).unwrap();
+        let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let mut step_rng = Rng::new(80);
+        let qs: Vec<Vec<i8>> = (0..l)
+            .map(|_| (0..h * d).map(|_| step_rng.int(-64, 64) as i8).collect())
+            .collect();
+        let ks: Vec<Vec<i8>> = (0..l)
+            .map(|_| (0..g * d).map(|_| step_rng.int(-64, 64) as i8).collect())
+            .collect();
+        let vs: Vec<Vec<i8>> = (0..l)
+            .map(|_| (0..g * d).map(|_| step_rng.int(-64, 64) as i8).collect())
+            .collect();
+        let mut out = vec![0.0f32; h * d];
+        let mut scr = AttnScratch::new();
+        suite.add(Bench::new(label).items(h * l * (l + 1) / 2).run(|| {
+            let mut seq = KvSeq::new(groups, a, a);
+            for t in 0..l {
+                let spans = spans_for(t + 1, 16, 128);
+                dec.step_split(&mut kv, &mut seq, &qs[t], a, &ks[t], &vs[t], spans, &mut out, &mut scr)
+                    .expect("bench arena sized for one sequence");
+            }
+            kv.close(seq);
+        }));
+    };
+    split_case("decode_split/h8/g1/L512".into(), 8, 1, 512);
+    split_case("decode_split/h8/g8/L512".into(), 8, 8, 512);
+    suite.ratio("decode_split/h8/g1/L512", "decode_split/h8/g8/L512");
 
     // batched decode rounds: S concurrent sessions stream L tokens; every
     // round is ONE DecodeBatch scatter wave of S×G group tasks over the
@@ -582,6 +632,24 @@ fn main() {
     };
     traced_case("decode_sched_traced/s8/p32".into(), 8, 32, 16);
     suite.ratio("decode_sched_traced/s8/p32", "decode_sched/s8/p32/mixed");
+
+    // Single-source canonical label gate: `scripts/bench_labels.txt` is
+    // the ONE list of labels this binary must emit — `bench_smoke.sh`
+    // greps the same file against the JSON trajectory. Checking it here
+    // too means a label can neither be dropped from the bench nor added
+    // without being listed, and the failure happens at `cargo bench`
+    // time, before any trajectory file is compared.
+    let recorded = lutmax::benchkit::recorded_names();
+    for label in include_str!("../scripts/bench_labels.txt")
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+    {
+        assert!(
+            recorded.iter().any(|n| n == label),
+            "canonical bench label {label:?} (scripts/bench_labels.txt) was not recorded this run"
+        );
+    }
 
     if let Some(path) = flush_json().expect("write BENCH_JSON") {
         println!("\n[bench] wrote {}", path.display());

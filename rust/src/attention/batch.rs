@@ -54,10 +54,29 @@
 //! row threshold is asked with MAC-weighted row equivalents
 //! (`wave_stays_inline`, shared with `step_par` / `prefill_chunk_par`),
 //! never the raw task count.
+//!
+//! # Prefix-split waves (S × G × spans)
+//!
+//! With a split threshold configured
+//! ([`DecodeBatch::with_split_min_tokens`]; the scheduler's
+//! `split_min_tokens` knob), a group-major task whose prefix has reached
+//! the threshold fans out as one sweep unit per page-aligned prefix
+//! *span* ([`DecodeAttention::step_split`]'s wave form): each span unit
+//! computes the span's integer partials into its own disjoint block of
+//! the wave's partial buffers, and a serial merge phase after the
+//! scatter folds each group row's spans
+//! (`DecodeAttention::merge_group_row`) and writes the output. The
+//! merge runs on the caller's thread — never concurrently with span
+//! units — so the bit-reproducibility argument above is unchanged, and
+//! a wave's output is bit-identical to the same sessions' serial
+//! [`DecodeAttention::step_split`] calls (and to unsplit steps whenever
+//! the span maxima are LUT-index-aligned; see the decode module docs).
+//! Long-context G = 1 (MQA) steps — previously a single sweep unit —
+//! thus regain worker fan-out.
 
 use std::fmt;
 
-use super::decode::{check_step_shapes, StepPlan, SweepOrder};
+use super::decode::{check_step_shapes, span_page_range, spans_for, StepPlan, SweepOrder};
 use super::kernel::{wave_stays_inline, AttnScratch, OutPtr};
 use super::DecodeAttention;
 use crate::kv::{KvError, KvPool, KvSeq};
@@ -121,8 +140,15 @@ pub struct WaveStats {
     pub inline: bool,
     /// K+V bytes the sweep reads: Σ over surviving tasks of
     /// `seq_len · kv_heads · d_head · 2` (each page once per group —
-    /// the group-major contract)
+    /// the group-major contract; a split group's spans partition its
+    /// pages, so splitting never re-reads)
     pub kv_bytes: u64,
+    /// prefix-span sweep units submitted (0 when no task split) —
+    /// published as `wave_span_units_total`
+    pub span_units: usize,
+    /// tasks that ran the prefix-split sweep this wave — published as
+    /// `wave_split_tasks_total`
+    pub split_tasks: usize,
 }
 
 /// One session's contribution to a batched decode round: the same inputs
@@ -147,6 +173,11 @@ pub struct DecodeStepTask<'a> {
 /// module docs for the ordering / bit-reproducibility contract.
 pub struct DecodeBatch<'d> {
     dec: &'d DecodeAttention,
+    /// prefix-split threshold: group-major tasks with at least this many
+    /// resident tokens fan out as span units (`0` = splitting off, the
+    /// default — waves are then unconditionally bit-identical to serial
+    /// `step` calls)
+    split_min_tokens: usize,
 }
 
 /// One sweep unit of a batched round: a KV group (group-major) or a
@@ -165,10 +196,80 @@ struct SweepTask<'b> {
     out: OutPtr,
 }
 
+/// `Send`/`Sync` shims for the disjoint span-partial blocks the split
+/// wave fans across the pool — same contract as [`OutPtr`]: each unit
+/// reconstructs only its own block, and the scatter blocks until every
+/// unit finished.
+struct I32Ptr(*mut i32);
+unsafe impl Send for I32Ptr {}
+unsafe impl Sync for I32Ptr {}
+struct I64Ptr(*mut i64);
+unsafe impl Send for I64Ptr {}
+unsafe impl Sync for I64Ptr {}
+
+/// One prefix-span unit of a split group task: computes the span's
+/// integer partials ([`DecodeAttention::group_prefix_span`]) into its
+/// own contiguous block of the wave's partial buffers; the post-scatter
+/// merge phase folds them.
+struct SpanTask<'b> {
+    seq: &'b KvSeq,
+    /// the group's contiguous `H/G · d_head` query block
+    q: &'b [i8],
+    plan: StepPlan,
+    gi: usize,
+    /// this span's page range within the sequence's resident pages
+    pages: std::ops::Range<usize>,
+    rows: usize,
+    /// base pointers of this span's partial blocks (`rows`,
+    /// `rows · T`, `rows · T · d` elements)
+    m: I32Ptr,
+    cnt: I32Ptr,
+    vs: I64Ptr,
+}
+
+/// A phase-2 wave unit: a whole-group/head sweep or one prefix span.
+enum WaveUnit<'b> {
+    Sweep(SweepTask<'b>),
+    Span(SpanTask<'b>),
+}
+
+/// Deferred merge of one split group: runs serially after the scatter,
+/// folding each of the group's `rows` query rows across its spans and
+/// writing the group's output block.
+struct MergeJob {
+    /// owning task — skipped if the task failed (append or panic)
+    ti: usize,
+    plan: StepPlan,
+    spans: usize,
+    rows: usize,
+    valid: usize,
+    /// element offsets of the group's span-major partial region
+    m_off: usize,
+    cnt_off: usize,
+    vs_off: usize,
+    out: OutPtr,
+}
+
 impl<'d> DecodeBatch<'d> {
     /// Wrap an existing per-route kernel (shares its scratch pool).
+    /// Prefix splitting starts off; see
+    /// [`Self::with_split_min_tokens`].
     pub fn new(dec: &'d DecodeAttention) -> Self {
-        Self { dec }
+        Self { dec, split_min_tokens: 0 }
+    }
+
+    /// Enable the prefix-split sweep for group-major tasks whose prefix
+    /// has at least `n` resident tokens (`0` disables, the default).
+    /// Span counts follow [`spans_for`]. Head-major waves (the
+    /// conformance reference order) never split.
+    pub fn with_split_min_tokens(mut self, n: usize) -> Self {
+        self.split_min_tokens = n;
+        self
+    }
+
+    /// The configured prefix-split threshold (`0` = off).
+    pub fn split_min_tokens(&self) -> usize {
+        self.split_min_tokens
     }
 
     /// The wrapped per-step kernel.
@@ -242,17 +343,53 @@ impl<'d> DecodeBatch<'d> {
             })
             .collect();
 
-        // phase 2: flatten the surviving tasks into sweep units,
-        // remembering each unit's owning task so a contained panic can be
-        // mapped back to exactly one session
+        // phase 2: flatten the surviving tasks into wave units (whole
+        // group/head sweeps, or per-span partial sweeps for split
+        // tasks), remembering each unit's owning task so a contained
+        // panic can be mapped back to exactly one session
         let kv_ref: &KvPool = kv;
         let d = kv_ref.config().d_head;
+        let psize = kv_ref.config().page_size;
+        let t_len = self.dec.kernel().table().len();
         let order = self.dec.order();
-        let mut units: Vec<SweepTask<'_>> = Vec::new();
+
+        // pass A: size the span-partial buffers (split tasks only, so
+        // the common unsplit wave allocates nothing). Span counts here
+        // and in pass B come from the same `spans_for` call, so the
+        // offsets agree.
+        let (mut m_total, mut cnt_total, mut vs_total) = (0usize, 0usize, 0usize);
+        if matches!(order, SweepOrder::GroupMajor) && self.split_min_tokens > 0 {
+            for (t, res) in tasks.iter().zip(&results) {
+                if res.is_err() {
+                    continue;
+                }
+                let spans = spans_for(t.seq.len(), psize, self.split_min_tokens);
+                if spans < 2 {
+                    continue;
+                }
+                let r = t.seq.groups().group_size();
+                let g = t.seq.groups().kv_heads();
+                m_total += g * spans * r;
+                cnt_total += g * spans * r * t_len;
+                vs_total += g * spans * r * t_len * d;
+            }
+        }
+        let mut m_buf = vec![0i32; m_total];
+        let mut cnt_buf = vec![0i32; cnt_total];
+        let mut vs_buf = vec![0i64; vs_total];
+        let (m_base, cnt_base, vs_base) =
+            (m_buf.as_mut_ptr(), cnt_buf.as_mut_ptr(), vs_buf.as_mut_ptr());
+
+        // pass B: build the units, merge jobs, and traffic accounting
+        let mut units: Vec<WaveUnit<'_>> = Vec::new();
         let mut owners: Vec<usize> = Vec::new();
+        let mut merges: Vec<MergeJob> = Vec::new();
+        let (mut m_off, mut cnt_off, mut vs_off) = (0usize, 0usize, 0usize);
         let mut wave_rows = 0usize;
         let mut wave_macs = 0usize;
         let mut kv_bytes = 0u64;
+        let mut span_units = 0usize;
+        let mut split_tasks = 0usize;
         for (ti, (t, res)) in tasks.iter_mut().zip(&results).enumerate() {
             if res.is_err() {
                 continue;
@@ -262,13 +399,16 @@ impl<'d> DecodeBatch<'d> {
             let plan = self.dec.plan(t.seq, d, t.q_affine);
             wave_rows += h;
             wave_macs += h * t.seq.len() * d;
+            // a split group's spans partition its pages, so splitting
+            // never re-reads: the round's KV traffic is span-count
+            // independent
             kv_bytes += (t.seq.len() * t.seq.groups().kv_heads() * d * 2) as u64;
             let seq: &KvSeq = t.seq;
             let optr = t.out.as_mut_ptr();
             match order {
                 SweepOrder::HeadMajor => {
                     for hh in 0..h {
-                        units.push(SweepTask {
+                        units.push(WaveUnit::Sweep(SweepTask {
                             seq,
                             q: &t.q[hh * d..(hh + 1) * d],
                             plan,
@@ -277,42 +417,120 @@ impl<'d> DecodeBatch<'d> {
                             // SAFETY: within `out`'s `h * d` allocation
                             // (shape checked above); disjoint per head
                             out: OutPtr(unsafe { optr.add(hh * d) }),
-                        });
+                        }));
                         owners.push(ti);
                     }
                 }
                 SweepOrder::GroupMajor => {
                     let r = seq.groups().group_size();
+                    let valid = seq.len();
+                    let spans = if self.split_min_tokens > 0 {
+                        spans_for(valid, psize, self.split_min_tokens)
+                    } else {
+                        1
+                    };
+                    let npages = valid.div_ceil(psize).max(1);
                     for gi in 0..seq.groups().kv_heads() {
-                        units.push(SweepTask {
-                            seq,
-                            q: &t.q[gi * r * d..(gi * r + r) * d],
+                        let q = &t.q[gi * r * d..(gi * r + r) * d];
+                        // SAFETY: within `out`'s `h * d` allocation
+                        // (shape checked above); disjoint per group
+                        let optr_g = unsafe { optr.add(gi * r * d) };
+                        if spans < 2 {
+                            units.push(WaveUnit::Sweep(SweepTask {
+                                seq,
+                                q,
+                                plan,
+                                unit: gi,
+                                out_len: r * d,
+                                out: OutPtr(optr_g),
+                            }));
+                            owners.push(ti);
+                            continue;
+                        }
+                        merges.push(MergeJob {
+                            ti,
                             plan,
-                            unit: gi,
-                            out_len: r * d,
-                            // SAFETY: within `out`'s `h * d` allocation
-                            // (shape checked above); disjoint per group
-                            out: OutPtr(unsafe { optr.add(gi * r * d) }),
+                            spans,
+                            rows: r,
+                            valid,
+                            m_off,
+                            cnt_off,
+                            vs_off,
+                            out: OutPtr(optr_g),
                         });
-                        owners.push(ti);
+                        for p in 0..spans {
+                            units.push(WaveUnit::Span(SpanTask {
+                                seq,
+                                q,
+                                plan,
+                                gi,
+                                pages: span_page_range(npages, spans, p),
+                                rows: r,
+                                // SAFETY: pass A sized the buffers from
+                                // the same spans_for/geometry walk, so
+                                // span p's block `[off + p·sz, off +
+                                // (p+1)·sz)` is in-bounds and disjoint
+                                // from every other span unit's
+                                m: I32Ptr(unsafe { m_base.add(m_off + p * r) }),
+                                cnt: I32Ptr(unsafe { cnt_base.add(cnt_off + p * r * t_len) }),
+                                vs: I64Ptr(unsafe { vs_base.add(vs_off + p * r * t_len * d) }),
+                            }));
+                            owners.push(ti);
+                        }
+                        m_off += spans * r;
+                        cnt_off += spans * r * t_len;
+                        vs_off += spans * r * t_len * d;
+                        span_units += spans;
+                    }
+                    if spans >= 2 {
+                        split_tasks += 1;
                     }
                 }
             }
         }
+        debug_assert!(m_off == m_total && cnt_off == cnt_total && vs_off == vs_total);
 
         // wave accounting: the WHOLE round's head rows and MACs decide
         // the inline-vs-scatter trade (never per session — the PR 4 fix
         // — and never the raw group-task count, which undercounts by
         // H/G per task)
-        let run_unit = |ut: &SweepTask<'_>, us: &mut AttnScratch| {
-            let ob = unsafe { std::slice::from_raw_parts_mut(ut.out.0, ut.out_len) };
-            match order {
-                SweepOrder::HeadMajor => {
-                    self.dec.head_step(kv_ref, ut.seq, ut.unit, ut.q, ut.plan, ob, us)
+        let run_unit = |ut: &WaveUnit<'_>, us: &mut AttnScratch| match ut {
+            WaveUnit::Sweep(st) => {
+                let ob = unsafe { std::slice::from_raw_parts_mut(st.out.0, st.out_len) };
+                match order {
+                    SweepOrder::HeadMajor => {
+                        self.dec.head_step(kv_ref, st.seq, st.unit, st.q, st.plan, ob, us)
+                    }
+                    SweepOrder::GroupMajor => {
+                        self.dec.group_step(kv_ref, st.seq, st.unit, st.q, st.plan, ob, us)
+                    }
                 }
-                SweepOrder::GroupMajor => {
-                    self.dec.group_step(kv_ref, ut.seq, ut.unit, ut.q, ut.plan, ob, us)
-                }
+            }
+            WaveUnit::Span(sp) => {
+                let r = sp.rows;
+                // SAFETY: this unit's own disjoint partial block (see
+                // the pass-B pointer construction); the scatter joins
+                // before the merge phase reads any of it
+                let (m, cnt, vs) = unsafe {
+                    (
+                        std::slice::from_raw_parts_mut(sp.m.0, r),
+                        std::slice::from_raw_parts_mut(sp.cnt.0, r * t_len),
+                        std::slice::from_raw_parts_mut(sp.vs.0, r * t_len * d),
+                    )
+                };
+                self.dec.group_prefix_span(
+                    kv_ref,
+                    sp.seq,
+                    sp.gi,
+                    sp.q,
+                    sp.plan,
+                    sp.seq.len(),
+                    sp.pages.clone(),
+                    m,
+                    cnt,
+                    vs,
+                    us,
+                );
             }
         };
         // both arms run units under the pool's containment (and fault
@@ -343,12 +561,45 @@ impl<'d> DecodeBatch<'d> {
             units: units.len(),
             inline,
             kv_bytes,
+            span_units,
+            split_tasks,
         };
         for &u in outcome.panicked() {
             // the owner's phase-1 append already landed: state advanced,
             // output lost — exactly one typed failure per panicked task
             // (a task's first panicked unit wins; repeats are idempotent)
             results[owners[u]] = Err(WaveError::Panicked);
+        }
+        // phase 3: serial merge of each split group's span partials —
+        // the identical fold the serial `step_split` path runs, so the
+        // wave output stays bit-identical to per-session split steps.
+        // Groups owned by a failed task are skipped: their output stays
+        // untouched, matching the sweep arm's panic contract (a panicked
+        // span leaves its partial block zeroed, which must never be
+        // folded into a row the caller will read).
+        for job in &merges {
+            if results[job.ti].is_err() {
+                continue;
+            }
+            scr.prepare_decode_split(job.rows, 1, d, t_len, job.spans);
+            for rr in 0..job.rows {
+                // SAFETY: row rr of this group's output block; every
+                // span unit of the group has joined, and failed owners
+                // were skipped above
+                let ob = unsafe { std::slice::from_raw_parts_mut(job.out.0.add(rr * d), d) };
+                self.dec.merge_group_row(
+                    job.plan,
+                    d,
+                    job.valid,
+                    job.spans,
+                    job.rows,
+                    &m_buf[job.m_off + rr..],
+                    &cnt_buf[job.cnt_off + rr * t_len..],
+                    &vs_buf[job.vs_off + rr * t_len * d..],
+                    ob,
+                    scr,
+                );
+            }
         }
         (results, stats)
     }
@@ -417,6 +668,108 @@ mod tests {
             kv_w.close(seq);
         }
         assert_eq!(kv_w.free_pages(), 16);
+        for seq in ser_seqs {
+            kv_s.close(seq);
+        }
+    }
+
+    #[test]
+    fn split_wave_matches_serial_split_steps_bitwise() {
+        let (s, h, g, d) = (3usize, 4usize, 2usize, 8usize);
+        let a = DECODE_AFFINE;
+        let cfg = KvConfig { pages: 32, page_size: 4, kv_heads: g, d_head: d };
+        let (mut kv_w, mut kv_s) = (KvPool::new(cfg), KvPool::new(cfg));
+        let groups = HeadGroups::new(h, g).unwrap();
+        let mut wave_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+        let mut ser_seqs: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, a, a)).collect();
+        let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+        let min = 4usize;
+        let batch = DecodeBatch::new(&dec).with_split_min_tokens(min);
+        assert_eq!(batch.split_min_tokens(), min);
+        let pool = engine_parallel(Mode::Rexp, Precision::Uint8, None, Some(3));
+        let mut rng = Rng::new(77);
+        let mut scr = AttnScratch::new();
+        // session 0 starts with a longer prefix so waves mix split and
+        // unsplit tasks (same prefix in both pools)
+        for _ in 0..6 {
+            let kr: Vec<i8> = (0..g * d).map(|_| rng.int(-96, 96) as i8).collect();
+            let vr: Vec<i8> = (0..g * d).map(|_| rng.int(-96, 96) as i8).collect();
+            kv_w.append(&mut wave_seqs[0], &kr, &vr).unwrap();
+            kv_s.append(&mut ser_seqs[0], &kr, &vr).unwrap();
+        }
+        let mut saw_mixed = false;
+        for round in 0..12 {
+            let qs: Vec<Vec<i8>> = (0..s)
+                .map(|_| (0..h * d).map(|_| rng.int(-96, 96) as i8).collect())
+                .collect();
+            let ks: Vec<Vec<i8>> = (0..s)
+                .map(|_| (0..g * d).map(|_| rng.int(-96, 96) as i8).collect())
+                .collect();
+            let vs: Vec<Vec<i8>> = (0..s)
+                .map(|_| (0..g * d).map(|_| rng.int(-96, 96) as i8).collect())
+                .collect();
+            // the span plan the wave will use, from the post-append
+            // lengths (serial pool is pre-append here)
+            let expect: Vec<usize> =
+                ser_seqs.iter().map(|q| spans_for(q.len() + 1, cfg.page_size, min)).collect();
+            let mut wave_out = vec![vec![0.0f32; h * d]; s];
+            let mut tasks: Vec<DecodeStepTask<'_>> = wave_seqs
+                .iter_mut()
+                .zip(wave_out.iter_mut())
+                .enumerate()
+                .map(|(i, (seq, out))| DecodeStepTask {
+                    seq,
+                    q: &qs[i],
+                    q_affine: a,
+                    k_row: &ks[i],
+                    v_row: &vs[i],
+                    out,
+                })
+                .collect();
+            let (res, stats) =
+                batch.step_wave_with_stats(&mut kv_w, &mut tasks, &pool, &mut scr, |_, _| false);
+            assert!(res.iter().all(|r| r.is_ok()));
+            drop(tasks);
+            let split = expect.iter().filter(|&&sp| sp >= 2).count();
+            assert_eq!(stats.split_tasks, split, "round {round}");
+            assert_eq!(
+                stats.span_units,
+                expect.iter().map(|&sp| if sp >= 2 { g * sp } else { 0 }).sum::<usize>(),
+                "round {round}"
+            );
+            assert_eq!(stats.units, (s - split) * g + stats.span_units, "round {round}");
+            saw_mixed |= split > 0 && split < s;
+            // serial replay in REVERSE session order with the same span
+            // plan: interleaving must not matter, and the wave's
+            // compute-partials-then-merge is the identical fold
+            for i in (0..s).rev() {
+                let mut want = vec![0.0f32; h * d];
+                let rep = dec
+                    .step_split(
+                        &mut kv_s,
+                        &mut ser_seqs[i],
+                        &qs[i],
+                        a,
+                        &ks[i],
+                        &vs[i],
+                        expect[i],
+                        &mut want,
+                        &mut scr,
+                    )
+                    .unwrap();
+                assert_eq!(rep.spans, expect[i], "round {round} session {i}");
+                assert_eq!(
+                    wave_out[i], want,
+                    "round {round} session {i} (aligned = {})",
+                    rep.aligned
+                );
+            }
+        }
+        assert!(saw_mixed, "rounds must mix split and unsplit tasks");
+        for seq in wave_seqs {
+            kv_w.close(seq);
+        }
+        assert_eq!(kv_w.free_pages(), 32);
         for seq in ser_seqs {
             kv_s.close(seq);
         }

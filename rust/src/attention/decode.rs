@@ -36,6 +36,34 @@
 //! reads over identical integer expressions, **bit-identical** across
 //! the whole conformance sweep (`integration_conformance.rs`).
 //!
+//! # Prefix-split partial softmax ([`DecodeAttention::step_split`])
+//!
+//! A bare group-major step has exactly G sweep units, so long-context
+//! decode at small G (MQA: G = 1) is G-bounded. `step_split` splits the
+//! paged prefix into page-aligned spans swept independently, each
+//! producing integer-domain partials per query row — the span's score
+//! maximum `m_p`, a histogram of LUT addresses taken against `m_p`
+//! (the same `pass1` mapping the unsplit row runs), and per-address V
+//! sums — merged by a LUT-exact reduction
+//! ([`FusedAttention::merge_span_row`]): span `p`'s histogram shifts by
+//! `Δ_p = map.index(m_global − m_p)`, the fixed-point image of
+//! rescaling the span's partial sums by `sig(m_global − m_p)` through
+//! the existing [`IntMap`] path, then one global normalizer and one
+//! per-address `sig × ΣV` MAC finish the row.
+//!
+//! **Merge exactness**: when every `m_global − m_p` lands on a
+//! LUT-index boundary (`IntMap::shift_is_exact` — always true for one
+//! span, zero diffs, and unit maps), truncation distributes over the
+//! address sum and saturation composes, so the shifted addresses equal
+//! the unsplit ones element-for-element and the merged output is
+//! **bit-identical** to the unsplit sweep. Otherwise every shifted
+//! address sits at most one LUT index below the unsplit one and the
+//! per-element output deviation is **provably bounded** by the computed
+//! [`SplitReport::bound`] (adjacent-address × normalizer-interval
+//! discrepancy — never an assumed epsilon). Conformance invariant 9
+//! asserts both halves across the {mode, prec, G, page_size, sessions,
+//! faults, spans} axes.
+//!
 //! Per step, the sweep units (G group tasks, or H head rows head-major)
 //! either run inline (short prefixes — a pool wake costs more than the
 //! work) or scatter over a [`ParSoftmax`] pool as one task batch
@@ -56,7 +84,7 @@ use super::kernel::{wave_stays_inline, AttnScratch, FusedAttention, OutPtr};
 use crate::kv::{KvError, KvPool, KvSeq};
 use crate::lut::Precision;
 use crate::quant::Affine;
-use crate::softmax::{lock_unpoisoned, IntMap, Mode, ParSoftmax, Scratch};
+use crate::softmax::{lock_unpoisoned, pass1_scores_mapped, IntMap, Mode, ParSoftmax, Scratch};
 
 /// Ingress quantization of the decode serving route: a fixed dyadic
 /// affine (2^-4 per step, range ±8) sized for normalized activations —
@@ -96,6 +124,48 @@ pub enum SweepOrder {
     /// pages, reading each K/V byte `H/G` times per step. Kept as the
     /// conformance reference and the `decode/*` bench baseline.
     HeadMajor,
+}
+
+/// What a prefix-split sweep ([`DecodeAttention::step_split`]) did: the
+/// effective span count and the merge-exactness outcome (module docs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SplitReport {
+    /// effective span count after clamping the request to
+    /// `[1, resident pages]`
+    pub spans: usize,
+    /// every merged row's span maxima were LUT-index-aligned — the
+    /// outputs are bit-identical to the unsplit sweep (always true when
+    /// `spans == 1`)
+    pub aligned: bool,
+    /// when not `aligned`: a per-output-element bound on
+    /// `|split − unsplit|`, the integer merge bound finalized through
+    /// `out_scale` plus conservative f32-cast slack; `0.0` when aligned
+    pub bound: f32,
+}
+
+/// Serving policy for the prefix-split sweep: how many spans a step over
+/// a `valid`-token prefix splits into under the scheduler's
+/// `split_min_tokens` knob. `0` disables splitting (the serving default
+/// — replies are then unconditionally bit-identical to the unsplit
+/// sweep); otherwise roughly one span per `split_min_tokens` tokens,
+/// clamped to one span per resident page, so short prefixes stay
+/// unsplit and long ones fan out.
+pub fn spans_for(valid: usize, page_size: usize, split_min_tokens: usize) -> usize {
+    if split_min_tokens == 0 {
+        return 1;
+    }
+    let npages = valid.div_ceil(page_size).max(1);
+    (valid / split_min_tokens).clamp(1, npages)
+}
+
+/// Page range of span `p` of `spans` near-even contiguous spans over
+/// `npages` resident pages. With `1 ≤ spans ≤ npages` every span is
+/// non-empty and the spans partition `0..npages` in order, so the page
+/// walks of all spans concatenate to the unsplit walk
+/// ([`KvPool::page_blocks_range`]).
+pub(super) fn span_page_range(npages: usize, spans: usize, p: usize) -> std::ops::Range<usize> {
+    debug_assert!(spans >= 1 && spans <= npages.max(1) && p < spans);
+    p * npages / spans..(p + 1) * npages / spans
 }
 
 /// Per-step decode attention over a paged KV cache. Construct once per
@@ -224,15 +294,14 @@ impl DecodeAttention {
     /// inline-vs-pool decision.
     ///
     /// **Parallelism trade**: a bare group-major step has exactly G
-    /// sweep units (a single query row per head, so there is nothing
-    /// finer to split without splitting the *prefix* — a partial-softmax
-    /// reduction this kernel doesn't do; ROADMAP open item). G = 1 (MQA)
-    /// therefore always runs a bare step inline. That is the deliberate
-    /// bandwidth-for-parallelism trade of the group-major sweep: serving
-    /// restores concurrency across sessions (`DecodeBatch` waves are
-    /// S×G tasks) and across prompt rows (`prefill_chunk_par` scatters
-    /// G·T' tasks); a latency-critical small-G deployment that wants
-    /// per-head fan-out on bare steps can pin
+    /// sweep units (a single query row per head), so G = 1 (MQA) always
+    /// runs a bare step inline. The finer unit is the *prefix*:
+    /// [`Self::step_split`] splits it into page-aligned spans with a
+    /// LUT-exact partial-softmax merge (module docs), which is how the
+    /// serving layer restores fan-out on long-context small-G steps
+    /// (`DecodeBatch` waves become S×G×spans tasks past the scheduler's
+    /// split threshold). A latency-critical small-G deployment that
+    /// wants per-head fan-out on bare steps can still pin
     /// [`SweepOrder::HeadMajor`].
     ///
     /// **Failure domains**: the append can fail with
@@ -744,6 +813,271 @@ impl DecodeAttention {
             }
         }
     }
+
+    /// One decode step through the prefix-split sweep (module docs):
+    /// append the token, then sweep each group's prefix as `spans`
+    /// page-aligned spans and merge the span partials per query row.
+    /// Always group-major — the split is defined on the group sweep,
+    /// which the conformance harness already pins bit-identical to the
+    /// head-major reference.
+    ///
+    /// `spans` is a request, clamped to `[1, resident pages]` (pass
+    /// `usize::MAX` for one span per page). `spans = 1` *is* the unsplit
+    /// sweep. For `spans > 1` the output is bit-identical to
+    /// [`DecodeAttention::step`] whenever [`SplitReport::aligned`], and
+    /// within [`SplitReport::bound`] of it otherwise — conformance
+    /// invariant 9 asserts both. On exhaustion nothing is appended and
+    /// `out` is untouched.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_split(
+        &self,
+        kv: &mut KvPool,
+        seq: &mut KvSeq,
+        q: &[i8],
+        q_affine: Affine,
+        k_row: &[i8],
+        v_row: &[i8],
+        spans: usize,
+        out: &mut [f32],
+        scr: &mut AttnScratch,
+    ) -> Result<SplitReport, KvError> {
+        kv.append(seq, k_row, v_row)?;
+        let d = kv.config().d_head;
+        let h = seq.groups().q_heads();
+        check_step_shapes(q, out, h, d);
+        let plan = self.plan(seq, d, q_affine);
+        let valid = seq.len();
+        let npages = valid.div_ceil(kv.config().page_size);
+        let spans = spans.clamp(1, npages.max(1));
+        let r = seq.groups().group_size();
+        let mut report = SplitReport { spans, aligned: true, bound: 0.0 };
+        for gi in 0..seq.groups().kv_heads() {
+            let qg = &q[gi * r * d..(gi * r + r) * d];
+            let og = &mut out[gi * r * d..(gi * r + r) * d];
+            self.group_prefix_split(kv, seq, gi, qg, plan, valid, spans, og, 0, scr, &mut report);
+        }
+        Ok(report)
+    }
+
+    /// One group's prefix-split sweep: every span's partials
+    /// ([`Self::group_prefix_span`]), then the per-row merge + dequant
+    /// ([`Self::merge_group_row`]) into the group's output block. The
+    /// serial mirror of the wave layer's S×G×spans scatter.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn group_prefix_split(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        gi: usize,
+        qg: &[i8],
+        plan: StepPlan,
+        valid: usize,
+        spans: usize,
+        out: &mut [f32],
+        off: usize,
+        scr: &mut AttnScratch,
+        report: &mut SplitReport,
+    ) {
+        let d = kv.config().d_head;
+        let r = seq.groups().group_size();
+        let t_len = self.kernel.table().len();
+        scr.prepare_decode_split(r, valid, d, t_len, spans);
+        // the span partials move out of the scratch for the sweep so the
+        // span tasks can keep borrowing its score/address rows
+        let mut span_m = std::mem::take(&mut scr.span_m);
+        let mut span_cnt = std::mem::take(&mut scr.span_cnt);
+        let mut span_vs = std::mem::take(&mut scr.span_vs);
+        let npages = valid.div_ceil(kv.config().page_size);
+        for p in 0..spans {
+            self.group_prefix_span(
+                kv,
+                seq,
+                gi,
+                qg,
+                plan,
+                valid,
+                span_page_range(npages, spans, p),
+                &mut span_m[p * r..(p + 1) * r],
+                &mut span_cnt[p * r * t_len..(p + 1) * r * t_len],
+                &mut span_vs[p * r * t_len * d..(p + 1) * r * t_len * d],
+                scr,
+            );
+        }
+        for rr in 0..r {
+            let (aligned, bound) = self.merge_group_row(
+                plan,
+                d,
+                valid,
+                spans,
+                r,
+                &span_m[rr..],
+                &span_cnt[rr * t_len..],
+                &span_vs[rr * t_len * d..],
+                &mut out[off + rr * d..off + (rr + 1) * d],
+                scr,
+            );
+            if !aligned {
+                report.aligned = false;
+                report.bound = report.bound.max(bound);
+            }
+        }
+        scr.span_m = span_m;
+        scr.span_cnt = span_cnt;
+        scr.span_vs = span_vs;
+    }
+
+    /// One span of one group's prefix: the page-range sweep producing
+    /// the span's integer partials — per query row, the span's score
+    /// maximum `m_p`, the histogram of LUT addresses taken against `m_p`
+    /// (the row's `pass1` mapping, local maximum), and per-address V
+    /// sums. The score/V expressions are exactly
+    /// [`Self::group_prefix`]'s, restricted to the span's pages
+    /// (`pages`, from [`span_page_range`]) via
+    /// [`KvPool::page_blocks_range`]. The partial slices are THIS span's
+    /// own contiguous block: `span_m` holds `rows` maxima (row `rr` at
+    /// `rr`), `span_cnt` the `rows × table_len` histograms, `span_vs`
+    /// the `rows × table_len × d` V sums — so the wave layer's
+    /// S×G×spans tasks each write one disjoint region. `pub(super)` so
+    /// those tasks drive the identical expressions.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn group_prefix_span(
+        &self,
+        kv: &KvPool,
+        seq: &KvSeq,
+        gi: usize,
+        qg: &[i8],
+        plan: StepPlan,
+        valid: usize,
+        pages: std::ops::Range<usize>,
+        span_m: &mut [i32],
+        span_cnt: &mut [i32],
+        span_vs: &mut [i64],
+        scr: &mut AttnScratch,
+    ) {
+        let cfg = kv.config();
+        let (d, psize) = (cfg.d_head, cfg.page_size);
+        let r = seq.groups().group_size();
+        let t_len = self.kernel.table().len();
+        debug_assert_eq!(qg.len(), r * d);
+        let lo_tok = (pages.start * psize).min(valid);
+        let hi_tok = (pages.end * psize).min(valid);
+        let n = hi_tok - lo_tok;
+        debug_assert!(n >= 1, "span planning never yields an empty span");
+        scr.prepare_decode_group(r, n, d, t_len);
+        for (rr, qh) in qg.chunks_exact(d).enumerate() {
+            scr.qsum[rr] = qh.iter().map(|&v| v as i32).sum();
+        }
+        let zqzk = d as i32 * plan.zq * plan.zk;
+        // 1. span-local q·K^T rows (row rr at rr·n) — the unsplit score
+        // expression over the span's page blocks
+        let mut j = 0usize;
+        for blk in kv.page_blocks_range(seq, gi, valid, pages.clone()) {
+            for t in 0..blk.len {
+                let kj = &blk.k[t * d..(t + 1) * d];
+                for (rr, qh) in qg.chunks_exact(d).enumerate() {
+                    let mut dot = 0i32;
+                    for (&a, &b) in qh.iter().zip(kj) {
+                        dot += a as i32 * b as i32;
+                    }
+                    scr.scores[rr * n + j] =
+                        dot - plan.zk * scr.qsum[rr] - plan.zq * blk.ksum[t] + zqzk;
+                }
+                j += 1;
+            }
+        }
+        debug_assert_eq!(j, n);
+        // 2. per-row local max + LUT addresses against it, folded into
+        // the span's address histogram
+        let table = self.kernel.table();
+        for rr in 0..r {
+            let row = &scr.scores[rr * n..(rr + 1) * n];
+            let m_p = row.iter().copied().max().unwrap_or(0);
+            pass1_scores_mapped(row, m_p, plan.map, table, &mut scr.idx[rr * n..(rr + 1) * n]);
+            span_m[rr] = m_p;
+            let cnt = &mut span_cnt[rr * t_len..(rr + 1) * t_len];
+            cnt.fill(0);
+            for &k in &scr.idx[rr * n..(rr + 1) * n] {
+                cnt[k as usize] += 1;
+            }
+        }
+        // 3. per-address V sums: one V sweep serves all rows (i64 — the
+        // per-address regroup of the sig×V MAC is exact there)
+        span_vs[..r * t_len * d].fill(0);
+        let mut j = 0usize;
+        for blk in kv.page_blocks_range(seq, gi, valid, pages) {
+            for t in 0..blk.len {
+                let vrow = &blk.v[t * d..(t + 1) * d];
+                for rr in 0..r {
+                    let k = scr.idx[rr * n + j] as usize;
+                    let vs = &mut span_vs[(rr * t_len + k) * d..][..d];
+                    for (a, &v) in vs.iter_mut().zip(vrow) {
+                        *a += v as i64;
+                    }
+                }
+                j += 1;
+            }
+        }
+    }
+
+    /// Merge ONE query row's span partials and write its dequantized
+    /// output elements — shared by the serial split sweep and the
+    /// batched wave's merge phase. The partial slices are the span-major
+    /// buffers offset to the row (`&span_m[rr..]`, `&span_cnt[rr·T..]`,
+    /// `&span_vs[rr·T·d..]`); `rows` is the span-to-span stride. Returns
+    /// `(aligned, f32 bound)`; the bound is `0.0` when aligned. The
+    /// caller's scratch must have been prepared via
+    /// [`AttnScratch::prepare_decode_split`].
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn merge_group_row(
+        &self,
+        plan: StepPlan,
+        d: usize,
+        valid: usize,
+        spans: usize,
+        rows: usize,
+        m_spans: &[i32],
+        cnts: &[i32],
+        vsums: &[i64],
+        out_row: &mut [f32],
+        scr: &mut AttnScratch,
+    ) -> (bool, f32) {
+        let t_len = self.kernel.table().len();
+        let merge = self.kernel.merge_span_row(
+            plan.map,
+            plan.zv,
+            d,
+            spans,
+            rows,
+            m_spans,
+            cnts,
+            vsums,
+            &mut scr.merge_cnt[..t_len],
+            &mut scr.merge_vs[..t_len * d],
+            &mut scr.sig_tab[..t_len],
+            &mut scr.acc[..d],
+        );
+        let corr = plan.zv as i64 * merge.sig_sum;
+        for (o, &a) in out_row.iter_mut().zip(&scr.acc[..d]) {
+            *o = (a - corr) as f32 * plan.out_scale;
+        }
+        if merge.aligned {
+            (true, 0.0)
+        } else {
+            (false, self.f32_bound(merge.err_bound_int, valid, plan))
+        }
+    }
+
+    /// Conservative f32-domain finalization of an integer merge bound:
+    /// `|o_split − o_unsplit| ≤ |out_scale| · E` plus slack for the two
+    /// `as f32` casts and the product rounding, each within
+    /// `2^-24 · |value|` of exact, with
+    /// `|acc − z_v·Σsig| ≤ L · qmax · (128 + |z_v|)`.
+    fn f32_bound(&self, err_int: i64, valid: usize, plan: StepPlan) -> f32 {
+        let os = plan.out_scale.abs() as f64;
+        let qmax = self.kernel.precision().qmax() as f64;
+        let amax = valid as f64 * qmax * (128.0 + plan.zv.unsigned_abs() as f64);
+        (os * err_int as f64 + os * amax * 4.0 * 2f64.powi(-24)) as f32
+    }
 }
 
 pub(super) fn check_step_shapes(q: &[i8], out: &[f32], h: usize, d: usize) {
@@ -797,55 +1131,96 @@ pub struct DecodeRoute {
     pub fault_seed: Option<u64>,
 }
 
+/// Why a `"decode:..."` route spec failed to parse — typed so the
+/// serving layer rejects bad routes with a reason on the wire instead of
+/// panicking or silently defaulting (the failure-semantics table in
+/// `coordinator::request`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RouteError {
+    /// not a `decode:` spec at all
+    Scheme,
+    /// mode segment missing, unknown, or not a LUT mode (only the LUT
+    /// modes have the integer decode datapath)
+    Mode(String),
+    /// precision segment missing or unknown
+    Precision(String),
+    /// a suffix segment that isn't `aN` / `gG` / `pP` / `fS`, including
+    /// an empty segment
+    Segment(String),
+    /// the same suffix key given twice
+    Duplicate(char),
+    /// a suffix value that isn't a number (e.g. `:fXYZ`)
+    Value(char, String),
+    /// a suffix value that must be positive was zero (`:g0`, `:p0`)
+    Zero(char),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::Scheme => write!(f, "route spec must start with \"decode:\""),
+            RouteError::Mode(m) => write!(f, "unknown or non-LUT decode mode {m:?}"),
+            RouteError::Precision(p) => write!(f, "unknown decode precision {p:?}"),
+            RouteError::Segment(s) => {
+                write!(f, "unknown route segment {s:?} (want aN/gG/pP/fS)")
+            }
+            RouteError::Duplicate(c) => write!(f, "duplicate route segment key '{c}'"),
+            RouteError::Value(c, v) => {
+                write!(f, "route segment '{c}' has a non-numeric value {v:?}")
+            }
+            RouteError::Zero(c) => write!(f, "route segment '{c}' must be positive"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
 /// Parse a decode route spec `"decode:<mode>:<prec>[:aN][:gG][:pP][:fS]"`
 /// (e.g. `"decode:rexp:uint8"`, `"decode:lut2d:int16:a512:g2:p256"`).
 /// `gG` fixes the stored-head count the route accepts (absent: MHA, every
 /// query head stores K/V); `pP` sizes the KV arena in pages; `fS` installs
-/// the seeded fault plan (chaos scenarios). Returns `None` for anything
-/// else, including non-LUT modes.
-pub fn parse_decode_route(spec: &str) -> Option<DecodeRoute> {
-    let rest = spec.strip_prefix("decode:")?;
+/// the seeded fault plan (chaos scenarios). Anything else — non-LUT
+/// modes, malformed/duplicate/zero segments — is a typed [`RouteError`],
+/// never a panic and never a silent default.
+pub fn parse_decode_route(spec: &str) -> Result<DecodeRoute, RouteError> {
+    let rest = spec.strip_prefix("decode:").ok_or(RouteError::Scheme)?;
     let mut parts = rest.split(':');
-    let mode = Mode::parse(parts.next()?)?;
+    let mode_s = parts.next().unwrap_or("");
+    let mode = Mode::parse(mode_s).ok_or_else(|| RouteError::Mode(mode_s.into()))?;
     if !matches!(mode, Mode::Rexp | Mode::Lut2d) {
-        return None;
+        return Err(RouteError::Mode(mode_s.into()));
     }
-    let prec = Precision::parse(parts.next()?)?;
+    let prec_s = parts.next().unwrap_or("");
+    let prec = Precision::parse(prec_s).ok_or_else(|| RouteError::Precision(prec_s.into()))?;
     let (mut alpha, mut kv_heads, mut pages, mut fault_seed) = (None, None, None, None);
     for seg in parts {
-        if let Some(a) = seg.strip_prefix('a') {
-            if alpha.is_some() {
-                return None;
-            }
-            alpha = Some(a.parse().ok()?);
-        } else if let Some(g) = seg.strip_prefix('g') {
-            if kv_heads.is_some() {
-                return None;
-            }
-            let g: usize = g.parse().ok()?;
-            if g == 0 {
-                return None;
-            }
-            kv_heads = Some(g);
-        } else if let Some(p) = seg.strip_prefix('p') {
-            if pages.is_some() {
-                return None;
-            }
-            let p: usize = p.parse().ok()?;
-            if p == 0 {
-                return None;
-            }
-            pages = Some(p);
-        } else if let Some(f) = seg.strip_prefix('f') {
-            if fault_seed.is_some() {
-                return None;
-            }
-            fault_seed = Some(f.parse().ok()?);
-        } else {
-            return None;
+        let key = match seg.chars().next() {
+            Some(k) if matches!(k, 'a' | 'g' | 'p' | 'f') => k,
+            _ => return Err(RouteError::Segment(seg.into())),
+        };
+        let val = &seg[1..];
+        let dup = match key {
+            'a' => alpha.is_some(),
+            'g' => kv_heads.is_some(),
+            'p' => pages.is_some(),
+            _ => fault_seed.is_some(),
+        };
+        if dup {
+            return Err(RouteError::Duplicate(key));
+        }
+        if key == 'f' {
+            fault_seed = Some(val.parse().map_err(|_| RouteError::Value(key, val.into()))?);
+            continue;
+        }
+        let v: usize = val.parse().map_err(|_| RouteError::Value(key, val.into()))?;
+        match key {
+            'a' => alpha = Some(v),
+            'g' | 'p' if v == 0 => return Err(RouteError::Zero(key)),
+            'g' => kv_heads = Some(v),
+            _ => pages = Some(v),
         }
     }
-    Some(DecodeRoute { mode, prec, alpha_len: alpha, kv_heads, pages, fault_seed })
+    Ok(DecodeRoute { mode, prec, alpha_len: alpha, kv_heads, pages, fault_seed })
 }
 
 #[cfg(test)]
@@ -886,16 +1261,28 @@ mod tests {
         assert_eq!((r.kv_heads, r.pages, r.fault_seed), (Some(2), Some(64), Some(7)));
         // seed 0 is a valid (distinct) schedule, not "disabled"
         assert_eq!(parse_decode_route("decode:rexp:uint8:f0").unwrap().fault_seed, Some(0));
-        assert!(parse_decode_route("decode:exact:uint8").is_none(), "non-LUT mode");
-        assert!(parse_decode_route("attn:rexp:uint8").is_none());
-        assert!(parse_decode_route("decode:rexp").is_none());
-        assert!(parse_decode_route("decode:rexp:uint8:g0").is_none());
-        assert!(parse_decode_route("decode:rexp:uint8:p0").is_none());
-        assert!(parse_decode_route("decode:rexp:uint8:x3").is_none());
-        assert!(parse_decode_route("decode:rexp:uint8:g2:g4").is_none());
-        assert!(parse_decode_route("decode:rexp:uint8:p8:p9").is_none());
-        assert!(parse_decode_route("decode:rexp:uint8:f1:f2").is_none());
-        assert!(parse_decode_route("decode:rexp:uint8:fx").is_none());
+        // malformed specs are TYPED errors, never panics or defaults
+        assert_eq!(
+            parse_decode_route("decode:exact:uint8"),
+            Err(RouteError::Mode("exact".into())),
+            "non-LUT mode"
+        );
+        assert_eq!(parse_decode_route("attn:rexp:uint8"), Err(RouteError::Scheme));
+        assert_eq!(parse_decode_route("decode:rexp"), Err(RouteError::Precision("".into())));
+        assert_eq!(parse_decode_route("decode:rexp:uint8:g0"), Err(RouteError::Zero('g')));
+        assert_eq!(parse_decode_route("decode:rexp:uint8:p0"), Err(RouteError::Zero('p')));
+        assert_eq!(
+            parse_decode_route("decode:rexp:uint8:x3"),
+            Err(RouteError::Segment("x3".into()))
+        );
+        assert_eq!(parse_decode_route("decode:rexp:uint8:"), Err(RouteError::Segment("".into())));
+        assert_eq!(parse_decode_route("decode:rexp:uint8:g2:g4"), Err(RouteError::Duplicate('g')));
+        assert_eq!(parse_decode_route("decode:rexp:uint8:p8:p9"), Err(RouteError::Duplicate('p')));
+        assert_eq!(parse_decode_route("decode:rexp:uint8:f1:f2"), Err(RouteError::Duplicate('f')));
+        assert_eq!(
+            parse_decode_route("decode:rexp:uint8:fx"),
+            Err(RouteError::Value('f', "x".into()))
+        );
     }
 
     #[test]
@@ -968,6 +1355,73 @@ mod tests {
             kv_g.close(sg);
             kv_h.close(sh);
         }
+    }
+
+    #[test]
+    fn split_step_matches_unsplit_when_aligned_and_is_within_bound_otherwise() {
+        // the tentpole invariant at unit scale (conformance invariant 9
+        // sweeps it): spans ∈ {1, 2, per-page} against the unsplit
+        // group-major sweep, both modes, pages crossed mid-prefix
+        let (h, g, d, ps) = (4usize, 2usize, 8usize, 4usize);
+        let a = DECODE_AFFINE;
+        let groups = HeadGroups::new(h, g).unwrap();
+        let cfg = KvConfig { pages: 16, page_size: ps, kv_heads: g, d_head: d };
+        for mode in [Mode::Rexp, Mode::Lut2d] {
+            for spans_req in [1usize, 2, usize::MAX] {
+                let dec = DecodeAttention::new(mode, Precision::Uint8, None).unwrap();
+                let (mut kv_u, mut kv_s) = (KvPool::new(cfg), KvPool::new(cfg));
+                let mut su = KvSeq::new(groups, a, a);
+                let mut ss = KvSeq::new(groups, a, a);
+                let mut rng = Rng::new(33);
+                let mut scr = AttnScratch::new();
+                for t in 0..13 {
+                    let qrow: Vec<i8> = (0..h * d).map(|_| rng.int(-128, 127) as i8).collect();
+                    let krow: Vec<i8> = (0..g * d).map(|_| rng.int(-128, 127) as i8).collect();
+                    let vrow: Vec<i8> = (0..g * d).map(|_| rng.int(-128, 127) as i8).collect();
+                    let mut ou = vec![0.0f32; h * d];
+                    let mut os = vec![0.0f32; h * d];
+                    dec.step(&mut kv_u, &mut su, &qrow, a, &krow, &vrow, &mut ou, &mut scr)
+                        .unwrap();
+                    let rep = dec
+                        .step_split(
+                            &mut kv_s, &mut ss, &qrow, a, &krow, &vrow, spans_req, &mut os,
+                            &mut scr,
+                        )
+                        .unwrap();
+                    let npages = su.len().div_ceil(ps).max(1);
+                    assert!(rep.spans >= 1 && rep.spans <= npages, "span clamp");
+                    if spans_req == 1 {
+                        assert_eq!((rep.spans, rep.aligned, rep.bound), (1, true, 0.0));
+                    }
+                    if rep.aligned {
+                        assert_eq!(ou, os, "{mode:?} spans {spans_req} step {t} must be bit-identical");
+                    } else {
+                        assert!(rep.bound > 0.0);
+                        for (i, (&u, &s)) in ou.iter().zip(&os).enumerate() {
+                            assert!(
+                                (u - s).abs() <= rep.bound,
+                                "{mode:?} spans {spans_req} step {t} elem {i}: |{u} - {s}| > {}",
+                                rep.bound
+                            );
+                        }
+                    }
+                }
+                assert_eq!(kv_u.close(su), kv_s.close(ss), "split path frees the same pages");
+            }
+        }
+    }
+
+    #[test]
+    fn spans_for_policy_respects_threshold_and_page_count() {
+        // knob off -> never split
+        assert_eq!(spans_for(10_000, 16, 0), 1);
+        // below threshold -> unsplit
+        assert_eq!(spans_for(100, 16, 128), 1);
+        // one span per threshold's worth of tokens...
+        assert_eq!(spans_for(512, 16, 128), 4);
+        // ...clamped to one span per resident page
+        assert_eq!(spans_for(512, 256, 128), 2);
+        assert_eq!(spans_for(0, 16, 128), 1);
     }
 
     #[test]

@@ -81,14 +81,27 @@ pub(super) struct OutPtr(pub(super) *mut f32);
 unsafe impl Send for OutPtr {}
 unsafe impl Sync for OutPtr {}
 
+/// Result of merging one group row's span partials
+/// ([`FusedAttention::merge_span_row`]).
+pub(super) struct SpanRowMerge {
+    /// merged `Σ sig` (the zero-point correction term)
+    pub(super) sig_sum: i64,
+    /// every span's `m − m_span` landed on a LUT-index boundary — the
+    /// merge is bit-identical to the unsplit sweep
+    pub(super) aligned: bool,
+    /// bound on `|merged − unsplit|` of any output element's integer
+    /// value `acc[·] − z_v·Σsig`; `0` when `aligned`
+    pub(super) err_bound_int: i64,
+}
+
 /// Reusable per-thread workspace of the fused kernel (score row, LUT
 /// addresses, sig row, widened V/K-sum blocks, output accumulators).
 #[derive(Debug, Default)]
 pub struct AttnScratch {
     pub(super) scores: Vec<i32>,
-    idx: Vec<i32>,
+    pub(super) idx: Vec<i32>,
     pub(super) sig: Vec<i32>,
-    sig_tab: Vec<i32>,
+    pub(super) sig_tab: Vec<i32>,
     v32: Vec<i32>,
     ksum: Vec<i32>,
     pub(super) acc: Vec<i64>,
@@ -96,6 +109,18 @@ pub struct AttnScratch {
     pub(super) qsum: Vec<i32>,
     /// per-query-head Σ sig of a group-major decode task (`H/G` entries)
     pub(super) sig_sum: Vec<i64>,
+    /// split-sweep span partials (see `DecodeAttention::step_split`):
+    /// per-(span, row) local maxima, LUT-address histograms, and
+    /// per-address V sums — span-major (span `p` owns the contiguous
+    /// `p * rows ..` block, row `rr` at offset `rr` within), so each
+    /// parallel span task writes one contiguous disjoint region; the
+    /// merge reads across spans with a `rows`-sized stride.
+    pub(super) span_m: Vec<i32>,
+    pub(super) span_cnt: Vec<i32>,
+    pub(super) span_vs: Vec<i64>,
+    /// merge-side fold buffers (one row at a time: `T` / `T · d_head`)
+    pub(super) merge_cnt: Vec<i32>,
+    pub(super) merge_vs: Vec<i64>,
 }
 
 impl AttnScratch {
@@ -136,6 +161,30 @@ impl AttnScratch {
         }
         if self.acc.len() < rows * d_head {
             self.acc.resize(rows * d_head, 0);
+        }
+    }
+
+    /// Split-sweep prepare on top of [`Self::prepare_decode_group`]: room
+    /// for `spans` per-span partials of a `rows`-row group (histograms
+    /// over `table_len` LUT addresses, per-address `d_head`-deep V sums)
+    /// plus the one-row merge fold buffers.
+    pub(super) fn prepare_decode_split(
+        &mut self,
+        rows: usize,
+        len: usize,
+        d_head: usize,
+        table_len: usize,
+        spans: usize,
+    ) {
+        self.prepare_decode_group(rows, len, d_head, table_len);
+        grow_i32(&mut self.span_m, spans * rows);
+        grow_i32(&mut self.span_cnt, spans * rows * table_len);
+        if self.span_vs.len() < spans * rows * table_len * d_head {
+            self.span_vs.resize(spans * rows * table_len * d_head, 0);
+        }
+        grow_i32(&mut self.merge_cnt, table_len);
+        if self.merge_vs.len() < table_len * d_head {
+            self.merge_vs.resize(table_len * d_head, 0);
         }
     }
 
@@ -274,6 +323,201 @@ impl FusedAttention {
             }
         }
         scr.sig[off..off + n].iter().map(|&v| v as i64).sum()
+    }
+
+    /// Per-table-entry sig values for a row whose pass-1 sum is `s` —
+    /// exactly the hoisted branch of [`Self::sig_row_at`], exposed for
+    /// the split-sweep merge (which always works per LUT address).
+    fn fill_sig_tab(&self, s: i32, sig_tab: &mut [i32]) {
+        match &self.softmax {
+            IntSoftmax::Rexp(e) => {
+                let w = e.tables().prec.w();
+                let a = e.alpha_for(s);
+                for (t, &ev) in sig_tab.iter_mut().zip(e.tables().recip_e.iter()) {
+                    *t = (ev * a) >> w;
+                }
+            }
+            IntSoftmax::Lut2d(e) => {
+                let col = e.col_for(s);
+                let t = e.tables();
+                for (slot, &r) in sig_tab.iter_mut().zip(t.row.iter()) {
+                    *slot = t.sigma_at(r as usize, col);
+                }
+            }
+        }
+    }
+
+    /// Merge the per-span partials of ONE group row into the row's
+    /// `(Σsig, acc)` pair — the LUT-exact reduction of the prefix-split
+    /// sweep.
+    ///
+    /// Each span `p` contributes its local max `m_p`, a histogram
+    /// `cnt_p[k]` of LUT addresses taken against `m_p`, and per-address
+    /// V sums `vs_p[k][·]`. Partials are span-major over a `rows`-row
+    /// group (span `p`'s block starts at `p · rows` entries /
+    /// `p · rows · T` histogram slots / `p · rows · T · d` V-sum lanes);
+    /// the caller offsets the slices to its row, and this fold strides
+    /// across spans. The fold rescales span `p` by
+    /// `sig(m − m_p)` in the LUT-index domain: every bucket shifts by
+    /// `Δ_p = map.index(m − m_p)` (saturating at the top address), which
+    /// is the fixed-point image of multiplying the span's partial sums by
+    /// `sig(m_global − m_span)`. When every `m − m_p` lands on an index
+    /// boundary ([`IntMap::shift_is_exact`]) the shifted addresses equal
+    /// the unsplit addresses element-for-element — truncation distributes
+    /// over a sum with a zero fractional part, and saturation composes —
+    /// so the merged row sum, normalizer, `Σsig` and `acc` are
+    /// **bit-identical** to [`Self::sig_row_at`] plus the unsplit sig×V
+    /// MAC (integer addition is associative; per-address regrouping of
+    /// `Σ_j sig_j·v_j` into `Σ_k sig[k]·Σ_{j∈k} v_j` is exact in i64).
+    ///
+    /// Otherwise each shifted address is at most ONE below the true
+    /// address (`trunc(a)+trunc(b) ∈ {trunc(a+b)−1, trunc(a+b)}`), the
+    /// tables are non-increasing, and the returned
+    /// [`SpanRowMerge::err_bound_int`] bounds the absolute error of any
+    /// output element's integer value `acc[·] − z_v·Σsig` — computed
+    /// from the adjacent-address / normalizer-interval discrepancy, never
+    /// assumed. Row sums are taken in i64 and wrapped to i32 so the
+    /// aligned case reproduces pass 1's release-mode arithmetic exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn merge_span_row(
+        &self,
+        map: IntMap,
+        zv: i32,
+        d: usize,
+        spans: usize,
+        rows: usize,
+        m_spans: &[i32],
+        cnts: &[i32],
+        vsums: &[i64],
+        merged_cnt: &mut [i32],
+        merged_vs: &mut [i64],
+        sig_tab: &mut [i32],
+        acc: &mut [i64],
+    ) -> SpanRowMerge {
+        let t_len = self.table().len();
+        let last = map.last();
+        debug_assert_eq!(merged_cnt.len(), t_len);
+        debug_assert!(merged_vs.len() >= t_len * d);
+        debug_assert!(spans >= 1 && rows >= 1);
+        debug_assert!(m_spans.len() > (spans - 1) * rows);
+        merged_cnt.fill(0);
+        merged_vs[..t_len * d].fill(0);
+        let m = (0..spans).map(|p| m_spans[p * rows]).max().unwrap_or(0);
+        // fold every span's histogram, shifted by Δ_p = index(m − m_p)
+        let mut aligned = true;
+        for p in 0..spans {
+            let dm = m - m_spans[p * rows];
+            let dl = map.index(dm);
+            if !map.shift_is_exact(dm) {
+                aligned = false;
+            }
+            let c = &cnts[p * rows * t_len..][..t_len];
+            let vs = &vsums[p * rows * t_len * d..][..t_len * d];
+            for (k, &ck) in c.iter().enumerate() {
+                if ck == 0 {
+                    continue;
+                }
+                let kk = (k as i32 + dl).min(last) as usize;
+                merged_cnt[kk] += ck;
+                for (o, &v) in merged_vs[kk * d..kk * d + d].iter_mut().zip(&vs[k * d..k * d + d]) {
+                    *o += v;
+                }
+            }
+        }
+        // merged pass-1 sum (i64 fold, wrapped to i32 like the serial +=)
+        let table = self.table();
+        let s64: i64 = merged_cnt
+            .iter()
+            .zip(table)
+            .map(|(&c, &t)| c as i64 * t as i64)
+            .sum();
+        let s = s64 as i32;
+        self.fill_sig_tab(s, sig_tab);
+        acc[..d].fill(0);
+        let mut sig_sum = 0i64;
+        for (k, &ck) in merged_cnt.iter().enumerate() {
+            if ck == 0 {
+                continue;
+            }
+            let g = sig_tab[k] as i64;
+            sig_sum += g * ck as i64;
+            for (a, &v) in acc[..d].iter_mut().zip(&merged_vs[k * d..k * d + d]) {
+                *a += g * v;
+            }
+        }
+        let err_bound_int = if aligned {
+            0
+        } else {
+            self.span_err_bound(map, zv, s, merged_cnt, table)
+        };
+        SpanRowMerge { sig_sum, aligned, err_bound_int }
+    }
+
+    /// Conservative integer error bound of a non-aligned merge (see
+    /// [`Self::merge_span_row`]): the true row sum lies in
+    /// `[s − U, s]` where `U = Σ_k cnt[k]·(T[k] − T[k+1])` (each true
+    /// address is `k` or `k+1`, tables non-increasing), every element's
+    /// true sig lies between the extremes of the sig chain over the
+    /// adjacent-address × normalizer-interval candidates, and
+    /// `|v − z_v| ≤ 128 + |z_v|`.
+    fn span_err_bound(&self, map: IntMap, zv: i32, s: i32, cnt: &[i32], table: &[i32]) -> i64 {
+        let t_len = table.len();
+        let last = map.last() as usize;
+        // U: how far the merged sum can overshoot the true sum
+        let mut u: i64 = 0;
+        for (k, &ck) in cnt.iter().enumerate() {
+            if ck == 0 {
+                continue;
+            }
+            let next = table[(k + 1).min(last)];
+            u += ck as i64 * (table[k] - next) as i64;
+        }
+        let s_lo = ((s as i64 - u).max(0)).min(s as i64) as i32;
+        // per-address sig extremes across {k, k+1} × the normalizer range
+        let mut disc_sum: i64 = 0;
+        match &self.softmax {
+            IntSoftmax::Rexp(e) => {
+                let t = e.tables();
+                let w = t.prec.w();
+                let (j_lo, j_hi) = ((s_lo >> w).max(0) as usize, (s >> w).max(0) as usize);
+                let (j_lo, j_hi) = (j_lo.min(t.alpha.len()), j_hi.min(t.alpha.len()));
+                let (mut a_min, mut a_max) = (i32::MAX, i32::MIN);
+                for j in j_lo..=j_hi {
+                    let a = if j >= t.alpha.len() { 0 } else { t.alpha[j] };
+                    a_min = a_min.min(a);
+                    a_max = a_max.max(a);
+                }
+                for (k, &ck) in cnt.iter().enumerate() {
+                    if ck == 0 {
+                        continue;
+                    }
+                    let (e0, e1) = (t.recip_e[k], t.recip_e[(k + 1).min(last)]);
+                    let hi = (e0.max(e1) * a_max) >> w;
+                    let lo = (e0.min(e1) * a_min) >> w;
+                    disc_sum += ck as i64 * (hi - lo) as i64;
+                }
+            }
+            IntSoftmax::Lut2d(e) => {
+                let t = e.tables();
+                let (c_lo, c_hi) = (e.col_for(s_lo), e.col_for(s));
+                for (k, &ck) in cnt.iter().enumerate() {
+                    if ck == 0 {
+                        continue;
+                    }
+                    let (mut lo, mut hi) = (i32::MAX, i32::MIN);
+                    for kv in [k, (k + 1).min(last)] {
+                        let r = t.row[kv] as usize;
+                        for col in c_lo.min(c_hi)..=c_lo.max(c_hi) {
+                            let sg = t.sigma_at(r, col);
+                            lo = lo.min(sg);
+                            hi = hi.max(sg);
+                        }
+                    }
+                    disc_sum += ck as i64 * (hi - lo) as i64;
+                }
+            }
+        }
+        (128 + zv.unsigned_abs() as i64) * disc_sum
     }
 
     /// One head: `q_h (L,d)`, `k_h/v_h (S,d)` raw i8 blocks → `o_h (L,d)`.

@@ -51,7 +51,10 @@ mod decode;
 mod kernel;
 
 pub use batch::{DecodeBatch, DecodeStepTask, WaveError, WaveStats};
-pub use decode::{parse_decode_route, DecodeAttention, DecodeRoute, SweepOrder, DECODE_AFFINE};
+pub use decode::{
+    parse_decode_route, spans_for, DecodeAttention, DecodeRoute, RouteError, SplitReport,
+    SweepOrder, DECODE_AFFINE,
+};
 pub use kernel::{AttnScratch, ComposedAttention, FusedAttention};
 
 use crate::lut::Precision;

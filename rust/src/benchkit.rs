@@ -44,6 +44,15 @@ pub fn flush_json() -> std::io::Result<Option<std::path::PathBuf>> {
     Ok(Some(path))
 }
 
+/// Names of every result recorded so far this process. The canonical-
+/// label gate in `softmax_bench` checks the single-source list
+/// (`scripts/bench_labels.txt`, the same file `bench_smoke.sh` greps
+/// against the JSON trajectory) against this at run time, so a label can
+/// neither be dropped from the bench nor added without being listed.
+pub fn recorded_names() -> Vec<String> {
+    registry().lock().unwrap().iter().map(|r| r.name.clone()).collect()
+}
+
 #[derive(Clone, Debug)]
 pub struct BenchResult {
     pub name: String,

@@ -572,8 +572,8 @@ struct WaveSlot {
 
 impl DecodePipeline {
     pub fn load(spec: &str, workers: usize) -> Result<Self> {
-        let route = attention::parse_decode_route(spec).ok_or_else(|| {
-            anyhow!("decode route {spec:?}: want decode:<rexp|lut2d>:<prec>[:aN][:gG][:pP][:fS]")
+        let route = attention::parse_decode_route(spec).map_err(|e| {
+            anyhow!("decode route {spec:?}: {e} (want decode:<rexp|lut2d>:<prec>[:aN][:gG][:pP][:fS])")
         })?;
         // as for the attention route: the pool's wrapped engine is off the
         // decode hot path (heads go through `scatter`), but keep its alpha
@@ -918,6 +918,18 @@ impl DecodePipeline {
     /// scheduler admits one step per session per round, so its rounds
     /// are always single waves.
     pub fn step_batch(&self, items: &[(u64, &Tensor, &Tensor, &Tensor)]) -> Vec<Reply> {
+        self.step_batch_excluding(items, &HashSet::new())
+    }
+
+    /// [`Self::step_batch`] with an eviction exclude set: mid-wave and
+    /// restore evictions spare `keep` (the scheduler passes the round's
+    /// sessions, whose pages its admission accounting already credited
+    /// or reserved — evicting one would spend them twice).
+    pub(super) fn step_batch_excluding(
+        &self,
+        items: &[(u64, &Tensor, &Tensor, &Tensor)],
+        keep: &HashSet<u64>,
+    ) -> Vec<Reply> {
         let mut replies: Vec<Option<Reply>> = items.iter().map(|_| None).collect();
         let mut remaining: Vec<usize> = (0..items.len()).collect();
         while !remaining.is_empty() {
@@ -931,10 +943,23 @@ impl DecodePipeline {
                     rest.push(i);
                 }
             }
-            self.step_wave_round(items, &wave, &mut replies);
+            self.step_wave_round(items, &wave, &mut replies, keep);
             remaining = rest;
         }
-        replies.into_iter().map(|r| r.expect("every step resolved")).collect()
+        // each wave resolves every slot it was handed, so an empty slot
+        // is an internal invariant breach — typed and counted, never a
+        // wire-reachable panic
+        replies
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.unwrap_or_else(|| {
+                    debug_assert!(false, "step {i} left unresolved by its wave");
+                    self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+                    Reply::Error(format!("internal: step {i} left unresolved by its wave"))
+                })
+            })
+            .collect()
     }
 
     /// One unique-session wave of a batched step round. Wave sequences
@@ -946,13 +971,14 @@ impl DecodePipeline {
         items: &[(u64, &Tensor, &Tensor, &Tensor)],
         wave: &[usize],
         replies: &mut [Option<Reply>],
+        keep: &HashSet<u64>,
     ) {
         let mut sessions = self.sessions.borrow_mut();
         let mut kv_ref = self.kv.borrow_mut();
         let mut slots: Vec<WaveSlot> = Vec::with_capacity(wave.len());
         for &i in wave {
             let (session, q, k, v) = items[i];
-            match self.admit_step(&mut sessions, &mut kv_ref, session, q, k, v) {
+            match self.admit_step(&mut sessions, &mut kv_ref, session, q, k, v, keep) {
                 Ok((seq, qb, kb, vb, out)) => {
                     slots.push(WaveSlot { idx: i, session, seq, q: qb, k: kb, v: vb, out })
                 }
@@ -978,12 +1004,14 @@ impl DecodePipeline {
         // mid-wave safety net: a page-boundary append the admission
         // accounting did not foresee evicts the youngest idle session
         // instead of starving the step (wave sessions are in-flight and
-        // thus never picked). With a fault plan armed, a failed append
-        // gets a few bare retries first — an injected fault is spurious
-        // and eviction would sacrifice a real session to it
-        let no_exclude = HashSet::new();
+        // thus never picked; `keep` spares the round's other sessions).
+        // With a fault plan armed, a failed append gets a few bare
+        // retries first — an injected fault is spurious and eviction
+        // would sacrifice a real session to it
         let mut spurious_retries = 0usize;
-        let (results, stats) = DecodeBatch::new(&self.decode).step_wave_with_stats(
+        let (results, stats) = DecodeBatch::new(&self.decode)
+            .with_split_min_tokens(self.sched_cfg.get().split_min_tokens)
+            .step_wave_with_stats(
             kvp,
             &mut tasks,
             &self.pool,
@@ -993,7 +1021,7 @@ impl DecodePipeline {
                     spurious_retries += 1;
                     return true;
                 }
-                let r = evict_youngest_session(&mut sessions, kv, &no_exclude);
+                let r = evict_youngest_session(&mut sessions, kv, keep);
                 if let Some((victim, pages)) = r {
                     let mut obs = self.obs.borrow_mut();
                     obs.evicted(names::EVICT_STEP);
@@ -1010,6 +1038,8 @@ impl DecodePipeline {
             obs.add(names::KV_BYTES_READ, stats.kv_bytes);
             obs.add(names::WAVE_ROWS, stats.rows as u64);
             obs.add(names::WAVE_MACS, stats.macs as u64);
+            obs.add(names::WAVE_SPAN_UNITS, stats.span_units as u64);
+            obs.add(names::WAVE_SPLIT_TASKS, stats.split_tasks as u64);
             obs.inc(if stats.inline { names::WAVE_INLINE } else { names::WAVE_SCATTER });
         }
         let mut spare_bufs = self.spare_bufs.borrow_mut();
@@ -1046,6 +1076,7 @@ impl DecodePipeline {
     /// rows with the route's fixed dyadic affine (the per-page
     /// quantization contract; see [`attention::DECODE_AFFINE`]).
     #[allow(clippy::type_complexity)]
+    #[allow(clippy::too_many_arguments)]
     fn admit_step(
         &self,
         sessions: &mut HashMap<u64, SessionKv>,
@@ -1054,6 +1085,7 @@ impl DecodePipeline {
         q: &Tensor,
         k: &Tensor,
         v: &Tensor,
+        keep: &HashSet<u64>,
     ) -> Result<(KvSeq, Vec<i8>, Vec<i8>, Vec<i8>, Vec<f32>)> {
         let (h, g, d) = validate_decode_step(q, k, v)?;
         if let Some(want) = self.route_kv_heads {
@@ -1085,7 +1117,7 @@ impl DecodePipeline {
         let seq = match std::mem::replace(slot, SessionKv::InFlight) {
             SessionKv::Live(s) => s,
             SessionKv::Evicted { groups, k: kl, v: vl, tokens } => {
-                match self.restore_session(sessions, kvp, session, groups, kl, vl, tokens) {
+                match self.restore_session(sessions, kvp, session, groups, kl, vl, tokens, keep) {
                     Ok(s) => s,
                     Err(e) => return Err(e.into()),
                 }
@@ -1100,11 +1132,32 @@ impl DecodePipeline {
     /// chunked prefill → [`Reply::Prefill`] (`(T', H, d)` like the query;
     /// row `t` bit-identical to the `t`-th single step's [`Reply::Token`])
     pub fn prefill(&self, session: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Reply {
-        self.try_prefill(session, q, k, v)
+        self.prefill_excluding(session, q, k, v, &HashSet::new())
+    }
+
+    /// [`Self::prefill`] with an eviction exclude set: the retry-loop
+    /// and restore evictions spare `keep` (the scheduler passes the
+    /// round's sessions — see `scheduler::execute`).
+    pub(super) fn prefill_excluding(
+        &self,
+        session: u64,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        keep: &HashSet<u64>,
+    ) -> Reply {
+        self.try_prefill(session, q, k, v, keep)
             .unwrap_or_else(|e| self.error_reply(&e))
     }
 
-    fn try_prefill(&self, session: u64, q: &Tensor, k: &Tensor, v: &Tensor) -> Result<Reply> {
+    fn try_prefill(
+        &self,
+        session: u64,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        keep: &HashSet<u64>,
+    ) -> Result<Reply> {
         let (t, h, g, d) = validate_decode_prefill(q, k, v)?;
         if let Some(want) = self.route_kv_heads {
             if g != want {
@@ -1122,7 +1175,8 @@ impl DecodePipeline {
         let mut seq = match std::mem::replace(slot, SessionKv::InFlight) {
             SessionKv::Live(s) => s,
             SessionKv::Evicted { groups, k: kl, v: vl, tokens } => {
-                match self.restore_session(&mut sessions, kvp, session, groups, kl, vl, tokens) {
+                match self.restore_session(&mut sessions, kvp, session, groups, kl, vl, tokens, keep)
+                {
                     Ok(s) => s,
                     Err(e) => return Err(e.into()),
                 }
@@ -1168,7 +1222,7 @@ impl DecodePipeline {
                         spurious_retries += 1;
                         continue;
                     }
-                    let evicted = evict_youngest_session(&mut sessions, kvp, &HashSet::new());
+                    let evicted = evict_youngest_session(&mut sessions, kvp, keep);
                     if let Some((victim, pages)) = evicted {
                         let mut obs = self.obs.borrow_mut();
                         obs.evicted(names::EVICT_PREFILL);
@@ -1212,6 +1266,7 @@ impl DecodePipeline {
         kl: Vec<i8>,
         vl: Vec<i8>,
         tokens: usize,
+        keep: &HashSet<u64>,
     ) -> Result<KvSeq, KvError> {
         let mut seq = KvSeq::new(groups, DECODE_AFFINE, DECODE_AFFINE);
         let mut spurious_retries = 0usize;
@@ -1235,8 +1290,9 @@ impl DecodePipeline {
                         continue;
                     }
                     // the in-flight slot keeps the session itself (and
-                    // any wave mates) off the victim list
-                    let evicted = evict_youngest_session(sessions, kvp, &HashSet::new());
+                    // any wave mates) off the victim list; `keep` spares
+                    // the round's other admitted sessions
+                    let evicted = evict_youngest_session(sessions, kvp, keep);
                     if let Some((victim, pages)) = evicted {
                         let mut obs = self.obs.borrow_mut();
                         obs.evicted(names::EVICT_RESTORE);

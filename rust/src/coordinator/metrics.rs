@@ -48,11 +48,15 @@ pub struct Counters {
     /// replies dropped because the client hung up (receiver gone); the
     /// session becomes reap-eligible
     pub dead_replies: u64,
+    /// requests a finished round failed to resolve — a scheduler
+    /// invariant breach (debug builds assert instead of counting);
+    /// answered with `Reply::Error` rather than a panic
+    pub unresolved: u64,
 }
 
 /// (field, registry series) pairs backing the registry projection — one
 /// table so `from_registry` and `from_stats_json` read the same names.
-const COUNTER_NAMES: [&str; 12] = [
+const COUNTER_NAMES: [&str; 13] = [
     names::SCHED_ROUNDS,
     names::SCHED_STEPS,
     names::SCHED_PREFILLS,
@@ -65,10 +69,11 @@ const COUNTER_NAMES: [&str; 12] = [
     names::SCHED_PANICKED,
     names::SCHED_REAPED,
     names::SCHED_DEAD_REPLIES,
+    names::SCHED_UNRESOLVED,
 ];
 
 impl Counters {
-    fn from_values(v: [u64; 12], peak: u64) -> Self {
+    fn from_values(v: [u64; 13], peak: u64) -> Self {
         Self {
             rounds: v[0],
             admitted_steps: v[1],
@@ -82,13 +87,14 @@ impl Counters {
             panicked: v[9],
             reaped: v[10],
             dead_replies: v[11],
+            unresolved: v[12],
             peak_queue_depth: peak,
         }
     }
 
     /// Project the registry's `sched_*` series into the snapshot struct.
     pub fn from_registry(reg: &MetricsRegistry) -> Self {
-        let mut v = [0u64; 12];
+        let mut v = [0u64; 13];
         for (slot, name) in v.iter_mut().zip(COUNTER_NAMES) {
             *slot = reg.counter(name);
         }
@@ -101,7 +107,7 @@ impl Counters {
     pub fn from_stats_json(stats: &Json) -> Option<Self> {
         let counters = stats.get("counters")?;
         let read = |name: &str| counters.get(name).and_then(Json::as_i64).unwrap_or(0) as u64;
-        let mut v = [0u64; 12];
+        let mut v = [0u64; 13];
         for (slot, name) in v.iter_mut().zip(COUNTER_NAMES) {
             *slot = read(name);
         }
@@ -135,7 +141,7 @@ impl Counters {
         format!(
             "rounds={} steps={} prefills={} evicted={} requeued={} exhausted={} \
              occ_sessions={:.2} occ_tokens={:.1} peak_queue={} \
-             shed={} panicked={} reaped={} dead={}",
+             shed={} panicked={} reaped={} dead={} unresolved={}",
             self.rounds,
             self.admitted_steps,
             self.admitted_prefills,
@@ -149,6 +155,7 @@ impl Counters {
             self.panicked,
             self.reaped,
             self.dead_replies,
+            self.unresolved,
         )
     }
 }
@@ -206,6 +213,7 @@ mod tests {
             panicked: 2,
             reaped: 1,
             dead_replies: 5,
+            unresolved: 6,
         }
     }
 
@@ -223,6 +231,7 @@ mod tests {
         r.add(names::SCHED_PANICKED, c.panicked);
         r.add(names::SCHED_REAPED, c.reaped);
         r.add(names::SCHED_DEAD_REPLIES, c.dead_replies);
+        r.add(names::SCHED_UNRESOLVED, c.unresolved);
         r.gauge_max(names::SCHED_QUEUE_PEAK, c.peak_queue_depth as i64);
         r
     }
@@ -243,6 +252,7 @@ mod tests {
         assert!(s.contains("panicked=2"), "{s}");
         assert!(s.contains("reaped=1"), "{s}");
         assert!(s.contains("dead=5"), "{s}");
+        assert!(s.contains("unresolved=6"), "{s}");
     }
 
     #[test]

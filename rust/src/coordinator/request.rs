@@ -51,6 +51,18 @@
 //!   unchanged bit-for-bit versus the head-major sweep (pinned by the
 //!   group-vs-head axis of `integration_conformance.rs`, as the
 //!   scheduler's guarantees are pinned by its arrival-schedule axis).
+//! * **Prefix-split independence.** With
+//!   `SchedConfig::split_min_tokens` > 0 the waves split long prefixes
+//!   into page-aligned spans merged through the LUT-exact partial-
+//!   softmax reduction (`attention::decode` module docs). The split is
+//!   **not** wire-visible: replies stay bit-identical to the unsplit
+//!   sweep whenever the merged rows' span maxima are LUT-index-aligned,
+//!   and within the kernel's stated per-element merge bound otherwise
+//!   (conformance invariant 9); failure semantics (the table below),
+//!   per-session ordering, and eviction behavior are unchanged. The only
+//!   trace of a split is telemetry (`wave_span_units_total`,
+//!   `wave_split_tasks_total`). The serving default is 0 — splitting
+//!   off, replies unconditionally bit-identical.
 //!
 //! # Failure semantics
 //!

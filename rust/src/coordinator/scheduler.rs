@@ -43,6 +43,12 @@
 //! resolve as typed, retryable [`Reply::Exhausted`]. Every pass
 //! therefore admits or resolves at least its front item, which is the
 //! no-starvation argument: the queue strictly shrinks or executes.
+//! Admission accounting stays valid through execution because every
+//! eviction a round performs — at admission *and* inside the execute
+//! phase (prefill retry, mid-wave append, restore) — excludes the
+//! round's own sessions: a credited close or reserved step whose pages
+//! were spent twice would otherwise exhaust a step the round had
+//! already funded.
 //!
 //! # Graceful degradation
 //!
@@ -107,6 +113,12 @@ pub struct SchedConfig {
     /// reap sessions idle for this many engine batches (see
     /// `DecodePipeline::run_batch`); 0 disables the reaper
     pub idle_ttl_batches: usize,
+    /// prefix-split threshold for decode waves: a step whose session
+    /// holds at least this many resident tokens sweeps its prefix as
+    /// page-aligned spans (`DecodeBatch::with_split_min_tokens`), so one
+    /// long-context session stops monopolizing a round's wall clock; 0
+    /// (the default) keeps the unsplit sweep
+    pub split_min_tokens: usize,
 }
 
 impl Default for SchedConfig {
@@ -119,6 +131,7 @@ impl Default for SchedConfig {
             deadline_rounds: 0,
             max_waiting_items: 0,
             idle_ttl_batches: 0,
+            split_min_tokens: 0,
         }
     }
 }
@@ -290,7 +303,20 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
         }
         pipe.obs_mut().stage_end(names::ROUND_US, round_t, &[("queue", pending.len() as i64)]);
     }
-    replies.into_iter().map(|r| r.expect("every request resolved")).collect()
+    // every scheduling path above resolves its items (the no-starvation
+    // argument), so an unresolved slot is an internal invariant breach —
+    // answer it typed and counted instead of panicking the wire loop
+    replies
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| {
+            r.unwrap_or_else(|| {
+                debug_assert!(false, "request {i} left unresolved by the round loop");
+                pipe.obs_mut().inc(names::SCHED_UNRESOLVED);
+                Reply::Error(format!("internal: request {i} left unresolved by the scheduler"))
+            })
+        })
+        .collect()
 }
 
 /// One admission pass over the pending queue (see the module docs).
@@ -404,6 +430,14 @@ fn assemble(
 /// pages), then opens (ids in arrival order), then prefills, then ALL
 /// admitted steps as one wave. Cross-session reorder within a round is
 /// unobservable — a round holds at most one item per session.
+///
+/// The round's sessions are threaded into every execute-phase eviction
+/// (prefill retry, mid-wave append, evicted-session restore) as an
+/// exclude set: admission credited a close's pages and reserved a
+/// step/prefill's pages **assuming every round session survives to its
+/// own item**, so evicting one mid-round would spend the same pages
+/// twice and surface `KvError::Exhausted` on a step the accounting had
+/// already funded.
 fn execute(
     pipe: &DecodePipeline,
     items: &[Item<'_>],
@@ -411,6 +445,8 @@ fn execute(
     replies: &mut [Option<Reply>],
     ages: &[u64],
 ) {
+    let round_sessions: HashSet<u64> =
+        admitted.iter().filter_map(|&i| items[i].session()).collect();
     for &i in admitted {
         if let Item::Close(s) = &items[i] {
             replies[i] = Some(pipe.close(*s));
@@ -425,7 +461,7 @@ fn execute(
     let mut prefills = 0u64;
     for &i in admitted {
         if let Item::Prefill { session, q, k, v, .. } = &items[i] {
-            replies[i] = Some(pipe.prefill(*session, q, k, v));
+            replies[i] = Some(pipe.prefill_excluding(*session, q, k, v, &round_sessions));
             prefills += 1;
         }
     }
@@ -458,7 +494,7 @@ fn execute(
             }
         }
         let wave_t = pipe.obs_mut().stage_begin("wave");
-        let results = pipe.step_batch(&wave_items);
+        let results = pipe.step_batch_excluding(&wave_items, &round_sessions);
         pipe.obs_mut().stage_end(names::ROUND_WAVE_US, wave_t, &[("steps", wave.len() as i64)]);
         for (&i, r) in wave.iter().zip(results) {
             replies[i] = Some(r);

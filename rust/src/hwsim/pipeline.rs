@@ -306,6 +306,49 @@ pub fn simulate_decode(design: &Design, cfg: DecodeSimConfig) -> SimReport {
     }
 }
 
+/// Fixed per-span activation cost of the prefix-split sweep, in cycles:
+/// planning the span's page range and owning/zeroing its partial buffers
+/// — the hwsim mirror of the wave layer fanning one group task into
+/// span units.
+const SPAN_SETUP_CYCLES: u64 = 8;
+
+/// [`simulate_decode`] with the prefix-split sweep: `spans` span units
+/// per stored-head group per step, merged per query row — the hwsim
+/// mirror of `DecodeAttention::step_split` and the wave layer's
+/// S×G×spans units.
+///
+/// The MAC / softmax / gather work and the K/V traffic are **invariant**
+/// in the span count: a group's spans partition its pages, so splitting
+/// never re-reads ([`SimReport::kv_bytes_read`] and [`SimReport::elems`]
+/// match the unsplit run exactly, as the software conformance invariant
+/// demands bit-identical output). What splitting *costs* is the span
+/// fan-out ([`SPAN_SETUP_CYCLES`] per span unit per step) and the merge
+/// fold — each query row re-accumulates its spans' partial V sums
+/// (`spans · d_head` adds per row per step) behind the global-max
+/// reduction. `spans = 1` is the unsplit model, identical to
+/// [`simulate_decode`]. What splitting *buys* — span workers on
+/// parallel lanes — is a latency question composed via
+/// [`simulate_row_parallel`]-style sharding; this model charges the
+/// extra work honestly so that trade is visible.
+pub fn simulate_decode_split(design: &Design, cfg: DecodeSimConfig, spans: usize) -> SimReport {
+    use super::units::OpKind::Add;
+    let base = simulate_decode(design, cfg);
+    let spans = spans.max(1) as u64;
+    if spans == 1 {
+        return base;
+    }
+    let w = design.prec.w();
+    let steps = cfg.seq_len as u64;
+    let setup = cfg.kv_heads as u64 * spans * SPAN_SETUP_CYCLES;
+    let folds = cfg.q_heads as u64 * spans * cfg.d_head as u64;
+    let fold_cycles = chain_cycles(design, &[Add], folds.div_ceil(cfg.lanes as u64), w);
+    SimReport {
+        cycles: base.cycles + steps * (setup + fold_cycles),
+        energy: base.energy + steps as f64 * folds as f64 * Add.cost(w).energy,
+        ..base
+    }
+}
+
 /// Fixed per-wave scheduling cost of a decode serving round, in cycles:
 /// waking the head-task pool, fetching page tables and setting up the
 /// page gather. Paid once per *round* when rounds are batched
@@ -565,6 +608,35 @@ mod tests {
             assert_eq!(b.kv_bytes_read, s as u64 * base.kv_bytes_read);
             assert_eq!(b.kv_bytes_read, ser.kv_bytes_read);
         }
+    }
+
+    #[test]
+    fn split_decode_charges_fanout_and_merge_but_not_traffic() {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 8,
+            kv_heads: 2,
+            seq_len: 32,
+            d_head: 32,
+            page_size: 16,
+            lanes: 4,
+        };
+        let base = simulate_decode(&d, cfg);
+        // spans = 1 is the unsplit model, identical
+        let one = simulate_decode_split(&d, cfg, 1);
+        assert_eq!(one.cycles, base.cycles);
+        assert_eq!(one.energy, base.energy);
+        // splitting pays fan-out + merge in cycles AND energy...
+        let two = simulate_decode_split(&d, cfg, 2);
+        let four = simulate_decode_split(&d, cfg, 4);
+        assert!(two.cycles > base.cycles);
+        assert!(two.energy > base.energy);
+        assert!(four.cycles > two.cycles, "more spans, more merge work");
+        assert!(four.energy > two.energy);
+        // ...but never re-reads or re-scores: traffic and score elements
+        // are span-invariant, like the software's bit-identity contract
+        assert_eq!(four.kv_bytes_read, base.kv_bytes_read);
+        assert_eq!(four.elems, base.elems);
     }
 
     #[test]

@@ -491,13 +491,34 @@ impl KvPool {
         gi: usize,
         valid: usize,
     ) -> impl Iterator<Item = PageBlock<'a>> + 'a {
+        self.page_blocks_range(seq, gi, valid, 0..seq.pages().len())
+    }
+
+    /// [`Self::page_blocks`] restricted to the page-index span
+    /// `pages.start .. pages.end` of the sequence's page table — the
+    /// gather unit of the prefix-split decode sweep: each span worker
+    /// walks only its page-aligned slice of the prefix, and the spans of
+    /// a partition yield exactly the blocks of the unsplit walk
+    /// (`Σ_span Σ len == valid`). Out-of-table indices are clipped, so a
+    /// span planned past the resident prefix is an empty iteration, not
+    /// a panic.
+    pub fn page_blocks_range<'a>(
+        &'a self,
+        seq: &'a KvSeq,
+        gi: usize,
+        valid: usize,
+        pages: std::ops::Range<usize>,
+    ) -> impl Iterator<Item = PageBlock<'a>> + 'a {
         debug_assert!(gi < self.cfg.kv_heads);
         debug_assert!(valid <= seq.len());
         let (d, psize) = (self.cfg.d_head, self.cfg.page_size);
-        seq.pages()
+        let hi = pages.end.min(seq.pages().len());
+        let lo = pages.start.min(hi);
+        seq.pages()[lo..hi]
             .iter()
             .enumerate()
-            .map(move |(pi, &page)| {
+            .map(move |(i, &page)| {
+                let pi = lo + i;
                 let len = valid.saturating_sub(pi * psize).min(psize);
                 let off = page as usize * self.cfg.page_elems() + gi * psize * d;
                 let soff = page as usize * self.cfg.sum_elems() + gi * psize;
@@ -656,6 +677,41 @@ mod tests {
                     assert_eq!(b.ksum, &pool.page_ksum(page, gi)[..b.len]);
                     assert_eq!((b.k_affine, b.v_affine), pool.page_affines(page));
                 }
+            }
+        }
+        pool.close(seq);
+    }
+
+    #[test]
+    fn page_blocks_range_spans_partition_the_unsplit_walk() {
+        let mut rng = Rng::new(21);
+        let mut pool = pool4();
+        let mut seq = seq_for(&pool);
+        let (g, ps) = (2usize, 4usize);
+        for _ in 0..13 {
+            let kr = rand_row(&mut rng, g * 8);
+            let vr = rand_row(&mut rng, g * 8);
+            pool.append(&mut seq, &kr, &vr).unwrap();
+        }
+        for gi in 0..g {
+            for valid in 1..=seq.len() {
+                let full: Vec<_> = pool.page_blocks(&seq, gi, valid).collect();
+                let npages = valid.div_ceil(ps);
+                // any split point: the two spans yield exactly the full walk
+                for cut in 0..=npages {
+                    let a: Vec<_> = pool.page_blocks_range(&seq, gi, valid, 0..cut).collect();
+                    let b: Vec<_> =
+                        pool.page_blocks_range(&seq, gi, valid, cut..seq.pages().len()).collect();
+                    assert_eq!(a.len() + b.len(), full.len(), "valid={valid} cut={cut}");
+                    for (x, y) in a.iter().chain(b.iter()).zip(&full) {
+                        assert_eq!(x.k, y.k);
+                        assert_eq!(x.v, y.v);
+                        assert_eq!(x.ksum, y.ksum);
+                        assert_eq!(x.len, y.len);
+                    }
+                }
+                // a span past the resident prefix is empty, not a panic
+                assert_eq!(pool.page_blocks_range(&seq, gi, valid, npages..npages + 4).count(), 0);
             }
         }
         pool.close(seq);

@@ -208,6 +208,7 @@ fn serve_decode(
     // the route's gG fixes the stored-head count the server accepts;
     // generate matching traffic (absent: MHA)
     let g = lutmax::attention::parse_decode_route(variant)
+        .ok()
         .and_then(|r| r.kv_heads)
         .unwrap_or(h);
     let sessions = (steps / 8).clamp(1, 8);

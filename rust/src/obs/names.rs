@@ -8,7 +8,7 @@
 //! conventions: `_total` for monotone counters, `_us` for microsecond
 //! histograms, bare nouns for gauges.
 
-// -- scheduler counters (the 13 `Counters` fields) -----------------------
+// -- scheduler counters (the 14 `Counters` fields) -----------------------
 
 pub const SCHED_ROUNDS: &str = "sched_rounds_total";
 pub const SCHED_STEPS: &str = "sched_steps_total";
@@ -22,6 +22,9 @@ pub const SCHED_SHED: &str = "sched_shed_total";
 pub const SCHED_PANICKED: &str = "sched_panicked_total";
 pub const SCHED_REAPED: &str = "sched_reaped_total";
 pub const SCHED_DEAD_REPLIES: &str = "sched_dead_replies_total";
+/// requests a finished round failed to resolve (scheduler invariant
+/// breach — debug builds assert instead); answered with `Reply::Error`
+pub const SCHED_UNRESOLVED: &str = "sched_unresolved_total";
 /// gauge (running max): deepest waiting queue observed at round assembly
 pub const SCHED_QUEUE_PEAK: &str = "sched_queue_depth_peak";
 
@@ -57,6 +60,11 @@ pub const WAVE_ROWS: &str = "wave_rows_total";
 pub const WAVE_MACS: &str = "wave_macs_total";
 pub const WAVE_INLINE: &str = "wave_inline_total";
 pub const WAVE_SCATTER: &str = "wave_scatter_total";
+/// prefix-span sweep units submitted across waves (0 unless the
+/// prefix-split sweep is enabled via `split_min_tokens`)
+pub const WAVE_SPAN_UNITS: &str = "wave_span_units_total";
+/// decode tasks that ran the prefix-split sweep (spans ≥ 2)
+pub const WAVE_SPLIT_TASKS: &str = "wave_split_tasks_total";
 
 // -- hwsim-only charge exports -------------------------------------------
 

@@ -218,6 +218,23 @@ impl IntMap {
     pub(crate) fn clamps(&self, d: i32) -> bool {
         (d as i64 * self.mult) >> self.shift > self.last
     }
+
+    /// Does diff `d` land exactly on a LUT-index boundary — i.e. is
+    /// `d * mult` a multiple of `2^shift`, so the truncation in
+    /// [`Self::index`] drops nothing?
+    ///
+    /// This is the split-merge alignment predicate: when a span's
+    /// max-to-global-max diff `m − m_span` is index-aligned,
+    /// `index(a + d) == index(a) + index(d)` for every in-span diff `a`
+    /// (truncation distributes over a sum with a zero fractional part),
+    /// so shifting a span's LUT-address histogram by `index(d)` reproduces
+    /// the unsplit addresses bit-for-bit. `d == 0` and unit maps are
+    /// always aligned.
+    #[inline]
+    pub(crate) fn shift_is_exact(&self, d: i32) -> bool {
+        debug_assert!(d >= 0, "alignment is asked of non-negative diffs");
+        (d as i64 * self.mult) & ((1i64 << self.shift) - 1) == 0
+    }
 }
 
 /// Sampled LUT range telemetry (see [`crate::obs::range`]): when the
@@ -580,6 +597,29 @@ mod tests {
                 assert_eq!(m.index(d), want, "step {step} d {d}");
             }
         }
+    }
+
+    #[test]
+    fn int_map_shift_is_exact_marks_boundary_diffs() {
+        // unit map: every diff is on a boundary
+        let m = IntMap::new(1.0, 7);
+        for d in 0..32 {
+            assert!(m.shift_is_exact(d), "unit map d={d}");
+        }
+        // dyadic half-step: even diffs aligned, odd diffs not
+        let m = IntMap::new(0.5, 100);
+        for d in 0..64 {
+            assert_eq!(m.shift_is_exact(d), d % 2 == 0, "step 0.5 d={d}");
+        }
+        // aligned diffs really do distribute through index()
+        for d in (0..64).filter(|d| d % 2 == 0) {
+            for a in 0..64 {
+                assert_eq!(m.index(a + d), m.index(a) + m.index(d), "a={a} d={d}");
+            }
+        }
+        // non-dyadic step: only d = 0 is guaranteed aligned
+        let m = IntMap::new(0.37, 100);
+        assert!(m.shift_is_exact(0));
     }
 
     #[test]

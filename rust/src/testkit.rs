@@ -177,6 +177,11 @@ pub struct ConformanceCase {
     /// every injected fault surfaces as exactly one typed reply, and
     /// the arena's free list round-trips
     pub faults: u64,
+    /// requested prefix-split span count for the split-decode invariant
+    /// (invariant 9): `1` = unsplit, `2` = two spans, `0` = per-page
+    /// sentinel (as many spans as resident pages; the kernel clamps the
+    /// request to the page count)
+    pub spans: usize,
     pub seed: u64,
 }
 
@@ -242,6 +247,10 @@ pub fn conformance_sweep() -> Vec<ConformanceCase> {
             arrival: rng.next_u64(),
             // fault axis appended after `arrival`, same append-only rule
             faults: rng.next_u64(),
+            // span axis appended after `faults` (same append-only rule);
+            // rotates {unsplit, two spans, per-page} so every sweep
+            // exercises all three split shapes
+            spans: [1usize, 2, 0][rng.usize(0, 2)],
             seed: 0xC0DE_0000 + i as u64,
         });
     }
@@ -302,6 +311,12 @@ mod tests {
         let distinct_faults: std::collections::HashSet<u64> =
             a.iter().map(|c| c.faults).collect();
         assert!(distinct_faults.len() > 1, "fault axis must vary");
+        for c in &a {
+            assert!(matches!(c.spans, 0 | 1 | 2), "{c:?} spans out of range");
+        }
+        let distinct_spans: std::collections::HashSet<usize> =
+            a.iter().map(|c| c.spans).collect();
+        assert!(distinct_spans.len() > 1, "span axis must vary");
     }
 
     #[test]

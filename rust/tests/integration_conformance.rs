@@ -37,6 +37,12 @@
 //!    stays bit-identical to serial per-session replay, nothing hangs
 //!    or poisons a lock, and the KV free list still round-trips after
 //!    the closes.
+//! 9. the prefix-split decode sweep: `step_split` with the case's span
+//!    request (`case.spans` ∈ {1, 2, per-page}) against the unsplit
+//!    group-major `step` on a paired arena — bit-identical whenever the
+//!    merge reports its span maxima LUT-index-aligned (always at
+//!    spans == 1), and within the report's stated per-element bound
+//!    otherwise; the KV free list round-trips on both arenas.
 //!
 //! `cargo test -q` runs the small sweep; `CONFORMANCE_FULL=1` (the CI
 //! `test-heavy` gate, `make test-heavy`) widens it.
@@ -852,5 +858,94 @@ fn par_pool_bit_exact_with_sequential_engine() {
             seq.apply_i8(&xi, case.n, row),
             "{case:?} (i8)"
         );
+    }
+}
+
+/// Invariant 9: the prefix-split decode sweep. Per case, every session
+/// streams `seq_len` tokens through paired arenas: the reference takes
+/// unsplit group-major `step`s, the subject takes `step_split` with the
+/// case's span request (`case.spans`: 1 = unsplit, 2 = two spans, 0 =
+/// the per-page sentinel, sent as a `usize::MAX` request the kernel
+/// clamps to the resident page count). Whenever the merge reports every
+/// row's span maxima LUT-index-aligned the outputs must be
+/// bit-identical (always at an effective span count of 1); otherwise
+/// every output element differs from the unsplit sweep by at most the
+/// report's stated bound. Both free lists round-trip on close.
+#[test]
+fn split_decode_bit_identical_when_aligned_and_bounded_otherwise() {
+    for case in conformance_sweep() {
+        let mut rng = Rng::new(case.seed);
+        let (h, g, d, s) = (case.heads, case.kv_heads, case.d_head, case.sessions);
+        let t_total = case.seq_len;
+        let groups = HeadGroups::new(h, g).unwrap();
+        let affine = quant::Affine { scale: case.scale, zero_point: case.zero_point };
+        let dec = DecodeAttention::new(case.mode, case.prec, None).unwrap();
+        let span_req = if case.spans == 0 { usize::MAX } else { case.spans };
+        let pages = s * t_total.div_ceil(case.page_size) + 2;
+        let cfg = KvConfig { pages, page_size: case.page_size, kv_heads: g, d_head: d };
+        let (mut kv_u, mut kv_s) = (KvPool::new(cfg), KvPool::new(cfg));
+        let mut seqs_u: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, affine, affine)).collect();
+        let mut seqs_s: Vec<KvSeq> = (0..s).map(|_| KvSeq::new(groups, affine, affine)).collect();
+        let mut scr = AttnScratch::new();
+        for t in 0..t_total {
+            for i in 0..s {
+                let q = i8_batch(&mut rng, h * d);
+                let k = i8_batch(&mut rng, g * d);
+                let v = i8_batch(&mut rng, g * d);
+                let mut want = vec![0.0f32; h * d];
+                dec.step(&mut kv_u, &mut seqs_u[i], &q, affine, &k, &v, &mut want, &mut scr)
+                    .unwrap();
+                let mut got = vec![0.0f32; h * d];
+                let rep = dec
+                    .step_split(
+                        &mut kv_s,
+                        &mut seqs_s[i],
+                        &q,
+                        affine,
+                        &k,
+                        &v,
+                        span_req,
+                        &mut got,
+                        &mut scr,
+                    )
+                    .unwrap();
+                // the effective span count is the request clamped to the
+                // resident page count (the step appended one token first)
+                let npages = (t + 1).div_ceil(case.page_size).max(1);
+                assert_eq!(rep.spans, span_req.clamp(1, npages), "{case:?} t={t} session {i}");
+                if rep.spans == 1 {
+                    assert!(rep.aligned, "{case:?} t={t}: a single span is always aligned");
+                }
+                if rep.aligned {
+                    assert_eq!(rep.bound, 0.0, "{case:?} t={t} session {i}");
+                    assert_eq!(
+                        got, want,
+                        "{case:?} t={t} session {i}: aligned split must be bit-identical"
+                    );
+                } else {
+                    assert!(
+                        rep.bound > 0.0 && rep.bound.is_finite(),
+                        "{case:?} t={t} session {i}: unaligned merge must state a bound, got {}",
+                        rep.bound
+                    );
+                    for (j, (&a, &b)) in got.iter().zip(&want).enumerate() {
+                        assert!(
+                            (a - b).abs() <= rep.bound,
+                            "{case:?} t={t} session {i} elem {j}: |{a} - {b}| = {} > bound {}",
+                            (a - b).abs(),
+                            rep.bound
+                        );
+                    }
+                }
+            }
+        }
+        for seq in seqs_u {
+            kv_u.close(seq);
+        }
+        assert_eq!(kv_u.free_pages(), pages, "{case:?}: unsplit arena round-trips");
+        for seq in seqs_s {
+            kv_s.close(seq);
+        }
+        assert_eq!(kv_s.free_pages(), pages, "{case:?}: split arena round-trips");
     }
 }

@@ -628,6 +628,102 @@ fn single_session_overflow_replies_typed_exhaustion_and_close_reclaims() {
     assert_eq!(p.kv_pages(), Some((1, 1)), "close reclaims the page");
 }
 
+/// Same-round close credit: a `DecodeClose` and a page-needing step from
+/// ANOTHER session land in one `run_batch` on a completely full arena.
+/// Admission funds the step against the close's credited pages, closes
+/// execute first, so the step must land — no typed exhaustion, no
+/// eviction, and the freed page is spent exactly once.
+#[test]
+fn same_round_close_credit_funds_admission_without_exhaustion() {
+    let (h, g, d) = (2usize, 1usize, 4usize);
+    // 2 pages x 16 slots
+    let p = DecodePipeline::load("decode:rexp:uint8:p2", 2).unwrap();
+    let mut rng = Rng::new(512);
+    let opens = vec![Payload::DecodeOpen, Payload::DecodeOpen];
+    let refs: Vec<&Payload> = opens.iter().collect();
+    let ids: Vec<u64> = p
+        .run_batch(&refs)
+        .into_iter()
+        .map(|r| match r {
+            Reply::Session(id) => id,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+
+    // session 0 takes one token (holds a page); session 1's 16-token
+    // prompt fills its page exactly, so its NEXT step needs a fresh page
+    let (sq, sk, sv) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+    let s0 = Payload::DecodeStep { session: ids[0], q: sq, k: sk, v: sv };
+    assert!(matches!(&p.run_batch(&[&s0])[0], Reply::Token(_)));
+    let (cq, ck, cv) = workload::decode_prefill_chunk(&mut rng, 16, h, g, d, 1.0);
+    let pre = Payload::DecodePrefill { session: ids[1], q: cq, k: ck, v: cv };
+    assert!(matches!(&p.run_batch(&[&pre])[0], Reply::Prefill(_)));
+    assert_eq!(p.kv_pages(), Some((0, 2)), "arena completely full");
+
+    // one call, one round: the close's credit is the ONLY funding for
+    // the step's page reservation
+    let close = Payload::DecodeClose(ids[0]);
+    let (q2, k2, v2) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+    let step = Payload::DecodeStep { session: ids[1], q: q2, k: k2, v: v2 };
+    let replies = p.run_batch(&[&close, &step]);
+    match &replies[0] {
+        Reply::Closed { pages } => assert_eq!(*pages, 1),
+        other => panic!("close: unexpected {other:?}"),
+    }
+    assert!(
+        matches!(&replies[1], Reply::Token(_)),
+        "close-credited step must land, got {:?}",
+        replies[1]
+    );
+    let c = p.sched_counters();
+    assert_eq!(c.exhausted, 0, "the same-round close funds the step");
+    assert_eq!(c.evicted, 0, "credit, not eviction, covers the reservation");
+    assert_eq!(c.unresolved, 0);
+    // session 1 now holds 17 tokens = both pages; nothing leaked
+    assert_eq!(p.kv_pages(), Some((0, 2)));
+    match &p.run_batch(&[&Payload::DecodeClose(ids[1])])[0] {
+        Reply::Closed { pages } => assert_eq!(*pages, 2),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(p.kv_pages(), Some((2, 2)), "arena round-trips");
+}
+
+/// Malformed decode-route specs through the serving loader: every
+/// suffix failure class is a TYPED `RouteError` from the parser, and
+/// `DecodePipeline::load` surfaces it as a load error carrying the
+/// parser's message — never a panic, never a silent default.
+#[test]
+fn malformed_route_specs_are_typed_errors_at_parse_and_load() {
+    use lutmax::attention::{parse_decode_route, RouteError};
+    let cases: &[(&str, RouteError)] = &[
+        ("attn:rexp:uint8", RouteError::Scheme),
+        ("decode:exact:uint8", RouteError::Mode("exact".into())),
+        ("decode:rexp", RouteError::Precision("".into())),
+        ("decode:rexp:uint9", RouteError::Precision("uint9".into())),
+        ("decode:rexp:uint8:", RouteError::Segment("".into())),
+        ("decode:rexp:uint8:x3", RouteError::Segment("x3".into())),
+        ("decode:rexp:uint8::g2", RouteError::Segment("".into())),
+        ("decode:rexp:uint8:g2:g4", RouteError::Duplicate('g')),
+        ("decode:rexp:uint8:p8:p8", RouteError::Duplicate('p')),
+        ("decode:rexp:uint8:f1:f2", RouteError::Duplicate('f')),
+        ("decode:rexp:uint8:fXYZ", RouteError::Value('f', "XYZ".into())),
+        ("decode:rexp:uint8:pq", RouteError::Value('p', "q".into())),
+        ("decode:rexp:uint8:g", RouteError::Value('g', "".into())),
+        ("decode:rexp:uint8:g0", RouteError::Zero('g')),
+        ("decode:rexp:uint8:p0", RouteError::Zero('p')),
+    ];
+    for (spec, want) in cases {
+        assert_eq!(parse_decode_route(spec), Err(want.clone()), "parse {spec:?}");
+        let err = DecodePipeline::load(spec, 1).expect_err(&format!("load {spec:?} must fail"));
+        assert!(
+            err.to_string().contains(&want.to_string()),
+            "load {spec:?}: error {err:#} must carry the parser's {want}"
+        );
+    }
+    // the suffix grammar itself still admits the full well-formed spec
+    assert!(parse_decode_route("decode:lut2d:int16:a512:g2:p256:f7").is_ok());
+}
+
 /// Chaos soak through the serving route: 12 sessions whose total demand
 /// is ~3x the arena, randomized interleavings split across many
 /// `run_batch` calls (evicted replay state must survive call

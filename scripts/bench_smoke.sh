@@ -25,39 +25,16 @@ done
 # bench label would otherwise shrink the perf trajectory without anyone
 # noticing. The first toolchain-bearing CI run commits the baseline this
 # list describes; later runs fail loudly if a label goes missing.
-# (Machine-dependent labels like par/<mode>/w<cores> are deliberately
-# not listed.)
+# The list itself is single-sourced in scripts/bench_labels.txt —
+# softmax_bench include_str!'s the SAME file and asserts every listed
+# label was recorded, so the two gates cannot drift.
 SOFTMAX_JSON="${OUT_DIR}/BENCH_softmax.json"
-required_labels=(
-    "uint8/exact"
-    "uint8/rexp"
-    "uint8/lut2d"
-    "i8/rexp"
-    "i8_ref/rexp"
-    "i8/lut2d"
-    "i8_ref/lut2d"
-    "rexp/uint8"
-    "lut2d/n=256"
-    "attn/h8/L128"
-    "attn_unfused/h8/L128"
-    "decode/h4/g4/L64"
-    "decode/h8/g8/L128"
-    "decode/h8/g2/L128"
-    "decode_gqa_vs_mha"
-    "decode_groupmajor/h4/g4/L64"
-    "decode_groupmajor/h8/g8/L128"
-    "decode_groupmajor/h8/g2/L128"
-    "decode_batch/s4/h8/L64"
-    "decode_batch_serial/s4/h8/L64"
-    "decode_batch/s16/h8/L64"
-    "decode_batch_serial/s16/h8/L64"
-    "decode_sched/s8/p32/mixed"
-    "decode_sched_barrier/s8/p32/mixed"
-    "decode_sched/s16/p8/evict"
-    "decode_sched_fault/s8/p32/f7"
-    "decode_sched_fault/s16/p8/f7"
-    "decode_sched_traced/s8/p32"
-)
+required_labels=()
+while IFS= read -r line; do
+    line="${line%%#*}"
+    line="$(echo "${line}" | xargs)"
+    [ -n "${line}" ] && required_labels+=("${line}")
+done < scripts/bench_labels.txt
 missing=0
 for label in "${required_labels[@]}"; do
     if ! grep -qF "\"${label}\"" "${SOFTMAX_JSON}"; then
