@@ -4,7 +4,7 @@
 # PJRT-backed paths; everything else (software models, hwsim, CPU-fallback
 # serving, benches) runs from the rust tree alone.
 
-.PHONY: all build test test-heavy bench-smoke bench clean
+.PHONY: all build test test-heavy soak bench-smoke bench clean
 
 all: build
 
@@ -23,6 +23,16 @@ test:
 # the case table (see rust/src/testkit.rs, conformance_sweep).
 test-heavy:
 	CONFORMANCE_FULL=1 cargo test -q --test integration_conformance
+
+# Robustness soak (CI job `soak`): the evict-to-host spill, victim-policy
+# and drain/restart surfaces under load and armed faults — the spill/drain
+# conformance invariant at the full sweep budget (every victim policy,
+# mid-stream restart, a deliberately rotted host copy), plus the
+# fault-armed drain-mid-traffic and victim-policy differential soaks.
+# Bit-identity and counter/trace reconciliation are enforced throughout.
+soak:
+	CONFORMANCE_FULL=1 cargo test -q --test integration_conformance -- spill dead
+	cargo test -q --test integration_decode_batch -- drain_mid_soak victim_policies
 
 bench-smoke: test
 	bash scripts/bench_smoke.sh

@@ -58,6 +58,15 @@
 //!                         ratio against the matching decode_sched/*
 //!                         label prices the armed fault plan + the
 //!                         containment plumbing under fire
+//!   decode_sched_spill/s<S>/p<P>  the evict fleet with a graceful
+//!                         drain() + adopt_spill() restart inserted
+//!                         mid-decode — every session spills host-side
+//!                         and restores lazily via the checksummed
+//!                         copy-back rung
+//!   decode_sched_spill_replay/s<S>/p<P>  the same, with SpillCorrupt
+//!                         armed at 1/1 so every restore demotes to the
+//!                         token-by-token replay-log fallback — the
+//!                         ratio prices losing the fast rung
 
 use std::sync::Arc;
 
@@ -559,6 +568,92 @@ fn main() {
     fault_case("decode_sched_fault/s16/p8/f7".into(), 16, 8, 16, 7);
     suite.ratio("decode_sched_fault/s8/p32/f7", "decode_sched/s8/p32/mixed");
     suite.ratio("decode_sched_fault/s16/p8/f7", "decode_sched/s16/p8/evict");
+
+    // the spill rungs under drain/restart: the evict fleet again, with a
+    // full graceful drain + re-adopt inserted mid-decode every iteration
+    // — every session's pages go host-side and come back lazily as
+    // rounds demand them. The plain label restores through the
+    // checksummed verbatim copy-back rung; the _replay twin arms
+    // FaultSite::SpillCorrupt at denominator 1 so EVERY restore demotes
+    // to the token-by-token replay-log fallback. The ratio between the
+    // two is the price of losing the fast rung (the asymmetry
+    // hwsim::simulate_decode_spill models: per-page costs vs per-token
+    // costs), and replies stay bit-identical Tokens on both — the ladder
+    // is a latency story, never a correctness one
+    let mut spill_case = |label: String, s: usize, pages: usize, l: usize, replay: bool| {
+        use lutmax::faults::{FaultPlan, FaultSite};
+        let (h, g, d) = (8usize, 2usize, 64usize);
+        let p = DecodePipeline::load(&format!("decode:rexp:uint8:g{g}:p{pages}"), 4).unwrap();
+        if replay {
+            p.set_fault_plan(FaultPlan::none().with_seed(97).with(FaultSite::SpillCorrupt, 1));
+        }
+        let mut step_rng = Rng::new(89);
+        let pre: Vec<(Tensor, Tensor, Tensor)> = (0..s)
+            .map(|_| lutmax::workload::decode_prefill_chunk(&mut step_rng, 2, h, g, d, 1.0))
+            .collect();
+        let qkv: Vec<(Tensor, Tensor, Tensor)> = (0..s * l)
+            .map(|_| lutmax::workload::decode_qkv_step(&mut step_rng, h, g, d, 1.0))
+            .collect();
+        let total_t = l + 2;
+        suite.add(Bench::new(label).items(s * h * total_t * (total_t + 1) / 2).run(|| {
+            let opens: Vec<Payload> = (0..s).map(|_| Payload::DecodeOpen).collect();
+            let refs: Vec<&Payload> = opens.iter().collect();
+            let ids: Vec<u64> = p
+                .run_batch(&refs)
+                .into_iter()
+                .map(|r| match r {
+                    Reply::Session(id) => id,
+                    other => panic!("open failed: {other:?}"),
+                })
+                .collect();
+            let pres: Vec<Payload> = ids
+                .iter()
+                .zip(&pre)
+                .map(|(&id, (q, k, v))| Payload::DecodePrefill {
+                    session: id,
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                })
+                .collect();
+            let refs: Vec<&Payload> = pres.iter().collect();
+            for r in p.run_batch(&refs) {
+                assert!(matches!(r, Reply::Prefill(_)), "prefill failed: {r:?}");
+            }
+            for t in 0..l {
+                if t == l / 2 {
+                    let report = p.drain();
+                    p.adopt_spill(report);
+                }
+                let round: Vec<Payload> = ids
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &id)| {
+                        let (q, k, v) = &qkv[i * l + t];
+                        Payload::DecodeStep {
+                            session: id,
+                            q: q.clone(),
+                            k: k.clone(),
+                            v: v.clone(),
+                        }
+                    })
+                    .collect();
+                let refs: Vec<&Payload> = round.iter().collect();
+                for r in p.run_batch(&refs) {
+                    assert!(matches!(r, Reply::Token(_)), "step failed: {r:?}");
+                }
+            }
+            let closes: Vec<Payload> = ids.iter().map(|&id| Payload::DecodeClose(id)).collect();
+            let refs: Vec<&Payload> = closes.iter().collect();
+            for r in p.run_batch(&refs) {
+                assert!(matches!(r, Reply::Closed { .. }), "close failed: {r:?}");
+            }
+        }));
+    };
+    spill_case("decode_sched_spill/s16/p8".into(), 16, 8, 16, false);
+    spill_case("decode_sched_spill_replay/s16/p8".into(), 16, 8, 16, true);
+    suite.ratio("decode_sched_spill_replay/s16/p8", "decode_sched_spill/s16/p8");
+    suite.ratio("decode_sched_spill/s16/p8", "decode_sched/s16/p8/evict");
 
     // the observability bound: the s8/p32 mixed fleet re-run with a
     // Wall-clock trace sink and per-stage timing armed. The ratio

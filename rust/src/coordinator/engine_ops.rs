@@ -14,13 +14,14 @@ use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Counters;
 use super::request::{Payload, Reply};
-use super::scheduler::{self, SchedConfig};
+use super::scheduler::{self, SchedConfig, VictimPolicy};
 use crate::attention::{
     self, AttnMask, AttnScratch, AttnShape, DecodeAttention, DecodeBatch, DecodeStepTask,
     FusedAttention, QuantTensor, WaveError, DECODE_AFFINE,
 };
 use crate::eval::DetectionBox;
-use crate::faults::FaultPlan;
+use crate::faults::{FaultPlan, FaultSite};
+use crate::kv::spill::SpillStore;
 use crate::kv::{HeadGroups, KvConfig, KvError, KvPool, KvSeq};
 use crate::lut::Precision;
 use crate::obs::{names, ObsHub, TraceClock};
@@ -490,15 +491,21 @@ const DECODE_MIN_ROWS_PER_SHARD: usize = 2;
 /// round's steps go down as ONE [`DecodeBatch`] head-scatter wave over
 /// all `S × H` head rows.
 ///
-/// Under KV pressure the scheduler **evicts the youngest resident
-/// session** ([`SessionKv::Evicted`]): its quantized rows are saved as
-/// a replay log, its pages return to the free list, and the session is
-/// transparently restored — byte-identical pages, since the log holds
-/// the exact bytes and the route's [`DECODE_AFFINE`] is fixed — when
-/// its next request is admitted. Only a request that alone exceeds the
-/// arena fails, and then with the typed, retryable [`Reply::Exhausted`]
+/// Under KV pressure the scheduler **spills a victim session to the
+/// host** ([`SessionKv::Spilled`]): the victim — picked by the route's
+/// [`VictimPolicy`] — has its pages copied verbatim (blocks, byte sums,
+/// affines, checksummed) into the host-side [`SpillStore`], its pages
+/// return to the free list, and the session is transparently restored
+/// by bit-exact copy-back when its next request is admitted. A checksum
+/// mismatch (or an injected [`FaultSite::SpillCorrupt`]) demotes the
+/// restore to the spill's replay-row log — still bit-identical; only
+/// when both encodings are unusable does the session die, with a typed
+/// [`Reply::Error`]. Only a request that alone exceeds the arena fails
+/// admission, and then with the typed, retryable [`Reply::Exhausted`]
 /// (see the wire contract in [`super::request`]); batchmates are never
-/// affected.
+/// affected. [`Self::drain`] spills *every* live session and hands the
+/// store out so a restarted pipeline ([`Self::adopt_spill`]) resumes
+/// them bit-identically.
 pub struct DecodePipeline {
     pub variant: String,
     decode: DecodeAttention,
@@ -535,6 +542,13 @@ pub struct DecodePipeline {
     /// sessions whose client hung up (a reply send failed): reap-eligible
     /// on the next batch regardless of TTL
     dead: RefCell<HashSet<u64>>,
+    /// host-side store of spilled sessions' pages (evict-to-host; see
+    /// [`crate::kv::spill`]) — populated by pressure evictions and
+    /// [`Self::drain`], drained by restores and closes
+    spill: RefCell<SpillStore>,
+    /// monotone restore-attempt counter: the
+    /// [`FaultSite::SpillCorrupt`] site's draw index
+    spill_seq: Cell<u64>,
 }
 
 /// A decode session's KV residency state.
@@ -546,16 +560,13 @@ enum SessionKv {
     /// taken out of the table for the duration of a wave — the eviction
     /// paths must never pick an in-flight session
     InFlight,
-    /// evicted under KV pressure: pages reclaimed, the exact quantized
-    /// K/V rows saved (`[t][g][d]` row-major) as the replay log a later
-    /// admission restores from — byte-identical, since the route's
-    /// affines are fixed and page ids are never read
-    Evicted {
-        groups: HeadGroups,
-        k: Vec<i8>,
-        v: Vec<i8>,
-        tokens: usize,
-    },
+    /// spilled to the host under KV pressure (or by a drain): pages
+    /// reclaimed, their verbatim bytes parked in the pipeline's
+    /// [`SpillStore`] under this session's id. A later admission
+    /// restores by bit-exact copy-back (replay-log fallback on checksum
+    /// mismatch); geometry and size ride here so admission probes need
+    /// not consult the store
+    Spilled { groups: HeadGroups, tokens: usize },
 }
 
 /// One admitted wave entry: the session's sequence (taken out of the
@@ -597,6 +608,8 @@ impl DecodePipeline {
             tick: Cell::new(0),
             last_used: RefCell::new(HashMap::new()),
             dead: RefCell::new(HashSet::new()),
+            spill: RefCell::new(SpillStore::new()),
+            spill_seq: Cell::new(0),
         };
         if let Some(seed) = route.fault_seed {
             pipe.set_fault_plan(FaultPlan::seeded(seed));
@@ -825,7 +838,7 @@ impl DecodePipeline {
     }
 
     /// Pages `session` currently owns (0 when unknown, unbound or
-    /// evicted) — the scheduler's close-credit probe.
+    /// spilled) — the scheduler's close-credit probe.
     pub(super) fn session_pages(&self, session: u64) -> usize {
         match self.sessions.borrow().get(&session) {
             Some(SessionKv::Live(s)) => s.pages().len(),
@@ -847,7 +860,7 @@ impl DecodePipeline {
     }
 
     /// What admitting `new_tokens` more tokens for `session` would cost:
-    /// pages to allocate (including the restore of an evicted session's
+    /// pages to allocate (including the copy-back of a spilled session's
     /// whole prefix) and resident tokens after the round. Unknown /
     /// in-flight sessions cost nothing (they resolve to errors at
     /// execution).
@@ -862,7 +875,7 @@ impl DecodePipeline {
                     .map_or(new_tokens.div_ceil(ps), |p| p.pages_needed(s, new_tokens)),
                 tokens_after: s.len() + new_tokens,
             },
-            Some(SessionKv::Evicted { tokens, .. }) => AdmitCost {
+            Some(SessionKv::Spilled { tokens, .. }) => AdmitCost {
                 pages: (tokens + new_tokens).div_ceil(ps),
                 tokens_after: tokens + new_tokens,
             },
@@ -874,17 +887,27 @@ impl DecodePipeline {
         }
     }
 
-    /// Evict the youngest resident session not in `exclude` (see
-    /// [`evict_youngest_session`]). Returns the victim and pages freed.
-    pub(super) fn evict_youngest(&self, exclude: &HashSet<u64>) -> Option<(u64, usize)> {
+    /// Spill the policy-picked victim session not in `exclude` to the
+    /// host store (see [`spill_victim_session`]). Returns the victim
+    /// and pages freed.
+    pub(super) fn evict_victim(&self, exclude: &HashSet<u64>) -> Option<(u64, usize)> {
         let mut sessions = self.sessions.borrow_mut();
         let mut kv = self.kv.borrow_mut();
         let kvp = kv.as_mut()?;
-        let r = evict_youngest_session(&mut sessions, kvp, exclude);
+        let r = spill_victim_session(
+            &mut sessions,
+            kvp,
+            &mut self.spill.borrow_mut(),
+            exclude,
+            self.sched_cfg.get().victim_policy,
+            &self.last_used.borrow(),
+        );
         if let Some((victim, pages)) = r {
             let mut obs = self.obs.borrow_mut();
             obs.evicted(names::EVICT_ADMISSION);
+            obs.inc(names::SCHED_SPILLED);
             obs.event("evict", &[("session", victim as i64), ("pages", pages as i64)]);
+            obs.event("spill", &[("session", victim as i64), ("pages", pages as i64)]);
         }
         r
     }
@@ -904,7 +927,10 @@ impl DecodePipeline {
         match e.downcast_ref::<KvError>() {
             Some(&KvError::Exhausted { pages, free_pages }) => {
                 self.obs.borrow_mut().inc(names::SCHED_EXHAUSTED);
-                Reply::Exhausted { pages, free_pages }
+                // the engine has no view of the waiting queue here; one
+                // round is the floor of the scheduler's drain estimate
+                // (see `scheduler::retry_after`)
+                Reply::Exhausted { pages, free_pages, retry_after_rounds: 1 }
             }
             None => Reply::Error(e.to_string()),
         }
@@ -988,7 +1014,18 @@ impl DecodePipeline {
         if slots.is_empty() {
             return;
         }
-        let kvp = kv_ref.as_mut().expect("pool bound by admitted steps");
+        // admitted steps imply a bound pool; an unbound one here is an
+        // internal invariant breach — typed and counted, never a panic
+        let Some(kvp) = kv_ref.as_mut() else {
+            debug_assert!(false, "pool bound by admitted steps");
+            let mut obs = self.obs.borrow_mut();
+            for slot in slots {
+                obs.inc(names::SCHED_UNRESOLVED);
+                replies[slot.idx] =
+                    Some(Reply::Error("internal: KV pool unbound mid-wave".into()));
+            }
+            return;
+        };
         let mut scr = self.scratch.borrow_mut();
         let mut tasks: Vec<DecodeStepTask<'_>> = slots
             .iter_mut()
@@ -1002,13 +1039,14 @@ impl DecodePipeline {
             })
             .collect();
         // mid-wave safety net: a page-boundary append the admission
-        // accounting did not foresee evicts the youngest idle session
-        // instead of starving the step (wave sessions are in-flight and
-        // thus never picked; `keep` spares the round's other sessions).
-        // With a fault plan armed, a failed append gets a few bare
-        // retries first — an injected fault is spurious and eviction
-        // would sacrifice a real session to it
+        // accounting did not foresee spills the policy-picked idle
+        // session instead of starving the step (wave sessions are
+        // in-flight and thus never picked; `keep` spares the round's
+        // other sessions). With a fault plan armed, a failed append gets
+        // a few bare retries first — an injected fault is spurious and
+        // eviction would sacrifice a real session to it
         let mut spurious_retries = 0usize;
+        let policy = self.sched_cfg.get().victim_policy;
         let (results, stats) = DecodeBatch::new(&self.decode)
             .with_split_min_tokens(self.sched_cfg.get().split_min_tokens)
             .step_wave_with_stats(
@@ -1021,11 +1059,20 @@ impl DecodePipeline {
                     spurious_retries += 1;
                     return true;
                 }
-                let r = evict_youngest_session(&mut sessions, kv, keep);
+                let r = spill_victim_session(
+                    &mut sessions,
+                    kv,
+                    &mut self.spill.borrow_mut(),
+                    keep,
+                    policy,
+                    &self.last_used.borrow(),
+                );
                 if let Some((victim, pages)) = r {
                     let mut obs = self.obs.borrow_mut();
                     obs.evicted(names::EVICT_STEP);
+                    obs.inc(names::SCHED_SPILLED);
                     obs.event("evict", &[("session", victim as i64), ("pages", pages as i64)]);
+                    obs.event("spill", &[("session", victim as i64), ("pages", pages as i64)]);
                 }
                 r.is_some()
             },
@@ -1048,7 +1095,7 @@ impl DecodePipeline {
                 Ok(()) => Reply::Token(Tensor::f32(items[slot.idx].1.dims.clone(), slot.out)),
                 Err(WaveError::Kv(KvError::Exhausted { pages, free_pages })) => {
                     self.obs.borrow_mut().inc(names::SCHED_EXHAUSTED);
-                    Reply::Exhausted { pages, free_pages }
+                    Reply::Exhausted { pages, free_pages, retry_after_rounds: 1 }
                 }
                 // the panic was contained to this slot: the append
                 // landed (state advanced, output lost), batchmates are
@@ -1065,7 +1112,17 @@ impl DecodePipeline {
             // the append failed — the step is retryable), and the staging
             // buffers back to the recycle pool
             spare_bufs.push((slot.q, slot.k, slot.v));
-            *sessions.get_mut(&slot.session).expect("admitted above") = SessionKv::Live(slot.seq);
+            match sessions.get_mut(&slot.session) {
+                Some(st) => *st = SessionKv::Live(slot.seq),
+                // an admitted session cannot vanish mid-wave (closes are
+                // serialized with rounds) — counted, pages returned, the
+                // reply still goes out
+                None => {
+                    debug_assert!(false, "admitted session vanished mid-wave");
+                    self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+                    kvp.close(slot.seq);
+                }
+            }
             replies[slot.idx] = Some(reply);
         }
     }
@@ -1098,7 +1155,11 @@ impl DecodePipeline {
             .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
         bind_decode_pool(kv_ref, g, d, self.route_pages, self.faults.get())?;
         bind_session_heads(slot, h, g)?;
-        let kvp = kv_ref.as_mut().expect("pool bound above");
+        let Some(kvp) = kv_ref.as_mut() else {
+            debug_assert!(false, "pool bound above");
+            self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+            bail!("internal: KV pool unbound after bind");
+        };
         // staging buffers are recycled across rounds (step_wave_round
         // returns them); only the reply-owned `out` is freshly allocated.
         // Quantize BEFORE taking the sequence out of the table: a bad
@@ -1116,11 +1177,8 @@ impl DecodePipeline {
         quant::quantize_into(v.as_f32()?, DECODE_AFFINE, &mut vb);
         let seq = match std::mem::replace(slot, SessionKv::InFlight) {
             SessionKv::Live(s) => s,
-            SessionKv::Evicted { groups, k: kl, v: vl, tokens } => {
-                match self.restore_session(sessions, kvp, session, groups, kl, vl, tokens, keep) {
-                    Ok(s) => s,
-                    Err(e) => return Err(e.into()),
-                }
+            SessionKv::Spilled { groups, tokens } => {
+                self.restore_session(sessions, kvp, session, groups, tokens, keep)?
             }
             SessionKv::Unbound | SessionKv::InFlight => {
                 unreachable!("bound above; one step per session per wave")
@@ -1171,15 +1229,15 @@ impl DecodePipeline {
             .ok_or_else(|| anyhow!("unknown decode session {session}"))?;
         bind_decode_pool(&mut kv_ref, g, d, self.route_pages, self.faults.get())?;
         bind_session_heads(slot, h, g)?;
-        let kvp = kv_ref.as_mut().expect("pool bound above");
+        let Some(kvp) = kv_ref.as_mut() else {
+            debug_assert!(false, "pool bound above");
+            self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+            bail!("internal: KV pool unbound after bind");
+        };
         let mut seq = match std::mem::replace(slot, SessionKv::InFlight) {
             SessionKv::Live(s) => s,
-            SessionKv::Evicted { groups, k: kl, v: vl, tokens } => {
-                match self.restore_session(&mut sessions, kvp, session, groups, kl, vl, tokens, keep)
-                {
-                    Ok(s) => s,
-                    Err(e) => return Err(e.into()),
-                }
+            SessionKv::Spilled { groups, tokens } => {
+                self.restore_session(&mut sessions, kvp, session, groups, tokens, keep)?
             }
             SessionKv::Unbound | SessionKv::InFlight => {
                 unreachable!("bound above; sessions are not in-flight here")
@@ -1201,6 +1259,7 @@ impl DecodePipeline {
         // fault plan armed, a failed append gets a few bare retries
         // before eviction — injected faults are spurious
         let mut spurious_retries = 0usize;
+        let policy = self.sched_cfg.get().victim_policy;
         let result = loop {
             match self.decode.prefill_chunk_par(
                 kvp,
@@ -1222,12 +1281,24 @@ impl DecodePipeline {
                         spurious_retries += 1;
                         continue;
                     }
-                    let evicted = evict_youngest_session(&mut sessions, kvp, keep);
+                    let evicted = spill_victim_session(
+                        &mut sessions,
+                        kvp,
+                        &mut self.spill.borrow_mut(),
+                        keep,
+                        policy,
+                        &self.last_used.borrow(),
+                    );
                     if let Some((victim, pages)) = evicted {
                         let mut obs = self.obs.borrow_mut();
                         obs.evicted(names::EVICT_PREFILL);
+                        obs.inc(names::SCHED_SPILLED);
                         obs.event(
                             "evict",
+                            &[("session", victim as i64), ("pages", pages as i64)],
+                        );
+                        obs.event(
+                            "spill",
                             &[("session", victim as i64), ("pages", pages as i64)],
                         );
                     } else {
@@ -1236,7 +1307,17 @@ impl DecodePipeline {
                 }
             }
         };
-        *sessions.get_mut(&session).expect("in-flight slot") = SessionKv::Live(seq);
+        match sessions.get_mut(&session) {
+            Some(slot) => *slot = SessionKv::Live(seq),
+            // the in-flight slot cannot vanish during its own prefill —
+            // counted, pages returned, a typed error goes out
+            None => {
+                debug_assert!(false, "in-flight slot vanished during prefill");
+                self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+                kvp.close(seq);
+                bail!("internal: session {session} vanished during prefill");
+            }
+        }
         match result {
             Ok(()) => Ok(Reply::Prefill(Tensor::f32(q.dims.clone(), out))),
             Err(WaveError::Panicked) => {
@@ -1249,33 +1330,119 @@ impl DecodePipeline {
         }
     }
 
-    /// Rebuild an evicted session's pages from its replay log (the
-    /// session's slot is in-flight while this runs), evicting still
-    /// younger sessions if the free list cannot cover the restore. On
-    /// failure the slot reverts to `Evicted`, untouched, and the typed
-    /// error surfaces. The restored pages are byte-identical to the
-    /// evicted ones: same rows, same recomputed sums, same affines —
-    /// only page ids differ, and nothing reads those.
-    #[allow(clippy::too_many_arguments)]
+    /// Restore a spilled session's pages from the host store (the
+    /// session's slot is in-flight while this runs), spilling still
+    /// other sessions if the free list cannot cover it. The fast path
+    /// is the checksummed **bit-exact copy-back**
+    /// ([`SpillStore::restore_copy_back`]); a checksum mismatch — or an
+    /// injected [`FaultSite::SpillCorrupt`] hit — demotes to replaying
+    /// the spill's independent `[t][g][d]` row log through
+    /// [`KvPool::append_block`], which rebuilds the same bytes token by
+    /// token. On a retryable failure the slot reverts to `Spilled` with
+    /// the record untouched; only when the host copy is corrupt AND the
+    /// replay log is unusable does the session die, with a typed error
+    /// — never a panic (`docs/RELIABILITY.md` walks the ladder).
     fn restore_session(
         &self,
         sessions: &mut HashMap<u64, SessionKv>,
         kvp: &mut KvPool,
         session: u64,
         groups: HeadGroups,
-        kl: Vec<i8>,
-        vl: Vec<i8>,
         tokens: usize,
         keep: &HashSet<u64>,
-    ) -> Result<KvSeq, KvError> {
-        let mut seq = KvSeq::new(groups, DECODE_AFFINE, DECODE_AFFINE);
+    ) -> Result<KvSeq> {
+        let policy = self.sched_cfg.get().victim_policy;
+        // one SpillCorrupt draw per restore attempt: a hit simulates a
+        // rotted host copy, forcing the replay-log rung
+        let draw = self.spill_seq.get();
+        self.spill_seq.set(draw + 1);
+        let injected = self.faults.get().should_fault(FaultSite::SpillCorrupt, draw);
+        let intact = match self.spill.borrow().session(session) {
+            Some(rec) => rec.intact() && !injected,
+            // Spilled state ⟺ store record is the subsystem's core
+            // invariant; a missing record is unrecoverable
+            None => {
+                debug_assert!(false, "spilled session {session} has no store record");
+                sessions.remove(&session);
+                self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+                bail!("internal: spilled session {session} has no host record");
+            }
+        };
         let mut spurious_retries = 0usize;
+        if intact {
+            loop {
+                let r = self.spill.borrow_mut().restore_copy_back(kvp, session);
+                match r {
+                    Some(Ok(seq)) => {
+                        debug_assert_eq!(seq.len(), tokens);
+                        let mut obs = self.obs.borrow_mut();
+                        obs.inc(names::SCHED_SPILL_RESTORED);
+                        obs.inc(names::SCHED_REQUEUED);
+                        obs.event(
+                            "spill_restore",
+                            &[("session", session as i64), ("tokens", tokens as i64)],
+                        );
+                        obs.event(
+                            "restore",
+                            &[("session", session as i64), ("tokens", tokens as i64)],
+                        );
+                        return Ok(seq);
+                    }
+                    // retryable exhaustion: the record and arena are
+                    // untouched (copy-back is atomic) — bare-retry
+                    // injected faults, then spill other sessions
+                    Some(Err(e)) => {
+                        if !self.faults.get().is_none()
+                            && spurious_retries < MAX_SPURIOUS_RETRIES
+                        {
+                            spurious_retries += 1;
+                            continue;
+                        }
+                        if !self.evict_for_restore(sessions, kvp, keep, policy) {
+                            if let Some(slot) = sessions.get_mut(&session) {
+                                *slot = SessionKv::Spilled { groups, tokens };
+                            }
+                            return Err(e.into());
+                        }
+                    }
+                    None => {
+                        debug_assert!(false, "spilled session {session} has no store record");
+                        sessions.remove(&session);
+                        self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+                        bail!("internal: spilled session {session} has no host record");
+                    }
+                }
+            }
+        }
+        // fallback rung: the host copy is rotted (or injected as such) —
+        // replay the independent row log, token by token, same bytes
+        let rows = {
+            let store = self.spill.borrow();
+            store
+                .session(session)
+                .and_then(|r| r.replay_rows().map(|(k, v)| (k.to_vec(), v.to_vec())))
+        };
+        let Some((kl, vl)) = rows else {
+            // both encodings dead: the ladder's terminal rung — the
+            // session is lost, typed, never a panic
+            self.spill.borrow_mut().remove(session);
+            sessions.remove(&session);
+            self.obs.borrow_mut().event("spill_lost", &[("session", session as i64)]);
+            bail!("spilled session {session} lost: host copy corrupt and replay log unusable");
+        };
+        let mut seq = KvSeq::new(groups, DECODE_AFFINE, DECODE_AFFINE);
         loop {
             match kvp.append_block(&mut seq, &kl, &vl) {
                 Ok(()) => {
                     debug_assert_eq!(seq.len(), tokens);
+                    self.spill.borrow_mut().remove(session);
                     let mut obs = self.obs.borrow_mut();
+                    obs.inc(names::SCHED_SPILL_FALLBACK);
                     obs.inc(names::SCHED_REQUEUED);
+                    obs.event(
+                        "spill_fallback",
+                        &[("session", session as i64), ("tokens", tokens as i64)],
+                    );
                     obs.event(
                         "restore",
                         &[("session", session as i64), ("tokens", tokens as i64)],
@@ -1283,52 +1450,74 @@ impl DecodePipeline {
                     return Ok(seq);
                 }
                 Err(e) => {
-                    // an injected alloc fault is transient: bare-retry
-                    // before evicting anyone over it
                     if !self.faults.get().is_none() && spurious_retries < MAX_SPURIOUS_RETRIES {
                         spurious_retries += 1;
                         continue;
                     }
-                    // the in-flight slot keeps the session itself (and
-                    // any wave mates) off the victim list; `keep` spares
-                    // the round's other admitted sessions
-                    let evicted = evict_youngest_session(sessions, kvp, keep);
-                    if let Some((victim, pages)) = evicted {
-                        let mut obs = self.obs.borrow_mut();
-                        obs.evicted(names::EVICT_RESTORE);
-                        obs.event(
-                            "evict",
-                            &[("session", victim as i64), ("pages", pages as i64)],
-                        );
-                    } else {
-                        *sessions.get_mut(&session).expect("in-flight slot") =
-                            SessionKv::Evicted { groups, k: kl, v: vl, tokens };
-                        return Err(e);
+                    if !self.evict_for_restore(sessions, kvp, keep, policy) {
+                        if let Some(slot) = sessions.get_mut(&session) {
+                            *slot = SessionKv::Spilled { groups, tokens };
+                        }
+                        return Err(e.into());
                     }
                 }
             }
         }
     }
 
+    /// One restore-pressure eviction: spill the policy-picked victim
+    /// (the restoring session is in-flight and never picked; `keep`
+    /// spares the round's admitted sessions). `false` when nothing is
+    /// evictable.
+    fn evict_for_restore(
+        &self,
+        sessions: &mut HashMap<u64, SessionKv>,
+        kvp: &mut KvPool,
+        keep: &HashSet<u64>,
+        policy: VictimPolicy,
+    ) -> bool {
+        let r = spill_victim_session(
+            sessions,
+            kvp,
+            &mut self.spill.borrow_mut(),
+            keep,
+            policy,
+            &self.last_used.borrow(),
+        );
+        if let Some((victim, pages)) = r {
+            let mut obs = self.obs.borrow_mut();
+            obs.evicted(names::EVICT_RESTORE);
+            obs.inc(names::SCHED_SPILLED);
+            obs.event("evict", &[("session", victim as i64), ("pages", pages as i64)]);
+            obs.event("spill", &[("session", victim as i64), ("pages", pages as i64)]);
+        }
+        r.is_some()
+    }
+
     /// close → [`Reply::Closed`], pages returned to the arena. A session
-    /// closed while evicted holds no pages and reports `pages: 0` — an
-    /// ops number, not part of the bit-identity contract.
+    /// closed while spilled holds no arena pages and reports `pages: 0`
+    /// — an ops number, not part of the bit-identity contract; its host
+    /// spill record dies with the close.
     pub fn close(&self, session: u64) -> Reply {
         self.last_used.borrow_mut().remove(&session);
         self.dead.borrow_mut().remove(&session);
         match self.sessions.borrow_mut().remove(&session) {
             None => Reply::Error(format!("unknown decode session {session}")),
-            Some(SessionKv::Live(s)) => {
-                let pages = self
-                    .kv
-                    .borrow_mut()
-                    .as_mut()
-                    .map(|pool| pool.close(s))
-                    .expect("live sessions imply a bound pool");
-                Reply::Closed { pages }
+            Some(SessionKv::Live(s)) => match self.kv.borrow_mut().as_mut() {
+                Some(pool) => Reply::Closed { pages: pool.close(s) },
+                // a live session with no bound pool is an internal
+                // invariant breach — typed and counted, never a panic
+                None => {
+                    debug_assert!(false, "live sessions imply a bound pool");
+                    self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+                    Reply::Error(format!("internal: session {session} live with no KV pool"))
+                }
+            },
+            Some(SessionKv::Spilled { .. }) => {
+                self.spill.borrow_mut().remove(session);
+                Reply::Closed { pages: 0 }
             }
-            // unbound and evicted sessions hold no pages (an eviction
-            // replay log dies with the close)
+            // unbound and in-flight sessions hold no pages
             Some(_) => Reply::Closed { pages: 0 },
         }
     }
@@ -1339,6 +1528,132 @@ impl DecodePipeline {
     pub fn kv_pages(&self) -> Option<(usize, usize)> {
         self.kv.borrow().as_ref().map(|p| (p.free_pages(), p.config().pages))
     }
+
+    /// Gracefully drain the route: spill EVERY live session's pages to
+    /// the host store (verbatim, checksummed), record still-unbound
+    /// sessions as open ids, and hand the whole store out. Afterwards
+    /// the session table is empty and the arena's free list is full —
+    /// the caller can drop this pipeline and later feed the report's
+    /// store to a fresh one via [`Self::adopt_spill`], which resumes
+    /// every session bit-identically (conformance invariant 10). Call
+    /// between rounds only (the server's control loop does).
+    pub fn drain(&self) -> DrainReport {
+        let mut sessions = self.sessions.borrow_mut();
+        let mut kv = self.kv.borrow_mut();
+        let mut store = self.spill.borrow_mut();
+        let mut ids: Vec<u64> = sessions.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let Some(state) = sessions.remove(&id) else { continue };
+            match state {
+                SessionKv::Live(seq) => match kv.as_mut() {
+                    Some(kvp) => {
+                        let tokens = seq.len();
+                        let pages = store.spill(kvp, id, seq);
+                        let mut obs = self.obs.borrow_mut();
+                        obs.inc(names::SCHED_SPILLED);
+                        obs.event(
+                            "spill",
+                            &[
+                                ("session", id as i64),
+                                ("pages", pages as i64),
+                                ("tokens", tokens as i64),
+                            ],
+                        );
+                    }
+                    None => {
+                        debug_assert!(false, "live sessions imply a bound pool");
+                        self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+                    }
+                },
+                // already host-side: the record rides the store as-is
+                SessionKv::Spilled { .. } => {}
+                SessionKv::Unbound => store.note_open(id),
+                SessionKv::InFlight => {
+                    // drains run between rounds; an in-flight slot here
+                    // is an invariant breach — the session is dropped,
+                    // counted, never a panic
+                    debug_assert!(false, "drain must run between rounds");
+                    self.obs.borrow_mut().inc(names::SCHED_UNRESOLVED);
+                }
+            }
+        }
+        // per-session bookkeeping dies with the table
+        self.last_used.borrow_mut().clear();
+        self.dead.borrow_mut().clear();
+        let spill = std::mem::take(&mut *store);
+        DrainReport {
+            sessions_spilled: spill.len(),
+            pages_spilled: spill.pages_held(),
+            tokens_spilled: spill.tokens_held(),
+            sessions_open: spill.open_sessions().len(),
+            next_session: self.next_session.get(),
+            spill,
+        }
+    }
+
+    /// Adopt a drain's [`DrainReport`]: every spilled session reappears
+    /// as [`SessionKv::Spilled`] (restored bit-identically on its next
+    /// step/prefill), every recorded open session as
+    /// [`SessionKv::Unbound`], and the id counter resumes from the
+    /// drained pipeline's — so post-restart opens mint exactly the ids
+    /// an undrained run would have. Replaces this route's store —
+    /// intended for a freshly built pipeline (restart).
+    pub fn adopt_spill(&self, report: DrainReport) {
+        let DrainReport { next_session, spill: store, .. } = report;
+        let mut sessions = self.sessions.borrow_mut();
+        let mut max_id =
+            self.next_session.get().saturating_sub(1).max(next_session.saturating_sub(1));
+        for id in store.open_sessions() {
+            sessions.entry(id).or_insert(SessionKv::Unbound);
+            max_id = max_id.max(id);
+        }
+        for id in store.ids_sorted() {
+            if let Some(rec) = store.session(id) {
+                sessions.insert(
+                    id,
+                    SessionKv::Spilled { groups: rec.groups(), tokens: rec.tokens() },
+                );
+                max_id = max_id.max(id);
+            }
+        }
+        self.next_session.set(max_id + 1);
+        *self.spill.borrow_mut() = store;
+    }
+
+    /// Sessions currently parked in the host spill store (test/ops probe).
+    pub fn spilled_sessions(&self) -> usize {
+        self.spill.borrow().len()
+    }
+
+    /// Chaos hook (see [`SpillStore::corrupt`]): rot `session`'s host
+    /// copy so its next restore demotes to the replay log; with
+    /// `wipe_replay` the log dies too — the both-encodings-dead terminal
+    /// case. `false` when the session has no spill record.
+    pub fn corrupt_spill(&self, session: u64, wipe_replay: bool) -> bool {
+        self.spill.borrow_mut().corrupt(session, wipe_replay)
+    }
+}
+
+/// What a graceful drain moved host-side (see [`DecodePipeline::drain`]
+/// / [`super::Coordinator::drain`]): the counts, plus the
+/// [`SpillStore`] itself — plain host memory a restarted pipeline
+/// re-adopts ([`DecodePipeline::adopt_spill`]) to resume every session
+/// bit-identically.
+#[derive(Debug, Default)]
+pub struct DrainReport {
+    /// sessions whose pages now live in the store
+    pub sessions_spilled: usize,
+    /// pages the store holds (all returned to the arena's free list)
+    pub pages_spilled: usize,
+    /// tokens those pages held
+    pub tokens_spilled: usize,
+    /// open-but-unbound sessions riding the store as ids only
+    pub sessions_open: usize,
+    /// the drained pipeline's next session id (adoption advances past it)
+    pub next_session: u64,
+    /// every spilled session's pages, verbatim and checksummed
+    pub spill: SpillStore,
 }
 
 /// Check (or lazily create, `pages` big) the route's shared KV arena for
@@ -1385,50 +1700,56 @@ pub(super) struct AdmitCost {
     pub tokens_after: usize,
 }
 
-/// Evict the **youngest** (largest-id) resident session not in
-/// `exclude`: gather its pages' exact quantized rows into a `[t][g][d]`
-/// replay log, return the pages to the free list, and park the session
-/// as [`SessionKv::Evicted`]. In-flight and already-evicted sessions
-/// are never picked. Returns the victim id and pages freed, `None` when
-/// no session is evictable.
-fn evict_youngest_session(
+/// Pick one resident victim under `policy` and spill it to `store`:
+/// its pages are copied host-side verbatim (blocks, byte sums, affines,
+/// checksummed, with an independent replay-row log — see
+/// [`crate::kv::spill`]), returned to the free list, and the session
+/// parked as [`SessionKv::Spilled`]. In-flight and already-spilled
+/// sessions are never picked; sessions in `exclude` are spared; ties
+/// break toward the **youngest** (largest) id, which also makes
+/// [`VictimPolicy::YoungestId`] the degenerate everything-ties case.
+/// Returns the victim id and pages freed, `None` when nothing is
+/// evictable.
+fn spill_victim_session(
     sessions: &mut HashMap<u64, SessionKv>,
     kvp: &mut KvPool,
+    store: &mut SpillStore,
     exclude: &HashSet<u64>,
+    policy: VictimPolicy,
+    last_used: &HashMap<u64, u64>,
 ) -> Option<(u64, usize)> {
     let victim = sessions
         .iter()
-        .filter(|(id, st)| {
-            !exclude.contains(id) && matches!(st, SessionKv::Live(s) if !s.pages().is_empty())
+        .filter_map(|(id, st)| match st {
+            SessionKv::Live(s) if !exclude.contains(id) && !s.pages().is_empty() => {
+                Some((*id, s.pages().len()))
+            }
+            _ => None,
         })
-        .map(|(id, _)| *id)
-        .max()?;
-    let state = sessions.get_mut(&victim).expect("victim picked above");
-    let SessionKv::Live(seq) = std::mem::replace(state, SessionKv::Unbound) else {
-        unreachable!("victims are live");
-    };
-    let (groups, tokens) = (*seq.groups(), seq.len());
-    let cfg = *kvp.config();
-    let (g, d, ps) = (cfg.kv_heads, cfg.d_head, cfg.page_size);
-    // transpose the page-major [g][t][d] blocks into the block-append
-    // order [t][g][d], so a restore is one append_block of these bytes
-    let mut kl = vec![0i8; tokens * g * d];
-    let mut vl = vec![0i8; tokens * g * d];
-    for (pi, &page) in seq.pages().iter().enumerate() {
-        let in_page = seq.tokens_in_page(ps, pi);
-        for gi in 0..g {
-            let kb = kvp.page_k(page, gi);
-            let vb = kvp.page_v(page, gi);
-            for t in 0..in_page {
-                let dst = ((pi * ps + t) * g + gi) * d;
-                kl[dst..dst + d].copy_from_slice(&kb[t * d..(t + 1) * d]);
-                vl[dst..dst + d].copy_from_slice(&vb[t * d..(t + 1) * d]);
+        // largest key wins; the id rides as the tuple's low-order
+        // component so every tie breaks toward the youngest id
+        .max_by_key(|&(id, pages)| match policy {
+            VictimPolicy::YoungestId => (0u64, id),
+            VictimPolicy::Lru => (u64::MAX - last_used.get(&id).copied().unwrap_or(0), id),
+            VictimPolicy::LargestFirst => (pages as u64, id),
+            VictimPolicy::CheapestSpill => (u64::MAX - pages as u64, id),
+        })
+        .map(|(id, _)| id)?;
+    let seq = match sessions.get_mut(&victim) {
+        Some(state) if matches!(state, SessionKv::Live(_)) => {
+            match std::mem::replace(state, SessionKv::Unbound) {
+                SessionKv::Live(seq) => seq,
+                _ => unreachable!("matched Live above"),
             }
         }
-    }
-    let pages = kvp.close(seq);
-    *sessions.get_mut(&victim).expect("victim picked above") =
-        SessionKv::Evicted { groups, k: kl, v: vl, tokens };
+        _ => {
+            debug_assert!(false, "victim picked above is live");
+            return None;
+        }
+    };
+    let (groups, tokens) = (*seq.groups(), seq.len());
+    let pages = store.spill(kvp, victim, seq);
+    sessions.insert(victim, SessionKv::Spilled { groups, tokens });
     Some((victim, pages))
 }
 
@@ -1437,7 +1758,7 @@ fn bind_session_heads(slot: &mut SessionKv, h: usize, g: usize) -> Result<()> {
     let bound = match slot {
         SessionKv::Unbound => None,
         SessionKv::Live(s) => Some(*s.groups()),
-        SessionKv::Evicted { groups, .. } => Some(*groups),
+        SessionKv::Spilled { groups, .. } => Some(*groups),
         SessionKv::InFlight => unreachable!("sessions are not in-flight at admission"),
     };
     match bound {

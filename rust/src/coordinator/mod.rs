@@ -19,10 +19,10 @@ mod server;
 
 pub use batcher::Batcher;
 pub use engine_ops::{
-    AttentionPipeline, AttnRequest, ClsPipeline, DecodePipeline, DetPipeline, NmtPipeline,
-    SoftmaxPipeline,
+    AttentionPipeline, AttnRequest, ClsPipeline, DecodePipeline, DetPipeline, DrainReport,
+    NmtPipeline, SoftmaxPipeline,
 };
 pub use metrics::{Counters, Histogram, Metrics};
 pub use request::{Payload, Reply, Request, TaskKind};
-pub use scheduler::SchedConfig;
+pub use scheduler::{SchedConfig, VictimPolicy};
 pub use server::{Coordinator, CoordinatorClient, ObsSnapshot, RouteTable, ServerStats};

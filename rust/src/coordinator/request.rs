@@ -26,23 +26,30 @@
 //!   `T'` tokens replies exactly what `T'` single steps would have, row
 //!   for row.
 //! * **Eviction / requeue under KV pressure.** When a round (or an
-//!   append inside a wave) would exhaust the arena, the scheduler
-//!   **evicts the youngest idle session**: its quantized K/V rows are
-//!   saved as replay state, its pages return to the free list, and the
-//!   evicted session is transparently **restored** (re-prefilled from
-//!   the saved rows, front of the queue) the next time one of its
-//!   requests is admitted. Because the saved rows are the exact bytes
-//!   the pages held and the route's affines are fixed, the restored
-//!   pages are byte-identical — an evict→restore→resume session's
-//!   replies stay bit-identical to an uninterrupted serial run. Clients
-//!   never see eviction except through [`Reply::Closed`]'s page count
-//!   (a session closed while evicted reports `pages: 0` — it holds no
-//!   pages at that moment). `Closed { pages }` is an ops number, NOT
-//!   part of the bit-identity contract.
+//!   append inside a wave) would exhaust the arena, the scheduler picks
+//!   a victim session under the route's configured
+//!   [`VictimPolicy`](super::scheduler::VictimPolicy) and **spills it to
+//!   host**: its pages are copied off-arena verbatim (i8 blocks, affine
+//!   pairs, byte sums — see [`crate::kv::spill`]), checksummed, and
+//!   returned to the free list. The spilled session is transparently
+//!   **restored** the next time one of its requests is admitted — a
+//!   bit-exact copy-back into freshly allocated pages, no recompute;
+//!   on a checksum mismatch (or an injected
+//!   `SpillCorrupt` fault) the restore falls back to the spilled replay
+//!   log, which rebuilds the same bytes token by token. Either way the
+//!   restored pages are byte-identical, so a spill→restore→resume
+//!   session's replies stay bit-identical to an uninterrupted serial
+//!   run. Clients never see a spill except through [`Reply::Closed`]'s
+//!   page count (a session closed while spilled reports `pages: 0` — it
+//!   holds no pages at that moment). `Closed { pages }` is an ops
+//!   number, NOT part of the bit-identity contract. Only when *both*
+//!   spill encodings are unusable does the session die, with a typed
+//!   [`Reply::Error`] — never a panic.
 //! * **Typed backpressure.** Only when eviction cannot help — a single
 //!   session's request alone exceeds the arena — does the request fail,
 //!   and then with the structured, retryable [`Reply::Exhausted`]
-//!   (total and free page counts at failure time) rather than a stringly
+//!   (total and free page counts at failure time, plus a
+//!   `retry_after_rounds` back-off hint) rather than a stringly
 //!   [`Reply::Error`]. The session itself is left exactly as it was;
 //!   batchmates in the same round are untouched.
 //! * **Sweep-order independence.** The kernel under the route walks the
@@ -72,8 +79,8 @@
 //!
 //! | reply | session K/V state | retry? | meaning |
 //! |---|---|---|---|
-//! | [`Reply::Exhausted`] | unchanged — nothing appended | yes, same request | the request alone exceeds arena capacity (or a spurious injected allocation fault); eviction could not help. Back off and retry, or retry smaller. |
-//! | [`Reply::Shed`] | unchanged — the request never executed | yes, same request | overload shedding: the request aged past the route's deadline (`deadline_rounds`) or arrived past the waiting-queue bound (`max_waiting_items`). Purely an admission decision. |
+//! | [`Reply::Exhausted`] | unchanged — nothing appended | yes, same request, after `retry_after_rounds` rounds | the request alone exceeds arena capacity (or a spurious injected allocation fault); eviction could not help. Back off `retry_after_rounds` serving rounds — the scheduler's deterministic estimate of when the backlog that caused the rejection drains (waiting-queue depth ÷ round token budget, minimum 1) — then retry, or retry smaller. |
+//! | [`Reply::Shed`] | unchanged — the request never executed | yes, same request, after `retry_after_rounds` rounds | overload shedding: the request aged past the route's deadline (`deadline_rounds`) or arrived past the waiting-queue bound (`max_waiting_items`). Purely an admission decision; the same `retry_after_rounds` drain estimate applies. |
 //! | [`Reply::Error`] | **advanced** for a panicked step/prefill — the K/V append landed before the sweep failed; unchanged for malformed requests | NO for a panicked step (a replay would double-append); fix and resend for malformed ones | a contained failure: a sweep task panicked (only the owning session's step fails; batchmates are bit-identical to fault-free replay), or the payload was malformed (bad dtype/shape/session id). |
 //! | reaped-session close | pages reclaimed, session id dead | open a new session | the idle-session TTL reaper (`idle_ttl_batches`) closed a leaked / hung-up session; subsequent requests to the id get `Reply::Error`. Counted in `Counters::reaped`. |
 //!
@@ -227,15 +234,17 @@ pub enum Reply {
     Closed { pages: usize },
     /// typed, retryable KV backpressure: the request alone exceeds what
     /// the arena can ever hold (eviction cannot help), with `free_pages`
-    /// of `pages` free at failure time. The session is unchanged; retry
+    /// of `pages` free at failure time. The session is unchanged; back
+    /// off `retry_after_rounds` serving rounds (the scheduler's drain
+    /// estimate for the backlog that caused the rejection), then retry
     /// a smaller chunk or against a larger arena
-    Exhausted { pages: usize, free_pages: usize },
+    Exhausted { pages: usize, free_pages: usize, retry_after_rounds: usize },
     /// typed overload shedding: the request was dropped unexecuted after
     /// waiting `waited_rounds` serving rounds (deadline overrun — organic
     /// or injected — or a bounded waiting queue). The session is
-    /// unchanged; retry when the route drains (see the module docs,
-    /// "Failure semantics")
-    Shed { waited_rounds: usize },
+    /// unchanged; back off `retry_after_rounds` serving rounds before
+    /// retrying (see the module docs, "Failure semantics")
+    Shed { waited_rounds: usize, retry_after_rounds: usize },
     /// the server rejected or failed the request
     Error(String),
 }

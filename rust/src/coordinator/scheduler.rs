@@ -36,11 +36,13 @@
 //! Budgets shape rounds, they never starve: an item exceeding a budget
 //! alone is still admitted alone, and a prefill-only pass that admits
 //! nothing falls back to a normal pass. The **front** item of a pass
-//! has eviction privilege — if its pages don't fit, the youngest
-//! resident sessions are evicted (replay-logged, pages reclaimed; see
-//! `SessionKv::Evicted` in `engine_ops`) until it fits. Only when no
-//! victim remains — the request alone exceeds the arena — does it
-//! resolve as typed, retryable [`Reply::Exhausted`]. Every pass
+//! has eviction privilege — if its pages don't fit, resident sessions
+//! are picked by the route's [`VictimPolicy`] and spilled to host
+//! (pages copied verbatim off-arena and reclaimed; see
+//! `SessionKv::Spilled` in `engine_ops` and [`crate::kv::spill`]) until
+//! it fits. Only when no victim remains — the request alone exceeds the
+//! arena — does it resolve as typed, retryable
+//! [`Reply::Exhausted`]. Every pass
 //! therefore admits or resolves at least its front item, which is the
 //! no-starvation argument: the queue strictly shrinks or executes.
 //! Admission accounting stays valid through execution because every
@@ -64,7 +66,12 @@
 //!   with the rounds it waited.
 //!
 //! A shed request **never executed** — the session is untouched and a
-//! retry is safe (see "Failure semantics" in [`super::request`]). The
+//! retry is safe (see "Failure semantics" in [`super::request`]). Both
+//! valves (and admission exhaustion) carry a `retry_after_rounds` hint
+//! — the waiting-queue depth divided by the round token budget, the
+//! rounds after which the backlog that caused the rejection should have
+//! drained — so clients back off proportionally instead of hammering
+//! the next round. The
 //! route's [`crate::faults::FaultPlan`] can also fire an injected
 //!   deadline overrun ([`FaultSite::SchedDeadline`]); each firing sheds
 //! exactly ONE oldest waiting sheddable item, so chaos tests can count
@@ -87,6 +94,29 @@ use super::request::{Payload, Reply};
 use crate::faults::FaultSite;
 use crate::obs::names;
 use crate::runtime::Tensor;
+
+/// Which resident session the front item's eviction privilege spills
+/// when its pages don't fit. Every policy is deterministic (ties break
+/// toward the youngest id, preserving the historical flavor) and honors
+/// the round's exclude set; the choice moves *which* sessions pay the
+/// spill/restore churn, never the reply bytes — pinned by the
+/// victim-policy differential test in `integration_decode_batch.rs`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum VictimPolicy {
+    /// the session with the highest id — the PR 6 behavior, biased
+    /// toward the most recently opened session
+    #[default]
+    YoungestId,
+    /// least recently *used*: the session whose last admitted round is
+    /// oldest — protects hot sessions at the cost of tracking touches
+    Lru,
+    /// the most resident pages — frees the most capacity per spill, at
+    /// the largest copy-back bill when the victim returns
+    LargestFirst,
+    /// the fewest resident pages — the cheapest single spill (and the
+    /// cheapest restore), at the cost of possibly needing several
+    CheapestSpill,
+}
 
 /// Continuous-batching knobs of a decode route. Defaults suit the
 /// default 4096-page arena; property/chaos tests shrink them alongside
@@ -119,6 +149,9 @@ pub struct SchedConfig {
     /// long-context session stops monopolizing a round's wall clock; 0
     /// (the default) keeps the unsplit sweep
     pub split_min_tokens: usize,
+    /// which resident session the eviction privilege spills when the
+    /// front item's pages don't fit
+    pub victim_policy: VictimPolicy,
 }
 
 impl Default for SchedConfig {
@@ -132,8 +165,20 @@ impl Default for SchedConfig {
             max_waiting_items: 0,
             idle_ttl_batches: 0,
             split_min_tokens: 0,
+            victim_policy: VictimPolicy::default(),
         }
     }
+}
+
+/// The `retry_after_rounds` hint carried by [`Reply::Shed`] and
+/// [`Reply::Exhausted`]: rounds until a waiting queue of `queue_items`
+/// should have drained under the round token budget. Worst case each
+/// queued item needs one resident token, so a round retires up to
+/// `max_batch_total_tokens` of them; the no-starvation floor guarantees
+/// at least one, hence the `max(1)`. Deterministic, so chaos replays
+/// reproduce the hint bit-for-bit.
+fn retry_after(cfg: &SchedConfig, queue_items: usize) -> usize {
+    queue_items.div_ceil(cfg.max_batch_total_tokens.max(1)).max(1)
 }
 
 /// A waiting-queue item, borrowed out of the ready batch.
@@ -202,23 +247,31 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
 
     let sheddable =
         |i: usize| matches!(items[i], Item::Step { .. } | Item::Prefill { .. });
-    let shed = |pipe: &DecodePipeline, replies: &mut [Option<Reply>], i: usize, waited: u64| {
+    let shed = |pipe: &DecodePipeline,
+                replies: &mut [Option<Reply>],
+                i: usize,
+                waited: u64,
+                depth: usize| {
         let mut obs = pipe.obs_mut();
         obs.inc(names::SCHED_SHED);
         obs.event("shed", &[("item", i as i64), ("waited", waited as i64)]);
         drop(obs);
-        replies[i] = Some(Reply::Shed { waited_rounds: waited as usize });
+        replies[i] = Some(Reply::Shed {
+            waited_rounds: waited as usize,
+            retry_after_rounds: retry_after(&cfg, depth),
+        });
     };
 
     // bounded waiting queue: steps/prefills beyond the bound shed at
     // ingress, unexecuted; opens/closes (the control plane) always stay
     if cfg.max_waiting_items > 0 && pending.len() > cfg.max_waiting_items {
+        let depth = pending.len();
         let mut kept = 0usize;
         for &i in &pending {
             if kept < cfg.max_waiting_items || !sheddable(i) {
                 kept += 1;
             } else {
-                shed(pipe, &mut replies, i, 0);
+                shed(pipe, &mut replies, i, 0, depth);
             }
         }
         pending.retain(|&i| replies[i].is_none());
@@ -232,9 +285,10 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
     while !pending.is_empty() {
         // organic deadline overrun: shed what waited past the deadline
         if cfg.deadline_rounds > 0 {
+            let depth = pending.len();
             for &i in &pending {
                 if sheddable(i) && ages[i] > cfg.deadline_rounds as u64 {
-                    shed(pipe, &mut replies, i, ages[i]);
+                    shed(pipe, &mut replies, i, ages[i], depth);
                 }
             }
             pending.retain(|&i| replies[i].is_none());
@@ -250,7 +304,7 @@ pub(super) fn run(pipe: &DecodePipeline, batch: &[&Payload]) -> Vec<Reply> {
                 // exactly one `fault` marker per injected firing, next to
                 // the one typed `Reply::Shed` it produces
                 pipe.obs_mut().event("fault", &[("item", i as i64)]);
-                shed(pipe, &mut replies, i, ages[i]);
+                shed(pipe, &mut replies, i, ages[i], pending.len());
                 pending.retain(|&i| replies[i].is_none());
             }
         }
@@ -389,12 +443,12 @@ fn assemble(
                     if cost_items > 0 {
                         continue; // only the front item may evict
                     }
-                    // front item: evict youngest sessions until it fits
+                    // front item: spill policy-picked victims until it fits
                     let mut exclude = in_round.clone();
                     exclude.insert(*session);
                     let mut fits = true;
                     while cost.pages > available(pipe) {
-                        if pipe.evict_youngest(&exclude).is_none() {
+                        if pipe.evict_victim(&exclude).is_none() {
                             fits = false;
                             break;
                         }
@@ -407,6 +461,7 @@ fn assemble(
                         replies[i] = Some(Reply::Exhausted {
                             pages: pipe.total_pages(),
                             free_pages: pipe.free_pages_now(),
+                            retry_after_rounds: retry_after(cfg, pending.len()),
                         });
                         round.resolved += 1;
                         continue;

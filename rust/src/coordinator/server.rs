@@ -11,8 +11,8 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::Batcher;
 use super::engine_ops::{
-    AttentionPipeline, AttnRequest, ClsPipeline, DecodePipeline, DetPipeline, NmtPipeline,
-    SoftmaxPipeline,
+    AttentionPipeline, AttnRequest, ClsPipeline, DecodePipeline, DetPipeline, DrainReport,
+    NmtPipeline, SoftmaxPipeline,
 };
 use super::metrics::Metrics;
 use super::request::{Payload, Reply, Request, TaskKind};
@@ -65,6 +65,9 @@ enum Ctl {
     Req(Request),
     Stats(mpsc::Sender<ServerStats>),
     Obs(mpsc::Sender<ObsSnapshot>),
+    /// graceful drain: finish everything queued, spill every live
+    /// decode session host-side, report, stop (see [`Coordinator::drain`])
+    Drain(mpsc::Sender<DrainReport>),
     Shutdown,
 }
 
@@ -189,6 +192,25 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("engine thread gone"))
     }
 
+    /// Gracefully drain the server: stop admission, finish every
+    /// already-queued request (each gets exactly one reply through the
+    /// normal batch path), spill every live decode session to the host
+    /// store, and stop the engine thread. The returned [`DrainReport`]
+    /// carries the [`super::SpillStore`](crate::kv::spill::SpillStore);
+    /// hand it to a restarted pipeline
+    /// ([`DecodePipeline::adopt_spill`]) to resume every session
+    /// bit-identically. Requests submitted after the drain is issued
+    /// fail with "engine thread gone".
+    pub fn drain(mut self) -> Result<DrainReport> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Ctl::Drain(tx)).map_err(|_| anyhow!("engine thread gone"))?;
+        let report = rx.recv().map_err(|_| anyhow!("engine thread gone"))?;
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow!("engine thread panicked"))??;
+        }
+        Ok(report)
+    }
+
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.tx.send(Ctl::Shutdown);
         if let Some(h) = self.handle.take() {
@@ -305,9 +327,15 @@ fn engine_thread(
             .unwrap_or(Duration::from_millis(50));
         match rx.recv_timeout(wait) {
             Ok(Ctl::Req(req)) => {
+                // entry-API upserts: a task kind missing from the maps
+                // (e.g. a future kind not pre-registered above) degrades
+                // to lazy registration instead of a panic
                 let kind = req.payload.kind();
-                metrics.get_mut(kind.name()).unwrap().requests += 1;
-                queues.get_mut(&kind).unwrap().push(req);
+                metrics.entry(kind.name()).or_default().requests += 1;
+                queues
+                    .entry(kind)
+                    .or_insert_with(|| Batcher::new(cfg.max_batch, timeout))
+                    .push(req);
             }
             Ok(Ctl::Stats(tx)) => {
                 let _ = tx.send(ServerStats {
@@ -326,6 +354,32 @@ fn engine_thread(
                 };
                 let _ = tx.send(snap);
             }
+            Ok(Ctl::Drain(tx)) => {
+                // graceful drain: every already-queued request runs
+                // through the normal batch path (exactly one typed reply
+                // each — no "shutting down" errors), then every live
+                // decode session spills host-side
+                for (kind, q) in queues.iter_mut() {
+                    let batch = q.drain_all();
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    let n = batch.len();
+                    let now = Instant::now();
+                    let m = metrics.entry(kind.name()).or_default();
+                    m.batches += 1;
+                    m.batched_requests += n as u64;
+                    for r in &batch {
+                        m.queue_wait.record(now.duration_since(r.arrived));
+                    }
+                    process_batch(&engine, &pipes, *kind, batch, m);
+                    inflight.fetch_sub(n, Ordering::AcqRel);
+                }
+                let report =
+                    pipes.decode.as_ref().map(|p| p.drain()).unwrap_or_default();
+                let _ = tx.send(report);
+                return Ok(());
+            }
             Ok(Ctl::Shutdown) => {
                 for q in queues.values_mut() {
                     for req in q.drain_all() {
@@ -343,7 +397,7 @@ fn engine_thread(
         for (kind, q) in queues.iter_mut() {
             while let Some(batch) = q.pop_ready(now) {
                 let n = batch.len();
-                let m = metrics.get_mut(kind.name()).unwrap();
+                let m = metrics.entry(kind.name()).or_default();
                 m.batches += 1;
                 m.batched_requests += n as u64;
                 for r in &batch {

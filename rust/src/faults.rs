@@ -39,6 +39,10 @@
 //! - the decode scheduler reads the pipeline's plan per round
 //!   ([`FaultSite::SchedDeadline`]) and sheds the oldest waiting
 //!   request as if its deadline overran.
+//! - the spill restore path draws [`FaultSite::SpillCorrupt`] per
+//!   restore attempt: a hit simulates a corrupted host copy, forcing
+//!   the checksum-mismatch fallback onto the replay log (see
+//!   `docs/RELIABILITY.md`).
 //! - the `"decode:..."` route accepts an `fSEED` segment, so a fault
 //!   plan is installable over the wire (`lutmax serve` smoke, benches).
 
@@ -62,10 +66,13 @@ pub enum FaultSite {
     /// a scheduler round overruns its deadline: the oldest waiting
     /// request is shed with a typed `Reply::Shed`
     SchedDeadline,
+    /// a spilled session's host copy fails its checksum on restore, so
+    /// the copy-back path must fall back to the replay log
+    SpillCorrupt,
 }
 
-/// A seeded, replayable fault schedule. `Copy` and 24 bytes, so layers
-/// store it by value; [`FaultPlan::none`] (the default) is free.
+/// A seeded, replayable fault schedule. `Copy` and a few words, so
+/// layers store it by value; [`FaultPlan::none`] (the default) is free.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FaultPlan {
     seed: u64,
@@ -75,6 +82,7 @@ pub struct FaultPlan {
     worker_panic: u32,
     worker_slow: u32,
     sched_deadline: u32,
+    spill_corrupt: u32,
 }
 
 impl Default for FaultPlan {
@@ -86,13 +94,29 @@ impl Default for FaultPlan {
 impl FaultPlan {
     /// The disabled plan: every site off, every query a single compare.
     pub const fn none() -> Self {
-        Self { seed: 0, kv_alloc: 0, worker_panic: 0, worker_slow: 0, sched_deadline: 0 }
+        Self {
+            seed: 0,
+            kv_alloc: 0,
+            worker_panic: 0,
+            worker_slow: 0,
+            sched_deadline: 0,
+            spill_corrupt: 0,
+        }
     }
 
     /// A chaos-soak default: every site enabled at a moderate rate.
-    /// Same seed ⇒ same schedule, across processes.
+    /// Same seed ⇒ same schedule, across processes. (Corrupt spills are
+    /// safe to arm here: the fallback ladder replays the host log, which
+    /// is still bit-identical — the site tests the ladder, not the bits.)
     pub const fn seeded(seed: u64) -> Self {
-        Self { seed, kv_alloc: 13, worker_panic: 11, worker_slow: 5, sched_deadline: 9 }
+        Self {
+            seed,
+            kv_alloc: 13,
+            worker_panic: 11,
+            worker_slow: 5,
+            sched_deadline: 9,
+            spill_corrupt: 7,
+        }
     }
 
     /// Builder: set one site's denominator (fires on ~1/`denom` of the
@@ -103,6 +127,7 @@ impl FaultPlan {
             FaultSite::WorkerPanic => self.worker_panic = denom,
             FaultSite::WorkerSlow => self.worker_slow = denom,
             FaultSite::SchedDeadline => self.sched_deadline = denom,
+            FaultSite::SpillCorrupt => self.spill_corrupt = denom,
         }
         self
     }
@@ -119,6 +144,7 @@ impl FaultPlan {
             && self.worker_panic == 0
             && self.worker_slow == 0
             && self.sched_deadline == 0
+            && self.spill_corrupt == 0
     }
 
     /// Does `site`'s `index`-th event fault? Pure in `(seed, site,
@@ -130,6 +156,7 @@ impl FaultPlan {
             FaultSite::WorkerPanic => self.worker_panic,
             FaultSite::WorkerSlow => self.worker_slow,
             FaultSite::SchedDeadline => self.sched_deadline,
+            FaultSite::SpillCorrupt => self.spill_corrupt,
         };
         if denom == 0 {
             return false;
@@ -139,6 +166,7 @@ impl FaultPlan {
             FaultSite::WorkerPanic => 0x5041_4E49_4331_0001,
             FaultSite::WorkerSlow => 0x534C_4F57_0000_0002,
             FaultSite::SchedDeadline => 0x4445_4144_4C4E_0003,
+            FaultSite::SpillCorrupt => 0x5350_4C43_5250_0005,
         };
         mix64(self.seed ^ tag ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15)) % denom as u64 == 0
     }
@@ -196,6 +224,7 @@ mod tests {
             FaultSite::WorkerPanic,
             FaultSite::WorkerSlow,
             FaultSite::SchedDeadline,
+            FaultSite::SpillCorrupt,
         ] {
             for i in 0..1000 {
                 assert!(!p.should_fault(site, i));

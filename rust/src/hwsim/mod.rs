@@ -18,7 +18,7 @@ mod units;
 pub use design::{all_designs, Design, DesignKind};
 pub use pipeline::{
     simulate, simulate_attention, simulate_attention_parallel, simulate_decode,
-    simulate_decode_batched, simulate_decode_sched, simulate_decode_split, simulate_row_parallel,
-    AttnSimConfig, DecodeSimConfig, SimConfig, SimReport,
+    simulate_decode_batched, simulate_decode_sched, simulate_decode_spill, simulate_decode_split,
+    simulate_row_parallel, AttnSimConfig, DecodeSimConfig, SimConfig, SimReport,
 };
 pub use units::{Cost, OpKind};

@@ -411,6 +411,78 @@ pub fn simulate_decode_sched(
     }
 }
 
+/// Fixed per-row activation cost of a replay-log append during a spill
+/// restore: sequence bookkeeping and the valid-length bump — the price
+/// of re-materializing a session token by token instead of
+/// block-copying its page images.
+const REPLAY_ROW_SETUP_CYCLES: u64 = 4;
+
+/// Cycle model of restoring one evicted-to-host decode session — the
+/// hwsim mirror of the coordinator's spill ladder
+/// (`DecodePipeline`'s restore path over `kv::spill::SpillStore`).
+///
+/// A spilled session holds `tokens` tokens of K/V for `kv_heads` stored
+/// heads: `2 · kv_heads · tokens · d_head` bytes either way, recorded in
+/// [`SimReport::kv_bytes_read`] — **the bytes that land back in the
+/// arena are invariant in the rung taken**, just as the software's
+/// restore is bit-identical whichever encoding survives. What moves is
+/// *how* they land:
+///
+/// * `replay = false` — the checksummed copy-back rung: the page images
+///   stream host→arena as one bulk byte run (a fused read + checksum
+///   fold per byte), and each destination page is opened once
+///   (`kv_heads · ceil(tokens / page_size)` × [`PAGE_TOUCH_CYCLES`]).
+/// * `replay = true` — the row-log fallback rung: every token replays as
+///   its own append — a short per-row byte stream whose pipeline fill
+///   never amortizes, a fixed [`REPLAY_ROW_SETUP_CYCLES`] of sequence
+///   bookkeeping, and a tail-page touch per stored head per token
+///   (`kv_heads · tokens` × [`PAGE_TOUCH_CYCLES`], page size can't
+///   help).
+///
+/// So the fallback pays per *token* what copy-back pays per *page* —
+/// the asymmetry the `decode_sched_spill*` bench labels measure in
+/// software. The trade runs the other way in energy: copy-back's
+/// checksum fold charges an add per byte, replay only bumps a counter
+/// per row.
+pub fn simulate_decode_spill(
+    design: &Design,
+    cfg: DecodeSimConfig,
+    tokens: usize,
+    replay: bool,
+) -> SimReport {
+    use super::units::OpKind::{Add, LutRead};
+    let w = design.prec.w();
+    let per_lane = |count: u64, ops: &[super::units::OpKind]| -> u64 {
+        chain_cycles(design, ops, count.div_ceil(cfg.lanes as u64), w)
+    };
+    let bytes = (2 * cfg.kv_heads * tokens * cfg.d_head) as u64;
+    let row_bytes = (2 * cfg.kv_heads * cfg.d_head) as u64;
+    let mut cycles: u64;
+    let mut energy = bytes as f64 * LutRead.cost(w).energy;
+    if replay {
+        cycles = tokens as u64 * (per_lane(row_bytes, &[LutRead]) + REPLAY_ROW_SETUP_CYCLES);
+        cycles += (cfg.kv_heads * tokens) as u64 * PAGE_TOUCH_CYCLES;
+        energy += tokens as f64 * Add.cost(w).energy;
+    } else {
+        cycles = per_lane(bytes, &[LutRead, Add]);
+        cycles += cfg.kv_heads as u64
+            * (tokens as u64).div_ceil(cfg.page_size as u64)
+            * PAGE_TOUCH_CYCLES;
+        energy += bytes as f64 * Add.cost(w).energy;
+    }
+    SimReport {
+        design: design.name(),
+        cycles,
+        energy,
+        area: design.area_per_lane() * cfg.lanes as f64,
+        lut_bytes: design.lut_bytes,
+        elems: bytes,
+        kv_bytes_read: bytes,
+        has_divider: design.has_divider(),
+        has_multiplier: design.has_multiplier(),
+    }
+}
+
 /// Row-parallel aggregate: `units` independent softmax units each process
 /// a contiguous block of rows — the hwsim mirror of
 /// [`crate::softmax::ParSoftmax`]'s sharding. Latency is the slowest
@@ -729,6 +801,47 @@ mod tests {
             assert_eq!(r.kv_bytes_read, batched.kv_bytes_read);
             prev = r.cycles;
         }
+    }
+
+    #[test]
+    fn spill_copyback_amortizes_what_replay_pays_per_token() {
+        let d = Design::new(DesignKind::Rexp, Precision::Uint8);
+        let cfg = DecodeSimConfig {
+            q_heads: 8,
+            kv_heads: 2,
+            seq_len: 32,
+            d_head: 32,
+            page_size: 16,
+            lanes: 4,
+        };
+        let copy = simulate_decode_spill(&d, cfg, 64, false);
+        let rep = simulate_decode_spill(&d, cfg, 64, true);
+        // the fallback rung pays per token what copy-back pays per page
+        assert!(rep.cycles > copy.cycles, "replay {} copy {}", rep.cycles, copy.cycles);
+        // ...but the bytes landing in the arena are rung-invariant, like
+        // the software's bit-identical restore contract
+        assert_eq!(rep.kv_bytes_read, copy.kv_bytes_read);
+        assert_eq!(rep.elems, copy.elems);
+        assert_eq!(copy.kv_bytes_read, (2 * 2 * 64 * 32) as u64, "2·G·T·d");
+        // the checksum fold is the energy price of the fast rung
+        assert!(copy.energy > rep.energy);
+        // the gap widens linearly in the restored prefix
+        let copy2 = simulate_decode_spill(&d, cfg, 128, false);
+        let rep2 = simulate_decode_spill(&d, cfg, 128, true);
+        assert_eq!(copy2.kv_bytes_read, 2 * copy.kv_bytes_read);
+        assert!(rep2.cycles - copy2.cycles > rep.cycles - copy.cycles);
+        // restore traffic stores G heads — query-head count must not move it
+        let more_h = simulate_decode_spill(&d, DecodeSimConfig { q_heads: 16, ..cfg }, 64, false);
+        assert_eq!(more_h.cycles, copy.cycles);
+        assert_eq!(more_h.kv_bytes_read, copy.kv_bytes_read);
+        // smaller pages cost copy-back more opens; replay touches the
+        // tail per token regardless, so page size can't move it
+        let small = DecodeSimConfig { page_size: 4, ..cfg };
+        assert!(simulate_decode_spill(&d, small, 64, false).cycles > copy.cycles);
+        assert_eq!(simulate_decode_spill(&d, small, 64, true).cycles, rep.cycles);
+        // an empty session restores for free on either rung
+        assert_eq!(simulate_decode_spill(&d, cfg, 0, false).cycles, 0);
+        assert_eq!(simulate_decode_spill(&d, cfg, 0, true).cycles, 0);
     }
 
     #[test]

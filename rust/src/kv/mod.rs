@@ -80,6 +80,8 @@
 //! traffic is therefore proportional to `G`, not `H` (mirrored by
 //! `hwsim::simulate_decode`'s `kv_bytes_read` accounting).
 
+pub mod spill;
+
 use std::fmt;
 
 use anyhow::{bail, Result};

@@ -1,0 +1,466 @@
+//! Evict-to-host KV spill: verbatim page copies with a checksum, so an
+//! evicted session restores by **bit-exact copy-back** instead of replay.
+//!
+//! The paper's normalization premise (arXiv 2111.10770) is what makes
+//! this trivial: the whole datapath lives in small integer LUT domains,
+//! so a page's entire state is its `i8` K/V blocks, the per-page
+//! [`Affine`] pair and the per-token K byte sums — plain bytes with no
+//! device-resident derivation. A [`SpillStore`] therefore holds evicted
+//! sessions' pages *verbatim* off-arena; restore pops fresh pages off the
+//! free list and copies the blocks back, reproducing the arena state
+//! bit-for-bit in O(pages) copies instead of the O(tokens) replay
+//! recompute the PR 6 eviction path paid.
+//!
+//! # The fallback ladder
+//!
+//! Host copies can rot (and the chaos plan's
+//! [`crate::faults::FaultSite::SpillCorrupt`] site simulates exactly
+//! that), so every spilled session carries two independent encodings:
+//!
+//! 1. **pages** — the verbatim `[g][t][d]` blocks + byte sums + affines,
+//!    guarded by a per-session FNV checksum over every byte;
+//! 2. **replay rows** — the `[t][g][d]` row log the PR 6 restore used,
+//!    replayable through [`KvPool::append_block`].
+//!
+//! Restore tries the checksummed copy-back first; a checksum mismatch
+//! (or an injected `SpillCorrupt` hit) demotes to the replay log, which
+//! rebuilds the same bytes token by token. Only when *both* encodings
+//! are unusable does the session die — with a typed `Reply::Error` at
+//! the serving layer, never a panic. `docs/RELIABILITY.md` documents the
+//! ladder end to end.
+
+use std::collections::HashMap;
+
+use crate::quant::Affine;
+
+use super::{HeadGroups, KvError, KvPool, KvSeq};
+
+/// One spilled page, verbatim: the full K/V blocks (`[g][t][d]`
+/// row-major, `page_elems` each), the byte-sum block (`[g][t]`,
+/// `sum_elems`), the page's recorded affine pair, and the count of valid
+/// tokens (full pages except the tail).
+#[derive(Clone, Debug)]
+pub struct SpilledPage {
+    pub k: Vec<i8>,
+    pub v: Vec<i8>,
+    pub ksum: Vec<i32>,
+    pub k_affine: Affine,
+    pub v_affine: Affine,
+    pub len: usize,
+}
+
+/// Everything one evicted session needs to come back bit-identical:
+/// the verbatim pages (checksummed), plus the independent replay-row
+/// fallback.
+#[derive(Clone, Debug)]
+pub struct SpilledSession {
+    groups: HeadGroups,
+    k_affine: Affine,
+    v_affine: Affine,
+    tokens: usize,
+    pages: Vec<SpilledPage>,
+    /// FNV-1a over every page byte + geometry (see [`Self::checksum_now`])
+    checksum: u64,
+    /// replay fallback: `[t][g][d]` K rows, exactly the PR 6 eviction log
+    replay_k: Vec<i8>,
+    /// replay fallback: `[t][g][d]` V rows
+    replay_v: Vec<i8>,
+}
+
+impl SpilledSession {
+    pub fn groups(&self) -> HeadGroups {
+        self.groups
+    }
+
+    /// tokens resident when the session was spilled
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// pages a copy-back restore must allocate
+    pub fn page_count(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Recompute the checksum over the *current* page bytes. Equal to the
+    /// stored checksum unless the host copy rotted since the spill.
+    fn checksum_now(&self) -> u64 {
+        // FNV-1a 64 over geometry, affines, then every page's bytes
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let mut step = |x: u64| {
+            h = (h ^ x).wrapping_mul(0x100_0000_01B3);
+        };
+        step(self.tokens as u64);
+        step(self.groups.q_heads() as u64);
+        step(self.groups.kv_heads() as u64);
+        step(self.k_affine.scale.to_bits() as u64);
+        step(self.k_affine.zero_point as u64);
+        step(self.v_affine.scale.to_bits() as u64);
+        step(self.v_affine.zero_point as u64);
+        for p in &self.pages {
+            step(p.len as u64);
+            step(p.k_affine.scale.to_bits() as u64);
+            step(p.k_affine.zero_point as u64);
+            step(p.v_affine.scale.to_bits() as u64);
+            step(p.v_affine.zero_point as u64);
+            for &b in p.k.iter().chain(&p.v) {
+                step(b as u8 as u64);
+            }
+            for &s in &p.ksum {
+                step(s as u32 as u64);
+            }
+        }
+        h
+    }
+
+    /// `true` while the page copies still match their spill-time checksum.
+    pub fn intact(&self) -> bool {
+        self.checksum == self.checksum_now()
+    }
+
+    /// The replay-log fallback: `[t][g][d]` K and V rows, or `None` if
+    /// the log has been wiped (the both-encodings-dead terminal case).
+    pub fn replay_rows(&self) -> Option<(&[i8], &[i8])> {
+        let gd = self.groups.kv_heads() * self.replay_row_width();
+        let want = self.tokens * gd;
+        if gd == 0 || self.replay_k.len() != want || self.replay_v.len() != want {
+            return None;
+        }
+        Some((&self.replay_k, &self.replay_v))
+    }
+
+    /// `d_head` as implied by the replay log (0 when the log is empty).
+    fn replay_row_width(&self) -> usize {
+        if self.tokens == 0 {
+            return 0;
+        }
+        self.replay_k.len() / (self.tokens * self.groups.kv_heads())
+    }
+}
+
+/// Host-side store of spilled sessions, keyed by session id. One store
+/// serves a whole [`KvPool`]; it owns no arena pages — everything in it
+/// is plain host memory, cheap to move across a drain/restart boundary.
+#[derive(Clone, Debug, Default)]
+pub struct SpillStore {
+    sessions: HashMap<u64, SpilledSession>,
+    /// sessions drained while still open-but-unbound (no pages yet);
+    /// re-adopted as `Unbound` on restart
+    open: Vec<u64>,
+}
+
+impl SpillStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// spilled sessions currently held (excluding drained open-unbound)
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty() && self.open.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    pub fn session(&self, id: u64) -> Option<&SpilledSession> {
+        self.sessions.get(&id)
+    }
+
+    /// Session ids in ascending order — deterministic iteration for
+    /// drain reports and restart adoption.
+    pub fn ids_sorted(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.sessions.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// total pages held across all spilled sessions
+    pub fn pages_held(&self) -> usize {
+        self.sessions.values().map(|s| s.pages.len()).sum()
+    }
+
+    /// total tokens held across all spilled sessions
+    pub fn tokens_held(&self) -> usize {
+        self.sessions.values().map(|s| s.tokens).sum()
+    }
+
+    /// Record a drained open-but-unbound session (no pages to move).
+    pub fn note_open(&mut self, id: u64) {
+        self.open.push(id);
+    }
+
+    /// Drained open-but-unbound session ids, ascending.
+    pub fn open_sessions(&self) -> Vec<u64> {
+        let mut ids = self.open.clone();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Move `seq`'s pages off-arena verbatim (and build the replay-row
+    /// fallback), then return the pages to the pool's free list. Returns
+    /// the number of pages moved. The inverse of
+    /// [`Self::restore_copy_back`], bit-exact both ways.
+    pub fn spill(&mut self, pool: &mut KvPool, id: u64, seq: KvSeq) -> usize {
+        let cfg = *pool.config();
+        let (g, d, ps) = (cfg.kv_heads, cfg.d_head, cfg.page_size);
+        let tokens = seq.len();
+        let mut pages = Vec::with_capacity(seq.pages().len());
+        let mut replay_k = vec![0i8; tokens * g * d];
+        let mut replay_v = vec![0i8; tokens * g * d];
+        for (pi, &p) in seq.pages().iter().enumerate() {
+            let in_page = seq.tokens_in_page(ps, pi);
+            let base = p as usize * cfg.page_elems();
+            let sbase = p as usize * cfg.sum_elems();
+            let (k_affine, v_affine) = pool.page_affines(p);
+            pages.push(SpilledPage {
+                k: pool.k[base..base + cfg.page_elems()].to_vec(),
+                v: pool.v[base..base + cfg.page_elems()].to_vec(),
+                ksum: pool.ksum[sbase..sbase + cfg.sum_elems()].to_vec(),
+                k_affine,
+                v_affine,
+                len: in_page,
+            });
+            // transpose the page's [g][t][d] blocks into [t][g][d] rows
+            for gi in 0..g {
+                let kb = pool.page_k(p, gi);
+                let vb = pool.page_v(p, gi);
+                for t in 0..in_page {
+                    let row = ((pi * ps + t) * g + gi) * d;
+                    replay_k[row..row + d].copy_from_slice(&kb[t * d..(t + 1) * d]);
+                    replay_v[row..row + d].copy_from_slice(&vb[t * d..(t + 1) * d]);
+                }
+            }
+        }
+        let mut rec = SpilledSession {
+            groups: *seq.groups(),
+            k_affine: seq.k_affine(),
+            v_affine: seq.v_affine(),
+            tokens,
+            pages,
+            checksum: 0,
+            replay_k,
+            replay_v,
+        };
+        rec.checksum = rec.checksum_now();
+        let moved = pool.close(seq);
+        self.sessions.insert(id, rec);
+        moved
+    }
+
+    /// Bit-exact copy-back: allocate the session's pages off the free
+    /// list and write the spilled blocks verbatim. **Atomic** like
+    /// [`KvPool::append_block`]: capacity (and one injected-fault draw)
+    /// is checked up front; on `Err(Exhausted)` the store entry and the
+    /// arena are untouched, so the caller can evict and retry. `None`
+    /// means no record for `id` — the caller's bug surface, typed, not a
+    /// panic. Callers should consult [`SpilledSession::intact`] first:
+    /// copy-back of a rotted record would resurrect corrupt bytes.
+    pub fn restore_copy_back(
+        &mut self,
+        pool: &mut KvPool,
+        id: u64,
+    ) -> Option<Result<KvSeq, KvError>> {
+        let rec = self.sessions.remove(&id)?;
+        let needed = rec.pages.len();
+        if (needed > 0 && pool.alloc_faulted()) || needed > pool.free.len() {
+            let err =
+                KvError::Exhausted { pages: pool.cfg.pages, free_pages: pool.free.len() };
+            self.sessions.insert(id, rec);
+            return Some(Err(err));
+        }
+        let mut seq = KvSeq::new(rec.groups, rec.k_affine, rec.v_affine);
+        for sp in &rec.pages {
+            let p = pool.free.pop().expect("capacity reserved above") as usize;
+            let base = p * pool.cfg.page_elems();
+            pool.k[base..base + pool.cfg.page_elems()].copy_from_slice(&sp.k);
+            pool.v[base..base + pool.cfg.page_elems()].copy_from_slice(&sp.v);
+            let sbase = p * pool.cfg.sum_elems();
+            pool.ksum[sbase..sbase + pool.cfg.sum_elems()].copy_from_slice(&sp.ksum);
+            pool.k_aff[p] = sp.k_affine;
+            pool.v_aff[p] = sp.v_affine;
+            seq.pages.push(p as u32);
+        }
+        seq.len = rec.tokens;
+        Some(Ok(seq))
+    }
+
+    /// Drop (and return) a session's spill record — after a successful
+    /// replay-fallback restore, or when the session dies.
+    pub fn remove(&mut self, id: u64) -> Option<SpilledSession> {
+        self.sessions.remove(&id)
+    }
+
+    /// Chaos hook: rot the host copy. Flips one byte of the first page's
+    /// K block (so [`SpilledSession::intact`] fails), and with
+    /// `wipe_replay` also destroys the replay log — the terminal
+    /// both-encodings-dead case. Returns `false` if `id` has no record
+    /// (or no pages to rot).
+    pub fn corrupt(&mut self, id: u64, wipe_replay: bool) -> bool {
+        let Some(rec) = self.sessions.get_mut(&id) else {
+            return false;
+        };
+        let Some(first) = rec.pages.first_mut() else {
+            return false;
+        };
+        let Some(b) = first.k.first_mut() else {
+            return false;
+        };
+        *b = b.wrapping_add(1);
+        if wipe_replay {
+            rec.replay_k.clear();
+            rec.replay_v.clear();
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{FaultPlan, FaultSite};
+    use crate::kv::KvConfig;
+    use crate::testkit::Rng;
+
+    fn pool4() -> KvPool {
+        KvPool::new(KvConfig { pages: 4, page_size: 4, kv_heads: 2, d_head: 8 })
+    }
+
+    fn seq_with(pool: &mut KvPool, rng: &mut Rng, tokens: usize) -> KvSeq {
+        let mut seq = KvSeq::new(
+            HeadGroups::new(4, 2).unwrap(),
+            Affine { scale: 0.5, zero_point: 3 },
+            Affine { scale: 0.25, zero_point: -2 },
+        );
+        let n = pool.config().kv_heads * pool.config().d_head;
+        for _ in 0..tokens {
+            let k: Vec<i8> = (0..n).map(|_| rng.int(-128, 127) as i8).collect();
+            let v: Vec<i8> = (0..n).map(|_| rng.int(-128, 127) as i8).collect();
+            pool.append(&mut seq, &k, &v).unwrap();
+        }
+        seq
+    }
+
+    fn snapshot(pool: &KvPool, seq: &KvSeq) -> Vec<Vec<i8>> {
+        let mut out = Vec::new();
+        for gi in 0..pool.config().kv_heads {
+            for b in pool.page_blocks(seq, gi, seq.len()) {
+                out.push(b.k.to_vec());
+                out.push(b.v.to_vec());
+                out.push(b.ksum.iter().flat_map(|s| s.to_le_bytes().map(|x| x as i8)).collect());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn spill_and_copy_back_roundtrip_bit_exactly() {
+        let mut rng = Rng::new(31);
+        let mut pool = pool4();
+        let seq = seq_with(&mut pool, &mut rng, 10); // 3 pages
+        let before = snapshot(&pool, &seq);
+        let (ka, va) = (seq.k_affine(), seq.v_affine());
+
+        let mut store = SpillStore::new();
+        assert_eq!(store.spill(&mut pool, 7, seq), 3);
+        assert_eq!(pool.free_pages(), 4, "spill returns the pages");
+        assert_eq!(store.pages_held(), 3);
+        assert_eq!(store.tokens_held(), 10);
+        assert!(store.session(7).unwrap().intact());
+
+        // interleave another session so copy-back lands on different ids
+        let other = seq_with(&mut pool, &mut rng, 5);
+
+        let seq = store.restore_copy_back(&mut pool, 7).unwrap().unwrap();
+        assert!(!store.contains(7), "successful restore consumes the record");
+        assert_eq!(seq.len(), 10);
+        assert_eq!((seq.k_affine(), seq.v_affine()), (ka, va));
+        assert_eq!(snapshot(&pool, &seq), before, "copy-back must be bit-exact");
+        assert_eq!(pool.close(seq), 3);
+        assert_eq!(pool.close(other), 2);
+        assert_eq!(pool.free_pages(), 4, "free list round-trips");
+    }
+
+    #[test]
+    fn copy_back_is_atomic_under_exhaustion_and_faults() {
+        let mut rng = Rng::new(5);
+        let mut pool = pool4();
+        let seq = seq_with(&mut pool, &mut rng, 9); // 3 pages
+        let mut store = SpillStore::new();
+        store.spill(&mut pool, 1, seq);
+        // occupy 2 pages: only 2 free, restore needs 3
+        let hog = seq_with(&mut pool, &mut rng, 8);
+        let err = store.restore_copy_back(&mut pool, 1).unwrap().unwrap_err();
+        assert_eq!(err, KvError::Exhausted { pages: 4, free_pages: 2 });
+        assert!(store.contains(1), "failed restore leaves the record");
+        assert_eq!(pool.free_pages(), 2, "and the arena untouched");
+        // injected allocation fault: same typed error, free pages remain
+        pool.close(hog);
+        pool.set_fault_plan(FaultPlan::none().with_seed(3).with(FaultSite::KvAlloc, 1));
+        let err = store.restore_copy_back(&mut pool, 1).unwrap().unwrap_err();
+        assert_eq!(err, KvError::Exhausted { pages: 4, free_pages: 4 });
+        pool.set_fault_plan(FaultPlan::none());
+        let seq = store.restore_copy_back(&mut pool, 1).unwrap().unwrap();
+        assert_eq!(seq.len(), 9);
+        assert_eq!(pool.close(seq), 3);
+        // unknown id is None, not a panic
+        assert!(store.restore_copy_back(&mut pool, 99).is_none());
+    }
+
+    #[test]
+    fn corruption_trips_the_checksum_but_replay_rows_survive() {
+        let mut rng = Rng::new(13);
+        let mut pool = pool4();
+        let seq = seq_with(&mut pool, &mut rng, 6);
+        let mut store = SpillStore::new();
+        store.spill(&mut pool, 3, seq);
+        assert!(store.session(3).unwrap().intact());
+        let (rk, rv) = {
+            let rec = store.session(3).unwrap();
+            let (rk, rv) = rec.replay_rows().unwrap();
+            (rk.to_vec(), rv.to_vec())
+        };
+        assert_eq!(rk.len(), 6 * 2 * 8);
+
+        assert!(store.corrupt(3, false));
+        let rec = store.session(3).unwrap();
+        assert!(!rec.intact(), "flipped byte must trip the checksum");
+        let (rk2, rv2) = rec.replay_rows().unwrap();
+        assert_eq!((rk2, rv2), (&rk[..], &rv[..]), "replay log is independent");
+
+        // replaying the log rebuilds the same bytes the spill held
+        let mut seq = KvSeq::new(rec.groups(), rec.k_affine, rec.v_affine);
+        pool.append_block(&mut seq, &rk, &rv).unwrap();
+        assert_eq!(seq.len(), 6);
+        let mut fresh = SpillStore::new();
+        fresh.spill(&mut pool, 9, seq);
+        // both encodings agree once the corrupt byte is accounted for:
+        // the replay-rebuilt record differs from the rotted one only in
+        // that byte, so its replay rows match the original log exactly
+        let rec9 = fresh.session(9).unwrap();
+        assert!(rec9.intact());
+        assert_eq!(rec9.replay_rows().unwrap().0, &rk[..]);
+
+        // wiping the replay log is the terminal case
+        assert!(store.corrupt(3, true));
+        assert!(store.session(3).unwrap().replay_rows().is_none());
+        assert!(store.remove(3).is_some());
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn open_sessions_ride_the_store_across_a_drain() {
+        let mut store = SpillStore::new();
+        assert!(store.is_empty());
+        store.note_open(12);
+        store.note_open(4);
+        assert!(!store.is_empty());
+        assert_eq!(store.open_sessions(), vec![4, 12]);
+        assert_eq!(store.len(), 0, "open-unbound sessions hold no pages");
+        assert_eq!(store.ids_sorted(), Vec::<u64>::new());
+    }
+}

@@ -250,9 +250,10 @@ fn serve_decode(
     for rx in pending {
         match rx.recv() {
             Ok(Reply::Token(_)) => ok += 1,
-            Ok(Reply::Exhausted { pages, free_pages }) => {
-                println!("backpressure: kv pool exhausted ({free_pages} of {pages} pages free)")
-            }
+            Ok(Reply::Exhausted { pages, free_pages, retry_after_rounds }) => println!(
+                "backpressure: kv pool exhausted ({free_pages} of {pages} pages free; \
+                 retry after {retry_after_rounds} rounds)"
+            ),
             Ok(Reply::Error(e)) => println!("error: {e}"),
             Ok(other) => println!("unexpected step reply {other:?}"),
             Err(_) => println!("dropped"),

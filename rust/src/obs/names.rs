@@ -42,6 +42,19 @@ pub const EVICT_RESTORE: &str = "sched_evicted_restore_total";
 pub const EVICT_CAUSES: [&str; 4] =
     [EVICT_ADMISSION, EVICT_STEP, EVICT_PREFILL, EVICT_RESTORE];
 
+// -- evict-to-host spill counters (paired 1:1 with trace instants) -------
+
+/// sessions whose pages were spilled to the host store (one `"spill"`
+/// trace instant each); pressure evictions AND drain spills both count
+pub const SCHED_SPILLED: &str = "sched_spilled_total";
+/// spilled sessions restored by checksummed bit-exact copy-back (one
+/// `"spill_restore"` trace instant each)
+pub const SCHED_SPILL_RESTORED: &str = "sched_spill_restored_total";
+/// spilled sessions restored via the replay-log fallback after a
+/// checksum mismatch or injected `SpillCorrupt` (one `"spill_fallback"`
+/// trace instant each)
+pub const SCHED_SPILL_FALLBACK: &str = "sched_spill_fallback_total";
+
 // -- KV pool gauges (published once per serving round) -------------------
 
 pub const KV_PAGES_TOTAL: &str = "kv_pages_total";

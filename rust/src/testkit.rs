@@ -7,7 +7,8 @@
 //! Also home of the **differential conformance sweep**
 //! ([`conformance_sweep`]): one deterministic case table over
 //! {mode, prec, affine (dyadic / non-dyadic), L, H, G, page_size, mask,
-//! wave sessions S, arrival schedule, fault schedule} that
+//! wave sessions S, arrival schedule, fault schedule, prefix-split
+//! spans, spill victim policy} that
 //! `rust/tests/integration_conformance.rs` drives
 //! through every standing cross-layer invariant — including the
 //! group-major-vs-head-major decode differential (both sweep orders
@@ -182,6 +183,13 @@ pub struct ConformanceCase {
     /// sentinel (as many spans as resident pages; the kernel clamps the
     /// request to the page count)
     pub spans: usize,
+    /// victim-policy selector for the spill/drain invariant
+    /// (invariant 10): indexes {YoungestId, Lru, LargestFirst,
+    /// CheapestSpill} — the case's overcommit traffic is driven under
+    /// that policy, mid-trace drain/restart and a forced
+    /// `SpillCorrupt` replay fallback included, and every reply must
+    /// stay bit-identical to serial per-session replay
+    pub spill: usize,
     pub seed: u64,
 }
 
@@ -251,6 +259,10 @@ pub fn conformance_sweep() -> Vec<ConformanceCase> {
             // rotates {unsplit, two spans, per-page} so every sweep
             // exercises all three split shapes
             spans: [1usize, 2, 0][rng.usize(0, 2)],
+            // spill axis appended after `spans` (same append-only rule):
+            // which eviction victim policy invariant 10 drives the case
+            // under
+            spill: rng.usize(0, 3),
             seed: 0xC0DE_0000 + i as u64,
         });
     }
@@ -317,6 +329,12 @@ mod tests {
         let distinct_spans: std::collections::HashSet<usize> =
             a.iter().map(|c| c.spans).collect();
         assert!(distinct_spans.len() > 1, "span axis must vary");
+        for c in &a {
+            assert!(c.spill <= 3, "{c:?} spill policy selector out of range");
+        }
+        let distinct_spills: std::collections::HashSet<usize> =
+            a.iter().map(|c| c.spill).collect();
+        assert!(distinct_spills.len() > 1, "spill axis must vary");
     }
 
     #[test]

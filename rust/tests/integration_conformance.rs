@@ -43,6 +43,17 @@
 //!    merge reports its span maxima LUT-index-aligned (always at
 //!    spans == 1), and within the report's stated per-element bound
 //!    otherwise; the KV free list round-trips on both arenas.
+//! 10. the evict-to-host spill invariant: the invariant-7 overcommit
+//!    schedule runs under the case's victim policy (`case.spill`
+//!    indexes {YoungestId, Lru, LargestFirst, CheapestSpill}) with the
+//!    merged event stream cut in half by a graceful `drain()` plus
+//!    restart on a FRESH pipeline adopting the drain report; one
+//!    adopted host copy is deliberately rotted so its restore demotes
+//!    to the replay-log fallback. Every reply is still bit-identical
+//!    to serial per-session replay, the restarted pipeline mints the
+//!    exact next session id, both free lists round-trip, and on each
+//!    pipeline the spill counters reconcile 1:1 with their trace
+//!    instants.
 //!
 //! `cargo test -q` runs the small sweep; `CONFORMANCE_FULL=1` (the CI
 //! `test-heavy` gate, `make test-heavy`) widens it.
@@ -948,4 +959,369 @@ fn split_decode_bit_identical_when_aligned_and_bounded_otherwise() {
         }
         assert_eq!(kv_s.free_pages(), pages, "{case:?}: split arena round-trips");
     }
+}
+
+/// Invariant 10: the evict-to-host spill subsystem. Per case, the
+/// invariant-7 harness (S sessions, adversarial arrival, overcommitted
+/// arena) runs under the case's victim policy (`case.spill` indexes
+/// {YoungestId, Lru, LargestFirst, CheapestSpill}), with the merged
+/// event stream cut in half by a graceful `DecodePipeline::drain()`:
+/// pressure evictions spill verbatim page images host-side throughout,
+/// the drain spills every live session and frees the whole arena, and a
+/// FRESH pipeline adopts the report — resuming the session-id counter
+/// exactly (a post-restart open mints the id an undrained run would
+/// have). One adopted session's host copy is deliberately rotted
+/// (`corrupt_spill`) so its restore MUST demote to the replay-log
+/// fallback. Under all of that, every reply is still bit-identical to a
+/// serial replay of each session alone, both arenas' free lists
+/// round-trip exactly, and on each pipeline the spill counters
+/// reconcile 1:1 with their trace instants (`sched_spilled_total` ==
+/// "spill" instants, restored == "spill_restore", fallback ==
+/// "spill_fallback") and with `Counters::requeued`.
+#[test]
+fn spilled_sessions_survive_drain_restart_and_corruption_bit_identically() {
+    use lutmax::attention::DECODE_AFFINE;
+    use lutmax::config::Json;
+    use lutmax::coordinator::{DecodePipeline, Payload, Reply, SchedConfig, VictimPolicy};
+    use lutmax::obs::{names, TraceClock};
+    use lutmax::runtime::Tensor;
+
+    enum Ev {
+        Prefill(Tensor, Tensor, Tensor),
+        Step(Tensor, Tensor, Tensor),
+    }
+
+    const ROUTE_PAGE: usize = 16;
+    let policies = [
+        VictimPolicy::YoungestId,
+        VictimPolicy::Lru,
+        VictimPolicy::LargestFirst,
+        VictimPolicy::CheapestSpill,
+    ];
+    // counters <-> trace instants, 1:1, per pipeline
+    let reconcile = |p: &DecodePipeline, tag: &str| -> (u64, u64, u64) {
+        let stats = p.metrics_json();
+        let counters = stats.get("counters").expect("counters object");
+        let read = |name: &str| counters.get(name).and_then(Json::as_i64).unwrap_or(0) as u64;
+        let (sp, rs, fb) = (
+            read(names::SCHED_SPILLED),
+            read(names::SCHED_SPILL_RESTORED),
+            read(names::SCHED_SPILL_FALLBACK),
+        );
+        assert_eq!(sp, p.trace_event_count("spill") as u64, "{tag}: spill instants");
+        assert_eq!(
+            rs,
+            p.trace_event_count("spill_restore") as u64,
+            "{tag}: spill_restore instants"
+        );
+        assert_eq!(
+            fb,
+            p.trace_event_count("spill_fallback") as u64,
+            "{tag}: spill_fallback instants"
+        );
+        assert_eq!(rs + fb, p.sched_counters().requeued, "{tag}: every restore is a requeue");
+        (sp, rs, fb)
+    };
+
+    for case in conformance_sweep() {
+        let (h, g, d, s) = (case.heads, case.kv_heads, case.d_head, case.sessions);
+        let t_total = case.seq_len;
+        let per = t_total.div_ceil(ROUTE_PAGE);
+        let pages = per * (s - 1).max(1);
+        let route = format!(
+            "decode:{}:{}:g{}:p{}",
+            case.mode.name(),
+            case.prec.name(),
+            g,
+            pages
+        );
+        let p = DecodePipeline::load(&route, 3).unwrap();
+        p.set_trace(TraceClock::Logical);
+
+        let mut arr = Rng::new(case.arrival);
+        let cfg = SchedConfig {
+            max_batch_total_tokens: arr.usize(4, 64),
+            max_batch_prefill_tokens: arr.usize(2, 16),
+            waiting_served_ratio: 1.2,
+            max_waiting_tokens: arr.usize(4, 64),
+            victim_policy: policies[case.spill],
+            ..SchedConfig::default()
+        };
+        p.set_sched_config(cfg);
+
+        let opens: Vec<Payload> = (0..s).map(|_| Payload::DecodeOpen).collect();
+        let refs: Vec<&Payload> = opens.iter().collect();
+        let ids: Vec<u64> = p
+            .run_batch(&refs)
+            .into_iter()
+            .map(|r| match r {
+                Reply::Session(id) => id,
+                other => panic!("{case:?}: open replied {other:?}"),
+            })
+            .collect();
+
+        let traces: Vec<Vec<Ev>> = (0..s)
+            .map(|si| {
+                let mut rng = Rng::new(case.seed ^ (0x51D_E << 8) ^ si as u64);
+                let chunk = rng.usize(0, (t_total - 1).min(4));
+                let mut tr = Vec::new();
+                if chunk > 0 {
+                    tr.push(Ev::Prefill(
+                        Tensor::f32(vec![chunk, h, d], rng.normal_vec(chunk * h * d, 1.0)),
+                        Tensor::f32(vec![chunk, g, d], rng.normal_vec(chunk * g * d, 1.0)),
+                        Tensor::f32(vec![chunk, g, d], rng.normal_vec(chunk * g * d, 1.0)),
+                    ));
+                }
+                for _ in chunk..t_total {
+                    tr.push(Ev::Step(
+                        Tensor::f32(vec![h, d], rng.normal_vec(h * d, 1.0)),
+                        Tensor::f32(vec![g, d], rng.normal_vec(g * d, 1.0)),
+                        Tensor::f32(vec![g, d], rng.normal_vec(g * d, 1.0)),
+                    ));
+                }
+                tr
+            })
+            .collect();
+
+        // the invariant-7 adversarial merge (per-session order kept)
+        let mut cursors = vec![0usize; s];
+        let mut payloads: Vec<Payload> = Vec::new();
+        let mut owner: Vec<usize> = Vec::new();
+        loop {
+            let open: Vec<usize> =
+                (0..s).filter(|&si| cursors[si] < traces[si].len()).collect();
+            if open.is_empty() {
+                break;
+            }
+            let si = *arr.choice(&open);
+            let ev = &traces[si][cursors[si]];
+            cursors[si] += 1;
+            payloads.push(match ev {
+                Ev::Prefill(q, k, v) => Payload::DecodePrefill {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+                Ev::Step(q, k, v) => Payload::DecodeStep {
+                    session: ids[si],
+                    q: q.clone(),
+                    k: k.clone(),
+                    v: v.clone(),
+                },
+            });
+            owner.push(si);
+        }
+
+        // first half on the original pipeline, then a graceful drain
+        let mid = payloads.len() / 2;
+        let refs_a: Vec<&Payload> = payloads[..mid].iter().collect();
+        let mut replies: Vec<Vec<Reply>> = vec![Vec::new(); s];
+        for (r, &si) in p.run_batch(&refs_a).into_iter().zip(&owner[..mid]) {
+            replies[si].push(r);
+        }
+        let report = p.drain();
+        assert_eq!(
+            report.sessions_spilled + report.sessions_open,
+            s,
+            "{case:?}: a drain accounts for every session, spilled or open"
+        );
+        if mid > 0 {
+            assert_eq!(
+                p.kv_pages(),
+                Some((pages, pages)),
+                "{case:?}: a drain leaves the arena fully free"
+            );
+        }
+        assert_eq!(p.spilled_sessions(), 0, "{case:?}: the report owns the store now");
+        let (_, _, fb1) = reconcile(&p, "drained pipeline");
+        assert_eq!(fb1, 0, "{case:?}: nothing rots the host copies before the restart");
+        let spilled_ids = report.spill.ids_sorted();
+
+        // restart: a fresh pipeline adopts the report
+        let p2 = DecodePipeline::load(&route, 3).unwrap();
+        p2.set_trace(TraceClock::Logical);
+        p2.set_sched_config(cfg);
+        p2.adopt_spill(report);
+        assert_eq!(p2.spilled_sessions(), spilled_ids.len(), "{case:?}: store re-adopted");
+        // the id counter resumes exactly: a post-restart open mints the
+        // id an undrained pipeline would have minted next
+        let next_id = match p2.run_batch(&[&Payload::DecodeOpen])[0] {
+            Reply::Session(id) => id,
+            ref other => panic!("{case:?}: post-restart open replied {other:?}"),
+        };
+        assert_eq!(
+            next_id,
+            ids.iter().max().unwrap() + 1,
+            "{case:?}: adoption must resume the session-id counter"
+        );
+        assert!(
+            matches!(p2.run_batch(&[&Payload::DecodeClose(next_id)])[0], Reply::Closed { .. }),
+            "{case:?}: the probe session closes clean"
+        );
+
+        // rot one adopted host copy that still has traffic coming — its
+        // restore must demote to the replay-log fallback, bit-identically
+        let rotted = spilled_ids.iter().copied().find(|id| {
+            payloads[mid..].iter().any(|pl| {
+                matches!(pl,
+                    Payload::DecodeStep { session, .. }
+                    | Payload::DecodePrefill { session, .. } if session == id)
+            })
+        });
+        if let Some(id) = rotted {
+            assert!(p2.corrupt_spill(id, false), "{case:?}: session {id} has a spill record");
+        }
+
+        // second half plus all closes on the restarted pipeline
+        let mut close_order: Vec<usize> = (0..s).collect();
+        for i in (1..s).rev() {
+            close_order.swap(i, arr.usize(0, i));
+        }
+        let closes: Vec<Payload> =
+            close_order.iter().map(|&si| Payload::DecodeClose(ids[si])).collect();
+        let refs_b: Vec<&Payload> = payloads[mid..].iter().chain(closes.iter()).collect();
+        let owner_b: Vec<usize> =
+            owner[mid..].iter().copied().chain(close_order.iter().copied()).collect();
+        for (r, &si) in p2.run_batch(&refs_b).into_iter().zip(&owner_b) {
+            replies[si].push(r);
+        }
+
+        assert_eq!(
+            p2.kv_pages(),
+            Some((pages, pages)),
+            "{case:?}: restarted free list round-trips"
+        );
+        assert_eq!(p2.spilled_sessions(), 0, "{case:?}: closes scrub the store");
+        assert_eq!(p2.sched_counters().exhausted, 0, "{case:?}: every session fits alone");
+        let (_, _, fb2) = reconcile(&p2, "restarted pipeline");
+        if rotted.is_some() {
+            assert!(
+                fb2 >= 1,
+                "{case:?}: the rotted copy must force at least one replay fallback"
+            );
+        }
+
+        // serial replay: drain, restart, spills and the forced fallback
+        // must all be invisible in the reply bytes
+        let dec = DecodeAttention::new(case.mode, case.prec, None).unwrap();
+        let groups = HeadGroups::new(h, g).unwrap();
+        let mut scr = AttnScratch::new();
+        for si in 0..s {
+            let mut kv = KvPool::new(KvConfig {
+                pages: per + 1,
+                page_size: ROUTE_PAGE,
+                kv_heads: g,
+                d_head: d,
+            });
+            let mut seq = KvSeq::new(groups, DECODE_AFFINE, DECODE_AFFINE);
+            let mut got = replies[si].iter();
+            for (ei, ev) in traces[si].iter().enumerate() {
+                let (q, k, v, t) = match ev {
+                    Ev::Prefill(q, k, v) => (q, k, v, q.dims[0]),
+                    Ev::Step(q, k, v) => (q, k, v, 1),
+                };
+                let mut qb = vec![0i8; t * h * d];
+                let mut kb = vec![0i8; t * g * d];
+                let mut vb = vec![0i8; t * g * d];
+                quant::quantize_into(q.as_f32().unwrap(), DECODE_AFFINE, &mut qb);
+                quant::quantize_into(k.as_f32().unwrap(), DECODE_AFFINE, &mut kb);
+                quant::quantize_into(v.as_f32().unwrap(), DECODE_AFFINE, &mut vb);
+                let mut want = vec![0.0f32; t * h * d];
+                match ev {
+                    Ev::Prefill(..) => dec
+                        .prefill_chunk(
+                            &mut kv, &mut seq, &qb, DECODE_AFFINE, &kb, &vb, &mut want, &mut scr,
+                        )
+                        .unwrap(),
+                    Ev::Step(..) => dec
+                        .step(&mut kv, &mut seq, &qb, DECODE_AFFINE, &kb, &vb, &mut want, &mut scr)
+                        .unwrap(),
+                }
+                match (ev, got.next()) {
+                    (Ev::Prefill(..), Some(Reply::Prefill(out)))
+                    | (Ev::Step(..), Some(Reply::Token(out))) => assert_eq!(
+                        out.as_f32().unwrap(),
+                        &want[..],
+                        "{case:?} session {si} event {ei}: drain/restart must be invisible"
+                    ),
+                    (_, other) => panic!("{case:?} session {si} event {ei}: got {other:?}"),
+                }
+            }
+            assert!(
+                matches!(got.next(), Some(Reply::Closed { .. })),
+                "{case:?} session {si}: close reply"
+            );
+            assert!(got.next().is_none(), "{case:?} session {si}: reply count");
+            assert_eq!(seq.len(), t_total, "{case:?} session {si}");
+            kv.close(seq);
+        }
+    }
+}
+
+/// The spill ladder's terminal rung is typed, never a panic: when a
+/// spilled session's host copy is rotted AND its replay log wiped, the
+/// next touch answers `Reply::Error`, the session is gone (a later
+/// close says "unknown"), one "spill_lost" trace instant fires, and
+/// the arena is untouched — other sessions keep serving bit-exactly.
+#[test]
+fn both_encodings_dead_is_a_typed_error_and_loses_only_that_session() {
+    use lutmax::coordinator::{DecodePipeline, Payload, Reply};
+    use lutmax::obs::TraceClock;
+
+    let (h, g, d) = (2usize, 1usize, 4usize);
+    let p = DecodePipeline::load("decode:rexp:uint8:p4", 2).unwrap();
+    p.set_trace(TraceClock::Logical);
+    let mut rng = Rng::new(531);
+    let opens: Vec<Payload> = (0..2).map(|_| Payload::DecodeOpen).collect();
+    let refs: Vec<&Payload> = opens.iter().collect();
+    let ids: Vec<u64> = p
+        .run_batch(&refs)
+        .into_iter()
+        .map(|r| match r {
+            Reply::Session(id) => id,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+    let step = |rng: &mut Rng, id: u64| {
+        let (q, k, v) = workload::decode_qkv_step(rng, h, g, d, 1.0);
+        Payload::DecodeStep { session: id, q, k, v }
+    };
+    let s0 = step(&mut rng, ids[0]);
+    let s1 = step(&mut rng, ids[1]);
+    assert!(matches!(p.run_batch(&[&s0])[0], Reply::Token(_)));
+    assert!(matches!(p.run_batch(&[&s1])[0], Reply::Token(_)));
+
+    // park both sessions host-side, then kill BOTH encodings of ids[0]
+    let report = p.drain();
+    assert_eq!(report.sessions_spilled, 2);
+    p.adopt_spill(report);
+    assert!(p.corrupt_spill(ids[0], true), "session 0 has a spill record to rot");
+
+    // the dead session's next step is a typed error, exactly once
+    let s0b = step(&mut rng, ids[0]);
+    match &p.run_batch(&[&s0b])[0] {
+        Reply::Error(msg) => {
+            assert!(msg.contains("lost"), "the error names the loss, got {msg:?}")
+        }
+        other => panic!("want typed loss, got {other:?}"),
+    }
+    assert_eq!(p.trace_event_count("spill_lost"), 1, "one loss instant");
+    match &p.run_batch(&[&Payload::DecodeClose(ids[0])])[0] {
+        Reply::Error(msg) => assert!(msg.contains("unknown"), "{msg:?}"),
+        other => panic!("the lost session must be gone, got {other:?}"),
+    }
+
+    // the surviving session restores from its intact copy and stays on
+    // its bit-exact stream; the arena round-trips
+    let s1b = step(&mut rng, ids[1]);
+    assert!(
+        matches!(p.run_batch(&[&s1b])[0], Reply::Token(_)),
+        "the survivor restores and serves"
+    );
+    assert!(
+        matches!(p.run_batch(&[&Payload::DecodeClose(ids[1])])[0], Reply::Closed { .. })
+    );
+    assert_eq!(p.kv_pages(), Some((4, 4)), "the loss leaks nothing");
+    assert_eq!(p.spilled_sessions(), 0);
 }

@@ -29,13 +29,25 @@
 //!   re-runs the overcommit with a route-armed `FaultPlan` (`:fS`) —
 //!   every injected fault is exactly one typed reply, counters
 //!   reconcile 1:1, and the free list still round-trips.
+//! * **victim policies**: the same overcommit trace under each
+//!   `VictimPolicy` replies bit-identically — who gets spilled is an
+//!   ops decision, invisible in the reply bytes — while the eviction
+//!   ledger (victims, counts, restores) differs per policy as
+//!   documented.
+//! * **drain/restart**: `DecodePipeline::drain` mid-soak spills every
+//!   live session host-side; a fresh pipeline adopting the report
+//!   finishes the traces bit-identically to an uninterrupted serial
+//!   replay, under an armed fault plan, with spill counters and trace
+//!   instants reconciling 1:1.
 
 use lutmax::attention::{
     AttnScratch, DecodeAttention, DecodeBatch, DecodeStepTask, WaveError, DECODE_AFFINE,
 };
-use lutmax::coordinator::{DecodePipeline, Payload, Reply, SchedConfig};
+use lutmax::config::Json;
+use lutmax::coordinator::{DecodePipeline, Payload, Reply, SchedConfig, VictimPolicy};
 use lutmax::kv::{HeadGroups, KvConfig, KvError, KvPool, KvSeq};
 use lutmax::lut::Precision;
+use lutmax::obs::{names, TraceClock};
 use lutmax::quant;
 use lutmax::runtime::Tensor;
 use lutmax::softmax::{engine_parallel, Mode};
@@ -610,8 +622,9 @@ fn single_session_overflow_replies_typed_exhaustion_and_close_reclaims() {
     let (sq, sk, sv) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
     let step = Payload::DecodeStep { session: id, q: sq, k: sk, v: sv };
     match &p.run_batch(&[&step])[0] {
-        Reply::Exhausted { pages, free_pages } => {
+        Reply::Exhausted { pages, free_pages, retry_after_rounds } => {
             assert_eq!((*pages, *free_pages), (1, 0));
+            assert!(*retry_after_rounds >= 1, "backpressure must carry a retry hint");
         }
         other => panic!("want typed exhaustion, got {other:?}"),
     }
@@ -1132,4 +1145,339 @@ fn faulted_chaos_soak_contains_damage_and_stays_bit_identical() {
         "a 1-in-11 panic / 1-in-9 deadline schedule over ~180 events must fire"
     );
     assert!(c.rounds >= 1);
+}
+
+/// Pluggable victim policies, differentially: the SAME four-session
+/// squeeze under each `VictimPolicy` replies bit-identically (spill and
+/// restore are bit-exact, so the victim choice is invisible in the
+/// reply bytes) while the eviction ledger diverges exactly as each
+/// policy documents — different victims, different eviction counts,
+/// different restore counts.
+///
+/// The trace (4-page arena, 16-slot pages, separate `run_batch` calls
+/// so LRU recency ticks differ):
+///   open s0..s3 | A: prefill s0 x17 (2 pages) + step s1 | B: step s2
+///   | C: step s3 (arena full -> one eviction) | D: step s1 + step s2
+///   (restores re-press the arena) | close all.
+#[test]
+fn victim_policies_diverge_on_ledger_but_never_on_reply_bits() {
+    let (h, g, d) = (2usize, 1usize, 4usize);
+    let policies = [
+        VictimPolicy::YoungestId,
+        VictimPolicy::Lru,
+        VictimPolicy::LargestFirst,
+        VictimPolicy::CheapestSpill,
+    ];
+    // per policy: (close pages for s0..s3 — 0 fingerprints the session
+    // left spilled — total evictions, total restores)
+    let want: [([usize; 4], u64, u64); 4] = [
+        // C evicts s2 (youngest idle); D restores s2, evicting s3
+        ([2, 1, 1, 0], 2, 1),
+        // C evicts s1 (stalest tick, tie to younger); D restores s1,
+        // evicting s0 (stalest remaining)
+        ([0, 1, 1, 1], 2, 1),
+        // C evicts s0 (2 pages) — the freed headroom makes D free
+        ([0, 1, 1, 1], 1, 0),
+        // C evicts s2 (1 page, tie to younger); D restores s2,
+        // evicting s3 (1 page beats s0's 2)
+        ([2, 1, 1, 0], 2, 1),
+    ];
+    let mut stream_bits: Vec<String> = Vec::new();
+    for (pi, &policy) in policies.iter().enumerate() {
+        // 4 pages x 16 slots; same seed -> byte-identical trace tensors
+        let p = DecodePipeline::load("decode:rexp:uint8:p4", 2).unwrap();
+        p.set_sched_config(SchedConfig { victim_policy: policy, ..SchedConfig::default() });
+        let mut rng = Rng::new(521);
+        let opens: Vec<Payload> = (0..4).map(|_| Payload::DecodeOpen).collect();
+        let refs: Vec<&Payload> = opens.iter().collect();
+        let mut stream: Vec<Reply> = p.run_batch(&refs);
+        let ids: Vec<u64> = stream
+            .iter()
+            .map(|r| match r {
+                Reply::Session(id) => *id,
+                other => panic!("{policy:?}: unexpected open reply {other:?}"),
+            })
+            .collect();
+        let (cq, ck, cv) = workload::decode_prefill_chunk(&mut rng, 17, h, g, d, 1.0);
+        let step = |rng: &mut Rng, id: u64| {
+            let (q, k, v) = workload::decode_qkv_step(rng, h, g, d, 1.0);
+            Payload::DecodeStep { session: id, q, k, v }
+        };
+        let a = vec![
+            Payload::DecodePrefill { session: ids[0], q: cq, k: ck, v: cv },
+            step(&mut rng, ids[1]),
+        ];
+        let b = vec![step(&mut rng, ids[2])];
+        let c = vec![step(&mut rng, ids[3])];
+        let d = vec![step(&mut rng, ids[1]), step(&mut rng, ids[2])];
+        for batch in [&a, &b, &c, &d] {
+            let refs: Vec<&Payload> = batch.iter().collect();
+            stream.extend(p.run_batch(&refs));
+        }
+        assert!(
+            stream[4..].iter().all(|r| matches!(r, Reply::Prefill(_) | Reply::Token(_))),
+            "{policy:?}: eviction must be invisible — every data reply lands, got {stream:?}"
+        );
+        // the ledger: who was left spilled (closes report 0 pages), how
+        // many evictions, how many restores
+        let (want_pages, want_evicted, want_requeued) = want[pi];
+        let close_pages: Vec<usize> = ids
+            .iter()
+            .map(|&id| match &p.run_batch(&[&Payload::DecodeClose(id)])[0] {
+                Reply::Closed { pages } => *pages,
+                other => panic!("{policy:?} close: unexpected {other:?}"),
+            })
+            .collect();
+        assert_eq!(close_pages, want_pages, "{policy:?}: victim fingerprint");
+        let ctr = p.sched_counters();
+        assert_eq!(ctr.evicted, want_evicted, "{policy:?}: eviction count");
+        assert_eq!(ctr.requeued, want_requeued, "{policy:?}: restore count");
+        assert_eq!(ctr.exhausted, 0, "{policy:?}: eviction always covered the squeeze");
+        assert_eq!(ctr.unresolved, 0, "{policy:?}");
+        // pressure spills mirror evictions 1:1 in the registry
+        let stats = p.metrics_json();
+        let counters = stats.get("counters").expect("counters object");
+        let read = |name: &str| counters.get(name).and_then(Json::as_i64).unwrap_or(0) as u64;
+        assert_eq!(read(names::SCHED_SPILLED), ctr.evicted, "{policy:?}: spill==evict here");
+        assert_eq!(
+            read(names::SCHED_SPILL_RESTORED) + read(names::SCHED_SPILL_FALLBACK),
+            ctr.requeued,
+            "{policy:?}: every restore is a copy-back or a replay fallback"
+        );
+        assert_eq!(read(names::SCHED_SPILL_FALLBACK), 0, "{policy:?}: no faults armed");
+        assert_eq!(p.kv_pages(), Some((4, 4)), "{policy:?}: free list round-trips");
+        // the data replies (opens + prefill + tokens) are bit-identical
+        // across ALL policies
+        stream_bits.push(format!("{stream:?}"));
+    }
+    for (pi, bits) in stream_bits.iter().enumerate() {
+        assert_eq!(
+            bits, &stream_bits[0],
+            "{:?} vs {:?}: victim policy must never reach the reply bytes",
+            policies[pi], policies[0]
+        );
+    }
+    // the policies genuinely diverge: not every ledger is the same
+    assert!(want.iter().any(|w| w.1 != want[0].1), "eviction counts differ across policies");
+}
+
+/// Graceful drain mid-soak, then restart, under an armed fault plan
+/// (`:f11` -> spurious allocs, worker panics, slowdowns, deadline
+/// overruns AND spill-corrupt draws on restores): half of every trace
+/// runs on the first pipeline, `drain()` spills every live session
+/// host-side (arena fully free, every session accounted spilled-or-open),
+/// a FRESH pipeline adopts the report and finishes the traces. Every
+/// event still gets exactly one typed reply, the combined per-session
+/// reply stream is bit-identical to one uninterrupted serial replay
+/// (honoring the failure-semantics table), and on both pipelines the
+/// spill counters reconcile 1:1 with their trace instants.
+#[test]
+fn drain_mid_soak_and_restart_replays_bit_identical_under_faults() {
+    use lutmax::faults::silence_injected_panics;
+
+    silence_injected_panics();
+    let (h, g, d) = (4usize, 2usize, 8usize);
+    let spec = "decode:rexp:uint8:g2:p4:f11";
+    let cfg = SchedConfig {
+        max_batch_total_tokens: 48,
+        max_batch_prefill_tokens: 6,
+        waiting_served_ratio: 1.2,
+        max_waiting_tokens: 12,
+        deadline_rounds: 8,
+        ..SchedConfig::default()
+    };
+    let p = DecodePipeline::load(spec, 3).unwrap();
+    p.set_sched_config(cfg);
+    p.set_trace(TraceClock::Logical);
+    let n = 10usize;
+    let mut rng = Rng::new(523);
+
+    let traces: Vec<Vec<Ev>> = (0..n)
+        .map(|_| {
+            let mut tr = Vec::new();
+            let tokens = rng.usize(10, 20);
+            let chunk = rng.usize(0, 3);
+            if chunk > 0 {
+                let (cq, ck, cv) = workload::decode_prefill_chunk(&mut rng, chunk, h, g, d, 1.0);
+                tr.push(Ev::Prefill(cq, ck, cv));
+            }
+            for _ in chunk..tokens {
+                let (sq, sk, sv) = workload::decode_qkv_step(&mut rng, h, g, d, 1.0);
+                tr.push(Ev::Step(sq, sk, sv));
+            }
+            tr
+        })
+        .collect();
+
+    let opens: Vec<Payload> = (0..n).map(|_| Payload::DecodeOpen).collect();
+    let refs: Vec<&Payload> = opens.iter().collect();
+    let ids: Vec<u64> = p
+        .run_batch(&refs)
+        .into_iter()
+        .map(|r| match r {
+            Reply::Session(id) => id,
+            other => panic!("unexpected {other:?}"),
+        })
+        .collect();
+
+    // random batches up to each session's halfway cursor, then drain
+    let stops: Vec<usize> = traces.iter().map(|t| t.len() / 2).collect();
+    let mut cursors = vec![0usize; n];
+    let mut replies: Vec<Vec<Reply>> = vec![Vec::new(); n];
+    let mut drive = |p: &DecodePipeline,
+                     rng: &mut Rng,
+                     cursors: &mut Vec<usize>,
+                     replies: &mut Vec<Vec<Reply>>,
+                     stops: &[usize]| {
+        while (0..n).any(|si| cursors[si] < stops[si]) {
+            let mut payloads: Vec<Payload> = Vec::new();
+            let mut owner: Vec<usize> = Vec::new();
+            for _ in 0..rng.usize(1, 8) {
+                let open: Vec<usize> = (0..n).filter(|&si| cursors[si] < stops[si]).collect();
+                if open.is_empty() {
+                    break;
+                }
+                let si = *rng.choice(&open);
+                let ev = &traces[si][cursors[si]];
+                cursors[si] += 1;
+                payloads.push(match ev {
+                    Ev::Prefill(q, k, v) => Payload::DecodePrefill {
+                        session: ids[si],
+                        q: q.clone(),
+                        k: k.clone(),
+                        v: v.clone(),
+                    },
+                    Ev::Step(q, k, v) => Payload::DecodeStep {
+                        session: ids[si],
+                        q: q.clone(),
+                        k: k.clone(),
+                        v: v.clone(),
+                    },
+                    Ev::Close => unreachable!("closes go in the final batch"),
+                });
+                owner.push(si);
+            }
+            for (r, &si) in
+                p.run_batch(&payloads.iter().collect::<Vec<_>>()).into_iter().zip(&owner)
+            {
+                replies[si].push(r);
+            }
+        }
+    };
+    drive(&p, &mut rng, &mut cursors, &mut replies, &stops);
+
+    // drain: every session is either spilled (live pages moved host-
+    // side) or recorded open; the arena's free list is full again
+    let report = p.drain();
+    let (n_spilled, n_open) = (report.sessions_spilled, report.sessions_open);
+    assert_eq!(n_spilled + n_open, n, "every session is accounted for");
+    assert!(n_spilled >= 1, "half-driven traces leave live sessions to spill");
+    assert!(report.pages_spilled >= n_spilled, "every spilled session holds >= 1 page");
+    assert!(report.tokens_spilled >= report.pages_spilled, "pages are never empty");
+    assert_eq!(p.kv_pages(), Some((4, 4)), "a drain leaves the arena fully free");
+    assert_eq!(p.spilled_sessions(), 0, "the report now owns the store");
+    // counters <-> trace instants, 1:1, on the drained pipeline
+    let reconcile = |p: &DecodePipeline, tag: &str| {
+        let stats = p.metrics_json();
+        let counters = stats.get("counters").expect("counters object");
+        let read = |name: &str| counters.get(name).and_then(Json::as_i64).unwrap_or(0) as u64;
+        assert_eq!(
+            read(names::SCHED_SPILLED),
+            p.trace_event_count("spill") as u64,
+            "{tag}: every spill counted is one spill instant"
+        );
+        assert_eq!(
+            read(names::SCHED_SPILL_RESTORED),
+            p.trace_event_count("spill_restore") as u64,
+            "{tag}: every copy-back restore counted is one instant"
+        );
+        assert_eq!(
+            read(names::SCHED_SPILL_FALLBACK),
+            p.trace_event_count("spill_fallback") as u64,
+            "{tag}: every replay fallback counted is one instant"
+        );
+        (
+            read(names::SCHED_SPILLED),
+            read(names::SCHED_SPILL_RESTORED) + read(names::SCHED_SPILL_FALLBACK),
+        )
+    };
+    let (spilled_a, _) = reconcile(&p, "drained pipeline");
+    assert!(spilled_a >= n_spilled as u64, "drain spills are counted too");
+
+    // restart: a fresh pipeline adopts the report and the soak resumes
+    // against the SAME session ids
+    let p2 = DecodePipeline::load(spec, 3).unwrap();
+    p2.set_sched_config(cfg);
+    p2.set_trace(TraceClock::Logical);
+    p2.adopt_spill(report);
+    assert_eq!(p2.spilled_sessions(), n_spilled, "the restarted route re-adopts the store");
+    let ends: Vec<usize> = traces.iter().map(|t| t.len()).collect();
+    drive(&p2, &mut rng, &mut cursors, &mut replies, &ends);
+    let mut order: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        order.swap(i, rng.usize(0, i));
+    }
+    let closes: Vec<Payload> = order.iter().map(|&si| Payload::DecodeClose(ids[si])).collect();
+    let refs: Vec<&Payload> = closes.iter().collect();
+    for (r, &si) in p2.run_batch(&refs).into_iter().zip(&order) {
+        replies[si].push(r);
+    }
+    assert_eq!(p2.kv_pages(), Some((4, 4)), "free list round-trips after the restart");
+    let (_, restored_b) = reconcile(&p2, "restarted pipeline");
+    assert!(restored_b >= 1, "adopted sessions with second-half traffic must restore");
+
+    // one uninterrupted serial replay per session, honoring the
+    // failure-semantics table: Shed/Exhausted never executed -> skip;
+    // Error landed its append -> execute, don't compare
+    let a = DECODE_AFFINE;
+    let dec = DecodeAttention::new(Mode::Rexp, Precision::Uint8, None).unwrap();
+    let mut scr = AttnScratch::new();
+    for si in 0..n {
+        let mut kv = KvPool::new(KvConfig { pages: 3, page_size: 16, kv_heads: g, d_head: d });
+        let mut seq = KvSeq::new(HeadGroups::new(h, g).unwrap(), a, a);
+        let mut got = replies[si].iter();
+        for (ei, ev) in traces[si].iter().enumerate() {
+            let reply = got.next();
+            match reply {
+                Some(Reply::Shed { .. }) | Some(Reply::Exhausted { .. }) => continue,
+                _ => {}
+            }
+            let (q, k, v, t) = match ev {
+                Ev::Prefill(q, k, v) => (q, k, v, q.dims[0]),
+                Ev::Step(q, k, v) => (q, k, v, 1),
+                Ev::Close => unreachable!(),
+            };
+            let mut qb = vec![0i8; t * h * d];
+            let mut kb = vec![0i8; t * g * d];
+            let mut vb = vec![0i8; t * g * d];
+            quant::quantize_into(q.as_f32().unwrap(), a, &mut qb);
+            quant::quantize_into(k.as_f32().unwrap(), a, &mut kb);
+            quant::quantize_into(v.as_f32().unwrap(), a, &mut vb);
+            let mut want = vec![0.0f32; t * h * d];
+            match ev {
+                Ev::Prefill(..) => dec
+                    .prefill_chunk(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr)
+                    .unwrap(),
+                _ => dec.step(&mut kv, &mut seq, &qb, a, &kb, &vb, &mut want, &mut scr).unwrap(),
+            }
+            match (ev, reply) {
+                (Ev::Prefill(..), Some(Reply::Prefill(out)))
+                | (Ev::Step(..), Some(Reply::Token(out))) => {
+                    assert_eq!(
+                        out.as_f32().unwrap(),
+                        &want[..],
+                        "session {si} event {ei}: the drain/restart must be invisible"
+                    )
+                }
+                // a contained panic: the append landed, the output was
+                // lost — the replay executed the event above so later
+                // events stay aligned
+                (_, Some(Reply::Error(_))) => {}
+                (_, other) => panic!("session {si} event {ei}: got {other:?}"),
+            }
+        }
+        assert!(matches!(got.next(), Some(Reply::Closed { .. })), "session {si} close");
+        assert!(got.next().is_none(), "session {si}: zero lost or extra replies");
+        kv.close(seq);
+    }
 }
